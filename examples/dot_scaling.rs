@@ -1,0 +1,55 @@
+//! Dot-product design-space exploration: granularity × routing × grid
+//! size, beyond the two slices the paper plots (Figs 5–6) — including the
+//! direct-to-root pattern §5 predicts will bottleneck.
+//!
+//!     cargo run --release --example dot_scaling
+
+use wormsim::arch::DataFormat;
+use wormsim::engine::NativeEngine;
+use wormsim::kernels::reduction::{run_dot, DotConfig, DotMethod};
+use wormsim::noc::RoutePattern;
+use wormsim::solver::{dist_random, Problem};
+use wormsim::timing::cost::CostModel;
+use wormsim::util::stats::fmt_ns;
+use wormsim::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let engine = NativeEngine::new();
+    let cost = CostModel::default();
+    let tiles = 16;
+
+    let mut table = Table::new(
+        "Dot product: granularity x routing across grid sizes (SFPU FP32, 16 tiles/core)",
+        &["grid", "m1+naive", "m1+center", "m2+naive", "m2+center", "m2+direct"],
+    );
+
+    for (r, c) in [(2usize, 2usize), (4, 4), (8, 7)] {
+        let p = Problem::new(r, c, tiles, DataFormat::Fp32);
+        let a = dist_random(&p, 1);
+        let b = dist_random(&p, 2);
+        let mut cells = vec![format!("{r}x{c}")];
+        let mut reference = None;
+        for (method, pattern) in [
+            (DotMethod::ReduceThenSend, RoutePattern::Naive),
+            (DotMethod::ReduceThenSend, RoutePattern::Center),
+            (DotMethod::SendTiles, RoutePattern::Naive),
+            (DotMethod::SendTiles, RoutePattern::Center),
+            (DotMethod::SendTiles, RoutePattern::Direct),
+        ] {
+            let cfg = DotConfig::paper_section5(method, pattern, tiles);
+            let out = run_dot(r, c, &cfg, &a, &b, &engine, &cost)?;
+            // All variants must agree on the value.
+            let v = *reference.get_or_insert(out.value);
+            assert!(
+                (out.value - v).abs() <= 1e-3 * v.abs().max(1.0),
+                "variant value mismatch"
+            );
+            cells.push(fmt_ns(out.total_ns));
+        }
+        table.row(cells);
+    }
+    println!("{}", table.render());
+    println!("expected: direct-to-root degrades at scale (root serializes all merges, §5);");
+    println!("center helps most when the network dominates (few tiles/core).");
+    Ok(())
+}

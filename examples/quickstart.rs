@@ -1,0 +1,69 @@
+//! Quickstart: solve a small Poisson problem with PCG on the simulated
+//! Wormhole, through the AOT JAX/Pallas artifacts if they are built
+//! (falling back to the native engine otherwise).
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use wormsim::arch::DataFormat;
+use wormsim::engine::{make_engine, EngineKind};
+use wormsim::profiler::Profiler;
+use wormsim::solver::{self, PcgOptions, PcgVariant, Problem};
+use wormsim::timing::cost::CostModel;
+use wormsim::util::stats::fmt_ns;
+
+fn main() -> anyhow::Result<()> {
+    // 2x2 Tensix cores, 4 tiles per core => a 128 x 32 x 4 grid.
+    let problem = Problem::new(2, 2, 4, DataFormat::Fp32);
+    let (nx, ny, nz) = problem.dims();
+    println!("quickstart: Poisson {nx}x{ny}x{nz} with PCG on a 2x2 Tensix sub-grid");
+
+    // Prefer the PJRT engine (executes the Pallas-authored artifacts).
+    let artifacts = std::path::Path::new("artifacts");
+    let engine = match make_engine(EngineKind::Pjrt, artifacts) {
+        Ok(e) => {
+            println!("engine: pjrt (AOT artifacts from {})", artifacts.display());
+            e
+        }
+        Err(e) => {
+            println!("engine: native ({e})");
+            make_engine(EngineKind::Native, artifacts)?
+        }
+    };
+
+    let grid = problem.make_grid()?;
+    let b = solver::dist_random(&problem, 7);
+    let mut opts = PcgOptions::new(PcgVariant::SplitFp32);
+    opts.max_iters = 200;
+    opts.tol_abs = 1e-3;
+
+    let cost = CostModel::default();
+    let mut prof = Profiler::new();
+    let res = solver::solve(&grid, &problem, &b, engine.as_ref(), &cost, &opts, &mut prof)?;
+
+    println!(
+        "{} in {} iterations; |r| = {:.3e}",
+        if res.converged { "converged" } else { "stopped" },
+        res.iters,
+        res.residual_history.last().copied().unwrap_or(f64::NAN),
+    );
+    println!(
+        "simulated device time {} total, {} per iteration",
+        fmt_ns(res.total_ns),
+        fmt_ns(res.per_iter_ns)
+    );
+    println!();
+    println!("{}", res.breakdown.render("component breakdown (per iteration)"));
+
+    // Verify against the independent f64 oracle.
+    let xg = solver::dist_to_global(&problem, &res.x);
+    let bg = solver::dist_to_global(&problem, &b);
+    let ax = solver::apply_laplacian_global(&problem, &xg);
+    let true_res: f64 = ax
+        .iter()
+        .zip(&bg)
+        .map(|(a, &v)| (a - v as f64).powi(2))
+        .sum::<f64>()
+        .sqrt();
+    println!("independent ||Ax - b|| check: {true_res:.3e}");
+    Ok(())
+}

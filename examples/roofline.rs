@@ -1,0 +1,44 @@
+//! Single-core roofline exploration (the Fig-3 model, §4): element-wise
+//! throughput for each compute unit and data format, against the
+//! packer/unpacker bandwidth ceiling.
+//!
+//!     cargo run --release --example roofline
+
+use wormsim::arch::{ComputeUnit, DataFormat};
+use wormsim::kernels::eltwise::eltwise_stream_timing;
+use wormsim::timing::cost::CostModel;
+use wormsim::util::table::Table;
+
+fn main() {
+    let cost = CostModel::default();
+    let mut table = Table::new(
+        "Wormhole single-core eltwise roofline (256 tiles/core)",
+        &["unit", "format", "AI (FLOP/B)", "GFLOP/s", "% of roofline", "cycles/tile"],
+    );
+    for (unit, df) in [
+        (ComputeUnit::Fpu, DataFormat::Bf16),
+        (ComputeUnit::Sfpu, DataFormat::Bf16),
+        (ComputeUnit::Sfpu, DataFormat::Fp32),
+    ] {
+        let t = eltwise_stream_timing(&cost, unit, df, 256);
+        let bound = (cost.sram_bw_gbs() * t.ai).min(cost.peak_gflops(unit, df));
+        table.row(vec![
+            unit.to_string(),
+            df.to_string(),
+            format!("{:.4}", t.ai),
+            format!("{:.2}", t.gflops),
+            format!("{:.1}%", 100.0 * t.gflops / bound),
+            format!("{}", t.cycles_per_tile),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "SRAM bandwidth ceiling: {:.0} GB/s (packer/unpacker, 64 B/clk); FPU peak {:.0} GFLOP/s; \
+         SFPU peak {:.0} (BF16) / {:.0} (FP32) GFLOP/s",
+        cost.sram_bw_gbs(),
+        cost.peak_gflops(ComputeUnit::Fpu, DataFormat::Bf16),
+        cost.peak_gflops(ComputeUnit::Sfpu, DataFormat::Bf16),
+        cost.peak_gflops(ComputeUnit::Sfpu, DataFormat::Fp32),
+    );
+    println!("The paper's observation (§4): use the FPU and minimal precision whenever possible.");
+}

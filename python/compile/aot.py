@@ -1,0 +1,84 @@
+"""AOT lowering: jax (L2) + pallas (L1) -> HLO **text** artifacts for the
+Rust PJRT runtime (L3).
+
+HLO text — not ``lowered.compiler_ir("hlo").as_serialized_hlo_module_proto()``
+— is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which the image's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--tiles 1,2,4,8,64,164]
+"""
+
+import argparse
+import pathlib
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Tile counts the artifact set covers. Runtime lookups for other counts
+# fail with a pointer here (rust/src/engine/pjrt.rs::lookup).
+DEFAULT_TILE_COUNTS = (1, 2, 4, 8, 64, 164)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side unwraps a tuple uniformly)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(op: str, df: str, nz: int) -> str:
+    fn = model.build(op, df)
+    args = model.example_args(op, nz)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def emit(out_dir: pathlib.Path, tile_counts, force: bool, verbose: bool = True) -> int:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    n_written = 0
+    t0 = time.time()
+    for op in model.OPS:
+        for df in model.DFS:
+            for nz in tile_counts:
+                name = f"{op}_{df}_t{nz}"
+                path = out_dir / f"{name}.hlo.txt"
+                if path.exists() and not force:
+                    continue
+                text = lower_one(op, df, nz)
+                path.write_text(text)
+                n_written += 1
+                if verbose:
+                    print(f"  [{time.time() - t0:6.1f}s] wrote {path.name} ({len(text)} chars)")
+    return n_written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    ap.add_argument(
+        "--tiles",
+        default=",".join(str(t) for t in DEFAULT_TILE_COUNTS),
+        help="comma-separated tile counts to lower",
+    )
+    ap.add_argument("--force", action="store_true", help="re-emit existing artifacts")
+    args = ap.parse_args()
+    tile_counts = tuple(int(t) for t in args.tiles.split(","))
+    out_dir = pathlib.Path(args.out_dir)
+    n = emit(out_dir, tile_counts, args.force)
+    total = len(model.OPS) * len(model.DFS) * len(tile_counts)
+    print(f"artifacts: {n} written, {total - n} up-to-date, dir {out_dir.resolve()}")
+    sys.exit(0)
+
+
+if __name__ == "__main__":
+    main()

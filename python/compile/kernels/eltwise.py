@@ -1,0 +1,105 @@
+"""Layer-1 Pallas kernels: element-wise tile arithmetic (§4).
+
+Each kernel processes one 64x16 tile per grid step (the z dimension of the
+core block maps to the Pallas grid), with the tile resident in VMEM — the
+TPU analogue of the Wormhole SRAM-staged tile stream. BF16 variants
+reproduce the FPU data path: inputs and outputs round through bfloat16 with
+flush-to-zero (§3.3).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO that both pytest (via jax)
+and the Rust runtime (via xla/PJRT) execute identically.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+TILE = (1, 64, 16)
+
+
+def _block_spec():
+    return pl.BlockSpec(TILE, lambda z: (z, 0, 0))
+
+
+def _eltwise_kernel(op: str, df: str):
+    def kernel(a_ref, b_ref, o_ref):
+        a = ref.quant(a_ref[...], df)
+        b = ref.quant(b_ref[...], df)
+        if op == "add":
+            r = a + b
+        elif op == "sub":
+            r = a - b
+        elif op == "mul":
+            r = a * b
+        else:
+            raise ValueError(f"unknown eltwise op {op!r}")
+        o_ref[...] = ref.quant(r, df)
+
+    return kernel
+
+
+def eltwise(op: str, df: str, a, b):
+    """c = a `op` b over a core block [nz, 64, 16] (f32 I/O)."""
+    nz = a.shape[0]
+    return pl.pallas_call(
+        _eltwise_kernel(op, df),
+        grid=(nz,),
+        in_specs=[_block_spec(), _block_spec()],
+        out_specs=_block_spec(),
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def _axpy_kernel(df: str):
+    def kernel(y_ref, x_ref, alpha_ref, o_ref):
+        y = ref.quant(y_ref[...], df)
+        x = ref.quant(x_ref[...], df)
+        alpha = alpha_ref[0]
+        # One fused output quantization (FMA tile op).
+        o_ref[...] = ref.quant(y + alpha * x, df)
+
+    return kernel
+
+
+def axpy(df: str, y, x, alpha):
+    """y + alpha * x over a core block; alpha is a scalar."""
+    nz = y.shape[0]
+    alpha_arr = jnp.asarray(alpha, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        _axpy_kernel(df),
+        grid=(nz,),
+        in_specs=[
+            _block_spec(),
+            _block_spec(),
+            pl.BlockSpec((1,), lambda z: (0,)),
+        ],
+        out_specs=_block_spec(),
+        out_shape=jax.ShapeDtypeStruct(y.shape, jnp.float32),
+        interpret=True,
+    )(y, x, alpha_arr)
+
+
+def _scale_kernel(df: str):
+    def kernel(x_ref, alpha_ref, o_ref):
+        x = ref.quant(x_ref[...], df)
+        o_ref[...] = ref.quant(alpha_ref[0] * x, df)
+
+    return kernel
+
+
+def scale(df: str, x, alpha):
+    """alpha * x over a core block; alpha is a scalar."""
+    nz = x.shape[0]
+    alpha_arr = jnp.asarray(alpha, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        _scale_kernel(df),
+        grid=(nz,),
+        in_specs=[_block_spec(), pl.BlockSpec((1,), lambda z: (0,))],
+        out_specs=_block_spec(),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x, alpha_arr)

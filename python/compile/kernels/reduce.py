@@ -1,0 +1,47 @@
+"""Layer-1 Pallas kernel: the local dot-product partial (§5, Fig 4).
+
+One grid step per tile: multiply element-wise at operand precision,
+reduce the tile to a scalar, accumulate across grid steps in f32 in the
+output ref (the Dst-register accumulation model shared with
+``ref.dot_partial`` and the Rust native engine).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+TILE = (1, 64, 16)
+
+
+def _dot_kernel(df: str):
+    def kernel(a_ref, b_ref, o_ref):
+        z = pl.program_id(0)
+
+        @pl.when(z == 0)
+        def _init():
+            o_ref[0, 0] = jnp.float32(0.0)
+
+        a = ref.quant(a_ref[...], df)
+        b = ref.quant(b_ref[...], df)
+        prod = ref.quant(a * b, df)
+        tile_sum = ref.quant(jnp.sum(prod), df)
+        o_ref[0, 0] += tile_sum.astype(jnp.float32)
+
+    return kernel
+
+
+def dot_partial(df: str, a, b):
+    """Scalar sum(a*b) over a core block [nz, 64, 16]; returns shape (1,1)."""
+    nz = a.shape[0]
+    spec = pl.BlockSpec(TILE, lambda z: (z, 0, 0))
+    out = pl.pallas_call(
+        _dot_kernel(df),
+        grid=(nz,),
+        in_specs=[spec, spec],
+        out_specs=pl.BlockSpec((1, 1), lambda z: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=True,
+    )(a, b)
+    return out

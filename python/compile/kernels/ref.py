@@ -1,0 +1,132 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+These implement the Wormhole value semantics in plain jax.numpy, in the same
+canonical operation order as the Rust native engine
+(``rust/src/engine/native.rs``) and the Pallas kernels. They are the
+correctness reference for pytest and never ship in an artifact.
+
+Numerics (paper §3.3):
+- BF16 path: every tile operation rounds to bfloat16 (RNE) and flushes
+  subnormals to zero.
+- FP32 path: operations run in f32 with flush-to-zero.
+"""
+
+import jax.numpy as jnp
+
+# Smallest positive normal for the shared f32/bf16 exponent range. Kept as
+# a Python float: module-level jnp constants would be captured as consts by
+# Pallas kernel tracing, which pallas_call rejects.
+_MIN_NORMAL = float(2.0**-126)
+
+
+def ftz(x):
+    """Flush subnormals to (sign-preserving) zero."""
+    x = x.astype(jnp.float32)
+    return jnp.where(jnp.abs(x) < _MIN_NORMAL, x * 0.0, x)
+
+
+def quant(x, df: str):
+    """Round a value through the compute-unit data path.
+
+    ``bf16``: RNE to bfloat16 then flush-to-zero; ``f32``: flush-to-zero.
+    """
+    x = x.astype(jnp.float32)
+    if df == "bf16":
+        x = x.astype(jnp.bfloat16).astype(jnp.float32)
+    elif df != "f32":
+        raise ValueError(f"unknown data format {df!r}")
+    return ftz(x)
+
+
+# ---------------------------------------------------------------------------
+# Element-wise kernels (§4)
+# ---------------------------------------------------------------------------
+
+def eltwise(op: str, a, b, df: str):
+    a = quant(a, df)
+    b = quant(b, df)
+    if op == "add":
+        r = a + b
+    elif op == "sub":
+        r = a - b
+    elif op == "mul":
+        r = a * b
+    else:
+        raise ValueError(f"unknown eltwise op {op!r}")
+    return quant(r, df)
+
+
+def axpy(y, x, alpha, df: str):
+    """y + alpha * x with a single output quantization (fused FMA tile op)."""
+    return quant(quant(y, df) + alpha * quant(x, df), df)
+
+
+def scale(x, alpha, df: str):
+    return quant(alpha * quant(x, df), df)
+
+
+# ---------------------------------------------------------------------------
+# Dot-product partial (§5, Fig 4)
+# ---------------------------------------------------------------------------
+
+def dot_partial(a, b, df: str):
+    """sum(a*b) over a core's tiles: per-element products quantized at
+    operand precision, per-tile sums accumulated in f32 and quantized, tile
+    partials accumulated in f32 (the Dst-register accumulation model)."""
+    a = quant(a, df).reshape(-1, 64 * 16)
+    b = quant(b, df).reshape(-1, 64 * 16)
+    prod = quant(a * b, df)
+    tile_sums = quant(jnp.sum(prod, axis=1), df)
+    return jnp.sum(tile_sums).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# 7-point stencil (§6)
+# ---------------------------------------------------------------------------
+
+def _shift_north(x, halo_n):
+    """out[z,0,:] = halo_n[z]; out[z,r,:] = x[z,r-1,:]."""
+    return jnp.concatenate([halo_n[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _shift_south(x, halo_s):
+    return jnp.concatenate([x[:, 1:, :], halo_s[:, None, :]], axis=1)
+
+
+def _shift_west(x, halo_w):
+    """out[z,:,0] = halo_w[z]; out[z,:,c] = x[z,:,c-1]."""
+    return jnp.concatenate([halo_w[:, :, None], x[:, :, :-1]], axis=2)
+
+
+def _shift_east(x, halo_e):
+    return jnp.concatenate([x[:, :, 1:], halo_e[:, :, None]], axis=2)
+
+
+def stencil_apply(x, halo_n, halo_s, halo_w, halo_e, coeffs, df: str):
+    """7-point stencil over a core block ``x[nz, 64, 16]``.
+
+    ``coeffs = [center, x_lo, x_hi, y_lo, y_hi, z_lo, z_hi]`` (§7 Eq. 2 uses
+    [6, -1, -1, -1, -1, -1, -1]). Halos: ``halo_n/halo_s [nz, 16]``,
+    ``halo_w/halo_e [nz, 64]``. z boundaries are zero Dirichlet.
+
+    Canonical order (shared with the native engine and the Pallas kernel):
+    acc = c*x; acc += cN*north; acc += cS*south; acc += cW*west;
+    acc += cE*east; acc += cZlo*below; acc += cZhi*above — with scale and
+    add each quantized.
+    """
+    x = quant(x, df)
+    zeros_plane = jnp.zeros_like(x[:1])
+    below = jnp.concatenate([zeros_plane, x[:-1]], axis=0)
+    above = jnp.concatenate([x[1:], zeros_plane], axis=0)
+
+    def q(v):
+        return quant(v, df)
+
+    acc = q(coeffs[0] * x)
+    acc = q(acc + q(coeffs[1] * _shift_north(x, quant(halo_n, df))))
+    acc = q(acc + q(coeffs[2] * _shift_south(x, quant(halo_s, df))))
+    acc = q(acc + q(coeffs[3] * _shift_west(x, quant(halo_w, df))))
+    acc = q(acc + q(coeffs[4] * _shift_east(x, quant(halo_e, df))))
+    acc = q(acc + q(coeffs[5] * below))
+    acc = q(acc + q(coeffs[6] * above))
+    return acc

@@ -1,0 +1,93 @@
+"""Layer-1 Pallas kernel: the 7-point stencil over a core block (§6).
+
+Hardware adaptation (DESIGN.md §2): the Wormhole implementation tiles the
+z dimension as a column of 64x16 SRAM tiles per core and builds shifted
+tiles with circular-buffer pointer tricks and face transposes. On TPU the
+same structure maps to a z-gridded Pallas kernel: each grid step stages the
+center z-slab plus its two z-neighbor slabs and the four halo lines in
+VMEM (BlockSpec does the HBM->VMEM schedule the Wormhole reader kernel did
+over the NoC), and the shifted-tile construction becomes in-register rolls
+with halo insertion. The arithmetic is identical, in the same canonical
+scale/accumulate order as the Rust native engine, with BF16
+round-to-nearest-even + flush-to-zero after every tile operation (§3.3).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+TILE = (1, 64, 16)
+
+
+def _stencil_kernel(df: str, nz: int):
+    def kernel(x_ref, below_ref, above_ref, hn_ref, hs_ref, hw_ref, he_ref, c_ref, o_ref):
+        z = pl.program_id(0)
+
+        def q(v):
+            return ref.quant(v, df)
+
+        x = q(x_ref[0])  # (64, 16)
+        # z-neighbor slabs; BlockSpec clamps the index at the boundary, so
+        # mask the Dirichlet-zero planes explicitly here.
+        below = jnp.where(z == 0, jnp.zeros_like(x), q(below_ref[0]))
+        above = jnp.where(z == nz - 1, jnp.zeros_like(x), q(above_ref[0]))
+
+        hn = q(hn_ref[0])  # (16,)
+        hs = q(hs_ref[0])
+        hw = q(hw_ref[0])  # (64,)
+        he = q(he_ref[0])
+
+        # Shifted-tile construction (§6.2): rows via the pointer trick,
+        # columns via the transpose pipeline — both are pure data movement,
+        # expressed here as concatenations.
+        north = jnp.concatenate([hn[None, :], x[:-1, :]], axis=0)
+        south = jnp.concatenate([x[1:, :], hs[None, :]], axis=0)
+        west = jnp.concatenate([hw[:, None], x[:, :-1]], axis=1)
+        east = jnp.concatenate([x[:, 1:], he[:, None]], axis=1)
+
+        c = c_ref[...]
+        acc = q(c[0] * x)
+        acc = q(acc + q(c[1] * north))
+        acc = q(acc + q(c[2] * south))
+        acc = q(acc + q(c[3] * west))
+        acc = q(acc + q(c[4] * east))
+        acc = q(acc + q(c[5] * below))
+        acc = q(acc + q(c[6] * above))
+        o_ref[0] = acc
+
+    return kernel
+
+
+def stencil_apply(df: str, x, halo_n, halo_s, halo_w, halo_e, coeffs):
+    """7-point stencil over ``x[nz, 64, 16]`` with halo lines.
+
+    halo_n/halo_s: [nz, 16]; halo_w/halo_e: [nz, 64];
+    coeffs: [7] = [center, x_lo, x_hi, y_lo, y_hi, z_lo, z_hi].
+    """
+    nz = x.shape[0]
+    center_spec = pl.BlockSpec(TILE, lambda z: (z, 0, 0))
+    # Clamped z-neighbor slabs (masked to zero at the boundary in-kernel).
+    below_spec = pl.BlockSpec(TILE, lambda z: (jnp.maximum(z - 1, 0), 0, 0))
+    above_spec = pl.BlockSpec(TILE, lambda z: (jnp.minimum(z + 1, nz - 1), 0, 0))
+    ns_spec = pl.BlockSpec((1, 16), lambda z: (z, 0))
+    ew_spec = pl.BlockSpec((1, 64), lambda z: (z, 0))
+    c_spec = pl.BlockSpec((7,), lambda z: (0,))
+    return pl.pallas_call(
+        _stencil_kernel(df, nz),
+        grid=(nz,),
+        in_specs=[
+            center_spec,
+            below_spec,
+            above_spec,
+            ns_spec,
+            ns_spec,
+            ew_spec,
+            ew_spec,
+            c_spec,
+        ],
+        out_specs=center_spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x, x, x, halo_n, halo_s, halo_w, halo_e, coeffs)

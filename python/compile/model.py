@@ -1,0 +1,94 @@
+"""Layer-2: the per-core compute graphs, in JAX, calling the Layer-1
+Pallas kernels. These are the functions `python/compile/aot.py` lowers to
+the HLO-text artifacts the Rust runtime executes.
+
+All I/O is f32; BF16 variants carry the Wormhole FPU numerics (RNE +
+flush-to-zero after every tile op) inside the graph, so the Rust side never
+needs a bfloat16 ABI.
+
+Artifact naming (shared with rust/src/runtime/artifacts.rs):
+    {op}_{df}_t{nz}  with df in {bf16, f32}
+    ops: eltwise_add, eltwise_sub, eltwise_mul, axpy, scale, dot, stencil
+"""
+
+import jax.numpy as jnp
+
+from .kernels import eltwise as k_eltwise
+from .kernels import reduce as k_reduce
+from .kernels import stencil as k_stencil
+
+DFS = ("bf16", "f32")
+OPS = ("eltwise_add", "eltwise_sub", "eltwise_mul", "axpy", "scale", "dot", "stencil")
+
+
+def eltwise_add(df):
+    return lambda a, b: (k_eltwise.eltwise("add", df, a, b),)
+
+
+def eltwise_sub(df):
+    return lambda a, b: (k_eltwise.eltwise("sub", df, a, b),)
+
+
+def eltwise_mul(df):
+    return lambda a, b: (k_eltwise.eltwise("mul", df, a, b),)
+
+
+def axpy(df):
+    """(y, x, alpha) -> y + alpha * x."""
+    return lambda y, x, alpha: (k_eltwise.axpy(df, y, x, alpha),)
+
+
+def scale(df):
+    """(x, alpha) -> alpha * x."""
+    return lambda x, alpha: (k_eltwise.scale(df, x, alpha),)
+
+
+def dot(df):
+    """(a, b) -> scalar partial dot product, shape (1, 1)."""
+    return lambda a, b: (k_reduce.dot_partial(df, a, b),)
+
+
+def stencil(df):
+    """(x, hn, hs, hw, he, coeffs) -> 7-point stencil application."""
+    return lambda x, hn, hs, hw, he, coeffs: (
+        k_stencil.stencil_apply(df, x, hn, hs, hw, he, coeffs),
+    )
+
+
+def build(op: str, df: str):
+    """The jax callable for an (op, df) pair."""
+    if df not in DFS:
+        raise ValueError(f"unknown df {df!r}")
+    fns = {
+        "eltwise_add": eltwise_add,
+        "eltwise_sub": eltwise_sub,
+        "eltwise_mul": eltwise_mul,
+        "axpy": axpy,
+        "scale": scale,
+        "dot": dot,
+        "stencil": stencil,
+    }
+    if op not in fns:
+        raise ValueError(f"unknown op {op!r}")
+    return fns[op](df)
+
+
+def example_args(op: str, nz: int):
+    """ShapeDtypeStructs to lower `op` for a core block of `nz` tiles."""
+    import jax
+
+    f32 = jnp.float32
+    block = jax.ShapeDtypeStruct((nz, 64, 16), f32)
+    scalar = jax.ShapeDtypeStruct((), f32)
+    if op in ("eltwise_add", "eltwise_sub", "eltwise_mul", "dot"):
+        return (block, block)
+    if op == "axpy":
+        return (block, block, scalar)
+    if op == "scale":
+        return (block, scalar)
+    if op == "stencil":
+        ns = jax.ShapeDtypeStruct((nz, 16), f32)
+        ew = jax.ShapeDtypeStruct((nz, 64), f32)
+        coeffs = jax.ShapeDtypeStruct((7,), f32)
+        return (block, ns, ns, ew, ew, coeffs)
+    raise ValueError(f"unknown op {op!r}")

@@ -1,0 +1,152 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes, data formats, and value distributions (including
+subnormals, which must flush to zero on the simulated Wormhole data path,
+paper §3.3).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+DFS = ("bf16", "f32")
+
+# Tolerances: interpret-mode Pallas may fuse multiply-adds where the oracle
+# does not; 1-2 ulp at f32 scale.
+ATOL = 5e-6
+RTOL = 3e-6
+
+
+def rand_block(rng, nz, nasty=False):
+    x = rng.standard_normal((nz, 64, 16)).astype(np.float32)
+    if nasty:
+        # Sprinkle subnormals, zeros, extremes.
+        mask = rng.random(x.shape)
+        x = np.where(mask < 0.1, np.float32(1e-40), x)  # subnormal
+        x = np.where((0.1 <= mask) & (mask < 0.2), np.float32(0.0), x)
+        x = np.where((0.2 <= mask) & (mask < 0.25), np.float32(1e30), x)
+    return x
+
+
+@pytest.mark.parametrize("df", DFS)
+@pytest.mark.parametrize("op", ["add", "sub", "mul"])
+@pytest.mark.parametrize("nz", [1, 3])
+def test_eltwise_matches_ref(op, df, nz):
+    rng = np.random.default_rng(1)
+    a = rand_block(rng, nz)
+    b = rand_block(rng, nz)
+    got = model.build(f"eltwise_{op}", df)(a, b)[0]
+    want = ref.eltwise(op, a, b, df)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL, rtol=RTOL)
+
+
+@pytest.mark.parametrize("df", DFS)
+def test_eltwise_flushes_subnormals(df):
+    rng = np.random.default_rng(2)
+    a = rand_block(rng, 2, nasty=True)
+    b = rand_block(rng, 2, nasty=True)
+    got = np.asarray(model.build("eltwise_mul", df)(a, b)[0])
+    # No subnormal outputs may survive (§3.3 flush-to-zero).
+    nonzero = got[got != 0.0]
+    assert np.all(np.abs(nonzero) >= np.float32(2.0**-126))
+    want = ref.eltwise("mul", a, b, df)
+    np.testing.assert_allclose(got, np.asarray(want), atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nz=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    df=st.sampled_from(DFS),
+    alpha=st.floats(min_value=-4.0, max_value=4.0, allow_nan=False, width=32),
+)
+def test_axpy_matches_ref_hypothesis(nz, seed, df, alpha):
+    rng = np.random.default_rng(seed)
+    y = rand_block(rng, nz)
+    x = rand_block(rng, nz)
+    got = model.build("axpy", df)(y, x, jnp.float32(alpha))[0]
+    want = ref.axpy(y, x, jnp.float32(alpha), df)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nz=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    df=st.sampled_from(DFS),
+)
+def test_dot_matches_ref_hypothesis(nz, seed, df):
+    rng = np.random.default_rng(seed)
+    a = rand_block(rng, nz)
+    b = rand_block(rng, nz)
+    got = np.asarray(model.build("dot", df)(a, b)[0]).ravel()[0]
+    want = float(ref.dot_partial(a, b, df))
+    assert got == pytest.approx(want, rel=1e-5, abs=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nz=st.integers(min_value=1, max_value=5),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    df=st.sampled_from(DFS),
+)
+def test_stencil_matches_ref_hypothesis(nz, seed, df):
+    rng = np.random.default_rng(seed)
+    x = rand_block(rng, nz)
+    hn = rng.standard_normal((nz, 16)).astype(np.float32)
+    hs = rng.standard_normal((nz, 16)).astype(np.float32)
+    hw = rng.standard_normal((nz, 64)).astype(np.float32)
+    he = rng.standard_normal((nz, 64)).astype(np.float32)
+    c = np.array([6, -1, -1, -1, -1, -1, -1], np.float32)
+    got = model.build("stencil", df)(x, hn, hs, hw, he, c)[0]
+    want = ref.stencil_apply(x, hn, hs, hw, he, c, df)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL, rtol=RTOL)
+
+
+def test_stencil_laplacian_of_linear_field_is_zero_inside():
+    """Interior Laplacian of a linear field vanishes — catches any shifted-
+    tile misalignment (the §6.2 correctness concern)."""
+    nz = 4
+    i = np.arange(64, dtype=np.float32)[None, :, None]
+    j = np.arange(16, dtype=np.float32)[None, None, :]
+    k = np.arange(nz, dtype=np.float32)[:, None, None]
+    x = (i + 2 * j + 3 * k) * 1e-3
+    x = np.broadcast_to(x, (nz, 64, 16)).astype(np.float32)
+    # Halos continue the linear field.
+    hn = (x[:, 0, :] - 1e-3).astype(np.float32)       # i = -1
+    hs = (x[:, -1, :] + 1e-3).astype(np.float32)      # i = 64
+    hw = (x[:, :, 0] - 2e-3).astype(np.float32)       # j = -1
+    he = (x[:, :, -1] + 2e-3).astype(np.float32)      # j = 16
+    c = np.array([6, -1, -1, -1, -1, -1, -1], np.float32)
+    got = np.asarray(model.build("stencil", "f32")(x, hn, hs, hw, he, c)[0])
+    interior = got[1:-1, :, :]
+    np.testing.assert_allclose(interior, np.zeros_like(interior), atol=1e-5)
+
+
+def test_stencil_zero_dirichlet_z():
+    """z boundaries are zero Dirichlet: constant field of ones, coefficient
+    sum at the fully-interior level is 0, at z extremes it is +1."""
+    nz = 3
+    x = np.ones((nz, 64, 16), np.float32)
+    ones16 = np.ones((nz, 16), np.float32)
+    ones64 = np.ones((nz, 64), np.float32)
+    c = np.array([6, -1, -1, -1, -1, -1, -1], np.float32)
+    got = np.asarray(model.build("stencil", "f32")(x, ones16, ones16, ones64, ones64, c)[0])
+    assert got[1, 30, 8] == pytest.approx(0.0)
+    assert got[0, 30, 8] == pytest.approx(1.0)
+    assert got[2, 30, 8] == pytest.approx(1.0)
+
+
+def test_bf16_quantization_visible():
+    """257 is not representable in bf16: add must round."""
+    a = np.full((1, 64, 16), 256.0, np.float32)
+    b = np.ones((1, 64, 16), np.float32)
+    got = np.asarray(model.build("eltwise_add", "bf16")(a, b)[0])
+    assert np.all(got == 256.0)
+    got32 = np.asarray(model.build("eltwise_add", "f32")(a, b)[0])
+    assert np.all(got32 == 257.0)

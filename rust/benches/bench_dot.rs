@@ -1,0 +1,56 @@
+//! Bench: global dot-product reduction (paper Figs 5 & 6) — granularity
+//! methods × routing patterns, plus the direct-to-root ablation the paper
+//! mentions but does not measure (§5).
+
+use wormsim::arch::DataFormat;
+use wormsim::engine::{CoreBlock, NativeEngine};
+use wormsim::kernels::reduction::{run_dot, DotConfig, DotMethod};
+use wormsim::noc::RoutePattern;
+use wormsim::timing::cost::CostModel;
+use wormsim::util::bench::Bencher;
+use wormsim::util::prng::Rng;
+
+fn blocks(seed: u64, n: usize, tiles: usize) -> Vec<CoreBlock> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| CoreBlock::from_fn(DataFormat::Fp32, tiles, |_, _, _| rng.next_f32() - 0.5))
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::new("dot");
+    let cost = CostModel::default();
+    let engine = NativeEngine::new();
+
+    // Fig 5: method 1 vs 2 at the largest scale.
+    let a = blocks(1, 56, 64);
+    let bb = blocks(2, 56, 64);
+    for (name, method) in [
+        ("fig5/m1_scalar_8x7_64t", DotMethod::ReduceThenSend),
+        ("fig5/m2_tiles_8x7_64t", DotMethod::SendTiles),
+    ] {
+        let cfg = DotConfig::paper_section5(method, RoutePattern::Naive, 64);
+        b.bench(name, || {
+            let out = run_dot(8, 7, &cfg, &a, &bb, &engine, &cost).unwrap();
+            Some(out.total_ns)
+        });
+    }
+
+    // Fig 6: routing patterns at 1 tile/core (network-bound regime) +
+    // the direct pattern ablation.
+    let a1 = blocks(3, 56, 1);
+    let b1 = blocks(4, 56, 1);
+    for (name, pattern) in [
+        ("fig6/naive_8x7_1t", RoutePattern::Naive),
+        ("fig6/center_8x7_1t", RoutePattern::Center),
+        ("ablation/direct_8x7_1t", RoutePattern::Direct),
+    ] {
+        let cfg = DotConfig::paper_section5(DotMethod::SendTiles, pattern, 1);
+        b.bench(name, || {
+            let out = run_dot(8, 7, &cfg, &a1, &b1, &engine, &cost).unwrap();
+            Some(out.total_ns)
+        });
+    }
+
+    b.finish();
+}

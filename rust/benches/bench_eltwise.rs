@@ -1,0 +1,63 @@
+//! Bench: element-wise kernels (paper Fig 3).
+//!
+//! Reports both simulated device time (the figure's quantity) and host
+//! wall-clock of the L3 path (the §Perf optimization target).
+
+use wormsim::arch::{ComputeUnit, DataFormat};
+use wormsim::engine::{ComputeEngine, CoreBlock, NativeEngine};
+use wormsim::kernels::eltwise::{eltwise_stream_timing, run_eltwise_values};
+use wormsim::tile::EltwiseOp;
+use wormsim::timing::cost::CostModel;
+use wormsim::util::bench::Bencher;
+use wormsim::util::prng::Rng;
+
+fn main() {
+    let mut b = Bencher::new("eltwise");
+    let cost = CostModel::default();
+
+    // Fig-3 points: simulated single-core streams.
+    for (name, unit, df) in [
+        ("fig3/fpu_bf16_256t", ComputeUnit::Fpu, DataFormat::Bf16),
+        ("fig3/sfpu_bf16_256t", ComputeUnit::Sfpu, DataFormat::Bf16),
+        ("fig3/sfpu_fp32_256t", ComputeUnit::Sfpu, DataFormat::Fp32),
+    ] {
+        b.bench(name, || {
+            let t = eltwise_stream_timing(&cost, unit, df, 256);
+            Some(t.core_ns)
+        });
+    }
+
+    // L3 hot path: native engine block arithmetic (wall time matters).
+    let engine = NativeEngine::new();
+    let mut rng = Rng::new(1);
+    for (name, df, tiles) in [
+        ("native/add_bf16_64t_x16cores", DataFormat::Bf16, 64usize),
+        ("native/add_fp32_64t_x16cores", DataFormat::Fp32, 64),
+    ] {
+        let a: Vec<CoreBlock> = (0..16)
+            .map(|_| CoreBlock::from_fn(df, tiles, |_, _, _| rng.next_f32()))
+            .collect();
+        let c: Vec<CoreBlock> = (0..16)
+            .map(|_| CoreBlock::from_fn(df, tiles, |_, _, _| rng.next_f32()))
+            .collect();
+        b.bench(name, || {
+            let out = run_eltwise_values(&engine, EltwiseOp::Add, &a, &c).unwrap();
+            std::hint::black_box(&out);
+            None
+        });
+    }
+
+    // Single-block primitives.
+    let x = CoreBlock::from_fn(DataFormat::Bf16, 64, |_, _, _| rng.next_f32());
+    let y = CoreBlock::from_fn(DataFormat::Bf16, 64, |_, _, _| rng.next_f32());
+    b.bench("native/axpy_bf16_64t", || {
+        std::hint::black_box(engine.axpy(&y, 0.5, &x).unwrap());
+        None
+    });
+    b.bench("native/dot_bf16_64t", || {
+        std::hint::black_box(engine.dot_partial(&x, &y).unwrap());
+        None
+    });
+
+    b.finish();
+}

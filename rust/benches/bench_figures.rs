@@ -1,0 +1,35 @@
+//! Bench: regenerate every paper table and figure end to end (the same
+//! runners `wormsim figures/tables all` uses), timing the whole harness.
+//! This is the one-command "reproduce the evaluation section" target.
+
+use wormsim::experiments::{run_figure, run_table, ExpContext};
+use wormsim::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new("figures");
+    std::env::set_var("WORMSIM_BENCH_SAMPLES", "1");
+    std::env::set_var("WORMSIM_BENCH_WARMUP", "0");
+
+    for id in ["fig3", "fig5", "fig6", "fig11", "fig12a", "fig12b", "fig12c", "fig13"] {
+        b.bench(&format!("figures/{id}"), || {
+            let ctx = ExpContext {
+                pcg_iters: 1,
+                ..ExpContext::default()
+            };
+            run_figure(&ctx, id).unwrap();
+            None
+        });
+    }
+    for id in ["t1", "t2", "t3"] {
+        b.bench(&format!("tables/{id}"), || {
+            let ctx = ExpContext {
+                pcg_iters: 1,
+                ..ExpContext::default()
+            };
+            run_table(&ctx, id).unwrap();
+            None
+        });
+    }
+
+    b.finish();
+}

@@ -1,0 +1,52 @@
+//! Bench: full PCG iterations (paper Table 3 & Fig 12) — both variants at
+//! the Table-3 configuration, plus the preconditioner ablation.
+
+use wormsim::arch::DataFormat;
+use wormsim::kernels::DotMethod;
+use wormsim::noc::RoutePattern;
+use wormsim::profiler::Profiler;
+use wormsim::solver::{self, PcgOptions, PcgVariant, Problem};
+use wormsim::timing::cost::CostModel;
+use wormsim::util::bench::Bencher;
+
+fn pcg_once(variant: PcgVariant, rows: usize, cols: usize, tiles: usize, precondition: bool) -> f64 {
+    let p = Problem::new(rows, cols, tiles, variant.df());
+    let grid = p.make_grid().unwrap();
+    let b = solver::dist_random(&p, 42);
+    let mut opts = PcgOptions::new(variant);
+    opts.max_iters = 1;
+    opts.tol_abs = 0.0;
+    opts.precondition = precondition;
+    opts.dot_method = DotMethod::ReduceThenSend;
+    opts.dot_pattern = RoutePattern::Naive;
+    let cost = CostModel::default();
+    let mut prof = Profiler::disabled();
+    let res = solver::solve(&grid, &p, &b, &wormsim::engine::NativeEngine::new(), &cost, &opts, &mut prof)
+        .unwrap();
+    res.per_iter_ns
+}
+
+fn main() {
+    let mut b = Bencher::new("pcg");
+
+    // Table 3 configurations (8x7 cores, 64 tiles/core = 512x112x64).
+    b.bench("table3/bf16_fused_8x7_64t", || {
+        Some(pcg_once(PcgVariant::FusedBf16, 8, 7, 64, true))
+    });
+    b.bench("table3/fp32_split_8x7_64t", || {
+        Some(pcg_once(PcgVariant::SplitFp32, 8, 7, 64, true))
+    });
+
+    // Fig 12b end point: max BF16 problem.
+    b.bench("fig12/bf16_fused_8x7_164t", || {
+        Some(pcg_once(PcgVariant::FusedBf16, 8, 7, 164, true))
+    });
+
+    // Ablation: plain CG (no Jacobi) — DESIGN.md design-choice bench.
+    b.bench("ablation/bf16_noprecond_4x4_64t", || {
+        Some(pcg_once(PcgVariant::FusedBf16, 4, 4, 64, false))
+    });
+
+    b.finish();
+    let _ = DataFormat::Bf16;
+}

@@ -1,0 +1,43 @@
+//! Bench: the 7-point stencil / SpMV (paper Fig 11) — full pipeline and
+//! the ablation variants, at the paper's 64 tiles/core.
+
+use wormsim::arch::DataFormat;
+use wormsim::device::TensixGrid;
+use wormsim::engine::{CoreBlock, NativeEngine};
+use wormsim::kernels::stencil::{run_stencil, StencilConfig, StencilVariant};
+use wormsim::timing::cost::CostModel;
+use wormsim::util::bench::Bencher;
+use wormsim::util::prng::Rng;
+
+fn main() {
+    let mut b = Bencher::new("stencil");
+    let cost = CostModel::default();
+    let engine = NativeEngine::new();
+
+    for (label, rows, cols, tiles) in [
+        ("fig11/4x4_64t", 4usize, 4usize, 64usize),
+        ("fig11/8x7_64t", 8, 7, 64),
+    ] {
+        let grid = TensixGrid::new(rows, cols).unwrap();
+        let mut rng = Rng::new(7);
+        let x: Vec<CoreBlock> = (0..rows * cols)
+            .map(|_| CoreBlock::from_fn(DataFormat::Bf16, tiles, |_, _, _| rng.next_f32()))
+            .collect();
+        for variant in [
+            StencilVariant::FULL,
+            StencilVariant::NO_HALO,
+            StencilVariant::NO_ZERO_FILL,
+            StencilVariant::NEITHER,
+        ] {
+            let cfg = StencilConfig::paper_fig11(tiles, variant);
+            let name = format!("{label}/{}", variant.label().replace(' ', "-"));
+            b.bench(&name, || {
+                let (out, t) = run_stencil(&grid, &cfg, &x, &engine, &cost).unwrap();
+                std::hint::black_box(&out);
+                Some(t.iter_ns)
+            });
+        }
+    }
+
+    b.finish();
+}

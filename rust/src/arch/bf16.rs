@@ -1,0 +1,254 @@
+//! Software bfloat16 with Wormhole's flush-to-zero (FTZ) semantics.
+//!
+//! Paper §3.3 ("Subnormals"): the Wormhole compute units do not support
+//! denormal/subnormal computation and instead flush to zero. We model this
+//! exactly: subnormal *inputs* are flushed before an operation and
+//! subnormal *results* are flushed after rounding. Rounding is
+//! round-to-nearest-even (truncation of the f32 mantissa with RNE, the
+//! standard bf16 conversion).
+//!
+//! The same FTZ treatment is applied to the FP32 SFPU path via
+//! [`ftz_f32`], since §3.3 describes FTZ as a property of the compute
+//! units, not of the 16-bit format.
+
+/// A bfloat16 value stored as its raw 16-bit pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bf16(pub u16);
+
+/// Flush f32 subnormals to (sign-preserving) zero.
+#[inline]
+pub fn ftz_f32(x: f32) -> f32 {
+    if x != 0.0 && x.abs() < f32::MIN_POSITIVE {
+        if x.is_sign_negative() {
+            -0.0
+        } else {
+            0.0
+        }
+    } else {
+        x
+    }
+}
+
+impl Bf16 {
+    pub const ZERO: Bf16 = Bf16(0);
+    pub const ONE: Bf16 = Bf16(0x3F80);
+
+    /// Smallest positive *normal* bf16 = 2^-126 (same exponent range as f32).
+    pub const MIN_POSITIVE: f32 = f32::MIN_POSITIVE;
+
+    /// Convert from f32 with round-to-nearest-even, flushing subnormal
+    /// inputs and subnormal results to zero.
+    #[inline]
+    pub fn from_f32(x: f32) -> Bf16 {
+        let x = ftz_f32(x);
+        if x.is_nan() {
+            // Quiet NaN, preserving sign bit.
+            let bits = x.to_bits();
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        let bits = x.to_bits();
+        // Round to nearest even on the truncated 16 bits.
+        let round_bit = 0x0000_8000u32;
+        let lsb = (bits >> 16) & 1;
+        let rounded = bits.wrapping_add(0x0000_7FFF + lsb);
+        let mut hi = (rounded >> 16) as u16;
+        let _ = round_bit;
+        // Flush results that became subnormal in bf16 (exponent == 0,
+        // mantissa != 0). bf16 shares f32's exponent range, so this only
+        // triggers for inputs that were already near the subnormal edge.
+        if (hi & 0x7F80) == 0 && (hi & 0x007F) != 0 {
+            hi &= 0x8000; // signed zero
+        }
+        Bf16(hi)
+    }
+
+    /// Widen to f32 (exact), flushing stored subnormals (defensive; they
+    /// cannot normally be constructed through this API).
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        let f = f32::from_bits((self.0 as u32) << 16);
+        ftz_f32(f)
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7F80) == 0x7F80 && (self.0 & 0x007F) != 0
+    }
+
+    /// a + b in the Wormhole BF16 data path: flush inputs, compute in f32,
+    /// round to bf16 (RNE), flush result.
+    #[inline]
+    pub fn add(a: Bf16, b: Bf16) -> Bf16 {
+        Bf16::from_f32(a.to_f32() + b.to_f32())
+    }
+
+    #[inline]
+    pub fn sub(a: Bf16, b: Bf16) -> Bf16 {
+        Bf16::from_f32(a.to_f32() - b.to_f32())
+    }
+
+    #[inline]
+    pub fn mul(a: Bf16, b: Bf16) -> Bf16 {
+        Bf16::from_f32(a.to_f32() * b.to_f32())
+    }
+}
+
+/// Round an f32 through the BF16 datapath: the canonical "value passed
+/// through the FPU" operation used by the native engine for BF16 kernels.
+///
+/// §Perf optimization 2: this is the native engine's innermost operation
+/// (~180M calls per simulated PCG iteration at the Table-3 size), so it is
+/// implemented directly on the bit pattern — semantically identical to
+/// `Bf16::from_f32(x).to_f32()` (pinned by `fast_path_matches_bf16_type`):
+/// flush subnormal inputs, RNE-round to bf16, quiet NaNs, overflow to inf.
+#[inline(always)]
+pub fn bf16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    let exp = bits & 0x7F80_0000;
+    if exp == 0 {
+        // Zero or subnormal input: flush to sign-preserving zero (§3.3).
+        return f32::from_bits(bits & 0x8000_0000);
+    }
+    if exp == 0x7F80_0000 {
+        // Inf passes through; NaN gets the quiet bit, as Bf16::from_f32.
+        if bits & 0x007F_FFFF != 0 {
+            return f32::from_bits((bits & 0xFFFF_0000) | 0x0040_0000);
+        }
+        return x;
+    }
+    // Round-to-nearest-even on the low 16 bits. A normal input cannot
+    // round to a bf16 subnormal (magnitude never decreases past the
+    // exponent floor), so no post-round flush is needed.
+    let lsb = (bits >> 16) & 1;
+    f32::from_bits(bits.wrapping_add(0x7FFF + lsb) & 0xFFFF_0000)
+}
+
+/// Element-wise helper: round a whole slice through BF16.
+pub fn bf16_round_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = bf16_round(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, -0.5, 2.0, 256.0, -1024.0, 1.5] {
+            assert_eq!(Bf16::from_f32(v).to_f32(), v, "roundtrip {v}");
+        }
+        assert_eq!(Bf16::ONE.to_f32(), 1.0);
+    }
+
+    #[test]
+    fn rne_rounding() {
+        // 1 + 2^-8 is exactly between bf16(1.0) and the next value; RNE
+        // picks the even mantissa (1.0).
+        let x = 1.0 + 2f32.powi(-8);
+        assert_eq!(Bf16::from_f32(x).to_f32(), 1.0);
+        // 1 + 3*2^-8 is between 1+2^-7 and 1+2^-6; RNE picks 1+2^-6 (even).
+        let y = 1.0 + 3.0 * 2f32.powi(-8);
+        assert_eq!(Bf16::from_f32(y).to_f32(), 1.0 + 2f32.powi(-6));
+        // Values just above the midpoint round up.
+        let z = 1.0 + 2f32.powi(-8) + 2f32.powi(-12);
+        assert_eq!(Bf16::from_f32(z).to_f32(), 1.0 + 2f32.powi(-7));
+    }
+
+    #[test]
+    fn subnormal_inputs_flush_to_zero() {
+        let sub = f32::MIN_POSITIVE / 2.0;
+        assert!(sub > 0.0 && !sub.is_normal());
+        assert_eq!(Bf16::from_f32(sub).to_f32(), 0.0);
+        assert_eq!(Bf16::from_f32(-sub).to_f32(), -0.0);
+        assert!(Bf16::from_f32(-sub).to_f32().is_sign_negative());
+        assert_eq!(ftz_f32(sub), 0.0);
+        assert_eq!(ftz_f32(1.0), 1.0);
+        assert_eq!(ftz_f32(-0.0), -0.0);
+    }
+
+    #[test]
+    fn multiply_underflow_flushes() {
+        // 2^-100 * 2^-100 = 2^-200 → subnormal/underflow → 0 on Wormhole.
+        let a = Bf16::from_f32(2f32.powi(-100));
+        let b = Bf16::from_f32(2f32.powi(-100));
+        assert_eq!(Bf16::mul(a, b).to_f32(), 0.0);
+        // While IEEE would give a subnormal f32 here.
+        let ieee = 2f32.powi(-100) * 2f32.powi(-100);
+        assert!(ieee == 0.0 || !ieee.is_normal());
+    }
+
+    #[test]
+    fn arithmetic_matches_f32_then_round() {
+        let a = Bf16::from_f32(1.25);
+        let b = Bf16::from_f32(3.5);
+        assert_eq!(Bf16::add(a, b).to_f32(), 4.75);
+        assert_eq!(Bf16::sub(a, b).to_f32(), -2.25);
+        assert_eq!(Bf16::mul(a, b).to_f32(), 4.375);
+    }
+
+    #[test]
+    fn nan_and_inf_preserved() {
+        assert!(Bf16::from_f32(f32::NAN).is_nan());
+        assert_eq!(Bf16::from_f32(f32::INFINITY).to_f32(), f32::INFINITY);
+        assert_eq!(Bf16::from_f32(f32::NEG_INFINITY).to_f32(), f32::NEG_INFINITY);
+        // Overflow to infinity.
+        assert_eq!(Bf16::from_f32(3.4e38f32 * 2.0).to_f32(), f32::INFINITY);
+    }
+
+    #[test]
+    fn precision_is_8_bits() {
+        // bf16 has 8 significand bits: 256 + 1 is not representable.
+        assert_eq!(bf16_round(257.0), 256.0);
+        assert_eq!(bf16_round(258.0), 258.0);
+    }
+
+    #[test]
+    fn fast_path_matches_bf16_type() {
+        // bf16_round must equal Bf16::from_f32().to_f32() bit for bit
+        // across the full value spectrum, including subnormals, ±0,
+        // inf/NaN, and overflow.
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(0xFA57);
+        let mut check = |x: f32| {
+            let fast = bf16_round(x);
+            let slow = Bf16::from_f32(x).to_f32();
+            if fast.is_nan() || slow.is_nan() {
+                assert_eq!(fast.is_nan(), slow.is_nan(), "NaN mismatch for {x}");
+            } else {
+                assert_eq!(fast.to_bits(), slow.to_bits(), "mismatch for {x:e}");
+            }
+        };
+        for &x in &[
+            0.0f32,
+            -0.0,
+            1.0,
+            -1.0,
+            257.0,
+            f32::MIN_POSITIVE,
+            f32::MIN_POSITIVE / 2.0,
+            -f32::MIN_POSITIVE / 4.0,
+            f32::MAX,
+            -f32::MAX,
+            3.39e38,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            1.0 + 2f32.powi(-8),
+            1.0 + 3.0 * 2f32.powi(-8),
+        ] {
+            check(x);
+        }
+        for _ in 0..200_000 {
+            check(f32::from_bits(rng.next_u64() as u32));
+        }
+    }
+
+    #[test]
+    fn round_slice() {
+        let mut xs = vec![1.0f32, 257.0, f32::MIN_POSITIVE / 2.0];
+        bf16_round_slice(&mut xs);
+        assert_eq!(xs, vec![1.0, 256.0, 0.0]);
+    }
+}

@@ -1,0 +1,167 @@
+//! Architectural constants of the Tenstorrent Wormhole n300d, as described
+//! in the paper (§3, Tables 1–2). Every constant cites the paper statement
+//! that fixes it. Calibration *tunables* (cost-model knobs that the paper
+//! does not pin down numerically) live in [`crate::timing::calib`] instead.
+
+/// Tile edge sizes: tiles are 32×32 = 1024 elements (§3.1); the stencil
+/// work uses 64×16 tiles, also 1024 elements (§6.1).
+pub const TILE_ELEMS: usize = 1024;
+/// Standard tile shape (rows, cols) (§3.1).
+pub const TILE_SQUARE: (usize, usize) = (32, 32);
+/// Stencil tile shape chosen to align rows with 32B pointer steps (§6.2).
+pub const TILE_STENCIL: (usize, usize) = (64, 16);
+/// Subtiles ("faces") are 16×16 and interleaved in physical memory (§3.1, Fig 2).
+pub const FACE: usize = 16;
+
+/// Die grid: 10×12 elements, 80 of which are Tensix compute cores (§3).
+pub const DIE_ROWS: usize = 10;
+pub const DIE_COLS: usize = 12;
+pub const TENSIX_PER_DIE: usize = 80;
+/// Maximum usable compute sub-grid in the paper's experiments (§7.2).
+pub const MAX_SUBGRID: (usize, usize) = (8, 7);
+
+/// Per-core local SRAM, "approximately 1.5MB" (§3).
+pub const SRAM_BYTES: usize = 1536 * 1024;
+
+/// Number of baby RISC-V cores per Tensix (§3): 2 NoC data-movement cores,
+/// 3 compute-side movement/issue cores.
+pub const BABY_RISCV_PER_CORE: usize = 5;
+pub const NOC_RISCV_PER_CORE: usize = 2;
+
+/// DRAM: 24 GB GDDR6 shared by both dies on the n300d (§3 / Table 2).
+pub const N300D_DRAM_BYTES: u64 = 24 * 1024 * 1024 * 1024;
+/// Peak DRAM bandwidth per die: n150d column of Table 2 (288 GB/s; the
+/// n300d shows 576 GB/s for two dies — experiments use a single die).
+pub const DRAM_BW_PER_DIE_GBS: f64 = 288.0;
+
+/// Alignment rules (§3.3): DRAM reads 32B, DRAM writes 16B, L1 16B.
+pub const DRAM_READ_ALIGN: usize = 32;
+pub const DRAM_WRITE_ALIGN: usize = 16;
+pub const L1_ALIGN: usize = 32;
+/// CB read-pointer manipulation granularity (§6.2): multiples of 32B.
+pub const CB_PTR_ALIGN: usize = 32;
+
+// ---------------------------------------------------------------------
+// Table 1: single-cycle capabilities of the Wormhole FPU.
+// ---------------------------------------------------------------------
+
+/// Matrix multiply: 8x16 × 16x16 = 8x16 per cycle.
+pub const FPU_MATMUL_SHAPE: ((usize, usize), (usize, usize)) = ((8, 16), (16, 16));
+/// Reduction: one 16×16 face per cycle.
+pub const FPU_REDUCE_ELEMS_PER_CLK: usize = FACE * FACE; // 256
+/// Element-wise add/sub/mul: one 8×16 slab per cycle = 128 ops/clk (§4).
+pub const FPU_ELTWISE_ELEMS_PER_CLK: usize = 8 * 16; // 128
+
+// ---------------------------------------------------------------------
+// SFPU capabilities (§3.3, §4).
+// ---------------------------------------------------------------------
+
+/// SFPU is 32 lanes × 32 bits; 2 cycles per element-wise op on 64 16-bit
+/// elements → 32 16-bit elems/clk; 16 32-bit elems/clk.
+pub const SFPU_LANES: usize = 32;
+pub const SFPU_ELEMS_PER_CLK_16B: usize = 32;
+pub const SFPU_ELEMS_PER_CLK_32B: usize = 16;
+
+// ---------------------------------------------------------------------
+// Intra-core movement bandwidths (§4 roofline).
+// ---------------------------------------------------------------------
+
+/// Packer and unpacker peak throughput between SRAM and registers.
+pub const PACKER_BYTES_PER_CLK: usize = 64;
+pub const UNPACKER_BYTES_PER_CLK: usize = 64;
+/// Copy into the Dst register is limited to 32 B/cycle (§4).
+pub const DST_COPY_BYTES_PER_CLK: usize = 32;
+
+/// Dst register set capacity (§3.3): 16 tiles of 16-bit or 8 tiles of 32-bit.
+pub const DST_TILES_16B: usize = 16;
+pub const DST_TILES_32B: usize = 8;
+/// SrcA/SrcB: 64 rows × 16 datums, ≤19 bits each (§3.3).
+pub const SRC_REG_ROWS: usize = 64;
+pub const SRC_REG_COLS: usize = 16;
+
+/// Tensix clock. Wormhole's AI clock is ~1 GHz; the paper reports times in
+/// ms and the roofline in per-clock units, so 1 GHz makes cycles ≡ ns.
+pub const CLOCK_HZ: f64 = 1.0e9;
+
+/// Convert cycles to nanoseconds at the Tensix clock.
+#[inline]
+pub fn cycles_to_ns(cycles: u64) -> f64 {
+    cycles as f64 / CLOCK_HZ * 1e9
+}
+
+// ---------------------------------------------------------------------
+// Memory capacity model (§7.2): maximum tiles per core for each solver
+// variant. Derivation in DESIGN.md §6 — reservations tuned so the paper's
+// reported ceilings (64 FP32 split / 164 BF16 fused) emerge from SRAM_BYTES.
+// ---------------------------------------------------------------------
+
+/// SRAM reserved for stack + program + circular buffers, split-kernel
+/// variant (needs more CB staging, §7.1).
+pub const SRAM_RESERVE_SPLIT: usize = 256 * 1024;
+/// Same for the fused-kernel variant (less staging, §7.1).
+pub const SRAM_RESERVE_FUSED: usize = 224 * 1024;
+/// Number of resident whole-domain vectors: split PCG keeps x, r, z, p, q;
+/// fused PCG aliases z into the preconditioner application: x, r, p, q.
+pub const PCG_VECTORS_SPLIT: usize = 5;
+pub const PCG_VECTORS_FUSED: usize = 4;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::dataformat::DataFormat;
+
+    #[test]
+    fn tile_shapes_are_1024_elements() {
+        assert_eq!(TILE_SQUARE.0 * TILE_SQUARE.1, TILE_ELEMS);
+        assert_eq!(TILE_STENCIL.0 * TILE_STENCIL.1, TILE_ELEMS);
+        // 64×16 BF16 rows are exactly one 32B pointer step (§6.2).
+        assert_eq!(TILE_STENCIL.1 * DataFormat::Bf16.bytes(), CB_PTR_ALIGN);
+    }
+
+    #[test]
+    fn table1_fpu_capabilities() {
+        // Table 1 exactly as printed.
+        assert_eq!(FPU_MATMUL_SHAPE, ((8, 16), (16, 16)));
+        assert_eq!(FPU_REDUCE_ELEMS_PER_CLK, 256);
+        assert_eq!(FPU_ELTWISE_ELEMS_PER_CLK, 128);
+    }
+
+    #[test]
+    fn sfpu_rates_match_section4() {
+        // "32 and 16 operations per clock cycle" for 16/32-bit (§4).
+        assert_eq!(SFPU_ELEMS_PER_CLK_16B, 32);
+        assert_eq!(SFPU_ELEMS_PER_CLK_32B, 16);
+        // FPU/SFPU eltwise ratio underlying the "~6x slower" observation.
+        assert_eq!(FPU_ELTWISE_ELEMS_PER_CLK / SFPU_ELEMS_PER_CLK_16B, 4);
+    }
+
+    #[test]
+    fn max_tiles_per_core_match_paper() {
+        // §7.2: "64 tiles of 1024 FP32 elements" (split) and "164 tiles of
+        // 1024 BF16 elements" (fused) — these must fall out of the capacity
+        // model, not be hardcoded.
+        let avail_split = SRAM_BYTES - SRAM_RESERVE_SPLIT;
+        let per_tile_split = PCG_VECTORS_SPLIT * DataFormat::Fp32.tile_bytes();
+        assert_eq!(avail_split / per_tile_split, 64);
+
+        let avail_fused = SRAM_BYTES - SRAM_RESERVE_FUSED;
+        let per_tile_fused = PCG_VECTORS_FUSED * DataFormat::Bf16.tile_bytes();
+        assert_eq!(avail_fused / per_tile_fused, 164);
+    }
+
+    #[test]
+    fn element_ceilings_match_paper() {
+        // §7.2: ~3.6M FP32 elements and ~9.4M BF16 elements on 8×7 cores.
+        let cores = MAX_SUBGRID.0 * MAX_SUBGRID.1;
+        let fp32_elems = cores * 64 * TILE_ELEMS;
+        let bf16_elems = cores * 164 * TILE_ELEMS;
+        assert!((3.5e6..3.8e6).contains(&(fp32_elems as f64)), "{fp32_elems}");
+        assert!((9.2e6..9.6e6).contains(&(bf16_elems as f64)), "{bf16_elems}");
+    }
+
+    #[test]
+    fn grid_counts() {
+        assert!(TENSIX_PER_DIE <= DIE_ROWS * DIE_COLS);
+        assert!(MAX_SUBGRID.0 * MAX_SUBGRID.1 <= TENSIX_PER_DIE);
+    }
+}

@@ -1,0 +1,136 @@
+//! Data formats supported by the Wormhole compute units (paper §3.3).
+//!
+//! The FPU (matrix engine) is limited to ≤19-bit formats — for our purposes
+//! BF16 — while the SFPU (vector engine) supports both 16- and 32-bit
+//! formats. FP8 appears only in the Table-2 peak-TFLOPS characteristics.
+
+use std::fmt;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DataFormat {
+    /// bfloat16: 1 sign, 8 exponent, 7 mantissa bits. FPU-native.
+    Bf16,
+    /// IEEE-754 binary32. SFPU only (with flush-to-zero, §3.3).
+    Fp32,
+    /// 8-bit float (Table 2 peak numbers only; not used by the kernels).
+    Fp8,
+}
+
+impl DataFormat {
+    /// Bytes per element.
+    pub const fn bytes(self) -> usize {
+        match self {
+            DataFormat::Bf16 => 2,
+            DataFormat::Fp32 => 4,
+            DataFormat::Fp8 => 1,
+        }
+    }
+
+    /// Bytes per 1024-element tile (32×32 or 64×16).
+    pub const fn tile_bytes(self) -> usize {
+        self.bytes() * crate::arch::constants::TILE_ELEMS
+    }
+
+    /// Whether the FPU (matrix engine) can operate on this format
+    /// (restricted to ≤19-bit formats, §3.3).
+    pub const fn fpu_capable(self) -> bool {
+        matches!(self, DataFormat::Bf16 | DataFormat::Fp8)
+    }
+
+    /// Whether the SFPU supports this format (16- and 32-bit, §3.3).
+    pub const fn sfpu_capable(self) -> bool {
+        matches!(self, DataFormat::Bf16 | DataFormat::Fp32)
+    }
+}
+
+impl fmt::Display for DataFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DataFormat::Bf16 => write!(f, "BF16"),
+            DataFormat::Fp32 => write!(f, "FP32"),
+            DataFormat::Fp8 => write!(f, "FP8"),
+        }
+    }
+}
+
+impl std::str::FromStr for DataFormat {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "bf16" | "bfloat16" => Ok(DataFormat::Bf16),
+            "fp32" | "f32" | "float32" => Ok(DataFormat::Fp32),
+            "fp8" | "f8" => Ok(DataFormat::Fp8),
+            _ => Err(format!("unknown data format '{s}' (expected bf16|fp32|fp8)")),
+        }
+    }
+}
+
+/// Which compute unit executes an operation (paper §3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ComputeUnit {
+    /// Matrix engine: 8×16 SPMD element-wise / matmul / 16×16 reduction per
+    /// cycle; ≤19-bit formats.
+    Fpu,
+    /// Vector engine: 32 lanes × 32 bits; needs Dst-register staging and
+    /// lane load/stores on top of pack/unpack.
+    Sfpu,
+}
+
+impl ComputeUnit {
+    /// The unit the paper uses for a given precision: FPU for BF16,
+    /// SFPU (mandatory) for FP32.
+    pub const fn for_format(df: DataFormat) -> ComputeUnit {
+        match df {
+            DataFormat::Fp32 => ComputeUnit::Sfpu,
+            _ => ComputeUnit::Fpu,
+        }
+    }
+
+    pub const fn supports(self, df: DataFormat) -> bool {
+        match self {
+            ComputeUnit::Fpu => df.fpu_capable(),
+            ComputeUnit::Sfpu => df.sfpu_capable(),
+        }
+    }
+}
+
+impl fmt::Display for ComputeUnit {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ComputeUnit::Fpu => write!(f, "FPU"),
+            ComputeUnit::Sfpu => write!(f, "SFPU"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(DataFormat::Bf16.bytes(), 2);
+        assert_eq!(DataFormat::Fp32.bytes(), 4);
+        assert_eq!(DataFormat::Bf16.tile_bytes(), 2048);
+        assert_eq!(DataFormat::Fp32.tile_bytes(), 4096);
+    }
+
+    #[test]
+    fn unit_capabilities_match_paper() {
+        // §3.3: FPU restricted to ≤19-bit; SFPU supports 16/32-bit.
+        assert!(DataFormat::Bf16.fpu_capable());
+        assert!(!DataFormat::Fp32.fpu_capable());
+        assert!(DataFormat::Fp32.sfpu_capable());
+        assert!(!DataFormat::Fp8.sfpu_capable());
+        assert_eq!(ComputeUnit::for_format(DataFormat::Fp32), ComputeUnit::Sfpu);
+        assert_eq!(ComputeUnit::for_format(DataFormat::Bf16), ComputeUnit::Fpu);
+        assert!(!ComputeUnit::Fpu.supports(DataFormat::Fp32));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!("bf16".parse::<DataFormat>().unwrap(), DataFormat::Bf16);
+        assert_eq!("FP32".parse::<DataFormat>().unwrap(), DataFormat::Fp32);
+        assert!("fp64".parse::<DataFormat>().is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Wormhole architecture model: data formats, Table-1/2 constants, and
+//! BF16 flush-to-zero arithmetic (paper §3).
+
+pub mod bf16;
+pub mod constants;
+pub mod dataformat;
+pub mod specs;
+
+pub use bf16::{bf16_round, bf16_round_slice, ftz_f32, Bf16};
+pub use dataformat::{ComputeUnit, DataFormat};

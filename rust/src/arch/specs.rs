@@ -1,0 +1,84 @@
+//! Table 2: high-level characteristics of the accelerators compared in the
+//! paper. Used by the `tables t2` runner and by the H100 baseline model.
+
+/// One accelerator column of Table 2.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AcceleratorSpec {
+    pub name: &'static str,
+    pub vendor: &'static str,
+    pub form_factor: &'static str,
+    pub tdp_w: f64,
+    pub process_node: &'static str,
+    pub peak_mem_bw_gbs: f64,
+    pub memory: &'static str,
+    pub fp8_tflops: f64,
+    pub fp16_tflops: f64,
+    pub fp32_tflops: f64,
+}
+
+/// Wormhole n150d (single-die reference point; §7.3 notes it is the more
+/// relevant TDP comparison since experiments use one die of the n300d).
+pub const N150D: AcceleratorSpec = AcceleratorSpec {
+    name: "Wormhole n150d",
+    vendor: "Tenstorrent",
+    form_factor: "PCIe",
+    tdp_w: 160.0,
+    process_node: "GF 12nm",
+    peak_mem_bw_gbs: 288.0,
+    memory: "12 GB GDDR6",
+    fp8_tflops: 262.0,
+    fp16_tflops: 74.0,
+    fp32_tflops: 2.3,
+};
+
+/// Wormhole n300d (the test system; two Tensix dies).
+pub const N300D: AcceleratorSpec = AcceleratorSpec {
+    name: "Wormhole n300d",
+    vendor: "Tenstorrent",
+    form_factor: "PCIe",
+    tdp_w: 300.0,
+    process_node: "GF 12nm",
+    peak_mem_bw_gbs: 576.0,
+    memory: "24 GB GDDR6",
+    fp8_tflops: 466.0,
+    fp16_tflops: 131.0,
+    fp32_tflops: 4.1,
+};
+
+/// Nvidia H100 PCIe (the GPU comparison point).
+pub const H100: AcceleratorSpec = AcceleratorSpec {
+    name: "H100",
+    vendor: "Nvidia",
+    form_factor: "PCIe",
+    tdp_w: 350.0,
+    process_node: "TSMC N4",
+    peak_mem_bw_gbs: 3900.0,
+    memory: "80 GB HBM3",
+    fp8_tflops: 1513.0,
+    fp16_tflops: 102.4,
+    fp32_tflops: 51.2,
+};
+
+pub const ALL_SPECS: [&AcceleratorSpec; 3] = [&N150D, &N300D, &H100];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_values_as_printed() {
+        assert_eq!(N150D.tdp_w, 160.0);
+        assert_eq!(N300D.tdp_w, 300.0);
+        assert_eq!(H100.tdp_w, 350.0);
+        assert_eq!(N300D.peak_mem_bw_gbs, 576.0);
+        assert_eq!(H100.peak_mem_bw_gbs, 3900.0);
+        assert_eq!(H100.fp32_tflops, 51.2);
+        assert_eq!(N150D.fp32_tflops, 2.3);
+    }
+
+    #[test]
+    fn n300d_is_two_n150d_dies() {
+        assert_eq!(N300D.peak_mem_bw_gbs, 2.0 * N150D.peak_mem_bw_gbs);
+        assert!((N300D.fp16_tflops - 2.0 * N150D.fp16_tflops).abs() < 20.0);
+    }
+}

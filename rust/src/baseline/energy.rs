@@ -1,0 +1,98 @@
+//! Energy-to-solution model (§8 future work: "system-level consumption and
+//! energy-to-solution could be measured relatively accurately and would be
+//! a useful addition").
+//!
+//! The paper contextualizes its performance results with TDP (§7.3) and
+//! notes the n150d's 160 W is the relevant budget for single-die runs. We
+//! implement the TDP-proxy energy model the paper gestures at: energy =
+//! board power × time, with an idle/active split so partial sub-grid
+//! utilization is not billed the full board.
+
+use crate::arch::specs::{AcceleratorSpec, H100, N150D};
+use crate::timing::SimNs;
+
+/// TDP-proxy energy model for one accelerator.
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    pub spec: &'static AcceleratorSpec,
+    /// Fraction of TDP drawn when the part is powered but compute-idle
+    /// (uncore, DRAM refresh, NoC). Public measurements for both GDDR6
+    /// accelerator boards and H100 hover near 30–40% of TDP at idle.
+    pub idle_fraction: f64,
+}
+
+impl EnergyModel {
+    pub fn n150d() -> Self {
+        // Single Wormhole die — the §7.3-recommended comparison basis.
+        Self {
+            spec: &N150D,
+            idle_fraction: 0.35,
+        }
+    }
+
+    pub fn h100() -> Self {
+        Self {
+            spec: &H100,
+            idle_fraction: 0.35,
+        }
+    }
+
+    /// Average power (W) at a given active-resource utilization in [0,1]
+    /// (for Wormhole: active cores / 80; for the GPU: 1.0 for a saturating
+    /// kernel stream).
+    pub fn power_w(&self, utilization: f64) -> f64 {
+        let u = utilization.clamp(0.0, 1.0);
+        self.spec.tdp_w * (self.idle_fraction + (1.0 - self.idle_fraction) * u)
+    }
+
+    /// Energy in joules for `ns` of execution at `utilization`.
+    pub fn energy_j(&self, ns: SimNs, utilization: f64) -> f64 {
+        self.power_w(utilization) * (ns * 1e-9)
+    }
+
+    /// Energy per PCG iteration in millijoules.
+    pub fn energy_per_iter_mj(&self, iter_ns: SimNs, utilization: f64) -> f64 {
+        self.energy_j(iter_ns, utilization) * 1e3
+    }
+}
+
+/// Wormhole utilization for an `rows × cols` compute sub-grid.
+pub fn wormhole_utilization(rows: usize, cols: usize) -> f64 {
+    (rows * cols) as f64 / crate::arch::constants::TENSIX_PER_DIE as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_scales_between_idle_and_tdp() {
+        let m = EnergyModel::n150d();
+        assert!((m.power_w(0.0) - 160.0 * 0.35).abs() < 1e-9);
+        assert!((m.power_w(1.0) - 160.0).abs() < 1e-9);
+        assert!(m.power_w(0.5) > m.power_w(0.0));
+        assert!(m.power_w(2.0) <= 160.0, "utilization clamped");
+    }
+
+    #[test]
+    fn energy_per_iteration_comparison_shape() {
+        // Table-3 numbers: H100 0.28 ms at 350 W vs Wormhole BF16 1.2 ms
+        // at 160 W × 70% utilization. The energy gap must be much smaller
+        // than the time gap — the paper's §7.3 point that "the performance
+        // differential should be considered relative to power draw".
+        let wh = EnergyModel::n150d();
+        let gpu = EnergyModel::h100();
+        let wh_e = wh.energy_per_iter_mj(1.20e6, wormhole_utilization(8, 7));
+        let gpu_e = gpu.energy_per_iter_mj(0.28e6, 1.0);
+        let energy_ratio = wh_e / gpu_e;
+        let time_ratio = 1.20 / 0.28;
+        assert!(energy_ratio < time_ratio, "energy {energy_ratio} vs time {time_ratio}");
+        assert!(energy_ratio > 1.0, "H100 still wins on energy here");
+    }
+
+    #[test]
+    fn utilization_fraction() {
+        assert!((wormhole_utilization(8, 7) - 0.7).abs() < 1e-9);
+        assert!((wormhole_utilization(1, 1) - 1.0 / 80.0).abs() < 1e-12);
+    }
+}

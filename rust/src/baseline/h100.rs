@@ -1,0 +1,164 @@
+//! Analytic model of the paper's H100 CG reference (§7.3).
+//!
+//! The GPU implementation follows the traditional offload style: four
+//! kernels (norm, dot, axpy, SpMV) assembled per iteration, norm/dot/axpy
+//! via Kokkos in a straightforward way, SpMV via cuSPARSE Sliced-ELL, all
+//! FP32, timed with cudaEvent pairs. Every kernel at this problem size is
+//! memory-bandwidth-bound, so time = bytes / achieved-bandwidth plus
+//! launch/synchronization overheads. Parameters are calibrated against the
+//! paper's measured 0.28 ms/iteration at 512×112×64 (Table 3); the
+//! component split then reproduces Fig 13's H100 bars.
+
+use crate::arch::specs::H100;
+use crate::baseline::sell::SellTraffic;
+use crate::profiler::Breakdown;
+use crate::timing::SimNs;
+
+/// Tunable parameters of the GPU model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct H100Params {
+    /// Fraction of the 3.9 TB/s peak a well-written streaming kernel
+    /// achieves in practice.
+    pub bw_efficiency: f64,
+    /// Host-side launch overhead per kernel, ns.
+    pub launch_ns: f64,
+    /// Device-to-host synchronization for a reduction result (the Kokkos
+    /// parallel_reduce in dot/norm returns the value to the host; §7.3
+    /// notes the dot time includes this transfer).
+    pub d2h_sync_ns: f64,
+    pub sell: SellTraffic,
+    /// FP32 element size.
+    pub elem_bytes: usize,
+}
+
+impl Default for H100Params {
+    fn default() -> Self {
+        Self {
+            // Calibrated so the Table-3 problem lands at 0.28 ms/iter.
+            bw_efficiency: 0.58,
+            launch_ns: 3_000.0,
+            d2h_sync_ns: 12_000.0,
+            sell: SellTraffic::laplacian_fp32(),
+            elem_bytes: 4,
+        }
+    }
+}
+
+/// Per-iteration component times for the GPU CG at `n` unknowns.
+#[derive(Debug, Clone)]
+pub struct H100Iteration {
+    pub breakdown: Breakdown,
+    /// Device compute time (the Fig-13 bars: launches excluded, §7.3).
+    pub components_ns: SimNs,
+    /// Wall per-iteration time including launches (Table 3).
+    pub total_ns: SimNs,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct H100Model {
+    pub params: H100Params,
+}
+
+impl H100Model {
+    pub fn new(params: H100Params) -> Self {
+        Self { params }
+    }
+
+    fn bw_bytes_per_ns(&self) -> f64 {
+        H100.peak_mem_bw_gbs * self.params.bw_efficiency // GB/s == bytes/ns
+    }
+
+    fn stream_ns(&self, bytes: f64) -> f64 {
+        bytes / self.bw_bytes_per_ns()
+    }
+
+    /// One CG iteration (Algorithm 1) at `n` unknowns.
+    ///
+    /// Kernels per iteration: 1 SpMV, 2 dots, 3 axpys + 1 preconditioner
+    /// scale (reported under axpy, as the Kokkos code fuses it there),
+    /// 1 norm. The dot/norm reductions each pay a D2H sync.
+    pub fn cg_iteration(&self, n: usize) -> H100Iteration {
+        let p = &self.params;
+        let nb = n as f64 * p.elem_bytes as f64;
+        let mut b = Breakdown::new();
+        b.iterations = 1;
+
+        // SpMV: SELL traffic.
+        let spmv = self.stream_ns(p.sell.bytes(n));
+        b.add("spmv", spmv);
+
+        // dot: two vectors in; result reduced and synced to host. ×2.
+        let dot_one = self.stream_ns(2.0 * nb) + p.d2h_sync_ns;
+        b.add("dot", 2.0 * dot_one);
+
+        // axpy: 2 reads + 1 write, ×3; plus the Jacobi scale (1 read +
+        // 1 write) reported under axpy.
+        let axpy_one = self.stream_ns(3.0 * nb);
+        let precond = self.stream_ns(2.0 * nb);
+        b.add("axpy", 3.0 * axpy_one + precond);
+
+        // norm: one vector in, reduce, sync.
+        let norm = self.stream_ns(nb) + p.d2h_sync_ns;
+        b.add("norm", norm);
+
+        let components: f64 = b.total_per_iter();
+        // 8 kernel launches per iteration (spmv, 2 dot, 3 axpy, precond,
+        // norm) — excluded from the Fig-13 bars (§7.3), included in the
+        // Table-3 wall time.
+        let total = components + 8.0 * p.launch_ns;
+        H100Iteration {
+            breakdown: b,
+            components_ns: components,
+            total_ns: total,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TABLE3_N: usize = 512 * 112 * 64;
+
+    #[test]
+    fn table3_calibration() {
+        // Paper: 0.28 ms/iteration for the 512×112×64 grid.
+        let m = H100Model::default();
+        let it = m.cg_iteration(TABLE3_N);
+        let ms = it.total_ns / 1e6;
+        assert!(
+            (0.24..0.32).contains(&ms),
+            "H100 model {ms} ms/iter vs paper 0.28"
+        );
+    }
+
+    #[test]
+    fn fig13_component_shape() {
+        // §7.3: SpMV and dot are roughly comparable; axpy is NOT the most
+        // expensive device component... actually "the axpy kernel is the
+        // least expensive" refers to Wormhole-relative cost; on H100 axpy
+        // moves the most bytes of the vector kernels. We check the robust
+        // claims: spmv is the largest single component and norm the
+        // smallest.
+        let m = H100Model::default();
+        let it = m.cg_iteration(TABLE3_N);
+        let g = |k: &str| it.breakdown.per_iter(k);
+        assert!(g("spmv") > g("dot"));
+        assert!(g("spmv") > g("axpy"));
+        assert!(g("norm") < g("dot"));
+        assert!(g("norm") < g("axpy"));
+        // Dot and spmv within ~2.5x of each other ("relative equality").
+        assert!(g("spmv") / g("dot") < 2.5);
+    }
+
+    #[test]
+    fn scales_linearly_with_n() {
+        let m = H100Model::default();
+        let a = m.cg_iteration(1_000_000);
+        let b = m.cg_iteration(2_000_000);
+        let compute_a = a.components_ns - 3.0 * m.params.d2h_sync_ns;
+        let compute_b = b.components_ns - 3.0 * m.params.d2h_sync_ns;
+        let ratio = compute_b / compute_a;
+        assert!((1.9..2.1).contains(&ratio), "ratio {ratio}");
+    }
+}

@@ -1,0 +1,11 @@
+//! GPU comparison baseline (§7.3): an analytic, traffic-calibrated model of
+//! the paper's H100 CG reference (Kokkos norm/dot/axpy + cuSPARSE
+//! Sliced-ELL SpMV at FP32).
+
+pub mod energy;
+pub mod h100;
+pub mod sell;
+
+pub use energy::{wormhole_utilization, EnergyModel};
+pub use h100::{H100Iteration, H100Model, H100Params};
+pub use sell::SellTraffic;

@@ -1,0 +1,216 @@
+//! Circular buffers (§3.2): statically-allocated SRAM FIFO queues that
+//! stage tiles between the NoC cores, the unpacker/packer, and the compute
+//! units, and synchronize the five baby RISC-V cores.
+//!
+//! The API mirrors tt-metal: `reserve_back` / `push_back` on the producer
+//! side, `wait_front` / `pop_front` on the consumer side. We additionally
+//! model the paper's extension (§6.2): manual increment/decrement of the
+//! read pointer in multiples of 32B, used to construct shifted stencil
+//! tiles without data movement.
+
+use crate::arch::constants::CB_PTR_ALIGN;
+use crate::error::{Result, SimError};
+use crate::tile::Tile;
+
+/// A FIFO of tile pages in SRAM.
+#[derive(Debug, Clone)]
+pub struct CircularBuffer {
+    pub name: String,
+    /// Bytes per page (one tile at the CB's data format).
+    pub page_bytes: usize,
+    /// Capacity in pages.
+    pub num_pages: usize,
+    /// In-flight pages (reserved but not yet pushed).
+    reserved: usize,
+    /// Queue of resident tiles (front = oldest).
+    queue: std::collections::VecDeque<Tile>,
+    /// Read-pointer displacement in bytes (the §6.2 extension). Applied to
+    /// the *front* tile when it is consumed via [`front_shifted`].
+    read_ptr_offset: isize,
+    /// Statistics for the profiler.
+    pub total_pushes: u64,
+    pub total_pops: u64,
+}
+
+impl CircularBuffer {
+    pub fn new(name: &str, page_bytes: usize, num_pages: usize) -> Self {
+        assert!(num_pages > 0, "CB needs at least one page");
+        Self {
+            name: name.to_string(),
+            page_bytes,
+            num_pages,
+            reserved: 0,
+            queue: std::collections::VecDeque::new(),
+            read_ptr_offset: 0,
+            total_pushes: 0,
+            total_pops: 0,
+        }
+    }
+
+    pub fn sram_bytes(&self) -> usize {
+        self.page_bytes * self.num_pages
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Producer: reserve space for `pages` pages, failing (in real hardware,
+    /// blocking) if the FIFO cannot hold them.
+    pub fn reserve_back(&mut self, pages: usize) -> Result<()> {
+        let pending = self.queue.len() + self.reserved + pages;
+        if pending > self.num_pages {
+            return Err(SimError::CbOverflow {
+                name: self.name.clone(),
+                capacity: self.num_pages,
+                pending,
+            });
+        }
+        self.reserved += pages;
+        Ok(())
+    }
+
+    /// Producer: publish a tile into previously reserved space.
+    pub fn push_back(&mut self, tile: Tile) -> Result<()> {
+        if self.reserved == 0 {
+            // tt-metal requires reserve before push; we enforce it.
+            return Err(SimError::CbOverflow {
+                name: self.name.clone(),
+                capacity: self.num_pages,
+                pending: self.queue.len() + 1,
+            });
+        }
+        self.reserved -= 1;
+        self.queue.push_back(tile);
+        self.total_pushes += 1;
+        Ok(())
+    }
+
+    /// Consumer: access the front tile (wait_front in tt-metal).
+    pub fn wait_front(&self) -> Result<&Tile> {
+        self.queue.front().ok_or_else(|| SimError::CbUnderflow {
+            name: self.name.clone(),
+        })
+    }
+
+    /// Consumer: remove the front tile.
+    pub fn pop_front(&mut self) -> Result<Tile> {
+        let t = self.queue.pop_front().ok_or_else(|| SimError::CbUnderflow {
+            name: self.name.clone(),
+        })?;
+        self.total_pops += 1;
+        self.read_ptr_offset = 0; // pointer games do not survive a pop
+        Ok(t)
+    }
+
+    /// §6.2 extension: displace the read pointer by `delta` bytes (multiple
+    /// of 32B; positive = increment). The displacement is interpreted in
+    /// whole rows of the front tile when consumed via [`front_shifted`].
+    pub fn shift_read_ptr(&mut self, delta: isize) -> Result<()> {
+        if delta % CB_PTR_ALIGN as isize != 0 {
+            return Err(SimError::CbPtrAlign {
+                name: self.name.clone(),
+                delta,
+                align: CB_PTR_ALIGN,
+            });
+        }
+        self.read_ptr_offset += delta;
+        Ok(())
+    }
+
+    pub fn read_ptr_offset(&self) -> isize {
+        self.read_ptr_offset
+    }
+
+    /// Consume the front tile through the displaced read pointer: the copy
+    /// operation the paper uses to build N/S shifted tiles. Returns the
+    /// shifted tile and the row indices that fell outside the original
+    /// tile (to be halo-filled by the caller).
+    pub fn front_shifted(&self) -> Result<(Tile, Vec<usize>)> {
+        let front = self.wait_front()?;
+        let row_bytes = front.shape.cols * front.df.bytes();
+        debug_assert_eq!(row_bytes, CB_PTR_ALIGN * row_bytes / CB_PTR_ALIGN);
+        let offset_rows = self.read_ptr_offset / row_bytes as isize;
+        Ok(crate::tile::shift::pointer_row_shift(front, offset_rows))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::DataFormat;
+    use crate::tile::{Tile, TileShape};
+
+    fn tile(v: f32) -> Tile {
+        Tile::from_vec(TileShape::STENCIL, DataFormat::Bf16, vec![v; 1024])
+    }
+
+    #[test]
+    fn fifo_semantics() {
+        let mut cb = CircularBuffer::new("cb0", 2048, 2);
+        cb.reserve_back(1).unwrap();
+        cb.push_back(tile(1.0)).unwrap();
+        cb.reserve_back(1).unwrap();
+        cb.push_back(tile(2.0)).unwrap();
+        assert_eq!(cb.len(), 2);
+        assert_eq!(cb.wait_front().unwrap().get(0, 0), 1.0);
+        assert_eq!(cb.pop_front().unwrap().get(0, 0), 1.0);
+        assert_eq!(cb.pop_front().unwrap().get(0, 0), 2.0);
+        assert!(cb.is_empty());
+        assert_eq!(cb.total_pushes, 2);
+        assert_eq!(cb.total_pops, 2);
+    }
+
+    #[test]
+    fn overflow_and_underflow() {
+        let mut cb = CircularBuffer::new("cb0", 2048, 1);
+        cb.reserve_back(1).unwrap();
+        assert!(matches!(
+            cb.reserve_back(1),
+            Err(SimError::CbOverflow { .. })
+        ));
+        cb.push_back(tile(1.0)).unwrap();
+        assert!(matches!(cb.reserve_back(1), Err(SimError::CbOverflow { .. })));
+        cb.pop_front().unwrap();
+        assert!(matches!(cb.pop_front(), Err(SimError::CbUnderflow { .. })));
+    }
+
+    #[test]
+    fn push_without_reserve_rejected() {
+        let mut cb = CircularBuffer::new("cb0", 2048, 4);
+        assert!(cb.push_back(tile(1.0)).is_err());
+    }
+
+    #[test]
+    fn pointer_shift_alignment_enforced() {
+        let mut cb = CircularBuffer::new("cb0", 2048, 2);
+        // §6.2: pointers move in multiples of 32B only.
+        assert!(matches!(
+            cb.shift_read_ptr(33),
+            Err(SimError::CbPtrAlign { .. })
+        ));
+        cb.shift_read_ptr(32).unwrap();
+        cb.shift_read_ptr(-64).unwrap();
+        assert_eq!(cb.read_ptr_offset(), -32);
+    }
+
+    #[test]
+    fn front_shifted_builds_north_tile() {
+        let mut cb = CircularBuffer::new("cb0", 2048, 1);
+        let t = Tile::from_fn(TileShape::STENCIL, DataFormat::Bf16, |r, _| r as f32);
+        cb.reserve_back(1).unwrap();
+        cb.push_back(t.clone()).unwrap();
+        // One 32B row decrement = north shift for a BF16 64×16 tile.
+        cb.shift_read_ptr(-32).unwrap();
+        let (shifted, missing) = cb.front_shifted().unwrap();
+        assert_eq!(missing, vec![0]);
+        assert_eq!(shifted.get(5, 0), 4.0);
+        // Pop resets the pointer.
+        cb.pop_front().unwrap();
+        assert_eq!(cb.read_ptr_offset(), 0);
+    }
+}

@@ -1,0 +1,181 @@
+//! A Tensix core (§3, Fig 1): local SRAM, circular buffers, and the five
+//! baby RISC-V cores (2 NoC data movement + 3 compute-side movement/issue).
+//! Compute-unit *values* are produced by [`crate::engine`]; compute-unit
+//! *cycles* by [`crate::timing`]. The core object owns capacity and
+//! staging state plus per-core activity counters for the profiler.
+
+use std::collections::BTreeMap;
+
+use crate::device::cb::CircularBuffer;
+use crate::device::sram::Sram;
+use crate::error::{Result, SimError};
+use crate::tile::Tile;
+
+/// Grid coordinate of a core (row, col) within the compute sub-grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Coord {
+    pub row: usize,
+    pub col: usize,
+}
+
+impl Coord {
+    pub fn new(row: usize, col: usize) -> Self {
+        Self { row, col }
+    }
+
+    /// Manhattan distance (the XY-routing hop count on a mesh).
+    pub fn manhattan(self, other: Coord) -> usize {
+        self.row.abs_diff(other.row) + self.col.abs_diff(other.col)
+    }
+}
+
+impl std::fmt::Display for Coord {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "({},{})", self.row, self.col)
+    }
+}
+
+/// Per-core activity counters, aggregated by the profiler.
+#[derive(Debug, Clone, Default)]
+pub struct CoreCounters {
+    pub tiles_unpacked: u64,
+    pub tiles_packed: u64,
+    pub fpu_ops: u64,
+    pub sfpu_ops: u64,
+    pub noc_sends: u64,
+    pub noc_recvs: u64,
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
+    pub zero_fills: u64,
+}
+
+/// One Tensix compute core.
+#[derive(Debug)]
+pub struct TensixCore {
+    pub coord: Coord,
+    pub sram: Sram,
+    /// Circular buffers by tt-metal-style index name ("cb_in0", ...).
+    pub cbs: BTreeMap<String, CircularBuffer>,
+    /// Named resident vectors: each is this core's column of tiles (§6.1).
+    pub vectors: BTreeMap<String, Vec<Tile>>,
+    pub counters: CoreCounters,
+}
+
+impl TensixCore {
+    pub fn new(coord: Coord) -> Self {
+        Self {
+            coord,
+            sram: Sram::new(&format!("core{coord}")),
+            cbs: BTreeMap::new(),
+            vectors: BTreeMap::new(),
+            counters: CoreCounters::default(),
+        }
+    }
+
+    /// Create a circular buffer, allocating its SRAM.
+    pub fn create_cb(&mut self, name: &str, page_bytes: usize, num_pages: usize) -> Result<()> {
+        let cb = CircularBuffer::new(name, page_bytes, num_pages);
+        self.sram.alloc(&format!("cb:{name}"), cb.sram_bytes())?;
+        self.cbs.insert(name.to_string(), cb);
+        Ok(())
+    }
+
+    pub fn cb(&mut self, name: &str) -> Result<&mut CircularBuffer> {
+        self.cbs
+            .get_mut(name)
+            .ok_or_else(|| SimError::Other(format!("no circular buffer '{name}'")))
+    }
+
+    /// Allocate and store a named vector of `tiles`, charging SRAM.
+    pub fn alloc_vector(&mut self, name: &str, tiles: Vec<Tile>) -> Result<()> {
+        let bytes: usize = tiles.iter().map(|t| t.bytes()).sum();
+        self.sram.alloc(&format!("vec:{name}"), bytes)?;
+        self.vectors.insert(name.to_string(), tiles);
+        Ok(())
+    }
+
+    pub fn vector(&self, name: &str) -> Result<&Vec<Tile>> {
+        self.vectors
+            .get(name)
+            .ok_or_else(|| SimError::Other(format!("no vector '{name}' on core {}", self.coord)))
+    }
+
+    pub fn vector_mut(&mut self, name: &str) -> Result<&mut Vec<Tile>> {
+        self.vectors
+            .get_mut(name)
+            .ok_or_else(|| SimError::Other(format!("no vector '{name}' on core {}", self.coord)))
+    }
+
+    /// Drop all program state (between experiments).
+    pub fn reset(&mut self) {
+        self.sram.reset();
+        self.cbs.clear();
+        self.vectors.clear();
+        self.counters = CoreCounters::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::DataFormat;
+    use crate::tile::{Tile, TileShape};
+
+    #[test]
+    fn coord_math() {
+        let a = Coord::new(1, 2);
+        let b = Coord::new(4, 0);
+        assert_eq!(a.manhattan(b), 5);
+        assert_eq!(a.to_string(), "(1,2)");
+    }
+
+    #[test]
+    fn cb_creation_charges_sram() {
+        let mut core = TensixCore::new(Coord::new(0, 0));
+        let before = core.sram.free();
+        core.create_cb("cb_in0", 2048, 4).unwrap();
+        assert_eq!(before - core.sram.free(), 2048 * 4);
+        assert!(core.cb("cb_in0").is_ok());
+        assert!(core.cb("nope").is_err());
+    }
+
+    #[test]
+    fn vector_storage_charges_sram() {
+        let mut core = TensixCore::new(Coord::new(0, 0));
+        let tiles: Vec<Tile> = (0..4)
+            .map(|_| Tile::zeros(TileShape::STENCIL, DataFormat::Bf16))
+            .collect();
+        let before = core.sram.free();
+        core.alloc_vector("x", tiles).unwrap();
+        assert_eq!(before - core.sram.free(), 4 * 2048);
+        assert_eq!(core.vector("x").unwrap().len(), 4);
+    }
+
+    #[test]
+    fn sram_exhaustion_propagates() {
+        let mut core = TensixCore::new(Coord::new(0, 0));
+        // 164 BF16 tiles × 5 vectors > 1.5MB must fail.
+        for v in 0..5 {
+            let tiles: Vec<Tile> = (0..164)
+                .map(|_| Tile::zeros(TileShape::STENCIL, DataFormat::Bf16))
+                .collect();
+            let r = core.alloc_vector(&format!("v{v}"), tiles);
+            if v < 4 {
+                assert!(r.is_ok(), "vector {v} should fit");
+            } else {
+                assert!(r.is_err(), "fifth 164-tile vector must not fit");
+            }
+        }
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut core = TensixCore::new(Coord::new(2, 3));
+        core.create_cb("cb", 2048, 2).unwrap();
+        core.counters.fpu_ops = 10;
+        core.reset();
+        assert!(core.cbs.is_empty());
+        assert_eq!(core.counters.fpu_ops, 0);
+        assert_eq!(core.sram.used(), 0);
+    }
+}

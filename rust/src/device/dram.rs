@@ -1,0 +1,134 @@
+//! Device DRAM model (§3): 24 GB of GDDR6 behind the NoC, with the §3.3
+//! alignment rules (reads 32B-aligned, writes 16B-aligned) enforced, and
+//! byte counters feeding the bandwidth model.
+
+use crate::arch::constants::{DRAM_READ_ALIGN, DRAM_WRITE_ALIGN};
+use crate::error::{Result, SimError};
+
+/// Byte-addressable device DRAM with alignment checking.
+///
+/// Values are stored as f32 words for the numeric path; the capacity checks
+/// use the element count times the *nominal* data-format width so BF16
+/// problems see BF16 footprints.
+#[derive(Debug)]
+pub struct Dram {
+    capacity_bytes: u64,
+    /// Backing store, sparsely grown. Keyed by nominal byte offset.
+    data: Vec<f32>,
+    /// Nominal bytes per stored element (2 for BF16, 4 for FP32).
+    elem_bytes: usize,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+}
+
+impl Dram {
+    pub fn new(capacity_bytes: u64, elem_bytes: usize) -> Self {
+        Self {
+            capacity_bytes,
+            data: Vec::new(),
+            elem_bytes,
+            bytes_read: 0,
+            bytes_written: 0,
+        }
+    }
+
+    fn check(&self, what: &'static str, offset: u64, len_bytes: usize, align: usize) -> Result<()> {
+        if offset % align as u64 != 0 {
+            return Err(SimError::Misaligned {
+                what,
+                value: offset as usize,
+                align,
+            });
+        }
+        if offset + len_bytes as u64 > self.capacity_bytes {
+            return Err(SimError::DramRange {
+                offset,
+                len: len_bytes,
+                capacity: self.capacity_bytes,
+            });
+        }
+        Ok(())
+    }
+
+    /// Write `values` at nominal byte `offset` (16B-aligned, §3.3).
+    pub fn write(&mut self, offset: u64, values: &[f32]) -> Result<()> {
+        let len_bytes = values.len() * self.elem_bytes;
+        self.check("DRAM write", offset, len_bytes, DRAM_WRITE_ALIGN)?;
+        let start = offset as usize / self.elem_bytes;
+        if self.data.len() < start + values.len() {
+            self.data.resize(start + values.len(), 0.0);
+        }
+        self.data[start..start + values.len()].copy_from_slice(values);
+        self.bytes_written += len_bytes as u64;
+        Ok(())
+    }
+
+    /// Read `count` elements from nominal byte `offset` (32B-aligned, §3.3).
+    pub fn read(&mut self, offset: u64, count: usize) -> Result<Vec<f32>> {
+        let len_bytes = count * self.elem_bytes;
+        self.check("DRAM read", offset, len_bytes, DRAM_READ_ALIGN)?;
+        let start = offset as usize / self.elem_bytes;
+        let mut out = vec![0.0f32; count];
+        let have = self.data.len().saturating_sub(start).min(count);
+        out[..have].copy_from_slice(&self.data[start..start + have]);
+        self.bytes_read += len_bytes as u64;
+        Ok(out)
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.bytes_read = 0;
+        self.bytes_written = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut d = Dram::new(1 << 20, 4);
+        let vals: Vec<f32> = (0..256).map(|i| i as f32).collect();
+        d.write(1024, &vals).unwrap();
+        let back = d.read(1024, 256).unwrap();
+        assert_eq!(back, vals);
+        assert_eq!(d.bytes_written, 1024);
+        assert_eq!(d.bytes_read, 1024);
+    }
+
+    #[test]
+    fn alignment_rules_match_section_3_3() {
+        let mut d = Dram::new(1 << 20, 4);
+        // Writes: 16B alignment. Offset 16 is fine, 8 is not.
+        assert!(d.write(16, &[1.0; 4]).is_ok());
+        assert!(matches!(
+            d.write(8, &[1.0; 4]),
+            Err(SimError::Misaligned { align: 16, .. })
+        ));
+        // Reads: 32B alignment. Offset 16 is NOT fine.
+        assert!(d.read(32, 8).is_ok());
+        assert!(matches!(
+            d.read(16, 8),
+            Err(SimError::Misaligned { align: 32, .. })
+        ));
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut d = Dram::new(64, 4);
+        assert!(matches!(
+            d.write(0, &[0.0; 32]),
+            Err(SimError::DramRange { .. })
+        ));
+    }
+
+    #[test]
+    fn unwritten_reads_zero() {
+        let mut d = Dram::new(1 << 16, 2);
+        assert_eq!(d.read(0, 4).unwrap(), vec![0.0; 4]);
+    }
+}

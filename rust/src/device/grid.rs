@@ -1,0 +1,168 @@
+//! The Tensix compute grid (§3): a sub-grid of the 10×12 die selected for a
+//! run (up to the 8×7 maximum the paper uses), with cardinal-neighbor
+//! queries for the stencil halo exchange and coordinate bookkeeping for the
+//! NoC.
+
+use crate::arch::constants::MAX_SUBGRID;
+use crate::device::core::{Coord, TensixCore};
+use crate::error::{Result, SimError};
+use crate::tile::ShiftDir;
+
+/// A rectangular sub-grid of Tensix cores.
+#[derive(Debug)]
+pub struct TensixGrid {
+    pub rows: usize,
+    pub cols: usize,
+    pub cores: Vec<TensixCore>,
+}
+
+impl TensixGrid {
+    /// Create an `rows × cols` compute sub-grid (§7.2: ≤ 8×7).
+    pub fn new(rows: usize, cols: usize) -> Result<Self> {
+        if rows == 0 || cols == 0 {
+            return Err(SimError::BadProblem {
+                what: format!("empty grid {rows}x{cols}"),
+            });
+        }
+        if rows > MAX_SUBGRID.0 || cols > MAX_SUBGRID.1 {
+            return Err(SimError::SubgridTooLarge {
+                rows,
+                cols,
+                max_rows: MAX_SUBGRID.0,
+                max_cols: MAX_SUBGRID.1,
+            });
+        }
+        let mut cores = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                cores.push(TensixCore::new(Coord::new(r, c)));
+            }
+        }
+        Ok(Self { rows, cols, cores })
+    }
+
+    pub fn n_cores(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn index(&self, coord: Coord) -> Result<usize> {
+        if coord.row >= self.rows || coord.col >= self.cols {
+            return Err(SimError::BadCoord {
+                row: coord.row,
+                col: coord.col,
+                rows: self.rows,
+                cols: self.cols,
+            });
+        }
+        Ok(coord.row * self.cols + coord.col)
+    }
+
+    pub fn core(&self, coord: Coord) -> Result<&TensixCore> {
+        Ok(&self.cores[self.index(coord)?])
+    }
+
+    pub fn core_mut(&mut self, coord: Coord) -> Result<&mut TensixCore> {
+        let i = self.index(coord)?;
+        Ok(&mut self.cores[i])
+    }
+
+    pub fn coords(&self) -> impl Iterator<Item = Coord> + '_ {
+        (0..self.rows).flat_map(move |r| (0..self.cols).map(move |c| Coord::new(r, c)))
+    }
+
+    /// Cardinal neighbor of `coord` in the *domain* sense used by the
+    /// stencil (§6.1): None at the sub-grid boundary (zero-fill there).
+    ///
+    /// Direction convention matches [`ShiftDir`]: the North *component*
+    /// tile needs data from the row-above neighbor, etc. Grid row 0 is the
+    /// top.
+    pub fn neighbor(&self, coord: Coord, dir: ShiftDir) -> Option<Coord> {
+        let (r, c) = (coord.row as isize, coord.col as isize);
+        let (nr, nc) = match dir {
+            ShiftDir::North => (r - 1, c),
+            ShiftDir::South => (r + 1, c),
+            ShiftDir::West => (r, c - 1),
+            ShiftDir::East => (r, c + 1),
+        };
+        if nr < 0 || nc < 0 || nr >= self.rows as isize || nc >= self.cols as isize {
+            None
+        } else {
+            Some(Coord::new(nr as usize, nc as usize))
+        }
+    }
+
+    /// The core nearest the grid center — the root for the "center" NoC
+    /// reduction pattern (§5.2).
+    pub fn center(&self) -> Coord {
+        Coord::new(self.rows / 2, self.cols / 2)
+    }
+
+    /// Top-left core — the root for the "naive" pattern (§5.2).
+    pub fn top_left(&self) -> Coord {
+        Coord::new(0, 0)
+    }
+
+    pub fn reset_all(&mut self) {
+        for c in &mut self.cores {
+            c.reset();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_limits() {
+        let g = TensixGrid::new(8, 7).unwrap();
+        assert_eq!(g.n_cores(), 56);
+        assert!(matches!(
+            TensixGrid::new(9, 7),
+            Err(SimError::SubgridTooLarge { .. })
+        ));
+        assert!(matches!(
+            TensixGrid::new(8, 8),
+            Err(SimError::SubgridTooLarge { .. })
+        ));
+        assert!(TensixGrid::new(0, 3).is_err());
+        assert!(TensixGrid::new(1, 1).is_ok());
+    }
+
+    #[test]
+    fn indexing_roundtrip() {
+        let g = TensixGrid::new(4, 4).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for coord in g.coords() {
+            let i = g.index(coord).unwrap();
+            assert!(seen.insert(i));
+            assert_eq!(g.core(coord).unwrap().coord, coord);
+        }
+        assert_eq!(seen.len(), 16);
+        assert!(g.index(Coord::new(4, 0)).is_err());
+    }
+
+    #[test]
+    fn neighbors_and_boundaries() {
+        let g = TensixGrid::new(3, 3).unwrap();
+        let mid = Coord::new(1, 1);
+        assert_eq!(g.neighbor(mid, ShiftDir::North), Some(Coord::new(0, 1)));
+        assert_eq!(g.neighbor(mid, ShiftDir::South), Some(Coord::new(2, 1)));
+        assert_eq!(g.neighbor(mid, ShiftDir::West), Some(Coord::new(1, 0)));
+        assert_eq!(g.neighbor(mid, ShiftDir::East), Some(Coord::new(1, 2)));
+        // Domain edges: zero-fill side has no neighbor.
+        assert_eq!(g.neighbor(Coord::new(0, 0), ShiftDir::North), None);
+        assert_eq!(g.neighbor(Coord::new(0, 0), ShiftDir::West), None);
+        assert_eq!(g.neighbor(Coord::new(2, 2), ShiftDir::South), None);
+        assert_eq!(g.neighbor(Coord::new(2, 2), ShiftDir::East), None);
+    }
+
+    #[test]
+    fn roots() {
+        let g = TensixGrid::new(8, 7).unwrap();
+        assert_eq!(g.top_left(), Coord::new(0, 0));
+        assert_eq!(g.center(), Coord::new(4, 3));
+        let g1 = TensixGrid::new(1, 1).unwrap();
+        assert_eq!(g1.center(), Coord::new(0, 0));
+    }
+}

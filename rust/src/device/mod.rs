@@ -1,0 +1,14 @@
+//! Device model: Tensix cores (SRAM, circular buffers), DRAM, and the
+//! compute grid (paper §3).
+
+pub mod cb;
+pub mod core;
+pub mod dram;
+pub mod grid;
+pub mod sram;
+
+pub use cb::CircularBuffer;
+pub use core::{Coord, CoreCounters, TensixCore};
+pub use dram::Dram;
+pub use grid::TensixGrid;
+pub use sram::Sram;

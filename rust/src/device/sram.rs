@@ -1,0 +1,151 @@
+//! Per-core L1 SRAM capacity model (§3, §7.2).
+//!
+//! A bump allocator with named regions and 16B alignment (§3.3). The
+//! allocator is how the paper's maximum-problem-size ceilings arise: the
+//! solver asks for program/stack/CB reservations and then as many tile
+//! slots as fit (tested against §7.2's 64 FP32 / 164 BF16 tiles per core).
+
+use crate::arch::constants::{L1_ALIGN, SRAM_BYTES};
+use crate::error::{Result, SimError};
+
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    pub name: String,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// L1 SRAM of one Tensix core.
+#[derive(Debug, Clone)]
+pub struct Sram {
+    capacity: usize,
+    cursor: usize,
+    allocations: Vec<Allocation>,
+    core_label: String,
+}
+
+impl Sram {
+    pub fn new(core_label: &str) -> Self {
+        Self::with_capacity(core_label, SRAM_BYTES)
+    }
+
+    pub fn with_capacity(core_label: &str, capacity: usize) -> Self {
+        Self {
+            capacity,
+            cursor: 0,
+            allocations: Vec::new(),
+            core_label: core_label.to_string(),
+        }
+    }
+
+    fn align_up(x: usize, align: usize) -> usize {
+        x.div_ceil(align) * align
+    }
+
+    /// Allocate `len` bytes aligned to L1_ALIGN; returns the offset.
+    pub fn alloc(&mut self, name: &str, len: usize) -> Result<usize> {
+        let start = Self::align_up(self.cursor, L1_ALIGN);
+        let end = start.checked_add(len).ok_or(SimError::Other(
+            "SRAM allocation size overflow".to_string(),
+        ))?;
+        if end > self.capacity {
+            return Err(SimError::SramExhausted {
+                core: self.core_label.clone(),
+                requested: len,
+                available: self.capacity.saturating_sub(start),
+                capacity: self.capacity,
+            });
+        }
+        self.cursor = end;
+        self.allocations.push(Allocation {
+            name: name.to_string(),
+            offset: start,
+            len,
+        });
+        Ok(start)
+    }
+
+    pub fn used(&self) -> usize {
+        self.cursor
+    }
+
+    pub fn free(&self) -> usize {
+        self.capacity - Self::align_up(self.cursor, L1_ALIGN).min(self.capacity)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn allocations(&self) -> &[Allocation] {
+        &self.allocations
+    }
+
+    /// Release everything (used between experiment phases; real tt-metal
+    /// frees per-program).
+    pub fn reset(&mut self) {
+        self.cursor = 0;
+        self.allocations.clear();
+    }
+
+    /// How many tile slots of `tile_bytes` fit after reserving
+    /// `reserve_bytes` for program/stack/CBs — the §7.2 capacity question.
+    pub fn max_tiles(&self, reserve_bytes: usize, tile_bytes: usize) -> usize {
+        self.capacity.saturating_sub(reserve_bytes) / tile_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::constants::{
+        PCG_VECTORS_FUSED, PCG_VECTORS_SPLIT, SRAM_RESERVE_FUSED, SRAM_RESERVE_SPLIT,
+    };
+    use crate::arch::DataFormat;
+
+    #[test]
+    fn alloc_and_alignment() {
+        let mut s = Sram::with_capacity("t", 1024);
+        let a = s.alloc("a", 10).unwrap();
+        let b = s.alloc("b", 10).unwrap();
+        assert_eq!(a, 0);
+        assert_eq!(b % L1_ALIGN, 0);
+        assert!(b >= 10);
+        assert_eq!(s.allocations().len(), 2);
+    }
+
+    #[test]
+    fn exhaustion_reports_details() {
+        let mut s = Sram::with_capacity("core(1,2)", 100);
+        let err = s.alloc("big", 200).unwrap_err();
+        match err {
+            SimError::SramExhausted {
+                core, requested, ..
+            } => {
+                assert_eq!(core, "core(1,2)");
+                assert_eq!(requested, 200);
+            }
+            e => panic!("wrong error {e}"),
+        }
+    }
+
+    #[test]
+    fn reset_frees_everything() {
+        let mut s = Sram::with_capacity("t", 4096);
+        s.alloc("x", 1000).unwrap();
+        assert!(s.used() > 0);
+        s.reset();
+        assert_eq!(s.used(), 0);
+        s.alloc("y", 4000).unwrap();
+    }
+
+    #[test]
+    fn paper_capacity_ceilings() {
+        // §7.2 via the allocator itself.
+        let s = Sram::new("t");
+        let fp32_slot = PCG_VECTORS_SPLIT * DataFormat::Fp32.tile_bytes();
+        assert_eq!(s.max_tiles(SRAM_RESERVE_SPLIT, fp32_slot), 64);
+        let bf16_slot = PCG_VECTORS_FUSED * DataFormat::Bf16.tile_bytes();
+        assert_eq!(s.max_tiles(SRAM_RESERVE_FUSED, bf16_slot), 164);
+    }
+}

@@ -1,0 +1,196 @@
+//! Per-core data blocks.
+//!
+//! Under the paper's data distribution (§6.1) each Tensix core owns a
+//! column of `nz` 64×16 tiles: a 64(x) × 16(y) footprint in the horizontal
+//! plane, replicated along z as one tile per level. A [`CoreBlock`] is that
+//! column for one distributed vector. Grid axes map as:
+//!
+//! - tile rows (64)  = x  → row-shift (pointer trick) stencil direction,
+//! - tile cols (16)  = y  → column-shift (transpose) stencil direction,
+//! - tile index (nz) = z  → core-local vertical neighbors.
+
+use crate::arch::DataFormat;
+use crate::tile::{Tile, TileShape};
+
+/// One core's column of tiles for one vector (§6.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoreBlock {
+    pub df: DataFormat,
+    pub tiles: Vec<Tile>,
+}
+
+impl CoreBlock {
+    pub fn zeros(df: DataFormat, nz: usize) -> Self {
+        Self {
+            df,
+            tiles: (0..nz).map(|_| Tile::zeros(TileShape::STENCIL, df)).collect(),
+        }
+    }
+
+    /// Build from a generator over (z, x_row, y_col).
+    pub fn from_fn(df: DataFormat, nz: usize, mut f: impl FnMut(usize, usize, usize) -> f32) -> Self {
+        let tiles = (0..nz)
+            .map(|k| Tile::from_fn(TileShape::STENCIL, df, |r, c| f(k, r, c)))
+            .collect();
+        Self { df, tiles }
+    }
+
+    pub fn nz(&self) -> usize {
+        self.tiles.len()
+    }
+
+    pub fn elems(&self) -> usize {
+        self.nz() * crate::arch::constants::TILE_ELEMS
+    }
+
+    /// Flatten to `[nz][64][16]` row-major (the artifact I/O layout).
+    pub fn to_flat(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.elems());
+        for t in &self.tiles {
+            out.extend_from_slice(&t.data);
+        }
+        out
+    }
+
+    /// Rebuild from `[nz][64][16]` row-major.
+    pub fn from_flat(df: DataFormat, nz: usize, flat: &[f32]) -> Self {
+        let n = crate::arch::constants::TILE_ELEMS;
+        assert_eq!(flat.len(), nz * n, "flat block length mismatch");
+        let tiles = (0..nz)
+            .map(|k| Tile::from_vec(TileShape::STENCIL, df, flat[k * n..(k + 1) * n].to_vec()))
+            .collect();
+        Self { df, tiles }
+    }
+
+    pub fn get(&self, z: usize, x: usize, y: usize) -> f32 {
+        self.tiles[z].get(x, y)
+    }
+
+    pub fn set(&mut self, z: usize, x: usize, y: usize, v: f32) {
+        self.tiles[z].set(x, y, v);
+    }
+
+    /// SRAM bytes of this block at its data format.
+    pub fn bytes(&self) -> usize {
+        self.tiles.iter().map(|t| t.bytes()).sum()
+    }
+}
+
+/// Halo planes a core receives from its four neighbors for one stencil
+/// application (§6.1): per z-level, one 16-wide y-row from the ±x
+/// neighbors and one 64-long x-column from the ±y neighbors. `None` ⇒
+/// global domain boundary ⇒ zero fill (§6.3).
+#[derive(Debug, Clone, Default)]
+pub struct Halos {
+    /// From the x-1 neighbor: per z, the neighbor's last row (16 values).
+    pub north: Option<Vec<Vec<f32>>>,
+    /// From the x+1 neighbor: per z, the neighbor's first row.
+    pub south: Option<Vec<Vec<f32>>>,
+    /// From the y-1 neighbor: per z, the neighbor's last column (64 values).
+    pub west: Option<Vec<Vec<f32>>>,
+    /// From the y+1 neighbor: per z, the neighbor's first column.
+    pub east: Option<Vec<Vec<f32>>>,
+}
+
+impl Halos {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Extract the halo planes `dst` needs from its neighbors' blocks.
+    /// Each argument is the neighbor's block in the given direction, if any.
+    pub fn gather(
+        north: Option<&CoreBlock>,
+        south: Option<&CoreBlock>,
+        west: Option<&CoreBlock>,
+        east: Option<&CoreBlock>,
+    ) -> Self {
+        let rows = crate::tile::TileShape::STENCIL.rows;
+        let cols = crate::tile::TileShape::STENCIL.cols;
+        Self {
+            north: north.map(|b| {
+                b.tiles.iter().map(|t| t.row(rows - 1).to_vec()).collect()
+            }),
+            south: south.map(|b| b.tiles.iter().map(|t| t.row(0).to_vec()).collect()),
+            west: west.map(|b| b.tiles.iter().map(|t| t.col(cols - 1)).collect()),
+            east: east.map(|b| b.tiles.iter().map(|t| t.col(0)).collect()),
+        }
+    }
+
+    /// Flattened planes for the artifact I/O: absent halos become zeros.
+    /// Returns (north `[nz*16]`, south `[nz*16]`, west `[nz*64]`, east `[nz*64]`).
+    pub fn to_flat(&self, nz: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let flat_or_zero = |h: &Option<Vec<Vec<f32>>>, width: usize| -> Vec<f32> {
+            match h {
+                Some(planes) => {
+                    assert_eq!(planes.len(), nz, "halo plane count mismatch");
+                    planes
+                        .iter()
+                        .flat_map(|p| {
+                            assert_eq!(p.len(), width, "halo plane width mismatch");
+                            p.iter().copied()
+                        })
+                        .collect()
+                }
+                None => vec![0.0; nz * width],
+            }
+        };
+        (
+            flat_or_zero(&self.north, 16),
+            flat_or_zero(&self.south, 16),
+            flat_or_zero(&self.west, 64),
+            flat_or_zero(&self.east, 64),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_roundtrip() {
+        let b = CoreBlock::from_fn(DataFormat::Fp32, 3, |z, x, y| (z * 10000 + x * 100 + y) as f32);
+        let flat = b.to_flat();
+        assert_eq!(flat.len(), 3 * 1024);
+        let b2 = CoreBlock::from_flat(DataFormat::Fp32, 3, &flat);
+        assert_eq!(b, b2);
+        assert_eq!(b.get(2, 63, 15), 26315.0);
+    }
+
+    #[test]
+    fn bytes_respects_format() {
+        assert_eq!(CoreBlock::zeros(DataFormat::Bf16, 4).bytes(), 4 * 2048);
+        assert_eq!(CoreBlock::zeros(DataFormat::Fp32, 4).bytes(), 4 * 4096);
+    }
+
+    #[test]
+    fn halo_gather_pulls_facing_boundaries() {
+        // The north neighbor contributes ITS south-most (last) row.
+        let nb = CoreBlock::from_fn(DataFormat::Fp32, 2, |z, x, y| {
+            if x == 63 { 100.0 + (z * 16 + y) as f32 } else { 0.0 }
+        });
+        let eb = CoreBlock::from_fn(DataFormat::Fp32, 2, |z, x, y| {
+            if y == 0 { 200.0 + (z * 64 + x) as f32 } else { 0.0 }
+        });
+        let h = Halos::gather(Some(&nb), None, None, Some(&eb));
+        let n = h.north.as_ref().unwrap();
+        assert_eq!(n[0][3], 103.0);
+        assert_eq!(n[1][0], 116.0);
+        let e = h.east.as_ref().unwrap();
+        assert_eq!(e[0][5], 205.0);
+        assert_eq!(e[1][63], 200.0 + 127.0);
+        assert!(h.south.is_none() && h.west.is_none());
+    }
+
+    #[test]
+    fn halo_flat_zero_fills_missing() {
+        let h = Halos::none();
+        let (n, s, w, e) = h.to_flat(2);
+        assert_eq!(n.len(), 32);
+        assert_eq!(s.len(), 32);
+        assert_eq!(w.len(), 128);
+        assert_eq!(e.len(), 128);
+        assert!(n.iter().chain(&s).chain(&w).chain(&e).all(|&v| v == 0.0));
+    }
+}

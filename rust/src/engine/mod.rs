@@ -1,0 +1,44 @@
+//! Compute engines: value semantics for per-core kernels.
+//!
+//! `native` computes in Rust; `pjrt` executes the AOT JAX/Pallas artifacts
+//! through the PJRT C API. Timing is engine-independent (see
+//! [`crate::timing`]); integration tests assert the engines agree.
+
+pub mod block;
+pub mod native;
+pub mod pjrt;
+pub mod traits;
+
+pub use block::{CoreBlock, Halos};
+pub use native::NativeEngine;
+pub use traits::{ComputeEngine, StencilCoeffs};
+
+/// Engine selector used by the CLI / examples.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    Native,
+    Pjrt,
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Ok(EngineKind::Native),
+            "pjrt" => Ok(EngineKind::Pjrt),
+            _ => Err(format!("unknown engine '{s}' (expected native|pjrt)")),
+        }
+    }
+}
+
+/// Instantiate an engine. For `Pjrt`, `artifacts_dir` must contain the
+/// `*.hlo.txt` files produced by `make artifacts`.
+pub fn make_engine(
+    kind: EngineKind,
+    artifacts_dir: &std::path::Path,
+) -> crate::Result<Box<dyn ComputeEngine>> {
+    match kind {
+        EngineKind::Native => Ok(Box::new(NativeEngine::new())),
+        EngineKind::Pjrt => Ok(Box::new(pjrt::PjrtEngine::new(artifacts_dir)?)),
+    }
+}

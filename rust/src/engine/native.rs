@@ -1,0 +1,423 @@
+//! The native engine: Rust tile arithmetic with the Wormhole numerics
+//! (BF16 round-to-nearest-even + flush-to-zero after every tile op; FTZ on
+//! the FP32/SFPU path). The stencil follows the §6.2 device pipeline —
+//! shifted-tile construction then scaled accumulation — in a canonical
+//! operation order shared with the Pallas kernel (`python/compile/kernels/
+//! stencil.py`), so native and PJRT engines agree bit-for-bit at BF16.
+
+use crate::engine::block::{CoreBlock, Halos};
+use crate::engine::traits::{ComputeEngine, StencilCoeffs};
+use crate::error::{Result, SimError};
+use crate::tile::ops::{self, EltwiseOp};
+use crate::tile::shift::{shift_logical, ShiftDir};
+use crate::tile::Tile;
+
+#[derive(Debug, Default, Clone)]
+pub struct NativeEngine;
+
+impl NativeEngine {
+    pub fn new() -> Self {
+        Self
+    }
+
+    fn check_match(a: &CoreBlock, b: &CoreBlock) -> Result<()> {
+        if a.df != b.df || a.nz() != b.nz() {
+            return Err(SimError::Other(format!(
+                "block mismatch: {:?}/{} vs {:?}/{}",
+                a.df,
+                a.nz(),
+                b.df,
+                b.nz()
+            )));
+        }
+        Ok(())
+    }
+
+    /// The z-neighbor tile, or a zero tile at the global top/bottom
+    /// boundary (zero Dirichlet, §7).
+    fn z_neighbor(x: &CoreBlock, k: usize, dz: isize) -> Tile {
+        let kk = k as isize + dz;
+        if kk < 0 || kk >= x.nz() as isize {
+            Tile::zeros(x.tiles[k].shape, x.df)
+        } else {
+            x.tiles[kk as usize].clone()
+        }
+    }
+}
+
+/// Per-element quantization matching `tile::ops::quant`, monomorphized on
+/// the data format so the stencil inner loop stays branch-free.
+#[inline(always)]
+fn q_elem<const BF16: bool>(v: f32) -> f32 {
+    if BF16 {
+        crate::arch::bf16::bf16_round(v)
+    } else {
+        crate::arch::bf16::ftz_f32(v)
+    }
+}
+
+/// Scale-and-quantize q(c·x) with exactness shortcuts (§Perf optimization
+/// 3): for c = ±1 the product of an already-quantized x is exact in either
+/// format (sign flip / identity), so the rounding is a no-op and is
+/// skipped. The stencil coefficients are ±1 except the center, so this
+/// removes 6 of the 13 per-element roundings. The branch is on the
+/// (loop-invariant) coefficient, so it predicts perfectly.
+#[inline(always)]
+fn q_scale<const BF16: bool>(c: f32, x: f32) -> f32 {
+    if c == -1.0 {
+        -x
+    } else if c == 1.0 {
+        x
+    } else {
+        q_elem::<BF16>(c * x)
+    }
+}
+
+/// Fused 7-point stencil over a core block (§Perf optimization 1): one
+/// pass per tile, same canonical quantization order as the operator form.
+fn stencil_fused<const BF16: bool>(x: &CoreBlock, halos: &Halos, c: StencilCoeffs) -> Vec<Tile> {
+    let nz = x.nz();
+    let shape = crate::tile::TileShape::STENCIL;
+    let (rows, cols) = (shape.rows, shape.cols);
+    let zero_row = [0.0f32; 16];
+    let zero_col = [0.0f32; 64];
+    let zero_tile = vec![0.0f32; rows * cols];
+    let mut out = Vec::with_capacity(nz);
+    for k in 0..nz {
+        let center = &x.tiles[k].data;
+        let below: &[f32] = if k > 0 { &x.tiles[k - 1].data } else { &zero_tile };
+        let above: &[f32] = if k + 1 < nz { &x.tiles[k + 1].data } else { &zero_tile };
+        let hn: &[f32] = halos.north.as_ref().map(|p| p[k].as_slice()).unwrap_or(&zero_row);
+        let hs: &[f32] = halos.south.as_ref().map(|p| p[k].as_slice()).unwrap_or(&zero_row);
+        let hw: &[f32] = halos.west.as_ref().map(|p| p[k].as_slice()).unwrap_or(&zero_col);
+        let he: &[f32] = halos.east.as_ref().map(|p| p[k].as_slice()).unwrap_or(&zero_col);
+        let mut data = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            let row = &center[r * cols..(r + 1) * cols];
+            // Halo values are quantized on insertion in the tile-op form
+            // (Tile::set) and in the Pallas kernel (quant(halo, df)); block
+            // values are maintained quantized in storage, so only halo
+            // loads need the extra rounding here.
+            let north_row: [f32; 16];
+            let south_row: [f32; 16];
+            let north_ref: &[f32] = if r > 0 {
+                &center[(r - 1) * cols..r * cols]
+            } else {
+                north_row = std::array::from_fn(|i| q_elem::<BF16>(hn[i]));
+                &north_row
+            };
+            let south_ref: &[f32] = if r + 1 < rows {
+                &center[(r + 1) * cols..(r + 2) * cols]
+            } else {
+                south_row = std::array::from_fn(|i| q_elem::<BF16>(hs[i]));
+                &south_row
+            };
+            let out_row = &mut data[r * cols..(r + 1) * cols];
+            for cc in 0..cols {
+                let west = if cc > 0 { row[cc - 1] } else { q_elem::<BF16>(hw[r]) };
+                let east = if cc + 1 < cols { row[cc + 1] } else { q_elem::<BF16>(he[r]) };
+                // Canonical order (identical to the tile-op pipeline and
+                // the Pallas kernel): every scale and accumulate quantized.
+                let mut acc = q_scale::<BF16>(c.center, row[cc]);
+                acc = q_elem::<BF16>(acc + q_scale::<BF16>(c.x_lo, north_ref[cc]));
+                acc = q_elem::<BF16>(acc + q_scale::<BF16>(c.x_hi, south_ref[cc]));
+                acc = q_elem::<BF16>(acc + q_scale::<BF16>(c.y_lo, west));
+                acc = q_elem::<BF16>(acc + q_scale::<BF16>(c.y_hi, east));
+                acc = q_elem::<BF16>(acc + q_scale::<BF16>(c.z_lo, below[r * cols + cc]));
+                acc = q_elem::<BF16>(acc + q_scale::<BF16>(c.z_hi, above[r * cols + cc]));
+                out_row[cc] = acc;
+            }
+        }
+        out.push(Tile {
+            shape,
+            df: x.df,
+            data,
+        });
+    }
+    out
+}
+
+impl NativeEngine {
+    /// The original tile-operator pipeline (scale / shift / accumulate as
+    /// whole-tile ops) — kept as the §6.2 reference implementation; a unit
+    /// test pins `stencil_apply` to it bit-for-bit.
+    pub fn stencil_apply_tile_ops(
+        &self,
+        x: &CoreBlock,
+        halos: &Halos,
+        coeffs: StencilCoeffs,
+    ) -> Result<CoreBlock> {
+        let nz = x.nz();
+        let plane =
+            |h: &Option<Vec<Vec<f32>>>, k: usize| -> Option<Vec<f32>> { h.as_ref().map(|p| p[k].clone()) };
+        let mut out_tiles = Vec::with_capacity(nz);
+        for k in 0..nz {
+            let center = &x.tiles[k];
+            let mut acc = ops::scale(center, coeffs.center);
+            let north = shift_logical(center, ShiftDir::North, plane(&halos.north, k).as_deref());
+            acc = ops::eltwise(EltwiseOp::Add, &acc, &ops::scale(&north, coeffs.x_lo));
+            let south = shift_logical(center, ShiftDir::South, plane(&halos.south, k).as_deref());
+            acc = ops::eltwise(EltwiseOp::Add, &acc, &ops::scale(&south, coeffs.x_hi));
+            let west = shift_logical(center, ShiftDir::West, plane(&halos.west, k).as_deref());
+            acc = ops::eltwise(EltwiseOp::Add, &acc, &ops::scale(&west, coeffs.y_lo));
+            let east = shift_logical(center, ShiftDir::East, plane(&halos.east, k).as_deref());
+            acc = ops::eltwise(EltwiseOp::Add, &acc, &ops::scale(&east, coeffs.y_hi));
+            let below = Self::z_neighbor(x, k, -1);
+            acc = ops::eltwise(EltwiseOp::Add, &acc, &ops::scale(&below, coeffs.z_lo));
+            let above = Self::z_neighbor(x, k, 1);
+            acc = ops::eltwise(EltwiseOp::Add, &acc, &ops::scale(&above, coeffs.z_hi));
+            out_tiles.push(acc);
+        }
+        Ok(CoreBlock {
+            df: x.df,
+            tiles: out_tiles,
+        })
+    }
+}
+
+impl ComputeEngine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn eltwise(&self, op: EltwiseOp, a: &CoreBlock, b: &CoreBlock) -> Result<CoreBlock> {
+        Self::check_match(a, b)?;
+        let tiles = a
+            .tiles
+            .iter()
+            .zip(&b.tiles)
+            .map(|(x, y)| ops::eltwise(op, x, y))
+            .collect();
+        Ok(CoreBlock { df: a.df, tiles })
+    }
+
+    fn axpy(&self, y: &CoreBlock, alpha: f32, x: &CoreBlock) -> Result<CoreBlock> {
+        Self::check_match(y, x)?;
+        let tiles = y
+            .tiles
+            .iter()
+            .zip(&x.tiles)
+            .map(|(yt, xt)| ops::axpy(yt, alpha, xt))
+            .collect();
+        Ok(CoreBlock { df: y.df, tiles })
+    }
+
+    fn axpy_into(&self, y: &mut CoreBlock, alpha: f32, x: &CoreBlock) -> Result<()> {
+        Self::check_match(y, x)?;
+        for (yt, xt) in y.tiles.iter_mut().zip(&x.tiles) {
+            ops::axpy_into(yt, alpha, xt);
+        }
+        Ok(())
+    }
+
+    fn scale(&self, a: &CoreBlock, alpha: f32) -> Result<CoreBlock> {
+        let tiles = a.tiles.iter().map(|t| ops::scale(t, alpha)).collect();
+        Ok(CoreBlock { df: a.df, tiles })
+    }
+
+    fn dot_partial(&self, a: &CoreBlock, b: &CoreBlock) -> Result<f32> {
+        Self::check_match(a, b)?;
+        // Per-tile partials at operand precision, accumulated in f32 (the
+        // Dst-register accumulation model; see tile::ops::dot_partial).
+        let mut s = 0.0f32;
+        for (x, y) in a.tiles.iter().zip(&b.tiles) {
+            s += ops::dot_partial(x, y);
+        }
+        Ok(s)
+    }
+
+    fn stencil_apply(&self, x: &CoreBlock, halos: &Halos, coeffs: StencilCoeffs) -> Result<CoreBlock> {
+        // §Perf: fused single-pass implementation. The tile-level pipeline
+        // (scale + 6 shifted-tile accumulations, each op quantized) is
+        // element-wise, so fusing it into one loop with the SAME
+        // per-element quantization order is bit-identical while avoiding
+        // the 13 tile allocations per tile the operator form costs. The
+        // operator form survives as `stencil_apply_tile_ops` and a unit
+        // test pins their equality.
+        let out_tiles = match x.df {
+            crate::arch::DataFormat::Bf16 => stencil_fused::<true>(x, halos, coeffs),
+            _ => stencil_fused::<false>(x, halos, coeffs),
+        };
+        Ok(CoreBlock {
+            df: x.df,
+            tiles: out_tiles,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::DataFormat;
+    use crate::util::prng::Rng;
+
+    fn rand_block(seed: u64, df: DataFormat, nz: usize) -> CoreBlock {
+        let mut rng = Rng::new(seed);
+        CoreBlock::from_fn(df, nz, |_, _, _| rng.next_f32() * 2.0 - 1.0)
+    }
+
+    #[test]
+    fn eltwise_and_axpy() {
+        let e = NativeEngine::new();
+        let a = rand_block(1, DataFormat::Fp32, 2);
+        let b = rand_block(2, DataFormat::Fp32, 2);
+        let c = e.eltwise(EltwiseOp::Add, &a, &b).unwrap();
+        assert_eq!(c.get(1, 5, 5), a.get(1, 5, 5) + b.get(1, 5, 5));
+        let d = e.axpy(&a, 2.0, &b).unwrap();
+        assert_eq!(d.get(0, 0, 0), a.get(0, 0, 0) + 2.0 * b.get(0, 0, 0));
+    }
+
+    #[test]
+    fn mismatch_rejected() {
+        let e = NativeEngine::new();
+        let a = CoreBlock::zeros(DataFormat::Fp32, 2);
+        let b = CoreBlock::zeros(DataFormat::Fp32, 3);
+        assert!(e.eltwise(EltwiseOp::Add, &a, &b).is_err());
+        let c = CoreBlock::zeros(DataFormat::Bf16, 2);
+        assert!(e.axpy(&a, 1.0, &c).is_err());
+    }
+
+    #[test]
+    fn dot_partial_matches_reference() {
+        let e = NativeEngine::new();
+        let a = rand_block(3, DataFormat::Fp32, 4);
+        let b = rand_block(4, DataFormat::Fp32, 4);
+        let got = e.dot_partial(&a, &b).unwrap();
+        let want: f64 = a
+            .to_flat()
+            .iter()
+            .zip(b.to_flat().iter())
+            .map(|(&x, &y)| x as f64 * y as f64)
+            .sum();
+        assert!((got as f64 - want).abs() < 1e-2 * want.abs().max(1.0));
+    }
+
+    /// Reference stencil in plain f64 over the assembled local 3D block
+    /// with explicit halos — validates the tile-shift implementation.
+    fn reference_stencil(
+        x: &CoreBlock,
+        halos: &Halos,
+        c: StencilCoeffs,
+    ) -> Vec<f64> {
+        let nz = x.nz();
+        let at = |z: isize, r: isize, q: isize| -> f64 {
+            if z < 0 || z >= nz as isize {
+                return 0.0;
+            }
+            let zu = z as usize;
+            if r < 0 {
+                return halos
+                    .north
+                    .as_ref()
+                    .map(|p| p[zu][q as usize] as f64)
+                    .unwrap_or(0.0);
+            }
+            if r > 63 {
+                return halos
+                    .south
+                    .as_ref()
+                    .map(|p| p[zu][q as usize] as f64)
+                    .unwrap_or(0.0);
+            }
+            if q < 0 {
+                return halos
+                    .west
+                    .as_ref()
+                    .map(|p| p[zu][r as usize] as f64)
+                    .unwrap_or(0.0);
+            }
+            if q > 15 {
+                return halos
+                    .east
+                    .as_ref()
+                    .map(|p| p[zu][r as usize] as f64)
+                    .unwrap_or(0.0);
+            }
+            x.get(zu, r as usize, q as usize) as f64
+        };
+        let mut out = Vec::new();
+        for z in 0..nz as isize {
+            for r in 0..64isize {
+                for q in 0..16isize {
+                    out.push(
+                        c.center as f64 * at(z, r, q)
+                            + c.x_lo as f64 * at(z, r - 1, q)
+                            + c.x_hi as f64 * at(z, r + 1, q)
+                            + c.y_lo as f64 * at(z, r, q - 1)
+                            + c.y_hi as f64 * at(z, r, q + 1)
+                            + c.z_lo as f64 * at(z - 1, r, q)
+                            + c.z_hi as f64 * at(z + 1, r, q),
+                    );
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn stencil_matches_reference_with_halos() {
+        let e = NativeEngine::new();
+        let x = rand_block(5, DataFormat::Fp32, 3);
+        let nb = rand_block(6, DataFormat::Fp32, 3);
+        let sb = rand_block(7, DataFormat::Fp32, 3);
+        let wb = rand_block(8, DataFormat::Fp32, 3);
+        let eb = rand_block(9, DataFormat::Fp32, 3);
+        let halos = Halos::gather(Some(&nb), Some(&sb), Some(&wb), Some(&eb));
+        let got = e.stencil_apply(&x, &halos, StencilCoeffs::LAPLACIAN).unwrap();
+        let want = reference_stencil(&x, &halos, StencilCoeffs::LAPLACIAN);
+        for (i, (&g, &w)) in got.to_flat().iter().zip(want.iter().map(|v| v as &f64)).enumerate() {
+            assert!(
+                (g as f64 - w).abs() < 1e-4,
+                "elem {i}: got {g}, want {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn stencil_zero_boundaries() {
+        let e = NativeEngine::new();
+        let x = CoreBlock::from_fn(DataFormat::Fp32, 2, |_, _, _| 1.0);
+        let got = e
+            .stencil_apply(&x, &Halos::none(), StencilCoeffs::LAPLACIAN)
+            .unwrap();
+        // Fully interior element of a constant-1 field with nz=2: the z
+        // direction has one neighbor inside (the other tile) and one
+        // Dirichlet zero => 6*1 - (1+1+1+1) - 1 - 0 = 1.
+        assert_eq!(got.get(0, 30, 8), 1.0);
+        // Corner element (0,0,0): neighbors inside = x_hi, y_hi, z_hi = 3.
+        assert_eq!(got.get(0, 0, 0), 3.0);
+    }
+
+    #[test]
+    fn fused_stencil_bit_identical_to_tile_op_pipeline() {
+        // §Perf optimization 1 must not change a single bit, for both
+        // formats, with and without halos.
+        let e = NativeEngine::new();
+        for df in [DataFormat::Fp32, DataFormat::Bf16] {
+            for seed in 0..4 {
+                let x = rand_block(100 + seed, df, 3);
+                let nb = rand_block(200 + seed, df, 3);
+                let eb = rand_block(300 + seed, df, 3);
+                for halos in [Halos::none(), Halos::gather(Some(&nb), None, None, Some(&eb))] {
+                    let fused = e.stencil_apply(&x, &halos, StencilCoeffs::LAPLACIAN).unwrap();
+                    let ops_form = e
+                        .stencil_apply_tile_ops(&x, &halos, StencilCoeffs::LAPLACIAN)
+                        .unwrap();
+                    assert_eq!(fused, ops_form, "df {df} seed {seed}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_stencil_quantizes() {
+        let e = NativeEngine::new();
+        let x = rand_block(10, DataFormat::Bf16, 2);
+        let got = e
+            .stencil_apply(&x, &Halos::none(), StencilCoeffs::LAPLACIAN)
+            .unwrap();
+        for &v in &got.to_flat() {
+            assert_eq!(v, crate::arch::bf16::bf16_round(v), "value {v} not bf16");
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! The PJRT engine: executes the AOT-compiled JAX/Pallas artifacts for
+//! every per-core kernel application. This is the three-layer composition
+//! the architecture demands — L1 Pallas kernels inside L2 JAX graphs,
+//! lowered once at build time, executed from the L3 Rust hot path with
+//! Python nowhere at run time.
+//!
+//! BF16 semantics (round-to-nearest-even + flush-to-zero after every tile
+//! op) are baked into the artifact graphs by `python/compile/model.py`, so
+//! this engine and [`crate::engine::native::NativeEngine`] agree at BF16
+//! (integration-tested in `rust/tests/integration_runtime.rs`).
+
+use std::path::Path;
+
+use crate::arch::DataFormat;
+use crate::engine::block::{CoreBlock, Halos};
+use crate::engine::traits::{ComputeEngine, StencilCoeffs};
+use crate::error::{Result, SimError};
+use crate::runtime::artifacts::{df_tag, ArtifactStore};
+use crate::tile::EltwiseOp;
+
+pub struct PjrtEngine {
+    store: ArtifactStore,
+}
+
+impl std::fmt::Debug for PjrtEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtEngine").field("store", &self.store).finish()
+    }
+}
+
+impl PjrtEngine {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        Ok(Self {
+            store: ArtifactStore::new(artifacts_dir)?,
+        })
+    }
+
+    pub fn store(&self) -> &ArtifactStore {
+        &self.store
+    }
+
+    fn artifact_name(op: &str, df: DataFormat, nz: usize) -> String {
+        format!("{op}_{}_t{nz}", df_tag(df))
+    }
+
+    fn lookup(&self, op: &str, df: DataFormat, nz: usize) -> Result<String> {
+        let name = Self::artifact_name(op, df, nz);
+        if self.store.available(&name) {
+            Ok(name)
+        } else {
+            Err(SimError::Artifact(format!(
+                "no artifact '{name}' — AOT set covers tile counts {:?}; \
+                 add {nz} to TILE_COUNTS in python/compile/aot.py and re-run `make artifacts`",
+                self.store
+                    .list()
+                    .iter()
+                    .filter(|n| n.starts_with(op))
+                    .collect::<Vec<_>>()
+            )))
+        }
+    }
+
+    fn run_block_binary(&self, op: &str, a: &CoreBlock, b: &CoreBlock, alpha: Option<f32>) -> Result<CoreBlock> {
+        if a.df != b.df || a.nz() != b.nz() {
+            return Err(SimError::Other("block mismatch in pjrt engine".into()));
+        }
+        let nz = a.nz();
+        let name = self.lookup(op, a.df, nz)?;
+        let af = a.to_flat();
+        let bf = b.to_flat();
+        let dims = [nz as i64, 64, 16];
+        let alpha_store;
+        let mut inputs: Vec<(&[f32], &[i64])> = vec![(&af, &dims), (&bf, &dims)];
+        if let Some(al) = alpha {
+            alpha_store = [al];
+            inputs.push((&alpha_store, &[]));
+        }
+        let out = self.store.run(&name, &inputs)?;
+        Ok(CoreBlock::from_flat(a.df, nz, &out[0]))
+    }
+}
+
+impl ComputeEngine for PjrtEngine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn eltwise(&self, op: EltwiseOp, a: &CoreBlock, b: &CoreBlock) -> Result<CoreBlock> {
+        let op_name = match op {
+            EltwiseOp::Add => "eltwise_add",
+            EltwiseOp::Sub => "eltwise_sub",
+            EltwiseOp::Mul => "eltwise_mul",
+        };
+        self.run_block_binary(op_name, a, b, None)
+    }
+
+    fn axpy(&self, y: &CoreBlock, alpha: f32, x: &CoreBlock) -> Result<CoreBlock> {
+        self.run_block_binary("axpy", y, x, Some(alpha))
+    }
+
+    fn scale(&self, a: &CoreBlock, alpha: f32) -> Result<CoreBlock> {
+        let nz = a.nz();
+        let name = self.lookup("scale", a.df, nz)?;
+        let af = a.to_flat();
+        let dims = [nz as i64, 64, 16];
+        let alpha_store = [alpha];
+        let out = self.store.run(&name, &[(&af, &dims), (&alpha_store, &[])])?;
+        Ok(CoreBlock::from_flat(a.df, nz, &out[0]))
+    }
+
+    fn dot_partial(&self, a: &CoreBlock, b: &CoreBlock) -> Result<f32> {
+        if a.df != b.df || a.nz() != b.nz() {
+            return Err(SimError::Other("block mismatch in pjrt engine".into()));
+        }
+        let nz = a.nz();
+        let name = self.lookup("dot", a.df, nz)?;
+        let af = a.to_flat();
+        let bf = b.to_flat();
+        let dims = [nz as i64, 64, 16];
+        let out = self.store.run(&name, &[(&af, &dims), (&bf, &dims)])?;
+        out[0]
+            .first()
+            .copied()
+            .ok_or_else(|| SimError::Runtime("dot artifact returned empty output".into()))
+    }
+
+    fn stencil_apply(&self, x: &CoreBlock, halos: &Halos, coeffs: StencilCoeffs) -> Result<CoreBlock> {
+        let nz = x.nz();
+        let name = self.lookup("stencil", x.df, nz)?;
+        let xf = x.to_flat();
+        let (hn, hs, hw, he) = halos.to_flat(nz);
+        let cf = coeffs.to_array();
+        let dims = [nz as i64, 64, 16];
+        let dims_ns = [nz as i64, 16];
+        let dims_ew = [nz as i64, 64];
+        let dims_c = [7i64];
+        let out = self.store.run(
+            &name,
+            &[
+                (&xf, &dims),
+                (&hn, &dims_ns),
+                (&hs, &dims_ns),
+                (&hw, &dims_ew),
+                (&he, &dims_ew),
+                (&cf, &dims_c),
+            ],
+        )?;
+        Ok(CoreBlock::from_flat(x.df, nz, &out[0]))
+    }
+}

@@ -1,0 +1,97 @@
+//! The compute-engine abstraction.
+//!
+//! Engines produce *values* for per-core kernel applications; the
+//! simulator charges *time* independently through [`crate::timing`], so
+//! any engine yields identical performance results. Two engines exist:
+//!
+//! - [`crate::engine::native::NativeEngine`] — Rust tile arithmetic with
+//!   BF16 flush-to-zero, used for large sweeps and as the cross-check
+//!   reference;
+//! - [`crate::engine::pjrt::PjrtEngine`] — executes the AOT-compiled
+//!   JAX/Pallas artifacts (`artifacts/*.hlo.txt`) through the PJRT C API,
+//!   proving the three-layer composition end to end.
+
+use crate::engine::block::{CoreBlock, Halos};
+use crate::tile::EltwiseOp;
+
+/// The 7-point stencil coefficients (§7, Eq. 2): the standard finite
+/// difference Laplacian uses `[-1,-1,-1, 6, -1,-1,-1]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StencilCoeffs {
+    pub center: f32,
+    pub x_lo: f32,
+    pub x_hi: f32,
+    pub y_lo: f32,
+    pub y_hi: f32,
+    pub z_lo: f32,
+    pub z_hi: f32,
+}
+
+impl StencilCoeffs {
+    /// The paper's 7-point Laplacian (§7).
+    pub const LAPLACIAN: StencilCoeffs = StencilCoeffs {
+        center: 6.0,
+        x_lo: -1.0,
+        x_hi: -1.0,
+        y_lo: -1.0,
+        y_hi: -1.0,
+        z_lo: -1.0,
+        z_hi: -1.0,
+    };
+
+    /// Flatten in the canonical artifact order:
+    /// `[center, x_lo, x_hi, y_lo, y_hi, z_lo, z_hi]`.
+    pub fn to_array(self) -> [f32; 7] {
+        [
+            self.center, self.x_lo, self.x_hi, self.y_lo, self.y_hi, self.z_lo, self.z_hi,
+        ]
+    }
+}
+
+/// Per-core compute operations. All methods are value-semantics: inputs
+/// are immutable, outputs are fresh blocks rounded through the block's
+/// data format (BF16 blocks get FTZ + RNE after every operation).
+pub trait ComputeEngine {
+    fn name(&self) -> &'static str;
+
+    /// c = a `op` b, element-wise.
+    fn eltwise(&self, op: EltwiseOp, a: &CoreBlock, b: &CoreBlock) -> crate::Result<CoreBlock>;
+
+    /// out = y + alpha * x.
+    fn axpy(&self, y: &CoreBlock, alpha: f32, x: &CoreBlock) -> crate::Result<CoreBlock>;
+
+    /// y ← y + alpha * x, in place. Default delegates to [`axpy`]
+    /// (engines backed by immutable executables keep the default); the
+    /// native engine overrides it to avoid reallocating every tile in the
+    /// solver's axpy sweeps (§Perf optimization 5).
+    fn axpy_into(&self, y: &mut CoreBlock, alpha: f32, x: &CoreBlock) -> crate::Result<()> {
+        *y = self.axpy(y, alpha, x)?;
+        Ok(())
+    }
+
+    /// out = alpha * a.
+    fn scale(&self, a: &CoreBlock, alpha: f32) -> crate::Result<CoreBlock>;
+
+    /// Partial dot product sum(a .* b) over this core's tiles.
+    fn dot_partial(&self, a: &CoreBlock, b: &CoreBlock) -> crate::Result<f32>;
+
+    /// One 7-point stencil application over the core's block with the
+    /// given halos (§6): the SpMV building block.
+    fn stencil_apply(
+        &self,
+        x: &CoreBlock,
+        halos: &Halos,
+        coeffs: StencilCoeffs,
+    ) -> crate::Result<CoreBlock>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laplacian_coefficients_match_eq2() {
+        let c = StencilCoeffs::LAPLACIAN.to_array();
+        assert_eq!(c, [6.0, -1.0, -1.0, -1.0, -1.0, -1.0, -1.0]);
+    }
+}

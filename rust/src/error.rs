@@ -1,0 +1,78 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum SimError {
+    #[error("SRAM exhausted on core {core}: requested {requested} B, {available} B free of {capacity} B")]
+    SramExhausted {
+        core: String,
+        requested: usize,
+        available: usize,
+        capacity: usize,
+    },
+
+    #[error("misaligned {what}: address/size {value:#x} must be {align}-byte aligned")]
+    Misaligned {
+        what: &'static str,
+        value: usize,
+        align: usize,
+    },
+
+    #[error("circular buffer '{name}' overflow: capacity {capacity} pages, {pending} pending")]
+    CbOverflow {
+        name: String,
+        capacity: usize,
+        pending: usize,
+    },
+
+    #[error("circular buffer '{name}' underflow: pop/wait on empty buffer")]
+    CbUnderflow { name: String },
+
+    #[error("CB pointer manipulation on '{name}' by {delta} B not a multiple of {align} B (§6.2)")]
+    CbPtrAlign {
+        name: String,
+        delta: isize,
+        align: usize,
+    },
+
+    #[error("DRAM access out of range: offset {offset} + len {len} > capacity {capacity}")]
+    DramRange {
+        offset: u64,
+        len: usize,
+        capacity: u64,
+    },
+
+    #[error("invalid core coordinate ({row}, {col}) for {rows}x{cols} grid")]
+    BadCoord {
+        row: usize,
+        col: usize,
+        rows: usize,
+        cols: usize,
+    },
+
+    #[error("sub-grid {rows}x{cols} exceeds the maximum usable compute sub-grid {max_rows}x{max_cols} (§7.2)")]
+    SubgridTooLarge {
+        rows: usize,
+        cols: usize,
+        max_rows: usize,
+        max_cols: usize,
+    },
+
+    #[error("problem does not tile evenly: {what}")]
+    BadProblem { what: String },
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("{0}")]
+    Other(String),
+}
+
+pub type Result<T> = std::result::Result<T, SimError>;

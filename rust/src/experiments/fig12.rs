@@ -1,0 +1,150 @@
+//! Fig 12: PCG scaling on the simulated Wormhole.
+//!
+//! (a) strong scaling, FP32 split-kernel, fixed 64×16-tile problem (64
+//!     tiles/core at the smallest 4×4 grid);
+//! (b) strong scaling, BF16 fused-kernel, fixed 164×4-tile problem
+//!     (671,744 elements of x; 164 tiles/core at 2×2);
+//! (c) weak scaling at the §7.2 maximum problem size per core (FP32: 64
+//!     tiles, BF16: 164 tiles), normalized per tile.
+//!
+//! Strong-scaling note: the paper's layout assigns each core a column of
+//! tiles; redistributing a fixed tile count across more cores gives
+//! `ceil(total / cores)` tiles per core (the last fraction of a tile is
+//! padded). Timing depends only on (grid, tiles/core), which this captures
+//! exactly.
+
+use crate::kernels::DotMethod;
+use crate::noc::RoutePattern;
+use crate::profiler::Profiler;
+use crate::solver::{self, PcgOptions, PcgVariant, Problem};
+use crate::util::csv::CsvWriter;
+use crate::util::stats::fmt_ns;
+use crate::util::table::Table;
+
+use super::{ExpContext, GRID_LADDER};
+
+/// Per-iteration PCG time for one configuration.
+fn pcg_iter_ns(
+    ctx: &ExpContext,
+    grid: (usize, usize),
+    tiles: usize,
+    variant: PcgVariant,
+) -> crate::Result<f64> {
+    let p = Problem::new(grid.0, grid.1, tiles, variant.df());
+    let g = p.make_grid()?;
+    let b = solver::dist_random(&p, ctx.seed);
+    let mut opts = PcgOptions::new(variant);
+    opts.max_iters = ctx.pcg_iters;
+    opts.tol_abs = 0.0; // run exactly max_iters for stable timing
+    opts.dot_method = DotMethod::ReduceThenSend;
+    opts.dot_pattern = RoutePattern::Naive;
+    let mut prof = Profiler::disabled();
+    let res = solver::solve(&g, &p, &b, ctx.engine.as_ref(), &ctx.cost, &opts, &mut prof)?;
+    Ok(res.per_iter_ns)
+}
+
+fn strong_scaling(
+    ctx: &ExpContext,
+    title: &str,
+    csv_name: &str,
+    variant: PcgVariant,
+    total_tiles: usize,
+    grids: &[(usize, usize)],
+) -> crate::Result<()> {
+    let mut table = Table::new(title, &["grid", "cores", "tiles/core", "time/iter", "speedup", "efficiency"]);
+    let mut csv = CsvWriter::new(&["grid", "cores", "tiles_per_core", "iter_ns", "speedup", "efficiency"]);
+    let mut base: Option<(usize, f64)> = None; // (cores, iter_ns)
+    for &(r, c) in grids {
+        let cores = r * c;
+        let tiles = total_tiles.div_ceil(cores);
+        let ns = pcg_iter_ns(ctx, (r, c), tiles, variant)?;
+        let (c0, n0) = *base.get_or_insert((cores, ns));
+        let speedup = n0 / ns;
+        let eff = speedup / (cores as f64 / c0 as f64);
+        table.row(vec![
+            format!("{r}x{c}"),
+            format!("{cores}"),
+            format!("{tiles}"),
+            fmt_ns(ns),
+            format!("{speedup:.2}x"),
+            format!("{:.0}%", eff * 100.0),
+        ]);
+        csv.row(&[
+            format!("{r}x{c}"),
+            format!("{cores}"),
+            format!("{tiles}"),
+            format!("{ns:.1}"),
+            format!("{speedup:.3}"),
+            format!("{eff:.3}"),
+        ]);
+    }
+    println!("{}", table.render());
+    ctx.save_csv(csv_name, &csv);
+    Ok(())
+}
+
+/// Fig 12a: FP32 strong scaling, 64×16 tiles (1024 tiles ⇒ 64/core at 4×4).
+pub fn run_strong_fp32(ctx: &ExpContext) -> crate::Result<()> {
+    strong_scaling(
+        ctx,
+        "Fig 12a — PCG strong scaling, FP32 split-kernel (fixed 64x16-tile problem)",
+        "fig12a_strong_fp32",
+        PcgVariant::SplitFp32,
+        64 * 16,
+        &[(4, 4), (4, 6), (6, 6), (6, 7), (8, 7)],
+    )?;
+    println!("paper shape: good strong scaling with slight irregularity (§7.2)\n");
+    Ok(())
+}
+
+/// Fig 12b: BF16 strong scaling, 164×4 tiles (671,744 elements; 164/core at 2×2).
+pub fn run_strong_bf16(ctx: &ExpContext) -> crate::Result<()> {
+    strong_scaling(
+        ctx,
+        "Fig 12b — PCG strong scaling, BF16 fused-kernel (fixed 164x4-tile problem)",
+        "fig12b_strong_bf16",
+        PcgVariant::FusedBf16,
+        164 * 4,
+        &[(2, 2), (4, 4), (6, 6), (8, 7)],
+    )?;
+    println!("paper shape: the FPU implementation scales well strongly (§7.2)\n");
+    Ok(())
+}
+
+/// Fig 12c: weak scaling at max problem size per core, normalized per tile.
+pub fn run_weak(ctx: &ExpContext) -> crate::Result<()> {
+    let mut table = Table::new(
+        "Fig 12c — PCG weak scaling at max size/core (normalized per tile)",
+        &["grid", "cores", "FP32 64t (ns/tile)", "BF16 164t (ns/tile)", "fp32/bf16"],
+    );
+    let mut csv = CsvWriter::new(&[
+        "grid", "cores", "fp32_iter_ns", "fp32_ns_per_tile", "bf16_iter_ns", "bf16_ns_per_tile",
+        "ratio",
+    ]);
+    for (r, c) in GRID_LADDER {
+        let fp32 = pcg_iter_ns(ctx, (r, c), 64, PcgVariant::SplitFp32)?;
+        let bf16 = pcg_iter_ns(ctx, (r, c), 164, PcgVariant::FusedBf16)?;
+        let fp32_pt = fp32 / 64.0;
+        let bf16_pt = bf16 / 164.0;
+        table.row(vec![
+            format!("{r}x{c}"),
+            format!("{}", r * c),
+            format!("{fp32_pt:.0}"),
+            format!("{bf16_pt:.0}"),
+            format!("{:.2}x", fp32_pt / bf16_pt),
+        ]);
+        csv.row(&[
+            format!("{r}x{c}"),
+            format!("{}", r * c),
+            format!("{fp32:.1}"),
+            format!("{fp32_pt:.2}"),
+            format!("{bf16:.1}"),
+            format!("{bf16_pt:.2}"),
+            format!("{:.3}", fp32_pt / bf16_pt),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("paper shape: both weak scale well; SFPU/FP32 ≈2x slower than FPU/BF16 per problem size (§7.2)\n");
+    ctx.save_csv("fig12c_weak", &csv);
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Fig 3: single-core roofline for 16-bit element-wise addition, with the
+//! FPU and SFPU implementation variants at 256 tiles per core (262,144
+//! elements).
+
+use crate::arch::{ComputeUnit, DataFormat};
+use crate::kernels::eltwise::eltwise_stream_timing;
+use crate::util::csv::CsvWriter;
+use crate::util::stats::fmt_ns;
+use crate::util::table::Table;
+
+use super::ExpContext;
+
+pub fn run(ctx: &ExpContext) -> crate::Result<()> {
+    let cost = &ctx.cost;
+    let tiles = 256; // the paper's Fig-3 data points
+    let df = DataFormat::Bf16;
+
+    let mut table = Table::new(
+        "Fig 3 — Roofline, 16-bit eltwise add (single Tensix core, 256 tiles)",
+        &["variant", "AI (FLOP/B)", "GFLOP/s", "cycles/tile", "roofline bound", "% of bound", "core time"],
+    );
+    let mut csv = CsvWriter::new(&[
+        "variant", "ai_flop_per_byte", "gflops", "cycles_per_tile", "bw_bound_gflops",
+        "pct_of_bound", "core_ns", "dram_ns",
+    ]);
+
+    for unit in [ComputeUnit::Fpu, ComputeUnit::Sfpu] {
+        let t = eltwise_stream_timing(cost, unit, df, tiles);
+        let bound = (cost.sram_bw_gbs() * t.ai).min(cost.peak_gflops(unit, df));
+        let pct = 100.0 * t.gflops / bound;
+        table.row(vec![
+            format!("{unit} BF16"),
+            format!("{:.4}", t.ai),
+            format!("{:.2}", t.gflops),
+            format!("{}", t.cycles_per_tile),
+            format!("{bound:.2}"),
+            format!("{pct:.1}%"),
+            fmt_ns(t.core_ns),
+        ]);
+        csv.row(&[
+            format!("{unit}"),
+            format!("{:.6}", t.ai),
+            format!("{:.3}", t.gflops),
+            format!("{}", t.cycles_per_tile),
+            format!("{bound:.3}"),
+            format!("{pct:.2}"),
+            format!("{:.1}", t.core_ns),
+            format!("{:.1}", t.dram_ns),
+        ]);
+    }
+
+    // The roofline curve itself (for re-plotting): attainable = min(peak,
+    // BW × AI) for each unit.
+    let mut curve = CsvWriter::new(&["ai_flop_per_byte", "fpu_roof_gflops", "sfpu_roof_gflops"]);
+    let mut ai = 1.0 / 64.0;
+    while ai <= 16.0 {
+        let bw = cost.sram_bw_gbs();
+        let fpu = (bw * ai).min(cost.peak_gflops(ComputeUnit::Fpu, df));
+        let sfpu = (bw * ai).min(cost.peak_gflops(ComputeUnit::Sfpu, df));
+        curve.row(&[format!("{ai:.5}"), format!("{fpu:.3}"), format!("{sfpu:.3}")]);
+        ai *= 2.0f64.sqrt();
+    }
+
+    println!("{}", table.render());
+    println!(
+        "paper shape: FPU near the BW roofline at AI=1/6; SFPU ≈6x slower at AI≈1/16 (§4)\n"
+    );
+    ctx.save_csv("fig3_points", &csv);
+    ctx.save_csv("fig3_roofline", &curve);
+    Ok(())
+}

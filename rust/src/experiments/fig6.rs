@@ -1,0 +1,86 @@
+//! Fig 6: center vs naive reduction routing — speedup as the problem size
+//! (tiles per core) scales, method 2, SFPU FP32, plus the small-grid
+//! series where the center pattern's routing-logic overhead makes the
+//! speedup negative (§5.2).
+
+use crate::kernels::reduction::{run_dot, DotConfig, DotMethod};
+use crate::noc::RoutePattern;
+use crate::solver::{dist_random, Problem};
+use crate::util::csv::CsvWriter;
+use crate::util::stats::fmt_ns;
+use crate::util::table::Table;
+
+use super::ExpContext;
+
+pub fn run(ctx: &ExpContext) -> crate::Result<()> {
+    let tile_sweep = [1usize, 2, 4, 8, 16, 32, 64, 128];
+    let mut table = Table::new(
+        "Fig 6 — Center-vs-naive routing speedup (method 2, SFPU FP32, 100-iter avg)",
+        &["grid", "tiles/core", "naive", "center", "speedup"],
+    );
+    let mut csv = CsvWriter::new(&["grid", "tiles_per_core", "naive_ns", "center_ns", "speedup_pct"]);
+
+    let run_pair = |r: usize, c: usize, tiles: usize| -> crate::Result<(f64, f64)> {
+        let p = Problem::new(r, c, tiles, crate::arch::DataFormat::Fp32);
+        let a = dist_random(&p, ctx.seed);
+        let b = dist_random(&p, ctx.seed + 1);
+        let naive = run_dot(
+            r, c,
+            &DotConfig::paper_section5(DotMethod::SendTiles, RoutePattern::Naive, tiles),
+            &a, &b, ctx.engine.as_ref(), &ctx.cost,
+        )?;
+        let center = run_dot(
+            r, c,
+            &DotConfig::paper_section5(DotMethod::SendTiles, RoutePattern::Center, tiles),
+            &a, &b, ctx.engine.as_ref(), &ctx.cost,
+        )?;
+        Ok((naive.total_ns, center.total_ns))
+    };
+
+    // Small grid first — the left of the paper's figure, where speedup is
+    // negative because the routing-logic overhead outweighs the shorter
+    // paths (§5.2).
+    for (r, c, tiles) in [(2usize, 2usize, 1usize), (2, 2, 4)] {
+        let (n, ce) = run_pair(r, c, tiles)?;
+        let sp = 100.0 * (n - ce) / n;
+        table.row(vec![
+            format!("{r}x{c}"),
+            format!("{tiles}"),
+            fmt_ns(n),
+            fmt_ns(ce),
+            format!("{sp:+.1}%"),
+        ]);
+        csv.row(&[
+            format!("{r}x{c}"),
+            format!("{tiles}"),
+            format!("{n:.1}"),
+            format!("{ce:.1}"),
+            format!("{sp:.2}"),
+        ]);
+    }
+
+    // Full 8×7 grid across the tiles-per-core sweep.
+    for tiles in tile_sweep {
+        let (n, ce) = run_pair(8, 7, tiles)?;
+        let sp = 100.0 * (n - ce) / n;
+        table.row(vec![
+            "8x7".to_string(),
+            format!("{tiles}"),
+            fmt_ns(n),
+            fmt_ns(ce),
+            format!("{sp:+.1}%"),
+        ]);
+        csv.row(&[
+            "8x7".to_string(),
+            format!("{tiles}"),
+            format!("{n:.1}"),
+            format!("{ce:.1}"),
+            format!("{sp:.2}"),
+        ]);
+    }
+
+    println!("{}", table.render());
+    println!("paper shape: ~+15% at 1 tile/core on the full grid, negligible by 128 tiles/core, negative on the smallest grids (§5.2)\n");
+    ctx.save_csv("fig6_routing_speedup", &csv);
+    Ok(())
+}

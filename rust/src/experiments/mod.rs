@@ -1,0 +1,110 @@
+//! Experiment runners: one per paper table and figure (DESIGN.md §5).
+//!
+//! Every runner prints the paper-style rows and writes a CSV under
+//! `results/`, so each artifact in the paper's evaluation section can be
+//! regenerated with `wormsim figures <id>` / `wormsim tables <id>` (or
+//! `cargo bench`, which drives the same runners).
+
+pub mod ext;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig3;
+pub mod fig5;
+pub mod fig6;
+pub mod tables;
+
+use std::path::PathBuf;
+
+use crate::engine::{ComputeEngine, NativeEngine};
+use crate::timing::cost::CostModel;
+
+/// Shared context for experiment runs.
+pub struct ExpContext {
+    pub cost: CostModel,
+    pub engine: Box<dyn ComputeEngine>,
+    /// PCG iterations to simulate for per-iteration figures (timing is
+    /// deterministic per iteration; more iterations only smooth the value
+    /// path).
+    pub pcg_iters: usize,
+    pub out_dir: PathBuf,
+    pub seed: u64,
+}
+
+impl Default for ExpContext {
+    fn default() -> Self {
+        Self {
+            cost: CostModel::default(),
+            engine: Box::new(NativeEngine::new()),
+            pcg_iters: 3,
+            out_dir: PathBuf::from("results"),
+            seed: 20260710,
+        }
+    }
+}
+
+impl ExpContext {
+    pub fn save_csv(&self, name: &str, csv: &crate::util::csv::CsvWriter) {
+        let path = self.out_dir.join(format!("{name}.csv"));
+        match csv.write(&path) {
+            Ok(()) => println!("→ wrote {}", path.display()),
+            Err(e) => eprintln!("! failed to write {}: {e}", path.display()),
+        }
+    }
+}
+
+/// The grid ladder used by the weak-scaling figures (1×1 … 8×7, §7.2).
+pub const GRID_LADDER: [(usize, usize); 8] =
+    [(1, 1), (2, 2), (3, 3), (4, 4), (5, 5), (6, 6), (7, 7), (8, 7)];
+
+/// All experiment ids, in paper order.
+pub const ALL_FIGURES: [&str; 7] = ["fig3", "fig5", "fig6", "fig11", "fig12a", "fig12b", "fig12c"];
+pub const ALL_TABLES: [&str; 3] = ["t1", "t2", "t3"];
+
+/// Dispatch a figure runner by id. "fig13" is also accepted under figures.
+pub fn run_figure(ctx: &ExpContext, id: &str) -> crate::Result<()> {
+    match id {
+        "fig3" => fig3::run(ctx),
+        "fig5" => fig5::run(ctx),
+        "fig6" => fig6::run(ctx),
+        "fig11" => fig11::run(ctx),
+        "fig12a" => fig12::run_strong_fp32(ctx),
+        "fig12b" => fig12::run_strong_bf16(ctx),
+        "fig12c" => fig12::run_weak(ctx),
+        "fig13" => fig13::run(ctx),
+        "energy" => ext::run_energy(ctx),
+        "dualdie" => ext::run_dualdie(ctx),
+        "jacobi" => ext::run_jacobi(ctx),
+        "ext" => {
+            ext::run_energy(ctx)?;
+            ext::run_dualdie(ctx)?;
+            ext::run_jacobi(ctx)
+        }
+        "all" => {
+            for f in ALL_FIGURES {
+                run_figure(ctx, f)?;
+            }
+            fig13::run(ctx)
+        }
+        _ => Err(crate::SimError::Config(format!(
+            "unknown figure '{id}' (expected one of {ALL_FIGURES:?}, fig13, all)"
+        ))),
+    }
+}
+
+pub fn run_table(ctx: &ExpContext, id: &str) -> crate::Result<()> {
+    match id {
+        "t1" => tables::run_t1(ctx),
+        "t2" => tables::run_t2(ctx),
+        "t3" => tables::run_t3(ctx),
+        "all" => {
+            for t in ALL_TABLES {
+                run_table(ctx, t)?;
+            }
+            Ok(())
+        }
+        _ => Err(crate::SimError::Config(format!(
+            "unknown table '{id}' (expected one of {ALL_TABLES:?}, all)"
+        ))),
+    }
+}

@@ -1,0 +1,130 @@
+//! Basic element-wise arithmetic kernels (§4).
+//!
+//! Two implementation variants exist, mirroring the paper's Fig 3: the FPU
+//! (BF16, near the SRAM-bandwidth roofline) and the SFPU (16/32-bit,
+//! substantially more expensive due to Dst-register staging and lane
+//! load/stores). Both stream tiles DRAM → SRAM → compute → SRAM → DRAM;
+//! the DRAM legs are charged separately from the roofline (the paper's
+//! simplified roofline excludes them, and so does ours for the Fig-3
+//! point).
+
+use crate::arch::{ComputeUnit, DataFormat};
+use crate::engine::{ComputeEngine, CoreBlock};
+use crate::timing::cost::{CostModel, PipelineMode, TileOpKind};
+use crate::timing::SimNs;
+use crate::tile::EltwiseOp;
+
+/// Timing of a single-core element-wise streaming run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EltwiseTiming {
+    pub unit: ComputeUnit,
+    pub df: DataFormat,
+    pub tiles: usize,
+    /// On-core cycles per tile (pack/unpack/compute/issue).
+    pub cycles_per_tile: u64,
+    /// Total on-core time for the stream.
+    pub core_ns: SimNs,
+    /// DRAM staging time (in + out), not part of the Fig-3 roofline.
+    pub dram_ns: SimNs,
+    /// Achieved arithmetic throughput of the on-core stream (GFLOP/s).
+    pub gflops: f64,
+    /// Arithmetic intensity (FLOP/byte) of the variant.
+    pub ai: f64,
+}
+
+/// Single-core streaming element-wise timing (the Fig-3 experiment:
+/// 256 tiles per core = 262,144 elements).
+pub fn eltwise_stream_timing(
+    cost: &CostModel,
+    unit: ComputeUnit,
+    df: DataFormat,
+    tiles: usize,
+) -> EltwiseTiming {
+    let cycles_per_tile =
+        cost.tile_op_cycles(unit, df, TileOpKind::EltwiseBinary, PipelineMode::Streamed);
+    let core_cycles = cycles_per_tile * tiles as u64;
+    // DRAM legs: two input vectors in, one result out.
+    let bytes = (3 * tiles * df.tile_bytes()) as u64;
+    let dram_cycles = cost.dram_stream_cycles(bytes);
+    let (ai, gflops) = cost.roofline_point(unit, df);
+    EltwiseTiming {
+        unit,
+        df,
+        tiles,
+        cycles_per_tile,
+        core_ns: crate::timing::cycles_ns(core_cycles),
+        dram_ns: crate::timing::cycles_ns(dram_cycles),
+        gflops,
+        ai,
+    }
+}
+
+/// Per-core time for a distributed element-wise/axpy-style operation over
+/// `tiles` resident tiles (used by the PCG component model; data is already
+/// in SRAM, so no DRAM legs).
+pub fn block_op_ns(
+    cost: &CostModel,
+    unit: ComputeUnit,
+    df: DataFormat,
+    kind: TileOpKind,
+    tiles: usize,
+    mode: PipelineMode,
+) -> SimNs {
+    crate::timing::cycles_ns(cost.tile_op_cycles(unit, df, kind, mode) * tiles as u64)
+}
+
+/// Distributed element-wise values: `c = a op b` on every core's block.
+pub fn run_eltwise_values(
+    engine: &dyn ComputeEngine,
+    op: EltwiseOp,
+    a: &[CoreBlock],
+    b: &[CoreBlock],
+) -> crate::Result<Vec<CoreBlock>> {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| engine.eltwise(op, x, y))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NativeEngine;
+
+    #[test]
+    fn fig3_point_shapes() {
+        let cost = CostModel::default();
+        let fpu = eltwise_stream_timing(&cost, ComputeUnit::Fpu, DataFormat::Bf16, 256);
+        let sfpu = eltwise_stream_timing(&cost, ComputeUnit::Sfpu, DataFormat::Bf16, 256);
+        // §4: SFPU ~6x slower than FPU at 16-bit.
+        let ratio = sfpu.core_ns / fpu.core_ns;
+        assert!((4.5..8.0).contains(&ratio), "ratio {ratio}");
+        // AI: 1/6 vs 1/16.
+        assert!((fpu.ai - 1.0 / 6.0).abs() < 1e-9);
+        assert!((sfpu.ai - 1.0 / 16.0).abs() < 1e-9);
+        assert!(fpu.gflops > sfpu.gflops);
+        assert!(fpu.dram_ns > 0.0);
+    }
+
+    #[test]
+    fn fp32_sfpu_slower_than_bf16_sfpu() {
+        let cost = CostModel::default();
+        let b = eltwise_stream_timing(&cost, ComputeUnit::Sfpu, DataFormat::Bf16, 64);
+        let f = eltwise_stream_timing(&cost, ComputeUnit::Sfpu, DataFormat::Fp32, 64);
+        assert!(f.core_ns > b.core_ns);
+    }
+
+    #[test]
+    fn distributed_values() {
+        let e = NativeEngine::new();
+        let a: Vec<CoreBlock> = (0..4)
+            .map(|i| CoreBlock::from_fn(DataFormat::Fp32, 2, move |_, _, _| i as f32))
+            .collect();
+        let b: Vec<CoreBlock> = (0..4)
+            .map(|_| CoreBlock::from_fn(DataFormat::Fp32, 2, |_, _, _| 10.0))
+            .collect();
+        let c = run_eltwise_values(&e, EltwiseOp::Add, &a, &b).unwrap();
+        assert_eq!(c[3].get(1, 10, 10), 13.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! The paper's three numerical kernels (§4–§6): element-wise arithmetic,
+//! global dot-product reduction, and the 7-point 3D stencil. Each kernel
+//! produces values through a [`crate::engine::ComputeEngine`] and timing
+//! through the cost model + NoC simulator.
+
+pub mod eltwise;
+pub mod reduction;
+pub mod stencil;
+
+pub use eltwise::{block_op_ns, eltwise_stream_timing, EltwiseTiming};
+pub use reduction::{run_dot, DotConfig, DotMethod, DotOutcome};
+pub use stencil::{run_stencil, StencilConfig, StencilTiming, StencilVariant};

@@ -1,0 +1,345 @@
+//! Global reduction: the distributed dot product (§5).
+//!
+//! Every core owns corresponding tiles of both input vectors; it multiplies
+//! element-wise and accumulates a partial-result tile (Fig 4). The global
+//! phase then reduces across cores over the NoC, with two orthogonal
+//! implementation choices the paper evaluates:
+//!
+//! - **Granularity** (§5.1): method 1 reduces each core's partial tile to a
+//!   scalar before sending (less traffic, more compute); method 2 sends
+//!   whole tiles and reduces to a scalar only at the root.
+//! - **Routing** (§5.2): naive (rows leftward, then up column 0) vs center
+//!   (toward the grid center) vs direct (everyone → root; §5 mentions it
+//!   but expects a root bottleneck — provided for the ablation).
+//!
+//! At every hop only the sum of incoming partials is forwarded. The scalar
+//! result is finally multicast back to all cores.
+
+use crate::arch::{ComputeUnit, DataFormat};
+use crate::device::Coord;
+use crate::engine::{ComputeEngine, CoreBlock};
+use crate::noc::patterns::{reduce_tree, RoutePattern};
+use crate::noc::NocSim;
+use crate::timing::cost::{CostModel, PipelineMode, TileOpKind};
+use crate::timing::SimNs;
+use std::collections::BTreeMap;
+
+/// §5.1 granularity methods.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DotMethod {
+    /// Method 1: reduce to a scalar on each core, send scalars.
+    ReduceThenSend,
+    /// Method 2: send partial tiles, reduce at the root.
+    SendTiles,
+}
+
+#[derive(Debug, Clone)]
+pub struct DotConfig {
+    pub method: DotMethod,
+    pub pattern: RoutePattern,
+    pub df: DataFormat,
+    pub unit: ComputeUnit,
+    pub tiles_per_core: usize,
+}
+
+impl DotConfig {
+    /// The paper's §5 experiment configuration: SFPU FP32.
+    pub fn paper_section5(method: DotMethod, pattern: RoutePattern, tiles: usize) -> Self {
+        Self {
+            method,
+            pattern,
+            df: DataFormat::Fp32,
+            unit: ComputeUnit::Sfpu,
+            tiles_per_core: tiles,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DotOutcome {
+    /// The dot-product value (identical across granularity methods up to
+    /// accumulation-order rounding; computed by the engine).
+    pub value: f32,
+    /// Slowest core's local phase (mul + accumulate [+ local reduce]).
+    pub local_ns: SimNs,
+    /// Tree-reduction network phase (merges + transfers) past local.
+    pub network_ns: SimNs,
+    /// Result multicast back to all cores.
+    pub bcast_ns: SimNs,
+    /// Total = time until every core holds the scalar result.
+    pub total_ns: SimNs,
+    pub messages: u64,
+    pub bytes: u64,
+}
+
+/// Run the distributed dot product: values via `engine`, timing via the
+/// cost model + NoC simulator.
+pub fn run_dot(
+    rows: usize,
+    cols: usize,
+    cfg: &DotConfig,
+    a: &[CoreBlock],
+    b: &[CoreBlock],
+    engine: &dyn ComputeEngine,
+    cost: &CostModel,
+) -> crate::Result<DotOutcome> {
+    let n_cores = rows * cols;
+    assert_eq!(a.len(), n_cores, "one block per core");
+    assert_eq!(b.len(), n_cores);
+
+    // ---- values --------------------------------------------------------
+    let mut value = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        value += engine.dot_partial(x, y)?;
+    }
+
+    // ---- timing --------------------------------------------------------
+    let calib = &cost.calib;
+    let t = cfg.tiles_per_core as u64;
+    // Local phase (Fig 4): per tile, eltwise multiply + accumulate into the
+    // partial tile. Dependent sequence: accumulation chains.
+    let mul = cost.tile_op_cycles(cfg.unit, cfg.df, TileOpKind::EltwiseBinary, PipelineMode::Streamed);
+    let acc = cost.tile_op_cycles(cfg.unit, cfg.df, TileOpKind::EltwiseBinary, PipelineMode::Dependent);
+    let mut local_cycles = t * (mul + acc);
+    // Method 1: local tile → scalar reduction on every core.
+    let reduce_cycles = cost.tile_op_cycles(cfg.unit, cfg.df, TileOpKind::ReduceTile, PipelineMode::Dependent);
+    if cfg.method == DotMethod::ReduceThenSend {
+        local_cycles += reduce_cycles;
+    }
+    // Center pattern pays extra routing logic per core (§5.2).
+    if cfg.pattern == RoutePattern::Center {
+        local_cycles += calib.center_route_overhead_cycles;
+    }
+    let local_ns = crate::timing::cycles_ns(local_cycles);
+
+    // Tree execution over the NoC.
+    let tree = reduce_tree(cfg.pattern, rows, cols);
+    let payload: u64 = match cfg.method {
+        // A scalar still moves as one 32B-aligned beat (§3.3).
+        DotMethod::ReduceThenSend => 32,
+        DotMethod::SendTiles => cfg.df.tile_bytes() as u64,
+    };
+    let merge_cycles: u64 = match cfg.method {
+        DotMethod::ReduceThenSend => calib.scalar_merge_cycles,
+        // Tile merges integrate into the receiver's unpack/compute/pack
+        // pipeline as the payload streams in (streamed mode).
+        DotMethod::SendTiles => {
+            cost.tile_op_cycles(cfg.unit, cfg.df, TileOpKind::EltwiseBinary, PipelineMode::Streamed)
+        }
+    };
+    let merge_ns = crate::timing::cycles_ns(merge_cycles);
+
+    let mut noc = NocSim::new();
+    let children = tree.children();
+    // ready[c] = when core c's outgoing partial is available.
+    let mut ready: BTreeMap<Coord, SimNs> = BTreeMap::new();
+    let mut arrivals: BTreeMap<Coord, SimNs> = BTreeMap::new(); // latest inbound merge done
+    let order = tree.topo_order();
+    for &c in &order {
+        let mut done = local_ns;
+        // Merge children's partials as they arrive (sequentially on the
+        // receiving data-movement core).
+        if let Some(kids) = children.get(&c) {
+            let mut merge_cursor = local_ns;
+            let mut kid_arrivals: Vec<SimNs> = kids.iter().map(|k| arrivals[k]).collect();
+            kid_arrivals.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            for ka in kid_arrivals {
+                merge_cursor = merge_cursor.max(ka) + merge_ns;
+            }
+            done = merge_cursor;
+        }
+        ready.insert(c, done);
+        if let Some(&parent) = tree.parent.get(&c) {
+            // `arrivals` is keyed by the child; the parent (processed
+            // later in topo order) looks its children up there.
+            let d = noc.send(calib, c, parent, payload, done);
+            arrivals.insert(c, d.arrival);
+        }
+    }
+    let reduce_done_pre_root = ready[&tree.root];
+    // Method 2: the root reduces the merged tile to a scalar (§5.1).
+    let root_extra = if cfg.method == DotMethod::SendTiles {
+        crate::timing::cycles_ns(reduce_cycles)
+    } else {
+        0.0
+    };
+    let reduce_done = reduce_done_pre_root + root_extra;
+
+    // Multicast the scalar back to all cores (§5.1: "the scalar result is
+    // then multicast back to all cores").
+    let dests: Vec<Coord> = (0..rows)
+        .flat_map(|r| (0..cols).map(move |c| Coord::new(r, c)))
+        .filter(|&c| c != tree.root)
+        .collect();
+    let bcast_done = noc.multicast(calib, tree.root, &dests, 32, reduce_done);
+
+    Ok(DotOutcome {
+        value,
+        local_ns,
+        network_ns: reduce_done - local_ns,
+        bcast_ns: bcast_done - reduce_done,
+        total_ns: bcast_done,
+        messages: noc.messages_sent,
+        bytes: noc.bytes_sent,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NativeEngine;
+    use crate::util::prng::Rng;
+
+    fn blocks(seed: u64, n: usize, tiles: usize, df: DataFormat) -> Vec<CoreBlock> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| CoreBlock::from_fn(df, tiles, |_, _, _| rng.next_f32() - 0.5))
+            .collect()
+    }
+
+    fn reference_dot(a: &[CoreBlock], b: &[CoreBlock]) -> f64 {
+        a.iter()
+            .zip(b)
+            .flat_map(|(x, y)| x.to_flat().into_iter().zip(y.to_flat()))
+            .map(|(x, y)| x as f64 * y as f64)
+            .sum()
+    }
+
+    #[test]
+    fn value_matches_reference_both_methods() {
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let a = blocks(1, 12, 4, DataFormat::Fp32);
+        let b = blocks(2, 12, 4, DataFormat::Fp32);
+        let want = reference_dot(&a, &b);
+        for method in [DotMethod::ReduceThenSend, DotMethod::SendTiles] {
+            let cfg = DotConfig::paper_section5(method, RoutePattern::Naive, 4);
+            let out = run_dot(3, 4, &cfg, &a, &b, &e, &cost).unwrap();
+            assert!(
+                (out.value as f64 - want).abs() < 1e-2 * want.abs().max(1.0),
+                "{method:?}: {} vs {want}",
+                out.value
+            );
+        }
+    }
+
+    #[test]
+    fn method1_reduces_traffic_method2_reduces_local_compute() {
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let a = blocks(3, 56, 8, DataFormat::Fp32);
+        let b = blocks(4, 56, 8, DataFormat::Fp32);
+        let m1 = run_dot(
+            8,
+            7,
+            &DotConfig::paper_section5(DotMethod::ReduceThenSend, RoutePattern::Naive, 8),
+            &a,
+            &b,
+            &e,
+            &cost,
+        )
+        .unwrap();
+        let m2 = run_dot(
+            8,
+            7,
+            &DotConfig::paper_section5(DotMethod::SendTiles, RoutePattern::Naive, 8),
+            &a,
+            &b,
+            &e,
+            &cost,
+        )
+        .unwrap();
+        assert!(m1.bytes < m2.bytes, "method 1 sends less data");
+        assert!(m1.local_ns > m2.local_ns, "method 1 does more local compute");
+    }
+
+    #[test]
+    fn methods_converge_on_single_core() {
+        // §5.1: "the methods converge as the grid size decreases to a
+        // single Tensix core" (no network phase at 1×1 for method 1; the
+        // only difference is where the final reduce happens — nowhere to
+        // send, so both reduce locally).
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let a = blocks(5, 1, 64, DataFormat::Fp32);
+        let b = blocks(6, 1, 64, DataFormat::Fp32);
+        let m1 = run_dot(
+            1,
+            1,
+            &DotConfig::paper_section5(DotMethod::ReduceThenSend, RoutePattern::Naive, 64),
+            &a,
+            &b,
+            &e,
+            &cost,
+        )
+        .unwrap();
+        let m2 = run_dot(
+            1,
+            1,
+            &DotConfig::paper_section5(DotMethod::SendTiles, RoutePattern::Naive, 64),
+            &a,
+            &b,
+            &e,
+            &cost,
+        )
+        .unwrap();
+        let rel = (m1.total_ns - m2.total_ns).abs() / m2.total_ns;
+        assert!(rel < 0.02, "1x1 methods should converge, rel diff {rel}");
+    }
+
+    #[test]
+    fn center_beats_naive_at_one_tile_on_full_grid() {
+        // §5.2: ~15% speedup at a single tile per core on the full grid.
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let a = blocks(7, 56, 1, DataFormat::Fp32);
+        let b = blocks(8, 56, 1, DataFormat::Fp32);
+        let naive = run_dot(
+            8,
+            7,
+            &DotConfig::paper_section5(DotMethod::SendTiles, RoutePattern::Naive, 1),
+            &a,
+            &b,
+            &e,
+            &cost,
+        )
+        .unwrap();
+        let center = run_dot(
+            8,
+            7,
+            &DotConfig::paper_section5(DotMethod::SendTiles, RoutePattern::Center, 1),
+            &a,
+            &b,
+            &e,
+            &cost,
+        )
+        .unwrap();
+        assert!(
+            center.total_ns < naive.total_ns,
+            "center {} vs naive {}",
+            center.total_ns,
+            naive.total_ns
+        );
+    }
+
+    #[test]
+    fn local_compute_dominates_at_many_tiles() {
+        // §5.2: at 128 tiles/core the speedup is negligible because local
+        // compute dominates network time.
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let a = blocks(9, 56, 128, DataFormat::Fp32);
+        let b = blocks(10, 56, 128, DataFormat::Fp32);
+        let out = run_dot(
+            8,
+            7,
+            &DotConfig::paper_section5(DotMethod::SendTiles, RoutePattern::Naive, 128),
+            &a,
+            &b,
+            &e,
+            &cost,
+        )
+        .unwrap();
+        assert!(out.local_ns > 5.0 * (out.network_ns + out.bcast_ns));
+    }
+}

@@ -1,0 +1,366 @@
+//! The 7-point 3D stencil kernel (§6) — the SpMV building block of PCG.
+//!
+//! Data distribution (§6.1): the 3D grid collapses its z dimension onto the
+//! plane; each core owns a column of `nz` 64×16 tiles. Per application,
+//! every core
+//!
+//! 1. exchanges boundary data with its four cardinal neighbors over the
+//!    NoC — N/S boundaries are one contiguous 32B row per tile; E/W
+//!    boundaries cross the face transpose and travel as **4 discontiguous
+//!    16-element segments** per tile (§6.3, Fig 10);
+//! 2. zero-fills halo rows/columns on global-domain boundaries (§6.3 —
+//!    "unexpectedly expensive" on the baby RISC-Vs);
+//! 3. builds shifted tiles (pointer-trick rows, transpose-pipeline
+//!    columns; §6.2) and accumulates the 7 scaled components.
+//!
+//! Timing and values are produced together: values through the engine
+//! (native tile math or the AOT Pallas artifact), cycles through the cost
+//! model and the NoC simulator.
+
+use crate::arch::{ComputeUnit, DataFormat};
+use crate::device::TensixGrid;
+use crate::engine::{ComputeEngine, CoreBlock, Halos, StencilCoeffs};
+use crate::noc::NocSim;
+use crate::tile::ShiftDir;
+use crate::timing::cost::{CostModel, PipelineMode, TileOpKind};
+use crate::timing::SimNs;
+
+/// Which parts of the stencil run (the Fig-11 ablation variants).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StencilVariant {
+    pub halo_exchange: bool,
+    pub zero_fill: bool,
+}
+
+impl StencilVariant {
+    pub const FULL: Self = Self { halo_exchange: true, zero_fill: true };
+    pub const NO_HALO: Self = Self { halo_exchange: false, zero_fill: true };
+    pub const NO_ZERO_FILL: Self = Self { halo_exchange: true, zero_fill: false };
+    pub const NEITHER: Self = Self { halo_exchange: false, zero_fill: false };
+
+    pub fn label(self) -> &'static str {
+        match (self.halo_exchange, self.zero_fill) {
+            (true, true) => "full",
+            (false, true) => "no halo",
+            (true, false) => "no zero fill",
+            (false, false) => "neither",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct StencilConfig {
+    pub df: DataFormat,
+    pub unit: ComputeUnit,
+    pub tiles_per_core: usize,
+    pub variant: StencilVariant,
+    pub coeffs: StencilCoeffs,
+}
+
+impl StencilConfig {
+    /// The paper's Fig-11 configuration: BF16 on the FPU.
+    pub fn paper_fig11(tiles: usize, variant: StencilVariant) -> Self {
+        Self {
+            df: DataFormat::Bf16,
+            unit: ComputeUnit::Fpu,
+            tiles_per_core: tiles,
+            variant,
+            coeffs: StencilCoeffs::LAPLACIAN,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct StencilTiming {
+    /// Whole-iteration time (slowest core, halo waits included).
+    pub iter_ns: SimNs,
+    /// Slowest core's local shift/transpose/accumulate compute.
+    pub compute_ns: SimNs,
+    /// Slowest core's halo send-issue + wait time.
+    pub halo_ns: SimNs,
+    /// Slowest core's zero-fill time.
+    pub zero_fill_ns: SimNs,
+    pub messages: u64,
+    pub bytes: u64,
+}
+
+/// Local per-tile operation count/cost of the stencil pipeline (§6.2):
+/// center scale; N/S = shift-copy + accumulate each; E/W = transpose +
+/// shift-copy + transpose + accumulate each; z = 2 accumulates.
+pub fn local_tile_cycles(cost: &CostModel, unit: ComputeUnit, df: DataFormat) -> u64 {
+    let dep = PipelineMode::Dependent;
+    let scale = cost.tile_op_cycles(unit, df, TileOpKind::EltwiseUnary, dep);
+    let shift = cost.tile_op_cycles(unit, df, TileOpKind::ShiftCopy, dep);
+    let transpose = cost.tile_op_cycles(unit, df, TileOpKind::Transpose, dep);
+    let add = cost.tile_op_cycles(unit, df, TileOpKind::EltwiseBinary, dep);
+    // center + 2×(N/S) + 2×(E/W) + 2×z
+    scale + 2 * (shift + add) + 2 * (2 * transpose + shift + add) + 2 * add
+}
+
+/// Bytes of one N/S halo row and one E/W halo segment at `df` (§6.3).
+fn halo_unit_bytes(df: DataFormat) -> (u64, u64) {
+    let row = (16 * df.bytes()) as u64; // one tile row = one NoC write
+    let seg = (16 * df.bytes()) as u64; // one of 4 E/W face segments
+    (row, seg)
+}
+
+/// Zero-fill element count per tile for each missing side: N/S = one
+/// 16-element row, E/W = one 64-element column (§6.3).
+fn zero_fill_elems(missing: &[ShiftDir]) -> u64 {
+    missing
+        .iter()
+        .map(|d| match d {
+            ShiftDir::North | ShiftDir::South => 16u64,
+            ShiftDir::East | ShiftDir::West => 64u64,
+        })
+        .sum()
+}
+
+/// Outcome: the stencil-applied blocks (core-indexed) plus timing.
+pub fn run_stencil(
+    grid: &TensixGrid,
+    cfg: &StencilConfig,
+    x: &[CoreBlock],
+    engine: &dyn ComputeEngine,
+    cost: &CostModel,
+) -> crate::Result<(Vec<CoreBlock>, StencilTiming)> {
+    let n_cores = grid.n_cores();
+    assert_eq!(x.len(), n_cores, "one block per core");
+    let calib = &cost.calib;
+    let nz = cfg.tiles_per_core as u64;
+    let (row_bytes, seg_bytes) = halo_unit_bytes(cfg.df);
+
+    // ---- halo exchange timing (§6.3) ------------------------------------
+    let mut noc = NocSim::new();
+    let mut send_done = vec![0.0f64; n_cores]; // sender-side issue completion
+    let mut recv_ready = vec![0.0f64; n_cores]; // last inbound halo arrival
+    if cfg.variant.halo_exchange {
+        for coord in grid.coords() {
+            let i = grid.index(coord)?;
+            // The writer RISC-V issues this core's sends sequentially; the
+            // first transaction per direction is cold, the per-tile rest
+            // run in a tight batched loop.
+            let mut cursor = 0.0f64;
+            for dir in ShiftDir::ALL {
+                if let Some(nb) = grid.neighbor(coord, dir) {
+                    let j = grid.index(nb)?;
+                    let (n_msgs, bytes) = match dir {
+                        // One contiguous row write per tile (§6.3).
+                        ShiftDir::North | ShiftDir::South => (nz, row_bytes),
+                        // Four discontiguous segments per tile (§6.3).
+                        ShiftDir::East | ShiftDir::West => (4 * nz, seg_bytes),
+                    };
+                    for m in 0..n_msgs {
+                        let issue = if m == 0 {
+                            calib.noc_issue_cycles
+                        } else {
+                            calib.noc_batch_issue_cycles
+                        };
+                        let d = noc.send_with_issue(calib, coord, nb, bytes, cursor, issue);
+                        cursor = d.issue_done;
+                        if d.arrival > recv_ready[j] {
+                            recv_ready[j] = d.arrival;
+                        }
+                    }
+                }
+            }
+            send_done[i] = cursor;
+        }
+    }
+
+    // ---- per-core local phase -------------------------------------------
+    let local_cycles = local_tile_cycles(cost, cfg.unit, cfg.df) * nz;
+    let local_ns = crate::timing::cycles_ns(local_cycles);
+
+    let mut iter_ns = 0.0f64;
+    let mut max_compute = 0.0f64;
+    let mut max_halo = 0.0f64;
+    let mut max_zf = 0.0f64;
+    for coord in grid.coords() {
+        let i = grid.index(coord)?;
+        let missing: Vec<ShiftDir> = ShiftDir::ALL
+            .into_iter()
+            .filter(|&d| grid.neighbor(coord, d).is_none())
+            .collect();
+        let zf_ns = if cfg.variant.zero_fill {
+            crate::timing::cycles_ns(cost.zero_fill_cycles(zero_fill_elems(&missing) * nz))
+        } else {
+            0.0
+        };
+        // Compute starts when this core's inbound halos have landed and its
+        // own sends are issued; then zero-fill + shifts/accumulation.
+        let halo_wait = send_done[i].max(recv_ready[i]);
+        let end = halo_wait + zf_ns + local_ns;
+        iter_ns = iter_ns.max(end);
+        max_compute = max_compute.max(local_ns);
+        max_halo = max_halo.max(halo_wait);
+        max_zf = max_zf.max(zf_ns);
+    }
+
+    // ---- values ----------------------------------------------------------
+    let mut out = Vec::with_capacity(n_cores);
+    for coord in grid.coords() {
+        let i = grid.index(coord)?;
+        let get = |dir: ShiftDir| -> Option<&CoreBlock> {
+            grid.neighbor(coord, dir)
+                .map(|nb| &x[grid.index(nb).unwrap()])
+        };
+        let halos = if cfg.variant.halo_exchange {
+            Halos::gather(
+                get(ShiftDir::North),
+                get(ShiftDir::South),
+                get(ShiftDir::West),
+                get(ShiftDir::East),
+            )
+        } else {
+            Halos::none()
+        };
+        out.push(engine.stencil_apply(&x[i], &halos, cfg.coeffs)?);
+    }
+
+    Ok((
+        out,
+        StencilTiming {
+            iter_ns,
+            compute_ns: max_compute,
+            halo_ns: max_halo,
+            zero_fill_ns: max_zf,
+            messages: noc.messages_sent,
+            bytes: noc.bytes_sent,
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NativeEngine;
+    use crate::util::prng::Rng;
+
+    fn blocks(seed: u64, n: usize, tiles: usize, df: DataFormat) -> Vec<CoreBlock> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| CoreBlock::from_fn(df, tiles, |_, _, _| rng.next_f32() - 0.5))
+            .collect()
+    }
+
+    #[test]
+    fn halo_exchange_stitches_cores_correctly() {
+        // A global linear field f(x,y,z) = x + 2y + 3z has Laplacian 0 at
+        // interior points — any cross-core stitching error shows up as a
+        // nonzero interior value.
+        let grid = TensixGrid::new(2, 2).unwrap();
+        let nz = 3;
+        let cfg = StencilConfig {
+            df: DataFormat::Fp32,
+            unit: ComputeUnit::Sfpu,
+            tiles_per_core: nz,
+            variant: StencilVariant::FULL,
+            coeffs: StencilCoeffs::LAPLACIAN,
+        };
+        let mut xs = Vec::new();
+        for r in 0..2 {
+            for c in 0..2 {
+                xs.push(CoreBlock::from_fn(DataFormat::Fp32, nz, |z, xr, yc| {
+                    let gx = (r * 64 + xr) as f32;
+                    let gy = (c * 16 + yc) as f32;
+                    (gx + 2.0 * gy + 3.0 * z as f32) * 1e-3
+                }));
+            }
+        }
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let (out, _) = run_stencil(&grid, &cfg, &xs, &e, &cost).unwrap();
+        // Check global-interior points, including ones adjacent to core
+        // boundaries (x=63/64 within core 0/2, y=15/16 across cores 0/1).
+        for (idx, (zz, xx, yy)) in [
+            (0usize, (1usize, 63usize, 8usize)),
+            (2, (1, 0, 8)),
+            (0, (1, 30, 15)),
+            (1, (1, 30, 0)),
+        ] {
+            let v = out[idx].get(zz, xx, yy);
+            assert!(
+                v.abs() < 1e-5,
+                "interior Laplacian of linear field should be ~0, got {v} at block {idx} ({zz},{xx},{yy})"
+            );
+        }
+    }
+
+    #[test]
+    fn fig11_variant_timing_ordering() {
+        let grid = TensixGrid::new(2, 2).unwrap();
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let xs = blocks(1, 4, 8, DataFormat::Bf16);
+        let mut t = std::collections::HashMap::new();
+        for v in [
+            StencilVariant::FULL,
+            StencilVariant::NO_HALO,
+            StencilVariant::NO_ZERO_FILL,
+            StencilVariant::NEITHER,
+        ] {
+            let cfg = StencilConfig::paper_fig11(8, v);
+            let (_, timing) = run_stencil(&grid, &cfg, &xs, &e, &cost).unwrap();
+            t.insert(v.label(), timing.iter_ns);
+        }
+        assert!(t["full"] >= t["no halo"]);
+        assert!(t["full"] >= t["no zero fill"]);
+        assert!(t["no halo"] >= t["neither"]);
+        assert!(t["no zero fill"] >= t["neither"]);
+    }
+
+    #[test]
+    fn local_compute_dominates_communication() {
+        // §6.3: "The local compute is much more expensive than the
+        // communication, demonstrating the strength of the Wormhole NoC".
+        let grid = TensixGrid::new(4, 4).unwrap();
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let xs = blocks(2, 16, 64, DataFormat::Bf16);
+        let cfg = StencilConfig::paper_fig11(64, StencilVariant::FULL);
+        let (_, timing) = run_stencil(&grid, &cfg, &xs, &e, &cost).unwrap();
+        assert!(
+            timing.compute_ns > 3.0 * timing.halo_ns,
+            "compute {} vs halo {}",
+            timing.compute_ns,
+            timing.halo_ns
+        );
+    }
+
+    #[test]
+    fn ew_exchange_is_4x_ns_message_count() {
+        // §6.3: E/W halo needs 4 sends per tile vs 1 for N/S.
+        let grid = TensixGrid::new(1, 2).unwrap(); // E/W neighbors only
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let xs = blocks(3, 2, 4, DataFormat::Bf16);
+        let cfg = StencilConfig::paper_fig11(4, StencilVariant::FULL);
+        let (_, t_ew) = run_stencil(&grid, &cfg, &xs, &e, &cost).unwrap();
+        // 2 cores × 1 neighbor × 4 tiles × 4 segments = 32 messages.
+        assert_eq!(t_ew.messages, 32);
+
+        let grid_ns = TensixGrid::new(2, 1).unwrap(); // N/S neighbors only
+        let (_, t_ns) = run_stencil(&grid_ns, &cfg, &xs, &e, &cost).unwrap();
+        // 2 cores × 1 neighbor × 4 tiles × 1 row = 8 messages.
+        assert_eq!(t_ns.messages, 8);
+        assert_eq!(t_ew.messages, 4 * t_ns.messages);
+    }
+
+    #[test]
+    fn single_core_full_zero_fill_cost() {
+        // 1×1 grid: all four sides zero-filled — the Fig-11 anomaly source.
+        let grid = TensixGrid::new(1, 1).unwrap();
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let xs = blocks(4, 1, 8, DataFormat::Bf16);
+        let full = StencilConfig::paper_fig11(8, StencilVariant::FULL);
+        let nozf = StencilConfig::paper_fig11(8, StencilVariant::NO_ZERO_FILL);
+        let (_, tf) = run_stencil(&grid, &full, &xs, &e, &cost).unwrap();
+        let (_, tn) = run_stencil(&grid, &nozf, &xs, &e, &cost).unwrap();
+        // (16+16+64+64) elems × 8 tiles × per-elem cost.
+        let expect = crate::timing::cycles_ns(cost.zero_fill_cycles(160 * 8));
+        assert!((tf.iter_ns - tn.iter_ns - expect).abs() < 1e-6);
+        assert_eq!(tf.messages, 0, "no neighbors, no traffic");
+    }
+}

@@ -1,0 +1,39 @@
+//! # wormsim
+//!
+//! A production-quality reproduction of *"Numerical Kernels on a Spatial
+//! Accelerator: A Study of Tenstorrent Wormhole"* as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)**: a cycle-approximate simulator of one
+//!   Wormhole Tensix die (tiles, circular buffers, SRAM, NoC, FPU/SFPU
+//!   cost model) plus the paper's three numerical kernels (element-wise
+//!   arithmetic, global dot-product reduction, 7-point 3D stencil) and the
+//!   preconditioned conjugate-gradient solver built from them.
+//! - **Layer 2** (`python/compile/model.py`): per-core compute graphs in
+//!   JAX, AOT-lowered to HLO text artifacts.
+//! - **Layer 1** (`python/compile/kernels/`): Pallas kernels for the
+//!   compute hot spots, validated against pure-jnp oracles.
+//!
+//! The PJRT runtime ([`runtime`]) loads the AOT artifacts and executes
+//! them from the Rust hot path; Python never runs at request time.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record of every table and figure.
+
+pub mod arch;
+pub mod baseline;
+pub mod device;
+pub mod error;
+pub mod experiments;
+pub mod kernels;
+pub mod noc;
+pub mod engine;
+pub mod profiler;
+pub mod tile;
+pub mod runtime;
+pub mod solver;
+pub mod ttm;
+pub mod timing;
+pub mod util;
+
+pub use error::{Result, SimError};

@@ -1,0 +1,205 @@
+//! `wormsim` — launcher for the Wormhole-numerics reproduction.
+//!
+//! Subcommands:
+//!   info                      platform + architecture summary
+//!   solve [opts]              run the PCG solver on a problem
+//!   figures <id|all> [opts]   regenerate a paper figure (fig3 fig5 fig6
+//!                             fig11 fig12a fig12b fig12c fig13)
+//!   tables <id|all> [opts]    regenerate a paper table (t1 t2 t3)
+//!
+//! Common options:
+//!   --engine native|pjrt      value engine (default native; pjrt executes
+//!                             the AOT JAX/Pallas artifacts through PJRT)
+//!   --artifacts DIR           artifact directory (default ./artifacts)
+//!   --config FILE             mini-TOML file with [calib] overrides
+//!   --iters N                 PCG iterations (figures: per-config timing runs)
+//!   --seed N                  workload RNG seed
+
+use std::process::ExitCode;
+
+use wormsim::engine::{make_engine, EngineKind};
+use wormsim::experiments::{run_figure, run_table, ExpContext};
+use wormsim::kernels::DotMethod;
+use wormsim::profiler::Profiler;
+use wormsim::solver::{self, PcgOptions, PcgVariant, Problem};
+use wormsim::timing::cost::CostModel;
+use wormsim::timing::Calib;
+use wormsim::util::cli;
+use wormsim::util::stats::fmt_ns;
+
+const VALUE_KEYS: &[&str] = &[
+    "engine", "artifacts", "config", "iters", "seed", "grid", "tiles", "variant", "tol",
+    "pattern", "method", "out", "trace",
+];
+const FLAGS: &[&str] = &["help", "quiet"];
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        print_usage();
+        return ExitCode::SUCCESS;
+    }
+    let cmd = argv[0].clone();
+    let rest = &argv[1..];
+    let args = match cli::parse(rest, VALUE_KEYS, FLAGS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    if args.has_flag("help") {
+        print_usage();
+        return ExitCode::SUCCESS;
+    }
+    match dispatch(&cmd, &args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn build_context(args: &cli::Args) -> Result<ExpContext, String> {
+    let mut calib = Calib::default();
+    if let Some(cfg_path) = args.get("config") {
+        let text = std::fs::read_to_string(cfg_path)
+            .map_err(|e| format!("cannot read config {cfg_path}: {e}"))?;
+        let doc = wormsim::util::tomlmini::Doc::parse(&text)?;
+        calib.apply_overrides(&doc);
+    }
+    let engine_kind: EngineKind = args.get_or("engine", "native").parse()?;
+    let artifacts = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let engine = make_engine(engine_kind, &artifacts).map_err(|e| e.to_string())?;
+    Ok(ExpContext {
+        cost: CostModel::new(calib),
+        engine,
+        pcg_iters: args.get_usize("iters", 3)?,
+        out_dir: std::path::PathBuf::from(args.get_or("out", "results")),
+        seed: args.get_u64("seed", 20260710)?,
+    })
+}
+
+fn dispatch(cmd: &str, args: &cli::Args) -> Result<(), String> {
+    match cmd {
+        "info" => cmd_info(args),
+        "solve" => cmd_solve(args),
+        "figures" => {
+            let ctx = build_context(args)?;
+            let id = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+            run_figure(&ctx, id).map_err(|e| e.to_string())
+        }
+        "tables" => {
+            let ctx = build_context(args)?;
+            let id = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+            run_table(&ctx, id).map_err(|e| e.to_string())
+        }
+        _ => Err(format!("unknown command '{cmd}' (try --help)")),
+    }
+}
+
+fn cmd_info(args: &cli::Args) -> Result<(), String> {
+    use wormsim::arch::constants::*;
+    println!("wormsim — Tenstorrent Wormhole numerical-kernels reproduction");
+    println!("  die grid:        {DIE_ROWS}x{DIE_COLS} ({TENSIX_PER_DIE} Tensix cores)");
+    println!(
+        "  compute subgrid: up to {}x{} ({} cores)",
+        MAX_SUBGRID.0,
+        MAX_SUBGRID.1,
+        MAX_SUBGRID.0 * MAX_SUBGRID.1
+    );
+    println!("  SRAM/core:       {} KiB", SRAM_BYTES / 1024);
+    println!("  clock:           {:.1} GHz", CLOCK_HZ / 1e9);
+    println!("  tile:            1024 elements (32x32 / 64x16 stencil)");
+    if args.get_or("engine", "native") == "pjrt" {
+        let artifacts = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+        let store = wormsim::runtime::ArtifactStore::new(&artifacts).map_err(|e| e.to_string())?;
+        println!("  PJRT platform:   {}", store.platform());
+        println!(
+            "  artifacts:       {} in {}",
+            store.list().len(),
+            artifacts.display()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_solve(args: &cli::Args) -> Result<(), String> {
+    let ctx = build_context(args)?;
+    let variant: PcgVariant = args.get_or("variant", "bf16").parse()?;
+    let (rows, cols) = args.get_grid("grid", (4, 4))?;
+    let tiles = args.get_usize("tiles", 16)?;
+    let problem = Problem::new(rows, cols, tiles, variant.df());
+    let grid = problem.make_grid().map_err(|e| e.to_string())?;
+
+    let mut opts = PcgOptions::new(variant);
+    opts.max_iters = args.get_usize("iters", 100)?;
+    opts.tol_abs = args.get_f64("tol", 1e-4)?;
+    opts.dot_pattern = args.get_or("pattern", "naive").parse()?;
+    opts.dot_method = match args.get_or("method", "1") {
+        "1" => DotMethod::ReduceThenSend,
+        "2" => DotMethod::SendTiles,
+        m => return Err(format!("--method expects 1 or 2, got '{m}'")),
+    };
+
+    let (nx, ny, nz) = problem.dims();
+    println!(
+        "PCG {} on {nx}x{ny}x{nz} ({} elements), {rows}x{cols} cores x {tiles} tiles, engine {}",
+        variant.label(),
+        problem.elems(),
+        ctx.engine.name()
+    );
+    let b = solver::dist_random(&problem, ctx.seed);
+    let mut prof = Profiler::new();
+    let res = solver::solve(&grid, &problem, &b, ctx.engine.as_ref(), &ctx.cost, &opts, &mut prof)
+        .map_err(|e| e.to_string())?;
+    println!(
+        "  {} after {} iterations, residual {:.3e}",
+        if res.converged { "converged" } else { "stopped" },
+        res.iters,
+        res.residual_history.last().copied().unwrap_or(f64::NAN)
+    );
+    println!(
+        "  simulated device time: total {}, per iteration {}",
+        fmt_ns(res.total_ns),
+        fmt_ns(res.per_iter_ns)
+    );
+    if !args.has_flag("quiet") {
+        println!();
+        println!("{}", res.breakdown.render("per-component device time"));
+        println!(
+            "launches {} ({}), device gaps {}",
+            res.launch.launches,
+            fmt_ns(res.launch.launch_ns),
+            fmt_ns(res.launch.gap_ns)
+        );
+    }
+    // Tracy-style timeline export (§3.4): --trace out.json, viewable in
+    // chrome://tracing or Perfetto.
+    if let Some(trace_path) = args.get("trace") {
+        wormsim::profiler::write_chrome_trace(&prof, std::path::Path::new(trace_path))
+            .map_err(|e| format!("cannot write trace {trace_path}: {e}"))?;
+        println!("wrote simulated-time trace to {trace_path}");
+    }
+    Ok(())
+}
+
+fn print_usage() {
+    println!(
+        "wormsim — Numerical kernels on a simulated Tenstorrent Wormhole\n\n\
+         USAGE: wormsim <command> [options]\n\n\
+         COMMANDS:\n  \
+         info                    platform + architecture summary\n  \
+         solve                   run the PCG solver (--grid 8x7 --tiles 64 --variant bf16|fp32\n                          \
+         --iters N --tol X --pattern naive|center --method 1|2)\n  \
+         figures <id|all>        regenerate paper figures: fig3 fig5 fig6 fig11 fig12a fig12b fig12c fig13\n                          \
+         extensions (§8): energy dualdie jacobi ext; solve supports --trace out.json\n  \
+         tables <id|all>         regenerate paper tables: t1 t2 t3\n\n\
+         COMMON OPTIONS:\n  \
+         --engine native|pjrt    value engine (pjrt runs the AOT JAX/Pallas artifacts)\n  \
+         --artifacts DIR         artifact directory (default: artifacts)\n  \
+         --config FILE           mini-TOML [calib] overrides\n  \
+         --seed N --iters N --out DIR"
+    );
+}

@@ -1,0 +1,10 @@
+//! Network-on-chip model (§3, §5): XY routing, link-serialized message
+//! timing, and the global-reduction routing patterns.
+
+pub mod patterns;
+pub mod route;
+pub mod sim;
+
+pub use patterns::{reduce_tree, ReduceTree, RoutePattern};
+pub use route::{hops, xy_route, Link};
+pub use sim::{Delivery, NocSim};

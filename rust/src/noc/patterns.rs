@@ -1,0 +1,229 @@
+//! Global-reduction routing patterns over the NoC (§5.2).
+//!
+//! - **Naive**: data flows leftward along each row, then up column 0 to the
+//!   top-left core. Each core handles at most 2 incoming partials.
+//! - **Center**: data flows toward the grid's center column within each
+//!   row, then along the center column to the center core, minimizing
+//!   distance and spreading load across links; the center core handles up
+//!   to 4 incoming partials.
+//! - **Direct** (§5 notes it but does not evaluate it): every core sends
+//!   straight to the root, which performs the whole reduction — provided
+//!   for the ablation bench.
+//!
+//! A pattern yields a reduction *tree*; the dot-product kernel executes the
+//! tree against the NoC simulator, merging partials at every hop ("only the
+//! sum of all incoming partial results is sent onward", §5).
+
+use std::collections::BTreeMap;
+
+use crate::device::Coord;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePattern {
+    Naive,
+    Center,
+    Direct,
+}
+
+impl std::str::FromStr for RoutePattern {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "naive" => Ok(RoutePattern::Naive),
+            "center" => Ok(RoutePattern::Center),
+            "direct" => Ok(RoutePattern::Direct),
+            _ => Err(format!("unknown routing pattern '{s}'")),
+        }
+    }
+}
+
+/// A reduction tree: every non-root core has exactly one parent.
+#[derive(Debug, Clone)]
+pub struct ReduceTree {
+    pub root: Coord,
+    pub parent: BTreeMap<Coord, Coord>,
+}
+
+impl ReduceTree {
+    /// Children of each core, derived from the parent map.
+    pub fn children(&self) -> BTreeMap<Coord, Vec<Coord>> {
+        let mut ch: BTreeMap<Coord, Vec<Coord>> = BTreeMap::new();
+        for (&c, &p) in &self.parent {
+            ch.entry(p).or_default().push(c);
+        }
+        ch
+    }
+
+    /// Depth of a core (hops-in-tree to the root).
+    pub fn depth(&self, mut c: Coord) -> usize {
+        let mut d = 0;
+        while let Some(&p) = self.parent.get(&c) {
+            c = p;
+            d += 1;
+            assert!(d <= 10_000, "cycle in reduction tree at {c}");
+        }
+        d
+    }
+
+    /// Cores ordered leaves-first (deepest first), suitable for a single
+    /// forward execution pass.
+    pub fn topo_order(&self) -> Vec<Coord> {
+        let mut coords: Vec<Coord> = self
+            .parent
+            .keys()
+            .copied()
+            .chain(std::iter::once(self.root))
+            .collect();
+        coords.sort();
+        coords.dedup();
+        coords.sort_by_key(|c| std::cmp::Reverse(self.depth(*c)));
+        coords
+    }
+
+    /// Maximum number of children any core has (the §5.2 routing-logic
+    /// complexity measure: ≤2 for naive, ≤4 for center).
+    pub fn max_fan_in(&self) -> usize {
+        self.children().values().map(|v| v.len()).max().unwrap_or(0)
+    }
+}
+
+/// Build the reduction tree for `pattern` on an `rows × cols` grid.
+pub fn reduce_tree(pattern: RoutePattern, rows: usize, cols: usize) -> ReduceTree {
+    assert!(rows > 0 && cols > 0);
+    let mut parent = BTreeMap::new();
+    match pattern {
+        RoutePattern::Naive => {
+            // Leftward along rows, then up column 0 (§5.2).
+            let root = Coord::new(0, 0);
+            for r in 0..rows {
+                for c in 0..cols {
+                    let me = Coord::new(r, c);
+                    if c > 0 {
+                        parent.insert(me, Coord::new(r, c - 1));
+                    } else if r > 0 {
+                        parent.insert(me, Coord::new(r - 1, 0));
+                    }
+                }
+            }
+            ReduceTree { root, parent }
+        }
+        RoutePattern::Center => {
+            let root = Coord::new(rows / 2, cols / 2);
+            for r in 0..rows {
+                for c in 0..cols {
+                    let me = Coord::new(r, c);
+                    if me == root {
+                        continue;
+                    }
+                    let p = if c != root.col {
+                        // Move along the row toward the center column.
+                        Coord::new(r, if c > root.col { c - 1 } else { c + 1 })
+                    } else {
+                        // On the center column: move toward the center row.
+                        Coord::new(if r > root.row { r - 1 } else { r + 1 }, c)
+                    };
+                    parent.insert(me, p);
+                }
+            }
+            ReduceTree { root, parent }
+        }
+        RoutePattern::Direct => {
+            let root = Coord::new(rows / 2, cols / 2);
+            for r in 0..rows {
+                for c in 0..cols {
+                    let me = Coord::new(r, c);
+                    if me != root {
+                        parent.insert(me, root);
+                    }
+                }
+            }
+            ReduceTree { root, parent }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_reach_root(t: &ReduceTree, rows: usize, cols: usize) {
+        for r in 0..rows {
+            for c in 0..cols {
+                let d = t.depth(Coord::new(r, c)); // panics on cycle
+                assert!(d <= rows * cols);
+            }
+        }
+    }
+
+    #[test]
+    fn naive_tree_structure() {
+        let t = reduce_tree(RoutePattern::Naive, 4, 5);
+        assert_eq!(t.root, Coord::new(0, 0));
+        assert_eq!(t.parent.len(), 19);
+        all_reach_root(&t, 4, 5);
+        // §5.2: at most 2 incoming per core.
+        assert!(t.max_fan_in() <= 2, "fan-in {}", t.max_fan_in());
+        // Row interior chains point left.
+        assert_eq!(t.parent[&Coord::new(2, 3)], Coord::new(2, 2));
+        // Column 0 chains point up.
+        assert_eq!(t.parent[&Coord::new(2, 0)], Coord::new(1, 0));
+    }
+
+    #[test]
+    fn center_tree_structure() {
+        let t = reduce_tree(RoutePattern::Center, 8, 7);
+        assert_eq!(t.root, Coord::new(4, 3));
+        all_reach_root(&t, 8, 7);
+        // §5.2: the center core handles up to 4 incoming.
+        assert!(t.max_fan_in() <= 4);
+        assert_eq!(t.children()[&t.root].len(), 4);
+        // Rows converge toward the center column.
+        assert_eq!(t.parent[&Coord::new(0, 0)], Coord::new(0, 1));
+        assert_eq!(t.parent[&Coord::new(0, 6)], Coord::new(0, 5));
+    }
+
+    #[test]
+    fn center_shallower_than_naive() {
+        // The center pattern minimizes distance traveled (§5.2).
+        let n = reduce_tree(RoutePattern::Naive, 8, 7);
+        let c = reduce_tree(RoutePattern::Center, 8, 7);
+        let max_depth = |t: &ReduceTree| {
+            (0..8)
+                .flat_map(|r| (0..7).map(move |cc| Coord::new(r, cc)))
+                .map(|x| t.depth(x))
+                .max()
+                .unwrap()
+        };
+        assert!(max_depth(&c) < max_depth(&n));
+    }
+
+    #[test]
+    fn single_core_grid_trivial() {
+        for p in [RoutePattern::Naive, RoutePattern::Center, RoutePattern::Direct] {
+            let t = reduce_tree(p, 1, 1);
+            assert!(t.parent.is_empty());
+            assert_eq!(t.root, Coord::new(0, 0));
+        }
+    }
+
+    #[test]
+    fn direct_tree_fans_into_root() {
+        let t = reduce_tree(RoutePattern::Direct, 3, 3);
+        assert_eq!(t.max_fan_in(), 8);
+        all_reach_root(&t, 3, 3);
+    }
+
+    #[test]
+    fn topo_order_children_before_parents() {
+        for p in [RoutePattern::Naive, RoutePattern::Center] {
+            let t = reduce_tree(p, 5, 5);
+            let order = t.topo_order();
+            let pos: BTreeMap<Coord, usize> =
+                order.iter().enumerate().map(|(i, c)| (*c, i)).collect();
+            for (&c, &par) in &t.parent {
+                assert!(pos[&c] < pos[&par], "{c} must precede parent {par}");
+            }
+            assert_eq!(order.len(), 25);
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! NoC routing (§3): the Wormhole NoC physically connects cardinal
+//! neighbors in a 2D torus; the hardware routes arbitrary core-to-core
+//! messages. We model dimension-ordered (X-then-Y) routing over the
+//! *sub-grid* mesh — the paper's reduction patterns only ever route within
+//! the selected compute sub-grid, and torus wraparound links connect cores
+//! outside it, so mesh distances are the relevant ones.
+
+use crate::device::Coord;
+
+/// A directed physical link between adjacent cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Link {
+    pub from: Coord,
+    pub to: Coord,
+}
+
+/// The XY route from `src` to `dst`: all X (column) movement first, then Y
+/// (row) movement, as directed links.
+pub fn xy_route(src: Coord, dst: Coord) -> Vec<Link> {
+    let mut links = Vec::with_capacity(src.manhattan(dst));
+    let mut cur = src;
+    // X dimension = columns.
+    while cur.col != dst.col {
+        let next = Coord::new(
+            cur.row,
+            if dst.col > cur.col { cur.col + 1 } else { cur.col - 1 },
+        );
+        links.push(Link { from: cur, to: next });
+        cur = next;
+    }
+    // Y dimension = rows.
+    while cur.row != dst.row {
+        let next = Coord::new(
+            if dst.row > cur.row { cur.row + 1 } else { cur.row - 1 },
+            cur.col,
+        );
+        links.push(Link { from: cur, to: next });
+        cur = next;
+    }
+    links
+}
+
+/// Hop count of the XY route (Manhattan distance).
+pub fn hops(src: Coord, dst: Coord) -> usize {
+    src.manhattan(dst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_length_is_manhattan() {
+        let s = Coord::new(1, 1);
+        let d = Coord::new(4, 6);
+        let r = xy_route(s, d);
+        assert_eq!(r.len(), 8);
+        assert_eq!(hops(s, d), 8);
+    }
+
+    #[test]
+    fn route_is_x_then_y_and_contiguous() {
+        let r = xy_route(Coord::new(2, 0), Coord::new(0, 2));
+        // First the column moves, then the row moves.
+        assert_eq!(r[0].from, Coord::new(2, 0));
+        assert_eq!(r[0].to, Coord::new(2, 1));
+        assert_eq!(r[1].to, Coord::new(2, 2));
+        assert_eq!(r[2].to, Coord::new(1, 2));
+        assert_eq!(r[3].to, Coord::new(0, 2));
+        // Contiguity: each link starts where the previous ended.
+        for w in r.windows(2) {
+            assert_eq!(w[0].to, w[1].from);
+        }
+    }
+
+    #[test]
+    fn self_route_is_empty() {
+        assert!(xy_route(Coord::new(3, 3), Coord::new(3, 3)).is_empty());
+        assert_eq!(hops(Coord::new(3, 3), Coord::new(3, 3)), 0);
+    }
+
+    #[test]
+    fn unit_routes() {
+        let r = xy_route(Coord::new(0, 0), Coord::new(0, 1));
+        assert_eq!(r.len(), 1);
+        let r = xy_route(Coord::new(5, 2), Coord::new(4, 2));
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].to, Coord::new(4, 2));
+    }
+}

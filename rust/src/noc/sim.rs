@@ -1,0 +1,202 @@
+//! Event-ordered NoC timing simulation.
+//!
+//! Messages traverse their XY route with wormhole (cut-through) switching:
+//! the head flit pays per-hop router latency; the body streams at the link
+//! bandwidth; each traversed link is occupied for the serialization time,
+//! so concurrent messages sharing a link serialize. This captures the §5.2
+//! contention difference between the naive (all rows converge on column 0)
+//! and center routing patterns.
+
+use std::collections::HashMap;
+
+use crate::device::Coord;
+use crate::noc::route::{xy_route, Link};
+use crate::timing::calib::Calib;
+use crate::timing::SimNs;
+
+/// Accounting for one delivered message.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Delivery {
+    /// When the sender's RISC-V finished issuing (sender busy until then).
+    pub issue_done: SimNs,
+    /// When the last byte arrived at the destination.
+    pub arrival: SimNs,
+}
+
+/// NoC simulator state: per-link next-free times.
+#[derive(Debug, Default)]
+pub struct NocSim {
+    link_free: HashMap<Link, SimNs>,
+    pub messages_sent: u64,
+    pub bytes_sent: u64,
+    pub max_link_busy_ns: SimNs,
+}
+
+impl NocSim {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Send `bytes` from `src` to `dst`, with the sender ready at `start`.
+    /// Returns issue-done and arrival times. Messages to self are free
+    /// beyond the issue cost (data is already in L1).
+    pub fn send(
+        &mut self,
+        calib: &Calib,
+        src: Coord,
+        dst: Coord,
+        bytes: u64,
+        start: SimNs,
+    ) -> Delivery {
+        self.send_with_issue(calib, src, dst, bytes, start, calib.noc_issue_cycles)
+    }
+
+    /// Like [`send`](Self::send), but with an explicit issue cost — used by
+    /// batched send loops (halo exchange) where only the first transaction
+    /// pays the cold `noc_issue_cycles` (§6.3 model; see
+    /// [`crate::timing::calib::NOC_BATCH_ISSUE_CYCLES`]).
+    pub fn send_with_issue(
+        &mut self,
+        calib: &Calib,
+        src: Coord,
+        dst: Coord,
+        bytes: u64,
+        start: SimNs,
+        issue_cycles: u64,
+    ) -> Delivery {
+        let cyc = |c: u64| crate::timing::cycles_ns(c);
+        let issue_done = start + cyc(issue_cycles);
+        self.messages_sent += 1;
+        self.bytes_sent += bytes;
+        if src == dst {
+            return Delivery {
+                issue_done,
+                arrival: issue_done,
+            };
+        }
+        let ser_ns = cyc(bytes.div_ceil(calib.noc_link_bytes_per_clk));
+        let hop_ns = cyc(calib.noc_hop_cycles);
+        // Head traverses hop by hop; each link is held for the
+        // serialization window starting when the head enters it.
+        let mut head = issue_done;
+        for link in xy_route(src, dst) {
+            let free = self.link_free.get(&link).copied().unwrap_or(0.0);
+            head = head.max(free) + hop_ns;
+            let busy_until = head + ser_ns;
+            self.link_free.insert(link, busy_until);
+            if busy_until > self.max_link_busy_ns {
+                self.max_link_busy_ns = busy_until;
+            }
+        }
+        let arrival = head + ser_ns + cyc(calib.noc_recv_cycles);
+        Delivery { issue_done, arrival }
+    }
+
+    /// Multicast `bytes` from `root` to every core in `dests` (the §5
+    /// result broadcast). The Wormhole NoC supports multicast writes; we
+    /// model a single issue whose arrival at each destination is bounded by
+    /// the farthest hop distance, with the shared links serialized once.
+    pub fn multicast(
+        &mut self,
+        calib: &Calib,
+        root: Coord,
+        dests: &[Coord],
+        bytes: u64,
+        start: SimNs,
+    ) -> SimNs {
+        let cyc = |c: u64| crate::timing::cycles_ns(c);
+        let issue_done = start + cyc(calib.noc_issue_cycles);
+        self.messages_sent += 1;
+        self.bytes_sent += bytes * dests.len().max(1) as u64;
+        let ser_ns = cyc(bytes.div_ceil(calib.noc_link_bytes_per_clk));
+        let hop_ns = cyc(calib.noc_hop_cycles);
+        let max_hops = dests
+            .iter()
+            .map(|d| root.manhattan(*d))
+            .max()
+            .unwrap_or(0) as f64;
+        issue_done + max_hops * hop_ns + ser_ns + cyc(calib.noc_recv_cycles)
+    }
+
+    pub fn reset(&mut self) {
+        self.link_free.clear();
+        self.messages_sent = 0;
+        self.bytes_sent = 0;
+        self.max_link_busy_ns = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c() -> Calib {
+        Calib::default()
+    }
+
+    #[test]
+    fn arrival_after_issue_and_scales_with_distance() {
+        let calib = c();
+        let mut noc = NocSim::new();
+        let d1 = noc.send(&calib, Coord::new(0, 0), Coord::new(0, 1), 32, 0.0);
+        let mut noc2 = NocSim::new();
+        let d5 = noc2.send(&calib, Coord::new(0, 0), Coord::new(0, 5), 32, 0.0);
+        assert!(d1.arrival > d1.issue_done);
+        assert!(d5.arrival > d1.arrival, "longer route takes longer");
+        // 4 extra hops exactly.
+        let hop = crate::timing::cycles_ns(calib.noc_hop_cycles);
+        assert!((d5.arrival - d1.arrival - 4.0 * hop).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bigger_payload_takes_longer() {
+        let calib = c();
+        let mut noc = NocSim::new();
+        let small = noc.send(&calib, Coord::new(0, 0), Coord::new(2, 2), 32, 0.0);
+        noc.reset();
+        let big = noc.send(&calib, Coord::new(0, 0), Coord::new(2, 2), 4096, 0.0);
+        assert!(big.arrival > small.arrival);
+    }
+
+    #[test]
+    fn shared_link_serializes() {
+        let calib = c();
+        let mut noc = NocSim::new();
+        // Two large messages over the same link at the same time.
+        let a = noc.send(&calib, Coord::new(0, 0), Coord::new(0, 1), 4096, 0.0);
+        let b = noc.send(&calib, Coord::new(0, 0), Coord::new(0, 1), 4096, 0.0);
+        // Second arrival delayed by at least one serialization window.
+        let ser = crate::timing::cycles_ns(4096_u64.div_ceil(calib.noc_link_bytes_per_clk));
+        assert!(b.arrival >= a.arrival + ser * 0.99);
+
+        // Disjoint links do not interfere.
+        let mut noc2 = NocSim::new();
+        let x = noc2.send(&calib, Coord::new(0, 0), Coord::new(0, 1), 4096, 0.0);
+        let y = noc2.send(&calib, Coord::new(5, 0), Coord::new(5, 1), 4096, 0.0);
+        assert!((x.arrival - y.arrival).abs() < 1e-6);
+    }
+
+    #[test]
+    fn self_send_is_cheap() {
+        let calib = c();
+        let mut noc = NocSim::new();
+        let d = noc.send(&calib, Coord::new(1, 1), Coord::new(1, 1), 4096, 0.0);
+        assert_eq!(d.arrival, d.issue_done);
+    }
+
+    #[test]
+    fn multicast_bounded_by_farthest() {
+        let calib = c();
+        let mut noc = NocSim::new();
+        let near = noc.multicast(&calib, Coord::new(0, 0), &[Coord::new(0, 1)], 32, 0.0);
+        noc.reset();
+        let far = noc.multicast(
+            &calib,
+            Coord::new(0, 0),
+            &[Coord::new(0, 1), Coord::new(7, 6)],
+            32,
+            0.0,
+        );
+        assert!(far > near);
+    }
+}

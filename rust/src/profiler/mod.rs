@@ -1,0 +1,16 @@
+//! Tracy-like profiler over *simulated* time (§3.4).
+//!
+//! The paper instruments host and device code with Tracy zones and
+//! visualizes per-core activity; it also times components by "removing
+//! portions of the algorithm and timing the remainder". We reproduce the
+//! zone mechanism over simulated nanoseconds: kernels open zones per
+//! component (norm/dot/axpy/spmv/...), per core or per launch, and reports
+//! aggregate them into the Fig-13-style component breakdown.
+
+pub mod report;
+pub mod trace;
+pub mod zones;
+
+pub use report::Breakdown;
+pub use trace::{to_chrome_trace, write_chrome_trace};
+pub use zones::{Profiler, Zone};

@@ -1,0 +1,98 @@
+//! Component breakdown reports (Fig 13).
+
+use std::collections::BTreeMap;
+
+use crate::timing::SimNs;
+use crate::util::table::Table;
+
+/// Per-component time breakdown for one solver configuration, in
+/// nanoseconds per iteration. The Fig-13 components are `norm`, `dot`,
+/// `axpy`, `spmv`; `other` captures launch/readback/sync time that the
+/// paper's device-side Tracy zones do not include (§7.3 notes the zone sum
+/// is about half the measured per-iteration time on Wormhole).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Breakdown {
+    pub components: BTreeMap<String, SimNs>,
+    pub iterations: u64,
+}
+
+impl Breakdown {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &str, ns: SimNs) {
+        *self.components.entry(name.to_string()).or_insert(0.0) += ns;
+    }
+
+    pub fn get(&self, name: &str) -> SimNs {
+        self.components.get(name).copied().unwrap_or(0.0)
+    }
+
+    /// Per-iteration value of one component.
+    pub fn per_iter(&self, name: &str) -> SimNs {
+        if self.iterations == 0 {
+            0.0
+        } else {
+            self.get(name) / self.iterations as f64
+        }
+    }
+
+    /// Sum of all components (per iteration).
+    pub fn total_per_iter(&self) -> SimNs {
+        if self.iterations == 0 {
+            return 0.0;
+        }
+        self.components.values().sum::<f64>() / self.iterations as f64
+    }
+
+    /// Render the Fig-13 style rows: component, time/iter, share.
+    pub fn render(&self, title: &str) -> String {
+        let mut t = Table::new(title, &["component", "time/iter", "share"]);
+        let total = self.total_per_iter().max(1e-30);
+        for (name, _) in &self.components {
+            let v = self.per_iter(name);
+            t.row(vec![
+                name.clone(),
+                crate::util::stats::fmt_ns(v),
+                format!("{:.1}%", 100.0 * v / total),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_normalizes() {
+        let mut b = Breakdown::new();
+        b.add("spmv", 100.0);
+        b.add("spmv", 100.0);
+        b.add("dot", 50.0);
+        b.iterations = 2;
+        assert_eq!(b.per_iter("spmv"), 100.0);
+        assert_eq!(b.per_iter("dot"), 25.0);
+        assert_eq!(b.total_per_iter(), 125.0);
+    }
+
+    #[test]
+    fn zero_iterations_safe() {
+        let b = Breakdown::new();
+        assert_eq!(b.per_iter("x"), 0.0);
+        assert_eq!(b.total_per_iter(), 0.0);
+    }
+
+    #[test]
+    fn renders_shares() {
+        let mut b = Breakdown::new();
+        b.add("spmv", 75.0);
+        b.add("dot", 25.0);
+        b.iterations = 1;
+        let s = b.render("test");
+        assert!(s.contains("75.0%"));
+        assert!(s.contains("25.0%"));
+    }
+}

@@ -1,0 +1,121 @@
+//! Zone recording over simulated time.
+
+use std::collections::BTreeMap;
+
+use crate::timing::SimNs;
+
+/// A closed profiling zone.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Zone {
+    /// Component name ("spmv", "dot", "axpy", "norm", "halo", ...).
+    pub name: String,
+    /// Optional core label ("(r,c)") or "host".
+    pub scope: String,
+    pub start: SimNs,
+    pub end: SimNs,
+}
+
+impl Zone {
+    pub fn duration(&self) -> SimNs {
+        self.end - self.start
+    }
+}
+
+/// Collects zones during a simulated run.
+#[derive(Debug, Default)]
+pub struct Profiler {
+    pub enabled: bool,
+    zones: Vec<Zone>,
+}
+
+impl Profiler {
+    pub fn new() -> Self {
+        Self {
+            enabled: true,
+            zones: Vec::new(),
+        }
+    }
+
+    /// A disabled profiler records nothing (the paper observes that
+    /// extensive zone tracing perturbs performance; we keep the same
+    /// on/off discipline even though simulated time is unperturbed).
+    pub fn disabled() -> Self {
+        Self {
+            enabled: false,
+            zones: Vec::new(),
+        }
+    }
+
+    pub fn record(&mut self, name: &str, scope: &str, start: SimNs, end: SimNs) {
+        debug_assert!(end >= start, "zone '{name}' ends before it starts");
+        if self.enabled {
+            self.zones.push(Zone {
+                name: name.to_string(),
+                scope: scope.to_string(),
+                start,
+                end,
+            });
+        }
+    }
+
+    pub fn zones(&self) -> &[Zone] {
+        &self.zones
+    }
+
+    /// Total time per component name (summed across scopes).
+    pub fn totals_by_name(&self) -> BTreeMap<String, SimNs> {
+        let mut m = BTreeMap::new();
+        for z in &self.zones {
+            *m.entry(z.name.clone()).or_insert(0.0) += z.duration();
+        }
+        m
+    }
+
+    /// Per-scope timeline (sorted by start) — the Tracy per-core view.
+    pub fn timeline(&self, scope: &str) -> Vec<&Zone> {
+        let mut v: Vec<&Zone> = self.zones.iter().filter(|z| z.scope == scope).collect();
+        v.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        v
+    }
+
+    pub fn clear(&mut self) {
+        self.zones.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_aggregates() {
+        let mut p = Profiler::new();
+        p.record("spmv", "(0,0)", 0.0, 10.0);
+        p.record("spmv", "(0,1)", 0.0, 12.0);
+        p.record("dot", "(0,0)", 10.0, 15.0);
+        let totals = p.totals_by_name();
+        assert_eq!(totals["spmv"], 22.0);
+        assert_eq!(totals["dot"], 5.0);
+        assert_eq!(p.zones().len(), 3);
+    }
+
+    #[test]
+    fn timeline_is_sorted_per_scope() {
+        let mut p = Profiler::new();
+        p.record("b", "(0,0)", 5.0, 6.0);
+        p.record("a", "(0,0)", 1.0, 2.0);
+        p.record("c", "(1,1)", 0.0, 1.0);
+        let tl = p.timeline("(0,0)");
+        assert_eq!(tl.len(), 2);
+        assert_eq!(tl[0].name, "a");
+        assert_eq!(tl[1].name, "b");
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let mut p = Profiler::disabled();
+        p.record("spmv", "host", 0.0, 1.0);
+        assert!(p.zones().is_empty());
+        assert!(p.totals_by_name().is_empty());
+    }
+}

@@ -1,0 +1,106 @@
+//! Artifact registry: name → compiled PJRT executable, compiled lazily and
+//! cached. Artifact names follow the `python/compile/aot.py` convention,
+//! e.g. `stencil_bf16_t64`, `axpy_f32_t8`, `dot_bf16_t164`.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::arch::DataFormat;
+use crate::error::{Result, SimError};
+use crate::runtime::client::RtClient;
+
+/// Lazily-compiling executable cache over an artifacts directory.
+pub struct ArtifactStore {
+    dir: PathBuf,
+    client: RtClient,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl std::fmt::Debug for ArtifactStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ArtifactStore")
+            .field("dir", &self.dir)
+            .field("cached", &self.cache.borrow().len())
+            .finish()
+    }
+}
+
+/// Data-format tag used in artifact names.
+pub fn df_tag(df: DataFormat) -> &'static str {
+    match df {
+        DataFormat::Bf16 => "bf16",
+        DataFormat::Fp32 => "f32",
+        DataFormat::Fp8 => "f8",
+    }
+}
+
+impl ArtifactStore {
+    pub fn new(dir: &Path) -> Result<Self> {
+        if !dir.is_dir() {
+            return Err(SimError::Artifact(format!(
+                "artifacts directory {} does not exist — run `make artifacts` first",
+                dir.display()
+            )));
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            client: RtClient::cpu()?,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform()
+    }
+
+    pub fn path_for(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    pub fn available(&self, name: &str) -> bool {
+        self.path_for(name).is_file()
+    }
+
+    /// List all artifact names present on disk.
+    pub fn list(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(&self.dir) {
+            for e in entries.flatten() {
+                if let Some(n) = e.file_name().to_str() {
+                    if let Some(stem) = n.strip_suffix(".hlo.txt") {
+                        names.push(stem.to_string());
+                    }
+                }
+            }
+        }
+        names.sort();
+        names
+    }
+
+    /// Get (compiling + caching on first use) an executable by name.
+    pub fn get(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.path_for(name);
+        if !path.is_file() {
+            return Err(SimError::Artifact(format!(
+                "artifact '{}' not found at {} (available: {:?}) — re-run `make artifacts`",
+                name,
+                path.display(),
+                self.list()
+            )));
+        }
+        let exe = Rc::new(self.client.compile_hlo_text(&path)?);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute artifact `name` on f32 inputs; see [`RtClient::run_f32`].
+    pub fn run(&self, name: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let exe = self.get(name)?;
+        RtClient::run_f32(&exe, inputs)
+    }
+}

@@ -1,0 +1,81 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+
+use crate::error::{Result, SimError};
+
+/// A PJRT client plus helpers to build/execute computations.
+pub struct RtClient {
+    client: xla::PjRtClient,
+}
+
+impl std::fmt::Debug for RtClient {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RtClient")
+            .field("platform", &self.client.platform_name())
+            .field("devices", &self.client.device_count())
+            .finish()
+    }
+}
+
+fn xe(e: xla::Error) -> SimError {
+    SimError::Runtime(e.to_string())
+}
+
+impl RtClient {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(xe)?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO text file and compile it.
+    pub fn compile_hlo_text(&self, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| SimError::Artifact(format!("non-utf8 path {path:?}")))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str).map_err(xe)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(xe)
+    }
+
+    /// Execute a compiled artifact on f32 tensor inputs, returning the
+    /// flattened f32 outputs. Each input is `(data, dims)`; the artifact
+    /// was lowered with `return_tuple=True`, so the single on-device output
+    /// is a tuple whose elements we return in order.
+    pub fn run_f32(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = if dims.is_empty() {
+                if data.len() != 1 {
+                    return Err(SimError::Runtime(format!(
+                        "scalar input needs 1 element, got {}",
+                        data.len()
+                    )));
+                }
+                xla::Literal::scalar(data[0])
+            } else {
+                xla::Literal::vec1(data).reshape(dims).map_err(xe)?
+            };
+            literals.push(lit);
+        }
+        let result = exe.execute::<xla::Literal>(&literals).map_err(xe)?[0][0]
+            .to_literal_sync()
+            .map_err(xe)?;
+        let parts = result.to_tuple().map_err(xe)?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>().map_err(xe)?);
+        }
+        Ok(out)
+    }
+}

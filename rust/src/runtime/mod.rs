@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them from the Rust hot path.
+//!
+//! The interchange format is **HLO text** (not serialized `HloModuleProto`):
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the image's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly (see /opt/xla-example/README.md). Executables are
+//! compiled once per artifact and cached.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::ArtifactStore;
+pub use client::RtClient;

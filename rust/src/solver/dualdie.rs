@@ -1,0 +1,391 @@
+//! Multi-device scaling (§8 future work): PCG across both Tensix dies of
+//! the n300d.
+//!
+//! The n300d carries two Wormhole dies; §7.2 evaluates one ("future work
+//! will explore full utilization of the n300d"). Dies connect over on-board
+//! Ethernet links (the §3 die grid dedicates cells to Ethernet
+//! management). We extend the solver across two dies by stacking the
+//! domain along x: die 0 owns the top `rows×cols` core grid, die 1 the
+//! bottom, and the seam between them exchanges halos over Ethernet instead
+//! of the NoC. Global reductions reduce per-die, then combine + broadcast
+//! the scalar across the link.
+//!
+//! Values are exact (the seam halos are stitched from the neighbor die's
+//! blocks); timing adds the Ethernet seam costs to the per-die NoC/compute
+//! times.
+
+use crate::arch::DataFormat;
+use crate::device::TensixGrid;
+use crate::engine::{ComputeEngine, CoreBlock, Halos, StencilCoeffs};
+use crate::kernels::eltwise::block_op_ns;
+use crate::kernels::reduction::{run_dot, DotConfig, DotMethod};
+use crate::kernels::stencil::{local_tile_cycles, StencilConfig, StencilVariant};
+use crate::noc::RoutePattern;
+use crate::profiler::Breakdown;
+use crate::solver::problem::Problem;
+use crate::timing::cost::CostModel;
+use crate::timing::SimNs;
+
+/// On-board Ethernet link between the two dies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EthLink {
+    /// One-way message latency, ns (Ethernet MAC + SerDes; orders of
+    /// magnitude above a NoC hop).
+    pub latency_ns: f64,
+    /// Usable bandwidth, GB/s (2×100 GbE per die pair ≈ 25 GB/s raw; we
+    /// default to one link's usable rate).
+    pub bw_gbs: f64,
+}
+
+impl Default for EthLink {
+    fn default() -> Self {
+        Self {
+            latency_ns: 800.0,
+            bw_gbs: 11.0,
+        }
+    }
+}
+
+impl EthLink {
+    /// Transfer time for `bytes` over the link.
+    pub fn transfer_ns(&self, bytes: u64) -> f64 {
+        self.latency_ns + bytes as f64 / self.bw_gbs
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DualDieOptions {
+    pub max_iters: usize,
+    pub tol_abs: f64,
+    pub eth: EthLink,
+}
+
+impl Default for DualDieOptions {
+    fn default() -> Self {
+        Self {
+            max_iters: 50,
+            tol_abs: 1e-4,
+            eth: EthLink::default(),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DualDieResult {
+    pub iters: usize,
+    pub converged: bool,
+    pub residual_history: Vec<f64>,
+    pub per_iter_ns: SimNs,
+    pub total_ns: SimNs,
+    /// Per-iteration Ethernet seam cost (halo + reduction combine).
+    pub eth_ns_per_iter: SimNs,
+    pub breakdown: Breakdown,
+}
+
+/// A logical dual-die distributed vector: blocks for die 0's rows×cols
+/// cores followed by die 1's (row-major within each die).
+pub type DualVector = Vec<CoreBlock>;
+
+/// The distributed stencil over both dies: per-core halos gathered from
+/// the (2·rows)×cols logical grid; the seam rows exchange across dies.
+fn dual_stencil_values(
+    rows: usize,
+    cols: usize,
+    nz: usize,
+    x: &[CoreBlock],
+    engine: &dyn ComputeEngine,
+    coeffs: StencilCoeffs,
+) -> crate::Result<Vec<CoreBlock>> {
+    let total_rows = 2 * rows;
+    assert_eq!(x.len(), total_rows * cols);
+    let idx = |r: usize, c: usize| r * cols + c;
+    let mut out = Vec::with_capacity(x.len());
+    for r in 0..total_rows {
+        for c in 0..cols {
+            let nb = |dr: isize, dc: isize| -> Option<&CoreBlock> {
+                let rr = r as isize + dr;
+                let cc = c as isize + dc;
+                if rr < 0 || cc < 0 || rr >= total_rows as isize || cc >= cols as isize {
+                    None
+                } else {
+                    Some(&x[idx(rr as usize, cc as usize)])
+                }
+            };
+            let halos = Halos::gather(nb(-1, 0), nb(1, 0), nb(0, -1), nb(0, 1));
+            out.push(engine.stencil_apply(&x[idx(r, c)], &halos, coeffs)?);
+        }
+    }
+    let _ = nz;
+    Ok(out)
+}
+
+/// Per-iteration Ethernet seam bytes for the stencil halo: `cols` core
+/// pairs each exchange one 16-element row per tile in both directions
+/// (the seam is an x-boundary, so it is the cheap N/S row exchange — 32B
+/// per tile at BF16).
+fn seam_halo_bytes(cols: usize, nz: usize, df: DataFormat) -> u64 {
+    2 * (cols as u64) * (nz as u64) * (16 * df.bytes()) as u64
+}
+
+/// Dual-die fused-BF16 PCG (values exact, timing = die-local + seam).
+pub fn solve_pcg_dualdie(
+    rows: usize,
+    cols: usize,
+    tiles: usize,
+    b: &DualVector,
+    engine: &dyn ComputeEngine,
+    cost: &CostModel,
+    opts: &DualDieOptions,
+) -> crate::Result<DualDieResult> {
+    let df = DataFormat::Bf16;
+    let unit = crate::arch::ComputeUnit::Fpu;
+    // Validate the per-die sub-grid + capacity with the single-die rules.
+    let per_die = Problem::new(rows, cols, tiles, df);
+    per_die.validate_capacity(true)?;
+    let _ = TensixGrid::new(rows, cols)?;
+
+    let n_blocks = 2 * rows * cols;
+    assert_eq!(b.len(), n_blocks, "one block per core across both dies");
+    let coeffs = StencilCoeffs::LAPLACIAN;
+
+    // --- per-iteration timing (die-local part mirrors run_stencil) ------
+    let stencil_cfg = StencilConfig {
+        df,
+        unit,
+        tiles_per_core: tiles,
+        variant: StencilVariant::FULL,
+        coeffs,
+    };
+    let local_ns = crate::timing::cycles_ns(local_tile_cycles(cost, unit, df) * tiles as u64);
+    // Die-local stencil timing: exactly the single-die simulation (the
+    // stencil's timing is data-independent, so run it once on zeros over a
+    // per-die grid — this includes the NoC halo schedule and the zero-fill
+    // costs at the outer boundary).
+    let die_grid = TensixGrid::new(rows, cols)?;
+    let zeros: Vec<CoreBlock> = (0..rows * cols).map(|_| CoreBlock::zeros(df, tiles)).collect();
+    let (_, die_timing) =
+        crate::kernels::stencil::run_stencil(&die_grid, &stencil_cfg, &zeros, engine, cost)?;
+    // Ethernet seam: halo bytes + one scalar combine + one broadcast per
+    // global reduction. The seam exchange overlaps the NoC halo phase, so
+    // the stencil takes whichever finishes later.
+    let seam_halo_ns = opts.eth.transfer_ns(seam_halo_bytes(cols, tiles, df));
+    let seam_scalar_ns = opts.eth.transfer_ns(32);
+    let spmv_ns = die_timing.iter_ns.max(local_ns + seam_halo_ns);
+
+    let dot_cfg = DotConfig {
+        method: DotMethod::ReduceThenSend,
+        pattern: RoutePattern::Naive,
+        df,
+        unit,
+        tiles_per_core: tiles,
+    };
+    let axpy_ns = block_op_ns(
+        cost,
+        unit,
+        df,
+        crate::timing::cost::TileOpKind::EltwiseBinary,
+        tiles,
+        crate::timing::cost::PipelineMode::Streamed,
+    );
+    let scale_ns = block_op_ns(
+        cost,
+        unit,
+        df,
+        crate::timing::cost::TileOpKind::EltwiseUnary,
+        tiles,
+        crate::timing::cost::PipelineMode::Streamed,
+    );
+
+    // --- the solve (values on the logical 2R×C grid) --------------------
+    let idx_all = |v: &DualVector| -> (Vec<CoreBlock>, Vec<CoreBlock>) {
+        (v[..rows * cols].to_vec(), v[rows * cols..].to_vec())
+    };
+    let inv_diag = 1.0 / coeffs.center;
+    let mut x: DualVector = (0..n_blocks).map(|_| CoreBlock::zeros(df, tiles)).collect();
+    let mut r: DualVector = b.to_vec();
+    let mut z: DualVector = r
+        .iter()
+        .map(|blk| engine.scale(blk, inv_diag))
+        .collect::<crate::Result<_>>()?;
+    let mut p = z.clone();
+
+    // Distributed dot across both dies: per-die reduce + Ethernet combine.
+    let dual_dot = |a: &DualVector,
+                    bb: &DualVector,
+                    engine: &dyn ComputeEngine,
+                    cost: &CostModel|
+     -> crate::Result<(f64, SimNs)> {
+        let (a0, a1) = idx_all(a);
+        let (b0, b1) = idx_all(bb);
+        let d0 = run_dot(rows, cols, &dot_cfg, &a0, &b0, engine, cost)?;
+        let d1 = run_dot(rows, cols, &dot_cfg, &a1, &b1, engine, cost)?;
+        // Dies reduce concurrently; then one scalar hop + one broadcast.
+        let t = d0.total_ns.max(d1.total_ns) + 2.0 * seam_scalar_ns;
+        Ok((d0.value as f64 + d1.value as f64, t))
+    };
+
+    let mut breakdown = Breakdown::new();
+    let mut now = 0.0f64;
+    let mut eth_total = 0.0f64;
+    // Same device-side phase gaps as the single-die fused kernel (§7.3).
+    let gap_ns = cost.calib.inter_kernel_gap_ns;
+    let mut delta = {
+        let (v, t) = dual_dot(&r, &z, engine, cost)?;
+        now += t;
+        v
+    };
+    let mut history = Vec::new();
+    let mut iters = 0;
+    let mut converged = false;
+    while iters < opts.max_iters {
+        iters += 1;
+        let q = dual_stencil_values(rows, cols, tiles, &p, engine, coeffs)?;
+        breakdown.add("spmv", spmv_ns);
+        now += spmv_ns + gap_ns;
+        eth_total += seam_halo_ns;
+
+        let (pq, t) = dual_dot(&p, &q, engine, cost)?;
+        breakdown.add("dot", t);
+        now += t + gap_ns;
+        eth_total += 2.0 * seam_scalar_ns;
+        if pq == 0.0 || !pq.is_finite() {
+            break;
+        }
+        let alpha = (delta / pq) as f32;
+        for (xi, pi) in x.iter_mut().zip(&p) {
+            engine.axpy_into(xi, alpha, pi)?;
+        }
+        breakdown.add("axpy", axpy_ns);
+        now += axpy_ns + gap_ns;
+        for (ri, qi) in r.iter_mut().zip(&q) {
+            engine.axpy_into(ri, -alpha, qi)?;
+        }
+        breakdown.add("axpy", axpy_ns);
+        now += axpy_ns + gap_ns;
+
+        let (rr, t) = dual_dot(&r, &r, engine, cost)?;
+        breakdown.add("norm", t);
+        now += t + gap_ns;
+        eth_total += 2.0 * seam_scalar_ns;
+        let rnorm = rr.max(0.0).sqrt();
+        history.push(rnorm);
+        if rnorm <= opts.tol_abs {
+            converged = true;
+            break;
+        }
+
+        z = r
+            .iter()
+            .map(|blk| engine.scale(blk, inv_diag))
+            .collect::<crate::Result<_>>()?;
+        breakdown.add("precond", scale_ns);
+        now += scale_ns + gap_ns;
+        let (dn, t) = dual_dot(&r, &z, engine, cost)?;
+        breakdown.add("dot", t);
+        now += t + gap_ns;
+        eth_total += 2.0 * seam_scalar_ns;
+        if delta == 0.0 {
+            break;
+        }
+        let beta = (dn / delta) as f32;
+        delta = dn;
+        for (pi, zi) in p.iter_mut().zip(&z) {
+            *pi = engine.axpy(zi, beta, pi)?;
+        }
+        breakdown.add("axpy", axpy_ns);
+        now += axpy_ns + gap_ns;
+    }
+
+    breakdown.iterations = iters as u64;
+    Ok(DualDieResult {
+        iters,
+        converged,
+        residual_history: history,
+        per_iter_ns: if iters > 0 { now / iters as f64 } else { 0.0 },
+        total_ns: now,
+        eth_ns_per_iter: if iters > 0 { eth_total / iters as f64 } else { 0.0 },
+        breakdown,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NativeEngine;
+    use crate::util::prng::Rng;
+
+    fn dual_random(rows: usize, cols: usize, tiles: usize, seed: u64) -> DualVector {
+        let mut rng = Rng::new(seed);
+        (0..2 * rows * cols)
+            .map(|_| CoreBlock::from_fn(DataFormat::Bf16, tiles, |_, _, _| rng.next_f32() - 0.5))
+            .collect()
+    }
+
+    #[test]
+    fn dual_die_pcg_reduces_residual() {
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let b = dual_random(2, 2, 3, 1);
+        let mut opts = DualDieOptions::default();
+        opts.max_iters = 40;
+        opts.tol_abs = 0.0;
+        let res = solve_pcg_dualdie(2, 2, 3, &b, &e, &cost, &opts).unwrap();
+        let first = res.residual_history[0];
+        let min = res.residual_history.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(min < 0.2 * first, "first {first} min {min}");
+        assert!(res.eth_ns_per_iter > 0.0);
+    }
+
+    #[test]
+    fn seam_values_match_single_logical_grid() {
+        // The dual-die stencil over a 2·2×2 logical grid must equal the
+        // single-grid stencil on a 4×2 TensixGrid (values don't care which
+        // wires carried the halos).
+        use crate::kernels::stencil::{run_stencil, StencilConfig, StencilVariant};
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let b = dual_random(2, 2, 3, 7);
+        let dual = dual_stencil_values(2, 2, 3, &b, &e, StencilCoeffs::LAPLACIAN).unwrap();
+
+        let grid = TensixGrid::new(4, 2).unwrap();
+        let cfg = StencilConfig {
+            df: DataFormat::Bf16,
+            unit: crate::arch::ComputeUnit::Fpu,
+            tiles_per_core: 3,
+            variant: StencilVariant::FULL,
+            coeffs: StencilCoeffs::LAPLACIAN,
+        };
+        let (single, _) = run_stencil(&grid, &cfg, &b, &e, &cost).unwrap();
+        assert_eq!(dual, single);
+    }
+
+    #[test]
+    fn ethernet_seam_is_visible_but_small() {
+        // §8 expectation: multi-device scaling is viable because the seam
+        // is a cheap N/S-row exchange; Ethernet latency must not dominate
+        // a 64-tile iteration.
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let b = dual_random(4, 4, 16, 9);
+        let mut opts = DualDieOptions::default();
+        opts.max_iters = 2;
+        opts.tol_abs = 0.0;
+        let res = solve_pcg_dualdie(4, 4, 16, &b, &e, &cost, &opts).unwrap();
+        assert!(res.eth_ns_per_iter > 0.0);
+        assert!(
+            res.eth_ns_per_iter < 0.2 * res.per_iter_ns,
+            "eth {} vs iter {}",
+            res.eth_ns_per_iter,
+            res.per_iter_ns
+        );
+    }
+
+    #[test]
+    fn capacity_still_enforced_per_die() {
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let b = dual_random(1, 1, 165, 1);
+        let opts = DualDieOptions::default();
+        assert!(solve_pcg_dualdie(1, 1, 165, &b, &e, &cost, &opts).is_err());
+    }
+}

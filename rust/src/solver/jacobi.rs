@@ -1,0 +1,68 @@
+//! The Jacobi preconditioner (§7): M = diag(A). For the hardcoded 7-point
+//! Laplacian the diagonal is the constant stencil center coefficient, so
+//! applying M⁻¹ is an element-wise scale by 1/6 — exactly how the paper's
+//! proof-of-concept implements lines 2/13 of Algorithm 1.
+
+use crate::engine::{ComputeEngine, CoreBlock, StencilCoeffs};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JacobiPreconditioner {
+    pub inv_diag: f32,
+}
+
+impl JacobiPreconditioner {
+    /// Build from the stencil coefficients: M = diag(A) = center.
+    pub fn from_coeffs(c: StencilCoeffs) -> crate::Result<Self> {
+        if c.center == 0.0 {
+            return Err(crate::SimError::BadProblem {
+                what: "Jacobi preconditioner needs a nonzero diagonal".to_string(),
+            });
+        }
+        Ok(Self {
+            inv_diag: 1.0 / c.center,
+        })
+    }
+
+    /// z = M⁻¹ r (per core).
+    pub fn apply(&self, engine: &dyn ComputeEngine, r: &CoreBlock) -> crate::Result<CoreBlock> {
+        engine.scale(r, self.inv_diag)
+    }
+
+    /// Identity preconditioner (plain CG) for ablations.
+    pub fn identity() -> Self {
+        Self { inv_diag: 1.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::DataFormat;
+    use crate::engine::NativeEngine;
+
+    #[test]
+    fn scales_by_inverse_diagonal() {
+        let p = JacobiPreconditioner::from_coeffs(StencilCoeffs::LAPLACIAN).unwrap();
+        assert!((p.inv_diag - 1.0 / 6.0).abs() < 1e-7);
+        let e = NativeEngine::new();
+        let r = CoreBlock::from_fn(DataFormat::Fp32, 2, |_, _, _| 12.0);
+        let z = p.apply(&e, &r).unwrap();
+        assert!((z.get(0, 0, 0) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_diagonal_rejected() {
+        let mut c = StencilCoeffs::LAPLACIAN;
+        c.center = 0.0;
+        assert!(JacobiPreconditioner::from_coeffs(c).is_err());
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let p = JacobiPreconditioner::identity();
+        let e = NativeEngine::new();
+        let r = CoreBlock::from_fn(DataFormat::Fp32, 1, |_, x, y| (x + y) as f32);
+        let z = p.apply(&e, &r).unwrap();
+        assert_eq!(z, r);
+    }
+}

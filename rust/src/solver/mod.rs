@@ -1,0 +1,18 @@
+//! The preconditioned conjugate-gradient solver (§7): the model problem,
+//! the Jacobi preconditioner, and the fused-BF16 / split-FP32 PCG drivers
+//! composed from the three numerical kernels.
+
+pub mod dualdie;
+pub mod jacobi;
+pub mod jacobi_iter;
+pub mod pcg;
+pub mod problem;
+
+pub use jacobi::JacobiPreconditioner;
+pub use jacobi_iter::{solve_jacobi, JacobiOptions, JacobiResult};
+pub use dualdie::{solve_pcg_dualdie, DualDieOptions, DualDieResult, EthLink};
+pub use pcg::{solve, PcgOptions, PcgResult, PcgVariant};
+pub use problem::{
+    apply_laplacian_global, dist_from_fn, dist_random, dist_to_global, dist_zeros, DistVector,
+    Problem,
+};

@@ -1,0 +1,402 @@
+//! Preconditioned conjugate gradient (Algorithm 1, §7) composed from the
+//! three kernels, in the paper's two implementations:
+//!
+//! - **Fused BF16/FPU** (§7.1): all operations and iterations live in a
+//!   single kernel; the residual norm is reduced and multicast on-device
+//!   every iteration and never leaves SRAM. One host launch total.
+//! - **Split FP32/SFPU** (§7.1): each component (SpMV, dots, axpys, norm,
+//!   preconditioner) is its own kernel launch; the residual norm goes back
+//!   to the host through DRAM every iteration.
+//!
+//! Following §3.3, convergence is checked on the **absolute** residual
+//! norm (the subnormal flush makes relative residuals unreliable).
+
+use crate::arch::{ComputeUnit, DataFormat};
+use crate::device::TensixGrid;
+use crate::engine::{ComputeEngine, StencilCoeffs};
+use crate::kernels::eltwise::block_op_ns;
+use crate::kernels::reduction::{run_dot, DotConfig, DotMethod};
+use crate::kernels::stencil::{run_stencil, StencilConfig, StencilVariant};
+use crate::noc::RoutePattern;
+use crate::profiler::{Breakdown, Profiler};
+use crate::solver::jacobi::JacobiPreconditioner;
+use crate::solver::problem::{dist_zeros, DistVector, Problem};
+use crate::timing::cost::{CostModel, PipelineMode, TileOpKind};
+use crate::timing::SimNs;
+use crate::ttm::{HostQueue, LaunchStats, Program};
+
+/// The paper's two PCG implementations (§7.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PcgVariant {
+    FusedBf16,
+    SplitFp32,
+}
+
+impl PcgVariant {
+    pub fn df(self) -> DataFormat {
+        match self {
+            PcgVariant::FusedBf16 => DataFormat::Bf16,
+            PcgVariant::SplitFp32 => DataFormat::Fp32,
+        }
+    }
+
+    pub fn unit(self) -> ComputeUnit {
+        match self {
+            PcgVariant::FusedBf16 => ComputeUnit::Fpu,
+            PcgVariant::SplitFp32 => ComputeUnit::Sfpu,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            PcgVariant::FusedBf16 => "Wormhole BF16 (fused, FPU)",
+            PcgVariant::SplitFp32 => "Wormhole FP32 (split, SFPU)",
+        }
+    }
+}
+
+impl std::str::FromStr for PcgVariant {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "bf16" | "fused" | "fused-bf16" => Ok(PcgVariant::FusedBf16),
+            "fp32" | "split" | "split-fp32" => Ok(PcgVariant::SplitFp32),
+            _ => Err(format!("unknown PCG variant '{s}' (expected bf16|fp32)")),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PcgOptions {
+    pub variant: PcgVariant,
+    pub max_iters: usize,
+    /// Absolute residual threshold (§3.3).
+    pub tol_abs: f64,
+    pub dot_method: DotMethod,
+    pub dot_pattern: RoutePattern,
+    /// Use the Jacobi preconditioner (§7); `false` = plain CG ablation.
+    pub precondition: bool,
+}
+
+impl PcgOptions {
+    pub fn new(variant: PcgVariant) -> Self {
+        Self {
+            variant,
+            max_iters: 100,
+            tol_abs: 1e-6,
+            dot_method: DotMethod::ReduceThenSend,
+            dot_pattern: RoutePattern::Naive,
+            precondition: true,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PcgResult {
+    pub x: DistVector,
+    pub iters: usize,
+    pub converged: bool,
+    pub residual_history: Vec<f64>,
+    /// Simulated wall time of the whole solve.
+    pub total_ns: SimNs,
+    pub per_iter_ns: SimNs,
+    /// Per-component device time (Fig 13).
+    pub breakdown: Breakdown,
+    pub launch: LaunchStats,
+}
+
+/// Solve `A x = b` (A = the 7-point Laplacian, zero Dirichlet) with PCG.
+pub fn solve(
+    grid: &TensixGrid,
+    problem: &Problem,
+    b: &DistVector,
+    engine: &dyn ComputeEngine,
+    cost: &CostModel,
+    opts: &PcgOptions,
+    profiler: &mut Profiler,
+) -> crate::Result<PcgResult> {
+    let fused = opts.variant == PcgVariant::FusedBf16;
+    problem.validate_capacity(fused)?;
+    if problem.df != opts.variant.df() {
+        return Err(crate::SimError::BadProblem {
+            what: format!(
+                "problem data format {} does not match variant {}",
+                problem.df,
+                opts.variant.label()
+            ),
+        });
+    }
+    let df = opts.variant.df();
+    let unit = opts.variant.unit();
+    let tiles = problem.tiles_per_core;
+    let calib = &cost.calib;
+    let mut queue = HostQueue::new(calib.clone());
+    let mut breakdown = Breakdown::new();
+    let mut now: SimNs = 0.0;
+
+    // Component timing helpers -------------------------------------------
+    let stencil_cfg = StencilConfig {
+        df,
+        unit,
+        tiles_per_core: tiles,
+        variant: StencilVariant::FULL,
+        coeffs: StencilCoeffs::LAPLACIAN,
+    };
+    let dot_cfg = DotConfig {
+        method: opts.dot_method,
+        pattern: opts.dot_pattern,
+        df,
+        unit,
+        tiles_per_core: tiles,
+    };
+    let axpy_ns = block_op_ns(cost, unit, df, TileOpKind::EltwiseBinary, tiles, PipelineMode::Streamed);
+    let scale_ns = block_op_ns(cost, unit, df, TileOpKind::EltwiseUnary, tiles, PipelineMode::Streamed);
+
+    // Split-kernel component boundary: host launch. Fused: device-side
+    // phase gap (§7.3 Tracy observation).
+    let programs: std::collections::BTreeMap<&str, Program> = ["spmv", "dot", "axpy", "norm", "precond"]
+        .iter()
+        .map(|n| (*n, Program::standard(n)))
+        .collect();
+    macro_rules! component {
+        ($name:expr, $ns:expr) => {{
+            let ns: SimNs = $ns;
+            if fused {
+                now = queue.kernel_gap(now);
+            } else {
+                now = queue.enqueue(&programs[$name], now)?;
+            }
+            profiler.record($name, "device", now, now + ns);
+            breakdown.add($name, ns);
+            now += ns;
+        }};
+    }
+
+    // ---- setup (x0 = 0 ⇒ r0 = b) ----------------------------------------
+    let precond = if opts.precondition {
+        JacobiPreconditioner::from_coeffs(StencilCoeffs::LAPLACIAN)?
+    } else {
+        JacobiPreconditioner::identity()
+    };
+    let mut x = dist_zeros(problem);
+    let mut r: DistVector = b.to_vec();
+    let apply_precond = |engine: &dyn ComputeEngine, r: &DistVector| -> crate::Result<DistVector> {
+        r.iter().map(|blk| precond.apply(engine, blk)).collect()
+    };
+    let mut z = apply_precond(engine, &r)?;
+    let mut p = z.clone();
+    // δ0 = r·z
+    let mut delta = run_dot(grid.rows, grid.cols, &dot_cfg, &r, &z, engine, cost)?.value as f64;
+
+    // Fused variant: one launch for the whole solve.
+    if fused {
+        now = queue.enqueue(&Program::standard("pcg_fused"), now)?;
+    }
+
+    let mut history = Vec::new();
+    let mut iters = 0;
+    let mut converged = false;
+    while iters < opts.max_iters {
+        iters += 1;
+        // q = A p (the stencil SpMV, §6).
+        let (q, spmv_t) = run_stencil(grid, &stencil_cfg, &p, engine, cost)?;
+        component!("spmv", spmv_t.iter_ns);
+
+        // α = δ / (p·q)
+        let pq = run_dot(grid.rows, grid.cols, &dot_cfg, &p, &q, engine, cost)?;
+        component!("dot", pq.total_ns);
+        let pq_v = pq.value as f64;
+        if pq_v == 0.0 || !pq_v.is_finite() {
+            break; // breakdown (numerically singular at this precision)
+        }
+        let alpha = (delta / pq_v) as f32;
+
+        // x += α p ; r -= α q
+        for (xi, pi) in x.iter_mut().zip(&p) {
+            engine.axpy_into(xi, alpha, pi)?;
+        }
+        component!("axpy", axpy_ns);
+        for (ri, qi) in r.iter_mut().zip(&q) {
+            engine.axpy_into(ri, -alpha, qi)?;
+        }
+        component!("axpy", axpy_ns);
+
+        // ||r||₂ (absolute, §3.3).
+        let rr = run_dot(grid.rows, grid.cols, &dot_cfg, &r, &r, engine, cost)?;
+        component!("norm", rr.total_ns);
+        let rnorm = (rr.value.max(0.0) as f64).sqrt();
+        history.push(rnorm);
+        if !fused {
+            now = queue.residual_readback(now);
+        }
+        if rnorm <= opts.tol_abs {
+            converged = true;
+            break;
+        }
+
+        // z = M⁻¹ r
+        z = apply_precond(engine, &r)?;
+        component!("precond", scale_ns);
+
+        // δ' = r·z ; β = δ'/δ
+        let rz = run_dot(grid.rows, grid.cols, &dot_cfg, &r, &z, engine, cost)?;
+        component!("dot", rz.total_ns);
+        let delta_new = rz.value as f64;
+        if delta == 0.0 || !delta_new.is_finite() {
+            break;
+        }
+        let beta = (delta_new / delta) as f32;
+        delta = delta_new;
+
+        // p = z + β p
+        for (pi, zi) in p.iter_mut().zip(&z) {
+            *pi = engine.axpy(zi, beta, pi)?;
+        }
+        component!("axpy", axpy_ns);
+    }
+
+    breakdown.iterations = iters as u64;
+    Ok(PcgResult {
+        x,
+        iters,
+        converged,
+        residual_history: history,
+        total_ns: now,
+        per_iter_ns: if iters > 0 { now / iters as f64 } else { 0.0 },
+        breakdown,
+        launch: queue.stats.clone(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NativeEngine;
+    use crate::solver::problem::{apply_laplacian_global, dist_random, dist_to_global};
+
+    fn residual_vs_truth(p: &Problem, x: &DistVector, b: &DistVector) -> f64 {
+        let xg = dist_to_global(p, x);
+        let bg = dist_to_global(p, b);
+        let ax = apply_laplacian_global(p, &xg);
+        ax.iter()
+            .zip(&bg)
+            .map(|(a, &bb)| (a - bb as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    #[test]
+    fn fp32_pcg_converges_on_small_problem() {
+        let p = Problem::new(2, 2, 4, DataFormat::Fp32);
+        let grid = p.make_grid().unwrap();
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let b = dist_random(&p, 7);
+        let mut opts = PcgOptions::new(PcgVariant::SplitFp32);
+        opts.max_iters = 400;
+        opts.tol_abs = 1e-3;
+        let mut prof = Profiler::disabled();
+        let res = solve(&grid, &p, &b, &e, &cost, &opts, &mut prof).unwrap();
+        assert!(res.converged, "residual history tail: {:?}", &res.residual_history.iter().rev().take(3).collect::<Vec<_>>());
+        // True residual (independent oracle) close to the reported one.
+        let true_r = residual_vs_truth(&p, &res.x, &b);
+        assert!(true_r < 5e-3, "true residual {true_r}");
+        // Residual history is (mostly) decreasing.
+        let first = res.residual_history[0];
+        let last = *res.residual_history.last().unwrap();
+        assert!(last < 1e-2 * first);
+    }
+
+    #[test]
+    fn bf16_pcg_reduces_residual() {
+        // BF16 stalls well above FP32 accuracy but must make progress.
+        let p = Problem::new(2, 2, 4, DataFormat::Bf16);
+        let grid = p.make_grid().unwrap();
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let b = dist_random(&p, 8);
+        let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
+        opts.max_iters = 60;
+        opts.tol_abs = 0.0; // run all iterations
+        let mut prof = Profiler::disabled();
+        let res = solve(&grid, &p, &b, &e, &cost, &opts, &mut prof).unwrap();
+        let first = res.residual_history[0];
+        let min = res
+            .residual_history
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            min < 0.15 * first,
+            "BF16 PCG should reduce the residual substantially: first {first}, min {min}"
+        );
+    }
+
+    #[test]
+    fn split_charges_launches_fused_does_not() {
+        let pb = Problem::new(2, 2, 4, DataFormat::Bf16);
+        let ps = Problem::new(2, 2, 4, DataFormat::Fp32);
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let mut prof = Profiler::disabled();
+
+        let mut o_f = PcgOptions::new(PcgVariant::FusedBf16);
+        o_f.max_iters = 5;
+        o_f.tol_abs = 0.0;
+        let rf = solve(&pb.make_grid().unwrap(), &pb, &dist_random(&pb, 1), &e, &cost, &o_f, &mut prof).unwrap();
+        // One launch for the whole fused solve.
+        assert_eq!(rf.launch.launches, 1);
+        assert!(rf.launch.gap_ns > 0.0);
+
+        let mut o_s = PcgOptions::new(PcgVariant::SplitFp32);
+        o_s.max_iters = 5;
+        o_s.tol_abs = 0.0;
+        let rs = solve(&ps.make_grid().unwrap(), &ps, &dist_random(&ps, 1), &e, &cost, &o_s, &mut prof).unwrap();
+        // 8 component launches per iteration.
+        assert_eq!(rs.launch.launches, 8 * 5);
+    }
+
+    #[test]
+    fn variant_format_mismatch_rejected() {
+        let p = Problem::new(1, 1, 2, DataFormat::Fp32);
+        let grid = p.make_grid().unwrap();
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let opts = PcgOptions::new(PcgVariant::FusedBf16);
+        let b = dist_random(&p, 1);
+        let mut prof = Profiler::disabled();
+        assert!(solve(&grid, &p, &b, &e, &cost, &opts, &mut prof).is_err());
+    }
+
+    #[test]
+    fn capacity_enforced_for_variant() {
+        // 100 tiles FP32 split exceeds the 64-tile §7.2 ceiling.
+        let p = Problem::new(1, 1, 100, DataFormat::Fp32);
+        let grid = p.make_grid().unwrap();
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let opts = PcgOptions::new(PcgVariant::SplitFp32);
+        let b = dist_random(&p, 1);
+        let mut prof = Profiler::disabled();
+        assert!(solve(&grid, &p, &b, &e, &cost, &opts, &mut prof).is_err());
+    }
+
+    #[test]
+    fn breakdown_components_recorded() {
+        let p = Problem::new(2, 2, 4, DataFormat::Bf16);
+        let grid = p.make_grid().unwrap();
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
+        opts.max_iters = 3;
+        opts.tol_abs = 0.0;
+        let mut prof = Profiler::new();
+        let res = solve(&grid, &p, &dist_random(&p, 2), &e, &cost, &opts, &mut prof).unwrap();
+        for c in ["spmv", "dot", "axpy", "norm", "precond"] {
+            assert!(res.breakdown.per_iter(c) > 0.0, "component {c} missing");
+        }
+        // SpMV is the computationally heavy component (§7.3).
+        assert!(res.breakdown.per_iter("spmv") > res.breakdown.per_iter("axpy"));
+        assert!(!prof.zones().is_empty());
+    }
+}

@@ -1,0 +1,219 @@
+//! The model problem (§7): a 7-point finite-difference Laplacian on a 3D
+//! structured grid with zero Dirichlet boundary conditions, distributed
+//! over the Tensix grid per §6.1.
+//!
+//! Grid ↔ core mapping: the global `Nx × Ny × Nz` domain satisfies
+//! `Nx = 64 × grid_rows`, `Ny = 16 × grid_cols`, `Nz = tiles_per_core`
+//! (each core holds a column of `Nz` 64×16 tiles). The paper's Table-3
+//! problem (512×112×64 on 8×7 cores with 64 tiles/core) is exactly this
+//! mapping. Vectors are indexed `x[i + Nx*(j + Ny*k)]` (§7, Eq. 1).
+
+use crate::arch::constants::{
+    PCG_VECTORS_FUSED, PCG_VECTORS_SPLIT, SRAM_RESERVE_FUSED, SRAM_RESERVE_SPLIT, TILE_STENCIL,
+};
+use crate::arch::DataFormat;
+use crate::device::{Sram, TensixGrid};
+use crate::engine::CoreBlock;
+use crate::error::{Result, SimError};
+use crate::util::prng::Rng;
+
+/// Problem description.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Problem {
+    pub grid_rows: usize,
+    pub grid_cols: usize,
+    pub tiles_per_core: usize,
+    pub df: DataFormat,
+}
+
+impl Problem {
+    pub fn new(grid_rows: usize, grid_cols: usize, tiles_per_core: usize, df: DataFormat) -> Self {
+        Self {
+            grid_rows,
+            grid_cols,
+            tiles_per_core,
+            df,
+        }
+    }
+
+    /// Global domain extents (Nx, Ny, Nz).
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (
+            TILE_STENCIL.0 * self.grid_rows,
+            TILE_STENCIL.1 * self.grid_cols,
+            self.tiles_per_core,
+        )
+    }
+
+    pub fn n_cores(&self) -> usize {
+        self.grid_rows * self.grid_cols
+    }
+
+    pub fn elems(&self) -> usize {
+        let (nx, ny, nz) = self.dims();
+        nx * ny * nz
+    }
+
+    /// Validate against the §7.2 SRAM capacity model for the PCG variant
+    /// that will run on it (`fused` = the BF16 fused-kernel layout).
+    pub fn validate_capacity(&self, fused: bool) -> Result<()> {
+        let sram = Sram::new("capacity-check");
+        let (reserve, vectors) = if fused {
+            (SRAM_RESERVE_FUSED, PCG_VECTORS_FUSED)
+        } else {
+            (SRAM_RESERVE_SPLIT, PCG_VECTORS_SPLIT)
+        };
+        let max = sram.max_tiles(reserve, vectors * self.df.tile_bytes());
+        if self.tiles_per_core > max {
+            return Err(SimError::BadProblem {
+                what: format!(
+                    "{} tiles/core exceeds the {max}-tile SRAM ceiling for {} {} PCG (§7.2)",
+                    self.tiles_per_core,
+                    self.df,
+                    if fused { "fused" } else { "split" }
+                ),
+            });
+        }
+        Ok(())
+    }
+
+    pub fn make_grid(&self) -> Result<TensixGrid> {
+        TensixGrid::new(self.grid_rows, self.grid_cols)
+    }
+
+    /// Global flat index (§7 Eq. 1).
+    pub fn global_index(&self, i: usize, j: usize, k: usize) -> usize {
+        let (nx, ny, _) = self.dims();
+        i + nx * (j + ny * k)
+    }
+}
+
+/// A vector distributed over the core grid: one [`CoreBlock`] per core, in
+/// the grid's row-major core order.
+pub type DistVector = Vec<CoreBlock>;
+
+/// Zero-filled distributed vector.
+pub fn dist_zeros(p: &Problem) -> DistVector {
+    (0..p.n_cores())
+        .map(|_| CoreBlock::zeros(p.df, p.tiles_per_core))
+        .collect()
+}
+
+/// Distributed vector from a global generator f(i, j, k).
+pub fn dist_from_fn(p: &Problem, mut f: impl FnMut(usize, usize, usize) -> f32) -> DistVector {
+    let mut out = Vec::with_capacity(p.n_cores());
+    for gr in 0..p.grid_rows {
+        for gc in 0..p.grid_cols {
+            out.push(CoreBlock::from_fn(p.df, p.tiles_per_core, |z, xr, yc| {
+                f(gr * 64 + xr, gc * 16 + yc, z)
+            }));
+        }
+    }
+    out
+}
+
+/// Deterministic random distributed vector in [-1, 1).
+pub fn dist_random(p: &Problem, seed: u64) -> DistVector {
+    let mut rng = Rng::new(seed);
+    // Generate through a global buffer so the values are independent of the
+    // distribution layout.
+    let (nx, ny, nz) = p.dims();
+    let global: Vec<f32> = (0..nx * ny * nz).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    dist_from_fn(p, |i, j, k| global[p.global_index(i, j, k)])
+}
+
+/// Gather to a global flat vector (Eq. 1 ordering).
+pub fn dist_to_global(p: &Problem, v: &DistVector) -> Vec<f32> {
+    let (nx, ny, nz) = p.dims();
+    let mut out = vec![0.0f32; nx * ny * nz];
+    for gr in 0..p.grid_rows {
+        for gc in 0..p.grid_cols {
+            let block = &v[gr * p.grid_cols + gc];
+            for z in 0..nz {
+                for xr in 0..64 {
+                    for yc in 0..16 {
+                        out[p.global_index(gr * 64 + xr, gc * 16 + yc, z)] =
+                            block.get(z, xr, yc);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Reference 7-point Laplacian on the global vector in f64 (zero Dirichlet):
+/// the §7 Eq.-2 operator, used as the correctness oracle.
+pub fn apply_laplacian_global(p: &Problem, x: &[f32]) -> Vec<f64> {
+    let (nx, ny, nz) = p.dims();
+    assert_eq!(x.len(), nx * ny * nz);
+    let at = |i: isize, j: isize, k: isize| -> f64 {
+        if i < 0 || j < 0 || k < 0 || i >= nx as isize || j >= ny as isize || k >= nz as isize {
+            0.0
+        } else {
+            x[p.global_index(i as usize, j as usize, k as usize)] as f64
+        }
+    };
+    let mut out = vec![0.0f64; x.len()];
+    for k in 0..nz as isize {
+        for j in 0..ny as isize {
+            for i in 0..nx as isize {
+                out[p.global_index(i as usize, j as usize, k as usize)] = 6.0 * at(i, j, k)
+                    - at(i - 1, j, k)
+                    - at(i + 1, j, k)
+                    - at(i, j - 1, k)
+                    - at(i, j + 1, k)
+                    - at(i, j, k - 1)
+                    - at(i, j, k + 1);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_problem_dimensions() {
+        // §7.2 / Table 3: 8×7 cores × 64 tiles = 512×112×64.
+        let p = Problem::new(8, 7, 64, DataFormat::Bf16);
+        assert_eq!(p.dims(), (512, 112, 64));
+        assert_eq!(p.elems(), 3_670_016);
+        assert_eq!(p.n_cores(), 56);
+    }
+
+    #[test]
+    fn capacity_validation_matches_paper() {
+        // 64 FP32 split fits; 65 does not. 164 BF16 fused fits; 165 not.
+        assert!(Problem::new(8, 7, 64, DataFormat::Fp32).validate_capacity(false).is_ok());
+        assert!(Problem::new(8, 7, 65, DataFormat::Fp32).validate_capacity(false).is_err());
+        assert!(Problem::new(8, 7, 164, DataFormat::Bf16).validate_capacity(true).is_ok());
+        assert!(Problem::new(8, 7, 165, DataFormat::Bf16).validate_capacity(true).is_err());
+    }
+
+    #[test]
+    fn dist_global_roundtrip() {
+        let p = Problem::new(2, 2, 3, DataFormat::Fp32);
+        let v = dist_random(&p, 42);
+        let g = dist_to_global(&p, &v);
+        let v2 = dist_from_fn(&p, |i, j, k| g[p.global_index(i, j, k)]);
+        assert_eq!(v, v2);
+        // Eq. 1: x-fastest ordering.
+        assert_eq!(p.global_index(1, 0, 0), 1);
+        assert_eq!(p.global_index(0, 1, 0), 128); // Nx = 128
+        assert_eq!(p.global_index(0, 0, 1), 128 * 32);
+    }
+
+    #[test]
+    fn laplacian_of_constant_is_boundary_only() {
+        let p = Problem::new(1, 1, 4, DataFormat::Fp32);
+        let x = vec![1.0f32; p.elems()];
+        let ax = apply_laplacian_global(&p, &x);
+        // Deep interior: 6 - 6 neighbors = 0.
+        assert_eq!(ax[p.global_index(30, 8, 2)], 0.0);
+        // Corner: 6 - 3 interior neighbors = 3.
+        assert_eq!(ax[p.global_index(0, 0, 0)], 3.0);
+    }
+}

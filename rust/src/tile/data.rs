@@ -1,0 +1,124 @@
+//! Tile storage. Values are held as f32; when the tile's [`DataFormat`] is
+//! BF16, every value is maintained exactly-representable in bf16 by the
+//! tile operations (which round through the [`crate::arch::bf16`] datapath).
+
+use crate::arch::bf16::bf16_round;
+use crate::arch::DataFormat;
+use crate::tile::layout::TileShape;
+
+/// A logical row-major tile of `shape.rows × shape.cols` values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tile {
+    pub shape: TileShape,
+    pub df: DataFormat,
+    pub data: Vec<f32>,
+}
+
+impl Tile {
+    pub fn zeros(shape: TileShape, df: DataFormat) -> Tile {
+        shape.validate();
+        Tile {
+            shape,
+            df,
+            data: vec![0.0; shape.elems()],
+        }
+    }
+
+    pub fn from_vec(shape: TileShape, df: DataFormat, mut data: Vec<f32>) -> Tile {
+        shape.validate();
+        assert_eq!(data.len(), shape.elems(), "tile data length mismatch");
+        if df == DataFormat::Bf16 {
+            for v in data.iter_mut() {
+                *v = bf16_round(*v);
+            }
+        }
+        Tile { shape, df, data }
+    }
+
+    /// Fill from a generator over logical (row, col).
+    pub fn from_fn(shape: TileShape, df: DataFormat, mut f: impl FnMut(usize, usize) -> f32) -> Tile {
+        let mut data = Vec::with_capacity(shape.elems());
+        for r in 0..shape.rows {
+            for c in 0..shape.cols {
+                data.push(f(r, c));
+            }
+        }
+        Tile::from_vec(shape, df, data)
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.shape.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        let v = if self.df == DataFormat::Bf16 { bf16_round(v) } else { v };
+        self.data[r * self.shape.cols + c] = v;
+    }
+
+    /// One logical row as a slice.
+    pub fn row(&self, r: usize) -> &[f32] {
+        let c = self.shape.cols;
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    /// One logical column, copied out.
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.shape.rows).map(|r| self.get(r, c)).collect()
+    }
+
+    /// Total bytes this tile occupies in SRAM/DRAM at its data format.
+    pub fn bytes(&self) -> usize {
+        self.shape.elems() * self.df.bytes()
+    }
+
+    /// Round every element through the tile's data format (no-op for FP32).
+    pub fn requantize(&mut self) {
+        if self.df == DataFormat::Bf16 {
+            for v in self.data.iter_mut() {
+                *v = bf16_round(*v);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let t = Tile::from_fn(TileShape::STENCIL, DataFormat::Fp32, |r, c| {
+            (r * 100 + c) as f32
+        });
+        assert_eq!(t.get(0, 0), 0.0);
+        assert_eq!(t.get(3, 7), 307.0);
+        assert_eq!(t.row(2)[5], 205.0);
+        assert_eq!(t.col(1)[4], 401.0);
+        assert_eq!(t.bytes(), 4096);
+    }
+
+    #[test]
+    fn bf16_tiles_quantize_on_construction() {
+        let t = Tile::from_vec(TileShape::STENCIL, DataFormat::Bf16, vec![257.0; 1024]);
+        assert_eq!(t.get(0, 0), 256.0); // 257 not representable in bf16
+        assert_eq!(t.bytes(), 2048);
+    }
+
+    #[test]
+    fn bf16_set_quantizes() {
+        let mut t = Tile::zeros(TileShape::SQUARE, DataFormat::Bf16);
+        t.set(1, 1, 513.0);
+        assert_eq!(t.get(1, 1), 512.0);
+        let mut t32 = Tile::zeros(TileShape::SQUARE, DataFormat::Fp32);
+        t32.set(1, 1, 513.0);
+        assert_eq!(t32.get(1, 1), 513.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_length_panics() {
+        let _ = Tile::from_vec(TileShape::SQUARE, DataFormat::Fp32, vec![0.0; 10]);
+    }
+}

@@ -1,0 +1,151 @@
+//! Tile shapes and the logical↔physical index mapping (paper §3.1, Fig 2).
+//!
+//! Tiles are 1024 elements, logically row-major. Physically they are stored
+//! as 16×16 subtiles ("faces"), themselves row-major, interleaved in face
+//! row-major order. For the 32×32 tile this is the Fig-2 interleaving; for
+//! the 64×16 stencil tile the face grid is 4×1, which makes the physical
+//! layout coincide with plain row-major — each 16-element row is one
+//! contiguous 32B (BF16) unit, the property §6.2 exploits for pointer-shift
+//! construction of N/S stencil tiles.
+
+use crate::arch::constants::{FACE, TILE_ELEMS};
+
+/// Shape of a tile in logical (rows, cols).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TileShape {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl TileShape {
+    pub const SQUARE: TileShape = TileShape { rows: 32, cols: 32 };
+    pub const STENCIL: TileShape = TileShape { rows: 64, cols: 16 };
+
+    pub const fn elems(self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Face grid dimensions (frows, fcols).
+    pub const fn face_grid(self) -> (usize, usize) {
+        (self.rows / FACE, self.cols / FACE)
+    }
+
+    pub fn validate(self) {
+        assert_eq!(self.elems(), TILE_ELEMS, "tiles are 1024 elements");
+        assert_eq!(self.rows % FACE, 0, "rows must be a multiple of 16");
+        assert_eq!(self.cols % FACE, 0, "cols must be a multiple of 16");
+    }
+
+    /// Map logical (r, c) to the physical element offset under face
+    /// interleaving.
+    pub fn phys_index(self, r: usize, c: usize) -> usize {
+        debug_assert!(r < self.rows && c < self.cols);
+        let (_, fcols) = self.face_grid();
+        let (fr, fc) = (r / FACE, c / FACE);
+        let face_idx = fr * fcols + fc;
+        let (ir, ic) = (r % FACE, c % FACE);
+        face_idx * FACE * FACE + ir * FACE + ic
+    }
+
+    /// Inverse of [`phys_index`].
+    pub fn logical_index(self, phys: usize) -> (usize, usize) {
+        debug_assert!(phys < self.elems());
+        let (_, fcols) = self.face_grid();
+        let face_idx = phys / (FACE * FACE);
+        let within = phys % (FACE * FACE);
+        let (fr, fc) = (face_idx / fcols, face_idx % fcols);
+        let (ir, ic) = (within / FACE, within % FACE);
+        (fr * FACE + ir, fc * FACE + ic)
+    }
+
+    /// True when the physical layout is identical to logical row-major —
+    /// the 64×16 property motivating the paper's stencil tile choice.
+    pub fn phys_is_row_major(self) -> bool {
+        self.cols == FACE
+    }
+}
+
+/// Reorder a logical row-major buffer into physical (face-interleaved) order.
+pub fn to_physical(shape: TileShape, logical: &[f32]) -> Vec<f32> {
+    shape.validate();
+    assert_eq!(logical.len(), shape.elems());
+    let mut phys = vec![0.0f32; shape.elems()];
+    for r in 0..shape.rows {
+        for c in 0..shape.cols {
+            phys[shape.phys_index(r, c)] = logical[r * shape.cols + c];
+        }
+    }
+    phys
+}
+
+/// Reorder a physical buffer back to logical row-major order.
+pub fn to_logical(shape: TileShape, phys: &[f32]) -> Vec<f32> {
+    shape.validate();
+    assert_eq!(phys.len(), shape.elems());
+    let mut logical = vec![0.0f32; shape.elems()];
+    for r in 0..shape.rows {
+        for c in 0..shape.cols {
+            logical[r * shape.cols + c] = phys[shape.phys_index(r, c)];
+        }
+    }
+    logical
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_validate() {
+        TileShape::SQUARE.validate();
+        TileShape::STENCIL.validate();
+        assert_eq!(TileShape::SQUARE.face_grid(), (2, 2));
+        assert_eq!(TileShape::STENCIL.face_grid(), (4, 1));
+    }
+
+    #[test]
+    fn fig2_interleaving_square_tile() {
+        // Fig 2: for a 32×32 tile, element (0,16) (start of the top-right
+        // face) lands at physical offset 256 — after the whole first face.
+        let s = TileShape::SQUARE;
+        assert_eq!(s.phys_index(0, 0), 0);
+        assert_eq!(s.phys_index(0, 15), 15);
+        assert_eq!(s.phys_index(0, 16), 256);
+        assert_eq!(s.phys_index(1, 0), 16);
+        assert_eq!(s.phys_index(16, 0), 512);
+        assert_eq!(s.phys_index(16, 16), 768);
+        assert_eq!(s.phys_index(31, 31), 1023);
+    }
+
+    #[test]
+    fn stencil_tile_is_physically_row_major() {
+        // §6.2: the 64×16 choice makes rows contiguous 32B units.
+        let s = TileShape::STENCIL;
+        assert!(s.phys_is_row_major());
+        assert!(!TileShape::SQUARE.phys_is_row_major());
+        for r in 0..s.rows {
+            for c in 0..s.cols {
+                assert_eq!(s.phys_index(r, c), r * s.cols + c);
+            }
+        }
+    }
+
+    #[test]
+    fn phys_logical_roundtrip() {
+        for shape in [TileShape::SQUARE, TileShape::STENCIL] {
+            for phys in 0..shape.elems() {
+                let (r, c) = shape.logical_index(phys);
+                assert_eq!(shape.phys_index(r, c), phys);
+            }
+        }
+    }
+
+    #[test]
+    fn buffer_reorder_roundtrip() {
+        let shape = TileShape::SQUARE;
+        let logical: Vec<f32> = (0..1024).map(|i| i as f32).collect();
+        let phys = to_physical(shape, &logical);
+        assert_ne!(phys, logical); // square tile really interleaves
+        assert_eq!(to_logical(shape, &phys), logical);
+    }
+}

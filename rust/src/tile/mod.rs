@@ -1,0 +1,12 @@
+//! The tile abstraction — the central tt-metal data structure (§3.1):
+//! logical/physical layouts, compute ops, and stencil shift construction.
+
+pub mod data;
+pub mod layout;
+pub mod ops;
+pub mod shift;
+
+pub use data::Tile;
+pub use layout::TileShape;
+pub use ops::EltwiseOp;
+pub use shift::ShiftDir;

@@ -1,0 +1,260 @@
+//! Tile-granularity compute operations as executed by the Tensix compute
+//! units: element-wise arithmetic, scaling, reductions, and the face-wise
+//! transpose (§3.3, §6.3). These are the *value* semantics; cycle costs are
+//! charged separately by [`crate::timing::cost`].
+
+use crate::arch::bf16::bf16_round;
+use crate::arch::constants::FACE;
+use crate::arch::DataFormat;
+use crate::tile::data::Tile;
+
+/// Element-wise binary operations supported by both compute units (§4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EltwiseOp {
+    Add,
+    Sub,
+    Mul,
+}
+
+impl EltwiseOp {
+    #[inline]
+    pub fn apply(self, a: f32, b: f32) -> f32 {
+        match self {
+            EltwiseOp::Add => a + b,
+            EltwiseOp::Sub => a - b,
+            EltwiseOp::Mul => a * b,
+        }
+    }
+}
+
+fn quant(df: DataFormat, v: f32) -> f32 {
+    match df {
+        DataFormat::Bf16 => bf16_round(v),
+        _ => crate::arch::bf16::ftz_f32(v),
+    }
+}
+
+/// §Perf optimization 4: monomorphized per-element quantization so the
+/// format dispatch is hoisted out of the element loops (these run ~10^7
+/// elements per simulated PCG iteration at the Table-3 size).
+#[inline(always)]
+fn q<const BF16: bool>(v: f32) -> f32 {
+    if BF16 {
+        bf16_round(v)
+    } else {
+        crate::arch::bf16::ftz_f32(v)
+    }
+}
+
+fn map2<const BF16: bool>(a: &[f32], b: &[f32], f: impl Fn(f32, f32) -> f32) -> Vec<f32> {
+    a.iter().zip(b).map(|(&x, &y)| q::<BF16>(f(x, y))).collect()
+}
+
+macro_rules! by_format {
+    ($df:expr, $mono:ident, $($args:expr),*) => {
+        match $df {
+            DataFormat::Bf16 => $mono::<true>($($args),*),
+            _ => $mono::<false>($($args),*),
+        }
+    };
+}
+
+/// c = a `op` b, rounding through the output tile's data format.
+pub fn eltwise(op: EltwiseOp, a: &Tile, b: &Tile) -> Tile {
+    assert_eq!(a.shape, b.shape, "eltwise shape mismatch");
+    assert_eq!(a.df, b.df, "eltwise format mismatch");
+    let data = by_format!(a.df, map2, &a.data, &b.data, |x, y| op.apply(x, y));
+    Tile {
+        shape: a.shape,
+        df: a.df,
+        data,
+    }
+}
+
+fn scale_impl<const BF16: bool>(a: &[f32], alpha: f32) -> Vec<f32> {
+    a.iter().map(|&x| q::<BF16>(alpha * x)).collect()
+}
+
+/// out = alpha * a (scalar scale; used for stencil coefficients and the
+/// Jacobi preconditioner's 1/diag scaling).
+pub fn scale(a: &Tile, alpha: f32) -> Tile {
+    let data = by_format!(a.df, scale_impl, &a.data, alpha);
+    Tile {
+        shape: a.shape,
+        df: a.df,
+        data,
+    }
+}
+
+/// out = a + alpha * b (fused axpy-style update at tile granularity).
+pub fn axpy(a: &Tile, alpha: f32, b: &Tile) -> Tile {
+    assert_eq!(a.shape, b.shape);
+    assert_eq!(a.df, b.df);
+    let data = by_format!(a.df, map2, &a.data, &b.data, |x, y| x + alpha * y);
+    Tile {
+        shape: a.shape,
+        df: a.df,
+        data,
+    }
+}
+
+fn axpy_into_impl<const BF16: bool>(a: &mut [f32], alpha: f32, b: &[f32]) {
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x = q::<BF16>(*x + alpha * y);
+    }
+}
+
+/// a ← a + alpha * b in place (same rounding as [`axpy`], no allocation).
+pub fn axpy_into(a: &mut Tile, alpha: f32, b: &Tile) {
+    assert_eq!(a.shape, b.shape);
+    assert_eq!(a.df, b.df);
+    by_format!(a.df, axpy_into_impl, &mut a.data, alpha, &b.data)
+}
+
+fn accumulate_impl<const BF16: bool>(dst: &mut [f32], src: &[f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = q::<BF16>(*d + s);
+    }
+}
+
+/// Accumulate `src` into `dst` in place (dst += src).
+pub fn accumulate(dst: &mut Tile, src: &Tile) {
+    assert_eq!(dst.shape, src.shape);
+    assert_eq!(dst.df, src.df);
+    by_format!(dst.df, accumulate_impl, &mut dst.data, &src.data)
+}
+
+/// Reduce a tile to the sum of its elements.
+///
+/// The *device* accumulates partial sums in the destination register at the
+/// operand precision; we model BF16 reductions as accumulating in FP32 and
+/// rounding the final value (the FPU reduction accumulates at ≥16-bit in
+/// Dst; exact accumulator width is not architecturally documented — see
+/// DESIGN.md §7). FP32 reductions accumulate in FP32.
+pub fn reduce_sum(a: &Tile) -> f32 {
+    let s: f32 = a.data.iter().sum();
+    quant(a.df, s)
+}
+
+fn dot_impl<const BF16: bool>(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        s += q::<BF16>(x * y);
+    }
+    q::<BF16>(s)
+}
+
+/// Dot-product partial: sum(a .* b) for one tile, with the element-wise
+/// multiply rounded at operand precision before accumulation (this is what
+/// the two-step mul-then-reduce device sequence produces).
+pub fn dot_partial(a: &Tile, b: &Tile) -> f32 {
+    assert_eq!(a.shape, b.shape);
+    assert_eq!(a.df, b.df);
+    by_format!(a.df, dot_impl, &a.data, &b.data)
+}
+
+/// Face-wise transpose (§6.3, Fig 10): the matrix unit transposes a tile as
+/// four independent 16×16 sub-matrices. For a 64×16 tile (4×1 face grid)
+/// each face transposes in place; the logical effect on the full tile is
+/// NOT a global transpose — boundary columns become 4 discontiguous rows.
+pub fn transpose_faces(a: &Tile) -> Tile {
+    let (frows, fcols) = a.shape.face_grid();
+    let mut out = Tile::zeros(a.shape, a.df);
+    for fr in 0..frows {
+        for fc in 0..fcols {
+            for i in 0..FACE {
+                for j in 0..FACE {
+                    let v = a.get(fr * FACE + i, fc * FACE + j);
+                    out.set(fr * FACE + j, fc * FACE + i, v);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tile::layout::TileShape;
+
+    fn t(f: impl Fn(usize, usize) -> f32) -> Tile {
+        Tile::from_fn(TileShape::STENCIL, DataFormat::Fp32, f)
+    }
+
+    #[test]
+    fn eltwise_ops() {
+        let a = t(|r, c| (r + c) as f32);
+        let b = t(|_, _| 2.0);
+        assert_eq!(eltwise(EltwiseOp::Add, &a, &b).get(3, 4), 9.0);
+        assert_eq!(eltwise(EltwiseOp::Sub, &a, &b).get(3, 4), 5.0);
+        assert_eq!(eltwise(EltwiseOp::Mul, &a, &b).get(3, 4), 14.0);
+    }
+
+    #[test]
+    fn scale_and_axpy() {
+        let a = t(|_, _| 3.0);
+        let b = t(|_, _| 4.0);
+        assert_eq!(scale(&a, -2.0).get(0, 0), -6.0);
+        assert_eq!(axpy(&a, 0.5, &b).get(0, 0), 5.0);
+        let mut acc = a.clone();
+        accumulate(&mut acc, &b);
+        assert_eq!(acc.get(5, 5), 7.0);
+    }
+
+    #[test]
+    fn bf16_eltwise_rounds() {
+        let a = Tile::from_vec(TileShape::STENCIL, DataFormat::Bf16, vec![256.0; 1024]);
+        let b = Tile::from_vec(TileShape::STENCIL, DataFormat::Bf16, vec![1.0; 1024]);
+        // 256 + 1 = 257 rounds to 256 in bf16.
+        assert_eq!(eltwise(EltwiseOp::Add, &a, &b).get(0, 0), 256.0);
+    }
+
+    #[test]
+    fn reductions() {
+        let a = t(|_, _| 1.0);
+        assert_eq!(reduce_sum(&a), 1024.0);
+        let b = t(|_, _| 2.0);
+        assert_eq!(dot_partial(&a, &b), 2048.0);
+    }
+
+    #[test]
+    fn transpose_faces_is_involution() {
+        let a = t(|r, c| (r * 31 + c * 7) as f32);
+        let tt = transpose_faces(&transpose_faces(&a));
+        assert_eq!(tt, a);
+    }
+
+    #[test]
+    fn transpose_breaks_column_into_face_rows() {
+        // §6.3/Fig 10: the West boundary column (col 0, 64 elements) maps to
+        // rows 0, 16, 32, 48 of the face-transposed tile.
+        let a = t(|r, c| if c == 0 { 1000.0 + r as f32 } else { 0.0 });
+        let tr = transpose_faces(&a);
+        for face in 0..4 {
+            for j in 0..FACE {
+                let orig_row = face * FACE + j;
+                assert_eq!(tr.get(face * FACE, j), 1000.0 + orig_row as f32);
+            }
+        }
+        // Everything outside those four rows is zero.
+        for r in 0..64 {
+            if r % FACE != 0 {
+                assert!(tr.row(r).iter().all(|&v| v == 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn square_tile_face_transpose_differs_from_global() {
+        let a = Tile::from_fn(TileShape::SQUARE, DataFormat::Fp32, |r, c| {
+            (r * 32 + c) as f32
+        });
+        let tr = transpose_faces(&a);
+        // Within the top-left face it matches a global transpose...
+        assert_eq!(tr.get(0, 1), a.get(1, 0));
+        // ...but element (0,16) stays in the top-right face (global
+        // transpose would move a.get(16,0) there).
+        assert_eq!(tr.get(0, 16), a.get(0, 16 + 0)); // face-local transpose of (0,16)→(0,16)
+    }
+}

@@ -1,0 +1,274 @@
+//! Shifted-tile construction for the stencil computation (§6.2, Figs 9–10).
+//!
+//! To add a neighbor component to the center tile, the device first builds
+//! a tile holding neighbor values at center positions:
+//!
+//! - **Row shifts** (N/S in the paper's figures; the ±x stencil direction in
+//!   our grid mapping) are produced by incrementing/decrementing a circular
+//!   buffer's read pointer by one 32B row and copying — possible because the
+//!   64×16 tile stores rows contiguously (see [`crate::tile::layout`]).
+//! - **Column shifts** (E/W; ±y) cannot be produced by pointer arithmetic;
+//!   they need transpose → row shift (+ 4 halo-row fills at face
+//!   boundaries) → transpose (§6.3, Fig 10).
+//!
+//! Two implementations are provided: the straightforward *logical* shifts,
+//! and [`shift_physical`], which reproduces the device's actual pointer /
+//! transpose pipeline step by step. A property test asserts they agree —
+//! that equivalence is exactly the §6.2–6.3 correctness argument.
+
+use crate::arch::constants::FACE;
+use crate::tile::data::Tile;
+use crate::tile::ops::transpose_faces;
+
+/// Which neighbor component a shifted tile represents. Directions follow
+/// the paper's Fig 9: `North` means "neighbor at row-1 aligned to center".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ShiftDir {
+    North,
+    South,
+    East,
+    West,
+}
+
+impl ShiftDir {
+    pub const ALL: [ShiftDir; 4] = [
+        ShiftDir::North,
+        ShiftDir::South,
+        ShiftDir::East,
+        ShiftDir::West,
+    ];
+
+    /// Row shifts are pointer-trick cheap; column shifts need transposes.
+    pub fn needs_transpose(self) -> bool {
+        matches!(self, ShiftDir::East | ShiftDir::West)
+    }
+}
+
+/// Construct the shifted tile for `dir` with `halo` supplying the boundary
+/// line (length = cols for N/S, rows for E/W). `halo = None` means zero
+/// fill (global Dirichlet boundary, §6.3).
+pub fn shift_logical(center: &Tile, dir: ShiftDir, halo: Option<&[f32]>) -> Tile {
+    let (rows, cols) = (center.shape.rows, center.shape.cols);
+    let mut out = Tile::zeros(center.shape, center.df);
+    match dir {
+        // out[r][c] = center[r-1][c]; row 0 from the north halo row.
+        ShiftDir::North => {
+            for r in 1..rows {
+                for c in 0..cols {
+                    out.set(r, c, center.get(r - 1, c));
+                }
+            }
+            fill_row(&mut out, 0, halo, cols);
+        }
+        // out[r][c] = center[r+1][c]; last row from the south halo row.
+        ShiftDir::South => {
+            for r in 0..rows - 1 {
+                for c in 0..cols {
+                    out.set(r, c, center.get(r + 1, c));
+                }
+            }
+            fill_row(&mut out, rows - 1, halo, cols);
+        }
+        // out[r][c] = center[r][c-1]; col 0 from the west halo column.
+        ShiftDir::West => {
+            for r in 0..rows {
+                for c in 1..cols {
+                    out.set(r, c, center.get(r, c - 1));
+                }
+            }
+            fill_col(&mut out, 0, halo, rows);
+        }
+        // out[r][c] = center[r][c+1]; last col from the east halo column.
+        ShiftDir::East => {
+            for r in 0..rows {
+                for c in 0..cols - 1 {
+                    out.set(r, c, center.get(r, c + 1));
+                }
+            }
+            fill_col(&mut out, cols - 1, halo, rows);
+        }
+    }
+    out
+}
+
+fn fill_row(t: &mut Tile, r: usize, halo: Option<&[f32]>, cols: usize) {
+    if let Some(h) = halo {
+        assert_eq!(h.len(), cols, "N/S halo must be one row");
+        for c in 0..cols {
+            t.set(r, c, h[c]);
+        }
+    }
+}
+
+fn fill_col(t: &mut Tile, c: usize, halo: Option<&[f32]>, rows: usize) {
+    if let Some(h) = halo {
+        assert_eq!(h.len(), rows, "E/W halo must be one column");
+        for r in 0..rows {
+            t.set(r, c, h[r]);
+        }
+    }
+}
+
+/// Shift a tile's rows by reading through a displaced pointer, exactly as
+/// the CB pointer-manipulation trick does (§6.2): `offset_rows = -1`
+/// reproduces "decrement the read pointer by one 32B row" (north),
+/// `+1` increments (south). Rows that fall outside the tile are the halo
+/// rows the NoC exchange must fill; they are returned as the indices in
+/// `missing` and zero-filled here.
+pub fn pointer_row_shift(center: &Tile, offset_rows: isize) -> (Tile, Vec<usize>) {
+    let rows = center.shape.rows as isize;
+    let cols = center.shape.cols;
+    let mut out = Tile::zeros(center.shape, center.df);
+    let mut missing = Vec::new();
+    for r in 0..rows {
+        let src = r + offset_rows;
+        if src < 0 || src >= rows {
+            missing.push(r as usize);
+            continue; // left zero; caller overwrites with halo
+        }
+        for c in 0..cols {
+            out.set(r as usize, c, center.get(src as usize, c));
+        }
+    }
+    (out, missing)
+}
+
+/// The device pipeline for an E/W shift (§6.3): face transpose → per-face
+/// row shift with 4 halo fills at face-boundary rows → face transpose back.
+/// `halo` is the full boundary column (len = rows) or `None` for zero fill.
+/// Returns the shifted tile plus the number of discontiguous halo segments
+/// (always 4 for a 64×16 tile — the cost model charges 4 NoC sends, §6.3).
+pub fn shift_physical_ew(center: &Tile, dir: ShiftDir, halo: Option<&[f32]>) -> (Tile, usize) {
+    assert!(dir.needs_transpose(), "use pointer_row_shift for N/S");
+    let rows = center.shape.rows;
+    let (frows, _) = center.shape.face_grid();
+
+    // Step 1: transpose each 16×16 face.
+    let tr = transpose_faces(center);
+
+    // Step 2: within each face, shift rows. An East shift of the original
+    // (out[r][c] = center[r][c+1]) becomes, per face, a row shift upward in
+    // the transposed domain; the vacated within-face row (15 for East, 0
+    // for West) is the halo segment for that face.
+    let mut shifted = Tile::zeros(tr.shape, tr.df);
+    let mut segments = 0usize;
+    for f in 0..frows {
+        let base = f * FACE;
+        for j in 0..FACE {
+            let src_j = match dir {
+                ShiftDir::East => j as isize + 1,
+                ShiftDir::West => j as isize - 1,
+                _ => unreachable!(),
+            };
+            if !(0..FACE as isize).contains(&src_j) {
+                // Halo fill: transposed row `base+j` holds, for face f,
+                // the boundary column entries center[base..base+16][halo_col]
+                // transposed — i.e. halo[base + i] at column i.
+                segments += 1;
+                if let Some(h) = halo {
+                    assert_eq!(h.len(), rows, "E/W halo must be one column");
+                    for i in 0..FACE {
+                        shifted.set(base + j, i, h[base + i]);
+                    }
+                }
+                continue;
+            }
+            for i in 0..FACE {
+                shifted.set(base + j, i, tr.get(base + src_j as usize, i));
+            }
+        }
+    }
+
+    // Step 3: transpose back.
+    (transpose_faces(&shifted), segments)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::DataFormat;
+    use crate::tile::layout::TileShape;
+    use crate::util::prng::Rng;
+
+    fn random_tile(seed: u64) -> Tile {
+        let mut rng = Rng::new(seed);
+        Tile::from_fn(TileShape::STENCIL, DataFormat::Fp32, |_, _| {
+            rng.next_f32() * 2.0 - 1.0
+        })
+    }
+
+    #[test]
+    fn north_south_shift_semantics() {
+        let t = Tile::from_fn(TileShape::STENCIL, DataFormat::Fp32, |r, c| {
+            (r * 16 + c) as f32
+        });
+        let halo: Vec<f32> = (0..16).map(|c| 9000.0 + c as f32).collect();
+        let n = shift_logical(&t, ShiftDir::North, Some(&halo));
+        assert_eq!(n.get(0, 3), 9003.0); // halo row
+        assert_eq!(n.get(5, 3), t.get(4, 3));
+        let s = shift_logical(&t, ShiftDir::South, Some(&halo));
+        assert_eq!(s.get(63, 3), 9003.0);
+        assert_eq!(s.get(5, 3), t.get(6, 3));
+    }
+
+    #[test]
+    fn east_west_shift_semantics() {
+        let t = Tile::from_fn(TileShape::STENCIL, DataFormat::Fp32, |r, c| {
+            (r * 16 + c) as f32
+        });
+        let halo: Vec<f32> = (0..64).map(|r| 5000.0 + r as f32).collect();
+        let e = shift_logical(&t, ShiftDir::East, Some(&halo));
+        assert_eq!(e.get(7, 15), 5007.0); // east boundary column
+        assert_eq!(e.get(7, 3), t.get(7, 4));
+        let w = shift_logical(&t, ShiftDir::West, Some(&halo));
+        assert_eq!(w.get(7, 0), 5007.0);
+        assert_eq!(w.get(7, 3), t.get(7, 2));
+    }
+
+    #[test]
+    fn zero_fill_boundary() {
+        let t = random_tile(1);
+        let n = shift_logical(&t, ShiftDir::North, None);
+        assert!(n.row(0).iter().all(|&v| v == 0.0));
+        let e = shift_logical(&t, ShiftDir::East, None);
+        assert!((0..64).all(|r| e.get(r, 15) == 0.0));
+    }
+
+    #[test]
+    fn pointer_shift_matches_logical_on_interior() {
+        let t = random_tile(2);
+        let (north, missing) = pointer_row_shift(&t, -1);
+        assert_eq!(missing, vec![0]);
+        let expect = shift_logical(&t, ShiftDir::North, None);
+        assert_eq!(north, expect);
+        let (south, missing) = pointer_row_shift(&t, 1);
+        assert_eq!(missing, vec![63]);
+        assert_eq!(south, shift_logical(&t, ShiftDir::South, None));
+    }
+
+    #[test]
+    fn physical_ew_pipeline_matches_logical() {
+        // The §6.3 transpose pipeline must produce exactly the logical
+        // column shift — this is the paper's correctness argument.
+        for seed in 0..8 {
+            let t = random_tile(seed);
+            let halo: Vec<f32> = (0..64).map(|r| (r as f32).sin()).collect();
+            for dir in [ShiftDir::East, ShiftDir::West] {
+                let (phys, segs) = shift_physical_ew(&t, dir, Some(&halo));
+                let logical = shift_logical(&t, dir, Some(&halo));
+                assert_eq!(phys, logical, "dir {dir:?} seed {seed}");
+                // §6.3: E/W halo is exchanged as 4 discontiguous segments.
+                assert_eq!(segs, 4);
+            }
+        }
+    }
+
+    #[test]
+    fn physical_ew_zero_fill_matches_logical() {
+        let t = random_tile(11);
+        for dir in [ShiftDir::East, ShiftDir::West] {
+            let (phys, _) = shift_physical_ew(&t, dir, None);
+            assert_eq!(phys, shift_logical(&t, dir, None));
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Calibration constants for the cycle cost model.
+//!
+//! Everything the paper pins down numerically lives in
+//! [`crate::arch::constants`]. The constants here are *tunables*: quantities
+//! the paper describes qualitatively (e.g. "the high latency load and store
+//! access of the baby RISC-V's to the L1", §6.3) but does not quantify.
+//! Each is documented with the paper statement that motivates it and the
+//! observable it was tuned against (see EXPERIMENTS.md §Calibration).
+//! They can be overridden at run time through `[calib]` entries in a config
+//! file for sensitivity studies (`wormsim figures --config ...`).
+
+/// Per-hop router latency of the NoC, cycles. The paper repeatedly observes
+/// the NoC is "incredibly low latency" (§5.1); Tenstorrent documents ~1
+/// cycle per hop plus link traversal — we use a small constant.
+pub const NOC_HOP_CYCLES: u64 = 9;
+
+/// NoC link bandwidth, bytes per cycle per link (Wormhole NoC moves 32B
+/// flits per cycle per direction).
+pub const NOC_LINK_BYTES_PER_CLK: u64 = 32;
+
+/// Software cost for a baby RISC-V NoC core to issue one asynchronous
+/// NoC transaction (address formation, command queue write). Motivated by
+/// §6.3's observation that RISC-V-driven L1 traffic is slow. Tuned against
+/// Fig 6 (center-vs-naive crossover at small tile counts).
+pub const NOC_ISSUE_CYCLES: u64 = 250;
+
+/// Cost for the receiving core to notice + account an arrived transfer
+/// (semaphore check on the data-movement core).
+pub const NOC_RECV_CYCLES: u64 = 80;
+
+/// Marginal issue cost for subsequent messages in a *batched* send
+/// sequence (the halo exchange issues one write per tile per direction
+/// back-to-back; address generation in a tight RISC-V loop is much cheaper
+/// than a cold transaction). Tuned so the Fig-11 halo cost stays well
+/// below local compute, as the paper observes (§6.3).
+pub const NOC_BATCH_ISSUE_CYCLES: u64 = 28;
+
+/// Per-element cycle cost for the baby RISC-V to zero-fill halo elements
+/// through L1 ("unexpectedly expensive due to the high latency load and
+/// store access of the baby RISC-V's to the L1", §6.3). Tuned against the
+/// Fig 11 1×1/2×2 anomaly.
+pub const ZERO_FILL_CYCLES_PER_ELEM: u64 = 18;
+
+/// Issue overhead charged per dependent tile operation in a compute kernel:
+/// CB reserve/push/wait/pop bookkeeping plus compute-core dispatch. This is
+/// the dominant non-arithmetic cost of the stencil's shift/transpose
+/// pipeline. Tuned against Table 3 (BF16 1.20 ms/iter).
+pub const TILE_OP_ISSUE_CYCLES: u64 = 760;
+
+/// Residual issue overhead for *streamed* (pipelined) element-wise
+/// operations where the three kernels overlap unpack/compute/pack across a
+/// long tile stream (§4's near-roofline FPU point requires this to be
+/// small).
+pub const STREAM_ISSUE_CYCLES: u64 = 12;
+
+/// Extra per-tile cycles for SFPU operations beyond the 32-lane arithmetic:
+/// moving data between Dst and the vector lanes and back ("further
+/// load-store operations", §4). Tuned so the SFPU eltwise point lands ~6×
+/// below the FPU point (Fig 3).
+pub const SFPU_LANE_LOADSTORE_CYCLES: u64 = 550;
+
+/// Host-side cost to launch one kernel on the device (enqueue, dispatch,
+/// start barrier), nanoseconds. Charged per kernel per iteration in the
+/// split-kernel PCG; once overall in the fused PCG. Tuned against the
+/// FP32/BF16 gap in Table 3.
+pub const KERNEL_LAUNCH_NS: f64 = 12_000.0;
+
+/// Cost to move the residual norm back to the host through DRAM + PCIe,
+/// nanoseconds per iteration (split-kernel PCG only; the fused variant
+/// keeps it in SRAM, §7.1).
+pub const RESIDUAL_READBACK_NS: f64 = 55_000.0;
+
+/// Per-iteration device-side synchronization gap observed between
+/// immediately-subsequent kernels in the paper's Tracy traces (§7.3:
+/// "substantial execution gaps ... between what should be
+/// immediately-subsequent kernels"). Charged once per kernel boundary on
+/// the device. Nanoseconds.
+pub const INTER_KERNEL_GAP_NS: f64 = 9_000.0;
+
+/// Cycles for a baby RISC-V to merge one incoming *scalar* partial into a
+/// local accumulator (§5.1 method 1 per-hop work).
+pub const SCALAR_MERGE_CYCLES: u64 = 60;
+
+/// Extra per-core cycles of routing logic for the center reduction pattern
+/// ("the increased complexity of the center routing pattern computation",
+/// §5.2 — it outweighs the benefit at the smallest problem sizes). Tuned
+/// against the Fig 6 crossover.
+pub const CENTER_ROUTE_OVERHEAD_CYCLES: u64 = 1000;
+
+/// DRAM round-trip: cycles of latency for the first access of a stream.
+pub const DRAM_LATENCY_CYCLES: u64 = 350;
+
+/// Fraction of peak DRAM bandwidth a single streaming reader achieves
+/// (GDDR6 efficiency; used by the Fig-3 DRAM-facing eltwise variants).
+pub const DRAM_BW_EFFICIENCY: f64 = 0.75;
+
+/// A mutable snapshot of the tunables, so experiments can run sensitivity
+/// sweeps without recompiling. `Calib::default()` is the calibrated set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Calib {
+    pub noc_hop_cycles: u64,
+    pub noc_link_bytes_per_clk: u64,
+    pub noc_issue_cycles: u64,
+    pub noc_recv_cycles: u64,
+    pub noc_batch_issue_cycles: u64,
+    pub zero_fill_cycles_per_elem: u64,
+    pub tile_op_issue_cycles: u64,
+    pub stream_issue_cycles: u64,
+    pub sfpu_lane_loadstore_cycles: u64,
+    pub scalar_merge_cycles: u64,
+    pub center_route_overhead_cycles: u64,
+    pub kernel_launch_ns: f64,
+    pub residual_readback_ns: f64,
+    pub inter_kernel_gap_ns: f64,
+    pub dram_latency_cycles: u64,
+    pub dram_bw_efficiency: f64,
+}
+
+impl Default for Calib {
+    fn default() -> Self {
+        Self {
+            noc_hop_cycles: NOC_HOP_CYCLES,
+            noc_link_bytes_per_clk: NOC_LINK_BYTES_PER_CLK,
+            noc_issue_cycles: NOC_ISSUE_CYCLES,
+            noc_recv_cycles: NOC_RECV_CYCLES,
+            noc_batch_issue_cycles: NOC_BATCH_ISSUE_CYCLES,
+            zero_fill_cycles_per_elem: ZERO_FILL_CYCLES_PER_ELEM,
+            tile_op_issue_cycles: TILE_OP_ISSUE_CYCLES,
+            stream_issue_cycles: STREAM_ISSUE_CYCLES,
+            sfpu_lane_loadstore_cycles: SFPU_LANE_LOADSTORE_CYCLES,
+            scalar_merge_cycles: SCALAR_MERGE_CYCLES,
+            center_route_overhead_cycles: CENTER_ROUTE_OVERHEAD_CYCLES,
+            kernel_launch_ns: KERNEL_LAUNCH_NS,
+            residual_readback_ns: RESIDUAL_READBACK_NS,
+            inter_kernel_gap_ns: INTER_KERNEL_GAP_NS,
+            dram_latency_cycles: DRAM_LATENCY_CYCLES,
+            dram_bw_efficiency: DRAM_BW_EFFICIENCY,
+        }
+    }
+}
+
+impl Calib {
+    /// Apply `[calib]` overrides from a mini-TOML document.
+    pub fn apply_overrides(&mut self, doc: &crate::util::tomlmini::Doc) {
+        let sec = "calib";
+        let get_u = |k: &str, tgt: &mut u64| {
+            if let Some(v) = doc.get_int(sec, k) {
+                *tgt = v as u64;
+            }
+        };
+        get_u("noc_hop_cycles", &mut self.noc_hop_cycles);
+        get_u("noc_link_bytes_per_clk", &mut self.noc_link_bytes_per_clk);
+        get_u("noc_issue_cycles", &mut self.noc_issue_cycles);
+        get_u("noc_recv_cycles", &mut self.noc_recv_cycles);
+        get_u("noc_batch_issue_cycles", &mut self.noc_batch_issue_cycles);
+        get_u("zero_fill_cycles_per_elem", &mut self.zero_fill_cycles_per_elem);
+        get_u("tile_op_issue_cycles", &mut self.tile_op_issue_cycles);
+        get_u("stream_issue_cycles", &mut self.stream_issue_cycles);
+        get_u(
+            "sfpu_lane_loadstore_cycles",
+            &mut self.sfpu_lane_loadstore_cycles,
+        );
+        get_u("scalar_merge_cycles", &mut self.scalar_merge_cycles);
+        get_u(
+            "center_route_overhead_cycles",
+            &mut self.center_route_overhead_cycles,
+        );
+        get_u("dram_latency_cycles", &mut self.dram_latency_cycles);
+        let get_f = |k: &str, tgt: &mut f64| {
+            if let Some(v) = doc.get_float(sec, k) {
+                *tgt = v;
+            }
+        };
+        get_f("kernel_launch_ns", &mut self.kernel_launch_ns);
+        get_f("residual_readback_ns", &mut self.residual_readback_ns);
+        get_f("inter_kernel_gap_ns", &mut self.inter_kernel_gap_ns);
+        get_f("dram_bw_efficiency", &mut self.dram_bw_efficiency);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tomlmini::Doc;
+
+    #[test]
+    fn default_matches_constants() {
+        let c = Calib::default();
+        assert_eq!(c.noc_hop_cycles, NOC_HOP_CYCLES);
+        assert_eq!(c.tile_op_issue_cycles, TILE_OP_ISSUE_CYCLES);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut c = Calib::default();
+        let doc = Doc::parse("[calib]\nnoc_hop_cycles = 3\nkernel_launch_ns = 5.5").unwrap();
+        c.apply_overrides(&doc);
+        assert_eq!(c.noc_hop_cycles, 3);
+        assert_eq!(c.kernel_launch_ns, 5.5);
+        // untouched fields keep defaults
+        assert_eq!(c.noc_issue_cycles, NOC_ISSUE_CYCLES);
+    }
+}

@@ -1,0 +1,335 @@
+//! Cycle cost model for Tensix operations (§3.3, §4).
+//!
+//! Costs are charged per *tile operation*. An operation's cycles combine:
+//!
+//! - unpack (SRAM → Src regs) at 64 B/clk per input tile,
+//! - compute on the FPU (128 eltwise elems/clk, 256 reduce elems/clk) or
+//!   SFPU (32/16 elems/clk for 16/32-bit) with its Dst-copy (32 B/clk) and
+//!   lane load/store surcharges,
+//! - pack (Dst → SRAM) at 64 B/clk,
+//! - a RISC-V issue overhead that depends on whether the op streams through
+//!   a long pipeline (amortized) or sits in a dependent sequence (exposed).
+//!
+//! The FPU eltwise point of the paper's Fig-3 roofline emerges from this
+//! model: 3 tiles moved at 64 B/clk dominates the 8-cycle compute, giving
+//! the 1-FLOP-per-6-bytes arithmetic intensity; the SFPU point adds the
+//! Dst copy and lane load/stores for ~1/16 FLOP per byte.
+
+use crate::arch::constants::*;
+use crate::arch::{ComputeUnit, DataFormat};
+use crate::timing::calib::Calib;
+
+/// What a tile operation does, for costing purposes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TileOpKind {
+    /// Element-wise binary op (add/sub/mul): 2 inputs, 1 output.
+    EltwiseBinary,
+    /// Element-wise unary (scale / scalar add / copy): 1 input, 1 output.
+    EltwiseUnary,
+    /// Reduce one tile to a scalar (row/col reduction tree on the FPU).
+    ReduceTile,
+    /// Face-wise transpose (matrix unit), 1 input, 1 output.
+    Transpose,
+    /// Copy through a displaced CB read pointer (§6.2): costed as a copy.
+    ShiftCopy,
+}
+
+impl TileOpKind {
+    pub const fn input_tiles(self) -> u64 {
+        match self {
+            TileOpKind::EltwiseBinary => 2,
+            _ => 1,
+        }
+    }
+
+    pub const fn output_tiles(self) -> u64 {
+        match self {
+            TileOpKind::ReduceTile => 0, // scalar result stays in Dst
+            _ => 1,
+        }
+    }
+
+    /// FLOPs per element, for roofline accounting.
+    pub const fn flops_per_elem(self) -> u64 {
+        match self {
+            TileOpKind::EltwiseBinary => 1,
+            TileOpKind::EltwiseUnary => 1,
+            TileOpKind::ReduceTile => 1,
+            TileOpKind::Transpose | TileOpKind::ShiftCopy => 0,
+        }
+    }
+}
+
+/// Whether issue overhead is amortized by pipelining.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineMode {
+    /// Long independent tile stream: unpack/compute/pack overlap across
+    /// tiles and the issue cost is the residual per-tile bookkeeping.
+    Streamed,
+    /// Dependent sequence (stencil shift/transpose chains): each op's
+    /// movement and issue are exposed.
+    Dependent,
+}
+
+/// Cycle cost model, parameterized by the calibration set.
+#[derive(Debug, Clone, Default)]
+pub struct CostModel {
+    pub calib: Calib,
+}
+
+impl CostModel {
+    pub fn new(calib: Calib) -> Self {
+        Self { calib }
+    }
+
+    /// Cycles to unpack one tile from SRAM into Src registers.
+    pub fn unpack_cycles(&self, df: DataFormat) -> u64 {
+        (df.tile_bytes() as u64).div_ceil(UNPACKER_BYTES_PER_CLK as u64)
+    }
+
+    /// Cycles to pack one tile from Dst back to SRAM.
+    pub fn pack_cycles(&self, df: DataFormat) -> u64 {
+        (df.tile_bytes() as u64).div_ceil(PACKER_BYTES_PER_CLK as u64)
+    }
+
+    /// Pure arithmetic cycles for one tile on a unit.
+    pub fn compute_cycles(&self, unit: ComputeUnit, df: DataFormat, kind: TileOpKind) -> u64 {
+        let n = TILE_ELEMS as u64;
+        match unit {
+            ComputeUnit::Fpu => {
+                assert!(
+                    df.fpu_capable(),
+                    "FPU restricted to <=19-bit formats (§3.3), got {df}"
+                );
+                match kind {
+                    TileOpKind::EltwiseBinary | TileOpKind::EltwiseUnary | TileOpKind::ShiftCopy => {
+                        n.div_ceil(FPU_ELTWISE_ELEMS_PER_CLK as u64)
+                    }
+                    TileOpKind::ReduceTile => n.div_ceil(FPU_REDUCE_ELEMS_PER_CLK as u64),
+                    // The matrix unit transposes 4 faces; same engine rate
+                    // as an eltwise pass.
+                    TileOpKind::Transpose => n.div_ceil(FPU_ELTWISE_ELEMS_PER_CLK as u64),
+                }
+            }
+            ComputeUnit::Sfpu => {
+                assert!(df.sfpu_capable(), "SFPU supports 16/32-bit formats, got {df}");
+                let per_clk = match df {
+                    DataFormat::Fp32 => SFPU_ELEMS_PER_CLK_32B,
+                    _ => SFPU_ELEMS_PER_CLK_16B,
+                } as u64;
+                let arith = match kind {
+                    // Reductions on the SFPU need a log-depth shuffle
+                    // sequence; "a more expensive sequence of operations"
+                    // (§5). Model as 3 passes.
+                    TileOpKind::ReduceTile => 3 * n.div_ceil(per_clk),
+                    // The tile transpose is a matrix-unit primitive (§6.3)
+                    // limited to ≤19-bit formats; at FP32 it must be
+                    // emulated through the vector lanes — 2 passes.
+                    TileOpKind::Transpose => 2 * n.div_ceil(per_clk),
+                    _ => n.div_ceil(per_clk),
+                };
+                // Dst copy (32 B/clk) + lane load/store surcharge (§4).
+                let dst_copy = (df.tile_bytes() as u64).div_ceil(DST_COPY_BYTES_PER_CLK as u64);
+                arith + dst_copy + self.calib.sfpu_lane_loadstore_cycles
+            }
+        }
+    }
+
+    /// Full cost of one tile operation.
+    pub fn tile_op_cycles(
+        &self,
+        unit: ComputeUnit,
+        df: DataFormat,
+        kind: TileOpKind,
+        mode: PipelineMode,
+    ) -> u64 {
+        let unpack = kind.input_tiles() * self.unpack_cycles(df);
+        let pack = kind.output_tiles() * self.pack_cycles(df);
+        let compute = self.compute_cycles(unit, df, kind);
+        match mode {
+            PipelineMode::Streamed => {
+                // Movement and compute overlap across the stream. Unpack
+                // and pack contend for the same SRAM bandwidth (the paper's
+                // Fig-3 roofline uses a single 64 B/clk ceiling for all
+                // tile movement), so their sum is the memory term; the
+                // slower of memory and compute binds, plus residual issue.
+                (unpack + pack).max(compute) + self.calib.stream_issue_cycles
+            }
+            PipelineMode::Dependent => {
+                unpack + compute + pack + self.calib.tile_op_issue_cycles
+            }
+        }
+    }
+
+    /// Cycles for the baby RISC-V to zero-fill `elems` halo elements (§6.3).
+    pub fn zero_fill_cycles(&self, elems: u64) -> u64 {
+        elems * self.calib.zero_fill_cycles_per_elem
+    }
+
+    /// Cycles to stream `bytes` from/to DRAM (single-core stream; used by
+    /// the Fig-3 DRAM-facing variants and the split-kernel staging model).
+    pub fn dram_stream_cycles(&self, bytes: u64) -> u64 {
+        let bw_bytes_per_cycle =
+            DRAM_BW_PER_DIE_GBS * 1e9 * self.calib.dram_bw_efficiency / CLOCK_HZ;
+        self.calib.dram_latency_cycles + (bytes as f64 / bw_bytes_per_cycle).ceil() as u64
+    }
+
+    /// Achieved FLOP/s for an eltwise stream at the Tensix clock, given the
+    /// per-tile cycle cost (Fig-3 y-axis).
+    pub fn eltwise_gflops(&self, cycles_per_tile: u64) -> f64 {
+        TILE_ELEMS as f64 / cycles_per_tile as f64 * CLOCK_HZ / 1e9
+    }
+
+    /// Roofline characterization for Fig 3.
+    /// Returns (arithmetic intensity FLOP/byte, attainable GFLOP/s) for an
+    /// eltwise add on `unit`.
+    pub fn roofline_point(&self, unit: ComputeUnit, df: DataFormat) -> (f64, f64) {
+        let cycles = self.tile_op_cycles(unit, df, TileOpKind::EltwiseBinary, PipelineMode::Streamed);
+        let ai = match unit {
+            // 2 reads + 1 write per element (§4): 1 FLOP / 6 bytes at BF16.
+            ComputeUnit::Fpu => 1.0 / (3.0 * df.bytes() as f64),
+            // + Dst copy and lane load/stores: ~1 FLOP / 16 bytes (§4).
+            ComputeUnit::Sfpu => 1.0 / (3.0 * df.bytes() as f64 + 10.0),
+        };
+        (ai, self.eltwise_gflops(cycles))
+    }
+
+    /// Peak compute for the roofline ceiling (GFLOP/s per core).
+    pub fn peak_gflops(&self, unit: ComputeUnit, df: DataFormat) -> f64 {
+        let per_clk = match unit {
+            ComputeUnit::Fpu => FPU_ELTWISE_ELEMS_PER_CLK,
+            ComputeUnit::Sfpu => match df {
+                DataFormat::Fp32 => SFPU_ELEMS_PER_CLK_32B,
+                _ => SFPU_ELEMS_PER_CLK_16B,
+            },
+        };
+        per_clk as f64 * CLOCK_HZ / 1e9
+    }
+
+    /// SRAM bandwidth ceiling of the roofline (GB/s through pack/unpack).
+    pub fn sram_bw_gbs(&self) -> f64 {
+        UNPACKER_BYTES_PER_CLK as f64 * CLOCK_HZ / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> CostModel {
+        CostModel::default()
+    }
+
+    #[test]
+    fn unpack_pack_rates() {
+        // BF16 tile = 2048 B at 64 B/clk = 32 cycles.
+        assert_eq!(m().unpack_cycles(DataFormat::Bf16), 32);
+        assert_eq!(m().pack_cycles(DataFormat::Bf16), 32);
+        assert_eq!(m().unpack_cycles(DataFormat::Fp32), 64);
+    }
+
+    #[test]
+    fn fpu_compute_rates_from_table1() {
+        let c = m();
+        assert_eq!(
+            c.compute_cycles(ComputeUnit::Fpu, DataFormat::Bf16, TileOpKind::EltwiseBinary),
+            8
+        ); // 1024 / 128
+        assert_eq!(
+            c.compute_cycles(ComputeUnit::Fpu, DataFormat::Bf16, TileOpKind::ReduceTile),
+            4
+        ); // 1024 / 256
+    }
+
+    #[test]
+    #[should_panic(expected = "FPU restricted")]
+    fn fpu_rejects_fp32() {
+        let _ = m().compute_cycles(ComputeUnit::Fpu, DataFormat::Fp32, TileOpKind::EltwiseBinary);
+    }
+
+    #[test]
+    fn streamed_fpu_eltwise_is_memory_bound() {
+        // §4: the FPU eltwise achieves near-peak of the 64 B/clk roofline.
+        // 3 tiles moved (2 unpack + 1 pack) of 2048 B = 96 cycles dominates
+        // the 8 compute cycles.
+        let c = m();
+        let cycles = c.tile_op_cycles(
+            ComputeUnit::Fpu,
+            DataFormat::Bf16,
+            TileOpKind::EltwiseBinary,
+            PipelineMode::Streamed,
+        );
+        assert_eq!(cycles, 96 + c.calib.stream_issue_cycles);
+    }
+
+    #[test]
+    fn sfpu_is_about_6x_slower_than_fpu_at_bf16() {
+        // §4: "around 6 times slower than the FPU".
+        let c = m();
+        let fpu = c.tile_op_cycles(
+            ComputeUnit::Fpu,
+            DataFormat::Bf16,
+            TileOpKind::EltwiseBinary,
+            PipelineMode::Streamed,
+        );
+        let sfpu = c.tile_op_cycles(
+            ComputeUnit::Sfpu,
+            DataFormat::Bf16,
+            TileOpKind::EltwiseBinary,
+            PipelineMode::Streamed,
+        );
+        let ratio = sfpu as f64 / fpu as f64;
+        assert!((4.0..8.0).contains(&ratio), "SFPU/FPU ratio {ratio}");
+    }
+
+    #[test]
+    fn fp32_sfpu_slower_than_bf16_sfpu() {
+        let c = m();
+        let b = c.compute_cycles(ComputeUnit::Sfpu, DataFormat::Bf16, TileOpKind::EltwiseBinary);
+        let f = c.compute_cycles(ComputeUnit::Sfpu, DataFormat::Fp32, TileOpKind::EltwiseBinary);
+        assert!(f > b);
+    }
+
+    #[test]
+    fn roofline_points_fig3() {
+        let c = m();
+        let (ai_fpu, gf_fpu) = c.roofline_point(ComputeUnit::Fpu, DataFormat::Bf16);
+        let (ai_sfpu, gf_sfpu) = c.roofline_point(ComputeUnit::Sfpu, DataFormat::Bf16);
+        // §4: FPU AI = 1/6, SFPU ≈ 1/16 at 16-bit.
+        assert!((ai_fpu - 1.0 / 6.0).abs() < 1e-9);
+        assert!((ai_sfpu - 1.0 / 16.0).abs() < 1e-9);
+        // FPU point near the BW-bound roofline: BW * AI.
+        let bound = c.sram_bw_gbs() * ai_fpu;
+        assert!(gf_fpu > 0.8 * bound, "gf_fpu {gf_fpu} vs bound {bound}");
+        assert!(gf_fpu <= bound * 1.01);
+        // SFPU several times below.
+        assert!(gf_fpu / gf_sfpu > 4.0);
+    }
+
+    #[test]
+    fn dependent_mode_charges_full_movement() {
+        let c = m();
+        let s = c.tile_op_cycles(
+            ComputeUnit::Fpu,
+            DataFormat::Bf16,
+            TileOpKind::Transpose,
+            PipelineMode::Streamed,
+        );
+        let d = c.tile_op_cycles(
+            ComputeUnit::Fpu,
+            DataFormat::Bf16,
+            TileOpKind::Transpose,
+            PipelineMode::Dependent,
+        );
+        assert!(d > s);
+    }
+
+    #[test]
+    fn dram_stream_includes_latency() {
+        let c = m();
+        let small = c.dram_stream_cycles(32);
+        assert!(small >= c.calib.dram_latency_cycles);
+        let big = c.dram_stream_cycles(1 << 20);
+        assert!(big > small);
+    }
+}

@@ -1,0 +1,17 @@
+//! Cycle-approximate timing: calibration constants and the Tensix cost
+//! model. The simulator separates *values* (computed by an engine) from
+//! *cycles* (charged here), so timing is identical across engines.
+
+pub mod calib;
+pub mod cost;
+
+pub use calib::Calib;
+pub use cost::{CostModel, PipelineMode, TileOpKind};
+
+/// Simulated time in nanoseconds (f64 to mix cycle- and ns-domain costs).
+pub type SimNs = f64;
+
+/// Convert device cycles to simulated nanoseconds at the Tensix clock.
+pub fn cycles_ns(cycles: u64) -> SimNs {
+    crate::arch::constants::cycles_to_ns(cycles)
+}

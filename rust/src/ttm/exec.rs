@@ -1,0 +1,257 @@
+//! Device-kernel execution of the §6.2 stencil pipeline on a Tensix core,
+//! written against the tt-metal-shaped primitives (circular buffers with
+//! the read-pointer-shift extension, the face-transpose unit, halo fills
+//! by the data-movement RISC-V) — i.e. the program the paper's compute
+//! kernel actually runs, at circular-buffer granularity.
+//!
+//! This is the integration point of S4/S5/S10 (DESIGN.md §4): the same
+//! arithmetic the engines compute via the fused form is produced here by
+//! the *device mechanism* — pointer-shifted CB reads for N/S, the
+//! transpose→shift→transpose pipeline for E/W, and explicit zero/halo
+//! fills. `kernel_matches_engine` pins it to `NativeEngine::stencil_apply`
+//! bit for bit.
+
+use crate::arch::constants::CB_PTR_ALIGN;
+use crate::device::TensixCore;
+use crate::engine::StencilCoeffs;
+use crate::error::Result;
+use crate::tile::ops;
+use crate::tile::shift::{shift_physical_ew, ShiftDir};
+use crate::tile::{EltwiseOp, Tile, TileShape};
+
+/// Halo lines for one tile of the stencil (§6.1): rows for N/S, columns
+/// for E/W; `None` = global boundary = zero fill (§6.3).
+#[derive(Debug, Clone, Default)]
+pub struct TileHalos<'a> {
+    pub north: Option<&'a [f32]>,
+    pub south: Option<&'a [f32]>,
+    pub west: Option<&'a [f32]>,
+    pub east: Option<&'a [f32]>,
+}
+
+/// Statistics of one kernel execution, for cross-checking against the
+/// cost model's operation counts.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct KernelStats {
+    pub cb_pushes: u64,
+    pub cb_pops: u64,
+    pub ptr_shifts: u64,
+    pub transposes: u64,
+    pub halo_fill_rows: u64,
+    pub ew_segments: u64,
+}
+
+/// Run the 7-point stencil compute kernel for one z-level tile on `core`.
+///
+/// `center` is the tile to update; `below`/`above` its core-local z
+/// neighbors (`None` = Dirichlet zero, §7). The kernel stages tiles
+/// through circular buffers exactly as §6.2 describes:
+///
+/// 1. the reader pushes the center tile into `cb_in`;
+/// 2. N/S shifted tiles come from pointer-displaced CB reads (±one 32B
+///    row) with the vacated row halo-filled by the data-movement core;
+/// 3. E/W shifted tiles go through the face-transpose pipeline, their
+///    halos arriving as 4 discontiguous segments each (§6.3);
+/// 4. scaled components accumulate in the canonical order;
+/// 5. the packer pushes the result through `cb_out`.
+pub fn stencil_tile_kernel(
+    core: &mut TensixCore,
+    center: &Tile,
+    below: Option<&Tile>,
+    above: Option<&Tile>,
+    halos: &TileHalos<'_>,
+    coeffs: StencilCoeffs,
+) -> Result<(Tile, KernelStats)> {
+    assert_eq!(center.shape, TileShape::STENCIL, "stencil kernels use 64x16 tiles (§6.1)");
+    let mut stats = KernelStats::default();
+    let df = center.df;
+    let page = center.bytes();
+    let row_bytes = (center.shape.cols * df.bytes()) as isize;
+    debug_assert_eq!(row_bytes % CB_PTR_ALIGN as isize, 0);
+
+    // CB setup (once per program in tt-metal; idempotent here).
+    if !core.cbs.contains_key("cb_in0") {
+        core.create_cb("cb_in0", page, 2)?;
+        core.create_cb("cb_out0", page, 2)?;
+    }
+
+    // Reader kernel: center tile NoC→SRAM→cb_in0.
+    {
+        let cb = core.cb("cb_in0")?;
+        cb.reserve_back(1)?;
+        cb.push_back(center.clone())?;
+        stats.cb_pushes += 1;
+    }
+    core.counters.tiles_unpacked += 1;
+
+    // Compute kernel: acc = c_center * center.
+    let mut acc = ops::scale(center, coeffs.center);
+    core.counters.fpu_ops += 1;
+
+    // N/S via the pointer trick (§6.2): displace the read pointer by one
+    // row and copy through it; the missing row is halo-filled (or zero).
+    for (dir, coeff, halo) in [
+        (ShiftDir::North, coeffs.x_lo, halos.north),
+        (ShiftDir::South, coeffs.x_hi, halos.south),
+    ] {
+        let delta = match dir {
+            ShiftDir::North => -row_bytes,
+            _ => row_bytes,
+        };
+        let cb = core.cb("cb_in0")?;
+        cb.shift_read_ptr(delta)?;
+        stats.ptr_shifts += 1;
+        let (mut shifted, missing) = cb.front_shifted()?;
+        cb.shift_read_ptr(-delta)?; // restore for the next component
+        stats.ptr_shifts += 1;
+        // The data-movement core fills the vacated row (halo write from
+        // the neighbor, or the §6.3 zero fill).
+        for &r in &missing {
+            stats.halo_fill_rows += 1;
+            if let Some(h) = halo {
+                for c in 0..16 {
+                    shifted.set(r, c, h[c]);
+                }
+            }
+            core.counters.zero_fills += u64::from(halo.is_none());
+        }
+        acc = ops::eltwise(EltwiseOp::Add, &acc, &ops::scale(&shifted, coeff));
+        core.counters.fpu_ops += 2;
+    }
+
+    // E/W via the transpose pipeline (§6.3): transpose → row shift in the
+    // transposed domain (4 halo segments) → transpose back.
+    for (dir, coeff, halo) in [
+        (ShiftDir::West, coeffs.y_lo, halos.west),
+        (ShiftDir::East, coeffs.y_hi, halos.east),
+    ] {
+        let (shifted, segments) = shift_physical_ew(center, dir, halo);
+        stats.transposes += 2;
+        stats.ew_segments += segments as u64;
+        core.counters.fpu_ops += 3; // transpose, shift-copy, transpose
+        if halo.is_none() {
+            core.counters.zero_fills += segments as u64;
+        }
+        acc = ops::eltwise(EltwiseOp::Add, &acc, &ops::scale(&shifted, coeff));
+        core.counters.fpu_ops += 2;
+    }
+
+    // z neighbors are core-local tiles (§6.1): plain scaled adds.
+    let zero = Tile::zeros(center.shape, df);
+    acc = ops::eltwise(EltwiseOp::Add, &acc, &ops::scale(below.unwrap_or(&zero), coeffs.z_lo));
+    acc = ops::eltwise(EltwiseOp::Add, &acc, &ops::scale(above.unwrap_or(&zero), coeffs.z_hi));
+    core.counters.fpu_ops += 4;
+
+    // Writer kernel: result through cb_out0, packer SRAM→NoC.
+    {
+        let cb_in = core.cb("cb_in0")?;
+        cb_in.pop_front()?;
+        stats.cb_pops += 1;
+    }
+    {
+        let cb_out = core.cb("cb_out0")?;
+        cb_out.reserve_back(1)?;
+        cb_out.push_back(acc)?;
+        stats.cb_pushes += 1;
+        let out = cb_out.pop_front()?;
+        stats.cb_pops += 1;
+        core.counters.tiles_packed += 1;
+        Ok((out, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::DataFormat;
+    use crate::device::Coord;
+    use crate::engine::{ComputeEngine, CoreBlock, Halos, NativeEngine};
+    use crate::util::prng::Rng;
+
+    fn rand_tile(seed: u64, df: DataFormat) -> Tile {
+        let mut rng = Rng::new(seed);
+        Tile::from_fn(TileShape::STENCIL, df, |_, _| rng.next_f32() - 0.5)
+    }
+
+    /// The CB-level device kernel must produce exactly what the engine's
+    /// fused form computes — §6.2's correctness argument, mechanized.
+    #[test]
+    fn kernel_matches_engine() {
+        for df in [DataFormat::Fp32, DataFormat::Bf16] {
+            let mut core = TensixCore::new(Coord::new(0, 0));
+            let center = rand_tile(1, df);
+            let below = rand_tile(2, df);
+            let above = rand_tile(3, df);
+            let hn: Vec<f32> = (0..16).map(|i| (i as f32).sin()).collect();
+            let hw: Vec<f32> = (0..64).map(|i| (i as f32).cos()).collect();
+            let halos = TileHalos {
+                north: Some(&hn),
+                south: None,
+                west: Some(&hw),
+                east: None,
+            };
+            let (got, stats) = stencil_tile_kernel(
+                &mut core,
+                &center,
+                Some(&below),
+                Some(&above),
+                &halos,
+                StencilCoeffs::LAPLACIAN,
+            )
+            .unwrap();
+
+            // Engine reference on the equivalent 3-tile block.
+            let engine = NativeEngine::new();
+            let block = CoreBlock {
+                df,
+                tiles: vec![below.clone(), center.clone(), above.clone()],
+            };
+            let eng_halos = Halos {
+                north: Some(vec![vec![0.0; 16], hn.clone(), vec![0.0; 16]]),
+                south: None,
+                west: Some(vec![vec![0.0; 64], hw.clone(), vec![0.0; 64]]),
+                east: None,
+            };
+            let want = engine
+                .stencil_apply(&block, &eng_halos, StencilCoeffs::LAPLACIAN)
+                .unwrap();
+            assert_eq!(got, want.tiles[1], "df {df}");
+
+            // §6.2/§6.3 mechanism counts: 2 pointer shifts per N/S dir
+            // (displace + restore), 2 transposes per E/W dir, 4 halo
+            // segments per E/W dir, 1 halo row per N/S dir.
+            assert_eq!(stats.ptr_shifts, 4);
+            assert_eq!(stats.transposes, 4);
+            assert_eq!(stats.ew_segments, 8);
+            assert_eq!(stats.halo_fill_rows, 2);
+            assert_eq!(stats.cb_pushes, 2);
+            assert_eq!(stats.cb_pops, 2);
+        }
+    }
+
+    #[test]
+    fn zero_fill_counted_on_boundaries() {
+        let mut core = TensixCore::new(Coord::new(0, 0));
+        let center = rand_tile(5, DataFormat::Bf16);
+        let halos = TileHalos::default(); // all boundaries
+        let (_, _) = stencil_tile_kernel(&mut core, &center, None, None, &halos, StencilCoeffs::LAPLACIAN)
+            .unwrap();
+        // 2 N/S rows + 2×4 E/W segments zero-filled.
+        assert_eq!(core.counters.zero_fills, 2 + 8);
+        assert_eq!(core.counters.tiles_unpacked, 1);
+        assert_eq!(core.counters.tiles_packed, 1);
+    }
+
+    #[test]
+    fn cb_state_clean_after_kernel() {
+        // Kernels must leave the CBs drained (reusable next tile).
+        let mut core = TensixCore::new(Coord::new(0, 0));
+        let center = rand_tile(6, DataFormat::Bf16);
+        for _ in 0..3 {
+            let _ = stencil_tile_kernel(&mut core, &center, None, None, &TileHalos::default(), StencilCoeffs::LAPLACIAN)
+                .unwrap();
+        }
+        assert!(core.cb("cb_in0").unwrap().is_empty());
+        assert!(core.cb("cb_out0").unwrap().is_empty());
+    }
+}

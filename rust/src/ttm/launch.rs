@@ -1,0 +1,99 @@
+//! Host command-queue launch model.
+//!
+//! Launch overhead is a first-order effect in the paper's split-kernel PCG
+//! (§7.1, §7.3: launches + residual readback account for roughly half the
+//! measured per-iteration time). The host queue charges
+//! [`crate::timing::calib::Calib::kernel_launch_ns`] per enqueue and
+//! tracks what was launched for reporting.
+
+use crate::timing::calib::Calib;
+use crate::timing::SimNs;
+use crate::ttm::program::Program;
+
+/// Statistics of launches performed through a queue.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LaunchStats {
+    pub launches: u64,
+    pub launch_ns: SimNs,
+    pub gap_ns: SimNs,
+}
+
+/// The host-side command queue.
+#[derive(Debug)]
+pub struct HostQueue {
+    calib: Calib,
+    pub stats: LaunchStats,
+    log: Vec<String>,
+}
+
+impl HostQueue {
+    pub fn new(calib: Calib) -> Self {
+        Self {
+            calib,
+            stats: LaunchStats::default(),
+            log: Vec::new(),
+        }
+    }
+
+    /// Enqueue a program at simulated time `now`; returns the time at which
+    /// the device kernels begin executing.
+    pub fn enqueue(&mut self, program: &Program, now: SimNs) -> crate::Result<SimNs> {
+        program.validate()?;
+        self.stats.launches += 1;
+        self.stats.launch_ns += self.calib.kernel_launch_ns;
+        self.log.push(program.name.clone());
+        Ok(now + self.calib.kernel_launch_ns)
+    }
+
+    /// Charge the §7.3 device-side gap observed between back-to-back
+    /// kernels within a fused program. Returns the adjusted time.
+    pub fn kernel_gap(&mut self, now: SimNs) -> SimNs {
+        self.stats.gap_ns += self.calib.inter_kernel_gap_ns;
+        now + self.calib.inter_kernel_gap_ns
+    }
+
+    /// Charge the residual-norm readback (split-kernel PCG; §7.1).
+    pub fn residual_readback(&mut self, now: SimNs) -> SimNs {
+        now + self.calib.residual_readback_ns
+    }
+
+    pub fn launched(&self) -> &[String] {
+        &self.log
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enqueue_charges_launch_overhead() {
+        let calib = Calib::default();
+        let mut q = HostQueue::new(calib.clone());
+        let p = Program::standard("axpy");
+        let t = q.enqueue(&p, 100.0).unwrap();
+        assert_eq!(t, 100.0 + calib.kernel_launch_ns);
+        assert_eq!(q.stats.launches, 1);
+        assert_eq!(q.launched(), &["axpy".to_string()]);
+    }
+
+    #[test]
+    fn invalid_program_rejected_without_charge() {
+        let mut q = HostQueue::new(Calib::default());
+        let p = Program::new("bad")
+            .with_kernel(crate::ttm::KernelSpec::new("a", crate::ttm::KernelRole::Reader))
+            .with_kernel(crate::ttm::KernelSpec::new("b", crate::ttm::KernelRole::Reader));
+        assert!(q.enqueue(&p, 0.0).is_err());
+    }
+
+    #[test]
+    fn gaps_and_readback_advance_time() {
+        let calib = Calib::default();
+        let mut q = HostQueue::new(calib.clone());
+        let t1 = q.kernel_gap(0.0);
+        assert_eq!(t1, calib.inter_kernel_gap_ns);
+        let t2 = q.residual_readback(t1);
+        assert_eq!(t2, t1 + calib.residual_readback_ns);
+        assert_eq!(q.stats.gap_ns, calib.inter_kernel_gap_ns);
+    }
+}

@@ -1,0 +1,17 @@
+//! A tt-metal-shaped host programming layer (§3).
+//!
+//! tt-metal programs consist of a host program that allocates buffers,
+//! builds `Program`s out of per-core kernels (two NoC data-movement
+//! kernels + one compute kernel), enqueues them on a command queue, and
+//! synchronizes. This module models that structure and its costs:
+//! program construction, per-launch dispatch overhead, and the
+//! fused-vs-split launch accounting that differentiates the paper's two
+//! PCG variants (§7.1).
+
+pub mod exec;
+pub mod launch;
+pub mod program;
+
+pub use exec::{stencil_tile_kernel, KernelStats, TileHalos};
+pub use launch::{HostQueue, LaunchStats};
+pub use program::{KernelRole, KernelSpec, Program};

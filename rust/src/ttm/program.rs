@@ -1,0 +1,116 @@
+//! Programs and kernel specs (the tt-metal structural model).
+
+/// Which baby RISC-V a kernel runs on (§3): the two NoC data-movement
+/// cores, or the compute cores collectively.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelRole {
+    /// NoC core 0: DRAM/NoC → SRAM ("reader").
+    Reader,
+    /// NoC core 1: SRAM → DRAM/NoC ("writer").
+    Writer,
+    /// The three compute-side RISC-Vs driving unpack/math/pack.
+    Compute,
+}
+
+/// Description of one device kernel within a program.
+#[derive(Debug, Clone)]
+pub struct KernelSpec {
+    pub name: String,
+    pub role: KernelRole,
+    /// Compile-time args (tile counts, CB indices, ...), recorded for
+    /// reporting parity with tt-metal's kernel args.
+    pub ct_args: Vec<(String, String)>,
+}
+
+impl KernelSpec {
+    pub fn new(name: &str, role: KernelRole) -> Self {
+        Self {
+            name: name.to_string(),
+            role,
+            ct_args: Vec::new(),
+        }
+    }
+
+    pub fn arg(mut self, key: &str, value: impl std::fmt::Display) -> Self {
+        self.ct_args.push((key.to_string(), value.to_string()));
+        self
+    }
+}
+
+/// A program: the set of kernels launched together on the sub-grid.
+/// tt-metal launches all three kernels concurrently on every core; the
+/// split-kernel PCG enqueues one `Program` per component per iteration,
+/// the fused PCG a single program for the whole solve (§7.1).
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub name: String,
+    pub kernels: Vec<KernelSpec>,
+}
+
+impl Program {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            kernels: Vec::new(),
+        }
+    }
+
+    pub fn with_kernel(mut self, k: KernelSpec) -> Self {
+        self.kernels.push(k);
+        self
+    }
+
+    /// The standard three-kernel shape (§3): reader + compute + writer.
+    pub fn standard(name: &str) -> Self {
+        Program::new(name)
+            .with_kernel(KernelSpec::new(&format!("{name}_reader"), KernelRole::Reader))
+            .with_kernel(KernelSpec::new(&format!("{name}_compute"), KernelRole::Compute))
+            .with_kernel(KernelSpec::new(&format!("{name}_writer"), KernelRole::Writer))
+    }
+
+    /// Validate the tt-metal constraint: at most one kernel per role.
+    pub fn validate(&self) -> crate::Result<()> {
+        for role in [KernelRole::Reader, KernelRole::Writer, KernelRole::Compute] {
+            let n = self.kernels.iter().filter(|k| k.role == role).count();
+            if n > 1 {
+                return Err(crate::SimError::Other(format!(
+                    "program '{}' has {n} kernels for role {role:?} (max 1 per core)",
+                    self.name
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_program_shape() {
+        let p = Program::standard("spmv");
+        assert_eq!(p.kernels.len(), 3);
+        p.validate().unwrap();
+        assert!(p.kernels.iter().any(|k| k.role == KernelRole::Reader));
+        assert!(p.kernels.iter().any(|k| k.role == KernelRole::Compute));
+        assert!(p.kernels.iter().any(|k| k.role == KernelRole::Writer));
+    }
+
+    #[test]
+    fn duplicate_role_rejected() {
+        let p = Program::new("bad")
+            .with_kernel(KernelSpec::new("a", KernelRole::Compute))
+            .with_kernel(KernelSpec::new("b", KernelRole::Compute));
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn kernel_args_recorded() {
+        let k = KernelSpec::new("reader", KernelRole::Reader)
+            .arg("num_tiles", 64)
+            .arg("cb", "cb_in0");
+        assert_eq!(k.ct_args.len(), 2);
+        assert_eq!(k.ct_args[0], ("num_tiles".to_string(), "64".to_string()));
+    }
+}

@@ -1,0 +1,137 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use this: warmup, repeated timed runs, and a
+//! summary line per benchmark, plus CSV output under `results/bench/`.
+//! Measurements are wall-clock for host-side (L3) code paths; *simulated*
+//! device time is reported separately by the experiment runners.
+
+use std::time::Instant;
+
+use crate::util::csv::CsvWriter;
+use crate::util::stats::{fmt_ns, Summary};
+
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub sample_count: usize,
+    pub iters_per_sample: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // Keep benches quick; env overrides for careful runs.
+        let env = |k: &str, d: usize| {
+            std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+        };
+        Self {
+            warmup_iters: env("WORMSIM_BENCH_WARMUP", 3),
+            sample_count: env("WORMSIM_BENCH_SAMPLES", 10),
+            iters_per_sample: env("WORMSIM_BENCH_ITERS", 1),
+        }
+    }
+}
+
+pub struct BenchResult {
+    pub name: String,
+    /// Wall-clock summary of per-iteration time, nanoseconds.
+    pub wall_ns: Summary,
+    /// Optional simulated device time per iteration, nanoseconds.
+    pub sim_ns: Option<f64>,
+}
+
+pub struct Bencher {
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+    suite: String,
+}
+
+impl Bencher {
+    pub fn new(suite: &str) -> Self {
+        println!("== bench suite: {suite} ==");
+        Self {
+            cfg: BenchConfig::default(),
+            results: Vec::new(),
+            suite: suite.to_string(),
+        }
+    }
+
+    /// Time `f`, which performs one logical iteration and may return a
+    /// simulated-time figure (ns) to report alongside wall clock.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut() -> Option<f64>) {
+        let mut sim_ns = None;
+        for _ in 0..self.cfg.warmup_iters {
+            sim_ns = f().or(sim_ns);
+        }
+        let mut samples = Vec::with_capacity(self.cfg.sample_count);
+        for _ in 0..self.cfg.sample_count {
+            let t0 = Instant::now();
+            for _ in 0..self.cfg.iters_per_sample {
+                sim_ns = f().or(sim_ns);
+            }
+            samples.push(t0.elapsed().as_nanos() as f64 / self.cfg.iters_per_sample as f64);
+        }
+        let wall = Summary::from_samples(&samples);
+        match sim_ns {
+            Some(s) => println!(
+                "{name:<48} wall {:>12} ± {:>10}   sim {:>12}",
+                fmt_ns(wall.mean),
+                fmt_ns(wall.std_dev),
+                fmt_ns(s)
+            ),
+            None => println!(
+                "{name:<48} wall {:>12} ± {:>10}",
+                fmt_ns(wall.mean),
+                fmt_ns(wall.std_dev)
+            ),
+        }
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            wall_ns: wall,
+            sim_ns,
+        });
+    }
+
+    /// Write the suite results as CSV and print a footer. Call at the end of
+    /// every bench main().
+    pub fn finish(self) {
+        let mut csv = CsvWriter::new(&[
+            "bench", "wall_mean_ns", "wall_std_ns", "wall_min_ns", "wall_p95_ns", "sim_ns",
+        ]);
+        for r in &self.results {
+            csv.row(&[
+                r.name.clone(),
+                format!("{:.1}", r.wall_ns.mean),
+                format!("{:.1}", r.wall_ns.std_dev),
+                format!("{:.1}", r.wall_ns.min),
+                format!("{:.1}", r.wall_ns.p95),
+                r.sim_ns.map(|s| format!("{s:.1}")).unwrap_or_default(),
+            ]);
+        }
+        let path = std::path::Path::new("results/bench").join(format!("{}.csv", self.suite));
+        match csv.write(&path) {
+            Ok(()) => println!("== wrote {} ==", path.display()),
+            Err(e) => println!("== failed to write {}: {e} ==", path.display()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_and_records() {
+        std::env::set_var("WORMSIM_BENCH_SAMPLES", "3");
+        let mut b = Bencher::new("selftest");
+        let mut acc = 0u64;
+        b.bench("trivial", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i);
+            }
+            Some(123.0)
+        });
+        assert_eq!(b.results.len(), 1);
+        assert_eq!(b.results[0].sim_ns, Some(123.0));
+        assert!(b.results[0].wall_ns.mean >= 0.0);
+        std::env::remove_var("WORMSIM_BENCH_SAMPLES");
+    }
+}

@@ -1,0 +1,199 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports the subset the `wormsim` launcher needs: subcommands,
+//! `--flag`, `--key value`, `--key=value`, and positional arguments, with
+//! generated usage text and typed accessors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub values: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Parse "8x7" style grid specs.
+    pub fn get_grid(&self, key: &str, default: (usize, usize)) -> Result<(usize, usize), String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => parse_grid(v),
+        }
+    }
+}
+
+pub fn parse_grid(v: &str) -> Result<(usize, usize), String> {
+    let parts: Vec<&str> = v.split(['x', 'X']).collect();
+    if parts.len() != 2 {
+        return Err(format!("expected RxC grid spec like '8x7', got '{v}'"));
+    }
+    let r = parts[0]
+        .trim()
+        .parse()
+        .map_err(|_| format!("bad grid rows in '{v}'"))?;
+    let c = parts[1]
+        .trim()
+        .parse()
+        .map_err(|_| format!("bad grid cols in '{v}'"))?;
+    Ok((r, c))
+}
+
+/// Parse "512x112x64" style 3D extents.
+pub fn parse_dims3(v: &str) -> Result<(usize, usize, usize), String> {
+    let parts: Vec<&str> = v.split(['x', 'X']).collect();
+    if parts.len() != 3 {
+        return Err(format!("expected NxNxN dims like '512x112x64', got '{v}'"));
+    }
+    let p = |s: &str| -> Result<usize, String> {
+        s.trim().parse().map_err(|_| format!("bad dimension in '{v}'"))
+    };
+    Ok((p(parts[0])?, p(parts[1])?, p(parts[2])?))
+}
+
+/// Tokenize argv (after the subcommand) into an `Args`.
+/// Flags listed in `flag_names` are boolean; everything else `--key` takes a
+/// value. Unknown `--keys` are an error so typos fail fast.
+pub fn parse(
+    argv: &[String],
+    value_keys: &[&str],
+    flag_names: &[&str],
+) -> Result<Args, String> {
+    let mut args = Args::default();
+    let mut i = 0;
+    while i < argv.len() {
+        let tok = &argv[i];
+        if let Some(stripped) = tok.strip_prefix("--") {
+            let (key, inline_val) = match stripped.split_once('=') {
+                Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                None => (stripped.to_string(), None),
+            };
+            if flag_names.contains(&key.as_str()) {
+                if inline_val.is_some() {
+                    return Err(format!("flag --{key} does not take a value"));
+                }
+                args.flags.push(key);
+            } else if value_keys.contains(&key.as_str()) {
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .cloned()
+                            .ok_or_else(|| format!("--{key} expects a value"))?
+                    }
+                };
+                args.values.insert(key, val);
+            } else {
+                return Err(format!("unknown option --{key}"));
+            }
+        } else {
+            args.positional.push(tok.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_flags_positionals() {
+        let a = parse(
+            &sv(&["--grid", "8x7", "--verbose", "fig5", "--tiles=64"]),
+            &["grid", "tiles"],
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.get("grid"), Some("8x7"));
+        assert_eq!(a.get_usize("tiles", 0).unwrap(), 64);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["fig5".to_string()]);
+    }
+
+    #[test]
+    fn unknown_key_is_error() {
+        assert!(parse(&sv(&["--nope", "1"]), &["grid"], &[]).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse(&sv(&["--grid"]), &["grid"], &[]).is_err());
+    }
+
+    #[test]
+    fn grid_and_dims_parsing() {
+        assert_eq!(parse_grid("8x7").unwrap(), (8, 7));
+        assert_eq!(parse_dims3("512x112x64").unwrap(), (512, 112, 64));
+        assert!(parse_grid("8").is_err());
+        assert!(parse_dims3("8x7").is_err());
+        assert!(parse_grid("axb").is_err());
+    }
+
+    #[test]
+    fn typed_accessors_defaults() {
+        let a = parse(&sv(&[]), &["n"], &[]).unwrap();
+        assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+        assert_eq!(a.get_f64("n", 1.5).unwrap(), 1.5);
+        assert_eq!(a.get_or("n", "x"), "x");
+    }
+
+    #[test]
+    fn flag_with_value_is_error() {
+        assert!(parse(&sv(&["--verbose=1"]), &[], &["verbose"]).is_err());
+    }
+}

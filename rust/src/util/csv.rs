@@ -1,0 +1,114 @@
+//! Tiny CSV writer for experiment results (`results/*.csv`).
+//!
+//! Each experiment runner emits one CSV whose rows mirror exactly what is
+//! printed to the terminal, so figures can be re-plotted externally.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "csv row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_display(&mut self, cells: &[&dyn std::fmt::Display]) {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells);
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", escape_row(&self.header));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", escape_row(r));
+        }
+        out
+    }
+
+    /// Write to `path`, creating parent directories.
+    pub fn write(&self, path: &Path) -> io::Result<()> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_string())
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+fn escape_cell(cell: &str) -> String {
+    if cell.contains([',', '"', '\n']) {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+fn escape_row(cells: &[String]) -> String {
+    cells
+        .iter()
+        .map(|c| escape_cell(c))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["1".into(), "2".into()]);
+        w.row(&["x,y".into(), "q\"z".into()]);
+        let s = w.to_string();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[0], "a,b");
+        assert_eq!(lines[1], "1,2");
+        assert_eq!(lines[2], "\"x,y\",\"q\"\"z\"");
+        assert_eq!(w.n_rows(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["1".into()]);
+    }
+
+    #[test]
+    fn writes_to_disk() {
+        let dir = std::env::temp_dir().join("wormsim_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::new(&["x"]);
+        w.row(&["7".into()]);
+        w.write(&path).unwrap();
+        let back = std::fs::read_to_string(&path).unwrap();
+        assert!(back.contains("7"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

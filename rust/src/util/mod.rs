@@ -1,0 +1,12 @@
+//! Offline substrate utilities built from scratch (the image vendors only
+//! the `xla` crate closure — no clap/criterion/serde/proptest/rand/tokio).
+//! See DESIGN.md §4 S20.
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod table;
+pub mod tomlmini;

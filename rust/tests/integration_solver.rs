@@ -1,0 +1,213 @@
+//! Solver-level integration: convergence against manufactured solutions,
+//! Table-3 calibration, and the paper's qualitative performance claims.
+
+use wormsim::arch::DataFormat;
+use wormsim::baseline::H100Model;
+use wormsim::engine::{ComputeEngine, NativeEngine};
+use wormsim::kernels::DotMethod;
+use wormsim::noc::RoutePattern;
+use wormsim::profiler::Profiler;
+use wormsim::solver::{self, PcgOptions, PcgVariant, Problem};
+use wormsim::timing::cost::CostModel;
+
+fn default_opts(variant: PcgVariant) -> PcgOptions {
+    let mut o = PcgOptions::new(variant);
+    o.dot_method = DotMethod::ReduceThenSend;
+    o.dot_pattern = RoutePattern::Naive;
+    o
+}
+
+/// Manufactured solution: pick x*, set b = A x*, solve, compare to x*.
+#[test]
+fn fp32_pcg_recovers_manufactured_solution() {
+    let p = Problem::new(3, 2, 4, DataFormat::Fp32);
+    let grid = p.make_grid().unwrap();
+    let engine = NativeEngine::new();
+    let cost = CostModel::default();
+
+    let x_true = solver::dist_random(&p, 99);
+    // b = A x* through the global f64 oracle (independent of the kernels
+    // under test).
+    let xg = solver::dist_to_global(&p, &x_true);
+    let bg = solver::apply_laplacian_global(&p, &xg);
+    let b = solver::dist_from_fn(&p, |i, j, k| bg[p.global_index(i, j, k)] as f32);
+
+    let mut opts = default_opts(PcgVariant::SplitFp32);
+    opts.max_iters = 600;
+    opts.tol_abs = 1e-3;
+    let mut prof = Profiler::disabled();
+    let res = solver::solve(&grid, &p, &b, &engine, &cost, &opts, &mut prof).unwrap();
+    assert!(res.converged, "residuals: {:?}", res.residual_history.iter().rev().take(3).collect::<Vec<_>>());
+
+    let got = solver::dist_to_global(&p, &res.x);
+    let mut worst = 0.0f64;
+    for (g, w) in got.iter().zip(&xg) {
+        worst = worst.max((g - w).abs() as f64);
+    }
+    assert!(worst < 5e-3, "max |x - x*| = {worst}");
+}
+
+/// Table 3 calibration: the simulated per-iteration times must stay within
+/// 15% of the paper's measured numbers (0.28 / 1.20 / 2.45 ms).
+#[test]
+fn table3_calibration_within_tolerance() {
+    let cost = CostModel::default();
+    let engine = NativeEngine::new();
+    let mut prof = Profiler::disabled();
+
+    let h100 = H100Model::default().cg_iteration(512 * 112 * 64);
+    let h_ms = h100.total_ns / 1e6;
+    assert!((h_ms - 0.28).abs() / 0.28 < 0.15, "H100 {h_ms} ms vs 0.28");
+
+    for (variant, paper_ms) in [(PcgVariant::FusedBf16, 1.20), (PcgVariant::SplitFp32, 2.45)] {
+        let p = Problem::new(8, 7, 64, variant.df());
+        let grid = p.make_grid().unwrap();
+        let b = solver::dist_random(&p, 5);
+        let mut opts = default_opts(variant);
+        opts.max_iters = 1;
+        opts.tol_abs = 0.0;
+        let res = solver::solve(&grid, &p, &b, &engine, &cost, &opts, &mut prof).unwrap();
+        let ms = res.per_iter_ns / 1e6;
+        assert!(
+            (ms - paper_ms).abs() / paper_ms < 0.15,
+            "{}: {ms:.3} ms vs paper {paper_ms}",
+            variant.label()
+        );
+    }
+}
+
+/// §7.2: the SFPU/FP32 implementation is ≈2x slower than FPU/BF16 when
+/// normalized against problem size.
+#[test]
+fn fp32_about_2x_slower_than_bf16_normalized() {
+    let cost = CostModel::default();
+    let engine = NativeEngine::new();
+    let mut prof = Profiler::disabled();
+    let mut per_tile = Vec::new();
+    for (variant, tiles) in [(PcgVariant::FusedBf16, 64usize), (PcgVariant::SplitFp32, 64)] {
+        let p = Problem::new(4, 4, tiles, variant.df());
+        let grid = p.make_grid().unwrap();
+        let b = solver::dist_random(&p, 6);
+        let mut opts = default_opts(variant);
+        opts.max_iters = 1;
+        opts.tol_abs = 0.0;
+        let res = solver::solve(&grid, &p, &b, &engine, &cost, &opts, &mut prof).unwrap();
+        per_tile.push(res.per_iter_ns / tiles as f64);
+    }
+    let ratio = per_tile[1] / per_tile[0];
+    assert!((1.5..3.0).contains(&ratio), "FP32/BF16 per-tile ratio {ratio}");
+}
+
+/// Weak scaling (Fig 12c): per-iteration time grows by <10% from 1x1 to
+/// the full sub-grid at fixed tiles/core.
+#[test]
+fn pcg_weak_scaling_is_flat() {
+    let cost = CostModel::default();
+    let engine = NativeEngine::new();
+    let mut prof = Profiler::disabled();
+    let mut times = Vec::new();
+    for (r, c) in [(1usize, 1usize), (4, 4), (8, 7)] {
+        let p = Problem::new(r, c, 16, DataFormat::Bf16);
+        let grid = p.make_grid().unwrap();
+        let b = solver::dist_random(&p, 7);
+        let mut opts = default_opts(PcgVariant::FusedBf16);
+        opts.max_iters = 1;
+        opts.tol_abs = 0.0;
+        let res = solver::solve(&grid, &p, &b, &engine, &cost, &opts, &mut prof).unwrap();
+        times.push(res.per_iter_ns);
+    }
+    let growth = times[2] / times[0];
+    assert!(growth < 1.10, "weak scaling growth {growth}");
+}
+
+/// The Jacobi preconditioner reduces iterations vs plain CG on the same
+/// problem (design-choice ablation from DESIGN.md).
+#[test]
+fn jacobi_helps_convergence() {
+    let p = Problem::new(2, 2, 4, DataFormat::Fp32);
+    let grid = p.make_grid().unwrap();
+    let engine = NativeEngine::new();
+    let cost = CostModel::default();
+    let b = solver::dist_random(&p, 8);
+    let mut prof = Profiler::disabled();
+    let mut run = |precondition: bool| {
+        let mut opts = default_opts(PcgVariant::SplitFp32);
+        opts.max_iters = 500;
+        opts.tol_abs = 1e-3;
+        opts.precondition = precondition;
+        solver::solve(&grid, &p, &b, &engine, &cost, &opts, &mut prof).unwrap()
+    };
+    let with = run(true);
+    let without = run(false);
+    assert!(with.converged);
+    // For M = (1/6)I the preconditioned system is just a rescaling, so CG
+    // iteration counts match exactly — this documents WHY the paper calls
+    // its Jacobi choice a proof-of-concept (§7): it cannot hurt, and for
+    // constant-diagonal A it cannot help either.
+    assert_eq!(with.iters, without.iters);
+}
+
+/// BF16 true residual stalls above FP32's achievable residual (the §7.1
+/// precision trade-off). Note the *device-reported* residual cannot be
+/// used for this: once `r` is small, the BF16 dot's products flush to zero
+/// (§3.3) and the reported norm collapses — exactly the §3.3 hazard that
+/// motivates absolute-residual monitoring.
+#[test]
+fn bf16_stalls_above_fp32_accuracy() {
+    let engine = NativeEngine::new();
+    let cost = CostModel::default();
+    let mut prof = Profiler::disabled();
+    let mut run = |variant: PcgVariant| -> f64 {
+        let p = Problem::new(2, 2, 4, variant.df());
+        let grid = p.make_grid().unwrap();
+        let b = solver::dist_random(&p, 9);
+        let mut opts = default_opts(variant);
+        opts.max_iters = 120;
+        opts.tol_abs = 0.0;
+        let res = solver::solve(&grid, &p, &b, &engine, &cost, &opts, &mut prof).unwrap();
+        // True residual ||Ax - b|| via the independent f64 oracle.
+        let xg = solver::dist_to_global(&p, &res.x);
+        let bg = solver::dist_to_global(&p, &b);
+        let ax = solver::apply_laplacian_global(&p, &xg);
+        ax.iter()
+            .zip(&bg)
+            .map(|(a, &v)| (a - v as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    };
+    let bf16_floor = run(PcgVariant::FusedBf16);
+    let fp32_floor = run(PcgVariant::SplitFp32);
+    assert!(
+        bf16_floor > 10.0 * fp32_floor,
+        "bf16 true-residual floor {bf16_floor} vs fp32 {fp32_floor}"
+    );
+}
+
+/// The fused kernel's problem-size ceiling exceeds the split kernel's
+/// (§7.2: 164 BF16 vs 64 FP32 tiles/core), and both are enforced.
+#[test]
+fn capacity_ceilings_ordered_and_enforced() {
+    assert!(Problem::new(1, 1, 164, DataFormat::Bf16).validate_capacity(true).is_ok());
+    assert!(Problem::new(1, 1, 64, DataFormat::Fp32).validate_capacity(false).is_ok());
+    assert!(Problem::new(1, 1, 164, DataFormat::Fp32).validate_capacity(false).is_err());
+    // BF16 through the split layout also fails above its own ceiling
+    // (5 vectors of BF16: (1.5MB - 256KB) / (5*2KB) = 131 tiles).
+    assert!(Problem::new(1, 1, 164, DataFormat::Bf16).validate_capacity(false).is_err());
+}
+
+/// Engine polymorphism: the solver is generic over ComputeEngine (compile-
+/// time check that dyn dispatch is used consistently).
+#[test]
+fn solver_accepts_dyn_engine() {
+    let engine: Box<dyn ComputeEngine> = Box::new(NativeEngine::new());
+    let p = Problem::new(1, 1, 2, DataFormat::Fp32);
+    let grid = p.make_grid().unwrap();
+    let b = solver::dist_random(&p, 10);
+    let mut opts = default_opts(PcgVariant::SplitFp32);
+    opts.max_iters = 5;
+    opts.tol_abs = 0.0;
+    let cost = CostModel::default();
+    let mut prof = Profiler::disabled();
+    let res = solver::solve(&grid, &p, &b, engine.as_ref(), &cost, &opts, &mut prof).unwrap();
+    assert_eq!(res.iters, 5);
+}

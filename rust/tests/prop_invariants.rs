@@ -1,0 +1,371 @@
+//! Property-based tests over the simulator's invariants, using the
+//! from-scratch harness in `wormsim::util::prop` (proptest is unavailable
+//! offline). Every property is seed-reproducible; failures print the seed
+//! and the failing input.
+
+use wormsim::arch::bf16::{bf16_round, ftz_f32, Bf16};
+use wormsim::arch::DataFormat;
+use wormsim::device::cb::CircularBuffer;
+use wormsim::device::{Coord, Sram};
+use wormsim::engine::{ComputeEngine, CoreBlock, Halos, NativeEngine, StencilCoeffs};
+use wormsim::noc::patterns::{reduce_tree, RoutePattern};
+use wormsim::noc::{xy_route, NocSim};
+use wormsim::tile::layout::{to_logical, to_physical, TileShape};
+use wormsim::tile::shift::{pointer_row_shift, shift_logical, shift_physical_ew};
+use wormsim::tile::{ShiftDir, Tile};
+use wormsim::timing::Calib;
+use wormsim::util::prng::Rng;
+use wormsim::util::prop::{check, check_bool, f32_nasty, pair, usize_in, vec_of, Gen};
+
+// ---------------------------------------------------------------------
+// Numerics invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_bf16_roundtrip_idempotent() {
+    let g = vec_of(f32_nasty(), 1, 64);
+    check("bf16-idempotent", 0xB16, &g, |xs| {
+        for &x in xs {
+            let once = bf16_round(x);
+            let twice = bf16_round(once);
+            if once.is_nan() {
+                continue;
+            }
+            if once != twice {
+                return Err(format!("{x} -> {once} -> {twice}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bf16_never_yields_subnormal() {
+    let g = pair(f32_nasty(), f32_nasty());
+    check("bf16-no-subnormal", 0xB17, &g, |&(a, b)| {
+        let r = Bf16::mul(Bf16::from_f32(a), Bf16::from_f32(b)).to_f32();
+        if r != 0.0 && r.is_finite() && !r.is_normal() {
+            return Err(format!("{a} * {b} produced subnormal {r}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ftz_preserves_normals() {
+    let g = f32_nasty();
+    check("ftz-normals", 0xB18, &g, |&x| {
+        if x.is_normal() && ftz_f32(x) != x {
+            return Err(format!("normal {x} changed"));
+        }
+        if !x.is_nan() && x != 0.0 && !x.is_normal() && x.is_finite() && ftz_f32(x) != 0.0 {
+            return Err(format!("subnormal {x} survived"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bf16_monotone_rounding() {
+    // Rounding is monotone: a <= b => round(a) <= round(b).
+    let g = pair(f32_nasty(), f32_nasty());
+    check_bool("bf16-monotone", 0xB19, &g, |&(a, b)| {
+        if a.is_nan() || b.is_nan() {
+            return true;
+        }
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        bf16_round(lo) <= bf16_round(hi)
+    });
+}
+
+// ---------------------------------------------------------------------
+// Tile layout + shift invariants
+// ---------------------------------------------------------------------
+
+fn rand_tile_gen(shape: TileShape) -> Gen<Tile> {
+    Gen::new(move |r: &mut Rng| {
+        Tile::from_fn(shape, DataFormat::Fp32, |_, _| r.next_f32() * 2.0 - 1.0)
+    })
+}
+
+#[test]
+fn prop_physical_layout_roundtrip() {
+    for shape in [TileShape::SQUARE, TileShape::STENCIL] {
+        let g = rand_tile_gen(shape);
+        check("phys-roundtrip", 0x71, &g, |t| {
+            let phys = to_physical(shape, &t.data);
+            let back = to_logical(shape, &phys);
+            if back == t.data {
+                Ok(())
+            } else {
+                Err("physical interleave not a bijection".to_string())
+            }
+        });
+    }
+}
+
+#[test]
+fn prop_pointer_shift_equals_logical_shift() {
+    let g = rand_tile_gen(TileShape::STENCIL);
+    check("ptr-shift", 0x72, &g, |t| {
+        let (n, missing_n) = pointer_row_shift(t, -1);
+        if n != shift_logical(t, ShiftDir::North, None) || missing_n != vec![0] {
+            return Err("north pointer shift mismatch".into());
+        }
+        let (s, missing_s) = pointer_row_shift(t, 1);
+        if s != shift_logical(t, ShiftDir::South, None) || missing_s != vec![63] {
+            return Err("south pointer shift mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transpose_pipeline_equals_logical_column_shift() {
+    // The §6.3 transpose→shift→transpose pipeline == the logical E/W shift,
+    // for random tiles and random halo columns, always in 4 segments.
+    let g = pair(rand_tile_gen(TileShape::STENCIL), vec_of(f32_nasty(), 64, 64));
+    check("ew-pipeline", 0x73, &g, |(t, halo)| {
+        for dir in [ShiftDir::East, ShiftDir::West] {
+            let (phys, segs) = shift_physical_ew(t, dir, Some(halo));
+            let logical = shift_logical(t, dir, Some(halo));
+            if phys != logical {
+                return Err(format!("{dir:?} pipeline mismatch"));
+            }
+            if segs != 4 {
+                return Err(format!("expected 4 halo segments, got {segs}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shift_then_unshift_identity_on_interior() {
+    let g = rand_tile_gen(TileShape::STENCIL);
+    check("shift-unshift", 0x74, &g, |t| {
+        let north = shift_logical(t, ShiftDir::North, None);
+        let back = shift_logical(&north, ShiftDir::South, None);
+        // Rows 0..62 of `back` must equal rows 0..62 of the original.
+        for r in 0..63 {
+            if back.row(r) != t.row(r) {
+                return Err(format!("row {r} not restored"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// NoC invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_xy_route_connects_and_has_manhattan_length() {
+    let g = pair(pair(usize_in(0, 7), usize_in(0, 6)), pair(usize_in(0, 7), usize_in(0, 6)));
+    check("xy-route", 0x90, &g, |&((r1, c1), (r2, c2))| {
+        let s = Coord::new(r1, c1);
+        let d = Coord::new(r2, c2);
+        let route = xy_route(s, d);
+        if route.len() != s.manhattan(d) {
+            return Err(format!("length {} != manhattan {}", route.len(), s.manhattan(d)));
+        }
+        let mut cur = s;
+        for link in &route {
+            if link.from != cur || link.from.manhattan(link.to) != 1 {
+                return Err("route not contiguous unit steps".into());
+            }
+            cur = link.to;
+        }
+        if cur != d {
+            return Err("route does not reach destination".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_noc_arrival_after_issue_and_monotone_in_bytes() {
+    let g = pair(
+        pair(pair(usize_in(0, 7), usize_in(0, 6)), pair(usize_in(0, 7), usize_in(0, 6))),
+        usize_in(1, 1 << 14),
+    );
+    check("noc-monotone", 0x91, &g, |&(((r1, c1), (r2, c2)), bytes)| {
+        let calib = Calib::default();
+        let s = Coord::new(r1, c1);
+        let d = Coord::new(r2, c2);
+        let mut noc = NocSim::new();
+        let small = noc.send(&calib, s, d, bytes as u64, 0.0);
+        let mut noc2 = NocSim::new();
+        let big = noc2.send(&calib, s, d, (bytes * 2) as u64, 0.0);
+        if small.arrival < small.issue_done {
+            return Err("arrival before issue".into());
+        }
+        if big.arrival < small.arrival {
+            return Err("more bytes arrived earlier".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reduce_trees_are_spanning() {
+    let g = pair(usize_in(1, 8), usize_in(1, 7));
+    check("trees-span", 0x92, &g, |&(rows, cols)| {
+        for pattern in [RoutePattern::Naive, RoutePattern::Center, RoutePattern::Direct] {
+            let t = reduce_tree(pattern, rows, cols);
+            if t.parent.len() != rows * cols - 1 {
+                return Err(format!("{pattern:?}: {} parents for {} cores", t.parent.len(), rows * cols));
+            }
+            for r in 0..rows {
+                for c in 0..cols {
+                    let d = t.depth(Coord::new(r, c)); // panics on cycles
+                    if d > rows * cols {
+                        return Err("depth exceeds core count".into());
+                    }
+                }
+            }
+            // Fan-in limits (§5.2): naive ≤ 2, center ≤ 4.
+            let max_fan = t.max_fan_in();
+            let limit = match pattern {
+                RoutePattern::Naive => 2,
+                RoutePattern::Center => 4,
+                RoutePattern::Direct => rows * cols - 1,
+            };
+            if max_fan > limit.max(1) {
+                return Err(format!("{pattern:?}: fan-in {max_fan} > {limit}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Device invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_cb_fifo_order_preserved() {
+    let g = vec_of(usize_in(0, 1000), 1, 16);
+    check("cb-fifo", 0xA0, &g, |vals| {
+        let mut cb = CircularBuffer::new("t", 2048, vals.len().max(1));
+        for &v in vals {
+            cb.reserve_back(1).map_err(|e| e.to_string())?;
+            cb.push_back(Tile::from_vec(
+                TileShape::STENCIL,
+                DataFormat::Bf16,
+                vec![v as f32; 1024],
+            ))
+            .map_err(|e| e.to_string())?;
+        }
+        for &v in vals {
+            let t = cb.pop_front().map_err(|e| e.to_string())?;
+            if t.get(0, 0) != bf16_round(v as f32) {
+                return Err(format!("FIFO order violated at {v}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sram_allocations_disjoint_and_aligned() {
+    let g = vec_of(usize_in(1, 4096), 1, 32);
+    check("sram-disjoint", 0xA1, &g, |sizes| {
+        let mut sram = Sram::with_capacity("t", 1 << 20);
+        let mut spans: Vec<(usize, usize)> = Vec::new();
+        for (i, &len) in sizes.iter().enumerate() {
+            match sram.alloc(&format!("a{i}"), len) {
+                Ok(off) => {
+                    if off % 32 != 0 {
+                        return Err(format!("offset {off} not 32B aligned"));
+                    }
+                    for &(o, l) in &spans {
+                        if off < o + l && o < off + len {
+                            return Err("overlapping allocations".into());
+                        }
+                    }
+                    spans.push((off, len));
+                }
+                Err(_) => break, // capacity exhausted is fine
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Solver/kernel algebraic invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_stencil_is_linear() {
+    // A(ax + by) = a·Ax + b·Ay at FP32 (exactly linear modulo FTZ noise).
+    let g = pair(usize_in(1, 4), usize_in(0, 1 << 30));
+    check("stencil-linear", 0xC0, &g, |&(nz, seed)| {
+        let e = NativeEngine::new();
+        let mut rng = Rng::new(seed as u64);
+        let x = CoreBlock::from_fn(DataFormat::Fp32, nz, |_, _, _| rng.next_f32() - 0.5);
+        let y = CoreBlock::from_fn(DataFormat::Fp32, nz, |_, _, _| rng.next_f32() - 0.5);
+        let (a, b) = (0.75f32, -1.25f32);
+        let combo = e
+            .axpy(&e.scale(&x, a).unwrap(), b, &y)
+            .map_err(|er| er.to_string())?;
+        let lhs = e
+            .stencil_apply(&combo, &Halos::none(), StencilCoeffs::LAPLACIAN)
+            .map_err(|er| er.to_string())?;
+        let ax = e.stencil_apply(&x, &Halos::none(), StencilCoeffs::LAPLACIAN).unwrap();
+        let ay = e.stencil_apply(&y, &Halos::none(), StencilCoeffs::LAPLACIAN).unwrap();
+        let rhs = e.axpy(&e.scale(&ax, a).unwrap(), b, &ay).unwrap();
+        for (l, r) in lhs.to_flat().iter().zip(rhs.to_flat()) {
+            if (l - r).abs() > 2e-4 {
+                return Err(format!("linearity violated: {l} vs {r}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stencil_operator_is_symmetric() {
+    // <Ax, y> == <x, Ay> — the SPD property CG relies on (Algorithm 1
+    // requires symmetric positive definite A).
+    let g = usize_in(0, 1 << 30);
+    check("stencil-symmetric", 0xC1, &g, |&seed| {
+        let e = NativeEngine::new();
+        let mut rng = Rng::new(seed as u64);
+        let nz = 3;
+        let x = CoreBlock::from_fn(DataFormat::Fp32, nz, |_, _, _| rng.next_f32() - 0.5);
+        let y = CoreBlock::from_fn(DataFormat::Fp32, nz, |_, _, _| rng.next_f32() - 0.5);
+        let ax = e.stencil_apply(&x, &Halos::none(), StencilCoeffs::LAPLACIAN).unwrap();
+        let ay = e.stencil_apply(&y, &Halos::none(), StencilCoeffs::LAPLACIAN).unwrap();
+        let axy = e.dot_partial(&ax, &y).unwrap() as f64;
+        let xay = e.dot_partial(&x, &ay).unwrap() as f64;
+        let denom = axy.abs().max(1.0);
+        if ((axy - xay) / denom).abs() > 1e-4 {
+            return Err(format!("<Ax,y>={axy} != <x,Ay>={xay}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dot_commutative_and_psd() {
+    let g = pair(usize_in(1, 4), usize_in(0, 1 << 30));
+    check("dot-psd", 0xC2, &g, |&(nz, seed)| {
+        let e = NativeEngine::new();
+        let mut rng = Rng::new(seed as u64);
+        let a = CoreBlock::from_fn(DataFormat::Fp32, nz, |_, _, _| rng.next_f32() - 0.5);
+        let b = CoreBlock::from_fn(DataFormat::Fp32, nz, |_, _, _| rng.next_f32() - 0.5);
+        let ab = e.dot_partial(&a, &b).unwrap();
+        let ba = e.dot_partial(&b, &a).unwrap();
+        if (ab - ba).abs() > 1e-3 * ab.abs().max(1.0) {
+            return Err(format!("dot not commutative: {ab} vs {ba}"));
+        }
+        let aa = e.dot_partial(&a, &a).unwrap();
+        if aa < 0.0 {
+            return Err(format!("<a,a> = {aa} < 0"));
+        }
+        Ok(())
+    });
+}
