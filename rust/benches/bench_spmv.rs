@@ -1,0 +1,107 @@
+//! Bench: general SELL SpMV on the simulated grid vs the cuSPARSE
+//! Sliced-ELL traffic model (`baseline::sell`) — the on-device
+//! counterpart the §7.3 GPU baseline has been missing.
+//!
+//! Sweeps nnz/row ∈ {7, 27, 64} over a uniform-row SPD circulant (the
+//! padding-free case the GPU model assumes), times both the DRAM-streaming
+//! and SRAM-resident variants, and reconciles the byte traffic against the
+//! GPU model: value and index bytes must match exactly; the `x`/`y` terms
+//! differ by construction and are explained in the output.
+
+use wormsim::arch::DataFormat;
+use wormsim::baseline::SellTraffic;
+use wormsim::device::TensixGrid;
+use wormsim::engine::NativeEngine;
+use wormsim::kernels::spmv::{SpmvConfig, SpmvMode, SpmvOperator};
+use wormsim::sparse::{circulant_spd, RowPartition};
+use wormsim::timing::cost::CostModel;
+use wormsim::util::bench::Bencher;
+use wormsim::util::prng::Rng;
+
+fn main() {
+    let mut b = Bencher::new("spmv");
+    let cost = CostModel::default();
+    let engine = NativeEngine::new();
+    let (grid_rows, grid_cols, tiles) = (2usize, 2usize, 2usize);
+    let grid = TensixGrid::new(grid_rows, grid_cols).unwrap();
+    let n = grid_rows * grid_cols * tiles * 1024;
+
+    for nnz in [7usize, 27, 64] {
+        let a = circulant_spd(n, nnz, 2026).unwrap();
+        let part = RowPartition::row_block(grid_rows, grid_cols, n).unwrap();
+        let mut rng = Rng::new(11);
+        let xg: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+        let x = part.dist_from_global(DataFormat::Fp32, &xg);
+
+        // GPU reference: same nnz/row, FP32 values, 32-bit indices.
+        let gpu = SellTraffic {
+            nnz_per_row: nnz,
+            value_bytes: 4,
+            index_bytes: 4,
+            x_read_bytes: 8.0,
+            y_write_bytes: 4,
+        };
+
+        for mode in [SpmvMode::DramStream, SpmvMode::SramResident] {
+            let tag = match mode {
+                SpmvMode::DramStream => "dram-stream",
+                SpmvMode::SramResident => "sram-resident",
+            };
+            let op = match SpmvOperator::new(
+                &a,
+                part.clone(),
+                SpmvConfig::new(DataFormat::Fp32, mode),
+            ) {
+                Ok(op) => op,
+                Err(e) => {
+                    println!("nnz{nnz}/{tag:<14} skipped: {e}");
+                    continue;
+                }
+            };
+            let mut last = None;
+            b.bench(&format!("nnz{nnz}/{tag}"), || {
+                let (y, t) = op.apply(&grid, &x, &engine, &cost).unwrap();
+                std::hint::black_box(&y);
+                let sim = t.total_ns;
+                last = Some(t);
+                Some(sim)
+            });
+            let t = last.unwrap();
+            let ours = t.traffic;
+
+            // ---- reconcile with the cuSPARSE traffic model -------------
+            let gpu_vals = (gpu.nnz_per_row * gpu.value_bytes * n) as u64;
+            let gpu_idx = (gpu.nnz_per_row * gpu.index_bytes * n) as u64;
+            assert_eq!(
+                ours.value_bytes, gpu_vals,
+                "uniform rows: SELL value bytes must equal the GPU model"
+            );
+            assert_eq!(
+                ours.index_bytes, gpu_idx,
+                "uniform rows: SELL index bytes must equal the GPU model"
+            );
+            assert_eq!(ours.y_write_bytes, (gpu.y_write_bytes * n) as u64);
+            println!(
+                "  traffic/row: values {}B + indices {}B (= GPU model) | \
+                 x: ours {:.2}B NoC-gather vs GPU {:.1}B cache-effective | \
+                 y: {}B both | simulated {:.2} GB/s effective",
+                ours.value_bytes / n as u64,
+                ours.index_bytes / n as u64,
+                ours.x_gather_bytes as f64 / n as f64,
+                gpu.x_read_bytes,
+                ours.y_write_bytes / n as u64,
+                t.achieved_gbs(),
+            );
+            println!(
+                "  difference explained: the GPU model charges ~2 effective x \
+                 reads/row through L2; the Wormhole kernel keeps the local x \
+                 block in SRAM and only moves the remote column footprint \
+                 over the NoC ({} entries total), so its x term is smaller; \
+                 value/index/y bytes agree term for term.",
+                op.gather.remote_entries
+            );
+        }
+    }
+
+    b.finish();
+}

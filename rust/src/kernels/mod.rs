@@ -1,12 +1,16 @@
-//! The paper's three numerical kernels (§4–§6): element-wise arithmetic,
-//! global dot-product reduction, and the 7-point 3D stencil. Each kernel
-//! produces values through a [`crate::engine::ComputeEngine`] and timing
-//! through the cost model + NoC simulator.
+//! The paper's three numerical kernels (§4–§6) — element-wise arithmetic,
+//! global dot-product reduction, and the 7-point 3D stencil — plus the
+//! general sparse SpMV that extends the stencil's fixed operator to
+//! arbitrary matrices (see [`crate::sparse`]). Each kernel produces values
+//! through a [`crate::engine::ComputeEngine`] and timing through the cost
+//! model + NoC simulator.
 
 pub mod eltwise;
 pub mod reduction;
+pub mod spmv;
 pub mod stencil;
 
 pub use eltwise::{block_op_ns, eltwise_stream_timing, EltwiseTiming};
 pub use reduction::{run_dot, DotConfig, DotMethod, DotOutcome};
+pub use spmv::{run_spmv, SpmvConfig, SpmvMode, SpmvOperator, SpmvTiming, SpmvTraffic};
 pub use stencil::{run_stencil, StencilConfig, StencilTiming, StencilVariant};

@@ -1,0 +1,645 @@
+//! General SpMV on the simulated Tensix grid.
+//!
+//! `y = A x` for an arbitrary sparse matrix in per-core SELL-C-32 (see
+//! [`crate::sparse`]), mirroring how the three paper kernels are built:
+//! *values* go through the [`ComputeEngine`] trait, *cycles* through the
+//! cost model and the NoC simulator.
+//!
+//! Per application, every core
+//!
+//! 1. receives the remote `x` entries its column footprint needs (one
+//!    batched NoC write per owning core, from the partition's
+//!    [`GatherPlan`] — the unstructured analog of the stencil's halo
+//!    exchange, §6.3);
+//! 2. has its baby RISC-Vs assemble operand tiles by indexed L1
+//!    gather/scatter — charged per padded entry at the §6.3 L1
+//!    load+store latency, the cost the stencil's pointer trick (§6.2)
+//!    exists to avoid;
+//! 3. multiply-accumulates slice columns as whole-tile ops: one eltwise
+//!    multiply (streamed) plus one accumulate (dependent — the running
+//!    `y` chains) per operand tile.
+//!
+//! Two variants mirror the §7.1 split/fused distinction: **DramStream**
+//! re-stages the matrix (values + indices) from DRAM on every
+//! application, charged serially as an upper bound; **SramResident**
+//! keeps it in L1, which the per-core SRAM footprint check must admit.
+//!
+//! The value path computes each row's products and accumulations in the
+//! row's stored entry order with the engine's per-op rounding. For the
+//! stencil-ordered Laplacian on the stencil-aligned partition this makes
+//! the sparse SpMV **bit-identical** to
+//! [`ComputeEngine::stencil_apply`] — interleaved missing-neighbor terms
+//! add an exact ±0 and trailing padding multiplies to ±0, both rounding
+//! no-ops — which is what the solver's operator round-trip test pins.
+
+use crate::arch::constants::{L1_ALIGN, SRAM_RESERVE_SPLIT, TILE_ELEMS};
+use crate::arch::{ComputeUnit, DataFormat};
+use crate::device::TensixGrid;
+use crate::engine::{ComputeEngine, CoreBlock};
+use crate::error::{Result, SimError};
+use crate::noc::NocSim;
+use crate::sparse::{CsrMatrix, GatherPlan, RowPartition, SellMatrix, SellStats, SELL_SLICE_HEIGHT};
+use crate::tile::EltwiseOp;
+use crate::timing::cost::{CostModel, PipelineMode, TileOpKind};
+use crate::timing::SimNs;
+
+/// Where the matrix lives between applications (§7.1 split/fused analog).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpmvMode {
+    /// Stream values + indices from DRAM on every application.
+    DramStream,
+    /// Matrix resident in L1 SRAM; must pass the footprint check.
+    SramResident,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpmvConfig {
+    pub df: DataFormat,
+    pub unit: ComputeUnit,
+    pub mode: SpmvMode,
+    /// SELL sorting window (rows); 1 or a multiple of the slice height.
+    pub sigma: usize,
+}
+
+impl SpmvConfig {
+    /// Default σ: 8 slices of length-sorting window.
+    pub const DEFAULT_SIGMA: usize = 8 * SELL_SLICE_HEIGHT;
+
+    pub fn new(df: DataFormat, mode: SpmvMode) -> Self {
+        Self {
+            df,
+            unit: ComputeUnit::for_format(df),
+            mode,
+            sigma: Self::DEFAULT_SIGMA,
+        }
+    }
+
+    pub fn with_sigma(mut self, sigma: usize) -> Self {
+        self.sigma = sigma;
+        self
+    }
+}
+
+/// Byte traffic of one SpMV application (the on-device counterpart of the
+/// [`crate::baseline::sell::SellTraffic`] cuSPARSE model).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpmvTraffic {
+    /// Stored matrix values moved (padding included), all cores.
+    pub value_bytes: u64,
+    /// Stored 32-bit column indices moved.
+    pub index_bytes: u64,
+    /// Remote `x` entries over the NoC (32 B-aligned batches).
+    pub x_gather_bytes: u64,
+    /// Result vector written back.
+    pub y_write_bytes: u64,
+}
+
+impl SpmvTraffic {
+    pub fn total(&self) -> u64 {
+        self.value_bytes + self.index_bytes + self.x_gather_bytes + self.y_write_bytes
+    }
+
+    pub fn per_row(&self, n_rows: usize) -> f64 {
+        self.total() as f64 / n_rows.max(1) as f64
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpmvTiming {
+    /// Whole-application time (slowest core; gather waits included).
+    pub total_ns: SimNs,
+    /// Slowest core's NoC gather wait (send issue + inbound arrival).
+    pub gather_ns: SimNs,
+    /// Slowest core's local phase: RISC-V tile assembly + tile math.
+    pub compute_ns: SimNs,
+    /// Slowest core's DRAM staging (zero for SramResident).
+    pub dram_ns: SimNs,
+    pub messages: u64,
+    pub bytes: u64,
+    pub traffic: SpmvTraffic,
+}
+
+impl SpmvTiming {
+    /// Achieved effective bandwidth over the counted traffic, GB/s.
+    pub fn achieved_gbs(&self) -> f64 {
+        if self.total_ns <= 0.0 {
+            0.0
+        } else {
+            self.traffic.total() as f64 / self.total_ns
+        }
+    }
+}
+
+fn align32(bytes: usize) -> u64 {
+    (bytes as u64).div_ceil(L1_ALIGN as u64) * L1_ALIGN as u64
+}
+
+/// A matrix partitioned, converted, and preloaded for repeated SpMV on
+/// the grid: the sparse implementor of the solver's operator abstraction.
+#[derive(Debug, Clone)]
+pub struct SpmvOperator {
+    pub cfg: SpmvConfig,
+    pub part: RowPartition,
+    pub gather: GatherPlan,
+    /// Per-core SELL conversions (kept for stats/reporting).
+    pub sells: Vec<SellMatrix>,
+    /// k-th-entry value blocks per core, already quantized at `cfg.df`.
+    val_blocks: Vec<Vec<CoreBlock>>,
+    /// Global column per (core, k, slot); 0 under zero-valued padding.
+    col_maps: Vec<Vec<Vec<u32>>>,
+    diag: Vec<f32>,
+}
+
+impl SpmvOperator {
+    /// Partition `a`, convert each core's rows to SELL-C-32, verify the
+    /// per-core SRAM footprint, and precompute the operand value tiles.
+    pub fn new(a: &CsrMatrix, part: RowPartition, cfg: SpmvConfig) -> Result<Self> {
+        if a.n_rows != a.n_cols {
+            return Err(SimError::BadProblem {
+                what: format!("SpMV operator must be square, got {}x{}", a.n_rows, a.n_cols),
+            });
+        }
+        if a.n_rows != part.n {
+            return Err(SimError::BadProblem {
+                what: format!("matrix dimension {} != partition n {}", a.n_rows, part.n),
+            });
+        }
+        if !cfg.unit.supports(cfg.df) {
+            return Err(SimError::BadProblem {
+                what: format!("{} cannot execute {} (§3.3)", cfg.unit, cfg.df),
+            });
+        }
+        let gather = part.gather_plan(a)?;
+        let n_cores = part.n_cores();
+        let slots = part.slots_per_core();
+        let tiles = part.tiles_per_core;
+
+        let mut sells = Vec::with_capacity(n_cores);
+        let mut val_blocks = Vec::with_capacity(n_cores);
+        let mut col_maps = Vec::with_capacity(n_cores);
+        for core in 0..n_cores {
+            // Core-local CSR: one row per slot, in slot order; padding
+            // slots are empty rows.
+            let mut row_ptr = Vec::with_capacity(slots + 1);
+            let mut col_idx = Vec::new();
+            let mut vals = Vec::new();
+            row_ptr.push(0);
+            for slot in 0..slots {
+                if let Some(g) = part.slot_to_global(core, slot) {
+                    let (cols, rvals) = a.row(g);
+                    col_idx.extend_from_slice(cols);
+                    vals.extend_from_slice(rvals);
+                }
+                row_ptr.push(col_idx.len());
+            }
+            let local = CsrMatrix::new(slots, part.n, row_ptr, col_idx, vals)?;
+            let sell = SellMatrix::from_csr(&local, SELL_SLICE_HEIGHT, cfg.sigma)?;
+
+            // SRAM footprint (§7.2 style, through the bump allocator).
+            let matrix_bytes =
+                (sell.value_bytes(cfg.df) + sell.index_bytes()) as usize + 8 * sell.n_slices();
+            let vector_bytes = 2 * tiles * cfg.df.tile_bytes(); // x + y blocks
+            let gather_bytes = align32(gather.remote_entries_of(core) * cfg.df.bytes()) as usize;
+            let mut regions: Vec<(&str, usize)> = vec![
+                ("spmv/x+y", vector_bytes),
+                ("spmv/x-gather", gather_bytes),
+            ];
+            match cfg.mode {
+                SpmvMode::SramResident => regions.push(("spmv/matrix", matrix_bytes)),
+                SpmvMode::DramStream => {
+                    // Double-buffered value+index staging, one tile column.
+                    regions.push(("spmv/matrix-cb", 2 * TILE_ELEMS * (cfg.df.bytes() + 4)));
+                }
+            }
+            part.check_sram(core, SRAM_RESERVE_SPLIT, &regions)?;
+
+            // Operand tiles: for each entry position k, the value block
+            // (quantized at df by construction) and the global column map.
+            let kmax = sell.slice_width.iter().copied().max().unwrap_or(0);
+            let mut vk = Vec::with_capacity(kmax);
+            let mut ck = Vec::with_capacity(kmax);
+            for k in 0..kmax {
+                vk.push(CoreBlock::from_fn(cfg.df, tiles, |z, xr, yc| {
+                    let slot = z * TILE_ELEMS + xr * 16 + yc;
+                    let (cols, rvals) = local.row(slot);
+                    if k < cols.len() { rvals[k] } else { 0.0 }
+                }));
+                let cols_k: Vec<u32> = (0..slots)
+                    .map(|slot| {
+                        let (cols, _) = local.row(slot);
+                        if k < cols.len() { cols[k] } else { 0 }
+                    })
+                    .collect();
+                ck.push(cols_k);
+            }
+            sells.push(sell);
+            val_blocks.push(vk);
+            col_maps.push(ck);
+        }
+
+        Ok(Self {
+            cfg,
+            part,
+            gather,
+            sells,
+            val_blocks,
+            col_maps,
+            diag: a.diagonal(),
+        })
+    }
+
+    /// Aggregated SELL occupancy statistics over all cores.
+    pub fn stats(&self) -> SellStats {
+        let mut s = SellStats {
+            nnz: 0,
+            padded_nnz: 0,
+            n_slices: 0,
+            max_width: 0,
+        };
+        for sell in &self.sells {
+            let cs = sell.stats();
+            s.nnz += cs.nnz;
+            s.padded_nnz += cs.padded_nnz;
+            s.n_slices += cs.n_slices;
+            s.max_width = s.max_width.max(cs.max_width);
+        }
+        s
+    }
+
+    /// The matrix diagonal (for the Jacobi preconditioner).
+    pub fn diagonal(&self) -> &[f32] {
+        &self.diag
+    }
+
+    /// `Some(d)` when every diagonal entry is exactly `d` — the solver
+    /// then preconditions with a scalar scale, matching the stencil path
+    /// bit-for-bit.
+    pub fn uniform_diagonal(&self) -> Option<f32> {
+        let d = *self.diag.first()?;
+        self.diag.iter().all(|&v| v == d).then_some(d)
+    }
+
+    /// Byte traffic of one application.
+    pub fn traffic(&self) -> SpmvTraffic {
+        SpmvTraffic {
+            value_bytes: self.sells.iter().map(|s| s.value_bytes(self.cfg.df)).sum(),
+            index_bytes: self.sells.iter().map(|s| s.index_bytes()).sum(),
+            x_gather_bytes: self.gather.bytes(self.cfg.df),
+            y_write_bytes: (self.part.n * self.cfg.df.bytes()) as u64,
+        }
+    }
+
+    /// One SpMV application: values through `engine`, cycles through the
+    /// cost model + NoC simulator.
+    pub fn apply(
+        &self,
+        grid: &TensixGrid,
+        x: &[CoreBlock],
+        engine: &dyn ComputeEngine,
+        cost: &CostModel,
+    ) -> Result<(Vec<CoreBlock>, SpmvTiming)> {
+        let n_cores = self.part.n_cores();
+        if grid.rows != self.part.grid_rows || grid.cols != self.part.grid_cols {
+            return Err(SimError::BadProblem {
+                what: format!(
+                    "grid {}x{} does not match partition {}x{}",
+                    grid.rows, grid.cols, self.part.grid_rows, self.part.grid_cols
+                ),
+            });
+        }
+        if x.len() != n_cores {
+            return Err(SimError::BadProblem {
+                what: format!("operand has {} blocks for {n_cores} cores", x.len()),
+            });
+        }
+        let df = self.cfg.df;
+        let tiles = self.part.tiles_per_core;
+        for blk in x {
+            if blk.df != df || blk.nz() != tiles {
+                return Err(SimError::BadProblem {
+                    what: format!(
+                        "operand block {:?}/{} does not match operator {df}/{tiles}",
+                        blk.df,
+                        blk.nz()
+                    ),
+                });
+            }
+        }
+        let calib = &cost.calib;
+
+        // ---- NoC gather of remote x entries (cf. §6.3 halo exchange) ----
+        let mut noc = NocSim::new();
+        let mut send_done = vec![0.0f64; n_cores];
+        let mut recv_ready = vec![0.0f64; n_cores];
+        for owner in 0..n_cores {
+            let mut cursor = 0.0f64;
+            let mut first = true;
+            for consumer in 0..n_cores {
+                let Some(&cnt) = self.gather.per_core[consumer].get(&owner) else {
+                    continue;
+                };
+                let bytes = align32(cnt * df.bytes());
+                let issue = if first {
+                    calib.noc_issue_cycles
+                } else {
+                    calib.noc_batch_issue_cycles
+                };
+                first = false;
+                let d = noc.send_with_issue(
+                    calib,
+                    self.part.core_coord(owner),
+                    self.part.core_coord(consumer),
+                    bytes,
+                    cursor,
+                    issue,
+                );
+                cursor = d.issue_done;
+                if d.arrival > recv_ready[consumer] {
+                    recv_ready[consumer] = d.arrival;
+                }
+            }
+            send_done[owner] = cursor;
+        }
+
+        // ---- per-core local phase + values ------------------------------
+        let mul = cost.tile_op_cycles(self.cfg.unit, df, TileOpKind::EltwiseBinary, PipelineMode::Streamed);
+        let acc = cost.tile_op_cycles(self.cfg.unit, df, TileOpKind::EltwiseBinary, PipelineMode::Dependent);
+        let xg = self.part.dist_to_global(x);
+
+        let mut out = Vec::with_capacity(n_cores);
+        let mut total_ns = 0.0f64;
+        let mut max_gather = 0.0f64;
+        let mut max_compute = 0.0f64;
+        let mut max_dram = 0.0f64;
+        for core in 0..n_cores {
+            // Values: multiply-accumulate the entry-position columns in
+            // stored row order (see module docs on bit-exactness).
+            let mut y: Option<CoreBlock> = None;
+            for (k, vk) in self.val_blocks[core].iter().enumerate() {
+                let cols = &self.col_maps[core][k];
+                let xk = CoreBlock::from_fn(df, tiles, |z, xr, yc| {
+                    xg[cols[z * TILE_ELEMS + xr * 16 + yc] as usize]
+                });
+                let prod = engine.eltwise(EltwiseOp::Mul, vk, &xk)?;
+                match y.as_mut() {
+                    None => y = Some(prod),
+                    Some(yb) => engine.axpy_into(yb, 1.0, &prod)?,
+                }
+            }
+            out.push(y.unwrap_or_else(|| CoreBlock::zeros(df, tiles)));
+
+            // Timing.
+            let padded = self.sells[core].padded_nnz() as u64;
+            let tile_cols = padded.div_ceil(TILE_ELEMS as u64);
+            // Indexed gather/scatter through L1 by the baby RISC-Vs: one
+            // load + one store per padded operand entry (§6.3 latency).
+            let assemble = 2 * calib.zero_fill_cycles_per_elem * padded;
+            let math = tile_cols * (mul + acc);
+            let local_ns = crate::timing::cycles_ns(assemble + math);
+            let dram_ns = match self.cfg.mode {
+                SpmvMode::DramStream => {
+                    let bytes = self.sells[core].value_bytes(df) + self.sells[core].index_bytes();
+                    crate::timing::cycles_ns(cost.dram_stream_cycles(bytes))
+                }
+                SpmvMode::SramResident => 0.0,
+            };
+            let ready = send_done[core].max(recv_ready[core]);
+            let end = ready + dram_ns + local_ns;
+            total_ns = total_ns.max(end);
+            max_gather = max_gather.max(ready);
+            max_compute = max_compute.max(local_ns);
+            max_dram = max_dram.max(dram_ns);
+        }
+
+        Ok((
+            out,
+            SpmvTiming {
+                total_ns,
+                gather_ns: max_gather,
+                compute_ns: max_compute,
+                dram_ns: max_dram,
+                messages: noc.messages_sent,
+                bytes: noc.bytes_sent,
+                traffic: self.traffic(),
+            },
+        ))
+    }
+}
+
+/// Run one SpMV — free-function form matching `run_stencil`/`run_dot`.
+pub fn run_spmv(
+    grid: &TensixGrid,
+    op: &SpmvOperator,
+    x: &[CoreBlock],
+    engine: &dyn ComputeEngine,
+    cost: &CostModel,
+) -> Result<(Vec<CoreBlock>, SpmvTiming)> {
+    op.apply(grid, x, engine, cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{NativeEngine, StencilCoeffs};
+    use crate::kernels::stencil::{run_stencil, StencilConfig, StencilVariant};
+    use crate::solver::problem::{dist_random, Problem};
+    use crate::sparse::{banded, circulant_spd, laplacian_3d};
+    use crate::util::prng::Rng;
+
+    fn laplacian_operator(
+        grid_rows: usize,
+        grid_cols: usize,
+        nz: usize,
+        df: DataFormat,
+        mode: SpmvMode,
+    ) -> SpmvOperator {
+        let a = laplacian_3d(64 * grid_rows, 16 * grid_cols, nz);
+        let part = RowPartition::stencil_aligned(grid_rows, grid_cols, nz).unwrap();
+        SpmvOperator::new(&a, part, SpmvConfig::new(df, mode)).unwrap()
+    }
+
+    #[test]
+    fn laplacian_spmv_bit_identical_to_stencil() {
+        // The acceptance-criterion core: explicit-matrix SpMV reproduces
+        // the matrix-free stencil engine exactly, at both formats.
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        for df in [DataFormat::Fp32, DataFormat::Bf16] {
+            let p = Problem::new(2, 2, 3, df);
+            let grid = p.make_grid().unwrap();
+            let x = dist_random(&p, 17);
+            let scfg = StencilConfig {
+                df,
+                unit: ComputeUnit::for_format(df),
+                tiles_per_core: 3,
+                variant: StencilVariant::FULL,
+                coeffs: StencilCoeffs::LAPLACIAN,
+            };
+            let (want, _) = run_stencil(&grid, &scfg, &x, &e, &cost).unwrap();
+            let op = laplacian_operator(2, 2, 3, df, SpmvMode::SramResident);
+            let (got, _) = op.apply(&grid, &x, &e, &cost).unwrap();
+            assert_eq!(got, want, "df {df}");
+        }
+    }
+
+    #[test]
+    fn general_matrix_matches_f64_oracle() {
+        let n = 2 * 1024;
+        let a = circulant_spd(n, 5, 3).unwrap();
+        let part = RowPartition::row_block(1, 2, n).unwrap();
+        let op = SpmvOperator::new(&a, part.clone(), SpmvConfig::new(DataFormat::Fp32, SpmvMode::SramResident)).unwrap();
+        let grid = TensixGrid::new(1, 2).unwrap();
+        let mut rng = Rng::new(4);
+        let xg: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+        let x = part.dist_from_global(DataFormat::Fp32, &xg);
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let (y, t) = op.apply(&grid, &x, &e, &cost).unwrap();
+        let got = part.dist_to_global(&y);
+        let want = a.apply_f64(&xg);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((*g as f64 - w).abs() < 1e-4, "row {i}: {g} vs {w}");
+        }
+        assert_eq!(t.messages, op.gather.messages());
+        assert!(t.total_ns > 0.0);
+    }
+
+    #[test]
+    fn dram_streaming_slower_than_resident() {
+        let n = 2 * 1024;
+        let a = banded(n, 16).unwrap();
+        let part = RowPartition::row_block(1, 2, n).unwrap();
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let grid = TensixGrid::new(1, 2).unwrap();
+        let ones = vec![1.0f32; n];
+        let x = part.dist_from_global(DataFormat::Fp32, &ones);
+        let mk = |mode| {
+            SpmvOperator::new(&a, part.clone(), SpmvConfig::new(DataFormat::Fp32, mode)).unwrap()
+        };
+        let (ys, ts) = mk(SpmvMode::SramResident).apply(&grid, &x, &e, &cost).unwrap();
+        let (yd, td) = mk(SpmvMode::DramStream).apply(&grid, &x, &e, &cost).unwrap();
+        assert_eq!(ys, yd, "mode must not change values");
+        assert_eq!(ts.dram_ns, 0.0);
+        assert!(td.dram_ns > 0.0);
+        assert!(td.total_ns > ts.total_ns);
+    }
+
+    #[test]
+    fn sram_ceiling_enforced_for_resident_matrix() {
+        // 64 nnz/row FP32 on one core with 8 tiles: 8192 rows × 64 × 8 B
+        // ≈ 4 MB of matrix ≫ 1.5 MB L1.
+        let n = 8 * 1024;
+        let a = banded(n, 32).unwrap();
+        let part = RowPartition::row_block(1, 1, n).unwrap();
+        let err = SpmvOperator::new(&a, part.clone(), SpmvConfig::new(DataFormat::Fp32, SpmvMode::SramResident));
+        assert!(matches!(err, Err(SimError::SramExhausted { .. })));
+        // Streaming the same matrix works.
+        assert!(SpmvOperator::new(&a, part, SpmvConfig::new(DataFormat::Fp32, SpmvMode::DramStream)).is_ok());
+    }
+
+    #[test]
+    fn uniform_seven_nnz_traffic_matches_cusparse_model() {
+        // Acceptance criterion: value/index bytes agree with
+        // baseline::sell::SellTraffic::laplacian_fp32 on a uniform
+        // 7-nnz/row matrix (no padding on either side).
+        let n = 2 * 1024;
+        let a = circulant_spd(n, 7, 9).unwrap();
+        let part = RowPartition::row_block(1, 2, n).unwrap();
+        let op = SpmvOperator::new(&a, part, SpmvConfig::new(DataFormat::Fp32, SpmvMode::SramResident)).unwrap();
+        let t = op.traffic();
+        let gpu = crate::baseline::sell::SellTraffic::laplacian_fp32();
+        assert_eq!(t.value_bytes, (gpu.nnz_per_row * gpu.value_bytes * n) as u64);
+        assert_eq!(t.index_bytes, (gpu.nnz_per_row * gpu.index_bytes * n) as u64);
+        assert_eq!(t.y_write_bytes, (gpu.y_write_bytes * n) as u64);
+        assert_eq!(op.stats().padded_nnz, 7 * n, "uniform rows pad nothing");
+    }
+
+    #[test]
+    fn gather_traffic_matches_halo_shape_on_laplacian() {
+        // Stencil-aligned Laplacian: remote x entries are exactly the §6.1
+        // halo faces, so NoC bytes scale with the core-boundary surface.
+        let op = laplacian_operator(2, 2, 2, DataFormat::Fp32, SpmvMode::SramResident);
+        // Per corner core: 16·nz south/north face + 64·nz east/west face.
+        assert_eq!(op.gather.remote_entries, 4 * (16 * 2 + 64 * 2) as u64);
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let p = Problem::new(2, 2, 2, DataFormat::Fp32);
+        let grid = p.make_grid().unwrap();
+        let x = dist_random(&p, 5);
+        let (_, t) = op.apply(&grid, &x, &e, &cost).unwrap();
+        assert_eq!(t.bytes, op.gather.bytes(DataFormat::Fp32));
+        assert!(t.gather_ns > 0.0 && t.gather_ns < t.compute_ns);
+    }
+
+    #[test]
+    fn operator_validates_inputs() {
+        let a = banded(100, 2).unwrap();
+        let part = RowPartition::row_block(1, 1, 100).unwrap();
+        // FPU cannot run FP32.
+        let bad = SpmvConfig {
+            df: DataFormat::Fp32,
+            unit: ComputeUnit::Fpu,
+            mode: SpmvMode::SramResident,
+            sigma: 1,
+        };
+        assert!(SpmvOperator::new(&a, part.clone(), bad).is_err());
+        // Rectangular and mismatched sizes.
+        let rect = CsrMatrix::from_triplets(4, 5, &[(0, 0, 1.0)]).unwrap();
+        assert!(SpmvOperator::new(&rect, part.clone(), SpmvConfig::new(DataFormat::Fp32, SpmvMode::SramResident)).is_err());
+        let op = SpmvOperator::new(&a, part, SpmvConfig::new(DataFormat::Fp32, SpmvMode::SramResident)).unwrap();
+        assert_eq!(op.uniform_diagonal(), Some(4.0));
+        // Wrong grid shape at apply time.
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let grid = TensixGrid::new(2, 1).unwrap();
+        let x = vec![CoreBlock::zeros(DataFormat::Fp32, 1)];
+        assert!(op.apply(&grid, &x, &e, &cost).is_err());
+    }
+
+    #[test]
+    fn spmv_values_independent_of_sigma_and_mode() {
+        let n = 1024;
+        let a = banded(n, 5).unwrap();
+        let part = RowPartition::row_block(1, 1, n).unwrap();
+        let grid = TensixGrid::new(1, 1).unwrap();
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let mut rng = Rng::new(6);
+        let xg: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let x = part.dist_from_global(DataFormat::Fp32, &xg);
+        let mut results = Vec::new();
+        for sigma in [1, 32, 256] {
+            let cfg = SpmvConfig::new(DataFormat::Fp32, SpmvMode::SramResident).with_sigma(sigma);
+            let op = SpmvOperator::new(&a, part.clone(), cfg).unwrap();
+            let (y, _) = op.apply(&grid, &x, &e, &cost).unwrap();
+            results.push(y);
+        }
+        assert_eq!(results[0], results[1]);
+        assert_eq!(results[1], results[2]);
+    }
+
+    #[test]
+    fn single_core_has_no_gather_traffic() {
+        // A 1×1 grid owns every column: no remote entries, no NoC traffic.
+        let op = laplacian_operator(1, 1, 2, DataFormat::Fp32, SpmvMode::SramResident);
+        assert_eq!(op.gather.remote_entries, 0);
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let p = Problem::new(1, 1, 2, DataFormat::Fp32);
+        let grid = p.make_grid().unwrap();
+        let x = dist_random(&p, 8);
+        let (got, t) = op.apply(&grid, &x, &e, &cost).unwrap();
+        assert_eq!(t.messages, 0);
+        // And still equals the stencil with zero-fill boundaries all round.
+        let scfg = StencilConfig {
+            df: DataFormat::Fp32,
+            unit: ComputeUnit::Sfpu,
+            tiles_per_core: 2,
+            variant: StencilVariant::FULL,
+            coeffs: StencilCoeffs::LAPLACIAN,
+        };
+        let (want, _) = run_stencil(&grid, &scfg, &x, &e, &cost).unwrap();
+        assert_eq!(got, want);
+    }
+}

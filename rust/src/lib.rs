@@ -7,8 +7,12 @@
 //! - **Layer 3 (this crate)**: a cycle-approximate simulator of one
 //!   Wormhole Tensix die (tiles, circular buffers, SRAM, NoC, FPU/SFPU
 //!   cost model) plus the paper's three numerical kernels (element-wise
-//!   arithmetic, global dot-product reduction, 7-point 3D stencil) and the
-//!   preconditioned conjugate-gradient solver built from them.
+//!   arithmetic, global dot-product reduction, 7-point 3D stencil), a
+//!   general sparse-matrix subsystem ([`sparse`]: CSR / SELL-C-32,
+//!   Matrix Market I/O, grid partitioning) with a SELL SpMV kernel
+//!   ([`kernels::spmv`]), and the preconditioned conjugate-gradient
+//!   solver built from them — runnable on the hard-coded Laplacian or on
+//!   arbitrary SPD matrices through [`solver::Operator`].
 //! - **Layer 2** (`python/compile/model.py`): per-core compute graphs in
 //!   JAX, AOT-lowered to HLO text artifacts.
 //! - **Layer 1** (`python/compile/kernels/`): Pallas kernels for the
@@ -32,6 +36,7 @@ pub mod profiler;
 pub mod tile;
 pub mod runtime;
 pub mod solver;
+pub mod sparse;
 pub mod ttm;
 pub mod timing;
 pub mod util;

@@ -1,6 +1,8 @@
 //! The preconditioned conjugate-gradient solver (§7): the model problem,
 //! the Jacobi preconditioner, and the fused-BF16 / split-FP32 PCG drivers
-//! composed from the three numerical kernels.
+//! composed from the numerical kernels. The matrix apply is abstracted
+//! behind [`pcg::Operator`] — the matrix-free stencil and the general
+//! sparse SpMV are interchangeable implementors.
 
 pub mod dualdie;
 pub mod jacobi;
@@ -11,7 +13,7 @@ pub mod problem;
 pub use jacobi::JacobiPreconditioner;
 pub use jacobi_iter::{solve_jacobi, JacobiOptions, JacobiResult};
 pub use dualdie::{solve_pcg_dualdie, DualDieOptions, DualDieResult, EthLink};
-pub use pcg::{solve, PcgOptions, PcgResult, PcgVariant};
+pub use pcg::{solve, solve_operator, Operator, PcgOptions, PcgResult, PcgVariant};
 pub use problem::{
     apply_laplacian_global, dist_from_fn, dist_random, dist_to_global, dist_zeros, DistVector,
     Problem,

@@ -1,0 +1,265 @@
+//! Host-side Compressed Sparse Row storage.
+//!
+//! CSR is the subsystem's *assembly* format: generators, the Matrix Market
+//! reader, and the partitioner all speak CSR, and the correctness oracle
+//! ([`CsrMatrix::apply_f64`]) runs on it. The device-facing format is
+//! SELL-C-σ ([`crate::sparse::sell`]), converted from CSR per core.
+//!
+//! Within a row, entries are kept in **insertion order** — they are *not*
+//! sorted by column. This is load-bearing: the 3D-Laplacian generator emits
+//! each row's entries in the stencil kernel's canonical accumulation order
+//! (center, x±, y±, z±), which is what lets the sparse SpMV reproduce the
+//! matrix-free stencil engine bit-for-bit (see `kernels::spmv`).
+
+use crate::error::{Result, SimError};
+
+/// A general sparse matrix in CSR, FP32 values with 32-bit column indices
+/// (the same index width cuSPARSE uses, §7.3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// `row_ptr[i]..row_ptr[i+1]` spans row `i` in `col_idx`/`vals`.
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Build from raw arrays, validating the invariants.
+    pub fn new(
+        n_rows: usize,
+        n_cols: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<u32>,
+        vals: Vec<f32>,
+    ) -> Result<Self> {
+        if row_ptr.len() != n_rows + 1 {
+            return Err(SimError::BadProblem {
+                what: format!("CSR row_ptr length {} != n_rows+1 {}", row_ptr.len(), n_rows + 1),
+            });
+        }
+        if row_ptr[0] != 0 || *row_ptr.last().unwrap() != col_idx.len() {
+            return Err(SimError::BadProblem {
+                what: "CSR row_ptr must start at 0 and end at nnz".to_string(),
+            });
+        }
+        if col_idx.len() != vals.len() {
+            return Err(SimError::BadProblem {
+                what: format!("CSR col_idx/vals length mismatch: {} vs {}", col_idx.len(), vals.len()),
+            });
+        }
+        if row_ptr.windows(2).any(|w| w[0] > w[1]) {
+            return Err(SimError::BadProblem {
+                what: "CSR row_ptr not monotonically non-decreasing".to_string(),
+            });
+        }
+        if let Some(&c) = col_idx.iter().find(|&&c| c as usize >= n_cols) {
+            return Err(SimError::BadProblem {
+                what: format!("CSR column index {c} out of range for {n_cols} columns"),
+            });
+        }
+        Ok(Self {
+            n_rows,
+            n_cols,
+            row_ptr,
+            col_idx,
+            vals,
+        })
+    }
+
+    /// Build from (row, col, val) triplets. Triplets are bucketed by row;
+    /// **within a row the given order is preserved** (see module docs).
+    /// Duplicate (row, col) pairs are kept as separate entries.
+    pub fn from_triplets(
+        n_rows: usize,
+        n_cols: usize,
+        triplets: &[(usize, usize, f32)],
+    ) -> Result<Self> {
+        let mut per_row: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n_rows];
+        for &(r, c, v) in triplets {
+            if r >= n_rows || c >= n_cols {
+                return Err(SimError::BadProblem {
+                    what: format!("triplet ({r}, {c}) out of range for {n_rows}x{n_cols}"),
+                });
+            }
+            per_row[r].push((c as u32, v));
+        }
+        let nnz = triplets.len();
+        let mut row_ptr = Vec::with_capacity(n_rows + 1);
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut vals = Vec::with_capacity(nnz);
+        row_ptr.push(0);
+        for row in &per_row {
+            for &(c, v) in row {
+                col_idx.push(c);
+                vals.push(v);
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Self::new(n_rows, n_cols, row_ptr, col_idx, vals)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Column indices and values of row `i`.
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (lo, hi) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col_idx[lo..hi], &self.vals[lo..hi])
+    }
+
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.row_ptr[i + 1] - self.row_ptr[i]
+    }
+
+    pub fn max_row_nnz(&self) -> usize {
+        (0..self.n_rows).map(|i| self.row_nnz(i)).max().unwrap_or(0)
+    }
+
+    /// Mean nonzeros per row.
+    pub fn avg_row_nnz(&self) -> f64 {
+        if self.n_rows == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.n_rows as f64
+        }
+    }
+
+    /// The matrix diagonal; absent entries read as 0. Duplicate diagonal
+    /// entries sum (Matrix Market permits them).
+    pub fn diagonal(&self) -> Vec<f32> {
+        let mut d = vec![0.0f32; self.n_rows.min(self.n_cols)];
+        for (i, di) in d.iter_mut().enumerate() {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                if c as usize == i {
+                    *di += v;
+                }
+            }
+        }
+        d
+    }
+
+    /// y = A x in f64 — the subsystem's correctness oracle (the device path
+    /// accumulates at operand precision; this does not).
+    pub fn apply_f64(&self, x: &[f32]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n_cols, "SpMV operand length mismatch");
+        let mut y = vec![0.0f64; self.n_rows];
+        for (i, yi) in y.iter_mut().enumerate() {
+            let (cols, vals) = self.row(i);
+            let mut acc = 0.0f64;
+            for (&c, &v) in cols.iter().zip(vals) {
+                acc += v as f64 * x[c as usize] as f64;
+            }
+            *yi = acc;
+        }
+        y
+    }
+
+    /// Structural + numerical symmetry check (duplicates summed), used to
+    /// gate PCG which requires an SPD operator.
+    pub fn is_symmetric(&self, tol: f32) -> bool {
+        if self.n_rows != self.n_cols {
+            return false;
+        }
+        let mut map = std::collections::BTreeMap::<(u32, u32), f32>::new();
+        for i in 0..self.n_rows {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                *map.entry((i as u32, c)).or_insert(0.0) += v;
+            }
+        }
+        map.iter().all(|(&(r, c), &v)| {
+            let vt = map.get(&(c, r)).copied().unwrap_or(0.0);
+            (v - vt).abs() <= tol * v.abs().max(vt.abs()).max(1.0)
+        })
+    }
+
+    /// All entries as (row, col, val) triplets in storage order.
+    pub fn triplets(&self) -> Vec<(usize, usize, f32)> {
+        let mut out = Vec::with_capacity(self.nnz());
+        for i in 0..self.n_rows {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                out.push((i, c as usize, v));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CsrMatrix {
+        // [ 2 -1  0 ]
+        // [-1  2 -1 ]
+        // [ 0 -1  2 ]
+        CsrMatrix::from_triplets(
+            3,
+            3,
+            &[
+                (0, 0, 2.0),
+                (0, 1, -1.0),
+                (1, 0, -1.0),
+                (1, 1, 2.0),
+                (1, 2, -1.0),
+                (2, 1, -1.0),
+                (2, 2, 2.0),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn triplet_roundtrip_preserves_row_order() {
+        // Within-row insertion order must survive (the stencil accumulation
+        // order depends on it): row 0 deliberately emits col 2 before col 0.
+        let m = CsrMatrix::from_triplets(2, 3, &[(0, 2, 5.0), (0, 0, 1.0), (1, 1, 3.0)]).unwrap();
+        let (cols, vals) = m.row(0);
+        assert_eq!(cols, &[2, 0]);
+        assert_eq!(vals, &[5.0, 1.0]);
+        assert_eq!(m.triplets(), vec![(0, 2, 5.0), (0, 0, 1.0), (1, 1, 3.0)]);
+    }
+
+    #[test]
+    fn apply_matches_dense() {
+        let m = small();
+        let y = m.apply_f64(&[1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![0.0, 0.0, 4.0]);
+        assert_eq!(m.nnz(), 7);
+        assert_eq!(m.max_row_nnz(), 3);
+        assert!((m.avg_row_nnz() - 7.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diagonal_and_symmetry() {
+        let m = small();
+        assert_eq!(m.diagonal(), vec![2.0, 2.0, 2.0]);
+        assert!(m.is_symmetric(0.0));
+        let asym = CsrMatrix::from_triplets(2, 2, &[(0, 1, 1.0), (1, 0, 2.0)]).unwrap();
+        assert!(!asym.is_symmetric(1e-6));
+        let rect = CsrMatrix::from_triplets(2, 3, &[(0, 0, 1.0)]).unwrap();
+        assert!(!rect.is_symmetric(1e-6));
+    }
+
+    #[test]
+    fn validation_rejects_bad_shapes() {
+        assert!(CsrMatrix::new(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err()); // short row_ptr
+        assert!(CsrMatrix::new(1, 1, vec![0, 2], vec![0], vec![1.0]).is_err()); // end != nnz
+        assert!(CsrMatrix::new(1, 2, vec![0, 1], vec![2], vec![1.0]).is_err()); // col range
+        assert!(CsrMatrix::from_triplets(2, 2, &[(2, 0, 1.0)]).is_err());
+        assert!(CsrMatrix::new(2, 2, vec![0, 2, 1], vec![0, 1], vec![1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn empty_rows_allowed() {
+        let m = CsrMatrix::from_triplets(3, 3, &[(1, 1, 4.0)]).unwrap();
+        assert_eq!(m.row_nnz(0), 0);
+        assert_eq!(m.row_nnz(1), 1);
+        assert_eq!(m.apply_f64(&[1.0, 1.0, 1.0]), vec![0.0, 4.0, 0.0]);
+    }
+}

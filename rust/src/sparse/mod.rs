@@ -1,0 +1,45 @@
+//! General sparse matrices in tile-native formats.
+//!
+//! The paper's solver applies exactly one matrix — the hard-coded 7-point
+//! stencil. This subsystem generalizes that: it represents arbitrary
+//! sparse (SPD, for PCG) matrices host-side, partitions them over the
+//! simulated Tensix grid, and hands the device-facing pieces to
+//! [`crate::kernels::spmv`], which executes SpMV with engine-produced
+//! values and cost-model/NoC-simulated timing. The pipeline is
+//!
+//! ```text
+//! MatrixMarket / generator → CsrMatrix → RowPartition → per-core
+//!     SellMatrix → kernels::spmv::SpmvOperator → solver::pcg::Operator
+//! ```
+//!
+//! # Why SELL-C-σ with slice height 32
+//!
+//! The device format is SELL-C-σ ([`sell`]) — the format the paper's
+//! cuSPARSE GPU baseline uses (§7.3, "state-of-the-art ... for matrices
+//! with limited row-length variability") — with **C = 32** locked to the
+//! tile geometry: tiles are 1024 elements with 16×16 faces (§3.1), so one
+//! 32-row slice column is exactly two faces, and 32 FP32 values are one
+//! 128 B unpack beat. A slice column therefore lands on whole faces of
+//! the operand tiles the FPU/SFPU consume, and the per-slice padding ELL
+//! would spend on the whole matrix is confined to 32-row groups. σ
+//! (length-sorting window) stays a knob; σ = 1 preserves row order, which
+//! the stencil-aligned layout requires.
+//!
+//! Formats and roles:
+//!
+//! - [`csr`] — host assembly/interchange format + f64 oracle.
+//! - [`sell`] — device storage format, padding/occupancy accounting.
+//! - [`mtx`] — Matrix Market I/O and generators (3D Laplacian in
+//!   stencil-canonical order, uniform-row random SPD circulant, SPD band).
+//! - [`partition`] — row-block and stencil-aligned distribution, per-core
+//!   SRAM footprint checks, NoC gather planning from the column footprint.
+
+pub mod csr;
+pub mod mtx;
+pub mod partition;
+pub mod sell;
+
+pub use csr::CsrMatrix;
+pub use mtx::{banded, circulant_spd, laplacian_3d, parse_mtx, read_mtx, write_mtx};
+pub use partition::{GatherPlan, RowPartition, VectorLayout};
+pub use sell::{padded_nnz_formula, SellMatrix, SellStats, SELL_SLICE_HEIGHT};

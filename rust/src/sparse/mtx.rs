@@ -1,0 +1,392 @@
+//! Matrix Market I/O and matrix generators.
+//!
+//! The reader accepts the coordinate format (`real`, `integer`, `pattern`;
+//! `general` or `symmetric`) — enough for the SuiteSparse-style test
+//! matrices sparse solver studies are run on. The generators produce the
+//! three workload families the subsystem is benchmarked with:
+//!
+//! - [`laplacian_3d`] — the §7 model problem as an *explicit* matrix. Rows
+//!   follow the paper's Eq.-1 ordering and each row's entries follow the
+//!   stencil kernel's canonical accumulation order (center, x±, y±, z±),
+//!   which makes the SpMV path bit-identical to the matrix-free stencil.
+//! - [`circulant_spd`] — random symmetric positive-definite circulant with
+//!   an exactly uniform nnz/row (the zero-padding-free case, matching the
+//!   [`crate::baseline::sell`] traffic model's uniform-row assumption).
+//! - [`banded`] — SPD band matrix with ragged boundary rows (the padding
+//!   stress case for SELL).
+
+use std::path::Path;
+
+use crate::error::{Result, SimError};
+use crate::sparse::csr::CsrMatrix;
+use crate::util::prng::Rng;
+
+fn bad(what: impl Into<String>) -> SimError {
+    SimError::Config(what.into())
+}
+
+/// Parse a Matrix Market document from text.
+pub fn parse_mtx(text: &str) -> Result<CsrMatrix> {
+    let mut lines = text.lines();
+    let header = lines.next().ok_or_else(|| bad("empty MatrixMarket file"))?;
+    let h: Vec<&str> = header.split_whitespace().collect();
+    if h.len() < 5 || !h[0].eq_ignore_ascii_case("%%MatrixMarket") {
+        return Err(bad(format!("not a MatrixMarket header: '{header}'")));
+    }
+    let (object, format, field, symmetry) = (
+        h[1].to_ascii_lowercase(),
+        h[2].to_ascii_lowercase(),
+        h[3].to_ascii_lowercase(),
+        h[4].to_ascii_lowercase(),
+    );
+    if object != "matrix" || format != "coordinate" {
+        return Err(bad(format!("unsupported MatrixMarket object/format: {object}/{format}")));
+    }
+    let pattern = match field.as_str() {
+        "real" | "integer" => false,
+        "pattern" => true,
+        other => return Err(bad(format!("unsupported MatrixMarket field '{other}'"))),
+    };
+    let symmetric = match symmetry.as_str() {
+        "general" => false,
+        "symmetric" => true,
+        other => return Err(bad(format!("unsupported MatrixMarket symmetry '{other}'"))),
+    };
+
+    let mut size: Option<(usize, usize, usize)> = None;
+    let mut triplets: Vec<(usize, usize, f32)> = Vec::new();
+    let mut mirrored = 0usize;
+    for (lineno, raw) in lines.enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('%') {
+            continue;
+        }
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        let ctx = || format!("MatrixMarket line {}: '{line}'", lineno + 2);
+        if size.is_none() {
+            if toks.len() != 3 {
+                return Err(bad(format!("{}: expected 'rows cols nnz'", ctx())));
+            }
+            let p = |s: &str| s.parse::<usize>().map_err(|e| bad(format!("{}: {e}", ctx())));
+            size = Some((p(toks[0])?, p(toks[1])?, p(toks[2])?));
+            continue;
+        }
+        let want = if pattern { 2 } else { 3 };
+        if toks.len() < want {
+            return Err(bad(format!("{}: expected {want} fields", ctx())));
+        }
+        let i: usize = toks[0].parse().map_err(|e| bad(format!("{}: {e}", ctx())))?;
+        let j: usize = toks[1].parse().map_err(|e| bad(format!("{}: {e}", ctx())))?;
+        if i == 0 || j == 0 {
+            return Err(bad(format!("{}: MatrixMarket indices are 1-based", ctx())));
+        }
+        let v: f32 = if pattern {
+            1.0
+        } else {
+            toks[2].parse().map_err(|e| bad(format!("{}: {e}", ctx())))?
+        };
+        triplets.push((i - 1, j - 1, v));
+        if symmetric && i != j {
+            triplets.push((j - 1, i - 1, v));
+            mirrored += 1;
+        }
+    }
+    let (n_rows, n_cols, nnz) = size.ok_or_else(|| bad("MatrixMarket file has no size line"))?;
+    // For symmetric files, `nnz` declares the stored (one-triangle)
+    // entries; the mirrors we synthesized do not count against it.
+    if triplets.len() - mirrored != nnz {
+        return Err(bad(format!(
+            "MatrixMarket entry count {} does not match declared nnz {nnz}",
+            triplets.len() - mirrored
+        )));
+    }
+    // Canonical (row, col) order — MTX files carry no meaningful order.
+    triplets.sort_by_key(|&(i, j, _)| (i, j));
+    CsrMatrix::from_triplets(n_rows, n_cols, &triplets)
+}
+
+/// Read a Matrix Market file from disk.
+pub fn read_mtx(path: &Path) -> Result<CsrMatrix> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| bad(format!("reading {}: {e}", path.display())))?;
+    parse_mtx(&text)
+}
+
+/// Serialize as `coordinate real general` (1-based, row-major).
+pub fn write_mtx(a: &CsrMatrix) -> String {
+    let mut out = String::from("%%MatrixMarket matrix coordinate real general\n");
+    out.push_str(&format!("{} {} {}\n", a.n_rows, a.n_cols, a.nnz()));
+    for (i, j, v) in a.triplets() {
+        out.push_str(&format!("{} {} {v:e}\n", i + 1, j + 1));
+    }
+    out
+}
+
+/// The 7-point 3D Laplacian with zero Dirichlet boundaries on an
+/// `nx × ny × nz` grid, as an explicit sparse matrix.
+///
+/// Row/column ordering is the paper's Eq. 1 (`g = i + nx*(j + ny*k)`), and
+/// each row's entries are emitted in the stencil kernel's canonical
+/// accumulation order — center (+6), x−, x+, y−, y+, z−, z+ (each −1) —
+/// with out-of-domain neighbors skipped. Preserving this order end to end
+/// is what lets `kernels::spmv` reproduce
+/// [`crate::engine::ComputeEngine::stencil_apply`] bit-for-bit.
+pub fn laplacian_3d(nx: usize, ny: usize, nz: usize) -> CsrMatrix {
+    let n = nx * ny * nz;
+    let g = |i: usize, j: usize, k: usize| i + nx * (j + ny * k);
+    let mut row_ptr = Vec::with_capacity(n + 1);
+    let mut col_idx = Vec::with_capacity(7 * n);
+    let mut vals = Vec::with_capacity(7 * n);
+    row_ptr.push(0);
+    for k in 0..nz {
+        for j in 0..ny {
+            for i in 0..nx {
+                col_idx.push(g(i, j, k) as u32);
+                vals.push(6.0);
+                // Canonical stencil accumulation order: x−, x+, y−, y+,
+                // z−, z+, skipping out-of-domain (zero Dirichlet).
+                let neighbors = [
+                    (i > 0).then(|| g(i - 1, j, k)),
+                    (i + 1 < nx).then(|| g(i + 1, j, k)),
+                    (j > 0).then(|| g(i, j - 1, k)),
+                    (j + 1 < ny).then(|| g(i, j + 1, k)),
+                    (k > 0).then(|| g(i, j, k - 1)),
+                    (k + 1 < nz).then(|| g(i, j, k + 1)),
+                ];
+                for c in neighbors.into_iter().flatten() {
+                    col_idx.push(c as u32);
+                    vals.push(-1.0);
+                }
+                row_ptr.push(col_idx.len());
+            }
+        }
+    }
+    CsrMatrix::new(n, n, row_ptr, col_idx, vals).expect("generator invariants")
+}
+
+/// Random symmetric positive-definite circulant with an exactly uniform
+/// `nnz_per_row` (≥ 1): distinct offsets `d ∈ [1, n/2)` each carry one
+/// value on the ±d wrap-around diagonals; for an **even** `nnz_per_row`
+/// the self-paired offset `n/2` (requires even `n`) contributes one more
+/// entry per row. The main diagonal is `1 + Σ |v_d over the row|` (strict
+/// diagonal dominance of a symmetric matrix ⇒ SPD). Every row stores
+/// exactly `nnz_per_row` entries, so the SELL conversion is padding-free
+/// — the uniform-row case the cuSPARSE Sliced-ELL traffic model assumes.
+pub fn circulant_spd(n: usize, nnz_per_row: usize, seed: u64) -> Result<CsrMatrix> {
+    if nnz_per_row == 0 {
+        return Err(SimError::BadProblem {
+            what: "circulant_spd needs nnz_per_row >= 1".to_string(),
+        });
+    }
+    let use_half = nnz_per_row % 2 == 0;
+    if use_half && n % 2 != 0 {
+        return Err(SimError::BadProblem {
+            what: format!("circulant_spd: even nnz_per_row {nnz_per_row} needs an even n, got {n}"),
+        });
+    }
+    let m = if use_half { (nnz_per_row - 2) / 2 } else { (nnz_per_row - 1) / 2 };
+    // Paired offsets must be distinct and < n/2 so +d and −d never collide
+    // (n/2 itself is reserved for the self-paired even case).
+    if n < 2 * m + 2 {
+        return Err(SimError::BadProblem {
+            what: format!("circulant_spd: n = {n} too small for {nnz_per_row} nnz/row"),
+        });
+    }
+    let mut rng = Rng::new(seed);
+    let mut offsets = std::collections::BTreeSet::new();
+    while offsets.len() < m {
+        let half = (n - 1) / 2;
+        offsets.insert(1 + rng.below(half as u64) as usize);
+    }
+    let offvals: Vec<(usize, f32)> = offsets
+        .into_iter()
+        .map(|d| (d, -(0.1 + 0.9 * rng.next_f32())))
+        .collect();
+    let half_val: f32 = if use_half { -(0.1 + 0.9 * rng.next_f32()) } else { 0.0 };
+    let diag: f32 =
+        1.0 + 2.0 * offvals.iter().map(|(_, v)| v.abs()).sum::<f32>() + half_val.abs();
+
+    let mut row_ptr = Vec::with_capacity(n + 1);
+    let mut col_idx = Vec::with_capacity(n * nnz_per_row);
+    let mut vals = Vec::with_capacity(n * nnz_per_row);
+    row_ptr.push(0);
+    for i in 0..n {
+        // Ascending-column order within the row.
+        let mut entries: Vec<(usize, f32)> = vec![(i, diag)];
+        for &(d, v) in &offvals {
+            entries.push(((i + d) % n, v));
+            entries.push(((i + n - d) % n, v));
+        }
+        if use_half {
+            entries.push(((i + n / 2) % n, half_val));
+        }
+        entries.sort_by_key(|&(c, _)| c);
+        for (c, v) in entries {
+            col_idx.push(c as u32);
+            vals.push(v);
+        }
+        row_ptr.push(col_idx.len());
+    }
+    CsrMatrix::new(n, n, row_ptr, col_idx, vals)
+}
+
+/// SPD band matrix: `a_ii = 2·hb`, `a_ij = −1` for `0 < |i−j| ≤ hb` (the
+/// band analog of the 1D Laplacian). Boundary rows are shorter — the
+/// ragged case that exercises SELL padding.
+pub fn banded(n: usize, half_bandwidth: usize) -> Result<CsrMatrix> {
+    if half_bandwidth == 0 || half_bandwidth >= n {
+        return Err(SimError::BadProblem {
+            what: format!("banded: half bandwidth {half_bandwidth} out of range for n = {n}"),
+        });
+    }
+    let mut triplets = Vec::new();
+    for i in 0..n {
+        let lo = i.saturating_sub(half_bandwidth);
+        let hi = (i + half_bandwidth).min(n - 1);
+        for j in lo..=hi {
+            let v = if i == j { 2.0 * half_bandwidth as f32 } else { -1.0 };
+            triplets.push((i, j, v));
+        }
+    }
+    CsrMatrix::from_triplets(n, n, &triplets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_general_real() {
+        let text = "%%MatrixMarket matrix coordinate real general\n\
+                    % a comment\n\
+                    3 3 4\n\
+                    1 1 2.0\n\
+                    2 2 3.0\n\
+                    3 3 4.0\n\
+                    1 3 -1.5\n";
+        let m = parse_mtx(text).unwrap();
+        assert_eq!((m.n_rows, m.n_cols, m.nnz()), (3, 3, 4));
+        assert_eq!(m.diagonal(), vec![2.0, 3.0, 4.0]);
+        let (cols, vals) = m.row(0);
+        assert_eq!(cols, &[0, 2]);
+        assert_eq!(vals, &[2.0, -1.5]);
+    }
+
+    #[test]
+    fn parse_symmetric_mirrors_off_diagonal() {
+        let text = "%%MatrixMarket matrix coordinate real symmetric\n\
+                    2 2 3\n\
+                    1 1 2.0\n\
+                    2 1 -1.0\n\
+                    2 2 2.0\n";
+        let m = parse_mtx(text).unwrap();
+        assert_eq!(m.nnz(), 4);
+        assert!(m.is_symmetric(0.0));
+        assert_eq!(m.row(0).0, &[0, 1]);
+    }
+
+    #[test]
+    fn parse_pattern_and_errors() {
+        let m = parse_mtx("%%MatrixMarket matrix coordinate pattern general\n2 2 2\n1 2\n2 1\n")
+            .unwrap();
+        assert_eq!(m.vals, vec![1.0, 1.0]);
+        assert!(parse_mtx("nonsense").is_err());
+        assert!(parse_mtx("%%MatrixMarket matrix array real general\n2 2\n").is_err());
+        assert!(parse_mtx("%%MatrixMarket matrix coordinate real general\n2 2 1\n0 1 5.0\n").is_err());
+        assert!(parse_mtx("%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 5.0\n").is_err());
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let a = banded(20, 3).unwrap();
+        let text = write_mtx(&a);
+        let b = parse_mtx(&text).unwrap();
+        // banded emits ascending columns, so the canonical reorder is a
+        // no-op and the round trip is exact.
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn laplacian_matches_global_oracle() {
+        use crate::arch::DataFormat;
+        use crate::solver::problem::{apply_laplacian_global, Problem};
+        let p = Problem::new(1, 1, 3, DataFormat::Fp32);
+        let (nx, ny, nz) = p.dims();
+        let a = laplacian_3d(nx, ny, nz);
+        assert_eq!(a.n_rows, p.elems());
+        let mut rng = Rng::new(11);
+        let x: Vec<f32> = (0..p.elems()).map(|_| rng.next_f32() - 0.5).collect();
+        let want = apply_laplacian_global(&p, &x);
+        let got = a.apply_f64(&x);
+        for (idx, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() < 1e-9, "elem {idx}: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn laplacian_rows_follow_stencil_order() {
+        // Interior row: center first, then x−, x+, y−, y+, z−, z+.
+        let nx = 4;
+        let ny = 4;
+        let a = laplacian_3d(nx, ny, 3);
+        let g = 1 + nx * (1 + ny); // (1,1,1): fully interior
+        let (cols, vals) = a.row(g);
+        let expect: Vec<u32> = vec![
+            g as u32,
+            (g - 1) as u32,
+            (g + 1) as u32,
+            (g - nx) as u32,
+            (g + nx) as u32,
+            (g - nx * ny) as u32,
+            (g + nx * ny) as u32,
+        ];
+        assert_eq!(cols, expect.as_slice());
+        assert_eq!(vals[0], 6.0);
+        assert!(vals[1..].iter().all(|&v| v == -1.0));
+        // Corner row keeps the same relative order, skipping the missing.
+        let (cols0, _) = a.row(0);
+        assert_eq!(cols0, &[0, 1, nx as u32, (nx * ny) as u32]);
+    }
+
+    #[test]
+    fn circulant_uniform_and_spd_shaped() {
+        let a = circulant_spd(64, 7, 42).unwrap();
+        assert_eq!(a.n_rows, 64);
+        for i in 0..64 {
+            assert_eq!(a.row_nnz(i), 7, "row {i}");
+        }
+        assert!(a.is_symmetric(1e-6));
+        // Strict diagonal dominance.
+        let d = a.diagonal();
+        for i in 0..64 {
+            let (cols, vals) = a.row(i);
+            let off: f32 = cols
+                .iter()
+                .zip(vals)
+                .filter(|(&c, _)| c as usize != i)
+                .map(|(_, v)| v.abs())
+                .sum();
+            assert!(d[i] > off, "row {i}: diag {} vs off {off}", d[i]);
+        }
+        // Even nnz/row: the self-paired n/2 offset keeps rows uniform.
+        let even = circulant_spd(64, 8, 5).unwrap();
+        for i in 0..64 {
+            assert_eq!(even.row_nnz(i), 8, "row {i}");
+        }
+        assert!(even.is_symmetric(1e-6));
+        // Even nnz/row needs an even n; too-small n rejected.
+        assert!(circulant_spd(9, 4, 1).is_err());
+        assert!(circulant_spd(4, 7, 1).is_err());
+        assert!(circulant_spd(8, 0, 1).is_err());
+    }
+
+    #[test]
+    fn banded_shape() {
+        let a = banded(10, 2).unwrap();
+        assert!(a.is_symmetric(0.0));
+        assert_eq!(a.row_nnz(0), 3);
+        assert_eq!(a.row_nnz(5), 5);
+        assert_eq!(a.diagonal(), vec![4.0; 10]);
+        assert!(banded(5, 0).is_err());
+    }
+}

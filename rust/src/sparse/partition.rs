@@ -1,0 +1,373 @@
+//! Row-block distribution of sparse matrices and vectors over the Tensix
+//! grid.
+//!
+//! Each core owns a fixed number of *vector slots* — `tiles_per_core`
+//! 64×16 tiles, 1024 elements each, exactly the [`CoreBlock`] shape every
+//! kernel in the crate consumes — and the matrix rows that produce those
+//! slots. Two slot↔row mappings exist:
+//!
+//! - [`VectorLayout::RowBlock`]: contiguous row ranges in natural order;
+//!   the general case for arbitrary matrices.
+//! - [`VectorLayout::StencilAligned`]: the §6.1 stencil distribution
+//!   (element `(i, j, k)` on core `(i/64, j/16)`, tile `k`, position
+//!   `(i%64, j%16)`). Distributed vectors are then *block-for-block
+//!   identical* to the stencil solver's, which is what lets sparse PCG on
+//!   the generated Laplacian reproduce the stencil PCG trajectory exactly.
+//!
+//! The partitioner also answers the two §7.2-style resource questions:
+//! does each core's share fit in SRAM ([`RowPartition::check_sram`], via
+//! the [`crate::device::Sram`] bump allocator), and how much NoC gather
+//! traffic do remote `x` entries cost ([`RowPartition::gather_plan`],
+//! derived from the column-index footprint of each core's rows).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::arch::constants::{L1_ALIGN, TILE_ELEMS};
+use crate::arch::DataFormat;
+use crate::device::{Coord, Sram};
+use crate::engine::CoreBlock;
+use crate::error::{Result, SimError};
+use crate::sparse::csr::CsrMatrix;
+
+/// How vector elements (= matrix rows) map onto core-local slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VectorLayout {
+    /// Core `c` owns rows `[c·R, (c+1)·R)` with `R = tiles_per_core·1024`;
+    /// slot order is row order. Trailing slots past `n` are padding.
+    RowBlock,
+    /// The stencil §6.1 mapping on an `nx × ny × nz` domain
+    /// (`nx = 64·grid_rows`, `ny = 16·grid_cols`, `nz = tiles_per_core`).
+    StencilAligned { nx: usize, ny: usize, nz: usize },
+}
+
+/// A row-block partition of an `n`-row matrix over a core grid.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RowPartition {
+    pub grid_rows: usize,
+    pub grid_cols: usize,
+    /// Matrix dimension (= global vector length).
+    pub n: usize,
+    /// Tiles per core; `tiles_per_core × 1024` slots per core.
+    pub tiles_per_core: usize,
+    pub layout: VectorLayout,
+}
+
+/// NoC gather requirements derived from the column-index footprint: which
+/// remote `x` entries each core needs for one SpMV.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GatherPlan {
+    /// Per consumer core: owner core → number of *distinct* remote columns
+    /// (each entry is fetched once per SpMV and reused from SRAM).
+    pub per_core: Vec<BTreeMap<usize, usize>>,
+    /// Total remote entries across all cores.
+    pub remote_entries: u64,
+    /// Column references satisfied from the core's own block.
+    pub local_references: u64,
+}
+
+impl GatherPlan {
+    /// One batched message per (owner, consumer) pair.
+    pub fn messages(&self) -> u64 {
+        self.per_core.iter().map(|m| m.len() as u64).sum()
+    }
+
+    /// Payload bytes at `df`, each pair's batch rounded up to the 32 B
+    /// L1/NoC beat (§3.3).
+    pub fn bytes(&self, df: DataFormat) -> u64 {
+        self.per_core
+            .iter()
+            .flat_map(|m| m.values())
+            .map(|&cnt| ((cnt * df.bytes()) as u64).div_ceil(L1_ALIGN as u64) * L1_ALIGN as u64)
+            .sum()
+    }
+
+    /// Remote entries the given core must receive.
+    pub fn remote_entries_of(&self, core: usize) -> usize {
+        self.per_core[core].values().sum()
+    }
+}
+
+impl RowPartition {
+    /// Natural-order row blocks: `tiles_per_core` is the smallest tile
+    /// count that covers `ceil(n / cores)` rows.
+    pub fn row_block(grid_rows: usize, grid_cols: usize, n: usize) -> Result<Self> {
+        if grid_rows == 0 || grid_cols == 0 || n == 0 {
+            return Err(SimError::BadProblem {
+                what: format!("empty partition: {grid_rows}x{grid_cols} grid, n = {n}"),
+            });
+        }
+        let cores = grid_rows * grid_cols;
+        let tiles_per_core = n.div_ceil(cores).div_ceil(TILE_ELEMS);
+        Ok(Self {
+            grid_rows,
+            grid_cols,
+            n,
+            tiles_per_core,
+            layout: VectorLayout::RowBlock,
+        })
+    }
+
+    /// The stencil-compatible layout for an Eq.-1-ordered matrix on the
+    /// implied `64·grid_rows × 16·grid_cols × nz` domain.
+    pub fn stencil_aligned(grid_rows: usize, grid_cols: usize, nz: usize) -> Result<Self> {
+        if grid_rows == 0 || grid_cols == 0 || nz == 0 {
+            return Err(SimError::BadProblem {
+                what: format!("empty partition: {grid_rows}x{grid_cols} grid, nz = {nz}"),
+            });
+        }
+        let (nx, ny) = (64 * grid_rows, 16 * grid_cols);
+        Ok(Self {
+            grid_rows,
+            grid_cols,
+            n: nx * ny * nz,
+            tiles_per_core: nz,
+            layout: VectorLayout::StencilAligned { nx, ny, nz },
+        })
+    }
+
+    pub fn n_cores(&self) -> usize {
+        self.grid_rows * self.grid_cols
+    }
+
+    /// Vector slots per core.
+    pub fn slots_per_core(&self) -> usize {
+        self.tiles_per_core * TILE_ELEMS
+    }
+
+    pub fn core_coord(&self, core: usize) -> Coord {
+        Coord::new(core / self.grid_cols, core % self.grid_cols)
+    }
+
+    /// Global row held by `(core, slot)`; `None` for padding slots.
+    pub fn slot_to_global(&self, core: usize, slot: usize) -> Option<usize> {
+        debug_assert!(slot < self.slots_per_core());
+        match self.layout {
+            VectorLayout::RowBlock => {
+                let g = core * self.slots_per_core() + slot;
+                (g < self.n).then_some(g)
+            }
+            VectorLayout::StencilAligned { nx, ny, .. } => {
+                let (gr, gc) = (core / self.grid_cols, core % self.grid_cols);
+                let z = slot / TILE_ELEMS;
+                let xr = (slot % TILE_ELEMS) / 16;
+                let yc = slot % 16;
+                let (i, j) = (gr * 64 + xr, gc * 16 + yc);
+                Some(i + nx * (j + ny * z))
+            }
+        }
+    }
+
+    /// Owning `(core, slot)` of global row `g`.
+    pub fn global_to_slot(&self, g: usize) -> (usize, usize) {
+        debug_assert!(g < self.n);
+        match self.layout {
+            VectorLayout::RowBlock => (g / self.slots_per_core(), g % self.slots_per_core()),
+            VectorLayout::StencilAligned { nx, ny, .. } => {
+                let i = g % nx;
+                let j = (g / nx) % ny;
+                let z = g / (nx * ny);
+                let core = (i / 64) * self.grid_cols + j / 16;
+                let slot = z * TILE_ELEMS + (i % 64) * 16 + j % 16;
+                (core, slot)
+            }
+        }
+    }
+
+    /// Owning core of global row `g`.
+    pub fn owner(&self, g: usize) -> usize {
+        self.global_to_slot(g).0
+    }
+
+    /// Scatter a global vector into per-core blocks (padding slots zero).
+    pub fn dist_from_global(&self, df: DataFormat, x: &[f32]) -> Vec<CoreBlock> {
+        assert_eq!(x.len(), self.n, "global vector length mismatch");
+        (0..self.n_cores())
+            .map(|core| {
+                CoreBlock::from_fn(df, self.tiles_per_core, |z, xr, yc| {
+                    let slot = z * TILE_ELEMS + xr * 16 + yc;
+                    self.slot_to_global(core, slot).map_or(0.0, |g| x[g])
+                })
+            })
+            .collect()
+    }
+
+    /// Gather per-core blocks back to a global vector.
+    pub fn dist_to_global(&self, v: &[CoreBlock]) -> Vec<f32> {
+        assert_eq!(v.len(), self.n_cores(), "one block per core");
+        let mut out = vec![0.0f32; self.n];
+        for (core, block) in v.iter().enumerate() {
+            let flat = block.to_flat();
+            for (slot, &val) in flat.iter().enumerate() {
+                if let Some(g) = self.slot_to_global(core, slot) {
+                    out[g] = val;
+                }
+            }
+        }
+        out
+    }
+
+    /// Derive the NoC gather plan from the matrix's column-index footprint:
+    /// for every core, the distinct columns its rows reference that live on
+    /// another core, grouped by owner.
+    pub fn gather_plan(&self, a: &CsrMatrix) -> Result<GatherPlan> {
+        if a.n_rows != self.n || a.n_cols != self.n {
+            return Err(SimError::BadProblem {
+                what: format!(
+                    "matrix {}x{} does not match partition over n = {}",
+                    a.n_rows, a.n_cols, self.n
+                ),
+            });
+        }
+        let mut per_core = Vec::with_capacity(self.n_cores());
+        let mut remote_entries = 0u64;
+        let mut local_references = 0u64;
+        for core in 0..self.n_cores() {
+            let mut remote: BTreeSet<usize> = BTreeSet::new();
+            for slot in 0..self.slots_per_core() {
+                let Some(g) = self.slot_to_global(core, slot) else {
+                    continue;
+                };
+                let (cols, _) = a.row(g);
+                for &c in cols {
+                    if self.owner(c as usize) == core {
+                        local_references += 1;
+                    } else {
+                        remote.insert(c as usize);
+                    }
+                }
+            }
+            let mut by_owner: BTreeMap<usize, usize> = BTreeMap::new();
+            for c in remote {
+                *by_owner.entry(self.owner(c)).or_insert(0) += 1;
+            }
+            remote_entries += by_owner.values().map(|&v| v as u64).sum::<u64>();
+            per_core.push(by_owner);
+        }
+        Ok(GatherPlan {
+            per_core,
+            remote_entries,
+            local_references,
+        })
+    }
+
+    /// Check one core's SpMV working set against L1 SRAM using the
+    /// [`Sram`] bump allocator. `regions` is a list of (name, bytes)
+    /// allocations on top of `reserve` bytes of program/stack/CB space;
+    /// the error carries the §7.2-style exhaustion detail.
+    pub fn check_sram(&self, core: usize, reserve: usize, regions: &[(&str, usize)]) -> Result<usize> {
+        let coord = self.core_coord(core);
+        let mut sram = Sram::new(&format!("core({},{})", coord.row, coord.col));
+        sram.alloc("reserved(program/stack/CB)", reserve)?;
+        for &(name, bytes) in regions {
+            sram.alloc(name, bytes)?;
+        }
+        Ok(sram.used())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::mtx::{banded, laplacian_3d};
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn row_block_mapping_roundtrip() {
+        let p = RowPartition::row_block(2, 2, 5000).unwrap();
+        // 5000 / 4 cores = 1250 rows → 2 tiles (2048 slots) per core.
+        assert_eq!(p.tiles_per_core, 2);
+        assert_eq!(p.slots_per_core(), 2048);
+        for g in [0usize, 1, 2047, 2048, 4999] {
+            let (core, slot) = p.global_to_slot(g);
+            assert_eq!(p.slot_to_global(core, slot), Some(g));
+        }
+        // Core 2 owns rows [4096, 5000); its slots past 903 are padding.
+        assert_eq!(p.slot_to_global(2, 903), Some(4999));
+        assert_eq!(p.slot_to_global(2, 904), None);
+    }
+
+    #[test]
+    fn stencil_aligned_matches_problem_layout() {
+        use crate::arch::DataFormat;
+        use crate::solver::problem::{dist_random, dist_to_global, Problem};
+        let prob = Problem::new(2, 2, 3, DataFormat::Fp32);
+        let part = RowPartition::stencil_aligned(2, 2, 3).unwrap();
+        assert_eq!(part.n, prob.elems());
+        // A stencil-layout DistVector and the partition agree block-for-block.
+        let v = dist_random(&prob, 99);
+        let global = dist_to_global(&prob, &v);
+        let re = part.dist_from_global(DataFormat::Fp32, &global);
+        assert_eq!(v, re);
+        assert_eq!(part.dist_to_global(&v), global);
+        // Eq.-1 index ↔ (core, slot) agreement with Problem::global_index.
+        let g = prob.global_index(70, 20, 2); // core (1,1)
+        let (core, slot) = part.global_to_slot(g);
+        assert_eq!(core, 3);
+        assert_eq!(slot, 2 * 1024 + 6 * 16 + 4);
+    }
+
+    #[test]
+    fn dist_roundtrip_row_block() {
+        use crate::arch::DataFormat;
+        let p = RowPartition::row_block(1, 3, 2500).unwrap();
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..2500).map(|_| rng.next_f32()).collect();
+        let blocks = p.dist_from_global(DataFormat::Fp32, &x);
+        assert_eq!(blocks.len(), 3);
+        assert_eq!(p.dist_to_global(&blocks), x);
+    }
+
+    #[test]
+    fn laplacian_gather_footprint_is_the_halo() {
+        // On the stencil-aligned Laplacian, remote columns are exactly the
+        // §6.1 halo: each core-boundary face contributes one entry per
+        // boundary element.
+        let part = RowPartition::stencil_aligned(2, 2, 2).unwrap();
+        let a = laplacian_3d(128, 32, 2);
+        let plan = part.gather_plan(&a).unwrap();
+        // Core 0 (top-left) needs its South (x+) and East (y+) faces:
+        // 16 y-cols × nz from the south row-neighbor and 64 x-rows × nz
+        // from the east col-neighbor.
+        let c0 = &plan.per_core[0];
+        assert_eq!(c0.len(), 2);
+        assert_eq!(c0[&2], 16 * 2); // south neighbor: core index 2 (row 1, col 0)
+        assert_eq!(c0[&1], 64 * 2); // east neighbor: core index 1
+        assert_eq!(plan.remote_entries, 4 * (16 * 2 + 64 * 2) as u64);
+        assert!(plan.local_references > 0);
+        assert_eq!(plan.messages(), 8);
+    }
+
+    #[test]
+    fn banded_row_block_gather_only_touches_adjacent_blocks() {
+        let part = RowPartition::row_block(1, 4, 4 * 1024).unwrap();
+        let a = banded(4 * 1024, 3).unwrap();
+        let plan = part.gather_plan(&a).unwrap();
+        // Interior cores see exactly their two neighbors, 3 entries each.
+        let c1 = &plan.per_core[1];
+        assert_eq!(c1.len(), 2);
+        assert_eq!(c1[&0], 3);
+        assert_eq!(c1[&2], 3);
+        // Bytes round up to the 32 B beat per pair.
+        use crate::arch::DataFormat;
+        assert_eq!(plan.bytes(DataFormat::Fp32), plan.messages() * 32);
+    }
+
+    #[test]
+    fn sram_check_reports_exhaustion() {
+        let p = RowPartition::row_block(1, 1, 1024).unwrap();
+        assert!(p.check_sram(0, 256 * 1024, &[("vals", 64 * 1024)]).is_ok());
+        let err = p
+            .check_sram(0, 256 * 1024, &[("vals", 2 * 1024 * 1024)])
+            .unwrap_err();
+        assert!(matches!(err, SimError::SramExhausted { .. }));
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let p = RowPartition::row_block(1, 2, 100).unwrap();
+        let a = banded(64, 2).unwrap();
+        assert!(p.gather_plan(&a).is_err());
+        assert!(RowPartition::row_block(0, 2, 10).is_err());
+        assert!(RowPartition::stencil_aligned(1, 1, 0).is_err());
+    }
+}

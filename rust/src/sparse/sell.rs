@@ -1,0 +1,399 @@
+//! SELL-C-σ — the device-facing sparse format.
+//!
+//! Sliced ELLPACK groups rows into *slices* of C consecutive rows; each
+//! slice is padded to its own widest row and stored column-major (all
+//! first-nonzeros of the slice, then all second-nonzeros, …). A σ-row
+//! sorting window orders rows by descending length before slicing, which
+//! trims padding when row lengths vary.
+//!
+//! We fix **C = 32** ([`SELL_SLICE_HEIGHT`]): one slice is exactly two
+//! 16×16 tile faces (§3.1) — the granularity at which the unpacker moves
+//! data — and 32 FP32 values are one 128 B unpack beat, so a slice column
+//! maps onto whole faces of the 1024-element operand tiles the compute
+//! units consume. σ is a tuning knob: σ = 1 disables sorting (identity
+//! permutation), which the stencil-aligned partition relies on.
+
+use crate::arch::DataFormat;
+use crate::error::{Result, SimError};
+use crate::sparse::csr::CsrMatrix;
+
+/// Slice height C: two tile faces / one 128 B FP32 unpack beat (see
+/// module docs).
+pub const SELL_SLICE_HEIGHT: usize = 32;
+
+/// Occupancy statistics of a SELL conversion.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SellStats {
+    /// True nonzeros of the source matrix.
+    pub nnz: usize,
+    /// Stored entries after slice padding (Σ slice_width × C).
+    pub padded_nnz: usize,
+    pub n_slices: usize,
+    /// Widest slice (max nnz/row after windowed sorting).
+    pub max_width: usize,
+}
+
+impl SellStats {
+    /// Fraction of stored entries that are real nonzeros.
+    pub fn occupancy(&self) -> f64 {
+        if self.padded_nnz == 0 {
+            1.0
+        } else {
+            self.nnz as f64 / self.padded_nnz as f64
+        }
+    }
+
+    /// Stored-to-real entry ratio (≥ 1; the SELL padding overhead).
+    pub fn overhead(&self) -> f64 {
+        if self.nnz == 0 {
+            1.0
+        } else {
+            self.padded_nnz as f64 / self.nnz as f64
+        }
+    }
+}
+
+/// Validate a SELL-C-σ parameter pair: positive slice height, and σ
+/// either 1 or a multiple of C (windows that split a slice would make
+/// the permutation ambiguous).
+fn validate_params(c: usize, sigma: usize) -> Result<()> {
+    if c == 0 {
+        return Err(SimError::BadProblem {
+            what: "SELL slice height must be positive".to_string(),
+        });
+    }
+    if sigma != 1 && sigma % c != 0 {
+        return Err(SimError::BadProblem {
+            what: format!("SELL σ = {sigma} must be 1 or a multiple of C = {c}"),
+        });
+    }
+    Ok(())
+}
+
+/// Closed-form padded-entry count of a SELL-C-σ conversion, computed from
+/// the CSR row lengths without building the matrix: rows are length-sorted
+/// (descending, stable) within each σ window, chunked into C-row slices
+/// (the last slice padded to full height), and each slice stores
+/// `C × max(row length in slice)` entries. Rejects exactly the (C, σ)
+/// pairs [`SellMatrix::from_csr`] rejects; property-tested against the
+/// entries it actually stores.
+pub fn padded_nnz_formula(a: &CsrMatrix, c: usize, sigma: usize) -> Result<usize> {
+    validate_params(c, sigma)?;
+    let order = sorted_row_order(a, c, sigma);
+    let mut padded = 0;
+    for slice in order.chunks(c) {
+        let width = slice
+            .iter()
+            .map(|&r| if r == usize::MAX { 0 } else { a.row_nnz(r) })
+            .max()
+            .unwrap_or(0);
+        padded += width * c;
+    }
+    Ok(padded)
+}
+
+/// Row order after windowed sorting, padded with `usize::MAX` virtual rows
+/// to a multiple of the slice height.
+fn sorted_row_order(a: &CsrMatrix, c: usize, sigma: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..a.n_rows).collect();
+    if sigma > 1 {
+        for window in order.chunks_mut(sigma) {
+            // Stable: ties keep ascending row index, so conversion is
+            // deterministic.
+            window.sort_by_key(|&r| std::cmp::Reverse(a.row_nnz(r)));
+        }
+    }
+    let slots = a.n_rows.div_ceil(c) * c;
+    order.resize(slots, usize::MAX);
+    order
+}
+
+/// A sparse matrix in SELL-C-σ.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SellMatrix {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Slice height C.
+    pub c: usize,
+    /// Sorting window in rows (1 = no sorting).
+    pub sigma: usize,
+    /// `slice_ptr[s]..slice_ptr[s+1]` spans slice `s` in `col_idx`/`vals`.
+    pub slice_ptr: Vec<usize>,
+    /// Padded width (max nnz/row) of each slice.
+    pub slice_width: Vec<usize>,
+    /// Column-major within each slice: entry (k, r) of slice s sits at
+    /// `slice_ptr[s] + k * c + r`. Padding entries carry col 0, val 0.
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+    /// `perm[slot] = original row` for slot `s * c + r`; `usize::MAX`
+    /// marks the virtual rows that pad the final slice.
+    pub perm: Vec<usize>,
+    /// True nonzero count of each slot's row (reconstruction needs it:
+    /// genuinely-stored zero values must survive a CSR round-trip).
+    pub slot_nnz: Vec<usize>,
+}
+
+impl SellMatrix {
+    /// Convert from CSR. `sigma` must be 1 or a multiple of `c` (windows
+    /// that split a slice would make the permutation ambiguous).
+    pub fn from_csr(a: &CsrMatrix, c: usize, sigma: usize) -> Result<Self> {
+        validate_params(c, sigma)?;
+        let perm = sorted_row_order(a, c, sigma);
+        let n_slices = perm.len() / c;
+        let slot_nnz: Vec<usize> = perm
+            .iter()
+            .map(|&r| if r == usize::MAX { 0 } else { a.row_nnz(r) })
+            .collect();
+        let mut slice_ptr = Vec::with_capacity(n_slices + 1);
+        let mut slice_width = Vec::with_capacity(n_slices);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        slice_ptr.push(0);
+        for s in 0..n_slices {
+            let slots = s * c..(s + 1) * c;
+            let width = slot_nnz[slots.clone()].iter().copied().max().unwrap_or(0);
+            for k in 0..width {
+                for slot in slots.clone() {
+                    if k < slot_nnz[slot] {
+                        let row = perm[slot];
+                        let (cols, rvals) = a.row(row);
+                        col_idx.push(cols[k]);
+                        vals.push(rvals[k]);
+                    } else {
+                        col_idx.push(0);
+                        vals.push(0.0);
+                    }
+                }
+            }
+            slice_width.push(width);
+            slice_ptr.push(col_idx.len());
+        }
+        Ok(Self {
+            n_rows: a.n_rows,
+            n_cols: a.n_cols,
+            c,
+            sigma,
+            slice_ptr,
+            slice_width,
+            col_idx,
+            vals,
+            perm,
+            slot_nnz,
+        })
+    }
+
+    pub fn n_slices(&self) -> usize {
+        self.slice_width.len()
+    }
+
+    /// True nonzeros (excluding padding).
+    pub fn nnz(&self) -> usize {
+        self.slot_nnz.iter().sum()
+    }
+
+    /// Stored entries including padding.
+    pub fn padded_nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn stats(&self) -> SellStats {
+        SellStats {
+            nnz: self.nnz(),
+            padded_nnz: self.padded_nnz(),
+            n_slices: self.n_slices(),
+            max_width: self.slice_width.iter().copied().max().unwrap_or(0),
+        }
+    }
+
+    /// The k-th stored entry (col, val) of the row in `slot`, or None past
+    /// that row's true length.
+    pub fn slot_entry(&self, slot: usize, k: usize) -> Option<(u32, f32)> {
+        if k >= self.slot_nnz[slot] {
+            return None;
+        }
+        let s = slot / self.c;
+        let r = slot % self.c;
+        let at = self.slice_ptr[s] + k * self.c + r;
+        Some((self.col_idx[at], self.vals[at]))
+    }
+
+    /// Invert the conversion: original row order, per-row entry order, and
+    /// every (row, col, val) — including explicitly stored zeros — are
+    /// restored exactly; padding is dropped.
+    pub fn to_csr(&self) -> Result<CsrMatrix> {
+        let mut per_row: Vec<Vec<(u32, f32)>> = vec![Vec::new(); self.n_rows];
+        for (slot, &row) in self.perm.iter().enumerate() {
+            if row == usize::MAX {
+                continue;
+            }
+            for k in 0..self.slot_nnz[slot] {
+                let (c, v) = self.slot_entry(slot, k).unwrap();
+                per_row[row].push((c, v));
+            }
+        }
+        let mut row_ptr = vec![0usize];
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        for row in &per_row {
+            for &(c, v) in row {
+                col_idx.push(c);
+                vals.push(v);
+            }
+            row_ptr.push(col_idx.len());
+        }
+        CsrMatrix::new(self.n_rows, self.n_cols, row_ptr, col_idx, vals)
+    }
+
+    /// y = A x in f64 over the padded storage (padding contributes 0).
+    pub fn apply_f64(&self, x: &[f32]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n_cols, "SpMV operand length mismatch");
+        let mut y = vec![0.0f64; self.n_rows];
+        for (slot, &row) in self.perm.iter().enumerate() {
+            if row == usize::MAX {
+                continue;
+            }
+            let mut acc = 0.0f64;
+            for k in 0..self.slot_nnz[slot] {
+                let (c, v) = self.slot_entry(slot, k).unwrap();
+                acc += v as f64 * x[c as usize] as f64;
+            }
+            y[row] = acc;
+        }
+        y
+    }
+
+    /// Bytes of stored values at `df` (padding included — it is moved and
+    /// multiplied like any other entry).
+    pub fn value_bytes(&self, df: DataFormat) -> u64 {
+        (self.padded_nnz() * df.bytes()) as u64
+    }
+
+    /// Bytes of stored 32-bit column indices.
+    pub fn index_bytes(&self) -> u64 {
+        (self.padded_nnz() * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_csr(seed: u64, n_rows: usize, n_cols: usize, max_row: usize) -> CsrMatrix {
+        let mut rng = Rng::new(seed);
+        let mut t = Vec::new();
+        for r in 0..n_rows {
+            let k = rng.below(max_row as u64 + 1) as usize;
+            for _ in 0..k {
+                t.push((r, rng.below(n_cols as u64) as usize, rng.next_f32() * 2.0 - 1.0));
+            }
+        }
+        CsrMatrix::from_triplets(n_rows, n_cols, &t).unwrap()
+    }
+
+    #[test]
+    fn uniform_rows_have_no_padding() {
+        // 64 rows, exactly 3 nnz each → occupancy 1.0 regardless of σ.
+        let t: Vec<_> = (0..64)
+            .flat_map(|r| (0..3).map(move |k| (r, (r + k) % 64, 1.0 + k as f32)))
+            .collect();
+        let a = CsrMatrix::from_triplets(64, 64, &t).unwrap();
+        for sigma in [1, 32, 64] {
+            let s = SellMatrix::from_csr(&a, SELL_SLICE_HEIGHT, sigma).unwrap();
+            assert_eq!(s.n_slices(), 2);
+            assert_eq!(s.padded_nnz(), 64 * 3);
+            assert_eq!(s.stats().occupancy(), 1.0);
+            assert_eq!(s.stats().overhead(), 1.0);
+        }
+    }
+
+    #[test]
+    fn column_major_slice_layout() {
+        // Rows 0..32 with 2 nnz, one wide row: entry (k, r) at ptr + k*C + r.
+        let mut t = Vec::new();
+        for r in 0..32 {
+            t.push((r, r, 10.0 + r as f32));
+            t.push((r, (r + 1) % 32, -1.0));
+        }
+        let a = CsrMatrix::from_triplets(32, 32, &t).unwrap();
+        let s = SellMatrix::from_csr(&a, 32, 1).unwrap();
+        assert_eq!(s.n_slices(), 1);
+        assert_eq!(s.slice_width, vec![2]);
+        // k = 0 column holds every row's first entry (the diagonal).
+        for r in 0..32 {
+            assert_eq!(s.col_idx[r], r as u32);
+            assert_eq!(s.vals[r], 10.0 + r as f32);
+            assert_eq!(s.vals[32 + r], -1.0);
+        }
+    }
+
+    #[test]
+    fn sigma_sorting_reduces_padding() {
+        // One long row per 32: unsorted, every slice pads to the long row;
+        // sorted with σ = n, the long rows share a slice.
+        let mut t = Vec::new();
+        for r in 0..128usize {
+            let k = if r % 32 == 0 { 16 } else { 2 };
+            for j in 0..k {
+                t.push((r, (r + j) % 128, 1.0));
+            }
+        }
+        let a = CsrMatrix::from_triplets(128, 128, &t).unwrap();
+        let unsorted = SellMatrix::from_csr(&a, 32, 1).unwrap();
+        let sorted = SellMatrix::from_csr(&a, 32, 128).unwrap();
+        assert!(sorted.padded_nnz() < unsorted.padded_nnz());
+        assert_eq!(sorted.nnz(), unsorted.nnz());
+        // Both round-trip to the same matrix.
+        assert_eq!(sorted.to_csr().unwrap(), a);
+        assert_eq!(unsorted.to_csr().unwrap(), a);
+    }
+
+    #[test]
+    fn roundtrip_random_including_ragged_tail() {
+        for seed in 0..5 {
+            // 50 rows: final slice has 18 virtual rows.
+            let a = random_csr(seed, 50, 40, 9);
+            for sigma in [1, 32, 64] {
+                let s = SellMatrix::from_csr(&a, 32, sigma).unwrap();
+                assert_eq!(s.to_csr().unwrap(), a, "seed {seed} σ {sigma}");
+                assert_eq!(s.nnz(), a.nnz());
+                assert_eq!(s.padded_nnz(), padded_nnz_formula(&a, 32, sigma).unwrap());
+            }
+        }
+    }
+
+    #[test]
+    fn apply_matches_csr_oracle() {
+        let a = random_csr(7, 70, 70, 6);
+        let mut rng = Rng::new(8);
+        let x: Vec<f32> = (0..70).map(|_| rng.next_f32() - 0.5).collect();
+        let want = a.apply_f64(&x);
+        for sigma in [1, 64] {
+            let s = SellMatrix::from_csr(&a, 32, sigma).unwrap();
+            let got = s.apply_f64(&x);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-9, "{g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn bad_sigma_rejected() {
+        let a = random_csr(1, 10, 10, 3);
+        assert!(SellMatrix::from_csr(&a, 32, 48).is_err());
+        assert!(SellMatrix::from_csr(&a, 0, 1).is_err());
+        // The formula rejects exactly the same parameter pairs.
+        assert!(padded_nnz_formula(&a, 32, 48).is_err());
+        assert!(padded_nnz_formula(&a, 0, 1).is_err());
+    }
+
+    #[test]
+    fn storage_byte_accounting() {
+        let a = random_csr(2, 64, 64, 5);
+        let s = SellMatrix::from_csr(&a, 32, 1).unwrap();
+        let p = s.padded_nnz() as u64;
+        assert_eq!(s.value_bytes(DataFormat::Fp32), 4 * p);
+        assert_eq!(s.value_bytes(DataFormat::Bf16), 2 * p);
+        assert_eq!(s.index_bytes(), 4 * p);
+    }
+}
