@@ -27,14 +27,15 @@ use wormsim::util::stats::fmt_ns;
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let small = args.iter().any(|a| a == "--small");
-    let engine_kind = if args.iter().any(|a| a == "--engine") {
-        let idx = args.iter().position(|a| a == "--engine").unwrap();
-        match args.get(idx + 1).map(|s| s.as_str()) {
-            Some("pjrt") => EngineKind::Pjrt,
-            _ => EngineKind::Native,
-        }
-    } else {
-        EngineKind::Native
+    // Engine selection goes through the single `EngineKind: FromStr`
+    // impl — unknown names are an error, not a silent native fallback.
+    let engine_kind: EngineKind = match args.iter().position(|a| a == "--engine") {
+        Some(idx) => args
+            .get(idx + 1)
+            .ok_or_else(|| anyhow::anyhow!("--engine expects a value"))?
+            .parse()
+            .map_err(anyhow::Error::msg)?,
+        None => EngineKind::Native,
     };
     let (grid_rows, grid_cols, tiles, iters) = if small { (4, 4, 16, 30) } else { (8, 7, 64, 60) };
 
@@ -83,6 +84,12 @@ fn main() -> anyhow::Result<()> {
             wall
         );
         println!("{}", res.breakdown.render("component breakdown"));
+        println!(
+            "launch accounting (scheduler-derived): {} enqueues ({:.2}/iter), device gaps {}",
+            res.launch.launches,
+            res.launches_per_iter(),
+            fmt_ns(res.launch.gap_ns)
+        );
         results.push((variant.label().to_string(), res.per_iter_ns));
     }
 

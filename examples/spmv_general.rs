@@ -102,6 +102,18 @@ fn main() -> anyhow::Result<()> {
         t.traffic.total(),
         t.achieved_gbs()
     );
+    // The lowered program carries the same single traffic number plus the
+    // SELL occupancy stats as compile-time args.
+    let program = op.lower(&cost);
+    assert_eq!(program.footprint.traffic_bytes, t.traffic.total());
+    println!(
+        "  program '{}': {} kernels, footprint {{ tiles/core: {}, sram: {} B, traffic: {} B }}",
+        program.name,
+        program.kernels.len(),
+        program.footprint.tiles_per_core,
+        program.footprint.sram_bytes,
+        program.footprint.traffic_bytes
+    );
 
     // ---- sparse PCG -----------------------------------------------------
     let bg: Vec<f32> = (0..a.n_rows).map(|_| rng.next_f32() - 0.5).collect();

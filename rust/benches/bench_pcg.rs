@@ -1,15 +1,19 @@
 //! Bench: full PCG iterations (paper Table 3 & Fig 12) — both variants at
-//! the Table-3 configuration, plus the preconditioner ablation.
+//! the Table-3 configuration, the preconditioner ablation, and the
+//! fused-vs-split sparse PCG with its scheduler-derived enqueues/iteration
+//! (§7.1 launch accounting).
 
 use wormsim::arch::DataFormat;
+use wormsim::kernels::spmv::{SpmvConfig, SpmvMode, SpmvOperator};
 use wormsim::kernels::DotMethod;
 use wormsim::noc::RoutePattern;
 use wormsim::profiler::Profiler;
-use wormsim::solver::{self, PcgOptions, PcgVariant, Problem};
+use wormsim::solver::{self, FusionMode, Operator, PcgOptions, PcgResult, PcgVariant, Problem};
+use wormsim::sparse::{laplacian_3d, RowPartition};
 use wormsim::timing::cost::CostModel;
 use wormsim::util::bench::Bencher;
 
-fn pcg_once(variant: PcgVariant, rows: usize, cols: usize, tiles: usize, precondition: bool) -> f64 {
+fn pcg_run(variant: PcgVariant, rows: usize, cols: usize, tiles: usize, precondition: bool) -> PcgResult {
     let p = Problem::new(rows, cols, tiles, variant.df());
     let grid = p.make_grid().unwrap();
     let b = solver::dist_random(&p, 42);
@@ -21,9 +25,43 @@ fn pcg_once(variant: PcgVariant, rows: usize, cols: usize, tiles: usize, precond
     opts.dot_pattern = RoutePattern::Naive;
     let cost = CostModel::default();
     let mut prof = Profiler::disabled();
-    let res = solver::solve(&grid, &p, &b, &wormsim::engine::NativeEngine::new(), &cost, &opts, &mut prof)
+    solver::solve(&grid, &p, &b, &wormsim::engine::NativeEngine::new(), &cost, &opts, &mut prof)
+        .unwrap()
+}
+
+fn pcg_once(variant: PcgVariant, rows: usize, cols: usize, tiles: usize, precondition: bool) -> f64 {
+    pcg_run(variant, rows, cols, tiles, precondition).per_iter_ns
+}
+
+/// Fused-vs-split sparse PCG on the generated 3D Laplacian at BF16; the
+/// schedule is the only difference, so the enqueue/iteration delta is the
+/// §7.1 story on the sparse path.
+fn sparse_pcg_run(fusion: FusionMode, iters: usize) -> PcgResult {
+    let (rows, cols, tiles) = (2usize, 2usize, 8usize);
+    let p = Problem::new(rows, cols, tiles, DataFormat::Bf16);
+    let grid = p.make_grid().unwrap();
+    let (nx, ny, nz) = p.dims();
+    let a = laplacian_3d(nx, ny, nz);
+    let part = RowPartition::stencil_aligned(rows, cols, nz).unwrap();
+    let op = SpmvOperator::new(&a, part, SpmvConfig::new(DataFormat::Bf16, SpmvMode::SramResident))
         .unwrap();
-    res.per_iter_ns
+    let b = solver::dist_random(&p, 42);
+    let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
+    opts.max_iters = iters;
+    opts.tol_abs = 0.0;
+    opts.fusion = fusion;
+    let cost = CostModel::default();
+    let mut prof = Profiler::disabled();
+    solver::solve_operator(
+        &grid,
+        &b,
+        &Operator::Sparse(&op),
+        &wormsim::engine::NativeEngine::new(),
+        &cost,
+        &opts,
+        &mut prof,
+    )
+    .unwrap()
 }
 
 fn main() {
@@ -47,6 +85,33 @@ fn main() {
         Some(pcg_once(PcgVariant::FusedBf16, 4, 4, 64, false))
     });
 
+    // Sparse PCG, fused vs split schedule at the same BF16 precision.
+    b.bench("sparse/bf16_fused_2x2_8t_per_iter", || {
+        Some(sparse_pcg_run(FusionMode::Auto, 2).per_iter_ns)
+    });
+    b.bench("sparse/bf16_split_2x2_8t_per_iter", || {
+        Some(sparse_pcg_run(FusionMode::ForceSplit, 2).per_iter_ns)
+    });
+
     b.finish();
-    let _ = DataFormat::Bf16;
+
+    // Scheduler-derived launch accounting (§7.1). These are dimensionless
+    // counts, not simulated time, so they are reported outside the
+    // Bencher's sim-ns channel.
+    let stencil_fused = pcg_run(PcgVariant::FusedBf16, 4, 4, 16, true);
+    let stencil_split = pcg_run(PcgVariant::SplitFp32, 4, 4, 16, true);
+    let sparse_fused = sparse_pcg_run(FusionMode::Auto, 2);
+    let sparse_split = sparse_pcg_run(FusionMode::ForceSplit, 2);
+    println!("modeled enqueues/iteration (§7.1 launch accounting):");
+    println!(
+        "  stencil: fused {:.2} vs split {:.2}",
+        stencil_fused.launches_per_iter(),
+        stencil_split.launches_per_iter()
+    );
+    println!(
+        "  sparse:  fused {:.2} vs split {:.2}",
+        sparse_fused.launches_per_iter(),
+        sparse_split.launches_per_iter()
+    );
+    assert!(sparse_fused.launches_per_iter() < sparse_split.launches_per_iter());
 }

@@ -7,12 +7,18 @@
 //! the DRAM legs are charged separately from the roofline (the paper's
 //! simplified roofline excludes them, and so does ours for the Fig-3
 //! point).
+//!
+//! The kernel lowers to a [`Program`] ([`lower_eltwise`] /
+//! [`lower_block_op`]) and executes through [`HostQueue::run`]; this
+//! module computes operation *cycles*, never dispatch or phase timing.
 
 use crate::arch::{ComputeUnit, DataFormat};
 use crate::engine::{ComputeEngine, CoreBlock};
+use crate::profiler::Profiler;
 use crate::timing::cost::{CostModel, PipelineMode, TileOpKind};
 use crate::timing::SimNs;
 use crate::tile::EltwiseOp;
+use crate::ttm::{Footprint, HostQueue, Program, Workload};
 
 /// Timing of a single-core element-wise streaming run.
 #[derive(Debug, Clone, PartialEq)]
@@ -32,8 +38,76 @@ pub struct EltwiseTiming {
     pub ai: f64,
 }
 
+/// Lower the single-core streaming element-wise kernel (the Fig-3
+/// experiment) to a program: one core, a `tiles`-long compute stream,
+/// two input vectors staged in and one result out through DRAM.
+pub fn lower_eltwise(
+    cost: &CostModel,
+    unit: ComputeUnit,
+    df: DataFormat,
+    tiles: usize,
+) -> Program {
+    let cycles_per_tile =
+        cost.tile_op_cycles(unit, df, TileOpKind::EltwiseBinary, PipelineMode::Streamed);
+    let dram_bytes = (3 * tiles * df.tile_bytes()) as u64;
+    let mut program = Program::standard("eltwise");
+    for k in &mut program.kernels {
+        k.ct_args.push(("tiles".to_string(), tiles.to_string()));
+        k.ct_args.push(("df".to_string(), df.to_string()));
+        k.ct_args.push(("unit".to_string(), unit.to_string()));
+    }
+    program
+        .with_work(Workload {
+            grid: (1, 1),
+            dram_bytes: vec![dram_bytes],
+            compute_cycles: vec![cycles_per_tile * tiles as u64],
+            ..Workload::default()
+        })
+        .with_footprint(Footprint {
+            tiles_per_core: tiles,
+            sram_bytes: 3 * tiles * df.tile_bytes(),
+            traffic_bytes: dram_bytes,
+        })
+}
+
+/// Lower a distributed block operation (axpy / scale / preconditioner
+/// application over every core's resident tiles) to a program on the
+/// `rows`×`cols` sub-grid — the PCG component programs.
+#[allow(clippy::too_many_arguments)]
+pub fn lower_block_op(
+    name: &str,
+    rows: usize,
+    cols: usize,
+    cost: &CostModel,
+    unit: ComputeUnit,
+    df: DataFormat,
+    kind: TileOpKind,
+    tiles: usize,
+    mode: PipelineMode,
+) -> Program {
+    let n_cores = rows * cols;
+    let cycles = cost.tile_op_cycles(unit, df, kind, mode) * tiles as u64;
+    let mut program = Program::standard(name);
+    for k in &mut program.kernels {
+        k.ct_args.push(("tiles".to_string(), tiles.to_string()));
+        k.ct_args.push(("df".to_string(), df.to_string()));
+    }
+    program
+        .with_work(Workload {
+            grid: (rows, cols),
+            compute_cycles: vec![cycles; n_cores],
+            ..Workload::default()
+        })
+        .with_footprint(Footprint {
+            tiles_per_core: tiles,
+            sram_bytes: 3 * tiles * df.tile_bytes(),
+            traffic_bytes: 0,
+        })
+}
+
 /// Single-core streaming element-wise timing (the Fig-3 experiment:
-/// 256 tiles per core = 262,144 elements).
+/// 256 tiles per core = 262,144 elements). Thin wrapper: lower, run
+/// through the host queue, collect the phase breakdown.
 pub fn eltwise_stream_timing(
     cost: &CostModel,
     unit: ComputeUnit,
@@ -42,18 +116,19 @@ pub fn eltwise_stream_timing(
 ) -> EltwiseTiming {
     let cycles_per_tile =
         cost.tile_op_cycles(unit, df, TileOpKind::EltwiseBinary, PipelineMode::Streamed);
-    let core_cycles = cycles_per_tile * tiles as u64;
-    // DRAM legs: two input vectors in, one result out.
-    let bytes = (3 * tiles * df.tile_bytes()) as u64;
-    let dram_cycles = cost.dram_stream_cycles(bytes);
+    let program = lower_eltwise(cost, unit, df, tiles);
+    let mut queue = HostQueue::new(cost.calib.clone());
+    let out = queue
+        .run(&program, cost, 0.0, &mut Profiler::disabled())
+        .expect("eltwise program is well-formed");
     let (ai, gflops) = cost.roofline_point(unit, df);
     EltwiseTiming {
         unit,
         df,
         tiles,
         cycles_per_tile,
-        core_ns: crate::timing::cycles_ns(core_cycles),
-        dram_ns: crate::timing::cycles_ns(dram_cycles),
+        core_ns: out.compute_ns,
+        dram_ns: out.dram_ns,
         gflops,
         ai,
     }
@@ -113,6 +188,26 @@ mod tests {
         let b = eltwise_stream_timing(&cost, ComputeUnit::Sfpu, DataFormat::Bf16, 64);
         let f = eltwise_stream_timing(&cost, ComputeUnit::Sfpu, DataFormat::Fp32, 64);
         assert!(f.core_ns > b.core_ns);
+    }
+
+    #[test]
+    fn timing_matches_direct_cost_model() {
+        // The program path must reproduce the direct cycle arithmetic.
+        let cost = CostModel::default();
+        let t = eltwise_stream_timing(&cost, ComputeUnit::Fpu, DataFormat::Bf16, 256);
+        let want_core = crate::timing::cycles_ns(t.cycles_per_tile * 256);
+        assert!((t.core_ns - want_core).abs() < 1e-9);
+        let bytes = (3 * 256 * DataFormat::Bf16.tile_bytes()) as u64;
+        let want_dram = crate::timing::cycles_ns(cost.dram_stream_cycles(bytes));
+        assert!((t.dram_ns - want_dram).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lowering_is_deterministic() {
+        let cost = CostModel::default();
+        let a = lower_eltwise(&cost, ComputeUnit::Fpu, DataFormat::Bf16, 64);
+        let b = lower_eltwise(&cost, ComputeUnit::Fpu, DataFormat::Bf16, 64);
+        assert_eq!(a, b);
     }
 
     #[test]

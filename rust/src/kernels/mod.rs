@@ -1,16 +1,23 @@
 //! The paper's three numerical kernels (§4–§6) — element-wise arithmetic,
 //! global dot-product reduction, and the 7-point 3D stencil — plus the
 //! general sparse SpMV that extends the stencil's fixed operator to
-//! arbitrary matrices (see [`crate::sparse`]). Each kernel produces values
-//! through a [`crate::engine::ComputeEngine`] and timing through the cost
-//! model + NoC simulator.
+//! arbitrary matrices (see [`crate::sparse`]).
+//!
+//! Each kernel produces values through a
+//! [`crate::engine::ComputeEngine`] and timing by *lowering* to a
+//! [`crate::ttm::Program`] (the `lower_*` constructors) executed through
+//! [`crate::ttm::HostQueue::run`]. To add a kernel, write a lowering —
+//! not a timing path: describe its NoC sends, RISC-V element loops,
+//! compute-pipeline cycles, and DRAM staging as a
+//! [`crate::ttm::Workload`], and the scheduler owns dispatch cost,
+//! per-phase timing, and profiler zones.
 
 pub mod eltwise;
 pub mod reduction;
 pub mod spmv;
 pub mod stencil;
 
-pub use eltwise::{block_op_ns, eltwise_stream_timing, EltwiseTiming};
-pub use reduction::{run_dot, DotConfig, DotMethod, DotOutcome};
+pub use eltwise::{block_op_ns, eltwise_stream_timing, lower_block_op, lower_eltwise, EltwiseTiming};
+pub use reduction::{lower_dot, lower_dot_as, run_dot, DotConfig, DotMethod, DotOutcome};
 pub use spmv::{run_spmv, SpmvConfig, SpmvMode, SpmvOperator, SpmvTiming, SpmvTraffic};
-pub use stencil::{run_stencil, StencilConfig, StencilTiming, StencilVariant};
+pub use stencil::{lower_stencil, run_stencil, StencilConfig, StencilTiming, StencilVariant};

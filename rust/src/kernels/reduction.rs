@@ -14,15 +14,19 @@
 //!
 //! At every hop only the sum of incoming partials is forwarded. The scalar
 //! result is finally multicast back to all cores.
+//!
+//! The kernel lowers to a [`Program`] with a [`ReduceSpec`] network phase
+//! ([`lower_dot`]) and executes through [`crate::ttm::HostQueue::run`];
+//! this module computes operation *cycles*, never dispatch or phase
+//! timing.
 
 use crate::arch::{ComputeUnit, DataFormat};
-use crate::device::Coord;
 use crate::engine::{ComputeEngine, CoreBlock};
-use crate::noc::patterns::{reduce_tree, RoutePattern};
-use crate::noc::NocSim;
+use crate::noc::patterns::RoutePattern;
+use crate::profiler::Profiler;
 use crate::timing::cost::{CostModel, PipelineMode, TileOpKind};
 use crate::timing::SimNs;
-use std::collections::BTreeMap;
+use crate::ttm::{Footprint, HostQueue, Program, ReduceSpec, Workload};
 
 /// §5.1 granularity methods.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -72,8 +76,92 @@ pub struct DotOutcome {
     pub bytes: u64,
 }
 
-/// Run the distributed dot product: values via `engine`, timing via the
-/// cost model + NoC simulator.
+/// Lower the distributed dot product to a program named `name` ("dot" or
+/// "norm" in the solver): a uniform local multiply/accumulate phase (Fig
+/// 4), the §5.1 granularity choice encoded as payload + merge cycles of
+/// the [`ReduceSpec`], and the scalar result broadcast.
+pub fn lower_dot_as(
+    name: &str,
+    rows: usize,
+    cols: usize,
+    cfg: &DotConfig,
+    cost: &CostModel,
+) -> Program {
+    let calib = &cost.calib;
+    let n_cores = rows * cols;
+    let t = cfg.tiles_per_core as u64;
+    // Local phase (Fig 4): per tile, eltwise multiply + accumulate into the
+    // partial tile. Dependent sequence: accumulation chains.
+    let mul = cost.tile_op_cycles(cfg.unit, cfg.df, TileOpKind::EltwiseBinary, PipelineMode::Streamed);
+    let acc = cost.tile_op_cycles(cfg.unit, cfg.df, TileOpKind::EltwiseBinary, PipelineMode::Dependent);
+    let mut local_cycles = t * (mul + acc);
+    // Method 1: local tile → scalar reduction on every core.
+    let reduce_cycles = cost.tile_op_cycles(cfg.unit, cfg.df, TileOpKind::ReduceTile, PipelineMode::Dependent);
+    if cfg.method == DotMethod::ReduceThenSend {
+        local_cycles += reduce_cycles;
+    }
+    // Center pattern pays extra routing logic per core (§5.2).
+    if cfg.pattern == RoutePattern::Center {
+        local_cycles += calib.center_route_overhead_cycles;
+    }
+
+    let payload: u64 = match cfg.method {
+        // A scalar still moves as one 32B-aligned beat (§3.3).
+        DotMethod::ReduceThenSend => 32,
+        DotMethod::SendTiles => cfg.df.tile_bytes() as u64,
+    };
+    let merge_cycles: u64 = match cfg.method {
+        DotMethod::ReduceThenSend => calib.scalar_merge_cycles,
+        // Tile merges integrate into the receiver's unpack/compute/pack
+        // pipeline as the payload streams in (streamed mode).
+        DotMethod::SendTiles => {
+            cost.tile_op_cycles(cfg.unit, cfg.df, TileOpKind::EltwiseBinary, PipelineMode::Streamed)
+        }
+    };
+    // Method 2: the root reduces the merged tile to a scalar (§5.1).
+    let root_extra = if cfg.method == DotMethod::SendTiles {
+        reduce_cycles
+    } else {
+        0
+    };
+
+    let mut program = Program::standard(name);
+    for k in &mut program.kernels {
+        k.ct_args.push(("tiles".to_string(), cfg.tiles_per_core.to_string()));
+        k.ct_args.push(("df".to_string(), cfg.df.to_string()));
+        k.ct_args.push(("method".to_string(), format!("{:?}", cfg.method)));
+        k.ct_args.push(("pattern".to_string(), format!("{:?}", cfg.pattern)));
+    }
+    program
+        .with_work(Workload {
+            grid: (rows, cols),
+            compute_cycles: vec![local_cycles; n_cores],
+            reduce: Some(ReduceSpec {
+                pattern: cfg.pattern,
+                payload_bytes: payload,
+                merge_cycles,
+                root_extra_cycles: root_extra,
+                // "the scalar result is then multicast back to all cores"
+                // (§5.1): one 32B-aligned beat.
+                bcast_bytes: 32,
+            }),
+            ..Workload::default()
+        })
+        .with_footprint(Footprint {
+            tiles_per_core: cfg.tiles_per_core,
+            // Two input vectors + the partial-result tile.
+            sram_bytes: (2 * cfg.tiles_per_core + 1) * cfg.df.tile_bytes(),
+            traffic_bytes: (n_cores.saturating_sub(1) as u64) * (payload + 32),
+        })
+}
+
+/// [`lower_dot_as`] with the canonical "dot" program name.
+pub fn lower_dot(rows: usize, cols: usize, cfg: &DotConfig, cost: &CostModel) -> Program {
+    lower_dot_as("dot", rows, cols, cfg, cost)
+}
+
+/// Run the distributed dot product: values via `engine`, timing by
+/// lowering to a program and executing it through the host queue.
 pub fn run_dot(
     rows: usize,
     cols: usize,
@@ -93,94 +181,19 @@ pub fn run_dot(
         value += engine.dot_partial(x, y)?;
     }
 
-    // ---- timing --------------------------------------------------------
-    let calib = &cost.calib;
-    let t = cfg.tiles_per_core as u64;
-    // Local phase (Fig 4): per tile, eltwise multiply + accumulate into the
-    // partial tile. Dependent sequence: accumulation chains.
-    let mul = cost.tile_op_cycles(cfg.unit, cfg.df, TileOpKind::EltwiseBinary, PipelineMode::Streamed);
-    let acc = cost.tile_op_cycles(cfg.unit, cfg.df, TileOpKind::EltwiseBinary, PipelineMode::Dependent);
-    let mut local_cycles = t * (mul + acc);
-    // Method 1: local tile → scalar reduction on every core.
-    let reduce_cycles = cost.tile_op_cycles(cfg.unit, cfg.df, TileOpKind::ReduceTile, PipelineMode::Dependent);
-    if cfg.method == DotMethod::ReduceThenSend {
-        local_cycles += reduce_cycles;
-    }
-    // Center pattern pays extra routing logic per core (§5.2).
-    if cfg.pattern == RoutePattern::Center {
-        local_cycles += calib.center_route_overhead_cycles;
-    }
-    let local_ns = crate::timing::cycles_ns(local_cycles);
-
-    // Tree execution over the NoC.
-    let tree = reduce_tree(cfg.pattern, rows, cols);
-    let payload: u64 = match cfg.method {
-        // A scalar still moves as one 32B-aligned beat (§3.3).
-        DotMethod::ReduceThenSend => 32,
-        DotMethod::SendTiles => cfg.df.tile_bytes() as u64,
-    };
-    let merge_cycles: u64 = match cfg.method {
-        DotMethod::ReduceThenSend => calib.scalar_merge_cycles,
-        // Tile merges integrate into the receiver's unpack/compute/pack
-        // pipeline as the payload streams in (streamed mode).
-        DotMethod::SendTiles => {
-            cost.tile_op_cycles(cfg.unit, cfg.df, TileOpKind::EltwiseBinary, PipelineMode::Streamed)
-        }
-    };
-    let merge_ns = crate::timing::cycles_ns(merge_cycles);
-
-    let mut noc = NocSim::new();
-    let children = tree.children();
-    // ready[c] = when core c's outgoing partial is available.
-    let mut ready: BTreeMap<Coord, SimNs> = BTreeMap::new();
-    let mut arrivals: BTreeMap<Coord, SimNs> = BTreeMap::new(); // latest inbound merge done
-    let order = tree.topo_order();
-    for &c in &order {
-        let mut done = local_ns;
-        // Merge children's partials as they arrive (sequentially on the
-        // receiving data-movement core).
-        if let Some(kids) = children.get(&c) {
-            let mut merge_cursor = local_ns;
-            let mut kid_arrivals: Vec<SimNs> = kids.iter().map(|k| arrivals[k]).collect();
-            kid_arrivals.sort_by(|x, y| x.partial_cmp(y).unwrap());
-            for ka in kid_arrivals {
-                merge_cursor = merge_cursor.max(ka) + merge_ns;
-            }
-            done = merge_cursor;
-        }
-        ready.insert(c, done);
-        if let Some(&parent) = tree.parent.get(&c) {
-            // `arrivals` is keyed by the child; the parent (processed
-            // later in topo order) looks its children up there.
-            let d = noc.send(calib, c, parent, payload, done);
-            arrivals.insert(c, d.arrival);
-        }
-    }
-    let reduce_done_pre_root = ready[&tree.root];
-    // Method 2: the root reduces the merged tile to a scalar (§5.1).
-    let root_extra = if cfg.method == DotMethod::SendTiles {
-        crate::timing::cycles_ns(reduce_cycles)
-    } else {
-        0.0
-    };
-    let reduce_done = reduce_done_pre_root + root_extra;
-
-    // Multicast the scalar back to all cores (§5.1: "the scalar result is
-    // then multicast back to all cores").
-    let dests: Vec<Coord> = (0..rows)
-        .flat_map(|r| (0..cols).map(move |c| Coord::new(r, c)))
-        .filter(|&c| c != tree.root)
-        .collect();
-    let bcast_done = noc.multicast(calib, tree.root, &dests, 32, reduce_done);
+    // ---- timing: lower → enqueue → collect ------------------------------
+    let program = lower_dot(rows, cols, cfg, cost);
+    let mut queue = HostQueue::new(cost.calib.clone());
+    let out = queue.run(&program, cost, 0.0, &mut Profiler::disabled())?;
 
     Ok(DotOutcome {
         value,
-        local_ns,
-        network_ns: reduce_done - local_ns,
-        bcast_ns: bcast_done - reduce_done,
-        total_ns: bcast_done,
-        messages: noc.messages_sent,
-        bytes: noc.bytes_sent,
+        local_ns: out.compute_ns,
+        network_ns: out.reduce_ns,
+        bcast_ns: out.bcast_ns,
+        total_ns: out.device_ns(),
+        messages: out.messages,
+        bytes: out.bytes,
     })
 }
 

@@ -37,11 +37,12 @@ use crate::arch::{ComputeUnit, DataFormat};
 use crate::device::TensixGrid;
 use crate::engine::{ComputeEngine, CoreBlock};
 use crate::error::{Result, SimError};
-use crate::noc::NocSim;
+use crate::profiler::Profiler;
 use crate::sparse::{CsrMatrix, GatherPlan, RowPartition, SellMatrix, SellStats, SELL_SLICE_HEIGHT};
 use crate::tile::EltwiseOp;
 use crate::timing::cost::{CostModel, PipelineMode, TileOpKind};
 use crate::timing::SimNs;
+use crate::ttm::{Footprint, HostQueue, NocSend, Program, SendQueue, Workload};
 
 /// Where the matrix lives between applications (§7.1 split/fused analog).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -148,6 +149,9 @@ pub struct SpmvOperator {
     /// Global column per (core, k, slot); 0 under zero-valued padding.
     col_maps: Vec<Vec<Vec<u32>>>,
     diag: Vec<f32>,
+    /// Largest per-core SRAM working set (vectors + gather staging +
+    /// matrix or its streaming CB), recorded for the program footprint.
+    sram_bytes: usize,
 }
 
 impl SpmvOperator {
@@ -177,6 +181,7 @@ impl SpmvOperator {
         let mut sells = Vec::with_capacity(n_cores);
         let mut val_blocks = Vec::with_capacity(n_cores);
         let mut col_maps = Vec::with_capacity(n_cores);
+        let mut sram_bytes = 0usize;
         for core in 0..n_cores {
             // Core-local CSR: one row per slot, in slot order; padding
             // slots are empty rows.
@@ -212,6 +217,7 @@ impl SpmvOperator {
                 }
             }
             part.check_sram(core, SRAM_RESERVE_SPLIT, &regions)?;
+            sram_bytes = sram_bytes.max(regions.iter().map(|(_, b)| *b).sum());
 
             // Operand tiles: for each entry position k, the value block
             // (quantized at df by construction) and the global column map.
@@ -245,6 +251,7 @@ impl SpmvOperator {
             val_blocks,
             col_maps,
             diag: a.diagonal(),
+            sram_bytes,
         })
     }
 
@@ -289,8 +296,86 @@ impl SpmvOperator {
         }
     }
 
-    /// One SpMV application: values through `engine`, cycles through the
-    /// cost model + NoC simulator.
+    /// Lower one SpMV application to a program: per-owner gather send
+    /// queues (the unstructured halo exchange), per-core RISC-V tile
+    /// assembly + tile-math cycles, and DRAM staging for the streaming
+    /// variant. The SELL occupancy statistics ride along as compile-time
+    /// args, and the footprint carries the one traffic number per program
+    /// (equal to [`SpmvTraffic::total`]).
+    pub fn lower(&self, cost: &CostModel) -> Program {
+        let n_cores = self.part.n_cores();
+        let df = self.cfg.df;
+
+        // NoC gather of remote x entries (cf. §6.3 halo exchange): each
+        // owner issues one batched write per consumer, first one cold.
+        let mut data_movement = Vec::with_capacity(n_cores);
+        for owner in 0..n_cores {
+            let mut queue = SendQueue::default();
+            for consumer in 0..n_cores {
+                let Some(&cnt) = self.gather.per_core[consumer].get(&owner) else {
+                    continue;
+                };
+                queue.sends.push(NocSend {
+                    src: self.part.core_coord(owner),
+                    dst: self.part.core_coord(consumer),
+                    bytes: align32(cnt * df.bytes()),
+                    cold: queue.sends.is_empty(),
+                });
+            }
+            data_movement.push(queue);
+        }
+
+        // Per-core local phase: indexed gather/scatter through L1 by the
+        // baby RISC-Vs (one load + one store per padded operand entry at
+        // the §6.3 latency — the cost the stencil's pointer trick avoids),
+        // then whole-tile multiply-accumulate columns.
+        let mul = cost.tile_op_cycles(self.cfg.unit, df, TileOpKind::EltwiseBinary, PipelineMode::Streamed);
+        let acc = cost.tile_op_cycles(self.cfg.unit, df, TileOpKind::EltwiseBinary, PipelineMode::Dependent);
+        let mut riscv_cycles = Vec::with_capacity(n_cores);
+        let mut compute_cycles = Vec::with_capacity(n_cores);
+        let mut dram_bytes = Vec::with_capacity(n_cores);
+        for core in 0..n_cores {
+            let padded = self.sells[core].padded_nnz() as u64;
+            let tile_cols = padded.div_ceil(TILE_ELEMS as u64);
+            riscv_cycles.push(2 * cost.zero_fill_cycles(padded));
+            compute_cycles.push(tile_cols * (mul + acc));
+            dram_bytes.push(match self.cfg.mode {
+                SpmvMode::DramStream => {
+                    self.sells[core].value_bytes(df) + self.sells[core].index_bytes()
+                }
+                SpmvMode::SramResident => 0,
+            });
+        }
+
+        let stats = self.stats();
+        let mut program = Program::standard("spmv");
+        for k in &mut program.kernels {
+            k.ct_args.push(("df".to_string(), df.to_string()));
+            k.ct_args.push(("mode".to_string(), format!("{:?}", self.cfg.mode)));
+            k.ct_args.push(("sigma".to_string(), self.cfg.sigma.to_string()));
+            k.ct_args.push(("nnz".to_string(), stats.nnz.to_string()));
+            k.ct_args.push(("padded_nnz".to_string(), stats.padded_nnz.to_string()));
+            k.ct_args.push(("occupancy".to_string(), format!("{:.4}", stats.occupancy())));
+            k.ct_args.push(("slices".to_string(), stats.n_slices.to_string()));
+        }
+        program
+            .with_work(Workload {
+                grid: (self.part.grid_rows, self.part.grid_cols),
+                data_movement,
+                dram_bytes,
+                riscv_cycles,
+                compute_cycles,
+                ..Workload::default()
+            })
+            .with_footprint(Footprint {
+                tiles_per_core: self.part.tiles_per_core,
+                sram_bytes: self.sram_bytes,
+                traffic_bytes: self.traffic().total(),
+            })
+    }
+
+    /// One SpMV application: values through `engine`, timing by lowering
+    /// to a program and executing it through the host queue.
     pub fn apply(
         &self,
         grid: &TensixGrid,
@@ -325,55 +410,17 @@ impl SpmvOperator {
                 });
             }
         }
-        let calib = &cost.calib;
+        // ---- timing: lower → enqueue → collect --------------------------
+        let program = self.lower(cost);
+        let mut queue = HostQueue::new(cost.calib.clone());
+        let out = queue.run(&program, cost, 0.0, &mut Profiler::disabled())?;
 
-        // ---- NoC gather of remote x entries (cf. §6.3 halo exchange) ----
-        let mut noc = NocSim::new();
-        let mut send_done = vec![0.0f64; n_cores];
-        let mut recv_ready = vec![0.0f64; n_cores];
-        for owner in 0..n_cores {
-            let mut cursor = 0.0f64;
-            let mut first = true;
-            for consumer in 0..n_cores {
-                let Some(&cnt) = self.gather.per_core[consumer].get(&owner) else {
-                    continue;
-                };
-                let bytes = align32(cnt * df.bytes());
-                let issue = if first {
-                    calib.noc_issue_cycles
-                } else {
-                    calib.noc_batch_issue_cycles
-                };
-                first = false;
-                let d = noc.send_with_issue(
-                    calib,
-                    self.part.core_coord(owner),
-                    self.part.core_coord(consumer),
-                    bytes,
-                    cursor,
-                    issue,
-                );
-                cursor = d.issue_done;
-                if d.arrival > recv_ready[consumer] {
-                    recv_ready[consumer] = d.arrival;
-                }
-            }
-            send_done[owner] = cursor;
-        }
-
-        // ---- per-core local phase + values ------------------------------
-        let mul = cost.tile_op_cycles(self.cfg.unit, df, TileOpKind::EltwiseBinary, PipelineMode::Streamed);
-        let acc = cost.tile_op_cycles(self.cfg.unit, df, TileOpKind::EltwiseBinary, PipelineMode::Dependent);
+        // ---- values -----------------------------------------------------
         let xg = self.part.dist_to_global(x);
-
-        let mut out = Vec::with_capacity(n_cores);
-        let mut total_ns = 0.0f64;
-        let mut max_gather = 0.0f64;
-        let mut max_compute = 0.0f64;
-        let mut max_dram = 0.0f64;
+        let mut values = Vec::with_capacity(n_cores);
         for core in 0..n_cores {
-            // Values: multiply-accumulate the entry-position columns in
-            // stored row order (see module docs on bit-exactness).
+            // Multiply-accumulate the entry-position columns in stored row
+            // order (see module docs on bit-exactness).
             let mut y: Option<CoreBlock> = None;
             for (k, vk) in self.val_blocks[core].iter().enumerate() {
                 let cols = &self.col_maps[core][k];
@@ -386,40 +433,18 @@ impl SpmvOperator {
                     Some(yb) => engine.axpy_into(yb, 1.0, &prod)?,
                 }
             }
-            out.push(y.unwrap_or_else(|| CoreBlock::zeros(df, tiles)));
-
-            // Timing.
-            let padded = self.sells[core].padded_nnz() as u64;
-            let tile_cols = padded.div_ceil(TILE_ELEMS as u64);
-            // Indexed gather/scatter through L1 by the baby RISC-Vs: one
-            // load + one store per padded operand entry (§6.3 latency).
-            let assemble = 2 * calib.zero_fill_cycles_per_elem * padded;
-            let math = tile_cols * (mul + acc);
-            let local_ns = crate::timing::cycles_ns(assemble + math);
-            let dram_ns = match self.cfg.mode {
-                SpmvMode::DramStream => {
-                    let bytes = self.sells[core].value_bytes(df) + self.sells[core].index_bytes();
-                    crate::timing::cycles_ns(cost.dram_stream_cycles(bytes))
-                }
-                SpmvMode::SramResident => 0.0,
-            };
-            let ready = send_done[core].max(recv_ready[core]);
-            let end = ready + dram_ns + local_ns;
-            total_ns = total_ns.max(end);
-            max_gather = max_gather.max(ready);
-            max_compute = max_compute.max(local_ns);
-            max_dram = max_dram.max(dram_ns);
+            values.push(y.unwrap_or_else(|| CoreBlock::zeros(df, tiles)));
         }
 
         Ok((
-            out,
+            values,
             SpmvTiming {
-                total_ns,
-                gather_ns: max_gather,
-                compute_ns: max_compute,
-                dram_ns: max_dram,
-                messages: noc.messages_sent,
-                bytes: noc.bytes_sent,
+                total_ns: out.device_ns(),
+                gather_ns: out.data_movement_ns,
+                compute_ns: out.local_ns,
+                dram_ns: out.dram_ns,
+                messages: out.messages,
+                bytes: out.bytes,
                 traffic: self.traffic(),
             },
         ))

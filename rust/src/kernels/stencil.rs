@@ -13,17 +13,20 @@
 //! 3. builds shifted tiles (pointer-trick rows, transpose-pipeline
 //!    columns; §6.2) and accumulates the 7 scaled components.
 //!
-//! Timing and values are produced together: values through the engine
-//! (native tile math or the AOT Pallas artifact), cycles through the cost
-//! model and the NoC simulator.
+//! Values come from the engine (native tile math or the AOT Pallas
+//! artifact); timing comes from lowering the kernel to a [`Program`]
+//! ([`lower_stencil`]: halo sends, zero-fill RISC-V cycles, and the
+//! shift/transpose compute pipeline per core) executed through
+//! [`crate::ttm::HostQueue::run`].
 
 use crate::arch::{ComputeUnit, DataFormat};
 use crate::device::TensixGrid;
 use crate::engine::{ComputeEngine, CoreBlock, Halos, StencilCoeffs};
-use crate::noc::NocSim;
+use crate::profiler::Profiler;
 use crate::tile::ShiftDir;
 use crate::timing::cost::{CostModel, PipelineMode, TileOpKind};
 use crate::timing::SimNs;
+use crate::ttm::{Footprint, HostQueue, NocSend, Program, SendQueue, Workload};
 
 /// Which parts of the stencil run (the Fig-11 ablation variants).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -116,7 +119,86 @@ fn zero_fill_elems(missing: &[ShiftDir]) -> u64 {
         .sum()
 }
 
-/// Outcome: the stencil-applied blocks (core-indexed) plus timing.
+/// Lower the stencil application to a program: per-core halo send queues
+/// (first transaction per direction cold, per-tile rest batched, §6.3),
+/// zero-fill RISC-V element loops at the boundary, and the §6.2
+/// shift/transpose compute pipeline.
+pub fn lower_stencil(grid: &TensixGrid, cfg: &StencilConfig, cost: &CostModel) -> Program {
+    let n_cores = grid.n_cores();
+    let nz = cfg.tiles_per_core as u64;
+    let (row_bytes, seg_bytes) = halo_unit_bytes(cfg.df);
+
+    // Halo exchange (§6.3): the writer RISC-V issues each core's sends
+    // sequentially, in direction order.
+    let mut data_movement = Vec::with_capacity(n_cores);
+    let mut halo_bytes = 0u64;
+    if cfg.variant.halo_exchange {
+        for coord in grid.coords() {
+            let mut queue = SendQueue::default();
+            for dir in ShiftDir::ALL {
+                if let Some(nb) = grid.neighbor(coord, dir) {
+                    let (n_msgs, bytes) = match dir {
+                        // One contiguous row write per tile (§6.3).
+                        ShiftDir::North | ShiftDir::South => (nz, row_bytes),
+                        // Four discontiguous segments per tile (§6.3).
+                        ShiftDir::East | ShiftDir::West => (4 * nz, seg_bytes),
+                    };
+                    for m in 0..n_msgs {
+                        queue.sends.push(NocSend {
+                            src: coord,
+                            dst: nb,
+                            bytes,
+                            cold: m == 0,
+                        });
+                        halo_bytes += bytes;
+                    }
+                }
+            }
+            data_movement.push(queue);
+        }
+    }
+
+    // Zero fills at the global boundary (§6.3) on the baby RISC-Vs.
+    let mut riscv_cycles = Vec::with_capacity(n_cores);
+    for coord in grid.coords() {
+        let missing: Vec<ShiftDir> = ShiftDir::ALL
+            .into_iter()
+            .filter(|&d| grid.neighbor(coord, d).is_none())
+            .collect();
+        riscv_cycles.push(if cfg.variant.zero_fill {
+            cost.zero_fill_cycles(zero_fill_elems(&missing) * nz)
+        } else {
+            0
+        });
+    }
+
+    let local_cycles = local_tile_cycles(cost, cfg.unit, cfg.df) * nz;
+
+    let mut program = Program::standard("stencil");
+    for k in &mut program.kernels {
+        k.ct_args.push(("tiles".to_string(), cfg.tiles_per_core.to_string()));
+        k.ct_args.push(("df".to_string(), cfg.df.to_string()));
+        k.ct_args.push(("variant".to_string(), cfg.variant.label().to_string()));
+    }
+    program
+        .with_work(Workload {
+            grid: (grid.rows, grid.cols),
+            data_movement,
+            riscv_cycles,
+            compute_cycles: vec![local_cycles; n_cores],
+            ..Workload::default()
+        })
+        .with_footprint(Footprint {
+            tiles_per_core: cfg.tiles_per_core,
+            // x + result vectors resident per core.
+            sram_bytes: 2 * cfg.tiles_per_core * cfg.df.tile_bytes(),
+            traffic_bytes: halo_bytes,
+        })
+}
+
+/// Outcome: the stencil-applied blocks (core-indexed) plus timing. Thin
+/// wrapper: lower, run through the host queue, compute values via the
+/// engine.
 pub fn run_stencil(
     grid: &TensixGrid,
     cfg: &StencilConfig,
@@ -126,79 +208,14 @@ pub fn run_stencil(
 ) -> crate::Result<(Vec<CoreBlock>, StencilTiming)> {
     let n_cores = grid.n_cores();
     assert_eq!(x.len(), n_cores, "one block per core");
-    let calib = &cost.calib;
-    let nz = cfg.tiles_per_core as u64;
-    let (row_bytes, seg_bytes) = halo_unit_bytes(cfg.df);
 
-    // ---- halo exchange timing (§6.3) ------------------------------------
-    let mut noc = NocSim::new();
-    let mut send_done = vec![0.0f64; n_cores]; // sender-side issue completion
-    let mut recv_ready = vec![0.0f64; n_cores]; // last inbound halo arrival
-    if cfg.variant.halo_exchange {
-        for coord in grid.coords() {
-            let i = grid.index(coord)?;
-            // The writer RISC-V issues this core's sends sequentially; the
-            // first transaction per direction is cold, the per-tile rest
-            // run in a tight batched loop.
-            let mut cursor = 0.0f64;
-            for dir in ShiftDir::ALL {
-                if let Some(nb) = grid.neighbor(coord, dir) {
-                    let j = grid.index(nb)?;
-                    let (n_msgs, bytes) = match dir {
-                        // One contiguous row write per tile (§6.3).
-                        ShiftDir::North | ShiftDir::South => (nz, row_bytes),
-                        // Four discontiguous segments per tile (§6.3).
-                        ShiftDir::East | ShiftDir::West => (4 * nz, seg_bytes),
-                    };
-                    for m in 0..n_msgs {
-                        let issue = if m == 0 {
-                            calib.noc_issue_cycles
-                        } else {
-                            calib.noc_batch_issue_cycles
-                        };
-                        let d = noc.send_with_issue(calib, coord, nb, bytes, cursor, issue);
-                        cursor = d.issue_done;
-                        if d.arrival > recv_ready[j] {
-                            recv_ready[j] = d.arrival;
-                        }
-                    }
-                }
-            }
-            send_done[i] = cursor;
-        }
-    }
-
-    // ---- per-core local phase -------------------------------------------
-    let local_cycles = local_tile_cycles(cost, cfg.unit, cfg.df) * nz;
-    let local_ns = crate::timing::cycles_ns(local_cycles);
-
-    let mut iter_ns = 0.0f64;
-    let mut max_compute = 0.0f64;
-    let mut max_halo = 0.0f64;
-    let mut max_zf = 0.0f64;
-    for coord in grid.coords() {
-        let i = grid.index(coord)?;
-        let missing: Vec<ShiftDir> = ShiftDir::ALL
-            .into_iter()
-            .filter(|&d| grid.neighbor(coord, d).is_none())
-            .collect();
-        let zf_ns = if cfg.variant.zero_fill {
-            crate::timing::cycles_ns(cost.zero_fill_cycles(zero_fill_elems(&missing) * nz))
-        } else {
-            0.0
-        };
-        // Compute starts when this core's inbound halos have landed and its
-        // own sends are issued; then zero-fill + shifts/accumulation.
-        let halo_wait = send_done[i].max(recv_ready[i]);
-        let end = halo_wait + zf_ns + local_ns;
-        iter_ns = iter_ns.max(end);
-        max_compute = max_compute.max(local_ns);
-        max_halo = max_halo.max(halo_wait);
-        max_zf = max_zf.max(zf_ns);
-    }
+    // ---- timing: lower → enqueue → collect ------------------------------
+    let program = lower_stencil(grid, cfg, cost);
+    let mut queue = HostQueue::new(cost.calib.clone());
+    let out = queue.run(&program, cost, 0.0, &mut Profiler::disabled())?;
 
     // ---- values ----------------------------------------------------------
-    let mut out = Vec::with_capacity(n_cores);
+    let mut values = Vec::with_capacity(n_cores);
     for coord in grid.coords() {
         let i = grid.index(coord)?;
         let get = |dir: ShiftDir| -> Option<&CoreBlock> {
@@ -215,18 +232,18 @@ pub fn run_stencil(
         } else {
             Halos::none()
         };
-        out.push(engine.stencil_apply(&x[i], &halos, cfg.coeffs)?);
+        values.push(engine.stencil_apply(&x[i], &halos, cfg.coeffs)?);
     }
 
     Ok((
-        out,
+        values,
         StencilTiming {
-            iter_ns,
-            compute_ns: max_compute,
-            halo_ns: max_halo,
-            zero_fill_ns: max_zf,
-            messages: noc.messages_sent,
-            bytes: noc.bytes_sent,
+            iter_ns: out.device_ns(),
+            compute_ns: out.compute_ns,
+            halo_ns: out.data_movement_ns,
+            zero_fill_ns: out.riscv_ns,
+            messages: out.messages,
+            bytes: out.bytes,
         },
     ))
 }

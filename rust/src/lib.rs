@@ -13,6 +13,16 @@
 //!   ([`kernels::spmv`]), and the preconditioned conjugate-gradient
 //!   solver built from them — runnable on the hard-coded Laplacian or on
 //!   arbitrary SPD matrices through [`solver::Operator`].
+//!
+//! Execution follows one pipeline: every kernel **lowers** to a
+//! [`ttm::Program`] (reader/compute/writer kernel specs + a per-core
+//! [`ttm::Workload`] of NoC sends, RISC-V element loops, compute cycles,
+//! and DRAM staging) and executes through [`ttm::HostQueue::run`], the
+//! single scheduler that owns dispatch overhead, per-phase timing, and
+//! profiler zones. Iterative solvers derive their §7.1 fused-vs-split
+//! launch accounting from a [`ttm::IterSchedule`] over the component
+//! programs ([`ttm::Program::fuse`] checks the §7.2 SRAM budget). To add
+//! a kernel, write a lowering — not a timing path.
 //! - **Layer 2** (`python/compile/model.py`): per-core compute graphs in
 //!   JAX, AOT-lowered to HLO text artifacts.
 //! - **Layer 1** (`python/compile/kernels/`): Pallas kernels for the

@@ -69,7 +69,7 @@ fn build_context(args: &cli::Args) -> Result<ExpContext, String> {
         let doc = wormsim::util::tomlmini::Doc::parse(&text)?;
         calib.apply_overrides(&doc);
     }
-    let engine_kind: EngineKind = args.get_or("engine", "native").parse()?;
+    let engine_kind: EngineKind = args.get_parsed("engine", "native")?;
     let artifacts = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
     let engine = make_engine(engine_kind, &artifacts).map_err(|e| e.to_string())?;
     Ok(ExpContext {
@@ -127,7 +127,7 @@ fn cmd_info(args: &cli::Args) -> Result<(), String> {
 
 fn cmd_solve(args: &cli::Args) -> Result<(), String> {
     let ctx = build_context(args)?;
-    let variant: PcgVariant = args.get_or("variant", "bf16").parse()?;
+    let variant: PcgVariant = args.get_parsed("variant", "bf16")?;
     let (rows, cols) = args.get_grid("grid", (4, 4))?;
     let tiles = args.get_usize("tiles", 16)?;
     let problem = Problem::new(rows, cols, tiles, variant.df());
@@ -136,7 +136,7 @@ fn cmd_solve(args: &cli::Args) -> Result<(), String> {
     let mut opts = PcgOptions::new(variant);
     opts.max_iters = args.get_usize("iters", 100)?;
     opts.tol_abs = args.get_f64("tol", 1e-4)?;
-    opts.dot_pattern = args.get_or("pattern", "naive").parse()?;
+    opts.dot_pattern = args.get_parsed("pattern", "naive")?;
     opts.dot_method = match args.get_or("method", "1") {
         "1" => DotMethod::ReduceThenSend,
         "2" => DotMethod::SendTiles,
@@ -169,8 +169,9 @@ fn cmd_solve(args: &cli::Args) -> Result<(), String> {
         println!();
         println!("{}", res.breakdown.render("per-component device time"));
         println!(
-            "launches {} ({}), device gaps {}",
+            "launches {} ({:.2}/iter, {}), device gaps {}",
             res.launch.launches,
+            res.launches_per_iter(),
             fmt_ns(res.launch.launch_ns),
             fmt_ns(res.launch.gap_ns)
         );

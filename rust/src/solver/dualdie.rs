@@ -14,17 +14,19 @@
 //! blocks); timing adds the Ethernet seam costs to the per-die NoC/compute
 //! times.
 
+use crate::arch::constants::{SRAM_BYTES, SRAM_RESERVE_FUSED};
 use crate::arch::DataFormat;
 use crate::device::TensixGrid;
 use crate::engine::{ComputeEngine, CoreBlock, Halos, StencilCoeffs};
 use crate::kernels::eltwise::block_op_ns;
 use crate::kernels::reduction::{run_dot, DotConfig, DotMethod};
-use crate::kernels::stencil::{local_tile_cycles, StencilConfig, StencilVariant};
+use crate::kernels::stencil::{StencilConfig, StencilVariant};
 use crate::noc::RoutePattern;
-use crate::profiler::Breakdown;
+use crate::profiler::{Breakdown, Profiler};
 use crate::solver::problem::Problem;
 use crate::timing::cost::CostModel;
 use crate::timing::SimNs;
+use crate::ttm::{HostQueue, IterSchedule};
 
 /// On-board Ethernet link between the two dies.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -80,6 +82,8 @@ pub struct DualDieResult {
     /// Per-iteration Ethernet seam cost (halo + reduction combine).
     pub eth_ns_per_iter: SimNs,
     pub breakdown: Breakdown,
+    /// Scheduler-derived launch accounting (one enqueue per solve).
+    pub launch: crate::ttm::LaunchStats,
 }
 
 /// A logical dual-die distributed vector: blocks for die 0's rows×cols
@@ -148,7 +152,8 @@ pub fn solve_pcg_dualdie(
     assert_eq!(b.len(), n_blocks, "one block per core across both dies");
     let coeffs = StencilCoeffs::LAPLACIAN;
 
-    // --- per-iteration timing (die-local part mirrors run_stencil) ------
+    // --- per-iteration timing: the same per-die component programs the
+    // single-die fused PCG lowers, dispatched through one scheduler ------
     let stencil_cfg = StencilConfig {
         df,
         unit,
@@ -156,21 +161,20 @@ pub fn solve_pcg_dualdie(
         variant: StencilVariant::FULL,
         coeffs,
     };
-    let local_ns = crate::timing::cycles_ns(local_tile_cycles(cost, unit, df) * tiles as u64);
-    // Die-local stencil timing: exactly the single-die simulation (the
-    // stencil's timing is data-independent, so run it once on zeros over a
-    // per-die grid — this includes the NoC halo schedule and the zero-fill
-    // costs at the outer boundary).
+    // Die-local stencil: the single-die operator lowering over a per-die
+    // grid (NoC halo schedule and outer-boundary zero fills included);
+    // timing is data-independent, so one host-queue run covers every
+    // iteration.
     let die_grid = TensixGrid::new(rows, cols)?;
-    let zeros: Vec<CoreBlock> = (0..rows * cols).map(|_| CoreBlock::zeros(df, tiles)).collect();
-    let (_, die_timing) =
-        crate::kernels::stencil::run_stencil(&die_grid, &stencil_cfg, &zeros, engine, cost)?;
+    let stencil_prog = crate::solver::pcg::Operator::Stencil(stencil_cfg).lower(&die_grid, cost);
+    let mut scratch = HostQueue::new(cost.calib.clone());
+    let die_out = scratch.run(&stencil_prog, cost, 0.0, &mut Profiler::disabled())?;
     // Ethernet seam: halo bytes + one scalar combine + one broadcast per
     // global reduction. The seam exchange overlaps the NoC halo phase, so
     // the stencil takes whichever finishes later.
     let seam_halo_ns = opts.eth.transfer_ns(seam_halo_bytes(cols, tiles, df));
     let seam_scalar_ns = opts.eth.transfer_ns(32);
-    let spmv_ns = die_timing.iter_ns.max(local_ns + seam_halo_ns);
+    let spmv_ns = die_out.device_ns().max(die_out.compute_ns + seam_halo_ns);
 
     let dot_cfg = DotConfig {
         method: DotMethod::ReduceThenSend,
@@ -195,6 +199,30 @@ pub fn solve_pcg_dualdie(
         tiles,
         crate::timing::cost::PipelineMode::Streamed,
     );
+
+    // The dual-die solve is the fused-BF16 variant (§7.1): its launch and
+    // phase-gap accounting comes from the same scheduler — and the same
+    // component programs and iteration order — as the single-die solver:
+    // one enqueue per solve, a §7.3 device-side gap per boundary.
+    let mut component_programs = vec![stencil_prog];
+    component_programs.extend(crate::solver::pcg::lower_pcg_support_components(
+        rows,
+        cols,
+        &dot_cfg,
+        unit,
+        df,
+        tiles,
+        crate::timing::cost::TileOpKind::EltwiseUnary,
+        cost,
+    ));
+    let sched = IterSchedule::fused(
+        "pcg_dualdie_fused",
+        component_programs,
+        &crate::solver::pcg::PCG_ITERATION,
+        SRAM_BYTES - SRAM_RESERVE_FUSED,
+    )?;
+    let mut queue = HostQueue::new(cost.calib.clone());
+    let mut prof = Profiler::disabled();
 
     // --- the solve (values on the logical 2R×C grid) --------------------
     let idx_all = |v: &DualVector| -> (Vec<CoreBlock>, Vec<CoreBlock>) {
@@ -227,26 +255,32 @@ pub fn solve_pcg_dualdie(
     let mut breakdown = Breakdown::new();
     let mut now = 0.0f64;
     let mut eth_total = 0.0f64;
-    // Same device-side phase gaps as the single-die fused kernel (§7.3).
-    let gap_ns = cost.calib.inter_kernel_gap_ns;
     let mut delta = {
         let (v, t) = dual_dot(&r, &z, engine, cost)?;
         now += t;
         v
     };
+    // One enqueue for the whole dual-die solve; the §7.3 device-side
+    // phase gaps come from the scheduler at every component boundary.
+    now = sched.begin(&mut queue, now)?;
+    macro_rules! component {
+        ($name:expr, $ns:expr) => {{
+            let ns: SimNs = $ns;
+            now = sched.component(&mut queue, &mut prof, $name, ns, now)?;
+            breakdown.add($name, ns);
+        }};
+    }
     let mut history = Vec::new();
     let mut iters = 0;
     let mut converged = false;
     while iters < opts.max_iters {
         iters += 1;
         let q = dual_stencil_values(rows, cols, tiles, &p, engine, coeffs)?;
-        breakdown.add("spmv", spmv_ns);
-        now += spmv_ns + gap_ns;
+        component!("spmv", spmv_ns);
         eth_total += seam_halo_ns;
 
         let (pq, t) = dual_dot(&p, &q, engine, cost)?;
-        breakdown.add("dot", t);
-        now += t + gap_ns;
+        component!("dot", t);
         eth_total += 2.0 * seam_scalar_ns;
         if pq == 0.0 || !pq.is_finite() {
             break;
@@ -255,17 +289,14 @@ pub fn solve_pcg_dualdie(
         for (xi, pi) in x.iter_mut().zip(&p) {
             engine.axpy_into(xi, alpha, pi)?;
         }
-        breakdown.add("axpy", axpy_ns);
-        now += axpy_ns + gap_ns;
+        component!("axpy", axpy_ns);
         for (ri, qi) in r.iter_mut().zip(&q) {
             engine.axpy_into(ri, -alpha, qi)?;
         }
-        breakdown.add("axpy", axpy_ns);
-        now += axpy_ns + gap_ns;
+        component!("axpy", axpy_ns);
 
         let (rr, t) = dual_dot(&r, &r, engine, cost)?;
-        breakdown.add("norm", t);
-        now += t + gap_ns;
+        component!("norm", t);
         eth_total += 2.0 * seam_scalar_ns;
         let rnorm = rr.max(0.0).sqrt();
         history.push(rnorm);
@@ -278,11 +309,9 @@ pub fn solve_pcg_dualdie(
             .iter()
             .map(|blk| engine.scale(blk, inv_diag))
             .collect::<crate::Result<_>>()?;
-        breakdown.add("precond", scale_ns);
-        now += scale_ns + gap_ns;
+        component!("precond", scale_ns);
         let (dn, t) = dual_dot(&r, &z, engine, cost)?;
-        breakdown.add("dot", t);
-        now += t + gap_ns;
+        component!("dot", t);
         eth_total += 2.0 * seam_scalar_ns;
         if delta == 0.0 {
             break;
@@ -292,8 +321,7 @@ pub fn solve_pcg_dualdie(
         for (pi, zi) in p.iter_mut().zip(&z) {
             *pi = engine.axpy(zi, beta, pi)?;
         }
-        breakdown.add("axpy", axpy_ns);
-        now += axpy_ns + gap_ns;
+        component!("axpy", axpy_ns);
     }
 
     breakdown.iterations = iters as u64;
@@ -305,6 +333,7 @@ pub fn solve_pcg_dualdie(
         total_ns: now,
         eth_ns_per_iter: if iters > 0 { eth_total / iters as f64 } else { 0.0 },
         breakdown,
+        launch: queue.stats.clone(),
     })
 }
 
@@ -334,6 +363,10 @@ mod tests {
         let min = res.residual_history.iter().cloned().fold(f64::INFINITY, f64::min);
         assert!(min < 0.2 * first, "first {first} min {min}");
         assert!(res.eth_ns_per_iter > 0.0);
+        // Fused schedule: one enqueue for the whole solve, gaps per
+        // component — derived from the scheduler, not hard-coded here.
+        assert_eq!(res.launch.launches, 1);
+        assert!(res.launch.gap_ns > 0.0);
     }
 
     #[test]

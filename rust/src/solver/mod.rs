@@ -13,7 +13,7 @@ pub mod problem;
 pub use jacobi::JacobiPreconditioner;
 pub use jacobi_iter::{solve_jacobi, JacobiOptions, JacobiResult};
 pub use dualdie::{solve_pcg_dualdie, DualDieOptions, DualDieResult, EthLink};
-pub use pcg::{solve, solve_operator, Operator, PcgOptions, PcgResult, PcgVariant};
+pub use pcg::{solve, solve_operator, FusionMode, Operator, PcgOptions, PcgResult, PcgVariant};
 pub use problem::{
     apply_laplacian_global, dist_from_fn, dist_random, dist_to_global, dist_zeros, DistVector,
     Problem,

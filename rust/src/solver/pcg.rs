@@ -19,13 +19,14 @@
 //! Following §3.3, convergence is checked on the **absolute** residual
 //! norm (the subnormal flush makes relative residuals unreliable).
 
+use crate::arch::constants::{SRAM_BYTES, SRAM_RESERVE_FUSED};
 use crate::arch::{ComputeUnit, DataFormat};
 use crate::device::TensixGrid;
 use crate::engine::{ComputeEngine, CoreBlock, StencilCoeffs};
-use crate::kernels::eltwise::block_op_ns;
-use crate::kernels::reduction::{run_dot, DotConfig, DotMethod};
+use crate::kernels::eltwise::{block_op_ns, lower_block_op};
+use crate::kernels::reduction::{lower_dot_as, run_dot, DotConfig, DotMethod};
 use crate::kernels::spmv::SpmvOperator;
-use crate::kernels::stencil::{run_stencil, StencilConfig, StencilVariant};
+use crate::kernels::stencil::{lower_stencil, run_stencil, StencilConfig, StencilVariant};
 use crate::noc::RoutePattern;
 use crate::profiler::{Breakdown, Profiler};
 use crate::solver::jacobi::JacobiPreconditioner;
@@ -33,13 +34,74 @@ use crate::solver::problem::{DistVector, Problem};
 use crate::tile::EltwiseOp;
 use crate::timing::cost::{CostModel, PipelineMode, TileOpKind};
 use crate::timing::SimNs;
-use crate::ttm::{HostQueue, LaunchStats, Program};
+use crate::ttm::{HostQueue, IterSchedule, LaunchStats, Program};
 
 /// The paper's two PCG implementations (§7.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PcgVariant {
     FusedBf16,
     SplitFp32,
+}
+
+/// How the per-iteration component programs are dispatched. `Auto`
+/// derives the paper's pairing (BF16 → fused, FP32 → split); the forced
+/// modes decouple precision from launch accounting for ablations — the
+/// values are engine-side and identical either way, which the
+/// fused-vs-split trajectory pins exploit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FusionMode {
+    #[default]
+    Auto,
+    ForceSplit,
+    ForceFused,
+}
+
+/// The per-iteration component dispatch order of Algorithm 1 (§7),
+/// shared by the single-die and dual-die solvers.
+pub(crate) const PCG_ITERATION: [&str; 8] = [
+    "spmv", "dot", "axpy", "axpy", "norm", "precond", "dot", "axpy",
+];
+
+/// Lower the non-operator per-iteration PCG component programs (dot,
+/// norm, axpy, precond) for a `rows`×`cols` sub-grid — the one
+/// construction both the single-die and dual-die solvers schedule from.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn lower_pcg_support_components(
+    rows: usize,
+    cols: usize,
+    dot_cfg: &DotConfig,
+    unit: ComputeUnit,
+    df: DataFormat,
+    tiles: usize,
+    precond_kind: TileOpKind,
+    cost: &CostModel,
+) -> Vec<Program> {
+    vec![
+        lower_dot_as("dot", rows, cols, dot_cfg, cost),
+        lower_dot_as("norm", rows, cols, dot_cfg, cost),
+        lower_block_op(
+            "axpy",
+            rows,
+            cols,
+            cost,
+            unit,
+            df,
+            TileOpKind::EltwiseBinary,
+            tiles,
+            PipelineMode::Streamed,
+        ),
+        lower_block_op(
+            "precond",
+            rows,
+            cols,
+            cost,
+            unit,
+            df,
+            precond_kind,
+            tiles,
+            PipelineMode::Streamed,
+        ),
+    ]
 }
 
 impl PcgVariant {
@@ -114,6 +176,19 @@ impl Operator<'_> {
         }
     }
 
+    /// Lower the matrix-apply to its component program (named "spmv" in
+    /// the iteration schedule for both implementors).
+    pub fn lower(&self, grid: &TensixGrid, cost: &CostModel) -> Program {
+        match self {
+            Operator::Stencil(cfg) => {
+                let mut p = lower_stencil(grid, cfg, cost);
+                p.name = "spmv".to_string();
+                p
+            }
+            Operator::Sparse(op) => op.lower(cost),
+        }
+    }
+
     /// Build the Jacobi preconditioner M = diag(A) for this operator.
     fn jacobi(&self, df: DataFormat, enabled: bool) -> crate::Result<Precond> {
         if !enabled {
@@ -174,6 +249,8 @@ pub struct PcgOptions {
     pub dot_pattern: RoutePattern,
     /// Use the Jacobi preconditioner (§7); `false` = plain CG ablation.
     pub precondition: bool,
+    /// Launch-schedule override (default: derived from the variant).
+    pub fusion: FusionMode,
 }
 
 impl PcgOptions {
@@ -185,6 +262,16 @@ impl PcgOptions {
             dot_method: DotMethod::ReduceThenSend,
             dot_pattern: RoutePattern::Naive,
             precondition: true,
+            fusion: FusionMode::Auto,
+        }
+    }
+
+    /// Whether this solve runs the fused schedule (§7.1).
+    pub fn fused(&self) -> bool {
+        match self.fusion {
+            FusionMode::Auto => self.variant == PcgVariant::FusedBf16,
+            FusionMode::ForceSplit => false,
+            FusionMode::ForceFused => true,
         }
     }
 }
@@ -203,6 +290,15 @@ pub struct PcgResult {
     pub launch: LaunchStats,
 }
 
+impl PcgResult {
+    /// Modeled host enqueues per iteration (the §7.1 accounting: the
+    /// split schedule pays one per component, the fused schedule one per
+    /// solve).
+    pub fn launches_per_iter(&self) -> f64 {
+        self.launch.launches as f64 / self.iters.max(1) as f64
+    }
+}
+
 /// Solve `A x = b` with A = the 7-point Laplacian (zero Dirichlet) — the
 /// paper's configuration. Validates the §7.2 capacity model, then runs
 /// [`solve_operator`] with the stencil operator.
@@ -215,8 +311,7 @@ pub fn solve(
     opts: &PcgOptions,
     profiler: &mut Profiler,
 ) -> crate::Result<PcgResult> {
-    let fused = opts.variant == PcgVariant::FusedBf16;
-    problem.validate_capacity(fused)?;
+    problem.validate_capacity(opts.fused())?;
     if problem.df != opts.variant.df() {
         return Err(crate::SimError::BadProblem {
             what: format!(
@@ -247,7 +342,7 @@ pub fn solve_operator(
     opts: &PcgOptions,
     profiler: &mut Profiler,
 ) -> crate::Result<PcgResult> {
-    let fused = opts.variant == PcgVariant::FusedBf16;
+    let fused = opts.fused();
     let df = opts.variant.df();
     let unit = opts.variant.unit();
     if b.len() != grid.n_cores() {
@@ -285,35 +380,48 @@ pub fn solve_operator(
     };
     let axpy_ns = block_op_ns(cost, unit, df, TileOpKind::EltwiseBinary, tiles, PipelineMode::Streamed);
     let scale_ns = block_op_ns(cost, unit, df, TileOpKind::EltwiseUnary, tiles, PipelineMode::Streamed);
-    // Scalar Jacobi is a unary scale (§7); the per-element form multiplies
-    // by a resident inv-diag vector — a two-operand eltwise op.
-    let precond_ns = |p: &Precond| match p {
-        Precond::Scalar(_) => scale_ns,
-        Precond::PerElement(_) => axpy_ns,
-    };
-
-    // Split-kernel component boundary: host launch. Fused: device-side
-    // phase gap (§7.3 Tracy observation).
-    let programs: std::collections::BTreeMap<&str, Program> = ["spmv", "dot", "axpy", "norm", "precond"]
-        .iter()
-        .map(|n| (*n, Program::standard(n)))
-        .collect();
-    macro_rules! component {
-        ($name:expr, $ns:expr) => {{
-            let ns: SimNs = $ns;
-            if fused {
-                now = queue.kernel_gap(now);
-            } else {
-                now = queue.enqueue(&programs[$name], now)?;
-            }
-            profiler.record($name, "device", now, now + ns);
-            breakdown.add($name, ns);
-            now += ns;
-        }};
-    }
 
     // ---- setup (x0 = 0 ⇒ r0 = b) ----------------------------------------
     let precond = operator.jacobi(df, opts.precondition)?;
+    // Scalar Jacobi is a unary scale (§7); the per-element form multiplies
+    // by a resident inv-diag vector — a two-operand eltwise op.
+    let (precond_ns, precond_kind) = match &precond {
+        Precond::Scalar(_) => (scale_ns, TileOpKind::EltwiseUnary),
+        Precond::PerElement(_) => (axpy_ns, TileOpKind::EltwiseBinary),
+    };
+
+    // Lower the per-iteration component programs once; the schedule
+    // derives the §7.1 launch accounting from them (split: one enqueue
+    // per component dispatch; fused: one enqueue per solve + §7.3
+    // device-side gaps at component boundaries).
+    let mut component_programs = vec![operator.lower(grid, cost)];
+    component_programs.extend(lower_pcg_support_components(
+        grid.rows,
+        grid.cols,
+        &dot_cfg,
+        unit,
+        df,
+        tiles,
+        precond_kind,
+        cost,
+    ));
+    let sched = if fused {
+        IterSchedule::fused(
+            "pcg_fused",
+            component_programs,
+            &PCG_ITERATION,
+            SRAM_BYTES - SRAM_RESERVE_FUSED,
+        )?
+    } else {
+        IterSchedule::split(component_programs, &PCG_ITERATION)
+    };
+    macro_rules! component {
+        ($name:expr, $ns:expr) => {{
+            let ns: SimNs = $ns;
+            now = sched.component(&mut queue, profiler, $name, ns, now)?;
+            breakdown.add($name, ns);
+        }};
+    }
     let mut x: DistVector = b.iter().map(|blk| CoreBlock::zeros(blk.df, blk.nz())).collect();
     let mut r: DistVector = b.to_vec();
     let mut z = precond.apply(engine, &r)?;
@@ -321,14 +429,18 @@ pub fn solve_operator(
     // δ0 = r·z
     let mut delta = run_dot(grid.rows, grid.cols, &dot_cfg, &r, &z, engine, cost)?.value as f64;
 
-    // Fused variant: one launch for the whole solve.
-    if fused {
-        now = queue.enqueue(&Program::standard("pcg_fused"), now)?;
-    }
+    // Fused schedule: one launch for the whole solve.
+    now = sched.begin(&mut queue, now)?;
 
     let mut history = Vec::new();
     let mut iters = 0;
     let mut converged = false;
+    // The run_*/apply calls below re-lower their (input-independent)
+    // programs every iteration. That is deliberate: the wrappers stay the
+    // single execution path for values + timing, and at sub-grid scale
+    // (≤ 56 cores) the host-side rebuild is noise next to the engine's
+    // value computation. Hoist to pre-executed ProgramOutcomes only if a
+    // profile ever shows otherwise.
     while iters < opts.max_iters {
         iters += 1;
         // q = A p (stencil §6 or general SpMV).
@@ -359,9 +471,7 @@ pub fn solve_operator(
         component!("norm", rr.total_ns);
         let rnorm = (rr.value.max(0.0) as f64).sqrt();
         history.push(rnorm);
-        if !fused {
-            now = queue.residual_readback(now);
-        }
+        now = sched.residual_readback(&mut queue, now);
         if rnorm <= opts.tol_abs {
             converged = true;
             break;
@@ -369,7 +479,7 @@ pub fn solve_operator(
 
         // z = M⁻¹ r
         z = precond.apply(engine, &r)?;
-        component!("precond", precond_ns(&precond));
+        component!("precond", precond_ns);
 
         // δ' = r·z ; β = δ'/δ
         let rz = run_dot(grid.rows, grid.cols, &dot_cfg, &r, &z, engine, cost)?;
@@ -566,6 +676,43 @@ mod tests {
         // The explicit matrix pays for generality: its SpMV component is
         // strictly slower than the matrix-free stencil.
         assert!(sparse.breakdown.per_iter("spmv") > stencil.breakdown.per_iter("spmv"));
+    }
+
+    #[test]
+    fn fused_sparse_pcg_single_launch_and_split_equivalent() {
+        // Acceptance pin: PcgVariant::FusedBf16 × Operator::Sparse runs
+        // through the fused schedule (one enqueue per solve), and forcing
+        // the split schedule at the same precision changes only the
+        // launch accounting — the residual trajectory is bit-identical.
+        let p = Problem::new(2, 2, 2, DataFormat::Bf16);
+        let grid = p.make_grid().unwrap();
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let b = dist_random(&p, 11);
+        let (nx, ny, nz) = p.dims();
+        let a = laplacian_3d(nx, ny, nz);
+        let part = RowPartition::stencil_aligned(2, 2, nz).unwrap();
+        let op = SpmvOperator::new(&a, part, SpmvConfig::new(DataFormat::Bf16, SpmvMode::SramResident)).unwrap();
+
+        let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
+        opts.max_iters = 10;
+        opts.tol_abs = 0.0;
+        let mut prof = Profiler::disabled();
+        let fused =
+            solve_operator(&grid, &b, &Operator::Sparse(&op), &e, &cost, &opts, &mut prof).unwrap();
+        assert_eq!(fused.launch.launches, 1, "fused sparse: one enqueue per solve");
+        assert!(fused.launch.gap_ns > 0.0);
+        assert!(fused.launches_per_iter() < 1.0);
+
+        opts.fusion = FusionMode::ForceSplit;
+        let split =
+            solve_operator(&grid, &b, &Operator::Sparse(&op), &e, &cost, &opts, &mut prof).unwrap();
+        assert_eq!(split.launch.launches, 8 * 10, "split: 8 enqueues/iter");
+        assert_eq!(fused.residual_history, split.residual_history, "values are schedule-independent");
+        assert_eq!(fused.x, split.x);
+        assert!(fused.launches_per_iter() < split.launches_per_iter());
+        // Fewer launches means less modeled host time for the same work.
+        assert!(fused.total_ns < split.total_ns);
     }
 
     #[test]

@@ -1,7 +1,20 @@
-//! Device-kernel execution of the §6.2 stencil pipeline on a Tensix core,
-//! written against the tt-metal-shaped primitives (circular buffers with
-//! the read-pointer-shift extension, the face-transpose unit, halo fills
-//! by the data-movement RISC-V) — i.e. the program the paper's compute
+//! Program execution: the single scheduler that turns a lowered
+//! [`Program`] into simulated time, plus the CB-granularity device kernel
+//! of the §6.2 stencil pipeline.
+//!
+//! [`execute_program`] is the one place per-phase timing is computed for
+//! every kernel: it threads the NoC simulator through the program's
+//! data-movement queues (cold/warm issue costs per §6.3), charges each
+//! core's DRAM staging, RISC-V element loop, and compute pipeline, and
+//! runs the optional global reduction tree + broadcast (§5). Kernels do
+//! not time themselves — they lower, and [`crate::ttm::HostQueue::run`]
+//! dispatches here.
+//!
+//! The second half of this module is the device-kernel execution of the
+//! §6.2 stencil pipeline on a Tensix core, written against the
+//! tt-metal-shaped primitives (circular buffers with the
+//! read-pointer-shift extension, the face-transpose unit, halo fills by
+//! the data-movement RISC-V) — i.e. the program the paper's compute
 //! kernel actually runs, at circular-buffer granularity.
 //!
 //! This is the integration point of S4/S5/S10 (DESIGN.md §4): the same
@@ -11,13 +24,165 @@
 //! fills. `kernel_matches_engine` pins it to `NativeEngine::stencil_apply`
 //! bit for bit.
 
+use std::collections::BTreeMap;
+
 use crate::arch::constants::CB_PTR_ALIGN;
-use crate::device::TensixCore;
+use crate::device::{Coord, TensixCore};
 use crate::engine::StencilCoeffs;
 use crate::error::Result;
+use crate::noc::patterns::reduce_tree;
+use crate::noc::NocSim;
 use crate::tile::ops;
 use crate::tile::shift::{shift_physical_ew, ShiftDir};
 use crate::tile::{EltwiseOp, Tile, TileShape};
+use crate::timing::cost::CostModel;
+use crate::timing::SimNs;
+use crate::ttm::program::Program;
+
+/// Per-phase timing of one program execution. All `*_ns` fields except
+/// `start`/`end` are durations relative to the device start, so they are
+/// invariant under the host-side launch offset.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ProgramOutcome {
+    /// Device start (after the host enqueue/gap was charged).
+    pub start: SimNs,
+    /// Slowest core's completion (broadcast included, if any).
+    pub end: SimNs,
+    /// Slowest core's data-movement wait: own sends issued + inbound
+    /// arrivals landed.
+    pub data_movement_ns: SimNs,
+    /// Slowest core's DRAM staging.
+    pub dram_ns: SimNs,
+    /// Slowest core's RISC-V element loop (zero fills / tile assembly).
+    pub riscv_ns: SimNs,
+    /// Slowest core's compute pipeline.
+    pub compute_ns: SimNs,
+    /// Slowest core's whole local phase (RISC-V + compute together).
+    pub local_ns: SimNs,
+    /// Reduction-tree network phase past the slowest local phase.
+    pub reduce_ns: SimNs,
+    /// Result broadcast.
+    pub bcast_ns: SimNs,
+    pub messages: u64,
+    pub bytes: u64,
+}
+
+impl ProgramOutcome {
+    /// Whole device-side duration of the program.
+    pub fn device_ns(&self) -> SimNs {
+        self.end - self.start
+    }
+}
+
+/// Execute a lowered program starting at simulated time `start`: NoC
+/// data movement, per-core local phases, and the optional reduction.
+/// Pure device timing — dispatch overhead is the host queue's job.
+pub fn execute_program(program: &Program, cost: &CostModel, start: SimNs) -> Result<ProgramOutcome> {
+    program.validate()?;
+    let w = &program.work;
+    let n = w.n_cores();
+    let calib = &cost.calib;
+    let mut noc = NocSim::new();
+
+    // ---- data movement: per-sender sequential NoC sends -----------------
+    let mut send_done = vec![start; n];
+    let mut recv_ready = vec![start; n];
+    for queue in &w.data_movement {
+        let mut cursor = start;
+        for s in &queue.sends {
+            debug_assert_eq!(s.src, queue.sends[0].src, "one sender per queue");
+            let issue = if s.cold {
+                calib.noc_issue_cycles
+            } else {
+                calib.noc_batch_issue_cycles
+            };
+            let d = noc.send_with_issue(calib, s.src, s.dst, s.bytes, cursor, issue);
+            cursor = d.issue_done;
+            let j = w.core_index(s.dst);
+            if d.arrival > recv_ready[j] {
+                recv_ready[j] = d.arrival;
+            }
+        }
+        if let Some(first) = queue.sends.first() {
+            send_done[w.core_index(first.src)] = cursor;
+        }
+    }
+
+    // ---- per-core local phase -------------------------------------------
+    let at = |v: &[u64], i: usize| v.get(i).copied().unwrap_or(0);
+    let mut core_done = vec![start; n];
+    let mut out = ProgramOutcome {
+        start,
+        ..ProgramOutcome::default()
+    };
+    let mut end = start;
+    for i in 0..n {
+        let ready = send_done[i].max(recv_ready[i]);
+        let dram_b = at(&w.dram_bytes, i);
+        let dram = if dram_b == 0 {
+            0.0
+        } else {
+            crate::timing::cycles_ns(cost.dram_stream_cycles(dram_b))
+        };
+        let riscv = crate::timing::cycles_ns(at(&w.riscv_cycles, i));
+        let compute = crate::timing::cycles_ns(at(&w.compute_cycles, i));
+        let done = ready + dram + riscv + compute;
+        core_done[i] = done;
+        end = end.max(done);
+        out.data_movement_ns = out.data_movement_ns.max(ready - start);
+        out.dram_ns = out.dram_ns.max(dram);
+        out.riscv_ns = out.riscv_ns.max(riscv);
+        out.compute_ns = out.compute_ns.max(compute);
+        out.local_ns = out.local_ns.max(riscv + compute);
+    }
+
+    // ---- global reduction tree + broadcast (§5) -------------------------
+    if let Some(rs) = &w.reduce {
+        let (rows, cols) = w.grid;
+        let tree = reduce_tree(rs.pattern, rows, cols);
+        let children = tree.children();
+        let merge_ns = crate::timing::cycles_ns(rs.merge_cycles);
+        let mut ready_at: BTreeMap<Coord, SimNs> = BTreeMap::new();
+        let mut arrivals: BTreeMap<Coord, SimNs> = BTreeMap::new();
+        for &c in &tree.topo_order() {
+            let local_done = core_done[w.core_index(c)];
+            let mut done = local_done;
+            // Merge children's partials as they arrive (sequentially on
+            // the receiving data-movement core).
+            if let Some(kids) = children.get(&c) {
+                let mut merge_cursor = local_done;
+                let mut kid_arrivals: Vec<SimNs> = kids.iter().map(|k| arrivals[k]).collect();
+                kid_arrivals.sort_by(|x, y| x.partial_cmp(y).unwrap());
+                for ka in kid_arrivals {
+                    merge_cursor = merge_cursor.max(ka) + merge_ns;
+                }
+                done = merge_cursor;
+            }
+            ready_at.insert(c, done);
+            if let Some(&parent) = tree.parent.get(&c) {
+                let d = noc.send(calib, c, parent, rs.payload_bytes, done);
+                arrivals.insert(c, d.arrival);
+            }
+        }
+        let reduce_done = ready_at[&tree.root] + crate::timing::cycles_ns(rs.root_extra_cycles);
+        out.reduce_ns = reduce_done - end;
+        end = reduce_done;
+        if rs.bcast_bytes > 0 {
+            let dests: Vec<Coord> = (0..rows)
+                .flat_map(|r| (0..cols).map(move |c| Coord::new(r, c)))
+                .filter(|&c| c != tree.root)
+                .collect();
+            let bcast_done = noc.multicast(calib, tree.root, &dests, rs.bcast_bytes, reduce_done);
+            out.bcast_ns = bcast_done - reduce_done;
+            end = bcast_done;
+        }
+    }
+
+    out.end = end;
+    out.messages = noc.messages_sent;
+    out.bytes = noc.bytes_sent;
+    Ok(out)
+}
 
 /// Halo lines for one tile of the stencil (§6.1): rows for N/S, columns
 /// for E/W; `None` = global boundary = zero fill (§6.3).

@@ -3,15 +3,30 @@
 //! tt-metal programs consist of a host program that allocates buffers,
 //! builds `Program`s out of per-core kernels (two NoC data-movement
 //! kernels + one compute kernel), enqueues them on a command queue, and
-//! synchronizes. This module models that structure and its costs:
-//! program construction, per-launch dispatch overhead, and the
-//! fused-vs-split launch accounting that differentiates the paper's two
-//! PCG variants (§7.1).
+//! synchronizes. This module models that structure and its costs as the
+//! repo's single execution pipeline:
+//!
+//! 1. every kernel **lowers** to a [`Program`] (kernel specs + the
+//!    per-core [`Workload`] + a resource [`Footprint`]);
+//! 2. [`HostQueue::run`] **dispatches** it — charging the per-enqueue
+//!    launch overhead exactly once — and [`exec::execute_program`]
+//!    produces the per-phase device timing (NoC data movement, RISC-V
+//!    element loops, compute pipeline, DRAM staging, reductions) and the
+//!    per-role profiler zones;
+//! 3. iterative solvers derive their fused-vs-split launch accounting
+//!    (§7.1) from an [`IterSchedule`] over the component programs;
+//!    [`Program::fuse`] merges them under the §7.2 SRAM budget.
+//!
+//! No kernel or solver module computes dispatch, gap, or readback costs
+//! itself; those constants are only applied here.
 
 pub mod exec;
 pub mod launch;
 pub mod program;
 
-pub use exec::{stencil_tile_kernel, KernelStats, TileHalos};
-pub use launch::{HostQueue, LaunchStats};
-pub use program::{KernelRole, KernelSpec, Program};
+pub use exec::{execute_program, stencil_tile_kernel, KernelStats, ProgramOutcome, TileHalos};
+pub use launch::{HostQueue, IterSchedule, LaunchStats};
+pub use program::{
+    Footprint, FusedProgram, KernelRole, KernelSpec, NocSend, Program, ReduceSpec, SendQueue,
+    Workload,
+};

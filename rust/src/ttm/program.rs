@@ -1,4 +1,22 @@
-//! Programs and kernel specs (the tt-metal structural model).
+//! Programs and kernel specs (the tt-metal structural model), plus the
+//! lowered per-core workload the scheduler executes.
+//!
+//! A [`Program`] is the unit of dispatch: the reader/compute/writer
+//! [`KernelSpec`]s launched together on the sub-grid, the per-core
+//! [`Workload`] those kernels perform (NoC sends, RISC-V element loops,
+//! compute-pipeline cycles, DRAM staging, an optional global reduction),
+//! and a resource [`Footprint`]. Kernels *lower* to this IR
+//! (`kernels::{eltwise, reduction, stencil, spmv}` each provide a
+//! `lower_*` constructor); the scheduler in [`crate::ttm::exec`] +
+//! [`crate::ttm::launch`] is the only place dispatch overhead, per-phase
+//! timing, and profiler zones are produced.
+//!
+//! [`Program::fuse`] merges compatible per-iteration programs into a
+//! [`FusedProgram`] — the §7.1 fused-kernel PCG — subject to an SRAM
+//! capacity check on the binding per-core footprint.
+
+use crate::device::Coord;
+use crate::noc::RoutePattern;
 
 /// Which baby RISC-V a kernel runs on (§3): the two NoC data-movement
 /// cores, or the compute cores collectively.
@@ -13,7 +31,7 @@ pub enum KernelRole {
 }
 
 /// Description of one device kernel within a program.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct KernelSpec {
     pub name: String,
     pub role: KernelRole,
@@ -37,14 +55,105 @@ impl KernelSpec {
     }
 }
 
+/// One asynchronous NoC write issued by a data-movement RISC-V.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NocSend {
+    pub src: Coord,
+    pub dst: Coord,
+    pub bytes: u64,
+    /// Cold transactions pay the full `noc_issue_cycles`; warm follow-ups
+    /// in a batched loop pay `noc_batch_issue_cycles` (§6.3).
+    pub cold: bool,
+}
+
+/// The sends one core's writer RISC-V issues, in program order.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SendQueue {
+    pub sends: Vec<NocSend>,
+}
+
+/// Global tree-reduction + broadcast phase (the dot kernel's network
+/// part, §5): executed by the scheduler after every core's local phase.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReduceSpec {
+    pub pattern: RoutePattern,
+    /// Payload per tree edge (one 32 B scalar beat, or a whole tile).
+    pub payload_bytes: u64,
+    /// Cycles to merge one inbound partial at a receiving core.
+    pub merge_cycles: u64,
+    /// Extra cycles at the root after the tree drains (§5.1 method-2
+    /// final tile→scalar reduce).
+    pub root_extra_cycles: u64,
+    /// Result broadcast payload (0 = no broadcast back).
+    pub bcast_bytes: u64,
+}
+
+/// The lowered per-core device work of one program application. Produced
+/// by kernel lowerings; consumed only by the scheduler.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workload {
+    /// Sub-grid shape (rows, cols); cores are indexed row-major.
+    pub grid: (usize, usize),
+    /// NoC sends grouped per sending core, issued sequentially per core.
+    pub data_movement: Vec<SendQueue>,
+    /// Per-core DRAM staging bytes, charged before the local phase.
+    pub dram_bytes: Vec<u64>,
+    /// Per-core baby-RISC-V element-loop cycles (zero fills, indexed
+    /// gather/scatter tile assembly).
+    pub riscv_cycles: Vec<u64>,
+    /// Per-core compute-pipeline cycles (tile ops).
+    pub compute_cycles: Vec<u64>,
+    /// Optional global reduction after the local phase.
+    pub reduce: Option<ReduceSpec>,
+}
+
+impl Default for Workload {
+    fn default() -> Self {
+        Self {
+            grid: (1, 1),
+            data_movement: Vec::new(),
+            dram_bytes: Vec::new(),
+            riscv_cycles: Vec::new(),
+            compute_cycles: Vec::new(),
+            reduce: None,
+        }
+    }
+}
+
+impl Workload {
+    pub fn n_cores(&self) -> usize {
+        self.grid.0 * self.grid.1
+    }
+
+    /// Row-major core index of a grid coordinate.
+    pub fn core_index(&self, c: Coord) -> usize {
+        c.row * self.grid.1 + c.col
+    }
+}
+
+/// Resource/traffic footprint of one program application.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Footprint {
+    /// Resident vector tiles per core.
+    pub tiles_per_core: usize,
+    /// Largest per-core SRAM working set, bytes (checked by
+    /// [`Program::fuse`] against the fused-kernel budget).
+    pub sram_bytes: usize,
+    /// Bytes one application moves (DRAM staging + NoC + result
+    /// writeback) — the single traffic number per program.
+    pub traffic_bytes: u64,
+}
+
 /// A program: the set of kernels launched together on the sub-grid.
 /// tt-metal launches all three kernels concurrently on every core; the
 /// split-kernel PCG enqueues one `Program` per component per iteration,
 /// the fused PCG a single program for the whole solve (§7.1).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Program {
     pub name: String,
     pub kernels: Vec<KernelSpec>,
+    pub work: Workload,
+    pub footprint: Footprint,
 }
 
 impl Program {
@@ -52,11 +161,23 @@ impl Program {
         Self {
             name: name.to_string(),
             kernels: Vec::new(),
+            work: Workload::default(),
+            footprint: Footprint::default(),
         }
     }
 
     pub fn with_kernel(mut self, k: KernelSpec) -> Self {
         self.kernels.push(k);
+        self
+    }
+
+    pub fn with_work(mut self, work: Workload) -> Self {
+        self.work = work;
+        self
+    }
+
+    pub fn with_footprint(mut self, footprint: Footprint) -> Self {
+        self.footprint = footprint;
         self
     }
 
@@ -68,7 +189,8 @@ impl Program {
             .with_kernel(KernelSpec::new(&format!("{name}_writer"), KernelRole::Writer))
     }
 
-    /// Validate the tt-metal constraint: at most one kernel per role.
+    /// Validate the tt-metal constraint: at most one kernel per role, and
+    /// per-core workload vectors consistent with the sub-grid.
     pub fn validate(&self) -> crate::Result<()> {
         for role in [KernelRole::Reader, KernelRole::Writer, KernelRole::Compute] {
             let n = self.kernels.iter().filter(|k| k.role == role).count();
@@ -79,7 +201,86 @@ impl Program {
                 )));
             }
         }
+        let n = self.work.n_cores();
+        for (what, len) in [
+            ("dram_bytes", self.work.dram_bytes.len()),
+            ("riscv_cycles", self.work.riscv_cycles.len()),
+            ("compute_cycles", self.work.compute_cycles.len()),
+        ] {
+            if len > n {
+                return Err(crate::SimError::Other(format!(
+                    "program '{}': {what} has {len} entries for {n} cores",
+                    self.name
+                )));
+            }
+        }
+        let (rows, cols) = self.work.grid;
+        for queue in &self.work.data_movement {
+            for s in &queue.sends {
+                for c in [s.src, s.dst] {
+                    if c.row >= rows || c.col >= cols {
+                        return Err(crate::SimError::Other(format!(
+                            "program '{}': NoC send touches core ({},{}) outside the {rows}x{cols} sub-grid",
+                            self.name, c.row, c.col
+                        )));
+                    }
+                }
+            }
+        }
         Ok(())
+    }
+
+    /// Merge compatible per-iteration programs into one fused program
+    /// (§7.1). Compatibility: every part targets the same sub-grid, and
+    /// the binding per-core SRAM working set (the parts share the
+    /// resident vector pool, so the largest part binds) fits
+    /// `sram_budget` bytes.
+    pub fn fuse(name: &str, parts: Vec<Program>, sram_budget: usize) -> crate::Result<FusedProgram> {
+        let Some(first) = parts.first() else {
+            return Err(crate::SimError::Other(format!(
+                "fused program '{name}' needs at least one part"
+            )));
+        };
+        let grid = first.work.grid;
+        for p in &parts {
+            p.validate()?;
+            if p.work.grid != grid {
+                return Err(crate::SimError::Other(format!(
+                    "cannot fuse '{}' ({:?} grid) with '{}' ({:?} grid)",
+                    first.name, grid, p.name, p.work.grid
+                )));
+            }
+        }
+        let sram = parts.iter().map(|p| p.footprint.sram_bytes).max().unwrap_or(0);
+        if sram > sram_budget {
+            return Err(crate::SimError::Other(format!(
+                "fused program '{name}' needs {sram} B of SRAM per core, budget {sram_budget} B (§7.2)"
+            )));
+        }
+        Ok(FusedProgram {
+            name: name.to_string(),
+            parts,
+        })
+    }
+}
+
+/// A fused program: per-iteration component programs merged into one
+/// persistent device program, dispatched with a single host enqueue;
+/// component boundaries inside it cost only the §7.3 device-side gap.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FusedProgram {
+    pub name: String,
+    pub parts: Vec<Program>,
+}
+
+impl FusedProgram {
+    /// Combined footprint: binding (max) SRAM working set, summed traffic.
+    pub fn footprint(&self) -> Footprint {
+        Footprint {
+            tiles_per_core: self.parts.iter().map(|p| p.footprint.tiles_per_core).max().unwrap_or(0),
+            sram_bytes: self.parts.iter().map(|p| p.footprint.sram_bytes).max().unwrap_or(0),
+            traffic_bytes: self.parts.iter().map(|p| p.footprint.traffic_bytes).sum(),
+        }
     }
 }
 
@@ -112,5 +313,48 @@ mod tests {
             .arg("cb", "cb_in0");
         assert_eq!(k.ct_args.len(), 2);
         assert_eq!(k.ct_args[0], ("num_tiles".to_string(), "64".to_string()));
+    }
+
+    #[test]
+    fn workload_shape_validated() {
+        let mut p = Program::standard("x");
+        p.work.grid = (1, 1);
+        p.work.compute_cycles = vec![10, 20];
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn out_of_grid_send_rejected() {
+        let mut p = Program::standard("x");
+        p.work.grid = (2, 2);
+        p.work.data_movement = vec![SendQueue {
+            sends: vec![NocSend {
+                src: Coord::new(0, 0),
+                dst: Coord::new(0, 2), // aliases core (1,0) row-major
+                bytes: 32,
+                cold: true,
+            }],
+        }];
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn fuse_requires_matching_grids_and_capacity() {
+        let mut a = Program::standard("a");
+        a.work.grid = (2, 2);
+        a.footprint.sram_bytes = 100;
+        let mut b = Program::standard("b");
+        b.work.grid = (2, 2);
+        b.footprint.sram_bytes = 400;
+
+        let fused = Program::fuse("ab", vec![a.clone(), b.clone()], 500).unwrap();
+        // The parts share the vector pool: the largest part binds.
+        assert_eq!(fused.footprint().sram_bytes, 400);
+
+        assert!(Program::fuse("ab", vec![a.clone(), b.clone()], 300).is_err());
+        let mut c = Program::standard("c");
+        c.work.grid = (1, 2);
+        assert!(Program::fuse("ac", vec![a, c], 1 << 20).is_err());
+        assert!(Program::fuse("empty", vec![], 1 << 20).is_err());
     }
 }

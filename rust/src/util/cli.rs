@@ -62,6 +62,17 @@ impl Args {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Parse `--key` through the type's single `FromStr` impl, falling
+    /// back to `default` when absent. This is the one parse path for
+    /// enum-valued options (engine kind, PCG variant, route pattern) —
+    /// callers must not open-code string matches next to it.
+    pub fn get_parsed<T>(&self, key: &str, default: &str) -> Result<T, String>
+    where
+        T: std::str::FromStr<Err = String>,
+    {
+        self.get_or(key, default).parse()
+    }
+
     /// Parse "8x7" style grid specs.
     pub fn get_grid(&self, key: &str, default: (usize, usize)) -> Result<(usize, usize), String> {
         match self.get(key) {
@@ -182,6 +193,17 @@ mod tests {
         assert!(parse_grid("8").is_err());
         assert!(parse_dims3("8x7").is_err());
         assert!(parse_grid("axb").is_err());
+    }
+
+    #[test]
+    fn get_parsed_routes_through_fromstr() {
+        let a = parse(&sv(&["--engine", "pjrt"]), &["engine"], &[]).unwrap();
+        let k: crate::engine::EngineKind = a.get_parsed("engine", "native").unwrap();
+        assert_eq!(k, crate::engine::EngineKind::Pjrt);
+        let d: crate::engine::EngineKind = a.get_parsed("missing-key", "native").unwrap();
+        assert_eq!(d, crate::engine::EngineKind::Native);
+        let bad = parse(&sv(&["--engine", "cuda"]), &["engine"], &[]).unwrap();
+        assert!(bad.get_parsed::<crate::engine::EngineKind>("engine", "native").is_err());
     }
 
     #[test]

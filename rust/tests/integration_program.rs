@@ -1,0 +1,185 @@
+//! Integration tests of the kernel → Program → HostQueue pipeline:
+//!
+//! 1. lowering is deterministic — lowering the same config twice yields
+//!    identical `Program`s (kernels, workload, footprint);
+//! 2. a 10-iteration PCG pins the scheduler-derived launch accounting
+//!    (split: 8 enqueues/iter + readbacks, fused: 1 enqueue per solve)
+//!    for both the stencil and the sparse operator;
+//! 3. the per-program traffic footprint agrees with the existing
+//!    `SpmvTraffic` accounting on the DramStream path, and carries the
+//!    SELL padding/occupancy stats as compile-time args.
+
+use wormsim::arch::{ComputeUnit, DataFormat};
+use wormsim::device::TensixGrid;
+use wormsim::engine::{NativeEngine, StencilCoeffs};
+use wormsim::kernels::reduction::{lower_dot, DotConfig, DotMethod};
+use wormsim::kernels::spmv::{SpmvConfig, SpmvMode, SpmvOperator};
+use wormsim::kernels::stencil::{lower_stencil, StencilConfig, StencilVariant};
+use wormsim::kernels::{lower_block_op, lower_eltwise};
+use wormsim::noc::RoutePattern;
+use wormsim::profiler::Profiler;
+use wormsim::solver::{self, Operator, PcgOptions, PcgVariant, Problem};
+use wormsim::sparse::{laplacian_3d, RowPartition};
+use wormsim::timing::cost::{CostModel, PipelineMode, TileOpKind};
+use wormsim::ttm::Program;
+
+fn stencil_cfg(df: DataFormat, tiles: usize) -> StencilConfig {
+    StencilConfig {
+        df,
+        unit: ComputeUnit::for_format(df),
+        tiles_per_core: tiles,
+        variant: StencilVariant::FULL,
+        coeffs: StencilCoeffs::LAPLACIAN,
+    }
+}
+
+fn laplacian_op(rows: usize, cols: usize, nz: usize, df: DataFormat, mode: SpmvMode) -> SpmvOperator {
+    let a = laplacian_3d(64 * rows, 16 * cols, nz);
+    let part = RowPartition::stencil_aligned(rows, cols, nz).unwrap();
+    SpmvOperator::new(&a, part, SpmvConfig::new(df, mode)).unwrap()
+}
+
+#[test]
+fn lowering_is_deterministic_for_every_kernel() {
+    let cost = CostModel::default();
+    let grid = TensixGrid::new(2, 2).unwrap();
+
+    let s1 = lower_stencil(&grid, &stencil_cfg(DataFormat::Bf16, 4), &cost);
+    let s2 = lower_stencil(&grid, &stencil_cfg(DataFormat::Bf16, 4), &cost);
+    assert_eq!(s1, s2);
+    assert!(!s1.work.data_movement.is_empty());
+
+    let dcfg = DotConfig::paper_section5(DotMethod::ReduceThenSend, RoutePattern::Naive, 4);
+    assert_eq!(lower_dot(2, 2, &dcfg, &cost), lower_dot(2, 2, &dcfg, &cost));
+
+    assert_eq!(
+        lower_eltwise(&cost, ComputeUnit::Fpu, DataFormat::Bf16, 64),
+        lower_eltwise(&cost, ComputeUnit::Fpu, DataFormat::Bf16, 64)
+    );
+    assert_eq!(
+        lower_block_op("axpy", 2, 2, &cost, ComputeUnit::Fpu, DataFormat::Bf16, TileOpKind::EltwiseBinary, 4, PipelineMode::Streamed),
+        lower_block_op("axpy", 2, 2, &cost, ComputeUnit::Fpu, DataFormat::Bf16, TileOpKind::EltwiseBinary, 4, PipelineMode::Streamed)
+    );
+
+    let op = laplacian_op(2, 2, 2, DataFormat::Fp32, SpmvMode::SramResident);
+    assert_eq!(op.lower(&cost), op.lower(&cost));
+}
+
+#[test]
+fn every_program_validates_and_carries_three_kernels() {
+    let cost = CostModel::default();
+    let grid = TensixGrid::new(2, 2).unwrap();
+    let op = laplacian_op(2, 2, 2, DataFormat::Fp32, SpmvMode::SramResident);
+    let programs: Vec<Program> = vec![
+        lower_stencil(&grid, &stencil_cfg(DataFormat::Bf16, 4), &cost),
+        lower_dot(2, 2, &DotConfig::paper_section5(DotMethod::SendTiles, RoutePattern::Center, 4), &cost),
+        lower_eltwise(&cost, ComputeUnit::Sfpu, DataFormat::Fp32, 16),
+        op.lower(&cost),
+    ];
+    for p in &programs {
+        p.validate().unwrap();
+        assert_eq!(p.kernels.len(), 3, "{}", p.name);
+    }
+}
+
+#[test]
+fn ten_iteration_pcg_pins_launch_counts_stencil_and_sparse() {
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    let mut prof = Profiler::disabled();
+
+    // Stencil operator, split FP32: 8 component enqueues per iteration.
+    let ps = Problem::new(2, 2, 2, DataFormat::Fp32);
+    let grid = ps.make_grid().unwrap();
+    let b = solver::dist_random(&ps, 3);
+    let mut opts = PcgOptions::new(PcgVariant::SplitFp32);
+    opts.max_iters = 10;
+    opts.tol_abs = 0.0;
+    let split = solver::solve(&grid, &ps, &b, &e, &cost, &opts, &mut prof).unwrap();
+    assert_eq!(split.iters, 10);
+    assert_eq!(split.launch.launches, 8 * 10);
+    assert_eq!(split.launches_per_iter(), 8.0);
+    assert_eq!(split.launch.gap_ns, 0.0);
+
+    // Stencil operator, fused BF16: one enqueue for the whole solve.
+    let pb = Problem::new(2, 2, 2, DataFormat::Bf16);
+    let bb = solver::dist_random(&pb, 3);
+    let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
+    opts.max_iters = 10;
+    opts.tol_abs = 0.0;
+    let fused = solver::solve(&grid, &pb, &bb, &e, &cost, &opts, &mut prof).unwrap();
+    assert_eq!(fused.launch.launches, 1);
+    assert!(fused.launch.gap_ns > 0.0);
+    assert!(fused.launches_per_iter() < split.launches_per_iter());
+
+    // Sparse operator: identical accounting, derived from the same
+    // scheduler.
+    let op32 = laplacian_op(2, 2, 2, DataFormat::Fp32, SpmvMode::SramResident);
+    let mut opts = PcgOptions::new(PcgVariant::SplitFp32);
+    opts.max_iters = 10;
+    opts.tol_abs = 0.0;
+    let sp_split =
+        solver::solve_operator(&grid, &b, &Operator::Sparse(&op32), &e, &cost, &opts, &mut prof)
+            .unwrap();
+    assert_eq!(sp_split.launch.launches, 8 * 10);
+
+    let op16 = laplacian_op(2, 2, 2, DataFormat::Bf16, SpmvMode::SramResident);
+    let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
+    opts.max_iters = 10;
+    opts.tol_abs = 0.0;
+    let sp_fused =
+        solver::solve_operator(&grid, &bb, &Operator::Sparse(&op16), &e, &cost, &opts, &mut prof)
+            .unwrap();
+    assert_eq!(sp_fused.launch.launches, 1);
+    assert!(sp_fused.launch.gap_ns > 0.0);
+}
+
+#[test]
+fn spmv_program_traffic_footprint_matches_spmv_traffic() {
+    // One traffic number per program, equal to the existing SpmvTraffic
+    // accounting on the DramStream path — and the SELL padding/occupancy
+    // stats ride along as compile-time args.
+    let cost = CostModel::default();
+    let op = laplacian_op(2, 2, 2, DataFormat::Fp32, SpmvMode::DramStream);
+    let program = op.lower(&cost);
+    assert_eq!(program.footprint.traffic_bytes, op.traffic().total());
+
+    let stats = op.stats();
+    let reader = &program.kernels[0];
+    let arg = |key: &str| -> String {
+        reader
+            .ct_args
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.clone())
+            .unwrap_or_else(|| panic!("missing ct_arg {key}"))
+    };
+    assert_eq!(arg("padded_nnz"), stats.padded_nnz.to_string());
+    assert_eq!(arg("nnz"), stats.nnz.to_string());
+    assert_eq!(arg("slices"), stats.n_slices.to_string());
+
+    // The SRAM-resident variant still reports the same cuSPARSE-comparable
+    // traffic number (the matrix is read from L1 instead of DRAM).
+    let resident = laplacian_op(2, 2, 2, DataFormat::Fp32, SpmvMode::SramResident);
+    assert_eq!(resident.lower(&cost).footprint.traffic_bytes, resident.traffic().total());
+    assert!(resident.lower(&cost).work.dram_bytes.iter().all(|&b| b == 0));
+    assert!(program.work.dram_bytes.iter().any(|&b| b > 0));
+}
+
+#[test]
+fn run_through_host_queue_matches_direct_execution() {
+    // HostQueue::run = enqueue (dispatch charged once) + execute; the
+    // device durations are launch-offset invariant.
+    let cost = CostModel::default();
+    let grid = TensixGrid::new(2, 2).unwrap();
+    let program = lower_stencil(&grid, &stencil_cfg(DataFormat::Bf16, 4), &cost);
+    let direct = wormsim::ttm::execute_program(&program, &cost, 0.0).unwrap();
+    let mut queue = wormsim::ttm::HostQueue::new(cost.calib.clone());
+    let mut prof = Profiler::new();
+    let queued = queue.run(&program, &cost, 0.0, &mut prof).unwrap();
+    assert_eq!(queue.stats.launches, 1);
+    assert_eq!(queued.start, cost.calib.kernel_launch_ns);
+    assert!((queued.device_ns() - direct.device_ns()).abs() < 1e-6);
+    assert_eq!(queued.messages, direct.messages);
+    assert_eq!(prof.zones().len(), 3, "one zone per kernel role");
+}

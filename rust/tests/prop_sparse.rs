@@ -4,13 +4,18 @@
 //! 2. the SELL padding-overhead formula matches a brute-force count over
 //!    the built storage;
 //! 3. the 3D-Laplacian generator equals the stencil operator on random
-//!    vectors (f64 oracle), and bit-for-bit through the device engines.
+//!    vectors (f64 oracle), and bit-for-bit through the device engines;
+//! 4. the fused sparse PCG walks the split sparse PCG's residual
+//!    trajectory bit-for-bit on the generated 3D Laplacian — the launch
+//!    schedule is timing-only.
 
 use wormsim::arch::{ComputeUnit, DataFormat};
 use wormsim::engine::{NativeEngine, StencilCoeffs};
 use wormsim::kernels::spmv::{SpmvConfig, SpmvMode, SpmvOperator};
 use wormsim::kernels::stencil::{run_stencil, StencilConfig, StencilVariant};
+use wormsim::profiler::Profiler;
 use wormsim::solver::problem::{apply_laplacian_global, dist_random, dist_to_global, Problem};
+use wormsim::solver::{self, FusionMode, Operator, PcgOptions, PcgVariant};
 use wormsim::sparse::{laplacian_3d, padded_nnz_formula, CsrMatrix, RowPartition, SellMatrix};
 use wormsim::timing::cost::CostModel;
 use wormsim::util::prng::Rng;
@@ -130,5 +135,50 @@ fn laplacian_spmv_bitwise_equals_stencil_engine() {
         let op = SpmvOperator::new(&a, part, SpmvConfig::new(df, SpmvMode::SramResident)).unwrap();
         let (got, _) = op.apply(&grid, &x, &e, &cost).unwrap();
         assert_eq!(got, want, "df {df}");
+    }
+}
+
+#[test]
+fn fused_sparse_pcg_reproduces_split_sparse_trajectory() {
+    // Equivalence pin for the fused sparse PCG: at each precision, the
+    // fused and split schedules of the sparse-operator solve walk the
+    // exact same iterate trajectory (bit-identical residual history and
+    // solution) on the generated 3D Laplacian — fusion changes launch
+    // accounting, never values. At BF16 the fused run is also pinned to a
+    // single host enqueue (vs 8/iteration split).
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    for (df, variant) in [
+        (DataFormat::Bf16, PcgVariant::FusedBf16),
+        (DataFormat::Fp32, PcgVariant::SplitFp32),
+    ] {
+        let p = Problem::new(2, 2, 2, df);
+        let grid = p.make_grid().unwrap();
+        let b = dist_random(&p, 31);
+        let (nx, ny, nz) = p.dims();
+        let a = laplacian_3d(nx, ny, nz);
+        let part = RowPartition::stencil_aligned(2, 2, nz).unwrap();
+        let op = SpmvOperator::new(&a, part, SpmvConfig::new(df, SpmvMode::SramResident)).unwrap();
+
+        let mut prof = Profiler::disabled();
+        let mut opts = PcgOptions::new(variant);
+        opts.max_iters = 10;
+        opts.tol_abs = 0.0;
+
+        opts.fusion = FusionMode::ForceFused;
+        let fused =
+            solver::solve_operator(&grid, &b, &Operator::Sparse(&op), &e, &cost, &opts, &mut prof)
+                .unwrap();
+        opts.fusion = FusionMode::ForceSplit;
+        let split =
+            solver::solve_operator(&grid, &b, &Operator::Sparse(&op), &e, &cost, &opts, &mut prof)
+                .unwrap();
+
+        assert_eq!(fused.residual_history, split.residual_history, "df {df}");
+        assert_eq!(fused.x, split.x, "df {df}");
+        assert_eq!(fused.iters, split.iters, "df {df}");
+        assert_eq!(fused.launch.launches, 1, "df {df}");
+        assert_eq!(split.launch.launches, 8 * split.iters as u64, "df {df}");
+        assert!(fused.total_ns < split.total_ns, "df {df}");
     }
 }
