@@ -8,11 +8,14 @@
 //! (Table 3 + Fig 13) as one program exercising the full public API.
 //!
 //!     cargo run --release --example poisson_pcg [-- --small] [-- --engine pjrt]
+//!                                               [-- --dies N]
 //!
 //! `--small` runs a 4×4-core/16-tile configuration (fast, used in CI);
 //! `--engine pjrt` routes all per-core math through the AOT JAX/Pallas
 //! artifacts (requires `make artifacts`; implies `--small` economy sizes
-//! are recommended).
+//! are recommended). `--dies N` appends a mesh run: the same element
+//! count strong-scaled across N x-stacked dies (each die a full sub-grid
+//! with 1/N of the z-tiles), with the Ethernet seam charged per §8.
 
 use wormsim::arch::DataFormat;
 use wormsim::baseline::H100Model;
@@ -27,6 +30,14 @@ use wormsim::util::stats::fmt_ns;
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let small = args.iter().any(|a| a == "--small");
+    let dies: usize = match args.iter().position(|a| a == "--dies") {
+        Some(idx) => args
+            .get(idx + 1)
+            .ok_or_else(|| anyhow::anyhow!("--dies expects a value"))?
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--dies: {e}"))?,
+        None => 0,
+    };
     // Engine selection goes through the single `EngineKind: FromStr`
     // impl — unknown names are an error, not a silent native fallback.
     let engine_kind: EngineKind = match args.iter().position(|a| a == "--engine") {
@@ -108,5 +119,61 @@ fn main() -> anyhow::Result<()> {
         results[0].1 / h,
         results[1].1 / h
     );
+
+    // Optional §8 extension: the same element count strong-scaled across
+    // an N-die mesh (each die the full sub-grid, 1/N of the z-tiles).
+    if dies > 0 {
+        use wormsim::device::{DeviceMesh, EthLink, MeshTopology};
+        use wormsim::engine::StencilCoeffs;
+        use wormsim::kernels::stencil::{StencilConfig, StencilVariant};
+        use wormsim::solver::Operator;
+        if tiles % dies != 0 {
+            anyhow::bail!("--dies {dies} must divide {tiles} tiles/core");
+        }
+        let mesh = DeviceMesh::new(
+            dies,
+            grid_rows,
+            grid_cols,
+            MeshTopology::Line,
+            EthLink::for_dies(dies),
+        )
+        .map_err(anyhow::Error::msg)?;
+        let mesh_tiles = tiles / dies;
+        let cfg = StencilConfig {
+            df: DataFormat::Bf16,
+            unit: wormsim::arch::ComputeUnit::Fpu,
+            tiles_per_core: mesh_tiles,
+            variant: StencilVariant::FULL,
+            coeffs: StencilCoeffs::LAPLACIAN,
+        };
+        let bm = solver::mesh_dist_random(&mesh, mesh_tiles, DataFormat::Bf16, 20260710);
+        let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
+        opts.max_iters = iters.min(10);
+        opts.tol_abs = 0.0;
+        let mut prof = Profiler::disabled();
+        let res = solver::solve_pcg_mesh(
+            &mesh,
+            &bm,
+            &Operator::Stencil(cfg),
+            engine.as_ref(),
+            &cost,
+            &opts,
+            &mut prof,
+        )?;
+        println!();
+        println!(
+            "=== mesh extension: {} unknowns on {dies} x {grid_rows}x{grid_cols}-core dies, {mesh_tiles} tiles/core ===",
+            mesh.n_cores() * mesh_tiles * 1024
+        );
+        println!(
+            "  {} / iter ({:.2}x vs one die); compute {}, NoC {}, Ethernet {}, dispatch {}",
+            fmt_ns(res.per_iter_ns),
+            results[0].1 / res.per_iter_ns,
+            fmt_ns(res.phases.compute_ns),
+            fmt_ns(res.phases.noc_ns),
+            fmt_ns(res.phases.ether_ns),
+            fmt_ns(res.phases.dispatch_ns)
+        );
+    }
     Ok(())
 }

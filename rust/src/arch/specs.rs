@@ -61,6 +61,37 @@ pub const H100: AcceleratorSpec = AcceleratorSpec {
 
 pub const ALL_SPECS: [&AcceleratorSpec; 3] = [&N150D, &N300D, &H100];
 
+/// Raw parameters of one die-to-die Ethernet link class. The typed link
+/// object ([`crate::device::mesh::EthLink`]) is constructed from these —
+/// the per-topology presets live here next to the board specs they come
+/// from.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EthLinkSpec {
+    /// One-way message latency, ns (Ethernet MAC + SerDes).
+    pub latency_ns: f64,
+    /// Usable bandwidth, GB/s.
+    pub bw_gbs: f64,
+}
+
+/// n300 on-board die-to-die link: two dies on one PCB, 100 GbE lanes
+/// between them (≈ 25 GB/s raw per pair; one link's usable rate). This is
+/// the link the dual-die solver has always modeled.
+pub const ETH_ONBOARD: EthLinkSpec = EthLinkSpec {
+    latency_ns: 800.0,
+    bw_gbs: 11.0,
+};
+
+/// Galaxy backplane link: the 32-die Galaxy connects boards over QSFP-DD
+/// cabling and retimers — same 100 GbE class, longer flight time and a
+/// little less usable bandwidth. Estimated (the paper stops at one die).
+pub const ETH_BACKPLANE: EthLinkSpec = EthLinkSpec {
+    latency_ns: 1400.0,
+    bw_gbs: 9.0,
+};
+
+/// Dies in the largest Wormhole system (Galaxy).
+pub const GALAXY_DIES: usize = 32;
+
 #[cfg(test)]
 mod tests {
     use super::*;

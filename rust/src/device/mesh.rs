@@ -1,0 +1,350 @@
+//! The multi-die device mesh (§8 multi-device scaling).
+//!
+//! A Wormhole system is a set of Tensix dies joined by Ethernet: one die
+//! on an n150, two on the n300 (on-board links), thirty-two in a Galaxy
+//! (backplane links). This module is the device-layer model of that
+//! fabric: [`EthLink`] (the typed link and its transfer cost — formerly a
+//! solver-private detail of `solver::dualdie`), [`MeshTopology`]
+//! (line/ring), and [`DeviceMesh`] — N identical die sub-grids stacked
+//! along x, with link-path lookup and per-die SRAM/DRAM budget checks.
+//!
+//! The mesh is pure topology + cost: *what* moves over which link per
+//! solver component is decided by the lowerings (they attach
+//! [`crate::ttm::EtherPhase`]s to programs), and *when* it is charged by
+//! the one scheduler in [`crate::ttm::exec::execute_program`].
+
+use crate::arch::constants::N300D_DRAM_BYTES;
+use crate::arch::specs::{EthLinkSpec, ETH_BACKPLANE, ETH_ONBOARD, GALAXY_DIES};
+use crate::arch::DataFormat;
+use crate::device::TensixGrid;
+use crate::error::{Result, SimError};
+
+/// A die-to-die Ethernet link (§3: the die grid dedicates cells to
+/// Ethernet management; §8 names multi-device scaling as future work).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EthLink {
+    /// One-way message latency, ns (Ethernet MAC + SerDes; orders of
+    /// magnitude above a NoC hop).
+    pub latency_ns: f64,
+    /// Usable bandwidth, GB/s (2×100 GbE per die pair ≈ 25 GB/s raw; we
+    /// default to one link's usable rate).
+    pub bw_gbs: f64,
+}
+
+impl Default for EthLink {
+    fn default() -> Self {
+        Self::onboard()
+    }
+}
+
+impl EthLink {
+    pub fn from_spec(spec: EthLinkSpec) -> Self {
+        Self {
+            latency_ns: spec.latency_ns,
+            bw_gbs: spec.bw_gbs,
+        }
+    }
+
+    /// The n300 on-board die-to-die link (the dual-die solver's default).
+    pub fn onboard() -> Self {
+        Self::from_spec(ETH_ONBOARD)
+    }
+
+    /// The Galaxy backplane link (longer traces, retimers).
+    pub fn backplane() -> Self {
+        Self::from_spec(ETH_BACKPLANE)
+    }
+
+    /// The link class a system of `n_dies` uses: on-board up to the n300
+    /// pair, backplane beyond — the one place the scale→link mapping
+    /// lives (drivers must not restate it).
+    pub fn for_dies(n_dies: usize) -> Self {
+        if n_dies > 2 {
+            Self::backplane()
+        } else {
+            Self::onboard()
+        }
+    }
+
+    /// Transfer time for `bytes` over the link.
+    pub fn transfer_ns(&self, bytes: u64) -> f64 {
+        self.latency_ns + bytes as f64 / self.bw_gbs
+    }
+}
+
+/// How the dies are wired together.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MeshTopology {
+    /// A chain: die d links to d±1 (n300 = a 2-die line).
+    Line,
+    /// A chain closed into a ring (Galaxy-style): die N−1 links back to
+    /// die 0, halving worst-case path lengths.
+    Ring,
+}
+
+impl MeshTopology {
+    pub fn label(self) -> &'static str {
+        match self {
+            MeshTopology::Line => "line",
+            MeshTopology::Ring => "ring",
+        }
+    }
+}
+
+impl std::str::FromStr for MeshTopology {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "line" | "chain" => Ok(MeshTopology::Line),
+            "ring" => Ok(MeshTopology::Ring),
+            _ => Err(format!("unknown mesh topology '{s}' (expected line|ring)")),
+        }
+    }
+}
+
+/// N identical Tensix die sub-grids joined by Ethernet links. Dies stack
+/// the domain along x (die d owns logical core rows
+/// `[d·die_rows, (d+1)·die_rows)`), generalizing the n300 dual-die
+/// decomposition to arbitrary N.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceMesh {
+    pub n_dies: usize,
+    /// Per-die compute sub-grid shape (§7.2: ≤ 8×7).
+    pub die_rows: usize,
+    pub die_cols: usize,
+    pub topology: MeshTopology,
+    /// Uniform link model (per-topology preset from `arch::specs`).
+    pub link: EthLink,
+}
+
+impl DeviceMesh {
+    pub fn new(
+        n_dies: usize,
+        die_rows: usize,
+        die_cols: usize,
+        topology: MeshTopology,
+        link: EthLink,
+    ) -> Result<Self> {
+        if n_dies == 0 {
+            return Err(SimError::BadProblem {
+                what: "mesh needs at least one die".to_string(),
+            });
+        }
+        if n_dies > GALAXY_DIES {
+            return Err(SimError::BadProblem {
+                what: format!("{n_dies} dies exceeds the {GALAXY_DIES}-die Galaxy ceiling"),
+            });
+        }
+        // Per-die sub-grid obeys the single-die rules (§7.2 ≤ 8×7).
+        let _ = TensixGrid::new(die_rows, die_cols)?;
+        Ok(Self {
+            n_dies,
+            die_rows,
+            die_cols,
+            topology,
+            link,
+        })
+    }
+
+    /// One die, no links — the n150.
+    pub fn n150(die_rows: usize, die_cols: usize) -> Result<Self> {
+        Self::new(1, die_rows, die_cols, MeshTopology::Line, EthLink::onboard())
+    }
+
+    /// Two dies over the on-board link — the n300.
+    pub fn n300(die_rows: usize, die_cols: usize) -> Result<Self> {
+        Self::new(2, die_rows, die_cols, MeshTopology::Line, EthLink::onboard())
+    }
+
+    /// Thirty-two dies on a backplane ring — the Galaxy.
+    pub fn galaxy(die_rows: usize, die_cols: usize) -> Result<Self> {
+        Self::new(
+            GALAXY_DIES,
+            die_rows,
+            die_cols,
+            MeshTopology::Ring,
+            EthLink::backplane(),
+        )
+    }
+
+    pub fn cores_per_die(&self) -> usize {
+        self.die_rows * self.die_cols
+    }
+
+    pub fn n_cores(&self) -> usize {
+        self.n_dies * self.cores_per_die()
+    }
+
+    /// Logical core-grid rows across the whole mesh (x-stacked dies).
+    pub fn logical_rows(&self) -> usize {
+        self.n_dies * self.die_rows
+    }
+
+    /// The per-die compute sub-grid (identical for every die).
+    pub fn die_grid(&self) -> Result<TensixGrid> {
+        TensixGrid::new(self.die_rows, self.die_cols)
+    }
+
+    /// Die owning a logical (mesh-wide, row-major) core index.
+    pub fn die_of_core(&self, core: usize) -> usize {
+        (core / self.die_cols) / self.die_rows
+    }
+
+    /// The undirected links of the topology, as (lower, higher) die pairs.
+    pub fn links(&self) -> Vec<(usize, usize)> {
+        let mut out: Vec<(usize, usize)> = (0..self.n_dies.saturating_sub(1)).map(|d| (d, d + 1)).collect();
+        if self.topology == MeshTopology::Ring && self.n_dies > 2 {
+            out.push((0, self.n_dies - 1));
+        }
+        out
+    }
+
+    pub fn are_linked(&self, a: usize, b: usize) -> bool {
+        let (lo, hi) = (a.min(b), a.max(b));
+        self.links().contains(&(lo, hi))
+    }
+
+    /// Link-path lookup: the undirected links a transfer from die `a` to
+    /// die `b` traverses, in order. On a line this is the straight chain;
+    /// on a ring, the shorter arc (ties go through the chain).
+    pub fn path(&self, a: usize, b: usize) -> Vec<(usize, usize)> {
+        assert!(a < self.n_dies && b < self.n_dies, "die index out of range");
+        if a == b {
+            return Vec::new();
+        }
+        let (lo, hi) = (a.min(b), a.max(b));
+        let inner = hi - lo;
+        let outer = self.n_dies - inner;
+        let use_wrap = self.topology == MeshTopology::Ring && self.n_dies > 2 && outer < inner;
+        if use_wrap {
+            // lo → 0 → wrap link → N−1 → hi.
+            let mut hops: Vec<(usize, usize)> = (0..lo).rev().map(|d| (d, d + 1)).collect();
+            hops.push((0, self.n_dies - 1));
+            hops.extend((hi..self.n_dies - 1).map(|d| (d, d + 1)));
+            hops
+        } else {
+            (lo..hi).map(|d| (d, d + 1)).collect()
+        }
+    }
+
+    /// Number of links on the `a`→`b` path.
+    pub fn path_len(&self, a: usize, b: usize) -> usize {
+        self.path(a, b).len()
+    }
+
+    /// Serial transfer time of `bytes` from die `a` to die `b` (each hop
+    /// is a store-and-forward over one link).
+    pub fn transfer_ns(&self, a: usize, b: usize, bytes: u64) -> f64 {
+        self.path_len(a, b) as f64 * self.link.transfer_ns(bytes)
+    }
+
+    /// Per-die resource budgets for a PCG-shaped resident problem: the
+    /// §7.2 SRAM ceiling (via the capacity model) and the per-die DRAM
+    /// share of the vector working set. `vectors` is the number of
+    /// resident whole-domain vectors (use the §7.2 counts).
+    pub fn validate_budgets(&self, tiles_per_core: usize, df: DataFormat, fused: bool) -> Result<()> {
+        let problem =
+            crate::solver::problem::Problem::new(self.die_rows, self.die_cols, tiles_per_core, df);
+        problem.validate_capacity(fused)?;
+        // DRAM: each die backs its resident vectors (plus staging) out of
+        // its own GDDR6 share — n300d ships 24 GB for two dies.
+        let dram_per_die = N300D_DRAM_BYTES / 2;
+        let vectors = if fused {
+            crate::arch::constants::PCG_VECTORS_FUSED
+        } else {
+            crate::arch::constants::PCG_VECTORS_SPLIT
+        };
+        let per_die_bytes =
+            (self.cores_per_die() * tiles_per_core * df.tile_bytes() * vectors) as u64;
+        if per_die_bytes > dram_per_die {
+            return Err(SimError::BadProblem {
+                what: format!(
+                    "per-die vector working set {per_die_bytes} B exceeds the {dram_per_die} B DRAM share"
+                ),
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_presets() {
+        let m = DeviceMesh::n300(4, 4).unwrap();
+        assert_eq!(m.n_dies, 2);
+        assert_eq!(m.n_cores(), 32);
+        assert_eq!(m.logical_rows(), 8);
+        assert_eq!(m.link, EthLink::onboard());
+        assert_eq!(m.links(), vec![(0, 1)]);
+
+        let g = DeviceMesh::galaxy(8, 7).unwrap();
+        assert_eq!(g.n_dies, 32);
+        assert_eq!(g.topology, MeshTopology::Ring);
+        assert_eq!(g.link, EthLink::backplane());
+        assert_eq!(g.links().len(), 32); // chain + wrap
+
+        assert!(DeviceMesh::new(0, 1, 1, MeshTopology::Line, EthLink::default()).is_err());
+        assert!(DeviceMesh::new(33, 1, 1, MeshTopology::Line, EthLink::default()).is_err());
+        // Per-die grid still obeys the §7.2 sub-grid ceiling.
+        assert!(DeviceMesh::new(2, 9, 7, MeshTopology::Line, EthLink::default()).is_err());
+    }
+
+    #[test]
+    fn link_transfer_cost_matches_dualdie_model() {
+        // The moved EthLink keeps the dual-die solver's exact cost model.
+        let l = EthLink::default();
+        assert_eq!(l.latency_ns, 800.0);
+        assert_eq!(l.bw_gbs, 11.0);
+        assert_eq!(l.transfer_ns(0), 800.0);
+        assert!((l.transfer_ns(1100) - 900.0).abs() < 1e-9);
+        assert!(EthLink::backplane().latency_ns > EthLink::onboard().latency_ns);
+        // The one scale→link-class mapping the drivers share.
+        assert_eq!(EthLink::for_dies(1), EthLink::onboard());
+        assert_eq!(EthLink::for_dies(2), EthLink::onboard());
+        assert_eq!(EthLink::for_dies(4), EthLink::backplane());
+    }
+
+    #[test]
+    fn path_lookup_line_vs_ring() {
+        let line = DeviceMesh::new(8, 1, 1, MeshTopology::Line, EthLink::default()).unwrap();
+        assert_eq!(line.path(2, 2), vec![]);
+        assert_eq!(line.path(1, 4), vec![(1, 2), (2, 3), (3, 4)]);
+        assert_eq!(line.path(4, 1), vec![(1, 2), (2, 3), (3, 4)]);
+        assert_eq!(line.path_len(0, 7), 7);
+
+        let ring = DeviceMesh::new(8, 1, 1, MeshTopology::Ring, EthLink::default()).unwrap();
+        // 0 → 7 goes over the wrap link.
+        assert_eq!(ring.path(0, 7), vec![(0, 7)]);
+        assert_eq!(ring.path_len(1, 6), 3); // 1→0→7→6
+        assert!(ring.path(1, 6).contains(&(0, 7)));
+        // Shorter arcs keep the chain, and every pair is no longer than on
+        // the line.
+        assert_eq!(ring.path(1, 3), vec![(1, 2), (2, 3)]);
+        for a in 0..8 {
+            for b in 0..8 {
+                assert!(ring.path_len(a, b) <= line.path_len(a, b));
+            }
+        }
+    }
+
+    #[test]
+    fn die_of_core_follows_x_stacking() {
+        let m = DeviceMesh::new(4, 2, 3, MeshTopology::Line, EthLink::default()).unwrap();
+        assert_eq!(m.die_of_core(0), 0);
+        assert_eq!(m.die_of_core(m.cores_per_die() - 1), 0);
+        assert_eq!(m.die_of_core(m.cores_per_die()), 1);
+        assert_eq!(m.die_of_core(m.n_cores() - 1), 3);
+    }
+
+    #[test]
+    fn budget_checks_per_die() {
+        use crate::arch::DataFormat;
+        let m = DeviceMesh::n300(1, 1).unwrap();
+        assert!(m.validate_budgets(164, DataFormat::Bf16, true).is_ok());
+        // §7.2 per-die SRAM ceiling is enforced through the mesh.
+        assert!(m.validate_budgets(165, DataFormat::Bf16, true).is_err());
+    }
+}

@@ -1,14 +1,16 @@
-//! Device model: Tensix cores (SRAM, circular buffers), DRAM, and the
-//! compute grid (paper §3).
+//! Device model: Tensix cores (SRAM, circular buffers), DRAM, the compute
+//! grid (paper §3), and the multi-die Ethernet mesh (§8).
 
 pub mod cb;
 pub mod core;
 pub mod dram;
 pub mod grid;
+pub mod mesh;
 pub mod sram;
 
 pub use cb::CircularBuffer;
 pub use core::{Coord, CoreCounters, TensixCore};
 pub use dram::Dram;
 pub use grid::TensixGrid;
+pub use mesh::{DeviceMesh, EthLink, MeshTopology};
 pub use sram::Sram;

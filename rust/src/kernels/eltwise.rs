@@ -67,6 +67,7 @@ pub fn lower_eltwise(
             tiles_per_core: tiles,
             sram_bytes: 3 * tiles * df.tile_bytes(),
             traffic_bytes: dram_bytes,
+            eth_bytes: 0,
         })
 }
 
@@ -102,6 +103,7 @@ pub fn lower_block_op(
             tiles_per_core: tiles,
             sram_bytes: 3 * tiles * df.tile_bytes(),
             traffic_bytes: 0,
+            eth_bytes: 0,
         })
 }
 

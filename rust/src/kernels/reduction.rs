@@ -152,6 +152,7 @@ pub fn lower_dot_as(
             // Two input vectors + the partial-result tile.
             sram_bytes: (2 * cfg.tiles_per_core + 1) * cfg.df.tile_bytes(),
             traffic_bytes: (n_cores.saturating_sub(1) as u64) * (payload + 32),
+            eth_bytes: 0,
         })
 }
 

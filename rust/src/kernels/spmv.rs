@@ -371,27 +371,15 @@ impl SpmvOperator {
                 tiles_per_core: self.part.tiles_per_core,
                 sram_bytes: self.sram_bytes,
                 traffic_bytes: self.traffic().total(),
+                eth_bytes: 0,
             })
     }
 
-    /// One SpMV application: values through `engine`, timing by lowering
-    /// to a program and executing it through the host queue.
-    pub fn apply(
-        &self,
-        grid: &TensixGrid,
-        x: &[CoreBlock],
-        engine: &dyn ComputeEngine,
-        cost: &CostModel,
-    ) -> Result<(Vec<CoreBlock>, SpmvTiming)> {
+    /// The value half of one SpMV application — no grid or timing
+    /// involved, so it also serves mesh solvers whose logical core grid
+    /// exceeds a single die's sub-grid ceiling.
+    pub fn apply_values(&self, x: &[CoreBlock], engine: &dyn ComputeEngine) -> Result<Vec<CoreBlock>> {
         let n_cores = self.part.n_cores();
-        if grid.rows != self.part.grid_rows || grid.cols != self.part.grid_cols {
-            return Err(SimError::BadProblem {
-                what: format!(
-                    "grid {}x{} does not match partition {}x{}",
-                    grid.rows, grid.cols, self.part.grid_rows, self.part.grid_cols
-                ),
-            });
-        }
         if x.len() != n_cores {
             return Err(SimError::BadProblem {
                 what: format!("operand has {} blocks for {n_cores} cores", x.len()),
@@ -410,12 +398,6 @@ impl SpmvOperator {
                 });
             }
         }
-        // ---- timing: lower → enqueue → collect --------------------------
-        let program = self.lower(cost);
-        let mut queue = HostQueue::new(cost.calib.clone());
-        let out = queue.run(&program, cost, 0.0, &mut Profiler::disabled())?;
-
-        // ---- values -----------------------------------------------------
         let xg = self.part.dist_to_global(x);
         let mut values = Vec::with_capacity(n_cores);
         for core in 0..n_cores {
@@ -435,6 +417,147 @@ impl SpmvOperator {
             }
             values.push(y.unwrap_or_else(|| CoreBlock::zeros(df, tiles)));
         }
+        Ok(values)
+    }
+
+    /// Lower one mesh-wide SpMV application to per-die programs (one per
+    /// die, all on the per-die sub-grid): die-local gather sends stay NoC
+    /// sends (remapped to die-local coordinates), references crossing a
+    /// die boundary move to an Ethernet halo phase derived from the
+    /// partition's [`crate::sparse::DieCutPlan`] and routed over the mesh
+    /// topology. Every program carries the same (mesh-global) Ethernet
+    /// phase — the mesh solver takes the slowest die's time and counts
+    /// the phase once.
+    pub fn lower_mesh(
+        &self,
+        mesh: &crate::device::DeviceMesh,
+        cost: &CostModel,
+    ) -> Result<Vec<Program>> {
+        if self.part.grid_rows != mesh.logical_rows() || self.part.grid_cols != mesh.die_cols {
+            return Err(SimError::BadProblem {
+                what: format!(
+                    "partition {}x{} does not span a {}-die mesh of {}x{} dies",
+                    self.part.grid_rows,
+                    self.part.grid_cols,
+                    mesh.n_dies,
+                    mesh.die_rows,
+                    mesh.die_cols
+                ),
+            });
+        }
+        let df = self.cfg.df;
+        let cut = self.part.die_cut(&self.gather, mesh.n_dies, df)?;
+        let ether = crate::ttm::EtherPhase::halo("spmv-cut", mesh, &cut.flows());
+        let cores_per_die = mesh.cores_per_die();
+        let die_of = |core: usize| core / cores_per_die;
+        let local_coord = |core: usize| {
+            let c = self.part.core_coord(core);
+            crate::device::Coord::new(c.row - die_of(core) * mesh.die_rows, c.col)
+        };
+
+        let mul = cost.tile_op_cycles(self.cfg.unit, df, TileOpKind::EltwiseBinary, PipelineMode::Streamed);
+        let acc = cost.tile_op_cycles(self.cfg.unit, df, TileOpKind::EltwiseBinary, PipelineMode::Dependent);
+        let stats = self.stats();
+        let mut programs = Vec::with_capacity(mesh.n_dies);
+        for die in 0..mesh.n_dies {
+            let base = die * cores_per_die;
+            let mut data_movement = Vec::with_capacity(cores_per_die);
+            let mut intra_bytes = 0u64;
+            for owner in base..base + cores_per_die {
+                let mut queue = SendQueue::default();
+                for consumer in base..base + cores_per_die {
+                    let Some(&cnt) = self.gather.per_core[consumer].get(&owner) else {
+                        continue;
+                    };
+                    let bytes = align32(cnt * df.bytes());
+                    intra_bytes += bytes;
+                    queue.sends.push(NocSend {
+                        src: local_coord(owner),
+                        dst: local_coord(consumer),
+                        bytes,
+                        cold: queue.sends.is_empty(),
+                    });
+                }
+                data_movement.push(queue);
+            }
+
+            let mut riscv_cycles = Vec::with_capacity(cores_per_die);
+            let mut compute_cycles = Vec::with_capacity(cores_per_die);
+            let mut dram_bytes = Vec::with_capacity(cores_per_die);
+            let mut die_rows_owned = 0u64;
+            let mut matrix_bytes = 0u64;
+            for core in base..base + cores_per_die {
+                let padded = self.sells[core].padded_nnz() as u64;
+                let tile_cols = padded.div_ceil(TILE_ELEMS as u64);
+                riscv_cycles.push(2 * cost.zero_fill_cycles(padded));
+                compute_cycles.push(tile_cols * (mul + acc));
+                let core_matrix = self.sells[core].value_bytes(df) + self.sells[core].index_bytes();
+                matrix_bytes += core_matrix;
+                dram_bytes.push(match self.cfg.mode {
+                    SpmvMode::DramStream => core_matrix,
+                    SpmvMode::SramResident => 0,
+                });
+                die_rows_owned += (0..self.part.slots_per_core())
+                    .filter(|&s| self.part.slot_to_global(core, s).is_some())
+                    .count() as u64;
+            }
+
+            let mut program = Program::standard("spmv");
+            for k in &mut program.kernels {
+                k.ct_args.push(("die".to_string(), die.to_string()));
+                k.ct_args.push(("n_dies".to_string(), mesh.n_dies.to_string()));
+                k.ct_args.push(("df".to_string(), df.to_string()));
+                k.ct_args.push(("mode".to_string(), format!("{:?}", self.cfg.mode)));
+                k.ct_args.push(("nnz".to_string(), stats.nnz.to_string()));
+                k.ct_args.push(("padded_nnz".to_string(), stats.padded_nnz.to_string()));
+                k.ct_args.push(("cut_entries".to_string(), cut.cut_entries().to_string()));
+            }
+            programs.push(
+                program
+                    .with_work(Workload {
+                        grid: (mesh.die_rows, mesh.die_cols),
+                        data_movement,
+                        dram_bytes,
+                        riscv_cycles,
+                        compute_cycles,
+                        ether: ether.clone(),
+                        ..Workload::default()
+                    })
+                    .with_footprint(Footprint {
+                        tiles_per_core: self.part.tiles_per_core,
+                        sram_bytes: self.sram_bytes,
+                        traffic_bytes: matrix_bytes + intra_bytes + die_rows_owned * df.bytes() as u64,
+                        eth_bytes: cut.cut_bytes(),
+                    }),
+            );
+        }
+        Ok(programs)
+    }
+
+    /// One SpMV application: values through `engine`, timing by lowering
+    /// to a program and executing it through the host queue.
+    pub fn apply(
+        &self,
+        grid: &TensixGrid,
+        x: &[CoreBlock],
+        engine: &dyn ComputeEngine,
+        cost: &CostModel,
+    ) -> Result<(Vec<CoreBlock>, SpmvTiming)> {
+        if grid.rows != self.part.grid_rows || grid.cols != self.part.grid_cols {
+            return Err(SimError::BadProblem {
+                what: format!(
+                    "grid {}x{} does not match partition {}x{}",
+                    grid.rows, grid.cols, self.part.grid_rows, self.part.grid_cols
+                ),
+            });
+        }
+        // ---- values -----------------------------------------------------
+        let values = self.apply_values(x, engine)?;
+
+        // ---- timing: lower → enqueue → collect --------------------------
+        let program = self.lower(cost);
+        let mut queue = HostQueue::new(cost.calib.clone());
+        let out = queue.run(&program, cost, 0.0, &mut Profiler::disabled())?;
 
         Ok((
             values,
@@ -595,6 +718,60 @@ mod tests {
         let (_, t) = op.apply(&grid, &x, &e, &cost).unwrap();
         assert_eq!(t.bytes, op.gather.bytes(DataFormat::Fp32));
         assert!(t.gather_ns > 0.0 && t.gather_ns < t.compute_ns);
+    }
+
+    #[test]
+    fn mesh_lowering_splits_gather_between_noc_and_ethernet() {
+        use crate::device::{DeviceMesh, EthLink, MeshTopology};
+        let cost = CostModel::default();
+        let op = laplacian_operator(2, 2, 2, DataFormat::Fp32, SpmvMode::SramResident);
+
+        // One die: the mesh lowering degenerates to the single-die one.
+        let single = DeviceMesh::new(1, 2, 2, MeshTopology::Line, EthLink::default()).unwrap();
+        let ps = op.lower_mesh(&single, &cost).unwrap();
+        assert_eq!(ps.len(), 1);
+        assert!(ps[0].work.ether.is_none());
+        assert_eq!(ps[0].work.data_movement, op.lower(&cost).work.data_movement);
+        assert_eq!(ps[0].work.compute_cycles, op.lower(&cost).work.compute_cycles);
+
+        // Two dies: the x-face seam leaves the NoC and rides Ethernet.
+        let mesh = DeviceMesh::new(2, 1, 2, MeshTopology::Line, EthLink::default()).unwrap();
+        let pd = op.lower_mesh(&mesh, &cost).unwrap();
+        assert_eq!(pd.len(), 2);
+        let cut = op
+            .part
+            .die_cut(&op.gather, 2, DataFormat::Fp32)
+            .unwrap();
+        for p in &pd {
+            p.validate().unwrap();
+            assert_eq!(p.work.grid, (1, 2));
+            let eth = p.work.ether.as_ref().expect("seam phase");
+            assert!(eth.overlaps_local);
+            assert_eq!(eth.bytes(), cut.cut_bytes());
+            assert_eq!(p.footprint.eth_bytes, cut.cut_bytes());
+            // NoC sends stay within the die's sub-grid (validate() already
+            // rejects out-of-grid coords; assert the byte split too).
+            let noc_bytes: u64 = p
+                .work
+                .data_movement
+                .iter()
+                .flat_map(|q| q.sends.iter())
+                .map(|s| s.bytes)
+                .sum();
+            assert!(noc_bytes > 0, "E/W faces stay on the NoC");
+        }
+        // NoC + Ethernet together cover exactly the single-die gather.
+        let full: u64 = op.lower(&cost).work.data_movement.iter().flat_map(|q| q.sends.iter()).map(|s| s.bytes).sum();
+        let split: u64 = pd
+            .iter()
+            .flat_map(|p| p.work.data_movement.iter())
+            .flat_map(|q| q.sends.iter())
+            .map(|s| s.bytes)
+            .sum::<u64>()
+            + cut.cut_bytes();
+        assert_eq!(split, full);
+        // Deterministic lowering.
+        assert_eq!(op.lower_mesh(&mesh, &cost).unwrap(), pd);
     }
 
     #[test]

@@ -193,6 +193,7 @@ pub fn lower_stencil(grid: &TensixGrid, cfg: &StencilConfig, cost: &CostModel) -
             // x + result vectors resident per core.
             sram_bytes: 2 * cfg.tiles_per_core * cfg.df.tile_bytes(),
             traffic_bytes: halo_bytes,
+            eth_bytes: 0,
         })
 }
 

@@ -17,12 +17,20 @@
 //! Execution follows one pipeline: every kernel **lowers** to a
 //! [`ttm::Program`] (reader/compute/writer kernel specs + a per-core
 //! [`ttm::Workload`] of NoC sends, RISC-V element loops, compute cycles,
-//! and DRAM staging) and executes through [`ttm::HostQueue::run`], the
-//! single scheduler that owns dispatch overhead, per-phase timing, and
-//! profiler zones. Iterative solvers derive their §7.1 fused-vs-split
-//! launch accounting from a [`ttm::IterSchedule`] over the component
-//! programs ([`ttm::Program::fuse`] checks the §7.2 SRAM budget). To add
-//! a kernel, write a lowering — not a timing path.
+//! DRAM staging, and — on a multi-die mesh — inter-die
+//! [`ttm::EtherPhase`] steps) and executes through
+//! [`ttm::HostQueue::run`], the single scheduler that owns dispatch
+//! overhead, per-phase timing, and profiler zones. Iterative solvers
+//! derive their §7.1 fused-vs-split launch accounting from a
+//! [`ttm::IterSchedule`] over the component programs
+//! ([`ttm::Program::fuse`] checks the §7.2 SRAM budget). To add a
+//! kernel, write a lowering — not a timing path.
+//!
+//! Beyond one die, [`device::DeviceMesh`] models N Ethernet-connected
+//! dies (n150 → n300 → Galaxy; line or ring), and
+//! [`solver::solve_pcg_mesh`] distributes PCG across them with
+//! trajectories bit-identical to the single-die solver — the §8
+//! multi-device future work, built in.
 //! - **Layer 2** (`python/compile/model.py`): per-core compute graphs in
 //!   JAX, AOT-lowered to HLO text artifacts.
 //! - **Layer 1** (`python/compile/kernels/`): Pallas kernels for the

@@ -29,7 +29,7 @@ use wormsim::util::stats::fmt_ns;
 
 const VALUE_KEYS: &[&str] = &[
     "engine", "artifacts", "config", "iters", "seed", "grid", "tiles", "variant", "tol",
-    "pattern", "method", "out", "trace",
+    "pattern", "method", "out", "trace", "dies", "topology",
 ];
 const FLAGS: &[&str] = &["help", "quiet"];
 
@@ -130,6 +130,10 @@ fn cmd_solve(args: &cli::Args) -> Result<(), String> {
     let variant: PcgVariant = args.get_parsed("variant", "bf16")?;
     let (rows, cols) = args.get_grid("grid", (4, 4))?;
     let tiles = args.get_usize("tiles", 16)?;
+    let dies = args.get_usize("dies", 1)?;
+    if dies > 1 {
+        return cmd_solve_mesh(args, &ctx, variant, rows, cols, tiles, dies);
+    }
     let problem = Problem::new(rows, cols, tiles, variant.df());
     let grid = problem.make_grid().map_err(|e| e.to_string())?;
 
@@ -186,6 +190,99 @@ fn cmd_solve(args: &cli::Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Multi-die solve: `--grid RxC` is the *per-die* sub-grid; the domain
+/// stacks along x over `--dies N` dies wired as `--topology line|ring`.
+fn cmd_solve_mesh(
+    args: &cli::Args,
+    ctx: &ExpContext,
+    variant: PcgVariant,
+    rows: usize,
+    cols: usize,
+    tiles: usize,
+    dies: usize,
+) -> Result<(), String> {
+    use wormsim::device::{DeviceMesh, EthLink, MeshTopology};
+    use wormsim::engine::StencilCoeffs;
+    use wormsim::kernels::stencil::{StencilConfig, StencilVariant};
+    use wormsim::solver::Operator;
+
+    let topology: MeshTopology = args.get_parsed("topology", "line")?;
+    let mesh = DeviceMesh::new(dies, rows, cols, topology, EthLink::for_dies(dies))
+        .map_err(|e| e.to_string())?;
+
+    let mut opts = PcgOptions::new(variant);
+    opts.max_iters = args.get_usize("iters", 100)?;
+    opts.tol_abs = args.get_f64("tol", 1e-4)?;
+    opts.dot_pattern = args.get_parsed("pattern", "naive")?;
+    opts.dot_method = match args.get_or("method", "1") {
+        "1" => DotMethod::ReduceThenSend,
+        "2" => DotMethod::SendTiles,
+        m => return Err(format!("--method expects 1 or 2, got '{m}'")),
+    };
+    let df = variant.df();
+    let stencil_cfg = StencilConfig {
+        df,
+        unit: variant.unit(),
+        tiles_per_core: tiles,
+        variant: StencilVariant::FULL,
+        coeffs: StencilCoeffs::LAPLACIAN,
+    };
+    println!(
+        "PCG {} on {dies} x {rows}x{cols}-core dies ({} mesh, {} cores), {tiles} tiles/core, engine {}",
+        variant.label(),
+        topology.label(),
+        mesh.n_cores(),
+        ctx.engine.name()
+    );
+    let b = solver::mesh_dist_random(&mesh, tiles, df, ctx.seed);
+    let mut prof = Profiler::new();
+    let res = solver::solve_pcg_mesh(
+        &mesh,
+        &b,
+        &Operator::Stencil(stencil_cfg),
+        ctx.engine.as_ref(),
+        &ctx.cost,
+        &opts,
+        &mut prof,
+    )
+    .map_err(|e| e.to_string())?;
+    println!(
+        "  {} after {} iterations, residual {:.3e}",
+        if res.converged { "converged" } else { "stopped" },
+        res.iters,
+        res.residual_history.last().copied().unwrap_or(f64::NAN)
+    );
+    println!(
+        "  simulated device time: total {}, per iteration {}",
+        fmt_ns(res.total_ns),
+        fmt_ns(res.per_iter_ns)
+    );
+    if !args.has_flag("quiet") {
+        println!();
+        println!("{}", res.breakdown.render("per-component device time"));
+        println!(
+            "transport split per iteration: compute {}, NoC {}, Ethernet {}, dispatch {}",
+            fmt_ns(res.phases.compute_ns),
+            fmt_ns(res.phases.noc_ns),
+            fmt_ns(res.phases.ether_ns),
+            fmt_ns(res.phases.dispatch_ns)
+        );
+        println!(
+            "launches {} ({:.2}/iter), device gaps {}, Ethernet {} bytes/solve",
+            res.launch.launches,
+            res.launches_per_iter(),
+            fmt_ns(res.launch.gap_ns),
+            res.eth_bytes_total
+        );
+    }
+    if let Some(trace_path) = args.get("trace") {
+        wormsim::profiler::write_chrome_trace(&prof, std::path::Path::new(trace_path))
+            .map_err(|e| format!("cannot write trace {trace_path}: {e}"))?;
+        println!("wrote simulated-time trace to {trace_path}");
+    }
+    Ok(())
+}
+
 fn print_usage() {
     println!(
         "wormsim — Numerical kernels on a simulated Tenstorrent Wormhole\n\n\
@@ -193,7 +290,8 @@ fn print_usage() {
          COMMANDS:\n  \
          info                    platform + architecture summary\n  \
          solve                   run the PCG solver (--grid 8x7 --tiles 64 --variant bf16|fp32\n                          \
-         --iters N --tol X --pattern naive|center --method 1|2)\n  \
+         --iters N --tol X --pattern naive|center --method 1|2)\n                          \
+         multi-die: --dies N --topology line|ring (--grid = per-die sub-grid)\n  \
          figures <id|all>        regenerate paper figures: fig3 fig5 fig6 fig11 fig12a fig12b fig12c fig13\n                          \
          extensions (§8): energy dualdie jacobi ext; solve supports --trace out.json\n  \
          tables <id|all>         regenerate paper tables: t1 t2 t3\n\n\

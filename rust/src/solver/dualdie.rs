@@ -1,59 +1,30 @@
 //! Multi-device scaling (§8 future work): PCG across both Tensix dies of
-//! the n300d.
+//! the n300d — now a thin N=2 wrapper over the general mesh solver.
 //!
 //! The n300d carries two Wormhole dies; §7.2 evaluates one ("future work
-//! will explore full utilization of the n300d"). Dies connect over on-board
-//! Ethernet links (the §3 die grid dedicates cells to Ethernet
-//! management). We extend the solver across two dies by stacking the
-//! domain along x: die 0 owns the top `rows×cols` core grid, die 1 the
-//! bottom, and the seam between them exchanges halos over Ethernet instead
-//! of the NoC. Global reductions reduce per-die, then combine + broadcast
-//! the scalar across the link.
+//! will explore full utilization of the n300d"). Dies connect over
+//! on-board Ethernet links; the solver stacks the domain along x with the
+//! seam exchanged over the link — exactly the [`crate::solver::mesh`]
+//! decomposition at N = 2, which is what runs underneath. The public
+//! [`DualDieOptions`]/[`DualDieResult`] types are unchanged, and
+//! [`EthLink`] is re-exported from its new home in the device layer
+//! ([`crate::device::mesh`]) for compatibility.
 //!
 //! Values are exact (the seam halos are stitched from the neighbor die's
-//! blocks); timing adds the Ethernet seam costs to the per-die NoC/compute
-//! times.
+//! blocks — bit-identical to a single logical grid of twice the rows);
+//! timing adds the Ethernet seam costs to the per-die NoC/compute times.
 
-use crate::arch::constants::{SRAM_BYTES, SRAM_RESERVE_FUSED};
+pub use crate::device::mesh::EthLink;
+
 use crate::arch::DataFormat;
-use crate::device::TensixGrid;
-use crate::engine::{ComputeEngine, CoreBlock, Halos, StencilCoeffs};
-use crate::kernels::eltwise::block_op_ns;
-use crate::kernels::reduction::{run_dot, DotConfig, DotMethod};
+use crate::device::{DeviceMesh, MeshTopology};
+use crate::engine::{ComputeEngine, CoreBlock, StencilCoeffs};
 use crate::kernels::stencil::{StencilConfig, StencilVariant};
-use crate::noc::RoutePattern;
 use crate::profiler::{Breakdown, Profiler};
-use crate::solver::problem::Problem;
+use crate::solver::mesh::solve_pcg_mesh;
+use crate::solver::pcg::{Operator, PcgOptions, PcgVariant};
 use crate::timing::cost::CostModel;
 use crate::timing::SimNs;
-use crate::ttm::{HostQueue, IterSchedule};
-
-/// On-board Ethernet link between the two dies.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct EthLink {
-    /// One-way message latency, ns (Ethernet MAC + SerDes; orders of
-    /// magnitude above a NoC hop).
-    pub latency_ns: f64,
-    /// Usable bandwidth, GB/s (2×100 GbE per die pair ≈ 25 GB/s raw; we
-    /// default to one link's usable rate).
-    pub bw_gbs: f64,
-}
-
-impl Default for EthLink {
-    fn default() -> Self {
-        Self {
-            latency_ns: 800.0,
-            bw_gbs: 11.0,
-        }
-    }
-}
-
-impl EthLink {
-    /// Transfer time for `bytes` over the link.
-    pub fn transfer_ns(&self, bytes: u64) -> f64 {
-        self.latency_ns + bytes as f64 / self.bw_gbs
-    }
-}
 
 #[derive(Debug, Clone)]
 pub struct DualDieOptions {
@@ -90,48 +61,9 @@ pub struct DualDieResult {
 /// cores followed by die 1's (row-major within each die).
 pub type DualVector = Vec<CoreBlock>;
 
-/// The distributed stencil over both dies: per-core halos gathered from
-/// the (2·rows)×cols logical grid; the seam rows exchange across dies.
-fn dual_stencil_values(
-    rows: usize,
-    cols: usize,
-    nz: usize,
-    x: &[CoreBlock],
-    engine: &dyn ComputeEngine,
-    coeffs: StencilCoeffs,
-) -> crate::Result<Vec<CoreBlock>> {
-    let total_rows = 2 * rows;
-    assert_eq!(x.len(), total_rows * cols);
-    let idx = |r: usize, c: usize| r * cols + c;
-    let mut out = Vec::with_capacity(x.len());
-    for r in 0..total_rows {
-        for c in 0..cols {
-            let nb = |dr: isize, dc: isize| -> Option<&CoreBlock> {
-                let rr = r as isize + dr;
-                let cc = c as isize + dc;
-                if rr < 0 || cc < 0 || rr >= total_rows as isize || cc >= cols as isize {
-                    None
-                } else {
-                    Some(&x[idx(rr as usize, cc as usize)])
-                }
-            };
-            let halos = Halos::gather(nb(-1, 0), nb(1, 0), nb(0, -1), nb(0, 1));
-            out.push(engine.stencil_apply(&x[idx(r, c)], &halos, coeffs)?);
-        }
-    }
-    let _ = nz;
-    Ok(out)
-}
-
-/// Per-iteration Ethernet seam bytes for the stencil halo: `cols` core
-/// pairs each exchange one 16-element row per tile in both directions
-/// (the seam is an x-boundary, so it is the cheap N/S row exchange — 32B
-/// per tile at BF16).
-fn seam_halo_bytes(cols: usize, nz: usize, df: DataFormat) -> u64 {
-    2 * (cols as u64) * (nz as u64) * (16 * df.bytes()) as u64
-}
-
 /// Dual-die fused-BF16 PCG (values exact, timing = die-local + seam).
+/// Thin wrapper: builds the two-die line mesh and runs the general
+/// distributed solver.
 pub fn solve_pcg_dualdie(
     rows: usize,
     cols: usize,
@@ -141,199 +73,38 @@ pub fn solve_pcg_dualdie(
     cost: &CostModel,
     opts: &DualDieOptions,
 ) -> crate::Result<DualDieResult> {
-    let df = DataFormat::Bf16;
-    let unit = crate::arch::ComputeUnit::Fpu;
-    // Validate the per-die sub-grid + capacity with the single-die rules.
-    let per_die = Problem::new(rows, cols, tiles, df);
-    per_die.validate_capacity(true)?;
-    let _ = TensixGrid::new(rows, cols)?;
+    let mesh = DeviceMesh::new(2, rows, cols, MeshTopology::Line, opts.eth)?;
+    assert_eq!(b.len(), mesh.n_cores(), "one block per core across both dies");
 
-    let n_blocks = 2 * rows * cols;
-    assert_eq!(b.len(), n_blocks, "one block per core across both dies");
-    let coeffs = StencilCoeffs::LAPLACIAN;
-
-    // --- per-iteration timing: the same per-die component programs the
-    // single-die fused PCG lowers, dispatched through one scheduler ------
     let stencil_cfg = StencilConfig {
-        df,
-        unit,
+        df: DataFormat::Bf16,
+        unit: crate::arch::ComputeUnit::Fpu,
         tiles_per_core: tiles,
         variant: StencilVariant::FULL,
-        coeffs,
+        coeffs: StencilCoeffs::LAPLACIAN,
     };
-    // Die-local stencil: the single-die operator lowering over a per-die
-    // grid (NoC halo schedule and outer-boundary zero fills included);
-    // timing is data-independent, so one host-queue run covers every
-    // iteration.
-    let die_grid = TensixGrid::new(rows, cols)?;
-    let stencil_prog = crate::solver::pcg::Operator::Stencil(stencil_cfg).lower(&die_grid, cost);
-    let mut scratch = HostQueue::new(cost.calib.clone());
-    let die_out = scratch.run(&stencil_prog, cost, 0.0, &mut Profiler::disabled())?;
-    // Ethernet seam: halo bytes + one scalar combine + one broadcast per
-    // global reduction. The seam exchange overlaps the NoC halo phase, so
-    // the stencil takes whichever finishes later.
-    let seam_halo_ns = opts.eth.transfer_ns(seam_halo_bytes(cols, tiles, df));
-    let seam_scalar_ns = opts.eth.transfer_ns(32);
-    let spmv_ns = die_out.device_ns().max(die_out.compute_ns + seam_halo_ns);
-
-    let dot_cfg = DotConfig {
-        method: DotMethod::ReduceThenSend,
-        pattern: RoutePattern::Naive,
-        df,
-        unit,
-        tiles_per_core: tiles,
-    };
-    let axpy_ns = block_op_ns(
-        cost,
-        unit,
-        df,
-        crate::timing::cost::TileOpKind::EltwiseBinary,
-        tiles,
-        crate::timing::cost::PipelineMode::Streamed,
-    );
-    let scale_ns = block_op_ns(
-        cost,
-        unit,
-        df,
-        crate::timing::cost::TileOpKind::EltwiseUnary,
-        tiles,
-        crate::timing::cost::PipelineMode::Streamed,
-    );
-
-    // The dual-die solve is the fused-BF16 variant (§7.1): its launch and
-    // phase-gap accounting comes from the same scheduler — and the same
-    // component programs and iteration order — as the single-die solver:
-    // one enqueue per solve, a §7.3 device-side gap per boundary.
-    let mut component_programs = vec![stencil_prog];
-    component_programs.extend(crate::solver::pcg::lower_pcg_support_components(
-        rows,
-        cols,
-        &dot_cfg,
-        unit,
-        df,
-        tiles,
-        crate::timing::cost::TileOpKind::EltwiseUnary,
-        cost,
-    ));
-    let sched = IterSchedule::fused(
-        "pcg_dualdie_fused",
-        component_programs,
-        &crate::solver::pcg::PCG_ITERATION,
-        SRAM_BYTES - SRAM_RESERVE_FUSED,
-    )?;
-    let mut queue = HostQueue::new(cost.calib.clone());
+    let mut popts = PcgOptions::new(PcgVariant::FusedBf16);
+    popts.max_iters = opts.max_iters;
+    popts.tol_abs = opts.tol_abs;
     let mut prof = Profiler::disabled();
-
-    // --- the solve (values on the logical 2R×C grid) --------------------
-    let idx_all = |v: &DualVector| -> (Vec<CoreBlock>, Vec<CoreBlock>) {
-        (v[..rows * cols].to_vec(), v[rows * cols..].to_vec())
-    };
-    let inv_diag = 1.0 / coeffs.center;
-    let mut x: DualVector = (0..n_blocks).map(|_| CoreBlock::zeros(df, tiles)).collect();
-    let mut r: DualVector = b.to_vec();
-    let mut z: DualVector = r
-        .iter()
-        .map(|blk| engine.scale(blk, inv_diag))
-        .collect::<crate::Result<_>>()?;
-    let mut p = z.clone();
-
-    // Distributed dot across both dies: per-die reduce + Ethernet combine.
-    let dual_dot = |a: &DualVector,
-                    bb: &DualVector,
-                    engine: &dyn ComputeEngine,
-                    cost: &CostModel|
-     -> crate::Result<(f64, SimNs)> {
-        let (a0, a1) = idx_all(a);
-        let (b0, b1) = idx_all(bb);
-        let d0 = run_dot(rows, cols, &dot_cfg, &a0, &b0, engine, cost)?;
-        let d1 = run_dot(rows, cols, &dot_cfg, &a1, &b1, engine, cost)?;
-        // Dies reduce concurrently; then one scalar hop + one broadcast.
-        let t = d0.total_ns.max(d1.total_ns) + 2.0 * seam_scalar_ns;
-        Ok((d0.value as f64 + d1.value as f64, t))
-    };
-
-    let mut breakdown = Breakdown::new();
-    let mut now = 0.0f64;
-    let mut eth_total = 0.0f64;
-    let mut delta = {
-        let (v, t) = dual_dot(&r, &z, engine, cost)?;
-        now += t;
-        v
-    };
-    // One enqueue for the whole dual-die solve; the §7.3 device-side
-    // phase gaps come from the scheduler at every component boundary.
-    now = sched.begin(&mut queue, now)?;
-    macro_rules! component {
-        ($name:expr, $ns:expr) => {{
-            let ns: SimNs = $ns;
-            now = sched.component(&mut queue, &mut prof, $name, ns, now)?;
-            breakdown.add($name, ns);
-        }};
-    }
-    let mut history = Vec::new();
-    let mut iters = 0;
-    let mut converged = false;
-    while iters < opts.max_iters {
-        iters += 1;
-        let q = dual_stencil_values(rows, cols, tiles, &p, engine, coeffs)?;
-        component!("spmv", spmv_ns);
-        eth_total += seam_halo_ns;
-
-        let (pq, t) = dual_dot(&p, &q, engine, cost)?;
-        component!("dot", t);
-        eth_total += 2.0 * seam_scalar_ns;
-        if pq == 0.0 || !pq.is_finite() {
-            break;
-        }
-        let alpha = (delta / pq) as f32;
-        for (xi, pi) in x.iter_mut().zip(&p) {
-            engine.axpy_into(xi, alpha, pi)?;
-        }
-        component!("axpy", axpy_ns);
-        for (ri, qi) in r.iter_mut().zip(&q) {
-            engine.axpy_into(ri, -alpha, qi)?;
-        }
-        component!("axpy", axpy_ns);
-
-        let (rr, t) = dual_dot(&r, &r, engine, cost)?;
-        component!("norm", t);
-        eth_total += 2.0 * seam_scalar_ns;
-        let rnorm = rr.max(0.0).sqrt();
-        history.push(rnorm);
-        if rnorm <= opts.tol_abs {
-            converged = true;
-            break;
-        }
-
-        z = r
-            .iter()
-            .map(|blk| engine.scale(blk, inv_diag))
-            .collect::<crate::Result<_>>()?;
-        component!("precond", scale_ns);
-        let (dn, t) = dual_dot(&r, &z, engine, cost)?;
-        component!("dot", t);
-        eth_total += 2.0 * seam_scalar_ns;
-        if delta == 0.0 {
-            break;
-        }
-        let beta = (dn / delta) as f32;
-        delta = dn;
-        for (pi, zi) in p.iter_mut().zip(&z) {
-            *pi = engine.axpy(zi, beta, pi)?;
-        }
-        component!("axpy", axpy_ns);
-    }
-
-    breakdown.iterations = iters as u64;
+    let res = solve_pcg_mesh(
+        &mesh,
+        b,
+        &Operator::Stencil(stencil_cfg),
+        engine,
+        cost,
+        &popts,
+        &mut prof,
+    )?;
     Ok(DualDieResult {
-        iters,
-        converged,
-        residual_history: history,
-        per_iter_ns: if iters > 0 { now / iters as f64 } else { 0.0 },
-        total_ns: now,
-        eth_ns_per_iter: if iters > 0 { eth_total / iters as f64 } else { 0.0 },
-        breakdown,
-        launch: queue.stats.clone(),
+        iters: res.iters,
+        converged: res.converged,
+        residual_history: res.residual_history,
+        per_iter_ns: res.per_iter_ns,
+        total_ns: res.total_ns,
+        eth_ns_per_iter: res.eth_ns_per_iter,
+        breakdown: res.breakdown,
+        launch: res.launch,
     })
 }
 
@@ -374,11 +145,14 @@ mod tests {
         // The dual-die stencil over a 2·2×2 logical grid must equal the
         // single-grid stencil on a 4×2 TensixGrid (values don't care which
         // wires carried the halos).
-        use crate::kernels::stencil::{run_stencil, StencilConfig, StencilVariant};
+        use crate::device::TensixGrid;
+        use crate::kernels::stencil::run_stencil;
         let e = NativeEngine::new();
         let cost = CostModel::default();
         let b = dual_random(2, 2, 3, 7);
-        let dual = dual_stencil_values(2, 2, 3, &b, &e, StencilCoeffs::LAPLACIAN).unwrap();
+        let dual =
+            crate::solver::mesh::mesh_stencil_values(4, 2, &b, &e, StencilCoeffs::LAPLACIAN, true)
+                .unwrap();
 
         let grid = TensixGrid::new(4, 2).unwrap();
         let cfg = StencilConfig {
@@ -420,5 +194,41 @@ mod tests {
         let b = dual_random(1, 1, 165, 1);
         let opts = DualDieOptions::default();
         assert!(solve_pcg_dualdie(1, 1, 165, &b, &e, &cost, &opts).is_err());
+    }
+
+    #[test]
+    fn wrapper_equals_mesh_n2() {
+        // The wrapper is a pure re-labeling of the N=2 mesh solve: same
+        // trajectory, same timing, same launch accounting.
+        use crate::device::{DeviceMesh, MeshTopology};
+        use crate::solver::mesh::solve_pcg_mesh;
+        use crate::solver::pcg::{Operator, PcgOptions, PcgVariant};
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let b = dual_random(2, 2, 4, 11);
+        let mut opts = DualDieOptions::default();
+        opts.max_iters = 6;
+        opts.tol_abs = 0.0;
+        let wrapped = solve_pcg_dualdie(2, 2, 4, &b, &e, &cost, &opts).unwrap();
+
+        let mesh = DeviceMesh::new(2, 2, 2, MeshTopology::Line, opts.eth).unwrap();
+        let mut popts = PcgOptions::new(PcgVariant::FusedBf16);
+        popts.max_iters = 6;
+        popts.tol_abs = 0.0;
+        let cfg = StencilConfig {
+            df: DataFormat::Bf16,
+            unit: crate::arch::ComputeUnit::Fpu,
+            tiles_per_core: 4,
+            variant: StencilVariant::FULL,
+            coeffs: StencilCoeffs::LAPLACIAN,
+        };
+        let mut prof = Profiler::disabled();
+        let mesh_res =
+            solve_pcg_mesh(&mesh, &b, &Operator::Stencil(cfg), &e, &cost, &popts, &mut prof)
+                .unwrap();
+        assert_eq!(wrapped.residual_history, mesh_res.residual_history);
+        assert_eq!(wrapped.total_ns, mesh_res.total_ns);
+        assert_eq!(wrapped.eth_ns_per_iter, mesh_res.eth_ns_per_iter);
+        assert_eq!(wrapped.launch, mesh_res.launch);
     }
 }

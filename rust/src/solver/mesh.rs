@@ -1,0 +1,608 @@
+//! Distributed PCG over an N-die [`DeviceMesh`] (§8 multi-device
+//! scaling) — the generalization of the old two-die special case.
+//!
+//! The domain stacks along x: die `d` owns logical core rows
+//! `[d·die_rows, (d+1)·die_rows)`, so the mesh-wide vector is the plain
+//! concatenation of per-die [`DistVector`] blocks in die order. Values
+//! are computed over that logical grid exactly as the single-die solver
+//! would — the same stencil stitching, the same canonical dot
+//! accumulation order — which is why an N-die trajectory is
+//! **bit-identical** to the single-die trajectory on the same problem
+//! (pinned by `tests/prop_mesh.rs`). Only *where the wires run* changes:
+//!
+//! - the seam halo between adjacent dies rides Ethernet instead of the
+//!   NoC — an overlapping [`crate::ttm::EtherPhase`] on the lowered
+//!   "spmv" program;
+//! - each dot product reduces per-die over the NoC tree, then combines +
+//!   broadcasts the scalar across the mesh — an appended `EtherPhase` on
+//!   the "dot"/"norm" programs (chain on a line, both-ways broadcast on a
+//!   ring).
+//!
+//! Both [`Operator::Stencil`] (per-die stencil lowering + analytic seam)
+//! and [`Operator::Sparse`] (per-die program slices + the partition's
+//! [`crate::sparse::DieCutPlan`]) are supported, under the same
+//! [`IterSchedule`]-derived fused/split launch accounting as the
+//! single-die solver: the host enqueues one mesh-wide program per
+//! component dispatch (split) or one per solve (fused), independent of N.
+
+use std::collections::BTreeMap;
+
+use crate::arch::constants::{SRAM_BYTES, SRAM_RESERVE_FUSED};
+use crate::device::DeviceMesh;
+use crate::engine::{ComputeEngine, CoreBlock, Halos, StencilCoeffs};
+use crate::kernels::eltwise::lower_block_op;
+use crate::kernels::reduction::{lower_dot_as, DotConfig};
+use crate::profiler::{Breakdown, Profiler};
+use crate::solver::pcg::{Operator, PcgOptions, Precond, PCG_ITERATION};
+use crate::solver::problem::DistVector;
+use crate::timing::cost::{CostModel, PipelineMode, TileOpKind};
+use crate::timing::SimNs;
+use crate::ttm::{EtherPhase, HostQueue, IterSchedule, LaunchStats, Program, ProgramOutcome};
+
+/// Per-iteration device time split by transport — the
+/// compute/NoC/Ethernet/dispatch view of the strong-scaling sweep.
+/// Compute and communication phases can overlap (the seam halo hides
+/// under the stencil compute), so the parts may sum past the critical
+/// path.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MeshPhaseBreakdown {
+    /// DRAM staging + RISC-V element loops + compute pipeline (slowest
+    /// die), per iteration.
+    pub compute_ns: SimNs,
+    /// NoC data movement + reduction tree + broadcast, per iteration.
+    pub noc_ns: SimNs,
+    /// Inter-die Ethernet phases, per iteration.
+    pub ether_ns: SimNs,
+    /// Host launches, fused-kernel gaps, and residual readbacks, per
+    /// iteration.
+    pub dispatch_ns: SimNs,
+}
+
+#[derive(Debug, Clone)]
+pub struct MeshPcgResult {
+    pub x: DistVector,
+    pub iters: usize,
+    pub converged: bool,
+    pub residual_history: Vec<f64>,
+    pub total_ns: SimNs,
+    pub per_iter_ns: SimNs,
+    /// Per-iteration Ethernet time (seam halo + scalar all-reduces).
+    pub eth_ns_per_iter: SimNs,
+    /// Total bytes moved over Ethernet links during the solve.
+    pub eth_bytes_total: u64,
+    /// Per-component device time (the Fig-13 view).
+    pub breakdown: Breakdown,
+    /// Per-iteration transport split (compute / NoC / Ethernet / dispatch).
+    pub phases: MeshPhaseBreakdown,
+    pub launch: LaunchStats,
+}
+
+impl MeshPcgResult {
+    /// Modeled host enqueues per iteration (§7.1 accounting; independent
+    /// of the die count — the host dispatches mesh-wide programs).
+    pub fn launches_per_iter(&self) -> f64 {
+        self.launch.launches as f64 / self.iters.max(1) as f64
+    }
+}
+
+/// The distributed stencil over the mesh's logical `(N·rows)×cols` core
+/// grid: per-core halos gathered from the full logical grid, so the seam
+/// rows stitch across dies — values identical to a single grid of the
+/// same shape, no matter which wires carried the halos.
+pub(crate) fn mesh_stencil_values(
+    logical_rows: usize,
+    cols: usize,
+    x: &[CoreBlock],
+    engine: &dyn ComputeEngine,
+    coeffs: StencilCoeffs,
+    halo_exchange: bool,
+) -> crate::Result<Vec<CoreBlock>> {
+    assert_eq!(x.len(), logical_rows * cols, "one block per logical core");
+    let idx = |r: usize, c: usize| r * cols + c;
+    let mut out = Vec::with_capacity(x.len());
+    for r in 0..logical_rows {
+        for c in 0..cols {
+            let nb = |dr: isize, dc: isize| -> Option<&CoreBlock> {
+                let rr = r as isize + dr;
+                let cc = c as isize + dc;
+                if rr < 0 || cc < 0 || rr >= logical_rows as isize || cc >= cols as isize {
+                    None
+                } else {
+                    Some(&x[idx(rr as usize, cc as usize)])
+                }
+            };
+            // The Fig-11 ablation variants apply on the mesh too: without
+            // halo exchange every core computes against zero boundaries,
+            // exactly like `run_stencil`.
+            let halos = if halo_exchange {
+                Halos::gather(nb(-1, 0), nb(1, 0), nb(0, -1), nb(0, 1))
+            } else {
+                Halos::none()
+            };
+            out.push(engine.stencil_apply(&x[idx(r, c)], &halos, coeffs)?);
+        }
+    }
+    Ok(out)
+}
+
+/// One seam direction's bytes between adjacent dies per stencil
+/// application: the N/S row exchange — `cols` core pairs × one 16-element
+/// tile row per z-tile (§6.3's cheap direction; the reason dies stack
+/// along x).
+pub fn seam_bytes_one_way(cols: usize, tiles: usize, df: crate::arch::DataFormat) -> u64 {
+    (cols as u64) * (tiles as u64) * (16 * df.bytes()) as u64
+}
+
+/// Deterministic random mesh-wide right-hand side (one block per logical
+/// core, die-major = logical row-major order).
+pub fn mesh_dist_random(
+    mesh: &DeviceMesh,
+    tiles: usize,
+    df: crate::arch::DataFormat,
+    seed: u64,
+) -> DistVector {
+    let p = crate::solver::problem::Problem::new(mesh.logical_rows(), mesh.die_cols, tiles, df);
+    crate::solver::problem::dist_random(&p, seed)
+}
+
+/// A lowered mesh component: the slowest die's execution outcome (the
+/// component time) for one program name.
+struct MeshComponent {
+    outcome: ProgramOutcome,
+}
+
+impl MeshComponent {
+    fn device_ns(&self) -> SimNs {
+        self.outcome.device_ns()
+    }
+}
+
+/// The lowered per-iteration components of a mesh solve.
+pub struct MeshLowering {
+    /// One representative program per component name — what the host
+    /// enqueues (mesh-wide) per dispatch, and what the fused schedule's
+    /// SRAM check binds on.
+    pub components: Vec<Program>,
+    /// Every per-die "spmv" program (≥ 1); the component time is the
+    /// slowest die's. All carry the same mesh-global Ethernet phase.
+    pub spmv_per_die: Vec<Program>,
+}
+
+/// Lower every per-iteration PCG component for the mesh. Public seam for
+/// the determinism/launch-pin integration tests and the benches.
+pub fn lower_mesh_components(
+    mesh: &DeviceMesh,
+    operator: &Operator<'_>,
+    opts: &PcgOptions,
+    tiles: usize,
+    precond_kind: TileOpKind,
+    cost: &CostModel,
+) -> crate::Result<MeshLowering> {
+    let df = opts.variant.df();
+    let unit = opts.variant.unit();
+    let (rows, cols) = (mesh.die_rows, mesh.die_cols);
+
+    // The matrix apply: per-die lowering + the Ethernet seam.
+    let spmv_per_die: Vec<Program> = match operator {
+        Operator::Stencil(cfg) => {
+            // Every die runs the same per-die stencil program (the die
+            // sub-grid's NoC halo schedule; the seam rides Ethernet).
+            let die_grid = mesh.die_grid()?;
+            let mut p = crate::kernels::stencil::lower_stencil(&die_grid, cfg, cost);
+            p.name = "spmv".to_string();
+            let one_way = seam_bytes_one_way(cols, cfg.tiles_per_core, cfg.df);
+            let flows: Vec<(usize, usize, u64)> = (0..mesh.n_dies.saturating_sub(1))
+                .flat_map(|d| [(d, d + 1, one_way), (d + 1, d, one_way)])
+                .collect();
+            p.work.ether = EtherPhase::halo("halo", mesh, &flows);
+            p.footprint.eth_bytes = p.work.ether.as_ref().map_or(0, |e| e.bytes());
+            vec![p]
+        }
+        Operator::Sparse(op) => op.lower_mesh(mesh, cost)?,
+    };
+    // The schedule keys one program per component name: bind on the
+    // per-die candidate with the largest SRAM working set (they tie for
+    // the stencil; the SpMV footprint is already the global maximum).
+    let spmv = spmv_per_die
+        .iter()
+        .max_by_key(|p| p.footprint.sram_bytes)
+        .cloned()
+        .ok_or_else(|| {
+            crate::SimError::Other("mesh spmv lowering produced no programs".to_string())
+        })?;
+
+    let dot_cfg = DotConfig {
+        method: opts.dot_method,
+        pattern: opts.dot_pattern,
+        df,
+        unit,
+        tiles_per_core: tiles,
+    };
+    let allreduce = EtherPhase::scalar_allreduce(mesh);
+    let with_allreduce = |mut p: Program| {
+        p.work.ether = allreduce.clone();
+        p.footprint.eth_bytes = p.work.ether.as_ref().map_or(0, |e| e.bytes());
+        p
+    };
+    let components = vec![
+        spmv,
+        with_allreduce(lower_dot_as("dot", rows, cols, &dot_cfg, cost)),
+        with_allreduce(lower_dot_as("norm", rows, cols, &dot_cfg, cost)),
+        lower_block_op(
+            "axpy",
+            rows,
+            cols,
+            cost,
+            unit,
+            df,
+            TileOpKind::EltwiseBinary,
+            tiles,
+            PipelineMode::Streamed,
+        ),
+        lower_block_op(
+            "precond",
+            rows,
+            cols,
+            cost,
+            unit,
+            df,
+            precond_kind,
+            tiles,
+            PipelineMode::Streamed,
+        ),
+    ];
+    Ok(MeshLowering {
+        components,
+        spmv_per_die,
+    })
+}
+
+/// Solve `A x = b` with PCG distributed over the mesh. Values are
+/// bit-identical to [`crate::solver::solve_operator`] on the same
+/// logical problem; timing re-routes the seam and the scalar combines
+/// over Ethernet. `b` holds one block per logical core, die-major.
+pub fn solve_pcg_mesh(
+    mesh: &DeviceMesh,
+    b: &DistVector,
+    operator: &Operator<'_>,
+    engine: &dyn ComputeEngine,
+    cost: &CostModel,
+    opts: &PcgOptions,
+    profiler: &mut Profiler,
+) -> crate::Result<MeshPcgResult> {
+    let fused = opts.fused();
+    let df = opts.variant.df();
+    let logical_rows = mesh.logical_rows();
+    let cols = mesh.die_cols;
+    if b.len() != mesh.n_cores() {
+        return Err(crate::SimError::BadProblem {
+            what: format!(
+                "rhs has {} blocks for {} mesh cores ({} dies x {}x{})",
+                b.len(),
+                mesh.n_cores(),
+                mesh.n_dies,
+                mesh.die_rows,
+                cols
+            ),
+        });
+    }
+    let Some(first) = b.first() else {
+        return Err(crate::SimError::BadProblem {
+            what: "empty right-hand side".to_string(),
+        });
+    };
+    if first.df != df {
+        return Err(crate::SimError::BadProblem {
+            what: format!(
+                "rhs data format {} does not match variant {}",
+                first.df,
+                opts.variant.label()
+            ),
+        });
+    }
+    let tiles = first.nz();
+    // Per-die SRAM/DRAM budgets; the sparse operator performed its own
+    // §7.2-style SRAM validation at construction.
+    if matches!(operator, Operator::Stencil(_)) {
+        mesh.validate_budgets(tiles, df, fused)?;
+    }
+
+    // ---- preconditioner (engine-side; identical to single-die) ----------
+    let precond = operator.jacobi(df, opts.precondition)?;
+    let precond_kind = match &precond {
+        Precond::Scalar(_) => TileOpKind::EltwiseUnary,
+        Precond::PerElement(_) => TileOpKind::EltwiseBinary,
+    };
+
+    // ---- lower + pre-execute the per-iteration components ---------------
+    // Component timing is input-independent, so each program runs once
+    // through a scratch queue (per-role and per-link profiler zones are
+    // emitted here); the iteration loop then advances the clock through
+    // the IterSchedule like the single-die solver. The spmv component runs
+    // every die's program and keeps the slowest — the mesh waits for its
+    // slowest die.
+    let lowering = lower_mesh_components(mesh, operator, opts, tiles, precond_kind, cost)?;
+    let mut components: BTreeMap<String, MeshComponent> = BTreeMap::new();
+    {
+        let mut scratch = HostQueue::new(cost.calib.clone());
+        let mut slowest_spmv: Option<(usize, ProgramOutcome)> = None;
+        for (i, p) in lowering.spmv_per_die.iter().enumerate() {
+            let outcome = scratch.run(p, cost, 0.0, &mut Profiler::disabled())?;
+            if slowest_spmv
+                .as_ref()
+                .map_or(true, |(_, s)| outcome.device_ns() > s.device_ns())
+            {
+                slowest_spmv = Some((i, outcome));
+            }
+        }
+        let (slow_die, outcome) = slowest_spmv.expect("at least one die");
+        // Role and per-link Ethernet zones are emitted once, for the die
+        // that binds the component time (every per-die program carries
+        // the same mesh-global phase — re-emitting it per die would
+        // duplicate the link zones).
+        if profiler.enabled {
+            scratch.run(&lowering.spmv_per_die[slow_die], cost, 0.0, profiler)?;
+        }
+        components.insert("spmv".to_string(), MeshComponent { outcome });
+        for p in &lowering.components {
+            if p.name == "spmv" {
+                continue; // already covered, per die
+            }
+            let outcome = scratch.run(p, cost, 0.0, profiler)?;
+            components.insert(p.name.clone(), MeshComponent { outcome });
+        }
+    }
+    let sched = if fused {
+        IterSchedule::fused(
+            "pcg_mesh_fused",
+            lowering.components.clone(),
+            &PCG_ITERATION,
+            SRAM_BYTES - SRAM_RESERVE_FUSED,
+        )?
+    } else {
+        IterSchedule::split(lowering.components.clone(), &PCG_ITERATION)
+    };
+
+    // ---- the solve (values on the logical grid, identical to the
+    // single-die trajectory) ----------------------------------------------
+    let mesh_dot = |a: &DistVector, bb: &DistVector| -> crate::Result<f32> {
+        // Canonical accumulation order — one partial per logical core,
+        // folded in row-major order, exactly like the single-die
+        // `run_dot`; the chain rides the combine ring die by die.
+        let mut v = 0.0f32;
+        for (x, y) in a.iter().zip(bb) {
+            v += engine.dot_partial(x, y)?;
+        }
+        Ok(v)
+    };
+    let apply = |x: &DistVector| -> crate::Result<DistVector> {
+        match operator {
+            Operator::Stencil(cfg) => mesh_stencil_values(
+                logical_rows,
+                cols,
+                x,
+                engine,
+                cfg.coeffs,
+                cfg.variant.halo_exchange,
+            ),
+            Operator::Sparse(op) => op.apply_values(x, engine),
+        }
+    };
+
+    let mut queue = HostQueue::new(cost.calib.clone());
+    let mut breakdown = Breakdown::new();
+    let mut phases_total = MeshPhaseBreakdown::default();
+    let mut eth_ns_total: SimNs = 0.0;
+    let mut eth_bytes_total: u64 = 0;
+    let mut readbacks: u64 = 0;
+    let mut now: SimNs = 0.0;
+
+    let mut x: DistVector = b.iter().map(|blk| CoreBlock::zeros(blk.df, blk.nz())).collect();
+    let mut r: DistVector = b.to_vec();
+    let mut z = precond.apply(engine, &r)?;
+    let mut p = z.clone();
+    let mut delta = mesh_dot(&r, &z)? as f64;
+
+    now = sched.begin(&mut queue, now)?;
+    macro_rules! component {
+        ($name:expr) => {{
+            let c = &components[$name];
+            let ns = c.device_ns();
+            now = sched.component(&mut queue, profiler, $name, ns, now)?;
+            breakdown.add($name, ns);
+            let o = &c.outcome;
+            phases_total.compute_ns += o.dram_ns + o.riscv_ns + o.compute_ns;
+            phases_total.noc_ns += o.data_movement_ns + o.reduce_ns + o.bcast_ns;
+            phases_total.ether_ns += o.ether_ns;
+            eth_ns_total += o.ether_ns;
+            eth_bytes_total += o.eth_bytes;
+        }};
+    }
+
+    let mut history = Vec::new();
+    let mut iters = 0;
+    let mut converged = false;
+    while iters < opts.max_iters {
+        iters += 1;
+        // q = A p (stencil seam or sparse cut over Ethernet).
+        let q = apply(&p)?;
+        component!("spmv");
+
+        // α = δ / (p·q)
+        let pq_v = mesh_dot(&p, &q)? as f64;
+        component!("dot");
+        if pq_v == 0.0 || !pq_v.is_finite() {
+            break;
+        }
+        let alpha = (delta / pq_v) as f32;
+
+        // x += α p ; r -= α q
+        for (xi, pi) in x.iter_mut().zip(&p) {
+            engine.axpy_into(xi, alpha, pi)?;
+        }
+        component!("axpy");
+        for (ri, qi) in r.iter_mut().zip(&q) {
+            engine.axpy_into(ri, -alpha, qi)?;
+        }
+        component!("axpy");
+
+        // ||r||₂ (absolute, §3.3).
+        let rr = mesh_dot(&r, &r)? as f64;
+        component!("norm");
+        let rnorm = rr.max(0.0).sqrt();
+        history.push(rnorm);
+        now = sched.residual_readback(&mut queue, now);
+        if !sched.is_fused() {
+            readbacks += 1;
+        }
+        if rnorm <= opts.tol_abs {
+            converged = true;
+            break;
+        }
+
+        // z = M⁻¹ r
+        z = precond.apply(engine, &r)?;
+        component!("precond");
+
+        // δ' = r·z ; β = δ'/δ
+        let delta_new = mesh_dot(&r, &z)? as f64;
+        component!("dot");
+        if delta == 0.0 || !delta_new.is_finite() {
+            break;
+        }
+        let beta = (delta_new / delta) as f32;
+        delta = delta_new;
+
+        // p = z + β p
+        for (pi, zi) in p.iter_mut().zip(&z) {
+            *pi = engine.axpy(zi, beta, pi)?;
+        }
+        component!("axpy");
+    }
+
+    breakdown.iterations = iters as u64;
+    let it = iters.max(1) as f64;
+    let dispatch_total = queue.stats.launch_ns
+        + queue.stats.gap_ns
+        + readbacks as f64 * cost.calib.residual_readback_ns;
+    Ok(MeshPcgResult {
+        x,
+        iters,
+        converged,
+        residual_history: history,
+        total_ns: now,
+        per_iter_ns: if iters > 0 { now / it } else { 0.0 },
+        eth_ns_per_iter: if iters > 0 { eth_ns_total / it } else { 0.0 },
+        eth_bytes_total,
+        breakdown,
+        phases: MeshPhaseBreakdown {
+            compute_ns: phases_total.compute_ns / it,
+            noc_ns: phases_total.noc_ns / it,
+            ether_ns: phases_total.ether_ns / it,
+            dispatch_ns: dispatch_total / it,
+        },
+        launch: queue.stats.clone(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::DataFormat;
+    use crate::engine::NativeEngine;
+    use crate::kernels::stencil::{StencilConfig, StencilVariant};
+    use crate::solver::pcg::PcgVariant;
+
+    fn stencil_cfg(df: DataFormat, tiles: usize) -> StencilConfig {
+        StencilConfig {
+            df,
+            unit: crate::arch::ComputeUnit::for_format(df),
+            tiles_per_core: tiles,
+            variant: StencilVariant::FULL,
+            coeffs: StencilCoeffs::LAPLACIAN,
+        }
+    }
+
+    #[test]
+    fn mesh_pcg_reduces_residual_and_counts_ethernet() {
+        let mesh = DeviceMesh::new(
+            4,
+            1,
+            2,
+            crate::device::MeshTopology::Line,
+            crate::device::EthLink::default(),
+        )
+        .unwrap();
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let tiles = 3;
+        let b = mesh_dist_random(&mesh, tiles, DataFormat::Bf16, 5);
+        let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
+        opts.max_iters = 30;
+        opts.tol_abs = 0.0;
+        let mut prof = Profiler::disabled();
+        let res = solve_pcg_mesh(
+            &mesh,
+            &b,
+            &Operator::Stencil(stencil_cfg(DataFormat::Bf16, tiles)),
+            &e,
+            &cost,
+            &opts,
+            &mut prof,
+        )
+        .unwrap();
+        let first = res.residual_history[0];
+        let min = res.residual_history.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(min < 0.2 * first, "first {first} min {min}");
+        assert!(res.eth_ns_per_iter > 0.0);
+        assert!(res.eth_bytes_total > 0);
+        assert_eq!(res.launch.launches, 1, "fused: one enqueue per solve");
+        assert!(res.launch.gap_ns > 0.0);
+        assert!(res.phases.ether_ns > 0.0 && res.phases.compute_ns > 0.0);
+    }
+
+    #[test]
+    fn single_die_mesh_has_no_ethernet() {
+        let mesh = DeviceMesh::n150(2, 2).unwrap();
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let b = mesh_dist_random(&mesh, 2, DataFormat::Fp32, 3);
+        let mut opts = PcgOptions::new(PcgVariant::SplitFp32);
+        opts.max_iters = 5;
+        opts.tol_abs = 0.0;
+        let mut prof = Profiler::disabled();
+        let res = solve_pcg_mesh(
+            &mesh,
+            &b,
+            &Operator::Stencil(stencil_cfg(DataFormat::Fp32, 2)),
+            &e,
+            &cost,
+            &opts,
+            &mut prof,
+        )
+        .unwrap();
+        assert_eq!(res.eth_bytes_total, 0);
+        assert_eq!(res.eth_ns_per_iter, 0.0);
+        assert_eq!(res.launch.launches, 8 * 5, "split: 8 enqueues/iter");
+    }
+
+    #[test]
+    fn capacity_enforced_per_die() {
+        let mesh = DeviceMesh::n300(1, 1).unwrap();
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let b = mesh_dist_random(&mesh, 165, DataFormat::Bf16, 1);
+        let opts = PcgOptions::new(PcgVariant::FusedBf16);
+        let mut prof = Profiler::disabled();
+        assert!(solve_pcg_mesh(
+            &mesh,
+            &b,
+            &Operator::Stencil(stencil_cfg(DataFormat::Bf16, 165)),
+            &e,
+            &cost,
+            &opts,
+            &mut prof,
+        )
+        .is_err());
+    }
+}

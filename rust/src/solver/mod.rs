@@ -2,17 +2,23 @@
 //! the Jacobi preconditioner, and the fused-BF16 / split-FP32 PCG drivers
 //! composed from the numerical kernels. The matrix apply is abstracted
 //! behind [`pcg::Operator`] — the matrix-free stencil and the general
-//! sparse SpMV are interchangeable implementors.
+//! sparse SpMV are interchangeable implementors. [`mesh`] distributes the
+//! same solve over an N-die [`crate::device::DeviceMesh`] (the old
+//! dual-die solver is its N=2 wrapper).
 
 pub mod dualdie;
 pub mod jacobi;
 pub mod jacobi_iter;
+pub mod mesh;
 pub mod pcg;
 pub mod problem;
 
 pub use jacobi::JacobiPreconditioner;
 pub use jacobi_iter::{solve_jacobi, JacobiOptions, JacobiResult};
 pub use dualdie::{solve_pcg_dualdie, DualDieOptions, DualDieResult, EthLink};
+pub use mesh::{
+    mesh_dist_random, solve_pcg_mesh, MeshPcgResult, MeshPhaseBreakdown,
+};
 pub use pcg::{solve, solve_operator, FusionMode, Operator, PcgOptions, PcgResult, PcgVariant};
 pub use problem::{
     apply_laplacian_global, dist_from_fn, dist_random, dist_to_global, dist_zeros, DistVector,

@@ -189,8 +189,9 @@ impl Operator<'_> {
         }
     }
 
-    /// Build the Jacobi preconditioner M = diag(A) for this operator.
-    fn jacobi(&self, df: DataFormat, enabled: bool) -> crate::Result<Precond> {
+    /// Build the Jacobi preconditioner M = diag(A) for this operator
+    /// (shared with the mesh solver).
+    pub(crate) fn jacobi(&self, df: DataFormat, enabled: bool) -> crate::Result<Precond> {
         if !enabled {
             return Ok(Precond::Scalar(JacobiPreconditioner::identity()));
         }
@@ -218,8 +219,8 @@ impl Operator<'_> {
     }
 }
 
-/// Jacobi preconditioner application form.
-enum Precond {
+/// Jacobi preconditioner application form (shared with the mesh solver).
+pub(crate) enum Precond {
     /// Uniform diagonal: z = (1/d) · r (one eltwise scale — §7).
     Scalar(JacobiPreconditioner),
     /// General diagonal: z = r ⊙ inv_diag (one eltwise multiply).
@@ -227,7 +228,7 @@ enum Precond {
 }
 
 impl Precond {
-    fn apply(&self, engine: &dyn ComputeEngine, r: &DistVector) -> crate::Result<DistVector> {
+    pub(crate) fn apply(&self, engine: &dyn ComputeEngine, r: &DistVector) -> crate::Result<DistVector> {
         match self {
             Precond::Scalar(j) => r.iter().map(|blk| j.apply(engine, blk)).collect(),
             Precond::PerElement(inv) => r

@@ -41,5 +41,5 @@ pub mod sell;
 
 pub use csr::CsrMatrix;
 pub use mtx::{banded, circulant_spd, laplacian_3d, parse_mtx, read_mtx, write_mtx};
-pub use partition::{GatherPlan, RowPartition, VectorLayout};
+pub use partition::{DieCutPlan, GatherPlan, RowPartition, VectorLayout};
 pub use sell::{padded_nnz_formula, SellMatrix, SellStats, SELL_SLICE_HEIGHT};

@@ -87,6 +87,46 @@ impl GatherPlan {
     }
 }
 
+/// The inter-die communication plan of a partition spanning an x-stacked
+/// die mesh (derived from a [`GatherPlan`]): every remote `x` reference is
+/// classified die-local (NoC) or cross-die (Ethernet), with per-die-pair
+/// entry and byte totals at the same 32 B per-(owner, consumer) batch
+/// granularity the NoC gather uses.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DieCutPlan {
+    pub n_dies: usize,
+    /// Core-grid rows each die owns.
+    pub rows_per_die: usize,
+    /// (owner die → consumer die) → distinct remote entries crossing the
+    /// cut per SpMV.
+    pub entries: BTreeMap<(usize, usize), u64>,
+    /// (owner die → consumer die) → payload bytes per SpMV.
+    pub bytes: BTreeMap<(usize, usize), u64>,
+    /// Remote entries each die satisfies over its own NoC.
+    pub intra_entries: Vec<u64>,
+}
+
+impl DieCutPlan {
+    /// Total entries crossing any die boundary per SpMV.
+    pub fn cut_entries(&self) -> u64 {
+        self.entries.values().sum()
+    }
+
+    /// Directed (src_die, dst_die, bytes) flows for the Ethernet halo
+    /// phase lowering.
+    pub fn flows(&self) -> Vec<(usize, usize, u64)> {
+        self.bytes
+            .iter()
+            .map(|(&(owner, consumer), &b)| (owner, consumer, b))
+            .collect()
+    }
+
+    /// Total bytes crossing any die boundary per SpMV.
+    pub fn cut_bytes(&self) -> u64 {
+        self.bytes.values().sum()
+    }
+}
+
 impl RowPartition {
     /// Natural-order row blocks: `tiles_per_core` is the smallest tile
     /// count that covers `ceil(n / cores)` rows.
@@ -250,6 +290,57 @@ impl RowPartition {
         })
     }
 
+    /// Split a gather plan by die for an x-stacked mesh of `n_dies` dies
+    /// (die `d` owns core-grid rows `[d·R/N, (d+1)·R/N)`): per-die-pair
+    /// cut entries/bytes for the Ethernet halo, and the per-die remainder
+    /// that stays on the NoC. `df` fixes the byte accounting at the same
+    /// 32 B batch rounding as [`GatherPlan::bytes`].
+    pub fn die_cut(&self, gather: &GatherPlan, n_dies: usize, df: DataFormat) -> Result<DieCutPlan> {
+        if n_dies == 0 || self.grid_rows % n_dies != 0 {
+            return Err(SimError::BadProblem {
+                what: format!(
+                    "{} core-grid rows do not split over {n_dies} dies",
+                    self.grid_rows
+                ),
+            });
+        }
+        if gather.per_core.len() != self.n_cores() {
+            return Err(SimError::BadProblem {
+                what: format!(
+                    "gather plan covers {} cores, partition has {}",
+                    gather.per_core.len(),
+                    self.n_cores()
+                ),
+            });
+        }
+        let rows_per_die = self.grid_rows / n_dies;
+        let cores_per_die = rows_per_die * self.grid_cols;
+        let die_of = |core: usize| core / cores_per_die;
+        let mut entries: BTreeMap<(usize, usize), u64> = BTreeMap::new();
+        let mut bytes: BTreeMap<(usize, usize), u64> = BTreeMap::new();
+        let mut intra_entries = vec![0u64; n_dies];
+        for (consumer, by_owner) in gather.per_core.iter().enumerate() {
+            let cd = die_of(consumer);
+            for (&owner, &cnt) in by_owner {
+                let od = die_of(owner);
+                if od == cd {
+                    intra_entries[cd] += cnt as u64;
+                } else {
+                    *entries.entry((od, cd)).or_insert(0) += cnt as u64;
+                    *bytes.entry((od, cd)).or_insert(0) +=
+                        ((cnt * df.bytes()) as u64).div_ceil(L1_ALIGN as u64) * L1_ALIGN as u64;
+                }
+            }
+        }
+        Ok(DieCutPlan {
+            n_dies,
+            rows_per_die,
+            entries,
+            bytes,
+            intra_entries,
+        })
+    }
+
     /// Check one core's SpMV working set against L1 SRAM using the
     /// [`Sram`] bump allocator. `regions` is a list of (name, bytes)
     /// allocations on top of `reserve` bytes of program/stack/CB space;
@@ -350,6 +441,38 @@ mod tests {
         // Bytes round up to the 32 B beat per pair.
         use crate::arch::DataFormat;
         assert_eq!(plan.bytes(DataFormat::Fp32), plan.messages() * 32);
+    }
+
+    #[test]
+    fn die_cut_of_laplacian_is_the_seam_halo() {
+        use crate::arch::DataFormat;
+        // A 2-die x-stacked split of the 2×2 stencil-aligned partition:
+        // the cut is exactly the §6.1 x-face between core rows — 16·nz
+        // entries per boundary core pair, each direction.
+        let part = RowPartition::stencil_aligned(2, 2, 2).unwrap();
+        let a = laplacian_3d(128, 32, 2);
+        let plan = part.gather_plan(&a).unwrap();
+        let cut = part.die_cut(&plan, 2, DataFormat::Fp32).unwrap();
+        assert_eq!(cut.rows_per_die, 1);
+        assert_eq!(cut.entries[&(0, 1)], 2 * 16 * 2); // two core pairs × 16·nz
+        assert_eq!(cut.entries[&(1, 0)], 2 * 16 * 2);
+        assert_eq!(cut.cut_entries(), 4 * 16 * 2);
+        // Per (owner-core, consumer-core) batch, 32 B-aligned: 32 FP32
+        // entries = 128 B per batch, 2 batches per direction.
+        assert_eq!(cut.bytes[&(0, 1)], 2 * 128);
+        // What does not cross the cut stays on each die's NoC: the E/W
+        // faces (64·nz per core pair).
+        assert_eq!(cut.intra_entries, vec![2 * 64 * 2, 2 * 64 * 2]);
+        assert_eq!(
+            cut.cut_entries() + cut.intra_entries.iter().sum::<u64>(),
+            plan.remote_entries
+        );
+        // One die: everything is NoC-local.
+        let whole = part.die_cut(&plan, 1, DataFormat::Fp32).unwrap();
+        assert_eq!(whole.cut_entries(), 0);
+        assert!(whole.flows().is_empty());
+        // Rows must split evenly over dies.
+        assert!(part.die_cut(&plan, 3, DataFormat::Fp32).is_err());
     }
 
     #[test]

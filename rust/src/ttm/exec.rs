@@ -63,8 +63,14 @@ pub struct ProgramOutcome {
     pub reduce_ns: SimNs,
     /// Result broadcast.
     pub bcast_ns: SimNs,
+    /// Inter-die Ethernet phase duration (whether overlapped with the
+    /// local phase or appended after the reduction).
+    pub ether_ns: SimNs,
     pub messages: u64,
     pub bytes: u64,
+    /// Ethernet link messages/bytes, counted separately from the NoC.
+    pub eth_messages: u64,
+    pub eth_bytes: u64,
 }
 
 impl ProgramOutcome {
@@ -175,6 +181,27 @@ pub fn execute_program(program: &Program, cost: &CostModel, start: SimNs) -> Res
             let bcast_done = noc.multicast(calib, tree.root, &dests, rs.bcast_bytes, reduce_done);
             out.bcast_ns = bcast_done - reduce_done;
             end = bcast_done;
+        }
+    }
+
+    // ---- inter-die Ethernet phase (§8 multi-device) ---------------------
+    if let Some(eth) = &w.ether {
+        let dur = eth.duration_ns();
+        out.ether_ns = dur;
+        out.eth_messages = eth.messages();
+        out.eth_bytes = eth.bytes();
+        if eth.overlaps_local {
+            // The seam exchange overlaps the NoC halo phase and DRAM
+            // staging, but the dependent local phase — the RISC-V element
+            // loop (which assembles seam values on the sparse path) and
+            // the compute pipeline — cannot complete before the seam data
+            // lands: the program takes whichever chain finishes later
+            // (the dual-die seam model, generalized).
+            end = end.max(start + dur + out.riscv_ns + out.compute_ns);
+        } else {
+            // Reductions combine per-die results: strictly after the
+            // local + NoC reduction phases.
+            end += dur;
         }
     }
 

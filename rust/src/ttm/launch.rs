@@ -118,8 +118,9 @@ impl HostQueue {
     }
 }
 
-/// One zone per kernel role: the data-movement kernels span the NoC
-/// phase, the compute kernel the rest of the program.
+/// One zone per kernel role — the data-movement kernels span the NoC
+/// phase, the compute kernel the rest of the program — plus one zone per
+/// Ethernet link the program's inter-die phase loads.
 fn emit_role_zones(program: &Program, out: &ProgramOutcome, profiler: &mut Profiler) {
     if !profiler.enabled {
         return;
@@ -132,6 +133,32 @@ fn emit_role_zones(program: &Program, out: &ProgramOutcome, profiler: &mut Profi
             KernelRole::Compute => ("compute", dm_end, out.end),
         };
         profiler.record(&k.name, scope, s, e);
+    }
+    if let Some(eth) = &program.work.ether {
+        // Per-link zones: rounds are serial; a link's zone spans the
+        // rounds it is loaded in. An overlapping halo phase starts with
+        // the program, a reduction phase ends it.
+        let mut cursor = if eth.overlaps_local {
+            out.start
+        } else {
+            out.end - out.ether_ns
+        };
+        for round in &eth.rounds {
+            let round_ns = round
+                .iter()
+                .map(|h| eth.link.transfer_ns(h.bytes))
+                .fold(0.0f64, f64::max);
+            for hop in round {
+                let (lo, hi) = (hop.src_die.min(hop.dst_die), hop.src_die.max(hop.dst_die));
+                profiler.record(
+                    &format!("{}:eth{lo}-{hi}", eth.label),
+                    "ethernet",
+                    cursor,
+                    cursor + eth.link.transfer_ns(hop.bytes),
+                );
+            }
+            cursor += round_ns;
+        }
     }
 }
 

@@ -15,6 +15,7 @@
 //! [`FusedProgram`] — the §7.1 fused-kernel PCG — subject to an SRAM
 //! capacity check on the binding per-core footprint.
 
+use crate::device::mesh::EthLink;
 use crate::device::Coord;
 use crate::noc::RoutePattern;
 
@@ -88,6 +89,158 @@ pub struct ReduceSpec {
     pub bcast_bytes: u64,
 }
 
+/// One Ethernet transfer between two dies within an inter-die round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EthHop {
+    pub src_die: usize,
+    pub dst_die: usize,
+    pub bytes: u64,
+}
+
+/// The inter-die Ethernet phase of a program (§8 multi-device scaling):
+/// sequential *rounds* of concurrent link transfers, derived by the
+/// lowering from a [`crate::device::DeviceMesh`] topology. Three step
+/// shapes use it:
+///
+/// - **halo exchange** (`overlaps_local`): one round, one hop per loaded
+///   link carrying both directions' seam bytes; it overlaps the NoC halo
+///   phase, but the dependent compute cannot finish before the seam data
+///   lands;
+/// - **scalar combine + broadcast**: 2(N−1) single-hop rounds along the
+///   chain (on a line, a reduction tree degenerates to exactly this);
+/// - **ring all-reduce**: (N−1) combine rounds plus a both-ways broadcast.
+///
+/// The scheduler ([`crate::ttm::exec::execute_program`]) is the only
+/// place this phase is turned into time, alongside NoC and compute.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EtherPhase {
+    /// Reporting label ("halo", "allreduce", ...).
+    pub label: String,
+    /// Dies the phase spans (hop indices must stay below this).
+    pub n_dies: usize,
+    /// Uniform link model (per-topology preset from `arch::specs`).
+    pub link: EthLink,
+    /// Sequential rounds; hops within a round run concurrently on their
+    /// links.
+    pub rounds: Vec<Vec<EthHop>>,
+    /// Whether the phase overlaps the local NoC/compute phase (halo
+    /// exchange) or strictly follows it (reductions).
+    pub overlaps_local: bool,
+}
+
+impl EtherPhase {
+    /// Halo-shaped phase: route each (src_die, dst_die, bytes) flow along
+    /// the mesh's link path and load every traversed link; all loaded
+    /// links transfer concurrently in one round (each die pair owns its
+    /// own wires). Opposite directions of one link share its usable rate,
+    /// so their bytes accumulate — exactly the dual-die seam model.
+    /// Returns `None` when no flow crosses a link (single-die meshes).
+    pub fn halo(
+        label: &str,
+        mesh: &crate::device::DeviceMesh,
+        flows: &[(usize, usize, u64)],
+    ) -> Option<Self> {
+        use std::collections::BTreeMap;
+        let mut per_link: BTreeMap<(usize, usize), u64> = BTreeMap::new();
+        for &(a, b, bytes) in flows {
+            if bytes == 0 {
+                continue;
+            }
+            for link in mesh.path(a, b) {
+                *per_link.entry(link).or_insert(0) += bytes;
+            }
+        }
+        if per_link.is_empty() {
+            return None;
+        }
+        let round: Vec<EthHop> = per_link
+            .into_iter()
+            .map(|((a, b), bytes)| EthHop { src_die: a, dst_die: b, bytes })
+            .collect();
+        Some(Self {
+            label: label.to_string(),
+            n_dies: mesh.n_dies,
+            link: mesh.link,
+            rounds: vec![round],
+            overlaps_local: true,
+        })
+    }
+
+    /// Scalar combine + broadcast across the mesh (the dot products'
+    /// network step past the per-die NoC reduction). On a line the
+    /// partials chain down to die 0 and the result chains back —
+    /// 2(N−1) single-hop rounds (a reduction tree on a line degenerates
+    /// to the same hop count, §5-style). A ring broadcasts both ways,
+    /// saving ⌈(N−1)/2⌉ rounds on the way back. One 32 B beat per hop.
+    /// Returns `None` on a single die.
+    pub fn scalar_allreduce(mesh: &crate::device::DeviceMesh) -> Option<Self> {
+        let n = mesh.n_dies;
+        if n < 2 {
+            return None;
+        }
+        let beat = 32u64;
+        let mut rounds: Vec<Vec<EthHop>> = Vec::new();
+        // Combine: die d folds its partial into d−1's accumulator.
+        for d in (1..n).rev() {
+            rounds.push(vec![EthHop { src_die: d, dst_die: d - 1, bytes: beat }]);
+        }
+        match mesh.topology {
+            crate::device::MeshTopology::Ring if n > 2 => {
+                // Broadcast both ways around the ring from die 0: a
+                // forward wave 0→1→2→… and a backward wave 0→N−1→N−2→…
+                // (over the wrap link) meet in the middle.
+                let mut fwd = 0usize; // highest die the forward wave reached
+                let mut bwd = n; // lowest die the backward wave reached (n = none)
+                while fwd + 1 < bwd {
+                    let mut round = vec![EthHop { src_die: fwd, dst_die: fwd + 1, bytes: beat }];
+                    fwd += 1;
+                    if bwd - 1 > fwd {
+                        round.push(EthHop { src_die: bwd % n, dst_die: bwd - 1, bytes: beat });
+                        bwd -= 1;
+                    }
+                    rounds.push(round);
+                }
+            }
+            _ => {
+                // Broadcast back up the chain.
+                for d in 0..n - 1 {
+                    rounds.push(vec![EthHop { src_die: d, dst_die: d + 1, bytes: beat }]);
+                }
+            }
+        }
+        Some(Self {
+            label: "allreduce".to_string(),
+            n_dies: n,
+            link: mesh.link,
+            rounds,
+            overlaps_local: false,
+        })
+    }
+
+    /// Phase duration: rounds are serial, hops within a round concurrent.
+    pub fn duration_ns(&self) -> f64 {
+        self.rounds
+            .iter()
+            .map(|round| {
+                round
+                    .iter()
+                    .map(|h| self.link.transfer_ns(h.bytes))
+                    .fold(0.0f64, f64::max)
+            })
+            .sum()
+    }
+
+    /// Total bytes crossing Ethernet in one application of the phase.
+    pub fn bytes(&self) -> u64 {
+        self.rounds.iter().flatten().map(|h| h.bytes).sum()
+    }
+
+    /// Total link messages in one application of the phase.
+    pub fn messages(&self) -> u64 {
+        self.rounds.iter().map(|r| r.len() as u64).sum()
+    }
+}
+
 /// The lowered per-core device work of one program application. Produced
 /// by kernel lowerings; consumed only by the scheduler.
 #[derive(Debug, Clone, PartialEq)]
@@ -105,6 +258,8 @@ pub struct Workload {
     pub compute_cycles: Vec<u64>,
     /// Optional global reduction after the local phase.
     pub reduce: Option<ReduceSpec>,
+    /// Optional inter-die Ethernet phase (multi-die programs only).
+    pub ether: Option<EtherPhase>,
 }
 
 impl Default for Workload {
@@ -116,6 +271,7 @@ impl Default for Workload {
             riscv_cycles: Vec::new(),
             compute_cycles: Vec::new(),
             reduce: None,
+            ether: None,
         }
     }
 }
@@ -142,6 +298,9 @@ pub struct Footprint {
     /// Bytes one application moves (DRAM staging + NoC + result
     /// writeback) — the single traffic number per program.
     pub traffic_bytes: u64,
+    /// Bytes one application moves over inter-die Ethernet links (zero
+    /// for single-die programs).
+    pub eth_bytes: u64,
 }
 
 /// A program: the set of kernels launched together on the sub-grid.
@@ -227,6 +386,19 @@ impl Program {
                 }
             }
         }
+        if let Some(eth) = &self.work.ether {
+            for hop in eth.rounds.iter().flatten() {
+                if hop.src_die == hop.dst_die
+                    || hop.src_die >= eth.n_dies
+                    || hop.dst_die >= eth.n_dies
+                {
+                    return Err(crate::SimError::Other(format!(
+                        "program '{}': Ethernet hop {}->{} invalid for a {}-die mesh",
+                        self.name, hop.src_die, hop.dst_die, eth.n_dies
+                    )));
+                }
+            }
+        }
         Ok(())
     }
 
@@ -280,6 +452,7 @@ impl FusedProgram {
             tiles_per_core: self.parts.iter().map(|p| p.footprint.tiles_per_core).max().unwrap_or(0),
             sram_bytes: self.parts.iter().map(|p| p.footprint.sram_bytes).max().unwrap_or(0),
             traffic_bytes: self.parts.iter().map(|p| p.footprint.traffic_bytes).sum(),
+            eth_bytes: self.parts.iter().map(|p| p.footprint.eth_bytes).sum(),
         }
     }
 }
@@ -336,6 +509,107 @@ mod tests {
             }],
         }];
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn ether_phase_duration_and_validation() {
+        let link = EthLink::default();
+        let phase = EtherPhase {
+            label: "halo".to_string(),
+            n_dies: 3,
+            link,
+            rounds: vec![
+                vec![
+                    EthHop { src_die: 0, dst_die: 1, bytes: 1100 },
+                    EthHop { src_die: 1, dst_die: 2, bytes: 2200 },
+                ],
+                vec![EthHop { src_die: 2, dst_die: 1, bytes: 0 }],
+            ],
+            overlaps_local: true,
+        };
+        // Round 1: concurrent hops, the bigger one binds; round 2: latency
+        // only. Serial across rounds.
+        let want = link.transfer_ns(2200) + link.transfer_ns(0);
+        assert!((phase.duration_ns() - want).abs() < 1e-9);
+        assert_eq!(phase.bytes(), 3300);
+        assert_eq!(phase.messages(), 3);
+
+        let mut p = Program::standard("mesh");
+        p.work.ether = Some(phase);
+        p.validate().unwrap();
+        // Out-of-mesh or self hops are rejected.
+        let mut bad = Program::standard("bad");
+        bad.work.ether = Some(EtherPhase {
+            label: "x".to_string(),
+            n_dies: 2,
+            link,
+            rounds: vec![vec![EthHop { src_die: 0, dst_die: 2, bytes: 1 }]],
+            overlaps_local: false,
+        });
+        assert!(bad.validate().is_err());
+        let mut self_hop = Program::standard("self");
+        self_hop.work.ether = Some(EtherPhase {
+            label: "x".to_string(),
+            n_dies: 2,
+            link,
+            rounds: vec![vec![EthHop { src_die: 1, dst_die: 1, bytes: 1 }]],
+            overlaps_local: false,
+        });
+        assert!(self_hop.validate().is_err());
+    }
+
+    #[test]
+    fn halo_phase_accumulates_per_link() {
+        use crate::device::{DeviceMesh, MeshTopology};
+        let mesh = DeviceMesh::new(3, 1, 2, MeshTopology::Line, EthLink::default()).unwrap();
+        // Both directions of each seam share the link; unrelated seams run
+        // concurrently in the one round.
+        let phase = EtherPhase::halo(
+            "halo",
+            &mesh,
+            &[(0, 1, 100), (1, 0, 100), (1, 2, 300), (2, 1, 300)],
+        )
+        .unwrap();
+        assert!(phase.overlaps_local);
+        assert_eq!(phase.rounds.len(), 1);
+        assert_eq!(phase.bytes(), 800);
+        let loaded: Vec<(usize, usize, u64)> = phase.rounds[0]
+            .iter()
+            .map(|h| (h.src_die, h.dst_die, h.bytes))
+            .collect();
+        assert_eq!(loaded, vec![(0, 1, 200), (1, 2, 600)]);
+        assert!((phase.duration_ns() - mesh.link.transfer_ns(600)).abs() < 1e-9);
+        // Single-die mesh: no phase at all.
+        let single = DeviceMesh::n150(1, 2).unwrap();
+        assert!(EtherPhase::halo("halo", &single, &[]).is_none());
+    }
+
+    #[test]
+    fn scalar_allreduce_round_counts() {
+        use crate::device::{DeviceMesh, MeshTopology};
+        let link = EthLink::default();
+        // N=2 line: one combine hop + one broadcast hop — exactly the
+        // dual-die "one scalar hop + one broadcast".
+        let n2 = DeviceMesh::n300(1, 1).unwrap();
+        let p2 = EtherPhase::scalar_allreduce(&n2).unwrap();
+        assert_eq!(p2.rounds.len(), 2);
+        assert!(!p2.overlaps_local);
+        assert!((p2.duration_ns() - 2.0 * link.transfer_ns(32)).abs() < 1e-9);
+
+        // Line N=4: 3 combine + 3 broadcast rounds.
+        let l4 = DeviceMesh::new(4, 1, 1, MeshTopology::Line, link).unwrap();
+        assert_eq!(EtherPhase::scalar_allreduce(&l4).unwrap().rounds.len(), 6);
+        // Ring N=4: the both-ways broadcast saves a round.
+        let r4 = DeviceMesh::new(4, 1, 1, MeshTopology::Ring, link).unwrap();
+        let pr = EtherPhase::scalar_allreduce(&r4).unwrap();
+        assert_eq!(pr.rounds.len(), 5);
+        pr.rounds.iter().flatten().for_each(|h| assert_eq!(h.bytes, 32));
+        // Every die is reached by the broadcast.
+        let reached: std::collections::BTreeSet<usize> =
+            pr.rounds[3..].iter().flatten().map(|h| h.dst_die).collect();
+        assert_eq!(reached, (1..4).collect());
+        // Single die: no network step.
+        assert!(EtherPhase::scalar_allreduce(&DeviceMesh::n150(1, 1).unwrap()).is_none());
     }
 
     #[test]

@@ -207,6 +207,19 @@ mod tests {
     }
 
     #[test]
+    fn mesh_topology_routes_through_fromstr() {
+        // The launcher's --dies/--topology options share the one enum
+        // parse path with every other enum-valued option.
+        let a = parse(&sv(&["--dies", "4", "--topology", "ring"]), &["dies", "topology"], &[]).unwrap();
+        assert_eq!(a.get_usize("dies", 1).unwrap(), 4);
+        let t: crate::device::MeshTopology = a.get_parsed("topology", "line").unwrap();
+        assert_eq!(t, crate::device::MeshTopology::Ring);
+        let d: crate::device::MeshTopology = a.get_parsed("missing", "line").unwrap();
+        assert_eq!(d, crate::device::MeshTopology::Line);
+        assert!("torus".parse::<crate::device::MeshTopology>().is_err());
+    }
+
+    #[test]
     fn typed_accessors_defaults() {
         let a = parse(&sv(&[]), &["n"], &[]).unwrap();
         assert_eq!(a.get_usize("n", 7).unwrap(), 7);

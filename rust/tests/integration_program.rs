@@ -167,6 +167,63 @@ fn spmv_program_traffic_footprint_matches_spmv_traffic() {
 }
 
 #[test]
+fn mesh_lowering_is_deterministic() {
+    use wormsim::device::{DeviceMesh, EthLink, MeshTopology};
+    use wormsim::solver::mesh::lower_mesh_components;
+    let cost = CostModel::default();
+    let mesh = DeviceMesh::new(4, 1, 2, MeshTopology::Line, EthLink::onboard()).unwrap();
+    let opts = PcgOptions::new(PcgVariant::FusedBf16);
+    let op = Operator::Stencil(stencil_cfg(DataFormat::Bf16, 4));
+    let a = lower_mesh_components(&mesh, &op, &opts, 4, TileOpKind::EltwiseUnary, &cost).unwrap();
+    let b = lower_mesh_components(&mesh, &op, &opts, 4, TileOpKind::EltwiseUnary, &cost).unwrap();
+    assert_eq!(a.components, b.components);
+    assert_eq!(a.spmv_per_die, b.spmv_per_die);
+    // Every component validates; spmv and the dots carry Ethernet phases,
+    // the pure block ops do not.
+    for p in &a.components {
+        p.validate().unwrap();
+        assert_eq!(p.work.grid, (1, 2), "per-die sub-grid");
+    }
+    let by_name = |n: &str| a.components.iter().find(|p| p.name == n).unwrap();
+    assert!(by_name("spmv").work.ether.as_ref().unwrap().overlaps_local);
+    assert!(!by_name("dot").work.ether.as_ref().unwrap().overlaps_local);
+    assert!(by_name("norm").work.ether.is_some());
+    assert!(by_name("axpy").work.ether.is_none());
+    assert!(by_name("precond").work.ether.is_none());
+}
+
+#[test]
+fn mesh_launch_counts_are_independent_of_die_count() {
+    use wormsim::device::{DeviceMesh, EthLink, MeshTopology};
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    let mut prof = Profiler::disabled();
+    for n_dies in [2usize, 4] {
+        let mesh = DeviceMesh::new(n_dies, 1, 2, MeshTopology::Line, EthLink::onboard()).unwrap();
+        let b = wormsim::solver::mesh_dist_random(&mesh, 2, DataFormat::Bf16, 3);
+        // Fused: one mesh-wide enqueue for the whole solve, whatever N.
+        let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
+        opts.max_iters = 10;
+        opts.tol_abs = 0.0;
+        let op = Operator::Stencil(stencil_cfg(DataFormat::Bf16, 2));
+        let fused =
+            wormsim::solver::solve_pcg_mesh(&mesh, &b, &op, &e, &cost, &opts, &mut prof).unwrap();
+        assert_eq!(fused.iters, 10);
+        assert_eq!(fused.launch.launches, 1, "{n_dies} dies, fused");
+        assert!(fused.launch.gap_ns > 0.0);
+
+        // Split: 8 mesh-wide component enqueues per iteration, whatever N.
+        opts.fusion = wormsim::solver::FusionMode::ForceSplit;
+        let split =
+            wormsim::solver::solve_pcg_mesh(&mesh, &b, &op, &e, &cost, &opts, &mut prof).unwrap();
+        assert_eq!(split.launch.launches, 8 * 10, "{n_dies} dies, split");
+        assert_eq!(split.launch.gap_ns, 0.0);
+        // The schedule is the only difference: bit-identical values.
+        assert_eq!(fused.residual_history, split.residual_history);
+    }
+}
+
+#[test]
 fn run_through_host_queue_matches_direct_execution() {
     // HostQueue::run = enqueue (dispatch charged once) + execute; the
     // device durations are launch-offset invariant.

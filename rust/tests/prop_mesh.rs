@@ -1,0 +1,275 @@
+//! Property tests for the N-die mesh layer:
+//!
+//! 1. an N=1 mesh PCG is the single-die solver — trajectory, iterate, and
+//!    simulated-time *bit-identical* to `solve_operator` (stencil and
+//!    sparse operators);
+//! 2. an N=2 mesh reproduces the single logical grid bit-for-bit (the old
+//!    dual-die pin), and the decomposition does not matter: N=4 thin dies
+//!    walk the same trajectory as N=2;
+//! 3. per-iteration Ethernet bytes match the analytic seam/all-reduce
+//!    formula;
+//! 4. for a fixed problem, time/iteration is monotonically non-increasing
+//!    in the die count across the swept range (strong scaling holds until
+//!    the seam dominates, which these configurations never reach).
+
+use wormsim::arch::{ComputeUnit, DataFormat};
+use wormsim::device::{DeviceMesh, EthLink, MeshTopology, TensixGrid};
+use wormsim::engine::{NativeEngine, StencilCoeffs};
+use wormsim::kernels::spmv::{SpmvConfig, SpmvMode, SpmvOperator};
+use wormsim::kernels::stencil::{StencilConfig, StencilVariant};
+use wormsim::profiler::Profiler;
+use wormsim::solver::mesh::seam_bytes_one_way;
+use wormsim::solver::{self, Operator, PcgOptions, PcgVariant, Problem};
+use wormsim::sparse::{laplacian_3d, RowPartition};
+use wormsim::timing::cost::CostModel;
+use wormsim::ttm::EtherPhase;
+
+fn stencil_cfg(df: DataFormat, tiles: usize) -> StencilConfig {
+    StencilConfig {
+        df,
+        unit: ComputeUnit::for_format(df),
+        tiles_per_core: tiles,
+        variant: StencilVariant::FULL,
+        coeffs: StencilCoeffs::LAPLACIAN,
+    }
+}
+
+fn line_mesh(n_dies: usize, rows: usize, cols: usize) -> DeviceMesh {
+    DeviceMesh::new(n_dies, rows, cols, MeshTopology::Line, EthLink::onboard()).unwrap()
+}
+
+#[test]
+fn n1_mesh_is_bit_identical_to_single_die_stencil() {
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    let p = Problem::new(2, 2, 2, DataFormat::Fp32);
+    let grid = p.make_grid().unwrap();
+    let b = solver::dist_random(&p, 7);
+    let mut opts = PcgOptions::new(PcgVariant::SplitFp32);
+    opts.max_iters = 40;
+    opts.tol_abs = 1e-3;
+    let mut prof = Profiler::disabled();
+    let op = Operator::Stencil(stencil_cfg(DataFormat::Fp32, 2));
+    let single = solver::solve_operator(&grid, &b, &op, &e, &cost, &opts, &mut prof).unwrap();
+
+    let mesh = line_mesh(1, 2, 2);
+    let meshed = solver::solve_pcg_mesh(&mesh, &b, &op, &e, &cost, &opts, &mut prof).unwrap();
+    assert_eq!(single.iters, meshed.iters);
+    assert_eq!(single.converged, meshed.converged);
+    assert_eq!(single.residual_history, meshed.residual_history, "exact trajectory");
+    assert_eq!(single.x, meshed.x, "exact iterate");
+    // With no links there is no Ethernet, and the timing model collapses
+    // to the single-die one exactly.
+    assert_eq!(meshed.eth_bytes_total, 0);
+    assert_eq!(single.total_ns, meshed.total_ns, "exact simulated time");
+    assert_eq!(single.launch.launches, meshed.launch.launches);
+}
+
+#[test]
+fn n1_mesh_is_bit_identical_to_single_die_sparse() {
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    let p = Problem::new(2, 2, 2, DataFormat::Fp32);
+    let grid = p.make_grid().unwrap();
+    let b = solver::dist_random(&p, 11);
+    let (nx, ny, nz) = p.dims();
+    let a = laplacian_3d(nx, ny, nz);
+    let part = RowPartition::stencil_aligned(2, 2, nz).unwrap();
+    let op =
+        SpmvOperator::new(&a, part, SpmvConfig::new(DataFormat::Fp32, SpmvMode::SramResident))
+            .unwrap();
+    let mut opts = PcgOptions::new(PcgVariant::SplitFp32);
+    opts.max_iters = 30;
+    opts.tol_abs = 0.0;
+    let mut prof = Profiler::disabled();
+    let single =
+        solver::solve_operator(&grid, &b, &Operator::Sparse(&op), &e, &cost, &opts, &mut prof)
+            .unwrap();
+    let mesh = line_mesh(1, 2, 2);
+    let meshed =
+        solver::solve_pcg_mesh(&mesh, &b, &Operator::Sparse(&op), &e, &cost, &opts, &mut prof)
+            .unwrap();
+    assert_eq!(single.residual_history, meshed.residual_history);
+    assert_eq!(single.x, meshed.x);
+    assert_eq!(single.total_ns, meshed.total_ns);
+}
+
+#[test]
+fn n2_mesh_matches_single_logical_grid_and_decomposition_does_not_matter() {
+    // The dual-die pin, generalized: splitting a 4×2 logical grid over 2
+    // dies (or 4 thin dies) must not change a single bit of the
+    // trajectory relative to one 4×2 die.
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    let p = Problem::new(4, 2, 3, DataFormat::Bf16);
+    let grid = p.make_grid().unwrap();
+    let b = solver::dist_random(&p, 3);
+    let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
+    opts.max_iters = 25;
+    opts.tol_abs = 0.0;
+    let mut prof = Profiler::disabled();
+    let op = Operator::Stencil(stencil_cfg(DataFormat::Bf16, 3));
+    let single = solver::solve_operator(&grid, &b, &op, &e, &cost, &opts, &mut prof).unwrap();
+
+    let two = solver::solve_pcg_mesh(&line_mesh(2, 2, 2), &b, &op, &e, &cost, &opts, &mut prof)
+        .unwrap();
+    assert_eq!(single.residual_history, two.residual_history, "N=2 exact");
+    assert_eq!(single.x, two.x);
+    assert!(two.eth_bytes_total > 0, "the seam moved to Ethernet");
+
+    let four = solver::solve_pcg_mesh(&line_mesh(4, 1, 2), &b, &op, &e, &cost, &opts, &mut prof)
+        .unwrap();
+    assert_eq!(two.residual_history, four.residual_history, "N=4 exact");
+    assert_eq!(two.x, four.x);
+    // More seams cost more Ethernet, never different values.
+    assert!(four.eth_bytes_total > two.eth_bytes_total);
+}
+
+#[test]
+fn dualdie_wrapper_reproduces_the_mesh_trajectory() {
+    // The rewritten N=2 wrapper is the mesh solver under the old API.
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    let p = Problem::new(4, 2, 3, DataFormat::Bf16);
+    let b = solver::dist_random(&p, 3);
+    let mut dopts = solver::DualDieOptions::default();
+    dopts.max_iters = 25;
+    dopts.tol_abs = 0.0;
+    let wrapped = solver::solve_pcg_dualdie(2, 2, 3, &b, &e, &cost, &dopts).unwrap();
+
+    let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
+    opts.max_iters = 25;
+    opts.tol_abs = 0.0;
+    let mut prof = Profiler::disabled();
+    let op = Operator::Stencil(stencil_cfg(DataFormat::Bf16, 3));
+    let meshed = solver::solve_pcg_mesh(&line_mesh(2, 2, 2), &b, &op, &e, &cost, &opts, &mut prof)
+        .unwrap();
+    assert_eq!(wrapped.residual_history, meshed.residual_history);
+    assert_eq!(wrapped.total_ns, meshed.total_ns);
+    assert_eq!(wrapped.eth_ns_per_iter, meshed.eth_ns_per_iter);
+    assert_eq!(wrapped.launch, meshed.launch);
+}
+
+#[test]
+fn per_iteration_ethernet_bytes_match_the_analytic_formula() {
+    // Per full iteration: one seam halo on the spmv (every link carries
+    // both directions of `cols × tiles` 32 B tile rows) plus three scalar
+    // all-reduces (dot, norm, dot — 2(N−1) single-beat hops each on a
+    // line). The initial δ0 dot runs before the schedule starts, exactly
+    // like the single-die solver, and is not charged.
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    let (n_dies, cols, tiles) = (4usize, 2usize, 4usize);
+    let mesh = line_mesh(n_dies, 1, cols);
+    let df = DataFormat::Bf16;
+    let b = solver::mesh_dist_random(&mesh, tiles, df, 9);
+    let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
+    opts.max_iters = 5;
+    opts.tol_abs = 0.0;
+    let mut prof = Profiler::disabled();
+    let res = solver::solve_pcg_mesh(
+        &mesh,
+        &b,
+        &Operator::Stencil(stencil_cfg(df, tiles)),
+        &e,
+        &cost,
+        &opts,
+        &mut prof,
+    )
+    .unwrap();
+    assert_eq!(res.iters, 5);
+
+    let links = (n_dies - 1) as u64;
+    let halo_per_iter = links * 2 * seam_bytes_one_way(cols, tiles, df);
+    let allreduce_per_dot = 2 * (n_dies as u64 - 1) * 32;
+    let expected = res.iters as u64 * (halo_per_iter + 3 * allreduce_per_dot);
+    assert_eq!(res.eth_bytes_total, expected);
+    // Cross-check the all-reduce term against the lowered phase itself.
+    let phase = EtherPhase::scalar_allreduce(&mesh).unwrap();
+    assert_eq!(phase.bytes(), allreduce_per_dot);
+}
+
+#[test]
+fn time_per_iteration_non_increasing_in_die_count() {
+    // Strong scaling: fixed element count, every die a full per-die
+    // sub-grid with 1/N of the z-tiles. Halving per-core work buys more
+    // than the added Ethernet until far past this sweep.
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    let (rows, cols, total_tiles) = (1usize, 2usize, 64usize);
+    let mut times = Vec::new();
+    for n in [1usize, 2, 4, 8] {
+        let tiles = total_tiles / n;
+        let mesh = line_mesh(n, rows, cols);
+        let b = solver::mesh_dist_random(&mesh, tiles, DataFormat::Bf16, 13);
+        let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
+        opts.max_iters = 2;
+        opts.tol_abs = 0.0;
+        let mut prof = Profiler::disabled();
+        let res = solver::solve_pcg_mesh(
+            &mesh,
+            &b,
+            &Operator::Stencil(stencil_cfg(DataFormat::Bf16, tiles)),
+            &e,
+            &cost,
+            &opts,
+            &mut prof,
+        )
+        .unwrap();
+        times.push((n, res.per_iter_ns, res.eth_ns_per_iter));
+    }
+    for w in times.windows(2) {
+        assert!(
+            w[1].1 <= w[0].1,
+            "time/iter must not increase with dies: {:?} -> {:?}",
+            w[0],
+            w[1]
+        );
+    }
+    // The Ethernet share grows with N even as the total shrinks.
+    assert!(times.last().unwrap().2 > times.first().unwrap().2);
+}
+
+#[test]
+fn sparse_and_stencil_operators_agree_on_the_mesh() {
+    // The operator abstraction survives distribution: sparse PCG on the
+    // generated Laplacian over the stencil-aligned partition walks the
+    // stencil trajectory on a 2-die mesh too.
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    let mesh = line_mesh(2, 1, 2);
+    let (nz, df) = (2usize, DataFormat::Fp32);
+    let b = solver::mesh_dist_random(&mesh, nz, df, 17);
+    let mut opts = PcgOptions::new(PcgVariant::SplitFp32);
+    opts.max_iters = 30;
+    opts.tol_abs = 0.0;
+    let mut prof = Profiler::disabled();
+    let stencil = solver::solve_pcg_mesh(
+        &mesh,
+        &b,
+        &Operator::Stencil(stencil_cfg(df, nz)),
+        &e,
+        &cost,
+        &opts,
+        &mut prof,
+    )
+    .unwrap();
+
+    let a = laplacian_3d(64 * mesh.logical_rows(), 16 * mesh.die_cols, nz);
+    let part = RowPartition::stencil_aligned(mesh.logical_rows(), mesh.die_cols, nz).unwrap();
+    let op = SpmvOperator::new(&a, part, SpmvConfig::new(df, SpmvMode::SramResident)).unwrap();
+    let sparse =
+        solver::solve_pcg_mesh(&mesh, &b, &Operator::Sparse(&op), &e, &cost, &opts, &mut prof)
+            .unwrap();
+    assert_eq!(stencil.residual_history, sparse.residual_history);
+    assert_eq!(stencil.x, sparse.x);
+    // Both moved their seam over Ethernet.
+    assert!(stencil.eth_bytes_total > 0 && sparse.eth_bytes_total > 0);
+    // A TensixGrid of the logical shape also exists here (2 rows), so the
+    // mesh sparse trajectory equals the plain single-die sparse one.
+    let grid = TensixGrid::new(2, 2).unwrap();
+    let single =
+        solver::solve_operator(&grid, &b, &Operator::Sparse(&op), &e, &cost, &opts, &mut prof)
+            .unwrap();
+    assert_eq!(single.residual_history, sparse.residual_history);
+}
