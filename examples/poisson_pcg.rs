@@ -157,7 +157,7 @@ fn main() -> anyhow::Result<()> {
             &Operator::Stencil(cfg),
             engine.as_ref(),
             &cost,
-            &opts,
+            &opts.into(),
             &mut prof,
         )?;
         println!();

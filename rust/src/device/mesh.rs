@@ -5,19 +5,26 @@
 //! (backplane links). This module is the device-layer model of that
 //! fabric: [`EthLink`] (the typed link and its transfer cost — formerly a
 //! solver-private detail of `solver::dualdie`), [`MeshTopology`]
-//! (line/ring), and [`DeviceMesh`] — N identical die sub-grids stacked
-//! along x, with link-path lookup and per-die SRAM/DRAM budget checks.
+//! (line/ring), [`DeviceMesh`] — N identical die sub-grids stacked
+//! along x, with link-path lookup and per-die SRAM/DRAM budget checks —
+//! and [`EthSim`], the per-link occupancy tracker (the inter-die
+//! counterpart of [`crate::noc::NocSim`]) through which the scheduler
+//! times every Ethernet hop, so concurrent transfers sharing a physical
+//! link serialize instead of riding independent pipes.
 //!
 //! The mesh is pure topology + cost: *what* moves over which link per
 //! solver component is decided by the lowerings (they attach
 //! [`crate::ttm::EtherPhase`]s to programs), and *when* it is charged by
 //! the one scheduler in [`crate::ttm::exec::execute_program`].
 
+use std::collections::BTreeMap;
+
 use crate::arch::constants::N300D_DRAM_BYTES;
 use crate::arch::specs::{EthLinkSpec, ETH_BACKPLANE, ETH_ONBOARD, GALAXY_DIES};
 use crate::arch::DataFormat;
 use crate::device::TensixGrid;
 use crate::error::{Result, SimError};
+use crate::timing::SimNs;
 
 /// A die-to-die Ethernet link (§3: the die grid dedicates cells to
 /// Ethernet management; §8 names multi-device scaling as future work).
@@ -69,6 +76,87 @@ impl EthLink {
     /// Transfer time for `bytes` over the link.
     pub fn transfer_ns(&self, bytes: u64) -> f64 {
         self.latency_ns + bytes as f64 / self.bw_gbs
+    }
+}
+
+/// One completed transfer over a physical Ethernet link, as recorded by
+/// [`EthSim`] (absolute simulated times; feeds the per-link profiler
+/// zones).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EthTransfer {
+    /// Undirected physical link, as a (lower, higher) die pair.
+    pub link: (usize, usize),
+    pub start: SimNs,
+    pub end: SimNs,
+    pub bytes: u64,
+}
+
+/// Per-link Ethernet occupancy tracker — the inter-die counterpart of
+/// [`crate::noc::NocSim`]. Each physical link is a shared wire, not an
+/// independent pipe: a transfer holds its link from the moment it begins
+/// until the last byte is out, and a concurrent transfer wanting the same
+/// link queues behind it, paying its own full latency + bandwidth term
+/// once the wire frees. Transfers on distinct links never interact.
+///
+/// The scheduler drives one `EthSim` per program execution
+/// ([`crate::ttm::EtherPhase::run`]); the recorded busy windows surface
+/// as per-link utilization in `ProgramOutcome` and as profiler zones.
+#[derive(Debug, Default)]
+pub struct EthSim {
+    link_free: BTreeMap<(usize, usize), SimNs>,
+    busy_ns: BTreeMap<(usize, usize), SimNs>,
+    pub transfers: Vec<EthTransfer>,
+    pub messages: u64,
+    pub bytes: u64,
+}
+
+impl EthSim {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Move `bytes` from `src_die` to `dst_die` over their (undirected)
+    /// physical link, with the payload ready at `start`. The transfer
+    /// begins when both the payload and the link are ready and occupies
+    /// the link for the full `EthLink::transfer_ns` window — two
+    /// concurrent hops on one link serialize. Returns the completion
+    /// time.
+    pub fn transfer(
+        &mut self,
+        link: &EthLink,
+        src_die: usize,
+        dst_die: usize,
+        bytes: u64,
+        start: SimNs,
+    ) -> SimNs {
+        let key = (src_die.min(dst_die), src_die.max(dst_die));
+        let free = self.link_free.get(&key).copied().unwrap_or(0.0);
+        let begin = start.max(free);
+        let end = begin + link.transfer_ns(bytes);
+        self.link_free.insert(key, end);
+        *self.busy_ns.entry(key).or_insert(0.0) += end - begin;
+        self.transfers.push(EthTransfer {
+            link: key,
+            start: begin,
+            end,
+            bytes,
+        });
+        self.messages += 1;
+        self.bytes += bytes;
+        end
+    }
+
+    /// Per-link busy fraction of a window of `span_ns` (sorted by link;
+    /// `span_ns <= 0` yields an empty report). A link at 1.0 was the
+    /// serialized bottleneck for the whole window.
+    pub fn utilization(&self, span_ns: SimNs) -> Vec<(usize, usize, f64)> {
+        if span_ns <= 0.0 {
+            return Vec::new();
+        }
+        self.busy_ns
+            .iter()
+            .map(|(&(a, b), &busy)| (a, b, busy / span_ns))
+            .collect()
     }
 }
 
@@ -337,6 +425,35 @@ mod tests {
         assert_eq!(m.die_of_core(m.cores_per_die() - 1), 0);
         assert_eq!(m.die_of_core(m.cores_per_die()), 1);
         assert_eq!(m.die_of_core(m.n_cores() - 1), 3);
+    }
+
+    #[test]
+    fn eth_sim_serializes_shared_link_and_reports_utilization() {
+        let link = EthLink::default(); // 800 ns latency, 11 GB/s
+        let mut sim = EthSim::new();
+        // Two concurrent hops on the SAME physical link (0↔1, both
+        // directions): the second queues behind the first — analytic
+        // end time is exactly 2 × (latency + bytes/bw).
+        let one = link.transfer_ns(1100); // 800 + 100 = 900 ns
+        let a = sim.transfer(&link, 0, 1, 1100, 0.0);
+        let b = sim.transfer(&link, 1, 0, 1100, 0.0);
+        assert!((a - one).abs() < 1e-9);
+        assert!((b - 2.0 * one).abs() < 1e-9, "serialized, not independent pipes");
+        // A hop on a different link at the same time does not queue.
+        let c = sim.transfer(&link, 1, 2, 1100, 0.0);
+        assert!((c - one).abs() < 1e-9);
+        assert_eq!(sim.messages, 3);
+        assert_eq!(sim.bytes, 3 * 1100);
+        // Utilization over the busy window: link (0,1) was occupied the
+        // whole time, link (1,2) half of it.
+        let util = sim.utilization(b);
+        assert_eq!(util.len(), 2);
+        assert!((util[0].2 - 1.0).abs() < 1e-9, "(0,1) saturated: {util:?}");
+        assert!((util[1].2 - 0.5).abs() < 1e-9, "(1,2) half-busy: {util:?}");
+        assert!(sim.utilization(0.0).is_empty());
+        // The recorded transfers carry the queueing.
+        assert_eq!(sim.transfers[1].start, a);
+        assert_eq!(sim.transfers[1].link, (0, 1));
     }
 
     #[test]

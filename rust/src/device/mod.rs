@@ -12,5 +12,5 @@ pub use cb::CircularBuffer;
 pub use core::{Coord, CoreCounters, TensixCore};
 pub use dram::Dram;
 pub use grid::TensixGrid;
-pub use mesh::{DeviceMesh, EthLink, MeshTopology};
+pub use mesh::{DeviceMesh, EthLink, EthSim, EthTransfer, MeshTopology};
 pub use sram::Sram;

@@ -483,14 +483,31 @@ impl SpmvOperator {
 
             let mut riscv_cycles = Vec::with_capacity(cores_per_die);
             let mut compute_cycles = Vec::with_capacity(cores_per_die);
+            let mut boundary_riscv = Vec::with_capacity(cores_per_die);
+            let mut boundary_compute = Vec::with_capacity(cores_per_die);
             let mut dram_bytes = Vec::with_capacity(cores_per_die);
             let mut die_rows_owned = 0u64;
             let mut matrix_bytes = 0u64;
             for core in base..base + cores_per_die {
                 let padded = self.sells[core].padded_nnz() as u64;
                 let tile_cols = padded.div_ceil(TILE_ELEMS as u64);
-                riscv_cycles.push(2 * cost.zero_fill_cycles(padded));
-                compute_cycles.push(tile_cols * (mul + acc));
+                let riscv = 2 * cost.zero_fill_cycles(padded);
+                let compute = tile_cols * (mul + acc);
+                riscv_cycles.push(riscv);
+                compute_cycles.push(compute);
+                // Interior/boundary split: the chain that consumes x
+                // entries gathered from ANOTHER die — their share of the
+                // indexed tile assembly plus the multiply-accumulate of
+                // the tile columns they land in — cannot finish before
+                // the Ethernet cut drains; the rest is die-local.
+                let cut_entries: u64 = self.gather.per_core[core]
+                    .iter()
+                    .filter(|&(&owner, _)| die_of(owner) != die)
+                    .map(|(_, &cnt)| cnt as u64)
+                    .sum();
+                boundary_riscv.push((2 * cost.zero_fill_cycles(cut_entries)).min(riscv));
+                boundary_compute
+                    .push((cut_entries.div_ceil(TILE_ELEMS as u64) * (mul + acc)).min(compute));
                 let core_matrix = self.sells[core].value_bytes(df) + self.sells[core].index_bytes();
                 matrix_bytes += core_matrix;
                 dram_bytes.push(match self.cfg.mode {
@@ -520,6 +537,8 @@ impl SpmvOperator {
                         dram_bytes,
                         riscv_cycles,
                         compute_cycles,
+                        boundary_riscv_cycles: boundary_riscv,
+                        boundary_compute_cycles: boundary_compute,
                         ether: ether.clone(),
                         ..Workload::default()
                     })
@@ -759,6 +778,18 @@ mod tests {
                 .map(|s| s.bytes)
                 .sum();
             assert!(noc_bytes > 0, "E/W faces stay on the NoC");
+            // Interior/boundary split: every core of this thin-die mesh
+            // touches the seam, so each carries a nonzero boundary chain
+            // strictly inside its totals.
+            for i in 0..p.work.n_cores() {
+                let (br, bc) = (
+                    p.work.boundary_riscv_cycles[i],
+                    p.work.boundary_compute_cycles[i],
+                );
+                assert!(br > 0 && bc > 0, "seam core {i} carries a boundary chain");
+                assert!(br < p.work.riscv_cycles[i]);
+                assert!(bc < p.work.compute_cycles[i]);
+            }
         }
         // NoC + Ethernet together cover exactly the single-die gather.
         let full: u64 = op.lower(&cost).work.data_movement.iter().flat_map(|q| q.sends.iter()).map(|s| s.bytes).sum();

@@ -100,6 +100,19 @@ pub fn local_tile_cycles(cost: &CostModel, unit: ComputeUnit, df: DataFormat) ->
     scale + 2 * (shift + add) + 2 * (2 * transpose + shift + add) + 2 * add
 }
 
+/// The seam-dependent (*boundary*) per-tile cycles of ONE N/S direction
+/// whose halo row arrives over an inter-die Ethernet seam: the §6.2
+/// shift-copy that rebuilds the displaced tile around the seam row plus
+/// the accumulate that folds it in. Everything else in
+/// [`local_tile_cycles`] — center, the other N/S direction, both E/W
+/// transposes, the z accumulates — is *interior*: it depends only on
+/// die-local data and can run while the seam is still in flight.
+pub fn boundary_tile_cycles(cost: &CostModel, unit: ComputeUnit, df: DataFormat) -> u64 {
+    let dep = PipelineMode::Dependent;
+    cost.tile_op_cycles(unit, df, TileOpKind::ShiftCopy, dep)
+        + cost.tile_op_cycles(unit, df, TileOpKind::EltwiseBinary, dep)
+}
+
 /// Bytes of one N/S halo row and one E/W halo segment at `df` (§6.3).
 fn halo_unit_bytes(df: DataFormat) -> (u64, u64) {
     let row = (16 * df.bytes()) as u64; // one tile row = one NoC write
@@ -195,6 +208,43 @@ pub fn lower_stencil(grid: &TensixGrid, cfg: &StencilConfig, cost: &CostModel) -
             traffic_bytes: halo_bytes,
             eth_bytes: 0,
         })
+}
+
+/// Lower one die's stencil program for an x-stacked mesh: the per-die
+/// NoC halo schedule of [`lower_stencil`], plus the interior/boundary
+/// compute split on seam-adjacent core rows. `seam_north` marks a
+/// neighboring die above (logical row 0 of this die consumes its seam),
+/// `seam_south` one below (last row). The boundary chain is carved out
+/// of the same per-core totals — [`boundary_tile_cycles`] per tile per
+/// seam side — so a Serial schedule times identically to the unsplit
+/// lowering; a Pipelined schedule may overlap the interior chain with
+/// the Ethernet seam.
+pub fn lower_stencil_die(
+    grid: &TensixGrid,
+    cfg: &StencilConfig,
+    cost: &CostModel,
+    seam_north: bool,
+    seam_south: bool,
+) -> Program {
+    let mut program = lower_stencil(grid, cfg, cost);
+    if !(seam_north || seam_south) {
+        return program;
+    }
+    let per_side = boundary_tile_cycles(cost, cfg.unit, cfg.df) * cfg.tiles_per_core as u64;
+    let mut boundary = vec![0u64; grid.n_cores()];
+    for coord in grid.coords() {
+        let mut b = 0u64;
+        if seam_north && coord.row == 0 {
+            b += per_side;
+        }
+        if seam_south && coord.row + 1 == grid.rows {
+            b += per_side;
+        }
+        let i = coord.row * grid.cols + coord.col;
+        boundary[i] = b.min(program.work.compute_cycles[i]);
+    }
+    program.work.boundary_compute_cycles = boundary;
+    program
 }
 
 /// Outcome: the stencil-applied blocks (core-indexed) plus timing. Thin
@@ -363,6 +413,49 @@ mod tests {
         // 2 cores × 1 neighbor × 4 tiles × 1 row = 8 messages.
         assert_eq!(t_ns.messages, 8);
         assert_eq!(t_ew.messages, 4 * t_ns.messages);
+    }
+
+    #[test]
+    fn die_lowering_splits_seam_rows_only() {
+        let grid = TensixGrid::new(3, 2).unwrap();
+        let cost = CostModel::default();
+        let cfg = StencilConfig::paper_fig11(4, StencilVariant::FULL);
+        let per_side = boundary_tile_cycles(&cost, cfg.unit, cfg.df) * 4;
+        assert!(per_side > 0);
+
+        // No seam: the plain lowering, no split carried.
+        let alone = lower_stencil_die(&grid, &cfg, &cost, false, false);
+        assert_eq!(alone, lower_stencil(&grid, &cfg, &cost));
+        assert!(alone.work.boundary_compute_cycles.is_empty());
+
+        // Middle die: first row consumes the north seam, last row the
+        // south seam, interior rows carry no boundary chain.
+        let mid = lower_stencil_die(&grid, &cfg, &cost, true, true);
+        mid.validate().unwrap();
+        assert_eq!(
+            mid.work.boundary_compute_cycles,
+            vec![per_side, per_side, 0, 0, per_side, per_side]
+        );
+        // The split never changes the totals: Serial timing is the
+        // unsplit model's bit for bit.
+        assert_eq!(mid.work.compute_cycles, alone.work.compute_cycles);
+        assert_eq!(mid.work.riscv_cycles, alone.work.riscv_cycles);
+        assert_eq!(mid.work.data_movement, alone.work.data_movement);
+
+        // A one-row die on both seams stacks the two sides on one core.
+        let thin = TensixGrid::new(1, 2).unwrap();
+        let both = lower_stencil_die(&thin, &cfg, &cost, true, true);
+        both.validate().unwrap();
+        assert_eq!(both.work.boundary_compute_cycles, vec![2 * per_side; 2]);
+        // The boundary chain stays a strict subset of the local compute.
+        for (b, c) in both
+            .work
+            .boundary_compute_cycles
+            .iter()
+            .zip(&both.work.compute_cycles)
+        {
+            assert!(b < c);
+        }
     }
 
     #[test]

@@ -27,10 +27,13 @@
 //! kernel, write a lowering — not a timing path.
 //!
 //! Beyond one die, [`device::DeviceMesh`] models N Ethernet-connected
-//! dies (n150 → n300 → Galaxy; line or ring), and
+//! dies (n150 → n300 → Galaxy; line or ring) with per-link occupancy
+//! ([`device::EthSim`]: shared links serialize concurrent hops), and
 //! [`solver::solve_pcg_mesh`] distributes PCG across them with
 //! trajectories bit-identical to the single-die solver — the §8
-//! multi-device future work, built in.
+//! multi-device future work, built in. `MeshOptions::overlap` picks the
+//! seam schedule: serial (the paper's model) or pipelined (interior
+//! compute hides the halo via the lowered interior/boundary split).
 //! - **Layer 2** (`python/compile/model.py`): per-core compute graphs in
 //!   JAX, AOT-lowered to HLO text artifacts.
 //! - **Layer 1** (`python/compile/kernels/`): Pallas kernels for the

@@ -29,7 +29,7 @@ use wormsim::util::stats::fmt_ns;
 
 const VALUE_KEYS: &[&str] = &[
     "engine", "artifacts", "config", "iters", "seed", "grid", "tiles", "variant", "tol",
-    "pattern", "method", "out", "trace", "dies", "topology",
+    "pattern", "method", "out", "trace", "dies", "topology", "overlap",
 ];
 const FLAGS: &[&str] = &["help", "quiet"];
 
@@ -207,6 +207,7 @@ fn cmd_solve_mesh(
     use wormsim::solver::Operator;
 
     let topology: MeshTopology = args.get_parsed("topology", "line")?;
+    let overlap: wormsim::solver::OverlapMode = args.get_parsed("overlap", "serial")?;
     let mesh = DeviceMesh::new(dies, rows, cols, topology, EthLink::for_dies(dies))
         .map_err(|e| e.to_string())?;
 
@@ -228,10 +229,11 @@ fn cmd_solve_mesh(
         coeffs: StencilCoeffs::LAPLACIAN,
     };
     println!(
-        "PCG {} on {dies} x {rows}x{cols}-core dies ({} mesh, {} cores), {tiles} tiles/core, engine {}",
+        "PCG {} on {dies} x {rows}x{cols}-core dies ({} mesh, {} cores), {tiles} tiles/core, {} overlap, engine {}",
         variant.label(),
         topology.label(),
         mesh.n_cores(),
+        overlap.label(),
         ctx.engine.name()
     );
     let b = solver::mesh_dist_random(&mesh, tiles, df, ctx.seed);
@@ -242,7 +244,7 @@ fn cmd_solve_mesh(
         &Operator::Stencil(stencil_cfg),
         ctx.engine.as_ref(),
         &ctx.cost,
-        &opts,
+        &wormsim::solver::MeshOptions::new(opts).with_overlap(overlap),
         &mut prof,
     )
     .map_err(|e| e.to_string())?;
@@ -268,11 +270,12 @@ fn cmd_solve_mesh(
             fmt_ns(res.phases.dispatch_ns)
         );
         println!(
-            "launches {} ({:.2}/iter), device gaps {}, Ethernet {} bytes/solve",
+            "launches {} ({:.2}/iter), device gaps {}, Ethernet {} bytes/solve, peak link util {:.0}%",
             res.launch.launches,
             res.launches_per_iter(),
             fmt_ns(res.launch.gap_ns),
-            res.eth_bytes_total
+            res.eth_bytes_total,
+            100.0 * res.eth_peak_link_util
         );
     }
     if let Some(trace_path) = args.get("trace") {
@@ -291,7 +294,8 @@ fn print_usage() {
          info                    platform + architecture summary\n  \
          solve                   run the PCG solver (--grid 8x7 --tiles 64 --variant bf16|fp32\n                          \
          --iters N --tol X --pattern naive|center --method 1|2)\n                          \
-         multi-die: --dies N --topology line|ring (--grid = per-die sub-grid)\n  \
+         multi-die: --dies N --topology line|ring --overlap serial|pipelined\n                          \
+         (--grid = per-die sub-grid)\n  \
          figures <id|all>        regenerate paper figures: fig3 fig5 fig6 fig11 fig12a fig12b fig12c fig13\n                          \
          extensions (§8): energy dualdie jacobi ext; solve supports --trace out.json\n  \
          tables <id|all>         regenerate paper tables: t1 t2 t3\n\n\

@@ -87,13 +87,15 @@ pub fn solve_pcg_dualdie(
     popts.max_iters = opts.max_iters;
     popts.tol_abs = opts.tol_abs;
     let mut prof = Profiler::disabled();
+    // The wrapper keeps the PR-4 serial seam model (OverlapMode::Serial
+    // is MeshOptions' default) so DualDieResult timings stay stable.
     let res = solve_pcg_mesh(
         &mesh,
         b,
         &Operator::Stencil(stencil_cfg),
         engine,
         cost,
-        &popts,
+        &popts.into(),
         &mut prof,
     )?;
     Ok(DualDieResult {
@@ -224,7 +226,7 @@ mod tests {
         };
         let mut prof = Profiler::disabled();
         let mesh_res =
-            solve_pcg_mesh(&mesh, &b, &Operator::Stencil(cfg), &e, &cost, &popts, &mut prof)
+            solve_pcg_mesh(&mesh, &b, &Operator::Stencil(cfg), &e, &cost, &popts.into(), &mut prof)
                 .unwrap();
         assert_eq!(wrapped.residual_history, mesh_res.residual_history);
         assert_eq!(wrapped.total_ns, mesh_res.total_ns);

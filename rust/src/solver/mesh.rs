@@ -14,9 +14,34 @@
 //!   NoC — an overlapping [`crate::ttm::EtherPhase`] on the lowered
 //!   "spmv" program;
 //! - each dot product reduces per-die over the NoC tree, then combines +
-//!   broadcasts the scalar across the mesh — an appended `EtherPhase` on
-//!   the "dot"/"norm" programs (chain on a line, both-ways broadcast on a
-//!   ring).
+//!   broadcasts across the mesh — an appended `EtherPhase` on the
+//!   "dot"/"norm" programs: 32 B scalar beats chained on a line
+//!   (both-ways broadcast on a ring), or — under
+//!   [`crate::kernels::DotMethod::SendTiles`] — tile payloads as a
+//!   segmented ring all-reduce whose per-round bandwidth term is
+//!   bytes/N.
+//!
+//! **Interior/boundary split + overlap.** Every per-die "spmv" program
+//! carries its compute cycles split into an *interior* chain (die-local
+//! data only) and a *boundary* chain (consumes the Ethernet seam):
+//! seam-adjacent core rows in the stencil lowering
+//! ([`crate::kernels::stencil::lower_stencil_die`]), cross-die gather
+//! consumers in the sparse one. [`MeshOptions::overlap`] picks the
+//! scheduler rule: [`OverlapMode::Serial`] charges the whole dependent
+//! chain after the seam (`end = max(local, eth + riscv + compute)` —
+//! the paper's model, bit-identical to the pre-split trajectory), while
+//! [`OverlapMode::Pipelined`] runs the boundary chain concurrently with
+//! the interior chain (per core, `end = max(interior, eth) + boundary`;
+//! only the Ethernet wait is hidden, never the boundary compute) — the
+//! iteration-level software pipeline of real multi-die stencils.
+//! Values are engine-side and identical in both modes.
+//!
+//! **Contended links.** Ethernet phases execute through the per-link
+//! occupancy tracker [`crate::device::EthSim`] (the inter-die
+//! counterpart of `NocSim`): concurrent hops sharing a physical link
+//! serialize on its bandwidth term, and the busiest link's utilization
+//! surfaces in [`MeshPcgResult::eth_peak_link_util`], the per-program
+//! `ProgramOutcome`, and the profiler's per-link zones.
 //!
 //! Both [`Operator::Stencil`] (per-die stencil lowering + analytic seam)
 //! and [`Operator::Sparse`] (per-die program slices + the partition's
@@ -31,13 +56,46 @@ use crate::arch::constants::{SRAM_BYTES, SRAM_RESERVE_FUSED};
 use crate::device::DeviceMesh;
 use crate::engine::{ComputeEngine, CoreBlock, Halos, StencilCoeffs};
 use crate::kernels::eltwise::lower_block_op;
-use crate::kernels::reduction::{lower_dot_as, DotConfig};
+use crate::kernels::reduction::{lower_dot_as, DotConfig, DotMethod};
 use crate::profiler::{Breakdown, Profiler};
 use crate::solver::pcg::{Operator, PcgOptions, Precond, PCG_ITERATION};
 use crate::solver::problem::DistVector;
 use crate::timing::cost::{CostModel, PipelineMode, TileOpKind};
 use crate::timing::SimNs;
-use crate::ttm::{EtherPhase, HostQueue, IterSchedule, LaunchStats, Program, ProgramOutcome};
+use crate::ttm::{
+    EtherPhase, HostQueue, IterSchedule, LaunchStats, OverlapMode, Program, ProgramOutcome,
+};
+
+/// Options of a mesh solve: the per-iteration PCG options plus the §8
+/// seam-overlap rule. [`OverlapMode::Serial`] reproduces the paper's
+/// model (and the pre-split trajectory) exactly; `Pipelined` lets the
+/// scheduler hide the Ethernet seam wait under the interior compute chain —
+/// values are identical either way, only the clock moves.
+#[derive(Debug, Clone)]
+pub struct MeshOptions {
+    pub pcg: PcgOptions,
+    pub overlap: OverlapMode,
+}
+
+impl MeshOptions {
+    pub fn new(pcg: PcgOptions) -> Self {
+        Self {
+            pcg,
+            overlap: OverlapMode::Serial,
+        }
+    }
+
+    pub fn with_overlap(mut self, overlap: OverlapMode) -> Self {
+        self.overlap = overlap;
+        self
+    }
+}
+
+impl From<PcgOptions> for MeshOptions {
+    fn from(pcg: PcgOptions) -> Self {
+        Self::new(pcg)
+    }
+}
 
 /// Per-iteration device time split by transport — the
 /// compute/NoC/Ethernet/dispatch view of the strong-scaling sweep.
@@ -70,6 +128,10 @@ pub struct MeshPcgResult {
     pub eth_ns_per_iter: SimNs,
     /// Total bytes moved over Ethernet links during the solve.
     pub eth_bytes_total: u64,
+    /// Peak per-link utilization across all components' Ethernet phases
+    /// (1.0 = some physical link was the serialized bottleneck for a
+    /// whole phase; 0.0 on a single die).
+    pub eth_peak_link_util: f64,
     /// Per-component device time (the Fig-13 view).
     pub breakdown: Breakdown,
     /// Per-iteration transport split (compute / NoC / Ethernet / dispatch).
@@ -173,33 +235,60 @@ pub struct MeshLowering {
 pub fn lower_mesh_components(
     mesh: &DeviceMesh,
     operator: &Operator<'_>,
-    opts: &PcgOptions,
+    opts: &MeshOptions,
     tiles: usize,
     precond_kind: TileOpKind,
     cost: &CostModel,
 ) -> crate::Result<MeshLowering> {
-    let df = opts.variant.df();
-    let unit = opts.variant.unit();
+    let df = opts.pcg.variant.df();
+    let unit = opts.pcg.variant.unit();
     let (rows, cols) = (mesh.die_rows, mesh.die_cols);
 
     // The matrix apply: per-die lowering + the Ethernet seam.
-    let spmv_per_die: Vec<Program> = match operator {
+    let mut spmv_per_die: Vec<Program> = match operator {
         Operator::Stencil(cfg) => {
-            // Every die runs the same per-die stencil program (the die
-            // sub-grid's NoC halo schedule; the seam rides Ethernet).
+            // One program per die: the same die sub-grid NoC halo
+            // schedule, but the interior/boundary compute split depends
+            // on which seams the die touches (end dies one, middle dies
+            // two). The seam itself rides the shared Ethernet phase.
             let die_grid = mesh.die_grid()?;
-            let mut p = crate::kernels::stencil::lower_stencil(&die_grid, cfg, cost);
-            p.name = "spmv".to_string();
             let one_way = seam_bytes_one_way(cols, cfg.tiles_per_core, cfg.df);
             let flows: Vec<(usize, usize, u64)> = (0..mesh.n_dies.saturating_sub(1))
                 .flat_map(|d| [(d, d + 1, one_way), (d + 1, d, one_way)])
                 .collect();
-            p.work.ether = EtherPhase::halo("halo", mesh, &flows);
-            p.footprint.eth_bytes = p.work.ether.as_ref().map_or(0, |e| e.bytes());
-            vec![p]
+            let ether = EtherPhase::halo("halo", mesh, &flows);
+            let eth_bytes = ether.as_ref().map_or(0, |e| e.bytes());
+            // Only the seam pair distinguishes dies (≤ 3 variants across
+            // any N), so memoize the lowering instead of rebuilding the
+            // full NoC schedule per die.
+            let mut variants: BTreeMap<(bool, bool), Program> = BTreeMap::new();
+            (0..mesh.n_dies)
+                .map(|d| {
+                    let seams = (d > 0, d + 1 < mesh.n_dies);
+                    let mut p = variants
+                        .entry(seams)
+                        .or_insert_with(|| {
+                            let mut p = crate::kernels::stencil::lower_stencil_die(
+                                &die_grid, cfg, cost, seams.0, seams.1,
+                            );
+                            p.name = "spmv".to_string();
+                            p.work.ether = ether.clone();
+                            p.footprint.eth_bytes = eth_bytes;
+                            p
+                        })
+                        .clone();
+                    for k in &mut p.kernels {
+                        k.ct_args.push(("die".to_string(), d.to_string()));
+                    }
+                    p
+                })
+                .collect()
         }
         Operator::Sparse(op) => op.lower_mesh(mesh, cost)?,
     };
+    for p in &mut spmv_per_die {
+        p.work.overlap = opts.overlap;
+    }
     // The schedule keys one program per component name: bind on the
     // per-die candidate with the largest SRAM working set (they tie for
     // the stencil; the SpMV footprint is already the global maximum).
@@ -212,13 +301,20 @@ pub fn lower_mesh_components(
         })?;
 
     let dot_cfg = DotConfig {
-        method: opts.dot_method,
-        pattern: opts.dot_pattern,
+        method: opts.pcg.dot_method,
+        pattern: opts.pcg.dot_pattern,
         df,
         unit,
         tiles_per_core: tiles,
     };
-    let allreduce = EtherPhase::scalar_allreduce(mesh);
+    // The inter-die all-reduce payload follows the §5.1 granularity
+    // choice: method 1 combines 32 B scalar beats, method 2 exchanges
+    // whole partial tiles — which on a ring becomes the segmented ring
+    // all-reduce whose per-round bandwidth term is bytes/N.
+    let allreduce = match opts.pcg.dot_method {
+        DotMethod::ReduceThenSend => EtherPhase::scalar_allreduce(mesh),
+        DotMethod::SendTiles => EtherPhase::allreduce(mesh, df.tile_bytes() as u64),
+    };
     let with_allreduce = |mut p: Program| {
         p.work.ether = allreduce.clone();
         p.footprint.eth_bytes = p.work.ether.as_ref().map_or(0, |e| e.bytes());
@@ -259,19 +355,22 @@ pub fn lower_mesh_components(
 
 /// Solve `A x = b` with PCG distributed over the mesh. Values are
 /// bit-identical to [`crate::solver::solve_operator`] on the same
-/// logical problem; timing re-routes the seam and the scalar combines
-/// over Ethernet. `b` holds one block per logical core, die-major.
+/// logical problem — in either overlap mode; timing re-routes the seam
+/// and the scalar combines over Ethernet, and
+/// [`OverlapMode::Pipelined`] additionally hides the seam wait under
+/// the interior compute chain. `b` holds one block per logical core,
+/// die-major.
 pub fn solve_pcg_mesh(
     mesh: &DeviceMesh,
     b: &DistVector,
     operator: &Operator<'_>,
     engine: &dyn ComputeEngine,
     cost: &CostModel,
-    opts: &PcgOptions,
+    opts: &MeshOptions,
     profiler: &mut Profiler,
 ) -> crate::Result<MeshPcgResult> {
-    let fused = opts.fused();
-    let df = opts.variant.df();
+    let fused = opts.pcg.fused();
+    let df = opts.pcg.variant.df();
     let logical_rows = mesh.logical_rows();
     let cols = mesh.die_cols;
     if b.len() != mesh.n_cores() {
@@ -296,7 +395,7 @@ pub fn solve_pcg_mesh(
             what: format!(
                 "rhs data format {} does not match variant {}",
                 first.df,
-                opts.variant.label()
+                opts.pcg.variant.label()
             ),
         });
     }
@@ -308,7 +407,7 @@ pub fn solve_pcg_mesh(
     }
 
     // ---- preconditioner (engine-side; identical to single-die) ----------
-    let precond = operator.jacobi(df, opts.precondition)?;
+    let precond = operator.jacobi(df, opts.pcg.precondition)?;
     let precond_kind = match &precond {
         Precond::Scalar(_) => TileOpKind::EltwiseUnary,
         Precond::PerElement(_) => TileOpKind::EltwiseBinary,
@@ -394,6 +493,13 @@ pub fn solve_pcg_mesh(
     let mut phases_total = MeshPhaseBreakdown::default();
     let mut eth_ns_total: SimNs = 0.0;
     let mut eth_bytes_total: u64 = 0;
+    // Peak per-link utilization over every component's Ethernet phase —
+    // the contended-link headline number of the strong-scaling sweep.
+    let eth_peak_link_util: f64 = components
+        .values()
+        .flat_map(|c| c.outcome.eth_link_util.iter())
+        .map(|&(_, _, u)| u)
+        .fold(0.0, f64::max);
     let mut readbacks: u64 = 0;
     let mut now: SimNs = 0.0;
 
@@ -422,7 +528,7 @@ pub fn solve_pcg_mesh(
     let mut history = Vec::new();
     let mut iters = 0;
     let mut converged = false;
-    while iters < opts.max_iters {
+    while iters < opts.pcg.max_iters {
         iters += 1;
         // q = A p (stencil seam or sparse cut over Ethernet).
         let q = apply(&p)?;
@@ -455,7 +561,7 @@ pub fn solve_pcg_mesh(
         if !sched.is_fused() {
             readbacks += 1;
         }
-        if rnorm <= opts.tol_abs {
+        if rnorm <= opts.pcg.tol_abs {
             converged = true;
             break;
         }
@@ -494,6 +600,7 @@ pub fn solve_pcg_mesh(
         per_iter_ns: if iters > 0 { now / it } else { 0.0 },
         eth_ns_per_iter: if iters > 0 { eth_ns_total / it } else { 0.0 },
         eth_bytes_total,
+        eth_peak_link_util,
         breakdown,
         phases: MeshPhaseBreakdown {
             compute_ns: phases_total.compute_ns / it,
@@ -547,7 +654,7 @@ mod tests {
             &Operator::Stencil(stencil_cfg(DataFormat::Bf16, tiles)),
             &e,
             &cost,
-            &opts,
+            &MeshOptions::new(opts),
             &mut prof,
         )
         .unwrap();
@@ -559,6 +666,8 @@ mod tests {
         assert_eq!(res.launch.launches, 1, "fused: one enqueue per solve");
         assert!(res.launch.gap_ns > 0.0);
         assert!(res.phases.ether_ns > 0.0 && res.phases.compute_ns > 0.0);
+        // The halo phase saturates its busiest link for the whole window.
+        assert!(res.eth_peak_link_util > 0.9 && res.eth_peak_link_util <= 1.0);
     }
 
     #[test]
@@ -577,12 +686,13 @@ mod tests {
             &Operator::Stencil(stencil_cfg(DataFormat::Fp32, 2)),
             &e,
             &cost,
-            &opts,
+            &opts.into(),
             &mut prof,
         )
         .unwrap();
         assert_eq!(res.eth_bytes_total, 0);
         assert_eq!(res.eth_ns_per_iter, 0.0);
+        assert_eq!(res.eth_peak_link_util, 0.0);
         assert_eq!(res.launch.launches, 8 * 5, "split: 8 enqueues/iter");
     }
 
@@ -600,7 +710,7 @@ mod tests {
             &Operator::Stencil(stencil_cfg(DataFormat::Bf16, 165)),
             &e,
             &cost,
-            &opts,
+            &opts.into(),
             &mut prof,
         )
         .is_err());

@@ -104,6 +104,12 @@ pub struct DieCutPlan {
     pub bytes: BTreeMap<(usize, usize), u64>,
     /// Remote entries each die satisfies over its own NoC.
     pub intra_entries: Vec<u64>,
+    /// Payload bytes each die's NoC carries for those entries, at the
+    /// same per-(owner, consumer) 32 B batch rounding as the Ethernet
+    /// side — so `cut_bytes() + intra_bytes.sum()` is exactly the
+    /// single-die [`GatherPlan::bytes`] total (no double counting, no
+    /// dropped batch; pinned in `tests/prop_sparse.rs`).
+    pub intra_bytes: Vec<u64>,
 }
 
 impl DieCutPlan {
@@ -319,16 +325,22 @@ impl RowPartition {
         let mut entries: BTreeMap<(usize, usize), u64> = BTreeMap::new();
         let mut bytes: BTreeMap<(usize, usize), u64> = BTreeMap::new();
         let mut intra_entries = vec![0u64; n_dies];
+        let mut intra_bytes = vec![0u64; n_dies];
         for (consumer, by_owner) in gather.per_core.iter().enumerate() {
             let cd = die_of(consumer);
             for (&owner, &cnt) in by_owner {
                 let od = die_of(owner);
+                // Every (owner, consumer) batch is classified exactly
+                // once, at the same 32 B beat rounding on both sides of
+                // the split, so the cut + the per-die NoC remainder
+                // reproduce the single-die gather bytes exactly.
+                let batch = ((cnt * df.bytes()) as u64).div_ceil(L1_ALIGN as u64) * L1_ALIGN as u64;
                 if od == cd {
                     intra_entries[cd] += cnt as u64;
+                    intra_bytes[cd] += batch;
                 } else {
                     *entries.entry((od, cd)).or_insert(0) += cnt as u64;
-                    *bytes.entry((od, cd)).or_insert(0) +=
-                        ((cnt * df.bytes()) as u64).div_ceil(L1_ALIGN as u64) * L1_ALIGN as u64;
+                    *bytes.entry((od, cd)).or_insert(0) += batch;
                 }
             }
         }
@@ -338,6 +350,7 @@ impl RowPartition {
             entries,
             bytes,
             intra_entries,
+            intra_bytes,
         })
     }
 
@@ -466,6 +479,12 @@ mod tests {
         assert_eq!(
             cut.cut_entries() + cut.intra_entries.iter().sum::<u64>(),
             plan.remote_entries
+        );
+        // Byte-level conservation at batch granularity: Ethernet cut +
+        // per-die NoC remainder = the single-die gather total.
+        assert_eq!(
+            cut.cut_bytes() + cut.intra_bytes.iter().sum::<u64>(),
+            plan.bytes(DataFormat::Fp32)
         );
         // One die: everything is NoC-local.
         let whole = part.die_cut(&plan, 1, DataFormat::Fp32).unwrap();

@@ -5,9 +5,17 @@
 //! [`execute_program`] is the one place per-phase timing is computed for
 //! every kernel: it threads the NoC simulator through the program's
 //! data-movement queues (cold/warm issue costs per §6.3), charges each
-//! core's DRAM staging, RISC-V element loop, and compute pipeline, and
-//! runs the optional global reduction tree + broadcast (§5). Kernels do
-//! not time themselves — they lower, and [`crate::ttm::HostQueue::run`]
+//! core's DRAM staging, RISC-V element loop, and compute pipeline, runs
+//! the optional global reduction tree + broadcast (§5), and drives any
+//! inter-die Ethernet phase through the per-link occupancy tracker
+//! ([`crate::device::EthSim`] — shared links serialize). For overlapping
+//! seam phases the workload's [`crate::ttm::OverlapMode`] selects the
+//! composition rule: Serial charges the dependent RISC-V + compute chain
+//! after the seam (`max(local, eth + riscv + compute)`); Pipelined runs
+//! only the boundary carve-out after the seam, concurrent with the
+//! interior chain (per core, `max(interior, eth) + boundary` — only the
+//! seam wait is hidden, never the boundary compute). Kernels do not time
+//! themselves — they lower, and [`crate::ttm::HostQueue::run`]
 //! dispatches here.
 //!
 //! The second half of this module is the device-kernel execution of the
@@ -59,6 +67,10 @@ pub struct ProgramOutcome {
     pub compute_ns: SimNs,
     /// Slowest core's whole local phase (RISC-V + compute together).
     pub local_ns: SimNs,
+    /// Slowest core's *boundary* chain (the seam-dependent RISC-V +
+    /// compute portion of the interior/boundary split; zero when the
+    /// lowering carried no split).
+    pub boundary_ns: SimNs,
     /// Reduction-tree network phase past the slowest local phase.
     pub reduce_ns: SimNs,
     /// Result broadcast.
@@ -71,6 +83,14 @@ pub struct ProgramOutcome {
     /// Ethernet link messages/bytes, counted separately from the NoC.
     pub eth_messages: u64,
     pub eth_bytes: u64,
+    /// Per physical Ethernet link `(lo, hi, busy fraction)` of the
+    /// program's Ethernet phase window — 1.0 means the link was the
+    /// serialized bottleneck for the whole phase.
+    pub eth_link_util: Vec<(usize, usize, f64)>,
+    /// Every link transfer of the Ethernet phase, at absolute simulated
+    /// times (queueing on contended links included); feeds the per-link
+    /// profiler zones.
+    pub eth_transfers: Vec<crate::device::EthTransfer>,
 }
 
 impl ProgramOutcome {
@@ -122,6 +142,14 @@ pub fn execute_program(program: &Program, cost: &CostModel, start: SimNs) -> Res
         ..ProgramOutcome::default()
     };
     let mut end = start;
+    // Interior chain: the per-core local phase minus the boundary
+    // (seam-dependent) suffix — what a pipelined schedule can finish
+    // before the Ethernet phase drains. Kept per core (with the matching
+    // boundary durations) because the pipelined rule composes them per
+    // core: boundary work still runs on the same single pipeline as the
+    // interior chain.
+    let mut interior_done = vec![start; n];
+    let mut boundary_dur = vec![0.0f64; n];
     for i in 0..n {
         let ready = send_done[i].max(recv_ready[i]);
         let dram_b = at(&w.dram_bytes, i);
@@ -130,16 +158,29 @@ pub fn execute_program(program: &Program, cost: &CostModel, start: SimNs) -> Res
         } else {
             crate::timing::cycles_ns(cost.dram_stream_cycles(dram_b))
         };
-        let riscv = crate::timing::cycles_ns(at(&w.riscv_cycles, i));
-        let compute = crate::timing::cycles_ns(at(&w.compute_cycles, i));
+        let riscv_cyc = at(&w.riscv_cycles, i);
+        let compute_cyc = at(&w.compute_cycles, i);
+        let b_riscv_cyc = at(&w.boundary_riscv_cycles, i).min(riscv_cyc);
+        let b_compute_cyc = at(&w.boundary_compute_cycles, i).min(compute_cyc);
+        let riscv = crate::timing::cycles_ns(riscv_cyc);
+        let compute = crate::timing::cycles_ns(compute_cyc);
+        let boundary =
+            crate::timing::cycles_ns(b_riscv_cyc) + crate::timing::cycles_ns(b_compute_cyc);
+        let interior = ready
+            + dram
+            + crate::timing::cycles_ns(riscv_cyc - b_riscv_cyc)
+            + crate::timing::cycles_ns(compute_cyc - b_compute_cyc);
         let done = ready + dram + riscv + compute;
         core_done[i] = done;
         end = end.max(done);
+        interior_done[i] = interior;
+        boundary_dur[i] = boundary;
         out.data_movement_ns = out.data_movement_ns.max(ready - start);
         out.dram_ns = out.dram_ns.max(dram);
         out.riscv_ns = out.riscv_ns.max(riscv);
         out.compute_ns = out.compute_ns.max(compute);
         out.local_ns = out.local_ns.max(riscv + compute);
+        out.boundary_ns = out.boundary_ns.max(boundary);
     }
 
     // ---- global reduction tree + broadcast (§5) -------------------------
@@ -186,22 +227,62 @@ pub fn execute_program(program: &Program, cost: &CostModel, start: SimNs) -> Res
 
     // ---- inter-die Ethernet phase (§8 multi-device) ---------------------
     if let Some(eth) = &w.ether {
-        let dur = eth.duration_ns();
+        // Every hop goes through the per-link occupancy tracker: hops of
+        // one round sharing a physical link serialize on its bandwidth
+        // term instead of riding independent pipes.
+        let mut eth_sim = crate::device::EthSim::new();
+        let phase_start = if eth.overlaps_local { start } else { end };
+        let phase_end = eth.run(&mut eth_sim, phase_start);
+        let dur = phase_end - phase_start;
         out.ether_ns = dur;
-        out.eth_messages = eth.messages();
-        out.eth_bytes = eth.bytes();
+        out.eth_messages = eth_sim.messages;
+        out.eth_bytes = eth_sim.bytes;
+        out.eth_link_util = eth_sim.utilization(dur);
+        out.eth_transfers = eth_sim.transfers;
+        // Pipelining needs the lowering to have said WHICH work consumes
+        // the seam. Without any declared split the whole dependent chain
+        // is assumed seam-bound — the conservative Serial rule — so an
+        // unsplit workload times identically in both modes. A reduction
+        // phase likewise forces Serial: the tree consumes every core's
+        // FULL local result, so `end` already carries reduce/broadcast
+        // time past the local phase and the interior/boundary rewrite
+        // below (which replaces the local critical path wholesale) would
+        // silently erase it.
+        let has_split = w
+            .boundary_riscv_cycles
+            .iter()
+            .chain(&w.boundary_compute_cycles)
+            .any(|&b| b > 0);
         if eth.overlaps_local {
-            // The seam exchange overlaps the NoC halo phase and DRAM
-            // staging, but the dependent local phase — the RISC-V element
-            // loop (which assembles seam values on the sparse path) and
-            // the compute pipeline — cannot complete before the seam data
-            // lands: the program takes whichever chain finishes later
-            // (the dual-die seam model, generalized).
-            end = end.max(start + dur + out.riscv_ns + out.compute_ns);
+            match w.overlap {
+                crate::ttm::OverlapMode::Pipelined if has_split && w.reduce.is_none() => {
+                    // The interior chain never waits for the seam; the
+                    // boundary chain starts once BOTH its core's interior
+                    // chain is done (one pipeline per core — the boundary
+                    // compute itself is never free) and the seam has
+                    // landed, so each core ends at
+                    // max(interior_i, eth) + boundary_i and the program
+                    // at the slowest core. Only the Ethernet *wait* is
+                    // hidden — the iteration-level software pipeline.
+                    end = (0..n)
+                        .map(|i| interior_done[i].max(phase_end) + boundary_dur[i])
+                        .fold(start, f64::max);
+                }
+                _ => {
+                    // The seam exchange overlaps the NoC halo phase and
+                    // DRAM staging, but the dependent local phase — the
+                    // RISC-V element loop (which assembles seam values on
+                    // the sparse path) and the compute pipeline — cannot
+                    // complete before the seam data lands: the program
+                    // takes whichever chain finishes later (the dual-die
+                    // seam model, generalized).
+                    end = end.max(start + dur + out.riscv_ns + out.compute_ns);
+                }
+            }
         } else {
             // Reductions combine per-die results: strictly after the
             // local + NoC reduction phases.
-            end += dur;
+            end = phase_end;
         }
     }
 
@@ -419,6 +500,83 @@ mod tests {
             assert_eq!(stats.cb_pushes, 2);
             assert_eq!(stats.cb_pops, 2);
         }
+    }
+
+    #[test]
+    fn pipelined_overlap_hides_interior_under_the_seam() {
+        use crate::device::{DeviceMesh, MeshTopology, EthLink};
+        use crate::ttm::program::{EtherPhase, OverlapMode};
+        let cost = CostModel::default();
+        let mesh = DeviceMesh::new(2, 1, 2, MeshTopology::Line, EthLink::default()).unwrap();
+        let phase = EtherPhase::halo("halo", &mesh, &[(0, 1, 4096), (1, 0, 4096)]).unwrap();
+        let eth_ns = phase.duration_ns();
+
+        let mut p = Program::standard("seam");
+        p.work.grid = (1, 2);
+        p.work.riscv_cycles = vec![500, 500];
+        p.work.compute_cycles = vec![10_000, 10_000];
+        p.work.boundary_compute_cycles = vec![2_000, 2_000];
+        p.work.ether = Some(phase);
+
+        // Serial: the split is carried but ignored — the §8 rule
+        // max(local, eth + riscv + compute), exactly the pre-split model.
+        let serial = execute_program(&p, &cost, 0.0).unwrap();
+        let riscv = crate::timing::cycles_ns(500);
+        let compute = crate::timing::cycles_ns(10_000);
+        assert!((serial.device_ns() - (eth_ns + riscv + compute)).abs() < 1e-6);
+        assert_eq!(serial.boundary_ns, crate::timing::cycles_ns(2_000));
+        // Link utilization of the one loaded seam link is reported.
+        assert_eq!(serial.eth_link_util, vec![(0, 1, 1.0)]);
+        assert_eq!(serial.eth_transfers.len(), 1);
+
+        // Pipelined: each core's boundary chain starts once its interior
+        // chain AND the seam are done — max(interior, eth) + boundary.
+        // Only the Ethernet wait is hidden; the boundary compute itself
+        // is never free (it shares the core's pipeline).
+        p.work.overlap = OverlapMode::Pipelined;
+        let piped = execute_program(&p, &cost, 0.0).unwrap();
+        let boundary = crate::timing::cycles_ns(2_000);
+        let interior = crate::timing::cycles_ns(500) + crate::timing::cycles_ns(8_000);
+        assert!((piped.device_ns() - (interior.max(eth_ns) + boundary)).abs() < 1e-6);
+        assert!(piped.device_ns() < serial.device_ns());
+        // A seam longer than the interior chain gates the boundary work:
+        // shrink the compute so eth binds and the end tracks the seam.
+        let mut gated = p.clone();
+        gated.work.compute_cycles = vec![400, 400];
+        gated.work.boundary_compute_cycles = vec![300, 300];
+        let g = execute_program(&gated, &cost, 0.0).unwrap();
+        let g_interior = crate::timing::cycles_ns(500) + crate::timing::cycles_ns(100);
+        assert!(g_interior < eth_ns);
+        assert!((g.device_ns() - (eth_ns + crate::timing::cycles_ns(300))).abs() < 1e-6);
+
+        // A workload without a split times identically in both modes.
+        p.work.boundary_compute_cycles.clear();
+        let unsplit = execute_program(&p, &cost, 0.0).unwrap();
+        assert_eq!(unsplit.device_ns(), serial.device_ns());
+
+        // Launch-offset invariance holds for the pipelined rule too.
+        p.work.boundary_compute_cycles = vec![2_000, 2_000];
+        let shifted = execute_program(&p, &cost, 123.0).unwrap();
+        assert!((shifted.device_ns() - piped.device_ns()).abs() < 1e-6);
+
+        // A reduction phase forces the Serial rule even under Pipelined:
+        // the tree consumes every core's FULL local result, so the
+        // interior/boundary rewrite must not erase its time.
+        use crate::noc::RoutePattern;
+        use crate::ttm::program::ReduceSpec;
+        p.work.reduce = Some(ReduceSpec {
+            pattern: RoutePattern::Naive,
+            payload_bytes: 32,
+            merge_cycles: 10,
+            root_extra_cycles: 0,
+            bcast_bytes: 0,
+        });
+        let piped_reduce = execute_program(&p, &cost, 0.0).unwrap();
+        let mut with_serial = p.clone();
+        with_serial.work.overlap = OverlapMode::Serial;
+        let serial_reduce = execute_program(&with_serial, &cost, 0.0).unwrap();
+        assert_eq!(piped_reduce.end, serial_reduce.end);
+        assert!(piped_reduce.reduce_ns > 0.0);
     }
 
     #[test]

@@ -135,29 +135,17 @@ fn emit_role_zones(program: &Program, out: &ProgramOutcome, profiler: &mut Profi
         profiler.record(&k.name, scope, s, e);
     }
     if let Some(eth) = &program.work.ether {
-        // Per-link zones: rounds are serial; a link's zone spans the
-        // rounds it is loaded in. An overlapping halo phase starts with
-        // the program, a reduction phase ends it.
-        let mut cursor = if eth.overlaps_local {
-            out.start
-        } else {
-            out.end - out.ether_ns
-        };
-        for round in &eth.rounds {
-            let round_ns = round
-                .iter()
-                .map(|h| eth.link.transfer_ns(h.bytes))
-                .fold(0.0f64, f64::max);
-            for hop in round {
-                let (lo, hi) = (hop.src_die.min(hop.dst_die), hop.src_die.max(hop.dst_die));
-                profiler.record(
-                    &format!("{}:eth{lo}-{hi}", eth.label),
-                    "ethernet",
-                    cursor,
-                    cursor + eth.link.transfer_ns(hop.bytes),
-                );
-            }
-            cursor += round_ns;
+        // Per-link zones, straight from the occupancy tracker's record:
+        // each transfer's window includes any queueing behind earlier
+        // traffic on its physical link, so a saturated link shows as one
+        // contiguous busy span.
+        for t in &out.eth_transfers {
+            profiler.record(
+                &format!("{}:eth{}-{}", eth.label, t.link.0, t.link.1),
+                "ethernet",
+                t.start,
+                t.end,
+            );
         }
     }
 }

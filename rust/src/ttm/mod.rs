@@ -27,6 +27,6 @@ pub mod program;
 pub use exec::{execute_program, stencil_tile_kernel, KernelStats, ProgramOutcome, TileHalos};
 pub use launch::{HostQueue, IterSchedule, LaunchStats};
 pub use program::{
-    EthHop, EtherPhase, Footprint, FusedProgram, KernelRole, KernelSpec, NocSend, Program,
-    ReduceSpec, SendQueue, Workload,
+    EthHop, EtherPhase, Footprint, FusedProgram, KernelRole, KernelSpec, NocSend, OverlapMode,
+    Program, ReduceSpec, SendQueue, Workload,
 };

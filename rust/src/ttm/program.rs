@@ -11,13 +11,68 @@
 //! [`crate::ttm::launch`] is the only place dispatch overhead, per-phase
 //! timing, and profiler zones are produced.
 //!
+//! Multi-die workloads additionally carry an **interior/boundary split**
+//! of their per-core cycles (`boundary_*_cycles`: the chain that
+//! consumes inter-die seam data, always a carve-out of the same totals)
+//! and an [`OverlapMode`] telling the scheduler whether the boundary
+//! chain is charged serially after the [`EtherPhase`] (the paper's
+//! model) or pipelined concurrently with the interior chain. Ethernet
+//! hops themselves execute through the [`crate::device::EthSim`]
+//! per-link occupancy tracker, so concurrent hops sharing a physical
+//! link serialize instead of riding independent pipes.
+//!
 //! [`Program::fuse`] merges compatible per-iteration programs into a
 //! [`FusedProgram`] — the §7.1 fused-kernel PCG — subject to an SRAM
 //! capacity check on the binding per-core footprint.
 
-use crate::device::mesh::EthLink;
+use crate::device::mesh::{EthLink, EthSim};
 use crate::device::Coord;
 use crate::noc::RoutePattern;
+use crate::timing::SimNs;
+
+/// How an overlapping Ethernet phase composes with the per-core local
+/// phase (the §8 seam-hiding rule the scheduler applies):
+///
+/// - **Serial** (the default, and the paper's model): the dependent
+///   RISC-V + compute chain is charged entirely after the seam lands —
+///   `end = max(local, eth + riscv + compute)`.
+/// - **Pipelined**: the lowering split each core's cycles into an
+///   *interior* chain (independent of the seam) and a *boundary* chain
+///   (consumes seam data); the boundary chain runs concurrently with the
+///   interior chain as soon as the Ethernet phase drains —
+///   each core ends at `max(interior, eth) + boundary` (only the seam
+///   *wait* is hidden — the boundary compute still runs on the core's
+///   one pipeline) — the software pipeline real multi-die stencils use
+///   (seam of iteration k+1 under interior compute of iteration k).
+///
+/// Programs whose workload carries no boundary split (or no overlapping
+/// Ethernet phase) time identically in both modes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OverlapMode {
+    #[default]
+    Serial,
+    Pipelined,
+}
+
+impl OverlapMode {
+    pub fn label(self) -> &'static str {
+        match self {
+            OverlapMode::Serial => "serial",
+            OverlapMode::Pipelined => "pipelined",
+        }
+    }
+}
+
+impl std::str::FromStr for OverlapMode {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "serial" => Ok(OverlapMode::Serial),
+            "pipelined" | "pipeline" | "overlap" => Ok(OverlapMode::Pipelined),
+            _ => Err(format!("unknown overlap mode '{s}' (expected serial|pipelined)")),
+        }
+    }
+}
 
 /// Which baby RISC-V a kernel runs on (§3): the two NoC data-movement
 /// cores, or the compute cores collectively.
@@ -108,10 +163,15 @@ pub struct EthHop {
 ///   lands;
 /// - **scalar combine + broadcast**: 2(N−1) single-hop rounds along the
 ///   chain (on a line, a reduction tree degenerates to exactly this);
-/// - **ring all-reduce**: (N−1) combine rounds plus a both-ways broadcast.
+/// - **ring all-reduce**: (N−1) combine rounds plus a both-ways
+///   broadcast for scalar beats, or — for tile payloads
+///   ([`EtherPhase::allreduce`]) — the segmented reduce-scatter +
+///   all-gather whose per-round bandwidth term is bytes/N.
 ///
 /// The scheduler ([`crate::ttm::exec::execute_program`]) is the only
-/// place this phase is turned into time, alongside NoC and compute.
+/// place this phase is turned into time, alongside NoC and compute —
+/// every hop via the [`EthSim`] per-link occupancy tracker, so hops
+/// sharing a physical link serialize ([`EtherPhase::run`]).
 #[derive(Debug, Clone, PartialEq)]
 pub struct EtherPhase {
     /// Reporting label ("halo", "allreduce", ...).
@@ -167,18 +227,52 @@ impl EtherPhase {
     }
 
     /// Scalar combine + broadcast across the mesh (the dot products'
-    /// network step past the per-die NoC reduction). On a line the
-    /// partials chain down to die 0 and the result chains back —
-    /// 2(N−1) single-hop rounds (a reduction tree on a line degenerates
-    /// to the same hop count, §5-style). A ring broadcasts both ways,
-    /// saving ⌈(N−1)/2⌉ rounds on the way back. One 32 B beat per hop.
+    /// network step past the per-die NoC reduction). One 32 B beat per
+    /// hop — [`EtherPhase::allreduce`] with the minimum payload.
     /// Returns `None` on a single die.
     pub fn scalar_allreduce(mesh: &crate::device::DeviceMesh) -> Option<Self> {
+        Self::allreduce(mesh, 32)
+    }
+
+    /// All-reduce of a `payload_bytes` partial across the mesh. Two
+    /// shapes, picked by what dominates the link cost:
+    ///
+    /// - **latency-bound** (payloads of one 32 B beat, or any payload on
+    ///   a line): combine down the chain, broadcast back — 2(N−1)
+    ///   single-hop rounds, each carrying the whole payload; a ring
+    ///   broadcasts both ways, saving ⌈(N−1)/2⌉ rounds on the way back.
+    /// - **bandwidth-bound** (payloads above one beat on a ring of
+    ///   N > 2): the classic ring all-reduce — a reduce-scatter plus an
+    ///   all-gather of 2(N−1) rounds, each round all N links carrying
+    ///   one ⌈payload/N⌉ segment (32 B-beat aligned), so the per-round
+    ///   bandwidth term is bytes/N. This is what makes
+    ///   [`crate::kernels::DotMethod::SendTiles`] tile payloads honest
+    ///   across dies (ROADMAP "mesh-aware reductions at tile
+    ///   granularity").
+    ///
+    /// Returns `None` on a single die.
+    pub fn allreduce(mesh: &crate::device::DeviceMesh, payload_bytes: u64) -> Option<Self> {
         let n = mesh.n_dies;
         if n < 2 {
             return None;
         }
-        let beat = 32u64;
+        if mesh.topology == crate::device::MeshTopology::Ring && n > 2 && payload_bytes > 32 {
+            // Segmented ring all-reduce: round r, every die d forwards
+            // one segment to die (d+1) mod N; all N links busy each
+            // round. Segments align up to the 32 B beat (§3.3).
+            let seg = (payload_bytes.div_ceil(n as u64)).div_ceil(32) * 32;
+            let round: Vec<EthHop> = (0..n)
+                .map(|d| EthHop { src_die: d, dst_die: (d + 1) % n, bytes: seg })
+                .collect();
+            return Some(Self {
+                label: "allreduce".to_string(),
+                n_dies: n,
+                link: mesh.link,
+                rounds: vec![round; 2 * (n - 1)],
+                overlaps_local: false,
+            });
+        }
+        let beat = payload_bytes;
         let mut rounds: Vec<Vec<EthHop>> = Vec::new();
         // Combine: die d folds its partial into d−1's accumulator.
         for d in (1..n).rev() {
@@ -217,17 +311,30 @@ impl EtherPhase {
         })
     }
 
-    /// Phase duration: rounds are serial, hops within a round concurrent.
+    /// Drive the phase through a per-link occupancy tracker starting at
+    /// `start`: rounds are serial (a round begins when the previous one
+    /// fully drains), hops within a round start together — but hops
+    /// sharing a physical link serialize on it, and a sim carried across
+    /// phases makes earlier traffic (e.g. a halo still draining) delay
+    /// this one honestly. Returns the completion time.
+    pub fn run(&self, sim: &mut EthSim, start: SimNs) -> SimNs {
+        let mut cursor = start;
+        for round in &self.rounds {
+            let mut round_end = cursor;
+            for hop in round {
+                let done = sim.transfer(&self.link, hop.src_die, hop.dst_die, hop.bytes, cursor);
+                round_end = round_end.max(done);
+            }
+            cursor = round_end;
+        }
+        cursor
+    }
+
+    /// Phase duration under the contended-link model (a fresh
+    /// [`EthSim`]): identical to the old independent-pipe sum of
+    /// per-round maxima whenever no round loads one link twice.
     pub fn duration_ns(&self) -> f64 {
-        self.rounds
-            .iter()
-            .map(|round| {
-                round
-                    .iter()
-                    .map(|h| self.link.transfer_ns(h.bytes))
-                    .fold(0.0f64, f64::max)
-            })
-            .sum()
+        self.run(&mut EthSim::new(), 0.0)
     }
 
     /// Total bytes crossing Ethernet in one application of the phase.
@@ -256,6 +363,15 @@ pub struct Workload {
     pub riscv_cycles: Vec<u64>,
     /// Per-core compute-pipeline cycles (tile ops).
     pub compute_cycles: Vec<u64>,
+    /// Per-core portion of `riscv_cycles` that consumes inter-die seam
+    /// data (the *boundary* chain of the interior/boundary split; entry
+    /// `i` must not exceed `riscv_cycles[i]`). Empty = no split.
+    pub boundary_riscv_cycles: Vec<u64>,
+    /// Per-core portion of `compute_cycles` that consumes inter-die seam
+    /// data (entry `i` must not exceed `compute_cycles[i]`).
+    pub boundary_compute_cycles: Vec<u64>,
+    /// How an overlapping Ethernet phase composes with the split chains.
+    pub overlap: OverlapMode,
     /// Optional global reduction after the local phase.
     pub reduce: Option<ReduceSpec>,
     /// Optional inter-die Ethernet phase (multi-die programs only).
@@ -270,6 +386,9 @@ impl Default for Workload {
             dram_bytes: Vec::new(),
             riscv_cycles: Vec::new(),
             compute_cycles: Vec::new(),
+            boundary_riscv_cycles: Vec::new(),
+            boundary_compute_cycles: Vec::new(),
+            overlap: OverlapMode::Serial,
             reduce: None,
             ether: None,
         }
@@ -365,12 +484,30 @@ impl Program {
             ("dram_bytes", self.work.dram_bytes.len()),
             ("riscv_cycles", self.work.riscv_cycles.len()),
             ("compute_cycles", self.work.compute_cycles.len()),
+            ("boundary_riscv_cycles", self.work.boundary_riscv_cycles.len()),
+            ("boundary_compute_cycles", self.work.boundary_compute_cycles.len()),
         ] {
             if len > n {
                 return Err(crate::SimError::Other(format!(
                     "program '{}': {what} has {len} entries for {n} cores",
                     self.name
                 )));
+            }
+        }
+        // The boundary chain is a *split* of the per-core total, never
+        // extra work: each entry must fit inside the matching total.
+        for (what, boundary, total) in [
+            ("riscv", &self.work.boundary_riscv_cycles, &self.work.riscv_cycles),
+            ("compute", &self.work.boundary_compute_cycles, &self.work.compute_cycles),
+        ] {
+            for (i, &b) in boundary.iter().enumerate() {
+                let t = total.get(i).copied().unwrap_or(0);
+                if b > t {
+                    return Err(crate::SimError::Other(format!(
+                        "program '{}': core {i} boundary {what} chain ({b} cycles) exceeds its total ({t})",
+                        self.name
+                    )));
+                }
             }
         }
         let (rows, cols) = self.work.grid;
@@ -610,6 +747,102 @@ mod tests {
         assert_eq!(reached, (1..4).collect());
         // Single die: no network step.
         assert!(EtherPhase::scalar_allreduce(&DeviceMesh::n150(1, 1).unwrap()).is_none());
+    }
+
+    #[test]
+    fn overlap_mode_parse_and_labels() {
+        assert_eq!("serial".parse::<OverlapMode>().unwrap(), OverlapMode::Serial);
+        assert_eq!("Pipelined".parse::<OverlapMode>().unwrap(), OverlapMode::Pipelined);
+        assert!("both".parse::<OverlapMode>().is_err());
+        assert_eq!(OverlapMode::default(), OverlapMode::Serial);
+        assert_eq!(OverlapMode::Pipelined.label(), "pipelined");
+    }
+
+    #[test]
+    fn boundary_chain_must_fit_inside_totals() {
+        let mut p = Program::standard("seam");
+        p.work.grid = (1, 2);
+        p.work.compute_cycles = vec![100, 100];
+        p.work.riscv_cycles = vec![10, 0];
+        p.work.boundary_compute_cycles = vec![40, 100];
+        p.work.boundary_riscv_cycles = vec![10];
+        p.validate().unwrap();
+        // A boundary entry larger than its total is extra work, not a
+        // split — rejected.
+        p.work.boundary_compute_cycles = vec![40, 101];
+        assert!(p.validate().is_err());
+        p.work.boundary_compute_cycles = vec![40, 100];
+        p.work.boundary_riscv_cycles = vec![11];
+        assert!(p.validate().is_err());
+        // So is a boundary vector longer than the grid.
+        p.work.boundary_riscv_cycles = vec![0; 3];
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn allreduce_payload_shapes() {
+        use crate::device::{DeviceMesh, MeshTopology};
+        let link = EthLink::default();
+        // Scalar beats keep the latency-minimizing chain shape exactly.
+        let l4 = DeviceMesh::new(4, 1, 1, MeshTopology::Line, link).unwrap();
+        let r4 = DeviceMesh::new(4, 1, 1, MeshTopology::Ring, link).unwrap();
+        assert_eq!(EtherPhase::allreduce(&l4, 32), EtherPhase::scalar_allreduce(&l4));
+        assert_eq!(EtherPhase::allreduce(&r4, 32), EtherPhase::scalar_allreduce(&r4));
+
+        // Tile payloads on a ring: segmented ring all-reduce — 2(N−1)
+        // rounds, every round all N links carrying one ⌈payload/N⌉
+        // segment (beat-aligned), so bytes/round scale as payload/N.
+        let tile = 2048u64;
+        let ring = EtherPhase::allreduce(&r4, tile).unwrap();
+        assert_eq!(ring.rounds.len(), 2 * 3);
+        for round in &ring.rounds {
+            assert_eq!(round.len(), 4);
+            // One hop per physical link per round: no self-contention.
+            let links: std::collections::BTreeSet<(usize, usize)> = round
+                .iter()
+                .map(|h| (h.src_die.min(h.dst_die), h.src_die.max(h.dst_die)))
+                .collect();
+            assert_eq!(links.len(), 4);
+            round.iter().for_each(|h| assert_eq!(h.bytes, 512));
+        }
+        assert_eq!(ring.bytes(), 6 * 4 * 512);
+        // Each round is one concurrent segment wave: duration = one
+        // segment transfer per round.
+        assert!((ring.duration_ns() - 6.0 * link.transfer_ns(512)).abs() < 1e-9);
+        // The same payload on a line keeps the chain (no wrap link to
+        // close the ring); every hop carries the whole payload.
+        let line = EtherPhase::allreduce(&l4, tile).unwrap();
+        assert_eq!(line.rounds.len(), 6);
+        line.rounds.iter().flatten().for_each(|h| assert_eq!(h.bytes, tile));
+        // A segment never beat-misaligns: 100 B over 4 dies → 32 B beats.
+        let odd = EtherPhase::allreduce(&r4, 100).unwrap();
+        odd.rounds.iter().flatten().for_each(|h| assert_eq!(h.bytes, 32));
+    }
+
+    #[test]
+    fn phase_run_serializes_shared_links_within_a_round() {
+        let link = EthLink::default();
+        // Two same-round hops on one physical link (0↔1 both ways, not
+        // aggregated): the contended model charges them back to back —
+        // the analytic 2×(latency + bytes/bw) — where the old
+        // independent-pipe model charged a single window.
+        let phase = EtherPhase {
+            label: "contended".to_string(),
+            n_dies: 2,
+            link,
+            rounds: vec![vec![
+                EthHop { src_die: 0, dst_die: 1, bytes: 1100 },
+                EthHop { src_die: 1, dst_die: 0, bytes: 1100 },
+            ]],
+            overlaps_local: true,
+        };
+        let want = 2.0 * link.transfer_ns(1100);
+        assert!((phase.duration_ns() - want).abs() < 1e-9);
+        // An EthSim carried across phases delays later traffic honestly.
+        let mut sim = crate::device::EthSim::new();
+        let first_end = phase.run(&mut sim, 0.0);
+        let second_end = phase.run(&mut sim, 0.0);
+        assert!((second_end - 2.0 * first_end).abs() < 1e-9);
     }
 
     #[test]

@@ -172,7 +172,7 @@ fn mesh_lowering_is_deterministic() {
     use wormsim::solver::mesh::lower_mesh_components;
     let cost = CostModel::default();
     let mesh = DeviceMesh::new(4, 1, 2, MeshTopology::Line, EthLink::onboard()).unwrap();
-    let opts = PcgOptions::new(PcgVariant::FusedBf16);
+    let opts = wormsim::solver::MeshOptions::new(PcgOptions::new(PcgVariant::FusedBf16));
     let op = Operator::Stencil(stencil_cfg(DataFormat::Bf16, 4));
     let a = lower_mesh_components(&mesh, &op, &opts, 4, TileOpKind::EltwiseUnary, &cost).unwrap();
     let b = lower_mesh_components(&mesh, &op, &opts, 4, TileOpKind::EltwiseUnary, &cost).unwrap();
@@ -207,7 +207,8 @@ fn mesh_launch_counts_are_independent_of_die_count() {
         opts.tol_abs = 0.0;
         let op = Operator::Stencil(stencil_cfg(DataFormat::Bf16, 2));
         let fused =
-            wormsim::solver::solve_pcg_mesh(&mesh, &b, &op, &e, &cost, &opts, &mut prof).unwrap();
+            wormsim::solver::solve_pcg_mesh(&mesh, &b, &op, &e, &cost, &opts.clone().into(), &mut prof)
+                .unwrap();
         assert_eq!(fused.iters, 10);
         assert_eq!(fused.launch.launches, 1, "{n_dies} dies, fused");
         assert!(fused.launch.gap_ns > 0.0);
@@ -215,7 +216,8 @@ fn mesh_launch_counts_are_independent_of_die_count() {
         // Split: 8 mesh-wide component enqueues per iteration, whatever N.
         opts.fusion = wormsim::solver::FusionMode::ForceSplit;
         let split =
-            wormsim::solver::solve_pcg_mesh(&mesh, &b, &op, &e, &cost, &opts, &mut prof).unwrap();
+            wormsim::solver::solve_pcg_mesh(&mesh, &b, &op, &e, &cost, &opts.clone().into(), &mut prof)
+                .unwrap();
         assert_eq!(split.launch.launches, 8 * 10, "{n_dies} dies, split");
         assert_eq!(split.launch.gap_ns, 0.0);
         // The schedule is the only difference: bit-identical values.

@@ -19,10 +19,11 @@ use wormsim::kernels::spmv::{SpmvConfig, SpmvMode, SpmvOperator};
 use wormsim::kernels::stencil::{StencilConfig, StencilVariant};
 use wormsim::profiler::Profiler;
 use wormsim::solver::mesh::seam_bytes_one_way;
-use wormsim::solver::{self, Operator, PcgOptions, PcgVariant, Problem};
+use wormsim::solver::mesh::lower_mesh_components;
+use wormsim::solver::{self, MeshOptions, Operator, OverlapMode, PcgOptions, PcgVariant, Problem};
 use wormsim::sparse::{laplacian_3d, RowPartition};
-use wormsim::timing::cost::CostModel;
-use wormsim::ttm::EtherPhase;
+use wormsim::timing::cost::{CostModel, TileOpKind};
+use wormsim::ttm::{execute_program, EtherPhase};
 
 fn stencil_cfg(df: DataFormat, tiles: usize) -> StencilConfig {
     StencilConfig {
@@ -53,7 +54,22 @@ fn n1_mesh_is_bit_identical_to_single_die_stencil() {
     let single = solver::solve_operator(&grid, &b, &op, &e, &cost, &opts, &mut prof).unwrap();
 
     let mesh = line_mesh(1, 2, 2);
-    let meshed = solver::solve_pcg_mesh(&mesh, &b, &op, &e, &cost, &opts, &mut prof).unwrap();
+    let meshed =
+        solver::solve_pcg_mesh(&mesh, &b, &op, &e, &cost, &opts.clone().into(), &mut prof).unwrap();
+    // Pipelined overlap is a no-op without Ethernet: N=1 stays exact in
+    // BOTH modes (values and simulated time).
+    let piped = solver::solve_pcg_mesh(
+        &mesh,
+        &b,
+        &op,
+        &e,
+        &cost,
+        &solver::MeshOptions::new(opts.clone()).with_overlap(solver::OverlapMode::Pipelined),
+        &mut prof,
+    )
+    .unwrap();
+    assert_eq!(piped.residual_history, meshed.residual_history);
+    assert_eq!(piped.total_ns, meshed.total_ns);
     assert_eq!(single.iters, meshed.iters);
     assert_eq!(single.converged, meshed.converged);
     assert_eq!(single.residual_history, meshed.residual_history, "exact trajectory");
@@ -86,9 +102,16 @@ fn n1_mesh_is_bit_identical_to_single_die_sparse() {
         solver::solve_operator(&grid, &b, &Operator::Sparse(&op), &e, &cost, &opts, &mut prof)
             .unwrap();
     let mesh = line_mesh(1, 2, 2);
-    let meshed =
-        solver::solve_pcg_mesh(&mesh, &b, &Operator::Sparse(&op), &e, &cost, &opts, &mut prof)
-            .unwrap();
+    let meshed = solver::solve_pcg_mesh(
+        &mesh,
+        &b,
+        &Operator::Sparse(&op),
+        &e,
+        &cost,
+        &opts.clone().into(),
+        &mut prof,
+    )
+    .unwrap();
     assert_eq!(single.residual_history, meshed.residual_history);
     assert_eq!(single.x, meshed.x);
     assert_eq!(single.total_ns, meshed.total_ns);
@@ -111,14 +134,30 @@ fn n2_mesh_matches_single_logical_grid_and_decomposition_does_not_matter() {
     let op = Operator::Stencil(stencil_cfg(DataFormat::Bf16, 3));
     let single = solver::solve_operator(&grid, &b, &op, &e, &cost, &opts, &mut prof).unwrap();
 
-    let two = solver::solve_pcg_mesh(&line_mesh(2, 2, 2), &b, &op, &e, &cost, &opts, &mut prof)
-        .unwrap();
+    let two = solver::solve_pcg_mesh(
+        &line_mesh(2, 2, 2),
+        &b,
+        &op,
+        &e,
+        &cost,
+        &opts.clone().into(),
+        &mut prof,
+    )
+    .unwrap();
     assert_eq!(single.residual_history, two.residual_history, "N=2 exact");
     assert_eq!(single.x, two.x);
     assert!(two.eth_bytes_total > 0, "the seam moved to Ethernet");
 
-    let four = solver::solve_pcg_mesh(&line_mesh(4, 1, 2), &b, &op, &e, &cost, &opts, &mut prof)
-        .unwrap();
+    let four = solver::solve_pcg_mesh(
+        &line_mesh(4, 1, 2),
+        &b,
+        &op,
+        &e,
+        &cost,
+        &opts.clone().into(),
+        &mut prof,
+    )
+    .unwrap();
     assert_eq!(two.residual_history, four.residual_history, "N=4 exact");
     assert_eq!(two.x, four.x);
     // More seams cost more Ethernet, never different values.
@@ -142,8 +181,16 @@ fn dualdie_wrapper_reproduces_the_mesh_trajectory() {
     opts.tol_abs = 0.0;
     let mut prof = Profiler::disabled();
     let op = Operator::Stencil(stencil_cfg(DataFormat::Bf16, 3));
-    let meshed = solver::solve_pcg_mesh(&line_mesh(2, 2, 2), &b, &op, &e, &cost, &opts, &mut prof)
-        .unwrap();
+    let meshed = solver::solve_pcg_mesh(
+        &line_mesh(2, 2, 2),
+        &b,
+        &op,
+        &e,
+        &cost,
+        &opts.into(),
+        &mut prof,
+    )
+    .unwrap();
     assert_eq!(wrapped.residual_history, meshed.residual_history);
     assert_eq!(wrapped.total_ns, meshed.total_ns);
     assert_eq!(wrapped.eth_ns_per_iter, meshed.eth_ns_per_iter);
@@ -173,7 +220,7 @@ fn per_iteration_ethernet_bytes_match_the_analytic_formula() {
         &Operator::Stencil(stencil_cfg(df, tiles)),
         &e,
         &cost,
-        &opts,
+        &opts.into(),
         &mut prof,
     )
     .unwrap();
@@ -212,7 +259,7 @@ fn time_per_iteration_non_increasing_in_die_count() {
             &Operator::Stencil(stencil_cfg(DataFormat::Bf16, tiles)),
             &e,
             &cost,
-            &opts,
+            &opts.into(),
             &mut prof,
         )
         .unwrap();
@@ -250,7 +297,7 @@ fn sparse_and_stencil_operators_agree_on_the_mesh() {
         &Operator::Stencil(stencil_cfg(df, nz)),
         &e,
         &cost,
-        &opts,
+        &opts.clone().into(),
         &mut prof,
     )
     .unwrap();
@@ -258,9 +305,16 @@ fn sparse_and_stencil_operators_agree_on_the_mesh() {
     let a = laplacian_3d(64 * mesh.logical_rows(), 16 * mesh.die_cols, nz);
     let part = RowPartition::stencil_aligned(mesh.logical_rows(), mesh.die_cols, nz).unwrap();
     let op = SpmvOperator::new(&a, part, SpmvConfig::new(df, SpmvMode::SramResident)).unwrap();
-    let sparse =
-        solver::solve_pcg_mesh(&mesh, &b, &Operator::Sparse(&op), &e, &cost, &opts, &mut prof)
-            .unwrap();
+    let sparse = solver::solve_pcg_mesh(
+        &mesh,
+        &b,
+        &Operator::Sparse(&op),
+        &e,
+        &cost,
+        &opts.clone().into(),
+        &mut prof,
+    )
+    .unwrap();
     assert_eq!(stencil.residual_history, sparse.residual_history);
     assert_eq!(stencil.x, sparse.x);
     // Both moved their seam over Ethernet.
@@ -272,4 +326,187 @@ fn sparse_and_stencil_operators_agree_on_the_mesh() {
         solver::solve_operator(&grid, &b, &Operator::Sparse(&op), &e, &cost, &opts, &mut prof)
             .unwrap();
     assert_eq!(single.residual_history, sparse.residual_history);
+}
+
+#[test]
+fn pipelined_overlap_never_increases_any_component_end_time() {
+    // Scheduler-level property behind the perf claim: for every per-die
+    // spmv program of every swept mesh, executing with
+    // OverlapMode::Pipelined ends no later than with Serial — the
+    // boundary chain is a carve-out of the same totals, never extra
+    // work. Components without an overlapping phase are bit-equal.
+    let cost = CostModel::default();
+    for n_dies in [2usize, 4, 8] {
+        let mesh = line_mesh(n_dies, 1, 2);
+        let opts = MeshOptions::new(PcgOptions::new(PcgVariant::FusedBf16));
+        let lowering = lower_mesh_components(
+            &mesh,
+            &Operator::Stencil(stencil_cfg(DataFormat::Bf16, 4)),
+            &opts,
+            4,
+            TileOpKind::EltwiseUnary,
+            &cost,
+        )
+        .unwrap();
+        assert_eq!(lowering.spmv_per_die.len(), n_dies, "one program per die");
+        for (d, p) in lowering.spmv_per_die.iter().enumerate() {
+            assert_eq!(p.work.overlap, OverlapMode::Serial);
+            let serial = execute_program(p, &cost, 0.0).unwrap();
+            let mut piped = p.clone();
+            piped.work.overlap = OverlapMode::Pipelined;
+            let piped = execute_program(&piped, &cost, 0.0).unwrap();
+            assert!(
+                piped.end <= serial.end,
+                "die {d}/{n_dies}: pipelined {} > serial {}",
+                piped.end,
+                serial.end
+            );
+            // Seam-adjacent rows carry a boundary chain, and hiding it
+            // under the Ethernet phase is a strict win here.
+            assert!(serial.boundary_ns > 0.0);
+            assert!(piped.end < serial.end, "die {d}/{n_dies} should strictly improve");
+        }
+        for p in &lowering.components {
+            if p.name == "spmv" {
+                continue;
+            }
+            let serial = execute_program(p, &cost, 0.0).unwrap();
+            let mut piped = p.clone();
+            piped.work.overlap = OverlapMode::Pipelined;
+            let piped = execute_program(&piped, &cost, 0.0).unwrap();
+            assert_eq!(piped, serial, "non-overlapping component '{}'", p.name);
+        }
+    }
+}
+
+#[test]
+fn serial_mode_times_exactly_like_the_pre_split_lowering() {
+    // OverlapMode::Serial must reproduce the PR-4 trajectory bit for
+    // bit: the scheduler ignores the interior/boundary split, so a
+    // program with its split erased executes to the identical outcome.
+    let cost = CostModel::default();
+    let mesh = line_mesh(4, 2, 2);
+    let opts = MeshOptions::new(PcgOptions::new(PcgVariant::FusedBf16));
+    let lowering = lower_mesh_components(
+        &mesh,
+        &Operator::Stencil(stencil_cfg(DataFormat::Bf16, 3)),
+        &opts,
+        3,
+        TileOpKind::EltwiseUnary,
+        &cost,
+    )
+    .unwrap();
+    for p in &lowering.spmv_per_die {
+        let with_split = execute_program(p, &cost, 0.0).unwrap();
+        let mut unsplit = p.clone();
+        unsplit.work.boundary_riscv_cycles.clear();
+        unsplit.work.boundary_compute_cycles.clear();
+        let unsplit = execute_program(&unsplit, &cost, 0.0).unwrap();
+        assert_eq!(with_split.end, unsplit.end, "Serial ignores the split");
+        assert_eq!(with_split.ether_ns, unsplit.ether_ns);
+        assert_eq!(with_split.compute_ns, unsplit.compute_ns);
+    }
+}
+
+#[test]
+fn pipelined_solve_is_strictly_faster_with_bit_identical_values() {
+    // Acceptance criterion: at N ∈ {2, 4, 8} the pipelined mesh stencil
+    // PCG strictly reduces the modeled solve time while producing
+    // bit-identical solution values and residual trajectories.
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    for n_dies in [2usize, 4, 8] {
+        let mesh = line_mesh(n_dies, 1, 2);
+        let tiles = 4;
+        let b = solver::mesh_dist_random(&mesh, tiles, DataFormat::Bf16, 23);
+        let mut pcg = PcgOptions::new(PcgVariant::FusedBf16);
+        pcg.max_iters = 4;
+        pcg.tol_abs = 0.0;
+        let op = Operator::Stencil(stencil_cfg(DataFormat::Bf16, tiles));
+        let mut prof = Profiler::disabled();
+        let serial = solver::solve_pcg_mesh(
+            &mesh,
+            &b,
+            &op,
+            &e,
+            &cost,
+            &MeshOptions::new(pcg.clone()),
+            &mut prof,
+        )
+        .unwrap();
+        let piped = solver::solve_pcg_mesh(
+            &mesh,
+            &b,
+            &op,
+            &e,
+            &cost,
+            &MeshOptions::new(pcg).with_overlap(OverlapMode::Pipelined),
+            &mut prof,
+        )
+        .unwrap();
+        assert_eq!(serial.residual_history, piped.residual_history, "{n_dies} dies");
+        assert_eq!(serial.x, piped.x, "{n_dies} dies: values are schedule-independent");
+        assert!(
+            piped.total_ns < serial.total_ns,
+            "{n_dies} dies: pipelined {} !< serial {}",
+            piped.total_ns,
+            serial.total_ns
+        );
+        // Identical wiring: same Ethernet bytes, same launch accounting.
+        assert_eq!(serial.eth_bytes_total, piped.eth_bytes_total);
+        assert_eq!(serial.launch, piped.launch);
+        assert!(piped.eth_peak_link_util > 0.0);
+    }
+}
+
+#[test]
+fn send_tiles_dot_pays_ring_segment_bandwidth_across_dies() {
+    // ROADMAP item 4: with DotMethod::SendTiles the inter-die all-reduce
+    // moves tile payloads, and on a ring it becomes the segmented ring
+    // all-reduce — 2(N−1) rounds of N concurrent ⌈tile/N⌉ segments —
+    // instead of 32 B scalar beats.
+    use wormsim::kernels::DotMethod;
+    let cost = CostModel::default();
+    let n_dies = 4usize;
+    let mesh =
+        DeviceMesh::new(n_dies, 1, 2, MeshTopology::Ring, EthLink::backplane()).unwrap();
+    let df = DataFormat::Fp32;
+    let lower_with = |method: DotMethod| {
+        let mut pcg = PcgOptions::new(PcgVariant::SplitFp32);
+        pcg.dot_method = method;
+        lower_mesh_components(
+            &mesh,
+            &Operator::Stencil(stencil_cfg(df, 2)),
+            &MeshOptions::new(pcg),
+            2,
+            TileOpKind::EltwiseUnary,
+            &cost,
+        )
+        .unwrap()
+    };
+    let dot_phase = |l: &wormsim::solver::mesh::MeshLowering| {
+        l.components
+            .iter()
+            .find(|p| p.name == "dot")
+            .unwrap()
+            .work
+            .ether
+            .clone()
+            .unwrap()
+    };
+    let scalar = dot_phase(&lower_with(DotMethod::ReduceThenSend));
+    // Scalar beats keep the PR-4 chain + both-ways broadcast shape.
+    assert_eq!(scalar.bytes(), (2 * (n_dies as u64 - 1)) * 32);
+
+    let tiles = dot_phase(&lower_with(DotMethod::SendTiles));
+    let seg = (df.tile_bytes() as u64).div_ceil(n_dies as u64).div_ceil(32) * 32;
+    assert_eq!(tiles.rounds.len(), 2 * (n_dies - 1));
+    assert_eq!(tiles.bytes(), 2 * (n_dies as u64 - 1) * n_dies as u64 * seg);
+    // The bandwidth term (bytes/N per round) dominates the duration
+    // comparison: tile payloads cost more wall time than scalar beats,
+    // but far less than 2(N−1) whole-tile chain hops would.
+    let chain_whole_tiles =
+        2.0 * (n_dies as f64 - 1.0) * mesh.link.transfer_ns(df.tile_bytes() as u64);
+    assert!(tiles.duration_ns() > scalar.duration_ns());
+    assert!(tiles.duration_ns() < chain_whole_tiles);
 }

@@ -182,3 +182,39 @@ fn fused_sparse_pcg_reproduces_split_sparse_trajectory() {
         assert!(fused.total_ns < split.total_ns, "df {df}");
     }
 }
+
+#[test]
+fn die_cut_plus_die_local_noc_bytes_equal_single_die_gather() {
+    // The die cut is a *partition* of the single-die gather plan, not a
+    // re-derivation: at the shared per-(owner, consumer) 32 B batch
+    // rounding, Ethernet cut bytes + each die's NoC remainder must
+    // reproduce `GatherPlan::bytes` exactly — no batch double-counted by
+    // both transports, none dropped — for every die count that divides
+    // the core rows.
+    let df = DataFormat::Fp32;
+    let (rows, cols, nz) = (4usize, 2usize, 2usize);
+    let part = RowPartition::stencil_aligned(rows, cols, nz).unwrap();
+    let a = laplacian_3d(64 * rows, 16 * cols, nz);
+    let plan = part.gather_plan(&a).unwrap();
+    let total = plan.bytes(df);
+    assert!(total > 0);
+    for n_dies in [2usize, 4] {
+        let cut = part.die_cut(&plan, n_dies, df).unwrap();
+        let eth = cut.cut_bytes();
+        let noc: u64 = cut.intra_bytes.iter().sum();
+        assert!(eth > 0, "{n_dies} dies cut the x-seam");
+        assert_eq!(eth + noc, total, "{n_dies} dies: {eth} + {noc} != {total}");
+        // Entry-granularity conservation holds alongside.
+        assert_eq!(
+            cut.cut_entries() + cut.intra_entries.iter().sum::<u64>(),
+            plan.remote_entries,
+            "{n_dies} dies"
+        );
+        // More dies never shrink the Ethernet share of the fixed total.
+        // (The 2-die cut is one seam of the 4-die cut's three.)
+        if n_dies == 4 {
+            let two = part.die_cut(&plan, 2, df).unwrap();
+            assert!(eth > two.cut_bytes());
+        }
+    }
+}
