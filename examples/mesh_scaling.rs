@@ -104,6 +104,9 @@ fn main() -> anyhow::Result<()> {
             fmt_ns(res.phases.dispatch_ns),
             100.0 * res.eth_peak_link_util,
         );
+        // The telemetry ledger's read on the same numbers: which resource
+        // bound this configuration, and through which component.
+        println!("      {}", res.bottleneck_verdict());
     }
     println!(
         "\nspeedup = t(1 die) / t(N dies) — dispatch gaps and the Ethernet scalar\n\

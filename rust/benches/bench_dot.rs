@@ -52,5 +52,12 @@ fn main() {
         });
     }
 
+    // Snapshot the simulated-time channel for `wormsim bench-diff`.
+    let snap = b.snapshot();
+    let path = std::path::Path::new("results/bench").join(format!("BENCH_{}.json", snap.name));
+    match snap.write(&path) {
+        Ok(()) => println!("== wrote {} ==", path.display()),
+        Err(e) => println!("== failed to write {}: {e} ==", path.display()),
+    }
     b.finish();
 }

@@ -31,5 +31,19 @@ fn main() {
         });
     }
 
+    // Machine-readable snapshot of the simulated sweep (same builders as
+    // `wormsim bench --emit-json`; wall clock never enters the snapshot).
+    match wormsim::experiments::benchsuite::write_snapshots(
+        "figures",
+        false,
+        std::path::Path::new("results/bench"),
+    ) {
+        Ok(paths) => {
+            for p in paths {
+                println!("== wrote {} ==", p.display());
+            }
+        }
+        Err(e) => println!("== snapshot failed: {e} =="),
+    }
     b.finish();
 }

@@ -112,6 +112,20 @@ fn main() {
         Some(sparse_pcg_run(FusionMode::ForceSplit, 2).per_iter_ns)
     });
 
+    // Machine-readable snapshot of the simulated sweep (same builders as
+    // `wormsim bench --emit-json`; wall clock never enters the snapshot).
+    match wormsim::experiments::benchsuite::write_snapshots(
+        "pcg",
+        false,
+        std::path::Path::new("results/bench"),
+    ) {
+        Ok(paths) => {
+            for p in paths {
+                println!("== wrote {} ==", p.display());
+            }
+        }
+        Err(e) => println!("== snapshot failed: {e} =="),
+    }
     b.finish();
 
     // Scheduler-derived launch accounting (§7.1). These are dimensionless

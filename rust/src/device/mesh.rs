@@ -158,6 +158,43 @@ impl EthSim {
             .map(|(&(a, b), &busy)| (a, b, busy / span_ns))
             .collect()
     }
+
+    /// Per-link busy nanoseconds, sorted by link.
+    pub fn per_link_busy(&self) -> Vec<((usize, usize), SimNs)> {
+        self.busy_ns.iter().map(|(&l, &b)| (l, b)).collect()
+    }
+
+    /// Re-record transfers that already ran on another tracker, shifted by
+    /// `offset` into this tracker's timeline. This is how
+    /// [`crate::solver::solve_pcg_mesh`] carries ONE link-occupancy tracker
+    /// across all component programs of a solve: each component was timed
+    /// in isolation (its own window), and its transfers are replayed here
+    /// at their solve-absolute times. Replaying never re-times anything —
+    /// component windows are disjoint in solve time, so each transfer must
+    /// start at or after its link's free time (debug-asserted), and the
+    /// recorded begin/end are preserved exactly.
+    pub fn replay(&mut self, transfers: &[EthTransfer], offset: SimNs) {
+        for t in transfers {
+            let begin = t.start + offset;
+            let end = t.end + offset;
+            let free = self.link_free.get(&t.link).copied().unwrap_or(0.0);
+            debug_assert!(
+                begin + 1e-6 >= free,
+                "replayed transfer on link {:?} begins at {begin} before the link frees at {free}",
+                t.link
+            );
+            self.link_free.insert(t.link, end);
+            *self.busy_ns.entry(t.link).or_insert(0.0) += end - begin;
+            self.transfers.push(EthTransfer {
+                link: t.link,
+                start: begin,
+                end,
+                bytes: t.bytes,
+            });
+            self.messages += 1;
+            self.bytes += t.bytes;
+        }
+    }
 }
 
 /// How the dies are wired together.
@@ -454,6 +491,34 @@ mod tests {
         // The recorded transfers carry the queueing.
         assert_eq!(sim.transfers[1].start, a);
         assert_eq!(sim.transfers[1].link, (0, 1));
+    }
+
+    #[test]
+    fn replay_carries_transfers_across_component_windows() {
+        let link = EthLink::default();
+        // Component A ran in its own window [0, ...].
+        let mut a = EthSim::new();
+        a.transfer(&link, 0, 1, 1100, 0.0);
+        a.transfer(&link, 1, 0, 1100, 0.0);
+        // Component B likewise timed in isolation.
+        let mut b = EthSim::new();
+        b.transfer(&link, 1, 2, 2200, 100.0);
+        // Solve-level tracker: A's window starts at 10_000, B's after it.
+        let mut solve = EthSim::new();
+        solve.replay(&a.transfers, 10_000.0);
+        solve.replay(&b.transfers, 50_000.0);
+        assert_eq!(solve.messages, 3);
+        assert_eq!(solve.bytes, 2 * 1100 + 2200);
+        // Transfer times are the component times shifted, exactly.
+        assert_eq!(solve.transfers[0].start, a.transfers[0].start + 10_000.0);
+        assert_eq!(solve.transfers[1].end, a.transfers[1].end + 10_000.0);
+        assert_eq!(solve.transfers[2].start, b.transfers[0].start + 50_000.0);
+        // Per-link busy sums the windows.
+        let busy = solve.per_link_busy();
+        assert_eq!(busy.len(), 2);
+        assert_eq!(busy[0].0, (0, 1));
+        assert!((busy[0].1 - 2.0 * link.transfer_ns(1100)).abs() < 1e-9);
+        assert!((busy[1].1 - link.transfer_ns(2200)).abs() < 1e-9);
     }
 
     #[test]

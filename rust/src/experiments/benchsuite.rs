@@ -1,0 +1,265 @@
+//! Machine-readable bench snapshots (`wormsim bench --emit-json`).
+//!
+//! Each builder runs a deterministic sweep through the public solver/kernel
+//! API and returns a [`BenchSnapshot`] of *simulated* figures only — no
+//! wall-clock, no timestamps — so regenerating with an unchanged model is
+//! byte-stable and the committed `BENCH_<name>.json` files diff cleanly.
+//! `smoke` trims each sweep to a CI-sized subset whose metric ids are a
+//! strict subset of the full sweep's, so `wormsim bench-diff` against a
+//! committed full snapshot compares the matching ids and reports the rest
+//! as missing (advisory).
+
+use std::path::{Path, PathBuf};
+
+use crate::arch::{ComputeUnit, DataFormat};
+use crate::device::{DeviceMesh, EthLink, MeshTopology};
+use crate::engine::{NativeEngine, StencilCoeffs};
+use crate::kernels::reduction::{lower_dot_as, DotConfig, DotMethod};
+use crate::kernels::spmv::{SpmvConfig, SpmvMode, SpmvOperator};
+use crate::kernels::stencil::{lower_stencil, StencilConfig, StencilVariant};
+use crate::noc::RoutePattern;
+use crate::profiler::Profiler;
+use crate::solver::{
+    self, MeshOptions, Operator, OverlapMode, PcgOptions, PcgVariant,
+};
+use crate::sparse::{circulant_spd, RowPartition};
+use crate::telemetry::{BenchSnapshot, Better};
+use crate::timing::cost::CostModel;
+use crate::ttm::exec::execute_program;
+use crate::util::prng::Rng;
+
+/// The provenance note every builder stamps: these are simulated figures,
+/// reproducible with the in-repo model at the recorded configuration.
+const PROVENANCE: &str = "simulated (wormsim cost model); regenerate with `wormsim bench --emit-json`";
+
+/// The N-die strong-scaling PCG sweep (the `bench_pcg` mesh sweep as
+/// data): fixed element count, per-die 8×7 cores, 64 total z-tiles split
+/// across dies, fused BF16, both overlap modes.
+pub fn pcg_snapshot(smoke: bool) -> crate::Result<BenchSnapshot> {
+    let (rows, cols, total_tiles) = (8usize, 7usize, 64usize);
+    let dies: &[usize] = if smoke { &[1, 2, 4] } else { &[1, 2, 4, 8, 16, 32] };
+    let mut s = BenchSnapshot::new("pcg");
+    s.meta("provenance", PROVENANCE);
+    s.meta(
+        "config",
+        "strong scaling: per-die 8x7 cores, 64 total z-tiles split across dies, line topology",
+    );
+    s.meta("variant", "bf16-fused");
+    s.meta("max_iters", "2");
+    s.meta("seed", "42");
+    let cost = CostModel::default();
+    let engine = NativeEngine::new();
+    for overlap in [OverlapMode::Serial, OverlapMode::Pipelined] {
+        for &n in dies {
+            let tiles = total_tiles / n;
+            let mesh =
+                DeviceMesh::new(n, rows, cols, MeshTopology::Line, EthLink::for_dies(n))?;
+            let cfg = StencilConfig {
+                df: DataFormat::Bf16,
+                unit: ComputeUnit::Fpu,
+                tiles_per_core: tiles,
+                variant: StencilVariant::FULL,
+                coeffs: StencilCoeffs::LAPLACIAN,
+            };
+            let b = solver::mesh_dist_random(&mesh, tiles, DataFormat::Bf16, 42);
+            let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
+            opts.max_iters = 2;
+            opts.tol_abs = 0.0;
+            let mut prof = Profiler::disabled();
+            let res = solver::solve_pcg_mesh(
+                &mesh,
+                &b,
+                &Operator::Stencil(cfg),
+                &engine,
+                &cost,
+                &MeshOptions::new(opts).with_overlap(overlap),
+                &mut prof,
+            )?;
+            let nstr = n.to_string();
+            let labels = [("dies", nstr.as_str()), ("overlap", overlap.label())];
+            let it = res.iters.max(1) as f64;
+            s.push("iter_ns", &labels, res.per_iter_ns, "ns", Better::Lower);
+            s.push("compute_ns", &labels, res.phases.compute_ns, "ns", Better::Lower);
+            s.push("noc_ns", &labels, res.phases.noc_ns, "ns", Better::Lower);
+            s.push("eth_ns", &labels, res.phases.ether_ns, "ns", Better::Lower);
+            s.push("dispatch_ns", &labels, res.phases.dispatch_ns, "ns", Better::Lower);
+            s.push(
+                "eth_bytes_per_iter",
+                &labels,
+                res.eth_bytes_total as f64 / it,
+                "bytes",
+                Better::Lower,
+            );
+            s.push(
+                "launches_per_iter",
+                &labels,
+                res.launches_per_iter(),
+                "count",
+                Better::Info,
+            );
+            s.push(
+                "peak_link_util",
+                &labels,
+                res.eth_peak_link_util,
+                "fraction",
+                Better::Info,
+            );
+        }
+    }
+    Ok(s)
+}
+
+/// SELL SpMV timing sweep (the `bench_spmv` configuration as data):
+/// uniform-row circulant SPD, nnz/row × streaming mode.
+pub fn spmv_snapshot(smoke: bool) -> crate::Result<BenchSnapshot> {
+    let nnzs: &[usize] = if smoke { &[7] } else { &[7, 27, 64] };
+    let (grid_rows, grid_cols, tiles) = (2usize, 2usize, 2usize);
+    let grid = crate::device::TensixGrid::new(grid_rows, grid_cols)?;
+    let n = grid_rows * grid_cols * tiles * 1024;
+    let mut s = BenchSnapshot::new("spmv");
+    s.meta("provenance", PROVENANCE);
+    s.meta("config", "uniform circulant SPD, 2x2 grid, 2 tiles/core, fp32");
+    let cost = CostModel::default();
+    let engine = NativeEngine::new();
+    for &nnz in nnzs {
+        let a = circulant_spd(n, nnz, 2026)?;
+        let part = RowPartition::row_block(grid_rows, grid_cols, n)?;
+        let mut rng = Rng::new(11);
+        let xg: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+        let x = part.dist_from_global(DataFormat::Fp32, &xg);
+        for mode in [SpmvMode::DramStream, SpmvMode::SramResident] {
+            let tag = match mode {
+                SpmvMode::DramStream => "dram-stream",
+                SpmvMode::SramResident => "sram-resident",
+            };
+            let op = match SpmvOperator::new(
+                &a,
+                part.clone(),
+                SpmvConfig::new(DataFormat::Fp32, mode),
+            ) {
+                Ok(op) => op,
+                Err(_) => continue, // over SRAM budget at this nnz — skipped
+            };
+            let (_, t) = op.apply(&grid, &x, &engine, &cost)?;
+            let nnz_str = nnz.to_string();
+            let labels = [("nnz", nnz_str.as_str()), ("mode", tag)];
+            s.push("spmv_ns", &labels, t.total_ns, "ns", Better::Lower);
+            s.push("achieved_gbs", &labels, t.achieved_gbs(), "GB/s", Better::Higher);
+        }
+    }
+    Ok(s)
+}
+
+/// Kernel-level timing figures (dot method/pattern, stencil) through the
+/// lowered-program executor — pure timing, no engine values.
+pub fn figures_snapshot(smoke: bool) -> crate::Result<BenchSnapshot> {
+    let grids: &[(usize, usize)] = if smoke { &[(4, 4)] } else { &[(4, 4), (8, 7)] };
+    let tiles = 16usize;
+    let mut s = BenchSnapshot::new("figures");
+    s.meta("provenance", PROVENANCE);
+    s.meta("config", "lowered kernel programs, bf16, 16 tiles/core");
+    let cost = CostModel::default();
+    for &(rows, cols) in grids {
+        let gstr = format!("{rows}x{cols}");
+        for (method, mtag) in [
+            (DotMethod::ReduceThenSend, "reduce-then-send"),
+            (DotMethod::SendTiles, "send-tiles"),
+        ] {
+            for (pattern, ptag) in
+                [(RoutePattern::Naive, "naive"), (RoutePattern::Center, "center")]
+            {
+                let cfg = DotConfig {
+                    method,
+                    pattern,
+                    df: DataFormat::Bf16,
+                    unit: ComputeUnit::Fpu,
+                    tiles_per_core: tiles,
+                };
+                let p = lower_dot_as("dot", rows, cols, &cfg, &cost);
+                let out = execute_program(&p, &cost, 0.0)?;
+                let labels = [("grid", gstr.as_str()), ("method", mtag), ("pattern", ptag)];
+                s.push("dot_ns", &labels, out.device_ns(), "ns", Better::Lower);
+            }
+        }
+        let grid = crate::device::TensixGrid::new(rows, cols)?;
+        let cfg = StencilConfig {
+            df: DataFormat::Bf16,
+            unit: ComputeUnit::Fpu,
+            tiles_per_core: tiles,
+            variant: StencilVariant::FULL,
+            coeffs: StencilCoeffs::LAPLACIAN,
+        };
+        let p = lower_stencil(&grid, &cfg, &cost);
+        let out = execute_program(&p, &cost, 0.0)?;
+        s.push(
+            "stencil_ns",
+            &[("grid", gstr.as_str())],
+            out.device_ns(),
+            "ns",
+            Better::Lower,
+        );
+    }
+    Ok(s)
+}
+
+/// Build the snapshots of one suite (or `"all"`).
+pub fn build(suite: &str, smoke: bool) -> crate::Result<Vec<BenchSnapshot>> {
+    match suite {
+        "pcg" => Ok(vec![pcg_snapshot(smoke)?]),
+        "spmv" => Ok(vec![spmv_snapshot(smoke)?]),
+        "figures" => Ok(vec![figures_snapshot(smoke)?]),
+        "all" => Ok(vec![
+            pcg_snapshot(smoke)?,
+            spmv_snapshot(smoke)?,
+            figures_snapshot(smoke)?,
+        ]),
+        other => Err(crate::SimError::Config(format!(
+            "unknown bench suite '{other}' (expected pcg|spmv|figures|all)"
+        ))),
+    }
+}
+
+/// Build and write `BENCH_<name>.json` under `out_dir`; returns the paths.
+pub fn write_snapshots(suite: &str, smoke: bool, out_dir: &Path) -> crate::Result<Vec<PathBuf>> {
+    let mut paths = Vec::new();
+    for snap in build(suite, smoke)? {
+        let path = out_dir.join(format!("BENCH_{}.json", snap.name));
+        snap.write(&path)
+            .map_err(|e| crate::SimError::Artifact(format!("write {}: {e}", path.display())))?;
+        paths.push(path);
+    }
+    Ok(paths)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_snapshots_build_and_round_trip() {
+        for snap in build("all", true).unwrap() {
+            assert!(!snap.metrics.is_empty(), "{} is empty", snap.name);
+            let back = BenchSnapshot::parse(&snap.to_json()).unwrap();
+            assert_eq!(back, snap);
+            // Self-diff of a freshly built snapshot is clean.
+            let d = crate::telemetry::diff(&snap, &snap, 0.05);
+            assert!(d.regressions.is_empty() && d.missing.is_empty());
+        }
+    }
+
+    #[test]
+    fn smoke_ids_are_a_subset_of_full_ids() {
+        // The CI smoke run must diff cleanly against a committed full
+        // snapshot: every smoke metric id exists in the full sweep.
+        let smoke = pcg_snapshot(true).unwrap();
+        let full_ids: Vec<String> = pcg_snapshot(false)
+            .unwrap()
+            .metrics
+            .iter()
+            .map(|m| m.id())
+            .collect();
+        for m in &smoke.metrics {
+            assert!(full_ids.contains(&m.id()), "{} missing from full sweep", m.id());
+        }
+    }
+}

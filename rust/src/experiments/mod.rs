@@ -5,6 +5,7 @@
 //! regenerated with `wormsim figures <id>` / `wormsim tables <id>` (or
 //! `cargo bench`, which drives the same runners).
 
+pub mod benchsuite;
 pub mod ext;
 pub mod fig11;
 pub mod fig12;

@@ -34,6 +34,13 @@
 //! multi-device future work, built in. `MeshOptions::overlap` picks the
 //! seam schedule: serial (the paper's model) or pipelined (interior
 //! compute hides the halo via the lowered interior/boundary split).
+//!
+//! Observability is unified in [`telemetry`]: every executed program
+//! carries a per-resource [`telemetry::ResourceLedger`] (conservation:
+//! rows sum to wall time), solvers expose a [`telemetry::SolveLedger`]
+//! with a bottleneck verdict plus JSONL iteration events, the profiler
+//! renders Perfetto zones *and* counter tracks, and bench sweeps
+//! serialize to `BENCH_<name>.json` via [`telemetry::BenchSnapshot`].
 //! - **Layer 2** (`python/compile/model.py`): per-core compute graphs in
 //!   JAX, AOT-lowered to HLO text artifacts.
 //! - **Layer 1** (`python/compile/kernels/`): Pallas kernels for the
@@ -58,6 +65,7 @@ pub mod tile;
 pub mod runtime;
 pub mod solver;
 pub mod sparse;
+pub mod telemetry;
 pub mod ttm;
 pub mod timing;
 pub mod util;

@@ -29,9 +29,10 @@ use wormsim::util::stats::fmt_ns;
 
 const VALUE_KEYS: &[&str] = &[
     "engine", "artifacts", "config", "iters", "seed", "grid", "tiles", "variant", "tol",
-    "pattern", "method", "out", "trace", "dies", "topology", "overlap",
+    "pattern", "method", "out", "trace", "dies", "topology", "overlap", "suite", "threshold",
+    "telemetry",
 ];
-const FLAGS: &[&str] = &["help", "quiet"];
+const FLAGS: &[&str] = &["help", "quiet", "emit-json", "smoke", "advisory"];
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -95,6 +96,8 @@ fn dispatch(cmd: &str, args: &cli::Args) -> Result<(), String> {
             let id = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
             run_table(&ctx, id).map_err(|e| e.to_string())
         }
+        "bench" => cmd_bench(args),
+        "bench-diff" => cmd_bench_diff(args),
         _ => Err(format!("unknown command '{cmd}' (try --help)")),
     }
 }
@@ -179,12 +182,24 @@ fn cmd_solve(args: &cli::Args) -> Result<(), String> {
             fmt_ns(res.launch.launch_ns),
             fmt_ns(res.launch.gap_ns)
         );
+        println!("verdict: {}", res.ledger.verdict());
+    }
+    // Per-iteration solver telemetry as JSONL: --telemetry out.jsonl.
+    if let Some(tel_path) = args.get("telemetry") {
+        res.telemetry
+            .write_events_jsonl(std::path::Path::new(tel_path))
+            .map_err(|e| format!("cannot write telemetry {tel_path}: {e}"))?;
+        println!("wrote solver telemetry to {tel_path}");
     }
     // Tracy-style timeline export (§3.4): --trace out.json, viewable in
-    // chrome://tracing or Perfetto.
+    // chrome://tracing or Perfetto — zones plus telemetry counter tracks.
     if let Some(trace_path) = args.get("trace") {
-        wormsim::profiler::write_chrome_trace(&prof, std::path::Path::new(trace_path))
-            .map_err(|e| format!("cannot write trace {trace_path}: {e}"))?;
+        wormsim::profiler::write_chrome_trace_with(
+            &prof,
+            &res.telemetry.counter_tracks(),
+            std::path::Path::new(trace_path),
+        )
+        .map_err(|e| format!("cannot write trace {trace_path}: {e}"))?;
         println!("wrote simulated-time trace to {trace_path}");
     }
     Ok(())
@@ -277,13 +292,99 @@ fn cmd_solve_mesh(
             res.eth_bytes_total,
             100.0 * res.eth_peak_link_util
         );
+        println!("verdict: {}", res.bottleneck_verdict());
+    }
+    if let Some(tel_path) = args.get("telemetry") {
+        res.telemetry
+            .write_events_jsonl(std::path::Path::new(tel_path))
+            .map_err(|e| format!("cannot write telemetry {tel_path}: {e}"))?;
+        println!("wrote solver telemetry to {tel_path}");
     }
     if let Some(trace_path) = args.get("trace") {
-        wormsim::profiler::write_chrome_trace(&prof, std::path::Path::new(trace_path))
-            .map_err(|e| format!("cannot write trace {trace_path}: {e}"))?;
+        wormsim::profiler::write_chrome_trace_with(
+            &prof,
+            &res.telemetry.counter_tracks(),
+            std::path::Path::new(trace_path),
+        )
+        .map_err(|e| format!("cannot write trace {trace_path}: {e}"))?;
         println!("wrote simulated-time trace to {trace_path}");
     }
     Ok(())
+}
+
+/// `wormsim bench [suite] [--smoke] [--emit-json] [--out DIR]` — run the
+/// deterministic simulated-figure sweeps and (optionally) write
+/// `BENCH_<suite>.json` snapshots for `bench-diff`.
+fn cmd_bench(args: &cli::Args) -> Result<(), String> {
+    let suite = args
+        .get("suite")
+        .map(|s| s.to_string())
+        .or_else(|| args.positional.first().cloned())
+        .unwrap_or_else(|| "all".to_string());
+    let smoke = args.has_flag("smoke");
+    if args.has_flag("emit-json") {
+        let out_dir = std::path::PathBuf::from(args.get_or("out", "."));
+        let paths = wormsim::experiments::benchsuite::write_snapshots(&suite, smoke, &out_dir)
+            .map_err(|e| e.to_string())?;
+        for p in paths {
+            println!("wrote {}", p.display());
+        }
+    } else {
+        for snap in
+            wormsim::experiments::benchsuite::build(&suite, smoke).map_err(|e| e.to_string())?
+        {
+            print!("{}", snap.to_json());
+        }
+    }
+    Ok(())
+}
+
+/// `wormsim bench-diff BASE.json NEW.json [--threshold F] [--advisory]` —
+/// compare two snapshots; exits non-zero on regressions unless --advisory.
+fn cmd_bench_diff(args: &cli::Args) -> Result<(), String> {
+    use wormsim::telemetry::BenchSnapshot;
+    let [base_path, new_path] = match args.positional.as_slice() {
+        [a, b] => [a, b],
+        _ => return Err("bench-diff expects two snapshot paths: BASE.json NEW.json".into()),
+    };
+    let threshold = args.get_f64("threshold", 0.05)?;
+    let base = BenchSnapshot::read(std::path::Path::new(base_path))
+        .map_err(|e| format!("cannot read {base_path}: {e}"))?;
+    let new = BenchSnapshot::read(std::path::Path::new(new_path))
+        .map_err(|e| format!("cannot read {new_path}: {e}"))?;
+    let d = wormsim::telemetry::diff(&base, &new, threshold);
+    println!(
+        "bench-diff {base_path} -> {new_path} (threshold {:.1}%)",
+        100.0 * threshold
+    );
+    let show = |e: &wormsim::telemetry::DiffEntry| {
+        format!("{}: {:.6e} -> {:.6e} ({:+.1}%)", e.id, e.a, e.b, 100.0 * e.rel)
+    };
+    for r in &d.regressions {
+        println!("  REGRESSION {}", show(r));
+    }
+    for i in &d.improvements {
+        println!("  improvement {}", show(i));
+    }
+    for m in &d.missing {
+        println!("  missing in new: {m}");
+    }
+    for a in &d.added {
+        println!("  added in new: {a}");
+    }
+    let compared = base.metrics.len() - d.missing.len();
+    if d.regressions.is_empty() {
+        println!(
+            "no regressions ({compared} metrics compared, {} improvements)",
+            d.improvements.len()
+        );
+        Ok(())
+    } else if args.has_flag("advisory") {
+        println!("{} regression(s) — advisory mode, not failing", d.regressions.len());
+        Ok(())
+    } else {
+        Err(format!("{} regression(s) beyond threshold", d.regressions.len()))
+    }
 }
 
 fn print_usage() {
@@ -298,11 +399,16 @@ fn print_usage() {
          (--grid = per-die sub-grid)\n  \
          figures <id|all>        regenerate paper figures: fig3 fig5 fig6 fig11 fig12a fig12b fig12c fig13\n                          \
          extensions (§8): energy dualdie jacobi ext; solve supports --trace out.json\n  \
-         tables <id|all>         regenerate paper tables: t1 t2 t3\n\n\
+         tables <id|all>         regenerate paper tables: t1 t2 t3\n  \
+         bench [suite]           deterministic simulated-figure sweeps (pcg|spmv|figures|all)\n                          \
+         --emit-json writes BENCH_<suite>.json (--out DIR, --smoke for CI subset)\n  \
+         bench-diff A.json B.json  compare snapshots (--threshold 0.05, --advisory)\n\n\
          COMMON OPTIONS:\n  \
          --engine native|pjrt    value engine (pjrt runs the AOT JAX/Pallas artifacts)\n  \
          --artifacts DIR         artifact directory (default: artifacts)\n  \
          --config FILE           mini-TOML [calib] overrides\n  \
-         --seed N --iters N --out DIR"
+         --seed N --iters N --out DIR\n  \
+         --telemetry out.jsonl   (solve) per-iteration solver events as JSONL\n  \
+         --trace out.json        (solve) Perfetto trace: zones + counter tracks"
     );
 }

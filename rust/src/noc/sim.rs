@@ -30,6 +30,10 @@ pub struct NocSim {
     pub messages_sent: u64,
     pub bytes_sent: u64,
     pub max_link_busy_ns: SimNs,
+    /// Cumulative busy time across all links: each traversal holds its
+    /// link for the hop + serialization window. A telemetry gauge (total
+    /// link occupancy), not a wall-clock quantity.
+    pub link_busy_ns: SimNs,
 }
 
 impl NocSim {
@@ -84,6 +88,7 @@ impl NocSim {
             head = head.max(free) + hop_ns;
             let busy_until = head + ser_ns;
             self.link_free.insert(link, busy_until);
+            self.link_busy_ns += hop_ns + ser_ns;
             if busy_until > self.max_link_busy_ns {
                 self.max_link_busy_ns = busy_until;
             }
@@ -115,6 +120,7 @@ impl NocSim {
             .map(|d| root.manhattan(*d))
             .max()
             .unwrap_or(0) as f64;
+        self.link_busy_ns += max_hops * hop_ns + ser_ns;
         issue_done + max_hops * hop_ns + ser_ns + cyc(calib.noc_recv_cycles)
     }
 
@@ -123,6 +129,7 @@ impl NocSim {
         self.messages_sent = 0;
         self.bytes_sent = 0;
         self.max_link_busy_ns = 0.0;
+        self.link_busy_ns = 0.0;
     }
 }
 
@@ -174,6 +181,24 @@ mod tests {
         let x = noc2.send(&calib, Coord::new(0, 0), Coord::new(0, 1), 4096, 0.0);
         let y = noc2.send(&calib, Coord::new(5, 0), Coord::new(5, 1), 4096, 0.0);
         assert!((x.arrival - y.arrival).abs() < 1e-6);
+    }
+
+    #[test]
+    fn link_busy_accumulates_per_traversal() {
+        let calib = c();
+        let mut noc = NocSim::new();
+        assert_eq!(noc.link_busy_ns, 0.0);
+        noc.send(&calib, Coord::new(0, 0), Coord::new(0, 2), 64, 0.0);
+        let hop = crate::timing::cycles_ns(calib.noc_hop_cycles);
+        let ser = crate::timing::cycles_ns(64_u64.div_ceil(calib.noc_link_bytes_per_clk));
+        // Two links traversed, each held hop + ser.
+        assert!((noc.link_busy_ns - 2.0 * (hop + ser)).abs() < 1e-9);
+        // Self-sends never touch a link.
+        let before = noc.link_busy_ns;
+        noc.send(&calib, Coord::new(1, 1), Coord::new(1, 1), 4096, 0.0);
+        assert_eq!(noc.link_busy_ns, before);
+        noc.reset();
+        assert_eq!(noc.link_busy_ns, 0.0);
     }
 
     #[test]

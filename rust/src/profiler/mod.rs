@@ -12,5 +12,8 @@ pub mod trace;
 pub mod zones;
 
 pub use report::Breakdown;
-pub use trace::{to_chrome_trace, write_chrome_trace};
+pub use trace::{
+    to_chrome_trace, to_chrome_trace_with, write_chrome_trace, write_chrome_trace_with,
+    CounterTrack,
+};
 pub use zones::{Profiler, Zone};

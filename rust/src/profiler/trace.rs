@@ -1,74 +1,194 @@
 //! Chrome-tracing (about://tracing / Perfetto) export of profiler zones —
 //! the visualization role Tracy plays in the paper's methodology (§3.4).
 //!
-//! Zones become complete ("X") events; scopes (cores / host) become
-//! threads of one process, giving the per-core timeline view over
-//! *simulated* time. The writer emits the JSON by hand (serde is
-//! unavailable offline).
+//! Zones become complete ("X") events. Scopes map to named processes and
+//! threads via metadata ("M") events — device core scopes under the
+//! "device" process, Ethernet link scopes under "ethernet", host dispatch
+//! under "host" — with explicit sort indices so traces open in a stable,
+//! readable order instead of anonymous tid soup. Telemetry time series
+//! ([`CounterTrack`]) render as counter ("C") events on a fourth
+//! "counters" process, interleaved on the same simulated timeline, so
+//! residual decay and link occupancy sit directly under the zones that
+//! produced them. The writer emits the JSON by hand (serde is unavailable
+//! offline).
 
 use std::collections::BTreeMap;
 use std::io;
 use std::path::Path;
 
 use crate::profiler::zones::Profiler;
+use crate::timing::SimNs;
 
-fn escape(s: &str) -> String {
-    s.replace('\\', "\\\\").replace('"', "\\\"")
+/// One counter track: a named series of `(simulated ns, value)` samples.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CounterTrack {
+    pub name: String,
+    pub samples: Vec<(SimNs, f64)>,
 }
 
-/// Serialize all recorded zones as a Chrome trace. Timestamps are the
-/// simulated nanoseconds converted to microseconds (the trace format's
-/// unit).
-pub fn to_chrome_trace(profiler: &Profiler) -> String {
-    // Stable thread ids per scope.
-    let mut tids: BTreeMap<&str, usize> = BTreeMap::new();
-    for z in profiler.zones() {
-        let next = tids.len() + 1;
-        tids.entry(z.scope.as_str()).or_insert(next);
-    }
-    let mut out = String::from("{\"traceEvents\":[");
-    let mut first = true;
-    // Thread name metadata.
-    for (scope, tid) in &tids {
-        if !first {
-            out.push(',');
+/// Escape a string for embedding inside JSON double quotes. Handles
+/// quotes, backslashes, newlines, tabs, and other control characters.
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
         }
-        first = false;
-        out.push_str(&format!(
-            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\
+    }
+    out
+}
+
+const PID_DEVICE: usize = 1;
+const PID_ETHERNET: usize = 2;
+const PID_HOST: usize = 3;
+const PID_COUNTERS: usize = 4;
+
+fn pid_of_scope(scope: &str) -> usize {
+    match scope {
+        "host" => PID_HOST,
+        "ethernet" => PID_ETHERNET,
+        _ => PID_DEVICE,
+    }
+}
+
+fn process_name(pid: usize) -> &'static str {
+    match pid {
+        PID_HOST => "host",
+        PID_ETHERNET => "ethernet",
+        PID_COUNTERS => "counters",
+        _ => "device",
+    }
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+/// Serialize zones plus counter tracks as a Chrome trace. Timestamps are
+/// the simulated nanoseconds converted to microseconds (the trace
+/// format's unit).
+pub fn to_chrome_trace_with(profiler: &Profiler, counters: &[CounterTrack]) -> String {
+    // Stable (pid, tid) per scope: tids count up within each process in
+    // scope-name order.
+    let mut scopes: BTreeMap<&str, (usize, usize)> = BTreeMap::new();
+    for z in profiler.zones() {
+        scopes.entry(z.scope.as_str()).or_insert((0, 0));
+    }
+    let mut next_tid: BTreeMap<usize, usize> = BTreeMap::new();
+    for (scope, slot) in scopes.iter_mut() {
+        let pid = pid_of_scope(scope);
+        let tid = next_tid.entry(pid).or_insert(0);
+        *tid += 1;
+        *slot = (pid, *tid);
+    }
+
+    let mut events: Vec<String> = Vec::new();
+    // Process metadata, in pid order.
+    let mut pids: Vec<usize> = scopes.values().map(|&(pid, _)| pid).collect();
+    if !counters.is_empty() {
+        pids.push(PID_COUNTERS);
+    }
+    pids.sort_unstable();
+    pids.dedup();
+    for pid in &pids {
+        events.push(format!(
+            "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            escape(process_name(*pid))
+        ));
+        events.push(format!(
+            "{{\"name\":\"process_sort_index\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+             \"args\":{{\"sort_index\":{pid}}}}}"
+        ));
+    }
+    // Thread metadata.
+    for (scope, &(pid, tid)) in &scopes {
+        events.push(format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\
              \"args\":{{\"name\":\"{}\"}}}}",
             escape(scope)
         ));
+        events.push(format!(
+            "{{\"name\":\"thread_sort_index\",\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\
+             \"args\":{{\"sort_index\":{tid}}}}}"
+        ));
     }
+    // Zones.
     for z in profiler.zones() {
-        let tid = tids[z.scope.as_str()];
-        if !first {
-            out.push(',');
-        }
-        first = false;
-        out.push_str(&format!(
-            "{{\"name\":\"{}\",\"ph\":\"X\",\"pid\":1,\"tid\":{tid},\
+        let (pid, tid) = scopes[z.scope.as_str()];
+        events.push(format!(
+            "{{\"name\":\"{}\",\"ph\":\"X\",\"pid\":{pid},\"tid\":{tid},\
              \"ts\":{:.3},\"dur\":{:.3}}}",
             escape(&z.name),
             z.start / 1e3,
             z.duration() / 1e3
         ));
     }
+    // Counter tracks.
+    for track in counters {
+        for &(t_ns, v) in &track.samples {
+            events.push(format!(
+                "{{\"name\":\"{}\",\"ph\":\"C\",\"pid\":{PID_COUNTERS},\"tid\":0,\
+                 \"ts\":{:.3},\"args\":{{\"value\":{}}}}}",
+                escape(&track.name),
+                t_ns / 1e3,
+                json_num(v)
+            ));
+        }
+    }
+
+    let mut out = String::from("{\"traceEvents\":[");
+    out.push_str(&events.join(","));
     out.push_str("],\"displayTimeUnit\":\"ms\"}");
     out
 }
 
-/// Write the trace to `path` (creating parents).
-pub fn write_chrome_trace(profiler: &Profiler, path: &Path) -> io::Result<()> {
+/// Serialize all recorded zones as a Chrome trace (no counter tracks).
+pub fn to_chrome_trace(profiler: &Profiler) -> String {
+    to_chrome_trace_with(profiler, &[])
+}
+
+/// Write the trace (zones + counter tracks) to `path`, creating parents.
+pub fn write_chrome_trace_with(
+    profiler: &Profiler,
+    counters: &[CounterTrack],
+    path: &Path,
+) -> io::Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
-    std::fs::write(path, to_chrome_trace(profiler))
+    std::fs::write(path, to_chrome_trace_with(profiler, counters))
+}
+
+/// Write the trace to `path` (creating parents).
+pub fn write_chrome_trace(profiler: &Profiler, path: &Path) -> io::Result<()> {
+    write_chrome_trace_with(profiler, &[], path)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn assert_balanced(s: &str) {
+        let depth = s.chars().fold((0i32, 0i32), |(b, k), c| match c {
+            '{' => (b + 1, k),
+            '}' => (b - 1, k),
+            '[' => (b, k + 1),
+            ']' => (b, k - 1),
+            _ => (b, k),
+        });
+        assert_eq!(depth, (0, 0));
+    }
 
     #[test]
     fn emits_valid_minimal_json() {
@@ -83,15 +203,7 @@ mod tests {
         assert_eq!(s.matches("thread_name").count(), 2);
         assert!(s.contains("\"name\":\"spmv\""));
         assert!(s.contains("\"dur\":1.000"));
-        // Balanced braces/brackets.
-        let depth = s.chars().fold((0i32, 0i32), |(b, k), c| match c {
-            '{' => (b + 1, k),
-            '}' => (b - 1, k),
-            '[' => (b, k + 1),
-            ']' => (b, k - 1),
-            _ => (b, k),
-        });
-        assert_eq!(depth, (0, 0));
+        assert_balanced(&s);
     }
 
     #[test]
@@ -104,6 +216,61 @@ mod tests {
     }
 
     #[test]
+    fn escaping_newlines_tabs_and_controls() {
+        let mut p = Profiler::new();
+        p.record("multi\nline", "tab\there", 0.0, 1.0);
+        p.record("bell\u{7}", "device", 0.0, 1.0);
+        let s = to_chrome_trace(&p);
+        assert!(s.contains("multi\\nline"));
+        assert!(s.contains("tab\\there"));
+        assert!(s.contains("bell\\u0007"));
+        // No raw control characters may survive into the JSON text.
+        assert!(!s.chars().any(|c| (c as u32) < 0x20));
+        assert_balanced(&s);
+    }
+
+    #[test]
+    fn processes_and_threads_are_named_and_sorted() {
+        let mut p = Profiler::new();
+        p.record("spmv", "(0,0)", 0.0, 10.0);
+        p.record("halo:eth0-1", "ethernet", 0.0, 5.0);
+        p.record("launch", "host", 0.0, 1.0);
+        let s = to_chrome_trace(&p);
+        // Three processes in use, each named with a sort index.
+        assert_eq!(s.matches("process_name").count(), 3);
+        assert_eq!(s.matches("process_sort_index").count(), 3);
+        assert!(s.contains("\"args\":{\"name\":\"device\"}"));
+        assert!(s.contains("\"args\":{\"name\":\"ethernet\"}"));
+        assert!(s.contains("\"args\":{\"name\":\"host\"}"));
+        // Ethernet scope lands on the ethernet process, host on host.
+        assert_eq!(s.matches("thread_sort_index").count(), 3);
+        assert!(s.contains(
+            "{\"name\":\"halo:eth0-1\",\"ph\":\"X\",\"pid\":2,\"tid\":1"
+        ));
+        assert!(s.contains("{\"name\":\"launch\",\"ph\":\"X\",\"pid\":3,\"tid\":1"));
+        assert_balanced(&s);
+    }
+
+    #[test]
+    fn counter_tracks_emit_c_events() {
+        let mut p = Profiler::new();
+        p.record("spmv", "device", 0.0, 1000.0);
+        let tracks = vec![CounterTrack {
+            name: "residual".to_string(),
+            samples: vec![(0.0, 1.0), (1000.0, 0.25)],
+        }];
+        let s = to_chrome_trace_with(&p, &tracks);
+        assert_eq!(s.matches("\"ph\":\"C\"").count(), 2);
+        assert!(s.contains("{\"name\":\"residual\",\"ph\":\"C\",\"pid\":4,\"tid\":0,\"ts\":1.000,\"args\":{\"value\":0.25}}"));
+        // Counter process is named.
+        assert!(s.contains("\"args\":{\"name\":\"counters\"}"));
+        // No counters → no counter process metadata.
+        let s2 = to_chrome_trace(&p);
+        assert!(!s2.contains("counters"));
+        assert_balanced(&s);
+    }
+
+    #[test]
     fn writes_file() {
         let mut p = Profiler::new();
         p.record("z", "host", 0.0, 5.0);
@@ -111,6 +278,16 @@ mod tests {
         let path = dir.join("t.json");
         write_chrome_trace(&p, &path).unwrap();
         assert!(std::fs::read_to_string(&path).unwrap().contains("traceEvents"));
+        write_chrome_trace_with(
+            &p,
+            &[CounterTrack {
+                name: "c".to_string(),
+                samples: vec![(0.0, 1.0)],
+            }],
+            &path,
+        )
+        .unwrap();
+        assert!(std::fs::read_to_string(&path).unwrap().contains("\"ph\":\"C\""));
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -22,28 +22,44 @@ impl Zone {
 }
 
 /// Collects zones during a simulated run.
-#[derive(Debug, Default)]
+///
+/// The enabled state is explicit at construction ([`Profiler::with_enabled`]);
+/// `new()`, `default()`, and `disabled()` are the three spellings of it, and
+/// `default()` == `new()` (enabled) — the derived `Default` used to disagree
+/// with `new()` by starting disabled.
+#[derive(Debug)]
 pub struct Profiler {
     pub enabled: bool,
     zones: Vec<Zone>,
 }
 
+impl Default for Profiler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl Profiler {
-    pub fn new() -> Self {
+    /// The single constructor: every other constructor routes through here.
+    pub fn with_enabled(enabled: bool) -> Self {
         Self {
-            enabled: true,
+            enabled,
             zones: Vec::new(),
         }
+    }
+
+    pub fn new() -> Self {
+        Self::with_enabled(true)
     }
 
     /// A disabled profiler records nothing (the paper observes that
     /// extensive zone tracing perturbs performance; we keep the same
     /// on/off discipline even though simulated time is unperturbed).
+    /// `record` checks `enabled` before pushing, so a disabled profiler
+    /// allocates nothing on the hot path — pinned by
+    /// `tests/prop_telemetry.rs::disabled_profiler_stays_empty_through_mesh_solve`.
     pub fn disabled() -> Self {
-        Self {
-            enabled: false,
-            zones: Vec::new(),
-        }
+        Self::with_enabled(false)
     }
 
     pub fn record(&mut self, name: &str, scope: &str, start: SimNs, end: SimNs) {
@@ -117,5 +133,14 @@ mod tests {
         p.record("spmv", "host", 0.0, 1.0);
         assert!(p.zones().is_empty());
         assert!(p.totals_by_name().is_empty());
+    }
+
+    #[test]
+    fn default_is_enabled_like_new() {
+        assert!(Profiler::default().enabled);
+        assert!(Profiler::new().enabled);
+        assert!(Profiler::with_enabled(true).enabled);
+        assert!(!Profiler::with_enabled(false).enabled);
+        assert!(!Profiler::disabled().enabled);
     }
 }

@@ -55,6 +55,9 @@ pub struct DualDieResult {
     pub breakdown: Breakdown,
     /// Scheduler-derived launch accounting (one enqueue per solve).
     pub launch: crate::ttm::LaunchStats,
+    /// Per-resource attribution of `total_ns`, passed through from the
+    /// underlying N=2 mesh solve.
+    pub ledger: crate::telemetry::SolveLedger,
 }
 
 /// A logical dual-die distributed vector: blocks for die 0's rows×cols
@@ -107,6 +110,7 @@ pub fn solve_pcg_dualdie(
         eth_ns_per_iter: res.eth_ns_per_iter,
         breakdown: res.breakdown,
         launch: res.launch,
+        ledger: res.ledger,
     })
 }
 

@@ -60,6 +60,7 @@ use crate::kernels::reduction::{lower_dot_as, DotConfig, DotMethod};
 use crate::profiler::{Breakdown, Profiler};
 use crate::solver::pcg::{Operator, PcgOptions, Precond, PCG_ITERATION};
 use crate::solver::problem::DistVector;
+use crate::telemetry::{SolveLedger, SolverEvent, Telemetry};
 use crate::timing::cost::{CostModel, PipelineMode, TileOpKind};
 use crate::timing::SimNs;
 use crate::ttm::{
@@ -137,6 +138,18 @@ pub struct MeshPcgResult {
     /// Per-iteration transport split (compute / NoC / Ethernet / dispatch).
     pub phases: MeshPhaseBreakdown,
     pub launch: LaunchStats,
+    /// Dies in the mesh this result was solved on.
+    pub n_dies: usize,
+    /// Per-link busy fraction of the *whole solve* window, from the one
+    /// solve-scoped [`crate::device::EthSim`] every component's transfers
+    /// replay into (unlike `eth_peak_link_util`, which is per-phase).
+    pub eth_link_util_solve: Vec<(usize, usize, f64)>,
+    /// Per-resource attribution of `total_ns` (conserves by construction;
+    /// see [`crate::telemetry::SolveLedger`]).
+    pub ledger: SolveLedger,
+    /// Metrics + per-iteration solver events (empty when
+    /// [`PcgOptions::telemetry`] is off).
+    pub telemetry: Telemetry,
 }
 
 impl MeshPcgResult {
@@ -144,6 +157,12 @@ impl MeshPcgResult {
     /// of the die count — the host dispatches mesh-wide programs).
     pub fn launches_per_iter(&self) -> f64 {
         self.launch.launches as f64 / self.iters.max(1) as f64
+    }
+
+    /// One-line bottleneck statement with the mesh size, e.g.
+    /// `"ethernet-bound (54% of solve, dominated by dot, link 0-1) at N=4"`.
+    pub fn bottleneck_verdict(&self) -> String {
+        format!("{} at N={}", self.ledger.verdict(), self.n_dies)
     }
 }
 
@@ -489,6 +508,17 @@ pub fn solve_pcg_mesh(
     };
 
     let mut queue = HostQueue::new(cost.calib.clone());
+    queue.telemetry = Telemetry::new(opts.pcg.telemetry);
+    let mut telemetry = Telemetry::new(opts.pcg.telemetry);
+    let mut ledger = SolveLedger::new();
+    // Components charged since the last residual sample (drained into each
+    // SolverEvent, so an event's window is one full iteration of work).
+    let mut iter_component_ns: Vec<(String, SimNs)> = Vec::new();
+    // ONE link-occupancy tracker for the whole solve (satellite of the
+    // telemetry layer): every component's Ethernet transfers replay into it
+    // at their solve-absolute times, so per-link busy fractions are of the
+    // solve window, not of each component's isolated window.
+    let mut solve_eth = crate::device::EthSim::new();
     let mut breakdown = Breakdown::new();
     let mut phases_total = MeshPhaseBreakdown::default();
     let mut eth_ns_total: SimNs = 0.0;
@@ -522,6 +552,24 @@ pub fn solve_pcg_mesh(
             phases_total.ether_ns += o.ether_ns;
             eth_ns_total += o.ether_ns;
             eth_bytes_total += o.eth_bytes;
+            if !o.eth_transfers.is_empty() {
+                // This dispatch's device window in solve time is
+                // [now - ns, now]; the scratch execution recorded its
+                // transfers relative to o.start.
+                solve_eth.replay(&o.eth_transfers, (now - ns) - o.start);
+            }
+            if opts.pcg.telemetry {
+                ledger.charge($name, &o.ledger, ns);
+                telemetry.count("dispatches", &[("component", $name)], 1);
+                telemetry.add("component_device_ns", &[("component", $name)], ns);
+                telemetry.add(
+                    "component_eth_bytes",
+                    &[("component", $name)],
+                    o.eth_bytes as f64,
+                );
+                telemetry.series("component_ns", &[("component", $name)], now, ns);
+                iter_component_ns.push(($name.to_string(), ns));
+            }
         }};
     }
 
@@ -561,6 +609,16 @@ pub fn solve_pcg_mesh(
         if !sched.is_fused() {
             readbacks += 1;
         }
+        if opts.pcg.telemetry {
+            telemetry.series("residual", &[], now, rnorm);
+            telemetry.event(SolverEvent {
+                t_ns: now,
+                iter: iters as u64,
+                residual: rnorm,
+                launches: queue.stats.launches,
+                component_ns: std::mem::take(&mut iter_component_ns),
+            });
+        }
         if rnorm <= opts.pcg.tol_abs {
             converged = true;
             break;
@@ -591,6 +649,13 @@ pub fn solve_pcg_mesh(
     let dispatch_total = queue.stats.launch_ns
         + queue.stats.gap_ns
         + readbacks as f64 * cost.calib.residual_readback_ns;
+    // Dispatch row closes the ledger: every time advance was either a
+    // component charge or host dispatch, so ledger.total.total() == total_ns.
+    if opts.pcg.telemetry {
+        ledger.add_dispatch(dispatch_total);
+        ledger.iterations = iters as u64;
+        telemetry.merge(&queue.telemetry);
+    }
     Ok(MeshPcgResult {
         x,
         iters,
@@ -609,6 +674,10 @@ pub fn solve_pcg_mesh(
             dispatch_ns: dispatch_total / it,
         },
         launch: queue.stats.clone(),
+        n_dies: mesh.n_dies,
+        eth_link_util_solve: solve_eth.utilization(now),
+        ledger,
+        telemetry,
     })
 }
 

@@ -19,6 +19,8 @@
 //! Following §3.3, convergence is checked on the **absolute** residual
 //! norm (the subnormal flush makes relative residuals unreliable).
 
+use std::collections::BTreeMap;
+
 use crate::arch::constants::{SRAM_BYTES, SRAM_RESERVE_FUSED};
 use crate::arch::{ComputeUnit, DataFormat};
 use crate::device::TensixGrid;
@@ -31,6 +33,7 @@ use crate::noc::RoutePattern;
 use crate::profiler::{Breakdown, Profiler};
 use crate::solver::jacobi::JacobiPreconditioner;
 use crate::solver::problem::{DistVector, Problem};
+use crate::telemetry::{ResourceLedger, SolveLedger, SolverEvent, Telemetry};
 use crate::tile::EltwiseOp;
 use crate::timing::cost::{CostModel, PipelineMode, TileOpKind};
 use crate::timing::SimNs;
@@ -252,6 +255,10 @@ pub struct PcgOptions {
     pub precondition: bool,
     /// Launch-schedule override (default: derived from the variant).
     pub fusion: FusionMode,
+    /// Record solve telemetry (metrics, per-iteration events, ledger
+    /// attribution). Purely observational — solver values and timings are
+    /// bit-identical either way (pinned by `tests/prop_telemetry.rs`).
+    pub telemetry: bool,
 }
 
 impl PcgOptions {
@@ -264,6 +271,7 @@ impl PcgOptions {
             dot_pattern: RoutePattern::Naive,
             precondition: true,
             fusion: FusionMode::Auto,
+            telemetry: true,
         }
     }
 
@@ -289,6 +297,12 @@ pub struct PcgResult {
     /// Per-component device time (Fig 13).
     pub breakdown: Breakdown,
     pub launch: LaunchStats,
+    /// Per-resource attribution of `total_ns` (conserves by construction;
+    /// see [`crate::telemetry::SolveLedger`]).
+    pub ledger: SolveLedger,
+    /// Metrics + per-iteration solver events (empty when
+    /// [`PcgOptions::telemetry`] is off).
+    pub telemetry: Telemetry,
 }
 
 impl PcgResult {
@@ -368,6 +382,13 @@ pub fn solve_operator(
     let tiles = first.nz();
     let calib = &cost.calib;
     let mut queue = HostQueue::new(calib.clone());
+    queue.telemetry = Telemetry::new(opts.telemetry);
+    let mut telemetry = Telemetry::new(opts.telemetry);
+    let mut ledger = SolveLedger::new();
+    let mut readbacks: u64 = 0;
+    // Components charged since the last residual sample (drained into each
+    // SolverEvent, so an event's window is one full iteration of work).
+    let mut iter_component_ns: Vec<(String, SimNs)> = Vec::new();
     let mut breakdown = Breakdown::new();
     let mut now: SimNs = 0.0;
 
@@ -406,6 +427,17 @@ pub fn solve_operator(
         precond_kind,
         cost,
     ));
+    // Scratch pre-execution of each lowered component at t=0 (no queue, no
+    // profiler, never dispatched): its per-resource ledger is what the solve
+    // loop charges against the per-dispatch component times. Skipped when
+    // telemetry is off — the ledger then stays empty.
+    let mut component_ledgers: BTreeMap<String, ResourceLedger> = BTreeMap::new();
+    if opts.telemetry {
+        for p in &component_programs {
+            let out = crate::ttm::exec::execute_program(p, cost, 0.0)?;
+            component_ledgers.insert(p.name.clone(), out.ledger);
+        }
+    }
     let sched = if fused {
         IterSchedule::fused(
             "pcg_fused",
@@ -421,6 +453,13 @@ pub fn solve_operator(
             let ns: SimNs = $ns;
             now = sched.component(&mut queue, profiler, $name, ns, now)?;
             breakdown.add($name, ns);
+            if opts.telemetry {
+                ledger.charge($name, &component_ledgers[$name], ns);
+                telemetry.count("dispatches", &[("component", $name)], 1);
+                telemetry.add("component_device_ns", &[("component", $name)], ns);
+                telemetry.series("component_ns", &[("component", $name)], now, ns);
+                iter_component_ns.push(($name.to_string(), ns));
+            }
         }};
     }
     let mut x: DistVector = b.iter().map(|blk| CoreBlock::zeros(blk.df, blk.nz())).collect();
@@ -473,6 +512,19 @@ pub fn solve_operator(
         let rnorm = (rr.value.max(0.0) as f64).sqrt();
         history.push(rnorm);
         now = sched.residual_readback(&mut queue, now);
+        if !sched.is_fused() {
+            readbacks += 1;
+        }
+        if opts.telemetry {
+            telemetry.series("residual", &[], now, rnorm);
+            telemetry.event(SolverEvent {
+                t_ns: now,
+                iter: iters as u64,
+                residual: rnorm,
+                launches: queue.stats.launches,
+                component_ns: std::mem::take(&mut iter_component_ns),
+            });
+        }
         if rnorm <= opts.tol_abs {
             converged = true;
             break;
@@ -500,6 +552,18 @@ pub fn solve_operator(
     }
 
     breakdown.iterations = iters as u64;
+    // Host dispatch overhead (the only time advances not charged through
+    // `component!`) as an explicit row — solve-level conservation then holds
+    // by construction: ledger.total.total() == total_ns.
+    if opts.telemetry {
+        ledger.add_dispatch(
+            queue.stats.launch_ns
+                + queue.stats.gap_ns
+                + readbacks as f64 * calib.residual_readback_ns,
+        );
+        ledger.iterations = iters as u64;
+        telemetry.merge(&queue.telemetry);
+    }
     Ok(PcgResult {
         x,
         iters,
@@ -509,6 +573,8 @@ pub fn solve_operator(
         per_iter_ns: if iters > 0 { now / iters as f64 } else { 0.0 },
         breakdown,
         launch: queue.stats.clone(),
+        ledger,
+        telemetry,
     })
 }
 

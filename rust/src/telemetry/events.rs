@@ -1,0 +1,111 @@
+//! Per-iteration solver event stream, serialized as JSONL.
+//!
+//! One [`SolverEvent`] is recorded at each residual evaluation: the solve
+//! timestamp (simulated ns), the iteration index, the residual norm, the
+//! cumulative kernel-launch count, and the per-component device time charged
+//! since the previous event.  The JSONL form (one JSON object per line) is
+//! what `wormsim solve --telemetry out.jsonl` writes; it is hand-rolled the
+//! same way `profiler::trace` is, since the image vendors no serde.
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use crate::timing::SimNs;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SolverEvent {
+    /// Simulated solve time at which the residual became known.
+    pub t_ns: SimNs,
+    /// 1-based PCG iteration index.
+    pub iter: u64,
+    /// Residual norm at this iteration.
+    pub residual: f64,
+    /// Cumulative host kernel launches up to this event.
+    pub launches: u64,
+    /// Per-component device ns charged since the previous event.
+    pub component_ns: Vec<(String, SimNs)>,
+}
+
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl SolverEvent {
+    /// One JSON object, no trailing newline.
+    pub fn to_json(&self) -> String {
+        let comps: Vec<String> = self
+            .component_ns
+            .iter()
+            .map(|(name, ns)| format!("\"{}\":{}", crate::util::jsonmini::escape(name), json_f64(*ns)))
+            .collect();
+        format!(
+            "{{\"t_ns\":{},\"iter\":{},\"residual\":{},\"launches\":{},\"component_ns\":{{{}}}}}",
+            json_f64(self.t_ns),
+            self.iter,
+            json_f64(self.residual),
+            self.launches,
+            comps.join(",")
+        )
+    }
+}
+
+/// Render events as JSONL (one object per line, trailing newline).
+pub fn events_to_jsonl(events: &[SolverEvent]) -> String {
+    let mut out = String::new();
+    for e in events {
+        out.push_str(&e.to_json());
+        out.push('\n');
+    }
+    out
+}
+
+/// Write events as JSONL, creating parent directories.
+pub fn write_events_jsonl(events: &[SolverEvent], path: &Path) -> io::Result<()> {
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    fs::write(path, events_to_jsonl(events))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::jsonmini::Json;
+
+    fn sample() -> SolverEvent {
+        SolverEvent {
+            t_ns: 1500.5,
+            iter: 3,
+            residual: 0.25,
+            launches: 24,
+            component_ns: vec![("spmv".to_string(), 1000.0), ("dot".to_string(), 250.5)],
+        }
+    }
+
+    #[test]
+    fn jsonl_round_trips_through_parser() {
+        let s = events_to_jsonl(&[sample()]);
+        assert_eq!(s.lines().count(), 1);
+        let v = Json::parse(s.lines().next().unwrap()).unwrap();
+        assert_eq!(v.get("iter").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(v.get("residual").and_then(Json::as_f64), Some(0.25));
+        let comps = v.get("component_ns").unwrap();
+        assert_eq!(comps.get("spmv").and_then(Json::as_f64), Some(1000.0));
+        assert_eq!(comps.get("dot").and_then(Json::as_f64), Some(250.5));
+    }
+
+    #[test]
+    fn writes_file_with_one_line_per_event() {
+        let dir = std::env::temp_dir().join("wormsim_events_test");
+        let path = dir.join("ev.jsonl");
+        write_events_jsonl(&[sample(), sample()], &path).unwrap();
+        let back = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(back.lines().count(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,175 @@
+//! Labelled counters, sums, and time-series sampled in simulated ns.
+//!
+//! The registry is deliberately tiny: three `BTreeMap`s keyed by metric name
+//! plus a *sorted* label list, so iteration order (and therefore every
+//! serialized artifact) is deterministic.  All values are observations of
+//! simulated quantities — recording a metric never advances simulated time,
+//! which is what makes telemetry-on vs. telemetry-off runs bit-identical.
+
+use std::collections::BTreeMap;
+
+use crate::timing::SimNs;
+
+/// Sorted `(key, value)` label pairs identifying one series of a metric.
+pub type Labels = Vec<(String, String)>;
+
+type MetricKey = (String, Labels);
+
+fn key(name: &str, labels: &[(&str, &str)]) -> MetricKey {
+    let mut l: Labels = labels
+        .iter()
+        .map(|&(k, v)| (k.to_string(), v.to_string()))
+        .collect();
+    l.sort();
+    (name.to_string(), l)
+}
+
+/// Render a metric identity as `name{k=v,...}` (no braces when unlabelled).
+pub fn metric_id(name: &str, labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let inner: Vec<String> = labels.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    format!("{}{{{}}}", name, inner.join(","))
+}
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsRegistry {
+    counts: BTreeMap<MetricKey, u64>,
+    sums: BTreeMap<MetricKey, f64>,
+    series: BTreeMap<MetricKey, Vec<(SimNs, f64)>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Increment a monotone counter.
+    pub fn count(&mut self, name: &str, labels: &[(&str, &str)], n: u64) {
+        *self.counts.entry(key(name, labels)).or_insert(0) += n;
+    }
+
+    /// Accumulate into a running sum (e.g. nanoseconds, bytes).
+    pub fn add(&mut self, name: &str, labels: &[(&str, &str)], v: f64) {
+        *self.sums.entry(key(name, labels)).or_insert(0.0) += v;
+    }
+
+    /// Append one `(simulated ns, value)` sample to a time series.
+    pub fn series_push(&mut self, name: &str, labels: &[(&str, &str)], t_ns: SimNs, v: f64) {
+        self.series.entry(key(name, labels)).or_default().push((t_ns, v));
+    }
+
+    pub fn get_count(&self, name: &str, labels: &[(&str, &str)]) -> u64 {
+        self.counts.get(&key(name, labels)).copied().unwrap_or(0)
+    }
+
+    pub fn get_sum(&self, name: &str, labels: &[(&str, &str)]) -> f64 {
+        self.sums.get(&key(name, labels)).copied().unwrap_or(0.0)
+    }
+
+    pub fn get_series(&self, name: &str, labels: &[(&str, &str)]) -> &[(SimNs, f64)] {
+        self.series
+            .get(&key(name, labels))
+            .map(Vec::as_slice)
+            .unwrap_or(&[])
+    }
+
+    /// Sum of every `sums` entry whose metric name matches, across labels.
+    pub fn sum_over_labels(&self, name: &str) -> f64 {
+        self.sums
+            .iter()
+            .filter(|((n, _), _)| n == name)
+            .map(|(_, v)| v)
+            .sum()
+    }
+
+    /// Sum of every counter whose metric name matches, across labels.
+    pub fn count_over_labels(&self, name: &str) -> u64 {
+        self.counts
+            .iter()
+            .filter(|((n, _), _)| n == name)
+            .map(|(_, v)| v)
+            .sum()
+    }
+
+    pub fn counts(&self) -> impl Iterator<Item = (String, u64)> + '_ {
+        self.counts
+            .iter()
+            .map(|((n, l), &v)| (metric_id(n, l), v))
+    }
+
+    pub fn sums(&self) -> impl Iterator<Item = (String, f64)> + '_ {
+        self.sums.iter().map(|((n, l), &v)| (metric_id(n, l), v))
+    }
+
+    /// All time series as `(id, samples)`, sorted by id (BTreeMap order).
+    pub fn all_series(&self) -> impl Iterator<Item = (String, &[(SimNs, f64)])> + '_ {
+        self.series
+            .iter()
+            .map(|((n, l), v)| (metric_id(n, l), v.as_slice()))
+    }
+
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for (k, &v) in &other.counts {
+            *self.counts.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, &v) in &other.sums {
+            *self.sums.entry(k.clone()).or_insert(0.0) += v;
+        }
+        for (k, v) in &other.series {
+            self.series.entry(k.clone()).or_default().extend_from_slice(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_are_order_insensitive() {
+        let mut m = MetricsRegistry::new();
+        m.count("dispatches", &[("component", "dot"), ("die", "0")], 1);
+        m.count("dispatches", &[("die", "0"), ("component", "dot")], 2);
+        assert_eq!(
+            m.get_count("dispatches", &[("component", "dot"), ("die", "0")]),
+            3
+        );
+    }
+
+    #[test]
+    fn sums_series_and_rollups() {
+        let mut m = MetricsRegistry::new();
+        m.add("eth_bytes", &[("component", "spmv")], 100.0);
+        m.add("eth_bytes", &[("component", "dot")], 50.0);
+        m.series_push("residual", &[], 10.0, 1.0);
+        m.series_push("residual", &[], 20.0, 0.5);
+        assert_eq!(m.sum_over_labels("eth_bytes"), 150.0);
+        assert_eq!(m.get_series("residual", &[]), &[(10.0, 1.0), (20.0, 0.5)]);
+    }
+
+    #[test]
+    fn metric_ids_are_stable() {
+        let mut m = MetricsRegistry::new();
+        m.count("x", &[("b", "2"), ("a", "1")], 1);
+        let ids: Vec<String> = m.counts().map(|(id, _)| id).collect();
+        assert_eq!(ids, vec!["x{a=1,b=2}".to_string()]);
+        assert_eq!(metric_id("plain", &[]), "plain");
+    }
+
+    #[test]
+    fn merge_adds_and_extends() {
+        let mut a = MetricsRegistry::new();
+        a.count("launches", &[], 1);
+        a.series_push("s", &[], 1.0, 1.0);
+        let mut b = MetricsRegistry::new();
+        b.count("launches", &[], 2);
+        b.add("ns", &[], 5.0);
+        b.series_push("s", &[], 2.0, 2.0);
+        a.merge(&b);
+        assert_eq!(a.get_count("launches", &[]), 3);
+        assert_eq!(a.get_sum("ns", &[]), 5.0);
+        assert_eq!(a.get_series("s", &[]), &[(1.0, 1.0), (2.0, 2.0)]);
+    }
+}

@@ -1,0 +1,156 @@
+//! Unified telemetry layer: the single source of truth for where simulated
+//! time and bytes go.
+//!
+//! The pipeline, bottom to top (see README §Observability):
+//!
+//! 1. **Ledger** ([`ledger`]): [`crate::ttm::exec::execute_program`] builds a
+//!    per-program [`ResourceLedger`] splitting wall time into compute /
+//!    RISC-V / DRAM / NoC / Ethernet; the solvers fold those into a
+//!    [`SolveLedger`] with explicit dispatch and idle rows.  Conservation —
+//!    rows sum to the measured wall time — is enforced by
+//!    `tests/prop_telemetry.rs`.
+//! 2. **Metrics** ([`metrics`]): labelled counters / sums / time-series
+//!    recorded by `HostQueue` and the solvers (dispatch counts, per-component
+//!    device ns, Ethernet and NoC byte counters, residual decay).
+//! 3. **Events** ([`events`]): one [`SolverEvent`] per PCG residual
+//!    evaluation, exported as JSONL (`wormsim solve --telemetry out.jsonl`).
+//! 4. **Traces**: time-series render as Perfetto counter ("C") tracks next
+//!    to the profiler's zone events via
+//!    [`crate::profiler::to_chrome_trace_with`].
+//! 5. **Snapshots** ([`snapshot`]): bench sweeps serialize to
+//!    `BENCH_<name>.json` (`wormsim bench --emit-json`), compared by
+//!    `wormsim bench-diff`.
+//!
+//! Telemetry is *observational*: recording never advances simulated time, so
+//! solver results are bit-identical with telemetry on or off (also enforced
+//! by `tests/prop_telemetry.rs`).
+
+pub mod events;
+pub mod ledger;
+pub mod metrics;
+pub mod snapshot;
+
+use std::io;
+use std::path::Path;
+
+use crate::profiler::CounterTrack;
+use crate::timing::SimNs;
+
+pub use events::{events_to_jsonl, write_events_jsonl, SolverEvent};
+pub use ledger::{Resource, ResourceLedger, SolveLedger};
+pub use metrics::{metric_id, Labels, MetricsRegistry};
+pub use snapshot::{diff, BenchDiff, BenchMetric, BenchSnapshot, Better, DiffEntry};
+
+/// A solve-scoped telemetry sink: metrics registry + solver event stream,
+/// gated by one `enabled` flag so disabled runs do no work and allocate
+/// nothing beyond the empty maps.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Telemetry {
+    pub enabled: bool,
+    pub metrics: MetricsRegistry,
+    pub events: Vec<SolverEvent>,
+}
+
+impl Telemetry {
+    pub fn new(enabled: bool) -> Self {
+        Self {
+            enabled,
+            ..Self::default()
+        }
+    }
+
+    pub fn count(&mut self, name: &str, labels: &[(&str, &str)], n: u64) {
+        if self.enabled {
+            self.metrics.count(name, labels, n);
+        }
+    }
+
+    pub fn add(&mut self, name: &str, labels: &[(&str, &str)], v: f64) {
+        if self.enabled {
+            self.metrics.add(name, labels, v);
+        }
+    }
+
+    pub fn series(&mut self, name: &str, labels: &[(&str, &str)], t_ns: SimNs, v: f64) {
+        if self.enabled {
+            self.metrics.series_push(name, labels, t_ns, v);
+        }
+    }
+
+    pub fn event(&mut self, e: SolverEvent) {
+        if self.enabled {
+            self.events.push(e);
+        }
+    }
+
+    /// Merge another sink's recordings (e.g. the host queue's) into this one.
+    pub fn merge(&mut self, other: &Telemetry) {
+        self.metrics.merge(&other.metrics);
+        self.events.extend_from_slice(&other.events);
+    }
+
+    /// Render every recorded time series as a Perfetto counter track.
+    pub fn counter_tracks(&self) -> Vec<CounterTrack> {
+        self.metrics
+            .all_series()
+            .map(|(id, samples)| CounterTrack {
+                name: id,
+                samples: samples.to_vec(),
+            })
+            .collect()
+    }
+
+    pub fn events_jsonl(&self) -> String {
+        events_to_jsonl(&self.events)
+    }
+
+    pub fn write_events_jsonl(&self, path: &Path) -> io::Result<()> {
+        write_events_jsonl(&self.events, path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sink_records_nothing() {
+        let mut t = Telemetry::new(false);
+        t.count("launches", &[], 1);
+        t.add("ns", &[], 5.0);
+        t.series("residual", &[], 1.0, 2.0);
+        t.event(SolverEvent {
+            t_ns: 0.0,
+            iter: 1,
+            residual: 1.0,
+            launches: 1,
+            component_ns: vec![],
+        });
+        assert_eq!(t.metrics, MetricsRegistry::new());
+        assert!(t.events.is_empty());
+    }
+
+    #[test]
+    fn counter_tracks_mirror_series() {
+        let mut t = Telemetry::new(true);
+        t.series("residual", &[], 10.0, 1.0);
+        t.series("component_ns", &[("component", "dot")], 5.0, 2.0);
+        let tracks = t.counter_tracks();
+        assert_eq!(tracks.len(), 2);
+        // BTreeMap order: component_ns{...} sorts before residual.
+        assert_eq!(tracks[0].name, "component_ns{component=dot}");
+        assert_eq!(tracks[1].name, "residual");
+        assert_eq!(tracks[1].samples, vec![(10.0, 1.0)]);
+    }
+
+    #[test]
+    fn merge_pulls_in_queue_telemetry() {
+        let mut solver = Telemetry::new(true);
+        solver.count("dispatches", &[], 8);
+        let mut queue = Telemetry::new(true);
+        queue.count("host_launches", &[], 8);
+        solver.merge(&queue);
+        assert_eq!(solver.metrics.get_count("dispatches", &[]), 8);
+        assert_eq!(solver.metrics.get_count("host_launches", &[]), 8);
+    }
+}

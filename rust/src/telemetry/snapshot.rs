@@ -1,0 +1,400 @@
+//! Machine-readable bench snapshots (`BENCH_<name>.json`) and the
+//! regression comparator behind `wormsim bench-diff`.
+//!
+//! Schema (`wormsim-bench-v1`):
+//!
+//! ```json
+//! {
+//!   "schema": "wormsim-bench-v1",
+//!   "name": "pcg",
+//!   "meta": {"provenance": "...", "config": "..."},
+//!   "metrics": [
+//!     {"name": "iter_ns", "labels": {"overlap": "serial", "dies": "4"},
+//!      "value": 1.2e6, "unit": "ns", "better": "lower"}
+//!   ]
+//! }
+//! ```
+//!
+//! Snapshots carry **no timestamps** — the committed files must be
+//! byte-stable under regeneration with an unchanged model.  A metric's
+//! identity is `name{label=value,...}` with sorted labels; `diff` matches
+//! metrics by identity and flags relative changes beyond a threshold in the
+//! metric's "worse" direction (`better: "info"` metrics are never flagged).
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use super::metrics::metric_id;
+use crate::util::jsonmini::Json;
+
+/// Which direction of change counts as an improvement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Better {
+    Lower,
+    Higher,
+    /// Contextual metric: recorded but never flagged by `diff`.
+    Info,
+}
+
+impl Better {
+    pub fn label(self) -> &'static str {
+        match self {
+            Better::Lower => "lower",
+            Better::Higher => "higher",
+            Better::Info => "info",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "lower" => Ok(Better::Lower),
+            "higher" => Ok(Better::Higher),
+            "info" => Ok(Better::Info),
+            other => Err(format!("unknown better direction '{other}'")),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchMetric {
+    pub name: String,
+    /// Sorted `(key, value)` label pairs.
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+    pub unit: String,
+    pub better: Better,
+}
+
+impl BenchMetric {
+    pub fn id(&self) -> String {
+        metric_id(&self.name, &self.labels)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchSnapshot {
+    pub name: String,
+    /// Free-form provenance/config notes, written in insertion order.
+    pub meta: Vec<(String, String)>,
+    pub metrics: Vec<BenchMetric>,
+}
+
+impl BenchSnapshot {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            meta: Vec::new(),
+            metrics: Vec::new(),
+        }
+    }
+
+    pub fn meta(&mut self, key: &str, value: &str) {
+        self.meta.push((key.to_string(), value.to_string()));
+    }
+
+    /// Append one metric; labels are sorted to canonicalize identity.
+    pub fn push(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        value: f64,
+        unit: &str,
+        better: Better,
+    ) {
+        let mut labels: Vec<(String, String)> = labels
+            .iter()
+            .map(|&(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        labels.sort();
+        self.metrics.push(BenchMetric {
+            name: name.to_string(),
+            labels,
+            value,
+            unit: unit.to_string(),
+            better,
+        });
+    }
+
+    pub fn find(&self, id: &str) -> Option<&BenchMetric> {
+        self.metrics.iter().find(|m| m.id() == id)
+    }
+
+    pub fn to_json(&self) -> String {
+        let meta = self.meta.clone();
+        let metrics: Vec<Json> = self
+            .metrics
+            .iter()
+            .map(|m| {
+                Json::Obj(vec![
+                    ("name".to_string(), Json::Str(m.name.clone())),
+                    (
+                        "labels".to_string(),
+                        Json::Obj(
+                            m.labels
+                                .iter()
+                                .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                                .collect(),
+                        ),
+                    ),
+                    ("value".to_string(), Json::Num(m.value)),
+                    ("unit".to_string(), Json::Str(m.unit.clone())),
+                    (
+                        "better".to_string(),
+                        Json::Str(m.better.label().to_string()),
+                    ),
+                ])
+            })
+            .collect();
+        let doc = Json::Obj(vec![
+            (
+                "schema".to_string(),
+                Json::Str("wormsim-bench-v1".to_string()),
+            ),
+            ("name".to_string(), Json::Str(self.name.clone())),
+            (
+                "meta".to_string(),
+                Json::Obj(
+                    meta.into_iter()
+                        .map(|(k, v)| (k, Json::Str(v)))
+                        .collect(),
+                ),
+            ),
+            ("metrics".to_string(), Json::Arr(metrics)),
+        ]);
+        // Pretty-ish: one metric per line so git diffs stay reviewable.
+        let mut out = String::new();
+        out.push_str("{\"schema\":\"wormsim-bench-v1\",\n");
+        out.push_str(&format!(
+            "\"name\":{},\n",
+            Json::Str(self.name.clone()).to_json_string()
+        ));
+        let Json::Obj(fields) = doc else { unreachable!() };
+        let meta_json = &fields[2].1;
+        out.push_str(&format!("\"meta\":{},\n", meta_json.to_json_string()));
+        out.push_str("\"metrics\":[\n");
+        let Json::Arr(items) = &fields[3].1 else {
+            unreachable!()
+        };
+        for (i, m) in items.iter().enumerate() {
+            out.push_str(&m.to_json_string());
+            if i + 1 < items.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("]}\n");
+        out
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let doc = Json::parse(s)?;
+        match doc.get("schema").and_then(Json::as_str) {
+            Some("wormsim-bench-v1") => {}
+            other => return Err(format!("unsupported snapshot schema {other:?}")),
+        }
+        let name = doc
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("snapshot missing 'name'")?
+            .to_string();
+        let mut snap = BenchSnapshot::new(&name);
+        if let Some(meta) = doc.get("meta").and_then(Json::as_obj) {
+            for (k, v) in meta {
+                snap.meta
+                    .push((k.clone(), v.as_str().unwrap_or("").to_string()));
+            }
+        }
+        let metrics = doc
+            .get("metrics")
+            .and_then(Json::as_arr)
+            .ok_or("snapshot missing 'metrics'")?;
+        for m in metrics {
+            let name = m
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("metric missing 'name'")?;
+            let mut labels: Vec<(String, String)> = m
+                .get("labels")
+                .and_then(Json::as_obj)
+                .map(|pairs| {
+                    pairs
+                        .iter()
+                        .map(|(k, v)| (k.clone(), v.as_str().unwrap_or("").to_string()))
+                        .collect()
+                })
+                .unwrap_or_default();
+            labels.sort();
+            let value = m
+                .get("value")
+                .and_then(Json::as_f64)
+                .ok_or("metric missing 'value'")?;
+            let unit = m.get("unit").and_then(Json::as_str).unwrap_or("").to_string();
+            let better = Better::parse(m.get("better").and_then(Json::as_str).unwrap_or("info"))?;
+            snap.metrics.push(BenchMetric {
+                name: name.to_string(),
+                labels,
+                value,
+                unit,
+                better,
+            });
+        }
+        Ok(snap)
+    }
+
+    /// Write to `path`, creating parent directories.
+    pub fn write(&self, path: &Path) -> io::Result<()> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_json())
+    }
+
+    pub fn read(path: &Path) -> Result<Self, String> {
+        let text =
+            fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        Self::parse(&text).map_err(|e| format!("parse {}: {e}", path.display()))
+    }
+}
+
+/// One metric that moved between two snapshots.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiffEntry {
+    pub id: String,
+    pub a: f64,
+    pub b: f64,
+    /// Signed relative change `(b - a) / |a|`.
+    pub rel: f64,
+}
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BenchDiff {
+    /// Metrics that moved in their "worse" direction beyond the threshold.
+    pub regressions: Vec<DiffEntry>,
+    /// Metrics that moved in their "better" direction beyond the threshold.
+    pub improvements: Vec<DiffEntry>,
+    /// Metric ids present in `a` but absent in `b` (advisory note).
+    pub missing: Vec<String>,
+    /// Metric ids present in `b` but absent in `a` (advisory note).
+    pub added: Vec<String>,
+}
+
+/// Compare snapshot `b` against baseline `a`. `threshold` is the relative
+/// change (e.g. `0.05` = 5%) beyond which a directional metric is flagged.
+pub fn diff(a: &BenchSnapshot, b: &BenchSnapshot, threshold: f64) -> BenchDiff {
+    let mut out = BenchDiff::default();
+    for ma in &a.metrics {
+        let id = ma.id();
+        let Some(mb) = b.find(&id) else {
+            out.missing.push(id);
+            continue;
+        };
+        let denom = ma.value.abs().max(1e-12);
+        let rel = (mb.value - ma.value) / denom;
+        let entry = DiffEntry {
+            id: id.clone(),
+            a: ma.value,
+            b: mb.value,
+            rel,
+        };
+        let (worse, improved) = match ma.better {
+            Better::Lower => (rel > threshold, rel < -threshold),
+            Better::Higher => (rel < -threshold, rel > threshold),
+            Better::Info => (false, false),
+        };
+        if worse {
+            out.regressions.push(entry);
+        } else if improved {
+            out.improvements.push(entry);
+        }
+    }
+    for mb in &b.metrics {
+        let id = mb.id();
+        if a.find(&id).is_none() {
+            out.added.push(id);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap() -> BenchSnapshot {
+        let mut s = BenchSnapshot::new("pcg");
+        s.meta("config", "8x7 grid, 64 tiles");
+        s.push(
+            "iter_ns",
+            &[("overlap", "serial"), ("dies", "4")],
+            1.2e6,
+            "ns",
+            Better::Lower,
+        );
+        s.push("peak_link_util", &[("dies", "4")], 1.0, "frac", Better::Info);
+        s.push("residual_drop", &[], 0.5, "frac", Better::Higher);
+        s
+    }
+
+    #[test]
+    fn json_round_trip_is_lossless() {
+        let s = snap();
+        let back = BenchSnapshot::parse(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        // And byte-stable on re-serialization.
+        assert_eq!(back.to_json(), s.to_json());
+    }
+
+    #[test]
+    fn self_diff_flags_nothing() {
+        let s = snap();
+        let d = diff(&s, &s, 0.05);
+        assert!(d.regressions.is_empty());
+        assert!(d.improvements.is_empty());
+        assert!(d.missing.is_empty());
+        assert!(d.added.is_empty());
+    }
+
+    #[test]
+    fn diff_respects_direction_and_threshold() {
+        let a = snap();
+        let mut b = snap();
+        b.metrics[0].value = 1.2e6 * 1.10; // iter_ns up 10% → regression
+        b.metrics[1].value = 0.2; // info metric moves → ignored
+        b.metrics[2].value = 0.4; // higher-is-better down 20% → regression
+        let d = diff(&a, &b, 0.05);
+        assert_eq!(d.regressions.len(), 2);
+        assert_eq!(d.regressions[0].id, "iter_ns{dies=4,overlap=serial}");
+        assert_eq!(d.regressions[1].id, "residual_drop");
+        // Same moves under a huge threshold → clean.
+        assert!(diff(&a, &b, 0.5).regressions.is_empty());
+        // Improvement direction.
+        let mut c = snap();
+        c.metrics[0].value = 1.2e6 * 0.8;
+        let d2 = diff(&a, &c, 0.05);
+        assert!(d2.regressions.is_empty());
+        assert_eq!(d2.improvements.len(), 1);
+    }
+
+    #[test]
+    fn missing_and_added_are_notes_not_regressions() {
+        let a = snap();
+        let mut b = BenchSnapshot::new("pcg");
+        b.push("new_metric", &[], 1.0, "ns", Better::Lower);
+        let d = diff(&a, &b, 0.05);
+        assert_eq!(d.missing.len(), 3);
+        assert_eq!(d.added, vec!["new_metric".to_string()]);
+        assert!(d.regressions.is_empty());
+    }
+
+    #[test]
+    fn write_and_read_disk_round_trip() {
+        let dir = std::env::temp_dir().join("wormsim_snapshot_test");
+        let path = dir.join("BENCH_t.json");
+        let s = snap();
+        s.write(&path).unwrap();
+        let back = BenchSnapshot::read(&path).unwrap();
+        assert_eq!(back, s);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -91,6 +91,14 @@ pub struct ProgramOutcome {
     /// times (queueing on contended links included); feeds the per-link
     /// profiler zones.
     pub eth_transfers: Vec<crate::device::EthTransfer>,
+    /// Per-resource attribution of `device_ns()`: the critical core's own
+    /// phase components plus the marginal reduce/broadcast and Ethernet
+    /// extensions. Conservation — `ledger.total() == device_ns()` — is
+    /// enforced by `tests/prop_telemetry.rs`.
+    pub ledger: crate::telemetry::ResourceLedger,
+    /// Cumulative NoC link-busy time across all links (hop + serialization
+    /// terms of every traversal) — an occupancy gauge, not a wall-time row.
+    pub noc_link_busy_ns: SimNs,
 }
 
 impl ProgramOutcome {
@@ -104,6 +112,23 @@ impl ProgramOutcome {
 /// data movement, per-core local phases, and the optional reduction.
 /// Pure device timing — dispatch overhead is the host queue's job.
 pub fn execute_program(program: &Program, cost: &CostModel, start: SimNs) -> Result<ProgramOutcome> {
+    execute_program_with(program, cost, start, None)
+}
+
+/// Like [`execute_program`], but the Ethernet phase (if any) can run
+/// through a caller-owned [`crate::device::EthSim`], so one link-occupancy
+/// tracker spans many programs (one per solve instead of one per
+/// component). The outcome's Ethernet fields describe only the transfers
+/// this program added; with `None` the behaviour — including every timing
+/// value — is bit-identical to a fresh per-program simulator, because the
+/// shared tracker only matters once a prior program left a link busy
+/// *after* this program's phase start.
+pub fn execute_program_with(
+    program: &Program,
+    cost: &CostModel,
+    start: SimNs,
+    shared_eth: Option<&mut crate::device::EthSim>,
+) -> Result<ProgramOutcome> {
     program.validate()?;
     let w = &program.work;
     let n = w.n_cores();
@@ -150,6 +175,12 @@ pub fn execute_program(program: &Program, cost: &CostModel, start: SimNs) -> Res
     // interior chain.
     let mut interior_done = vec![start; n];
     let mut boundary_dur = vec![0.0f64; n];
+    // The critical (argmax-done) core's own components: unlike the
+    // per-field maxima above (each of which may come from a *different*
+    // core), these sum exactly to the local phase's wall time, which is
+    // what the resource ledger needs for conservation.
+    let mut crit_done = start;
+    let mut crit = (0.0f64, 0.0f64, 0.0f64, 0.0f64); // (dm wait, dram, riscv, compute)
     for i in 0..n {
         let ready = send_done[i].max(recv_ready[i]);
         let dram_b = at(&w.dram_bytes, i);
@@ -173,6 +204,10 @@ pub fn execute_program(program: &Program, cost: &CostModel, start: SimNs) -> Res
         let done = ready + dram + riscv + compute;
         core_done[i] = done;
         end = end.max(done);
+        if done > crit_done {
+            crit_done = done;
+            crit = (ready - start, dram, riscv, compute);
+        }
         interior_done[i] = interior;
         boundary_dur[i] = boundary;
         out.data_movement_ns = out.data_movement_ns.max(ready - start);
@@ -181,6 +216,13 @@ pub fn execute_program(program: &Program, cost: &CostModel, start: SimNs) -> Res
         out.compute_ns = out.compute_ns.max(compute);
         out.local_ns = out.local_ns.max(riscv + compute);
         out.boundary_ns = out.boundary_ns.max(boundary);
+    }
+    {
+        use crate::telemetry::Resource;
+        out.ledger.add(Resource::Noc, crit.0);
+        out.ledger.add(Resource::Dram, crit.1);
+        out.ledger.add(Resource::Riscv, crit.2);
+        out.ledger.add(Resource::Compute, crit.3);
     }
 
     // ---- global reduction tree + broadcast (§5) -------------------------
@@ -223,22 +265,52 @@ pub fn execute_program(program: &Program, cost: &CostModel, start: SimNs) -> Res
             out.bcast_ns = bcast_done - reduce_done;
             end = bcast_done;
         }
+        // Reduce tree + broadcast extend the critical path past the local
+        // phase on the NoC (merge cycles ride the data-movement cores).
+        out.ledger
+            .add(crate::telemetry::Resource::Noc, out.reduce_ns + out.bcast_ns);
     }
 
     // ---- inter-die Ethernet phase (§8 multi-device) ---------------------
+    let ledger_end_before_eth = end;
     if let Some(eth) = &w.ether {
         // Every hop goes through the per-link occupancy tracker: hops of
         // one round sharing a physical link serialize on its bandwidth
-        // term instead of riding independent pipes.
-        let mut eth_sim = crate::device::EthSim::new();
+        // term instead of riding independent pipes. The tracker is either
+        // this program's own or the caller's solve-wide one.
+        let mut local_sim = None;
+        let eth_sim: &mut crate::device::EthSim = match shared_eth {
+            Some(s) => s,
+            None => local_sim.insert(crate::device::EthSim::new()),
+        };
+        let t0 = eth_sim.transfers.len();
         let phase_start = if eth.overlaps_local { start } else { end };
-        let phase_end = eth.run(&mut eth_sim, phase_start);
+        let phase_end = eth.run(eth_sim, phase_start);
         let dur = phase_end - phase_start;
         out.ether_ns = dur;
-        out.eth_messages = eth_sim.messages;
-        out.eth_bytes = eth_sim.bytes;
-        out.eth_link_util = eth_sim.utilization(dur);
-        out.eth_transfers = eth_sim.transfers;
+        // Account only the transfers THIS program added (the shared
+        // tracker may carry earlier programs' traffic).
+        let new = &eth_sim.transfers[t0..];
+        out.eth_messages = new.len() as u64;
+        out.eth_bytes = new.iter().map(|t| t.bytes).sum();
+        let mut link_busy: BTreeMap<(usize, usize), SimNs> = BTreeMap::new();
+        for t in new {
+            *link_busy.entry(t.link).or_insert(0.0) += t.end - t.start;
+        }
+        out.eth_link_util = if dur > 0.0 {
+            link_busy
+                .iter()
+                .map(|(&(a, b), &busy)| (a, b, busy / dur))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        out.ledger.eth_link_busy = link_busy.iter().map(|(&l, &b)| (l, b)).collect();
+        out.ledger.eth_bottleneck = link_busy
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(b.1).expect("link busy is finite"))
+            .map(|(&l, _)| l);
+        out.eth_transfers = new.to_vec();
         // Pipelining needs the lowering to have said WHICH work consumes
         // the seam. Without any declared split the whole dependent chain
         // is assumed seam-bound — the conservative Serial rule — so an
@@ -285,10 +357,19 @@ pub fn execute_program(program: &Program, cost: &CostModel, start: SimNs) -> Res
             end = phase_end;
         }
     }
+    // Marginal Ethernet attribution: however the overlap rule composed the
+    // seam, whatever it extended `end` beyond the local + reduction chain
+    // is time the program spent waiting on Ethernet. (Under Pipelined the
+    // per-core re-composition can shrink by a float ulp; clamped in add.)
+    out.ledger.add(
+        crate::telemetry::Resource::Ethernet,
+        end - ledger_end_before_eth,
+    );
 
     out.end = end;
     out.messages = noc.messages_sent;
     out.bytes = noc.bytes_sent;
+    out.noc_link_busy_ns = noc.link_busy_ns;
     Ok(out)
 }
 
@@ -577,6 +658,65 @@ mod tests {
         let serial_reduce = execute_program(&with_serial, &cost, 0.0).unwrap();
         assert_eq!(piped_reduce.end, serial_reduce.end);
         assert!(piped_reduce.reduce_ns > 0.0);
+    }
+
+    #[test]
+    fn ledger_conserves_and_shared_eth_sim_is_bit_identical() {
+        use crate::device::{DeviceMesh, EthLink, EthSim, MeshTopology};
+        use crate::telemetry::Resource;
+        use crate::ttm::program::EtherPhase;
+        let cost = CostModel::default();
+        let mesh = DeviceMesh::new(2, 1, 2, MeshTopology::Line, EthLink::default()).unwrap();
+
+        let conserves = |out: &ProgramOutcome| {
+            let eps = 1e-6 * out.device_ns().max(1.0);
+            assert!(
+                (out.ledger.total() - out.device_ns()).abs() <= eps,
+                "ledger {} != wall {}",
+                out.ledger.total(),
+                out.device_ns()
+            );
+        };
+
+        // Plain local program: rows are the critical core's components.
+        let mut p = Program::standard("local");
+        p.work.grid = (1, 2);
+        p.work.riscv_cycles = vec![500, 700];
+        p.work.compute_cycles = vec![10_000, 9_000];
+        let out = execute_program(&p, &cost, 0.0).unwrap();
+        conserves(&out);
+        // Critical core is core 0 (10_500 cycles > 9_700): its OWN riscv,
+        // not the per-field max.
+        assert_eq!(out.ledger.get(Resource::Riscv), crate::timing::cycles_ns(500));
+        assert_eq!(out.ledger.get(Resource::Ethernet), 0.0);
+
+        // Seam program: the marginal Ethernet row closes the gap.
+        let phase = EtherPhase::halo("halo", &mesh, &[(0, 1, 4096), (1, 0, 4096)]).unwrap();
+        p.work.ether = Some(phase);
+        let seam = execute_program(&p, &cost, 0.0).unwrap();
+        conserves(&seam);
+        assert!(seam.ledger.get(Resource::Ethernet) > 0.0);
+        assert_eq!(seam.ledger.eth_bottleneck, Some((0, 1)));
+
+        // Shared-tracker path with an empty tracker == fresh-tracker path,
+        // bit for bit, across every outcome field (including the ledger).
+        let mut shared = EthSim::new();
+        let via_shared = execute_program_with(&p, &cost, 0.0, Some(&mut shared)).unwrap();
+        assert_eq!(via_shared, seam);
+        assert_eq!(shared.transfers.len(), seam.eth_transfers.len());
+
+        // A second program through the SAME tracker queues behind the
+        // first's traffic on the shared link and reports only its own
+        // transfers/bytes.
+        let t_before = shared.transfers.len();
+        let again = execute_program_with(&p, &cost, 0.0, Some(&mut shared)).unwrap();
+        assert_eq!(again.eth_transfers.len(), seam.eth_transfers.len());
+        assert_eq!(again.eth_bytes, seam.eth_bytes);
+        assert_eq!(shared.transfers.len(), t_before + again.eth_transfers.len());
+        assert!(
+            again.ether_ns > seam.ether_ns,
+            "second phase queues behind the first on the shared link"
+        );
     }
 
     #[test]

@@ -18,6 +18,7 @@
 use std::collections::BTreeMap;
 
 use crate::profiler::Profiler;
+use crate::telemetry::Telemetry;
 use crate::timing::calib::Calib;
 use crate::timing::cost::CostModel;
 use crate::timing::SimNs;
@@ -37,6 +38,11 @@ pub struct LaunchStats {
 pub struct HostQueue {
     calib: Calib,
     pub stats: LaunchStats,
+    /// Host-side metric sink (launch/gap/readback counters and per-program
+    /// byte/time sums). Disabled by default; solvers enable it on their
+    /// dispatch queue and merge it into the solve telemetry — scratch
+    /// queues stay disabled so pre-executions are never double-counted.
+    pub telemetry: Telemetry,
     log: Vec<String>,
 }
 
@@ -45,6 +51,7 @@ impl HostQueue {
         Self {
             calib,
             stats: LaunchStats::default(),
+            telemetry: Telemetry::new(false),
             log: Vec::new(),
         }
     }
@@ -55,6 +62,10 @@ impl HostQueue {
         program.validate()?;
         self.stats.launches += 1;
         self.stats.launch_ns += self.calib.kernel_launch_ns;
+        self.telemetry
+            .count("host_launches", &[("program", &program.name)], 1);
+        self.telemetry
+            .add("host_launch_ns", &[], self.calib.kernel_launch_ns);
         self.log.push(program.name.clone());
         Ok(now + self.calib.kernel_launch_ns)
     }
@@ -66,6 +77,10 @@ impl HostQueue {
         }
         self.stats.launches += 1;
         self.stats.launch_ns += self.calib.kernel_launch_ns;
+        self.telemetry
+            .count("host_launches", &[("program", &fused.name)], 1);
+        self.telemetry
+            .add("host_launch_ns", &[], self.calib.kernel_launch_ns);
         self.log.push(fused.name.clone());
         Ok(now + self.calib.kernel_launch_ns)
     }
@@ -74,11 +89,16 @@ impl HostQueue {
     /// kernels within a fused program. Returns the adjusted time.
     pub fn kernel_gap(&mut self, now: SimNs) -> SimNs {
         self.stats.gap_ns += self.calib.inter_kernel_gap_ns;
+        self.telemetry
+            .add("host_gap_ns", &[], self.calib.inter_kernel_gap_ns);
         now + self.calib.inter_kernel_gap_ns
     }
 
     /// Charge the residual-norm readback (split-kernel PCG; §7.1).
     pub fn residual_readback(&mut self, now: SimNs) -> SimNs {
+        self.telemetry.count("host_readbacks", &[], 1);
+        self.telemetry
+            .add("host_readback_ns", &[], self.calib.residual_readback_ns);
         now + self.calib.residual_readback_ns
     }
 
@@ -94,6 +114,7 @@ impl HostQueue {
     ) -> crate::Result<ProgramOutcome> {
         let start = self.enqueue(program, now)?;
         let out = execute_program(program, cost, start)?;
+        self.record_program_metrics(program, &out);
         emit_role_zones(program, &out, profiler);
         Ok(out)
     }
@@ -109,8 +130,24 @@ impl HostQueue {
     ) -> crate::Result<ProgramOutcome> {
         let start = self.kernel_gap(now);
         let out = execute_program(program, cost, start)?;
+        self.record_program_metrics(program, &out);
         emit_role_zones(program, &out, profiler);
         Ok(out)
+    }
+
+    /// Per-program execution metrics (bytes are from the program's own
+    /// NoC/Ethernet accounting, times from the outcome).
+    fn record_program_metrics(&mut self, program: &Program, out: &ProgramOutcome) {
+        if !self.telemetry.enabled {
+            return;
+        }
+        let labels = [("program", program.name.as_str())];
+        self.telemetry.add("program_device_ns", &labels, out.device_ns());
+        self.telemetry.add("program_noc_bytes", &labels, out.bytes as f64);
+        self.telemetry
+            .add("program_eth_bytes", &labels, out.eth_bytes as f64);
+        self.telemetry
+            .add("program_noc_link_busy_ns", &labels, out.noc_link_busy_ns);
     }
 
     pub fn launched(&self) -> &[String] {
@@ -315,6 +352,37 @@ mod tests {
         assert!(out.end > out.start);
         // One zone per kernel role.
         assert_eq!(prof.zones().len(), 3);
+    }
+
+    #[test]
+    fn queue_telemetry_counts_dispatch_work_when_enabled() {
+        let calib = Calib::default();
+        let mut q = HostQueue::new(calib.clone());
+        // Disabled by default: nothing recorded.
+        let mut p = Program::standard("k");
+        p.work.compute_cycles = vec![1000];
+        let mut prof = Profiler::disabled();
+        q.run(&p, &CostModel::default(), 0.0, &mut prof).unwrap();
+        assert_eq!(q.telemetry.metrics.get_count("host_launches", &[("program", "k")]), 0);
+
+        let mut q = HostQueue::new(calib.clone());
+        q.telemetry = crate::telemetry::Telemetry::new(true);
+        let out = q.run(&p, &CostModel::default(), 0.0, &mut prof).unwrap();
+        q.kernel_gap(out.end);
+        q.residual_readback(out.end);
+        let m = &q.telemetry.metrics;
+        assert_eq!(m.get_count("host_launches", &[("program", "k")]), 1);
+        assert_eq!(m.get_sum("host_launch_ns", &[]), calib.kernel_launch_ns);
+        assert_eq!(m.get_sum("host_gap_ns", &[]), calib.inter_kernel_gap_ns);
+        assert_eq!(m.get_count("host_readbacks", &[]), 1);
+        assert_eq!(
+            m.get_sum("program_device_ns", &[("program", "k")]),
+            out.device_ns()
+        );
+        assert_eq!(
+            m.get_sum("program_noc_bytes", &[("program", "k")]),
+            out.bytes as f64
+        );
     }
 
     #[test]

@@ -24,7 +24,10 @@ pub mod exec;
 pub mod launch;
 pub mod program;
 
-pub use exec::{execute_program, stencil_tile_kernel, KernelStats, ProgramOutcome, TileHalos};
+pub use exec::{
+    execute_program, execute_program_with, stencil_tile_kernel, KernelStats, ProgramOutcome,
+    TileHalos,
+};
 pub use launch::{HostQueue, IterSchedule, LaunchStats};
 pub use program::{
     EthHop, EtherPhase, Footprint, FusedProgram, KernelRole, KernelSpec, NocSend, OverlapMode,

@@ -90,6 +90,23 @@ impl Bencher {
         });
     }
 
+    /// Machine-readable snapshot of this suite's results: the simulated-time
+    /// channel as directional metrics (lower is better), wall-clock means as
+    /// contextual info only (host timing varies by machine and load, so it
+    /// must never trip `bench-diff`).
+    pub fn snapshot(&self) -> crate::telemetry::BenchSnapshot {
+        use crate::telemetry::{BenchSnapshot, Better};
+        let mut s = BenchSnapshot::new(&self.suite);
+        for r in &self.results {
+            let labels = [("bench", r.name.as_str())];
+            if let Some(sim) = r.sim_ns {
+                s.push("sim_ns", &labels, sim, "ns", Better::Lower);
+            }
+            s.push("wall_mean_ns", &labels, r.wall_ns.mean, "ns", Better::Info);
+        }
+        s
+    }
+
     /// Write the suite results as CSV and print a footer. Call at the end of
     /// every bench main().
     pub fn finish(self) {
@@ -132,6 +149,14 @@ mod tests {
         assert_eq!(b.results.len(), 1);
         assert_eq!(b.results[0].sim_ns, Some(123.0));
         assert!(b.results[0].wall_ns.mean >= 0.0);
+        // Snapshot: sim channel is directional, wall is info-only.
+        let s = b.snapshot();
+        assert_eq!(s.name, "selftest");
+        let sim = s.find("sim_ns{bench=trivial}").unwrap();
+        assert_eq!(sim.value, 123.0);
+        assert_eq!(sim.better, crate::telemetry::Better::Lower);
+        let wall = s.find("wall_mean_ns{bench=trivial}").unwrap();
+        assert_eq!(wall.better, crate::telemetry::Better::Info);
         std::env::remove_var("WORMSIM_BENCH_SAMPLES");
     }
 }

@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod cli;
 pub mod csv;
+pub mod jsonmini;
 pub mod prng;
 pub mod prop;
 pub mod stats;

@@ -510,3 +510,55 @@ fn send_tiles_dot_pays_ring_segment_bandwidth_across_dies() {
     assert!(tiles.duration_ns() > scalar.duration_ns());
     assert!(tiles.duration_ns() < chain_whole_tiles);
 }
+
+#[test]
+fn solve_window_link_utilization_tracks_one_ethsim_across_components() {
+    // PR-6 satellite: all Ethernet transfers of a solve — spmv halo AND
+    // dot all-reduce — replay into one solve-scoped EthSim, so
+    // `eth_link_util_solve` reports per-link busy fractions of the whole
+    // wall-clock window (unlike `eth_peak_link_util`, which is per-phase).
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    for &n_dies in &[2usize, 4] {
+        let mesh = line_mesh(n_dies, 1, 2);
+        let b = solver::mesh_dist_random(&mesh, 2, DataFormat::Bf16, 21);
+        let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
+        opts.max_iters = 3;
+        opts.tol_abs = 0.0;
+        let mut prof = Profiler::disabled();
+        let res = solver::solve_pcg_mesh(
+            &mesh,
+            &b,
+            &Operator::Stencil(stencil_cfg(DataFormat::Bf16, 2)),
+            &e,
+            &cost,
+            &opts.clone().into(),
+            &mut prof,
+        )
+        .unwrap();
+        // Every seam link of the line shows up, both directions.
+        assert_eq!(res.eth_link_util_solve.len(), 2 * (n_dies - 1));
+        for &(a, bb, u) in &res.eth_link_util_solve {
+            assert!(a < n_dies && bb < n_dies);
+            assert!(u > 0.0, "link {a}->{bb} never busy");
+            // Links are busy for strictly less than the solve: compute and
+            // dispatch intervals carry no Ethernet traffic.
+            assert!(u < 1.0, "link {a}->{bb} util {u} not a solve fraction");
+        }
+        // N=1 has no links at all.
+        let mesh1 = line_mesh(1, 1, 2);
+        let b1 = solver::mesh_dist_random(&mesh1, 2, DataFormat::Bf16, 21);
+        let res1 = solver::solve_pcg_mesh(
+            &mesh1,
+            &b1,
+            &Operator::Stencil(stencil_cfg(DataFormat::Bf16, 2)),
+            &e,
+            &cost,
+            &opts.clone().into(),
+            &mut prof,
+        )
+        .unwrap();
+        assert!(res1.eth_link_util_solve.is_empty());
+        assert_eq!(res1.n_dies, 1);
+    }
+}

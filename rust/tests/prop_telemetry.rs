@@ -1,0 +1,320 @@
+//! Property tests for the unified telemetry layer:
+//!
+//! 1. **conservation** — every lowered program's [`ResourceLedger`] rows sum
+//!    to its wall time (eltwise / dot / stencil / SpMV, every mesh component,
+//!    Serial and Pipelined, N ∈ {1, 2, 4}), and byte counters equal the
+//!    lowering's declared footprint;
+//! 2. **solver conservation** — the [`SolveLedger`] (component charges plus
+//!    the dispatch row) sums to the solve's wall time for fused and split
+//!    variants, single-die and mesh;
+//! 3. **observability is free** — solver results are bit-identical with
+//!    telemetry on or off, and a disabled profiler records nothing through a
+//!    full mesh solve;
+//! 4. the committed `BENCH_pcg.json` snapshot parses, self-diffs clean, and
+//!    covers every metric id the CI smoke sweep emits.
+
+use wormsim::arch::{ComputeUnit, DataFormat};
+use wormsim::device::{DeviceMesh, EthLink, MeshTopology, TensixGrid};
+use wormsim::engine::{NativeEngine, StencilCoeffs};
+use wormsim::kernels::eltwise::lower_eltwise;
+use wormsim::kernels::reduction::{lower_dot_as, DotConfig, DotMethod};
+use wormsim::kernels::spmv::{SpmvConfig, SpmvMode, SpmvOperator};
+use wormsim::kernels::stencil::{lower_stencil, StencilConfig, StencilVariant};
+use wormsim::noc::RoutePattern;
+use wormsim::profiler::Profiler;
+use wormsim::solver::mesh::lower_mesh_components;
+use wormsim::solver::{self, MeshOptions, Operator, OverlapMode, PcgOptions, PcgVariant, Problem};
+use wormsim::sparse::{laplacian_3d, RowPartition};
+use wormsim::telemetry::BenchSnapshot;
+use wormsim::timing::cost::{CostModel, TileOpKind};
+use wormsim::ttm::{execute_program, ProgramOutcome};
+
+fn stencil_cfg(df: DataFormat, tiles: usize) -> StencilConfig {
+    StencilConfig {
+        df,
+        unit: ComputeUnit::for_format(df),
+        tiles_per_core: tiles,
+        variant: StencilVariant::FULL,
+        coeffs: StencilCoeffs::LAPLACIAN,
+    }
+}
+
+fn line_mesh(n_dies: usize, rows: usize, cols: usize) -> DeviceMesh {
+    DeviceMesh::new(n_dies, rows, cols, MeshTopology::Line, EthLink::for_dies(n_dies)).unwrap()
+}
+
+/// Ledger rows must sum to the program's wall time, up to floating-point
+/// reassociation of the same phase terms.
+fn assert_conserves(out: &ProgramOutcome, what: &str) {
+    let attributed = out.ledger.total();
+    let wall = out.device_ns();
+    let eps = 1e-6 * wall.max(1.0);
+    assert!(
+        (attributed - wall).abs() <= eps,
+        "{what}: ledger rows sum to {attributed} but wall time is {wall}"
+    );
+}
+
+fn sparse_op_for(mesh: &DeviceMesh, nz: usize) -> SpmvOperator {
+    let a = laplacian_3d(64 * mesh.logical_rows(), 16 * mesh.die_cols, nz);
+    let part = RowPartition::stencil_aligned(mesh.logical_rows(), mesh.die_cols, nz).unwrap();
+    SpmvOperator::new(&a, part, SpmvConfig::new(DataFormat::Fp32, SpmvMode::SramResident)).unwrap()
+}
+
+#[test]
+fn single_die_kernel_programs_conserve() {
+    let cost = CostModel::default();
+    let out = execute_program(&lower_eltwise(&cost, ComputeUnit::Fpu, DataFormat::Bf16, 8), &cost, 0.0)
+        .unwrap();
+    assert_conserves(&out, "eltwise");
+    for method in [DotMethod::ReduceThenSend, DotMethod::SendTiles] {
+        for pattern in [RoutePattern::Naive, RoutePattern::Center] {
+            let cfg = DotConfig {
+                method,
+                pattern,
+                df: DataFormat::Bf16,
+                unit: ComputeUnit::Fpu,
+                tiles_per_core: 8,
+            };
+            let p = lower_dot_as("dot", 4, 4, &cfg, &cost);
+            assert_conserves(&execute_program(&p, &cost, 0.0).unwrap(), &p.name);
+        }
+    }
+    let grid = TensixGrid::new(4, 4).unwrap();
+    let p = lower_stencil(&grid, &stencil_cfg(DataFormat::Bf16, 8), &cost);
+    assert_conserves(&execute_program(&p, &cost, 0.0).unwrap(), "stencil");
+}
+
+#[test]
+fn every_lowered_mesh_component_conserves_time_and_bytes() {
+    let cost = CostModel::default();
+    for &n in &[1usize, 2, 4] {
+        let mesh = line_mesh(n, 1, 2);
+        let sparse = sparse_op_for(&mesh, 2);
+        for overlap in [OverlapMode::Serial, OverlapMode::Pipelined] {
+            for op in [
+                Operator::Stencil(stencil_cfg(DataFormat::Fp32, 2)),
+                Operator::Sparse(&sparse),
+            ] {
+                let opts = MeshOptions::new(PcgOptions::new(PcgVariant::SplitFp32))
+                    .with_overlap(overlap);
+                let lowering =
+                    lower_mesh_components(&mesh, &op, &opts, 2, TileOpKind::EltwiseUnary, &cost)
+                        .unwrap();
+                for p in lowering.components.iter().chain(&lowering.spmv_per_die) {
+                    let out = execute_program(p, &cost, 0.0).unwrap();
+                    assert_conserves(&out, &format!("{} (N={n}, {overlap:?})", p.name));
+                    // The executed Ethernet byte counter is exactly the
+                    // lowering's declared footprint.
+                    assert_eq!(
+                        out.eth_bytes, p.footprint.eth_bytes,
+                        "{} (N={n}) eth bytes",
+                        p.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn single_die_solver_ledger_sums_to_wall_time() {
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    for variant in [PcgVariant::FusedBf16, PcgVariant::SplitFp32] {
+        let p = Problem::new(2, 2, 2, variant.df());
+        let grid = p.make_grid().unwrap();
+        let b = solver::dist_random(&p, 3);
+        let mut opts = PcgOptions::new(variant);
+        opts.max_iters = 4;
+        opts.tol_abs = 0.0;
+        let mut prof = Profiler::disabled();
+        let op = Operator::Stencil(stencil_cfg(variant.df(), 2));
+        let res = solver::solve_operator(&grid, &b, &op, &e, &cost, &opts, &mut prof).unwrap();
+        let eps = 1e-6 * res.total_ns.max(1.0);
+        assert!(
+            (res.ledger.total.total() - res.total_ns).abs() <= eps,
+            "{variant:?}: ledger {} vs wall {}",
+            res.ledger.total.total(),
+            res.total_ns
+        );
+        assert_eq!(res.ledger.iterations, res.iters as u64);
+        assert!(!res.ledger.per_component.is_empty());
+        assert!(!res.ledger.verdict().is_empty());
+    }
+}
+
+#[test]
+fn mesh_solver_ledger_sums_to_wall_time_and_attributes_eth_bytes() {
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    for &n in &[1usize, 2, 4] {
+        let mesh = line_mesh(n, 1, 2);
+        let b = solver::mesh_dist_random(&mesh, 2, DataFormat::Bf16, 5);
+        for overlap in [OverlapMode::Serial, OverlapMode::Pipelined] {
+            let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
+            opts.max_iters = 3;
+            opts.tol_abs = 0.0;
+            let mut prof = Profiler::disabled();
+            let res = solver::solve_pcg_mesh(
+                &mesh,
+                &b,
+                &Operator::Stencil(stencil_cfg(DataFormat::Bf16, 2)),
+                &e,
+                &cost,
+                &MeshOptions::new(opts).with_overlap(overlap),
+                &mut prof,
+            )
+            .unwrap();
+            let eps = 1e-6 * res.total_ns.max(1.0);
+            assert!(
+                (res.ledger.total.total() - res.total_ns).abs() <= eps,
+                "N={n} {overlap:?}: ledger {} vs wall {}",
+                res.ledger.total.total(),
+                res.total_ns
+            );
+            // Per-component Ethernet byte attribution sums to the solve
+            // total (both sides count bytes per dispatch).
+            let attributed = res.telemetry.metrics.sum_over_labels("component_eth_bytes");
+            assert!(
+                (attributed - res.eth_bytes_total as f64).abs() < 0.5,
+                "N={n} {overlap:?}: telemetry {attributed} vs {} eth bytes",
+                res.eth_bytes_total
+            );
+            // Solve-window link utilization: one entry per active link,
+            // each a fraction of the whole solve.
+            if n >= 2 {
+                assert!(!res.eth_link_util_solve.is_empty());
+            }
+            for &(a, b2, u) in &res.eth_link_util_solve {
+                assert!(
+                    (0.0..=1.0 + 1e-9).contains(&u),
+                    "link {a}->{b2} utilization {u} out of range"
+                );
+            }
+            assert!(res.bottleneck_verdict().contains(&format!("N={n}")));
+        }
+    }
+}
+
+#[test]
+fn telemetry_toggle_never_changes_solver_results() {
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    // Single die.
+    let p = Problem::new(2, 2, 2, DataFormat::Fp32);
+    let grid = p.make_grid().unwrap();
+    let b = solver::dist_random(&p, 9);
+    let op = Operator::Stencil(stencil_cfg(DataFormat::Fp32, 2));
+    let solve_single = |telemetry: bool| {
+        let mut opts = PcgOptions::new(PcgVariant::SplitFp32);
+        opts.max_iters = 5;
+        opts.tol_abs = 0.0;
+        opts.telemetry = telemetry;
+        let mut prof = Profiler::disabled();
+        solver::solve_operator(&grid, &b, &op, &e, &cost, &opts, &mut prof).unwrap()
+    };
+    let on = solve_single(true);
+    let off = solve_single(false);
+    assert_eq!(on.x, off.x);
+    assert_eq!(on.residual_history, off.residual_history);
+    assert_eq!(on.total_ns, off.total_ns);
+    assert_eq!(on.per_iter_ns, off.per_iter_ns);
+    // Off really is off.
+    assert!(off.telemetry.events.is_empty());
+    assert_eq!(off.ledger.total.total(), 0.0);
+    assert!(!on.telemetry.events.is_empty());
+
+    // Mesh, stencil and sparse, N ∈ {1, 2, 4}.
+    for &n in &[1usize, 2, 4] {
+        let mesh = line_mesh(n, 1, 2);
+        let bm = solver::mesh_dist_random(&mesh, 2, DataFormat::Fp32, 13);
+        let sparse = sparse_op_for(&mesh, 2);
+        for op in [
+            Operator::Stencil(stencil_cfg(DataFormat::Fp32, 2)),
+            Operator::Sparse(&sparse),
+        ] {
+            let solve_mesh = |telemetry: bool| {
+                let mut opts = PcgOptions::new(PcgVariant::SplitFp32);
+                opts.max_iters = 4;
+                opts.tol_abs = 0.0;
+                opts.telemetry = telemetry;
+                let mut prof = Profiler::disabled();
+                solver::solve_pcg_mesh(
+                    &mesh,
+                    &bm,
+                    &op,
+                    &e,
+                    &cost,
+                    &MeshOptions::new(opts),
+                    &mut prof,
+                )
+                .unwrap()
+            };
+            let on = solve_mesh(true);
+            let off = solve_mesh(false);
+            assert_eq!(on.x, off.x, "N={n}");
+            assert_eq!(on.residual_history, off.residual_history, "N={n}");
+            assert_eq!(on.total_ns, off.total_ns, "N={n}");
+            assert_eq!(on.eth_bytes_total, off.eth_bytes_total, "N={n}");
+            assert_eq!(on.eth_ns_per_iter, off.eth_ns_per_iter, "N={n}");
+            assert_eq!(on.eth_peak_link_util, off.eth_peak_link_util, "N={n}");
+        }
+    }
+}
+
+#[test]
+fn disabled_profiler_stays_empty_through_a_mesh_solve() {
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    let mesh = line_mesh(2, 1, 2);
+    let b = solver::mesh_dist_random(&mesh, 2, DataFormat::Bf16, 1);
+    let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
+    opts.max_iters = 3;
+    opts.tol_abs = 0.0;
+    let mut prof = Profiler::disabled();
+    solver::solve_pcg_mesh(
+        &mesh,
+        &b,
+        &Operator::Stencil(stencil_cfg(DataFormat::Bf16, 2)),
+        &e,
+        &cost,
+        &MeshOptions::new(opts),
+        &mut prof,
+    )
+    .unwrap();
+    assert!(prof.zones().is_empty(), "disabled profiler recorded zones");
+    // Default and new() agree: both record (the old Default was disabled).
+    let mut d = Profiler::default();
+    d.record("z", "scope", 0.0, 1.0);
+    assert_eq!(d.zones().len(), 1);
+    let mut n = Profiler::new();
+    n.record("z", "scope", 0.0, 1.0);
+    assert_eq!(n.zones().len(), 1);
+}
+
+#[test]
+fn committed_pcg_snapshot_is_wellformed_and_self_diffs_clean() {
+    // Integration tests run with the package root as cwd, where the full
+    // strong-scaling snapshot is committed.
+    let path = std::path::Path::new("BENCH_pcg.json");
+    if !path.exists() {
+        return; // snapshot not present in this checkout
+    }
+    let snap = BenchSnapshot::read(path).unwrap();
+    assert_eq!(snap.name, "pcg");
+    assert!(!snap.metrics.is_empty());
+    let d = wormsim::telemetry::diff(&snap, &snap, 0.05);
+    assert!(d.regressions.is_empty());
+    assert!(d.missing.is_empty() && d.added.is_empty());
+    // The CI smoke sweep must be comparable against it: every smoke metric
+    // id exists in the committed snapshot.
+    let smoke = wormsim::experiments::benchsuite::pcg_snapshot(true).unwrap();
+    for m in &smoke.metrics {
+        assert!(
+            snap.find(&m.id()).is_some(),
+            "{} missing from committed BENCH_pcg.json",
+            m.id()
+        );
+    }
+}
