@@ -8,16 +8,20 @@
 //!
 //!   overlap, n_dies, cores, tiles_per_core, iter_ns, compute_ns,
 //!   noc_ns, eth_ns, dispatch_ns, eth_bytes_per_iter,
-//!   launches_per_iter, peak_link_util
+//!   launches_per_iter, peak_link_util, crit_eth_frac,
+//!   crit_dispatch_frac
 //!
 //! `iter_ns` is the simulated critical path per iteration; the four
 //! `*_ns` phase columns are per-iteration transport splits (overlapping
 //! phases may sum past `iter_ns`); `eth_bytes_per_iter` counts seam halos
 //! plus the 3 scalar all-reduces of Algorithm 1; `peak_link_util` is the
 //! busiest physical Ethernet link's busy fraction of its phase window
-//! under the contended-link model. The summary reports each mode's
-//! strong-scaling knee and the shift the pipelined interior/boundary
-//! schedule buys.
+//! under the contended-link model; the two `crit_*_frac` columns come
+//! from the solve's causal span graph — the share of the longest
+//! dependency chain spent on Ethernet links / host dispatch, which is
+//! what actually diagnoses the knee (a phase can be large yet hidden).
+//! The summary reports each mode's strong-scaling knee and the shift the
+//! pipelined interior/boundary schedule buys.
 
 use wormsim::arch::DataFormat;
 use wormsim::device::{DeviceMesh, EthLink, MeshTopology};
@@ -166,7 +170,7 @@ fn mesh_scaling_sweep() {
         rows * cols * total_tiles * 1024
     );
     println!(
-        "mesh_scaling,overlap,n_dies,cores,tiles_per_core,iter_ns,compute_ns,noc_ns,eth_ns,dispatch_ns,eth_bytes_per_iter,launches_per_iter,peak_link_util"
+        "mesh_scaling,overlap,n_dies,cores,tiles_per_core,iter_ns,compute_ns,noc_ns,eth_ns,dispatch_ns,eth_bytes_per_iter,launches_per_iter,peak_link_util,crit_eth_frac,crit_dispatch_frac"
     );
     let mut knees: Vec<(OverlapMode, usize, f64)> = Vec::new();
     let mut per_mode: Vec<Vec<(usize, f64)>> = Vec::new();
@@ -198,8 +202,11 @@ fn mesh_scaling_sweep() {
                 &mut prof,
             )
             .unwrap();
+            // Critical-path attribution from the causal span graph: which
+            // resource the longest dependency chain actually runs on.
+            let (crit_eth, crit_dispatch) = res.crit_fracs();
             println!(
-                "mesh_scaling,{},{n},{},{tiles},{:.1},{:.1},{:.1},{:.1},{:.1},{:.1},{:.2},{:.3}",
+                "mesh_scaling,{},{n},{},{tiles},{:.1},{:.1},{:.1},{:.1},{:.1},{:.1},{:.2},{:.3},{:.3},{:.3}",
                 overlap.label(),
                 mesh.n_cores(),
                 res.per_iter_ns,
@@ -210,6 +217,8 @@ fn mesh_scaling_sweep() {
                 res.eth_bytes_total as f64 / res.iters.max(1) as f64,
                 res.launches_per_iter(),
                 res.eth_peak_link_util,
+                crit_eth,
+                crit_dispatch,
             );
             times.push((n, res.per_iter_ns));
         }

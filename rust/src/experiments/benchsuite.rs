@@ -104,6 +104,18 @@ pub fn pcg_snapshot(smoke: bool) -> crate::Result<BenchSnapshot> {
                 "fraction",
                 Better::Info,
             );
+            // Critical-path attribution from the causal span graph: the
+            // share of the solve's longest dependency chain spent on
+            // Ethernet links / host dispatch (the knee diagnosis).
+            let (crit_eth, crit_dispatch) = res.crit_fracs();
+            s.push("crit_eth_frac", &labels, crit_eth, "fraction", Better::Info);
+            s.push(
+                "crit_dispatch_frac",
+                &labels,
+                crit_dispatch,
+                "fraction",
+                Better::Info,
+            );
         }
     }
     Ok(s)

@@ -30,7 +30,7 @@ use wormsim::util::stats::fmt_ns;
 const VALUE_KEYS: &[&str] = &[
     "engine", "artifacts", "config", "iters", "seed", "grid", "tiles", "variant", "tol",
     "pattern", "method", "out", "trace", "dies", "topology", "overlap", "suite", "threshold",
-    "telemetry",
+    "telemetry", "what-if",
 ];
 const FLAGS: &[&str] = &["help", "quiet", "emit-json", "smoke", "advisory"];
 
@@ -98,6 +98,7 @@ fn dispatch(cmd: &str, args: &cli::Args) -> Result<(), String> {
         }
         "bench" => cmd_bench(args),
         "bench-diff" => cmd_bench_diff(args),
+        "critpath" => cmd_critpath(args),
         _ => Err(format!("unknown command '{cmd}' (try --help)")),
     }
 }
@@ -194,9 +195,10 @@ fn cmd_solve(args: &cli::Args) -> Result<(), String> {
     // Tracy-style timeline export (§3.4): --trace out.json, viewable in
     // chrome://tracing or Perfetto — zones plus telemetry counter tracks.
     if let Some(trace_path) = args.get("trace") {
-        wormsim::profiler::write_chrome_trace_with(
+        wormsim::profiler::write_chrome_trace_full(
             &prof,
             &res.telemetry.counter_tracks(),
+            &res.spans.flow_events(),
             std::path::Path::new(trace_path),
         )
         .map_err(|e| format!("cannot write trace {trace_path}: {e}"))?;
@@ -301,9 +303,95 @@ fn cmd_solve_mesh(
         println!("wrote solver telemetry to {tel_path}");
     }
     if let Some(trace_path) = args.get("trace") {
-        wormsim::profiler::write_chrome_trace_with(
+        wormsim::profiler::write_chrome_trace_full(
             &prof,
             &res.telemetry.counter_tracks(),
+            &res.spans.flow_events(),
+            std::path::Path::new(trace_path),
+        )
+        .map_err(|e| format!("cannot write trace {trace_path}: {e}"))?;
+        println!("wrote simulated-time trace to {trace_path}");
+    }
+    Ok(())
+}
+
+/// `wormsim critpath [--dies N] [--what-if SPEC] [--trace out.json]` —
+/// run a (mesh) PCG solve, extract the critical path of its causal span
+/// graph, and print the per-resource report. `--what-if` re-walks the
+/// same graph under counterfactual scalings (`eth_bw=2x,dispatch=0`)
+/// and prints the predicted solve time — no re-simulation. `--trace`
+/// writes the Perfetto trace with span-dependency flow arrows.
+fn cmd_critpath(args: &cli::Args) -> Result<(), String> {
+    use wormsim::device::{DeviceMesh, EthLink, MeshTopology};
+    use wormsim::engine::StencilCoeffs;
+    use wormsim::kernels::stencil::{StencilConfig, StencilVariant};
+    use wormsim::solver::Operator;
+    use wormsim::telemetry::{retime, WhatIf};
+
+    let ctx = build_context(args)?;
+    let variant: PcgVariant = args.get_parsed("variant", "bf16")?;
+    let (rows, cols) = args.get_grid("grid", (4, 4))?;
+    let tiles = args.get_usize("tiles", 16)?;
+    let dies = args.get_usize("dies", 4)?;
+    let topology: MeshTopology = args.get_parsed("topology", "line")?;
+    let overlap: wormsim::solver::OverlapMode = args.get_parsed("overlap", "serial")?;
+    let mesh = DeviceMesh::new(dies, rows, cols, topology, EthLink::for_dies(dies))
+        .map_err(|e| e.to_string())?;
+
+    let mut opts = PcgOptions::new(variant);
+    opts.max_iters = args.get_usize("iters", 10)?;
+    opts.tol_abs = args.get_f64("tol", 0.0)?;
+    opts.dot_method = match args.get_or("method", "1") {
+        "1" => DotMethod::ReduceThenSend,
+        "2" => DotMethod::SendTiles,
+        m => return Err(format!("--method expects 1 or 2, got '{m}'")),
+    };
+    let df = variant.df();
+    let stencil_cfg = StencilConfig {
+        df,
+        unit: variant.unit(),
+        tiles_per_core: tiles,
+        variant: StencilVariant::FULL,
+        coeffs: StencilCoeffs::LAPLACIAN,
+    };
+    println!(
+        "critpath: PCG {} on {dies} x {rows}x{cols}-core dies ({} mesh), {tiles} tiles/core, {} overlap",
+        variant.label(),
+        topology.label(),
+        overlap.label()
+    );
+    let b = solver::mesh_dist_random(&mesh, tiles, df, ctx.seed);
+    let mut prof = Profiler::new();
+    let res = solver::solve_pcg_mesh(
+        &mesh,
+        &b,
+        &Operator::Stencil(stencil_cfg),
+        ctx.engine.as_ref(),
+        &ctx.cost,
+        &wormsim::solver::MeshOptions::new(opts).with_overlap(overlap),
+        &mut prof,
+    )
+    .map_err(|e| e.to_string())?;
+    let report = res.critpath()?;
+    println!();
+    println!("{}", report.render());
+    if let Some(spec) = args.get("what-if") {
+        let w = WhatIf::parse(spec)?;
+        let predicted = retime(&res.spans, &w)?;
+        println!();
+        println!(
+            "what-if [{}]: predicted solve time {} (recorded {}, {:+.1}%)",
+            w.describe(),
+            fmt_ns(predicted),
+            fmt_ns(res.total_ns),
+            100.0 * (predicted / res.total_ns - 1.0)
+        );
+    }
+    if let Some(trace_path) = args.get("trace") {
+        wormsim::profiler::write_chrome_trace_full(
+            &prof,
+            &res.telemetry.counter_tracks(),
+            &res.spans.flow_events(),
             std::path::Path::new(trace_path),
         )
         .map_err(|e| format!("cannot write trace {trace_path}: {e}"))?;
@@ -340,8 +428,23 @@ fn cmd_bench(args: &cli::Args) -> Result<(), String> {
 }
 
 /// `wormsim bench-diff BASE.json NEW.json [--threshold F] [--advisory]` —
-/// compare two snapshots; exits non-zero on regressions unless --advisory.
+/// compare two snapshots. Exit-code contract (pinned by a test below):
+/// **strict** (default) exits non-zero on regressions *or* on any
+/// read/parse failure; **--advisory** always exits 0 — regressions and
+/// errors are still printed, but never fail the invocation (the CI
+/// early-warning lane must not block merges).
 fn cmd_bench_diff(args: &cli::Args) -> Result<(), String> {
+    match bench_diff_strict(args) {
+        Ok(()) => Ok(()),
+        Err(e) if args.has_flag("advisory") => {
+            println!("advisory: {e} — not failing");
+            Ok(())
+        }
+        Err(e) => Err(e),
+    }
+}
+
+fn bench_diff_strict(args: &cli::Args) -> Result<(), String> {
     use wormsim::telemetry::BenchSnapshot;
     let [base_path, new_path] = match args.positional.as_slice() {
         [a, b] => [a, b],
@@ -379,11 +482,51 @@ fn cmd_bench_diff(args: &cli::Args) -> Result<(), String> {
             d.improvements.len()
         );
         Ok(())
-    } else if args.has_flag("advisory") {
-        println!("{} regression(s) — advisory mode, not failing", d.regressions.len());
-        Ok(())
     } else {
         Err(format!("{} regression(s) beyond threshold", d.regressions.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use wormsim::telemetry::{BenchSnapshot, Better};
+
+    fn parse_args(rest: &[&str]) -> cli::Args {
+        let rest: Vec<String> = rest.iter().map(|s| s.to_string()).collect();
+        cli::parse(&rest, VALUE_KEYS, FLAGS).unwrap()
+    }
+
+    /// The bench-diff exit-code contract: strict fails on regressions and
+    /// on unreadable snapshots; --advisory always exits 0 (still printing
+    /// what it found).
+    #[test]
+    fn bench_diff_exit_contract_advisory_vs_strict() {
+        let dir = std::env::temp_dir().join("wormsim_bench_diff_contract");
+        let base_p = dir.join("base.json");
+        let new_p = dir.join("new.json");
+        let mut base = BenchSnapshot::new("pcg");
+        base.push("iter_ns", &[], 100.0, "ns", Better::Lower);
+        base.write(&base_p).unwrap();
+        let mut worse = BenchSnapshot::new("pcg");
+        worse.push("iter_ns", &[], 150.0, "ns", Better::Lower);
+        worse.write(&new_p).unwrap();
+        let base_s = base_p.to_str().unwrap();
+        let new_s = new_p.to_str().unwrap();
+
+        // Strict: a regression beyond threshold fails the invocation.
+        assert!(cmd_bench_diff(&parse_args(&[base_s, new_s])).is_err());
+        // Advisory: the same regression still exits 0.
+        assert!(cmd_bench_diff(&parse_args(&[base_s, new_s, "--advisory"])).is_ok());
+        // Identical snapshots pass either way.
+        assert!(cmd_bench_diff(&parse_args(&[base_s, base_s])).is_ok());
+        assert!(cmd_bench_diff(&parse_args(&[base_s, base_s, "--advisory"])).is_ok());
+        // Unreadable snapshot: strict fails, advisory still exits 0.
+        let missing = dir.join("nope.json");
+        let missing_s = missing.to_str().unwrap();
+        assert!(cmd_bench_diff(&parse_args(&[base_s, missing_s])).is_err());
+        assert!(cmd_bench_diff(&parse_args(&[base_s, missing_s, "--advisory"])).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }
 
@@ -402,7 +545,11 @@ fn print_usage() {
          tables <id|all>         regenerate paper tables: t1 t2 t3\n  \
          bench [suite]           deterministic simulated-figure sweeps (pcg|spmv|figures|all)\n                          \
          --emit-json writes BENCH_<suite>.json (--out DIR, --smoke for CI subset)\n  \
-         bench-diff A.json B.json  compare snapshots (--threshold 0.05, --advisory)\n\n\
+         bench-diff A.json B.json  compare snapshots (--threshold 0.05; --advisory always exits 0)\n  \
+         critpath                critical-path report of a mesh solve's causal span graph\n                          \
+         (--dies N --grid RxC --overlap serial|pipelined --iters N)\n                          \
+         --what-if eth_bw=2x,dispatch=0  re-time the graph, print predicted solve time\n                          \
+         --trace out.json        Perfetto trace with span-dependency flow arrows\n\n\
          COMMON OPTIONS:\n  \
          --engine native|pjrt    value engine (pjrt runs the AOT JAX/Pallas artifacts)\n  \
          --artifacts DIR         artifact directory (default: artifacts)\n  \

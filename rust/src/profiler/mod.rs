@@ -13,7 +13,7 @@ pub mod zones;
 
 pub use report::Breakdown;
 pub use trace::{
-    to_chrome_trace, to_chrome_trace_with, write_chrome_trace, write_chrome_trace_with,
-    CounterTrack,
+    to_chrome_trace, to_chrome_trace_full, to_chrome_trace_with, write_chrome_trace,
+    write_chrome_trace_full, write_chrome_trace_with, CounterTrack, FlowEvent,
 };
 pub use zones::{Profiler, Zone};

@@ -26,6 +26,23 @@ pub struct CounterTrack {
     pub samples: Vec<(SimNs, f64)>,
 }
 
+/// One causal arrow between two scopes, rendered as a Chrome flow-event
+/// pair: a start ("s") event at `(from_scope, from_ts)` and a binding
+/// finish ("f", `"bp":"e"`) event at `(to_scope, to_ts)` sharing `id`.
+/// Derived from span-graph dependency edges
+/// ([`crate::telemetry::SpanGraph::flow_events`]) so cross-die
+/// halo/all-reduce causality is visible in the trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlowEvent {
+    pub name: String,
+    /// Nonzero id shared by the "s"/"f" pair, unique per arrow.
+    pub id: u64,
+    pub from_scope: String,
+    pub from_ts: SimNs,
+    pub to_scope: String,
+    pub to_ts: SimNs,
+}
+
 /// Escape a string for embedding inside JSON double quotes. Handles
 /// quotes, backslashes, newlines, tabs, and other control characters.
 fn escape(s: &str) -> String {
@@ -78,11 +95,27 @@ fn json_num(v: f64) -> String {
 /// the simulated nanoseconds converted to microseconds (the trace
 /// format's unit).
 pub fn to_chrome_trace_with(profiler: &Profiler, counters: &[CounterTrack]) -> String {
+    to_chrome_trace_full(profiler, counters, &[])
+}
+
+/// Serialize zones, counter tracks, and span-graph flow arrows as a
+/// Chrome trace. With no flows the output is identical to
+/// [`to_chrome_trace_with`].
+pub fn to_chrome_trace_full(
+    profiler: &Profiler,
+    counters: &[CounterTrack],
+    flows: &[FlowEvent],
+) -> String {
     // Stable (pid, tid) per scope: tids count up within each process in
-    // scope-name order.
+    // scope-name order. Flow endpoints register scopes too, so arrows to
+    // a scope with no zones still land on a named thread.
     let mut scopes: BTreeMap<&str, (usize, usize)> = BTreeMap::new();
     for z in profiler.zones() {
         scopes.entry(z.scope.as_str()).or_insert((0, 0));
+    }
+    for f in flows {
+        scopes.entry(f.from_scope.as_str()).or_insert((0, 0));
+        scopes.entry(f.to_scope.as_str()).or_insert((0, 0));
     }
     let mut next_tid: BTreeMap<usize, usize> = BTreeMap::new();
     for (scope, slot) in scopes.iter_mut() {
@@ -134,6 +167,25 @@ pub fn to_chrome_trace_with(profiler: &Profiler, counters: &[CounterTrack]) -> S
             z.duration() / 1e3
         ));
     }
+    // Flow arrows: an "s"/"f" pair per span-graph edge.
+    for f in flows {
+        let (fp, ft) = scopes[f.from_scope.as_str()];
+        let (tp, tt) = scopes[f.to_scope.as_str()];
+        events.push(format!(
+            "{{\"name\":\"{}\",\"cat\":\"span-dep\",\"ph\":\"s\",\"id\":{},\
+             \"pid\":{fp},\"tid\":{ft},\"ts\":{:.3}}}",
+            escape(&f.name),
+            f.id,
+            f.from_ts / 1e3
+        ));
+        events.push(format!(
+            "{{\"name\":\"{}\",\"cat\":\"span-dep\",\"ph\":\"f\",\"bp\":\"e\",\"id\":{},\
+             \"pid\":{tp},\"tid\":{tt},\"ts\":{:.3}}}",
+            escape(&f.name),
+            f.id,
+            f.to_ts / 1e3
+        ));
+    }
     // Counter tracks.
     for track in counters {
         for &(t_ns, v) in &track.samples {
@@ -173,6 +225,19 @@ pub fn write_chrome_trace_with(
 /// Write the trace to `path` (creating parents).
 pub fn write_chrome_trace(profiler: &Profiler, path: &Path) -> io::Result<()> {
     write_chrome_trace_with(profiler, &[], path)
+}
+
+/// Write the trace (zones + counters + flow arrows) to `path`.
+pub fn write_chrome_trace_full(
+    profiler: &Profiler,
+    counters: &[CounterTrack],
+    flows: &[FlowEvent],
+    path: &Path,
+) -> io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, to_chrome_trace_full(profiler, counters, flows))
 }
 
 #[cfg(test)]
@@ -267,6 +332,48 @@ mod tests {
         // No counters → no counter process metadata.
         let s2 = to_chrome_trace(&p);
         assert!(!s2.contains("counters"));
+        assert_balanced(&s);
+    }
+
+    #[test]
+    fn flow_events_emit_s_f_pairs_on_scope_threads() {
+        let mut p = Profiler::new();
+        p.record("spmv", "device", 0.0, 1000.0);
+        p.record("halo:eth0-1", "ethernet", 200.0, 600.0);
+        let flows = vec![FlowEvent {
+            name: "compute->eth:halo".to_string(),
+            id: 1,
+            from_scope: "device".to_string(),
+            from_ts: 200.0,
+            to_scope: "ethernet".to_string(),
+            to_ts: 200.0,
+        }];
+        let s = to_chrome_trace_full(&p, &[], &flows);
+        assert_eq!(s.matches("\"ph\":\"s\"").count(), 1);
+        assert_eq!(s.matches("\"ph\":\"f\"").count(), 1);
+        assert!(s.contains("\"ph\":\"s\",\"id\":1,\"pid\":1,\"tid\":1,\"ts\":0.200"));
+        assert!(s.contains("\"ph\":\"f\",\"bp\":\"e\",\"id\":1,\"pid\":2,\"tid\":1,\"ts\":0.200"));
+        assert_balanced(&s);
+        // No flows → byte-identical to the plain writer.
+        assert_eq!(to_chrome_trace_full(&p, &[], &[]), to_chrome_trace_with(&p, &[]));
+    }
+
+    #[test]
+    fn flow_endpoint_scopes_get_threads_without_zones() {
+        let mut p = Profiler::new();
+        p.record("spmv", "device", 0.0, 1000.0);
+        let flows = vec![FlowEvent {
+            name: "launch->work".to_string(),
+            id: 7,
+            from_scope: "host".to_string(),
+            from_ts: 0.0,
+            to_scope: "device".to_string(),
+            to_ts: 0.0,
+        }];
+        let s = to_chrome_trace_full(&p, &[], &flows);
+        // The host process/thread exists purely from the flow endpoint.
+        assert!(s.contains("\"args\":{\"name\":\"host\"}"));
+        assert!(s.contains("\"ph\":\"s\",\"id\":7,\"pid\":3,\"tid\":1"));
         assert_balanced(&s);
     }
 

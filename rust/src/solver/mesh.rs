@@ -60,11 +60,12 @@ use crate::kernels::reduction::{lower_dot_as, DotConfig, DotMethod};
 use crate::profiler::{Breakdown, Profiler};
 use crate::solver::pcg::{Operator, PcgOptions, Precond, PCG_ITERATION};
 use crate::solver::problem::DistVector;
-use crate::telemetry::{SolveLedger, SolverEvent, Telemetry};
+use crate::telemetry::{SolveLedger, SolverEvent, SpanGraph, Telemetry};
 use crate::timing::cost::{CostModel, PipelineMode, TileOpKind};
 use crate::timing::SimNs;
 use crate::ttm::{
     EtherPhase, HostQueue, IterSchedule, LaunchStats, OverlapMode, Program, ProgramOutcome,
+    SolveSpans,
 };
 
 /// Options of a mesh solve: the per-iteration PCG options plus the §8
@@ -150,6 +151,11 @@ pub struct MeshPcgResult {
     /// Metrics + per-iteration solver events (empty when
     /// [`PcgOptions::telemetry`] is off).
     pub telemetry: Telemetry,
+    /// Causal span graph of the solve: the host dispatch chain with every
+    /// component's full program graph (per-core chains, reduce tree,
+    /// Ethernet phases) grafted into its dispatch window. Its critical
+    /// path equals `total_ns` exactly. Empty when telemetry is off.
+    pub spans: SpanGraph,
 }
 
 impl MeshPcgResult {
@@ -163,6 +169,25 @@ impl MeshPcgResult {
     /// `"ethernet-bound (54% of solve, dominated by dot, link 0-1) at N=4"`.
     pub fn bottleneck_verdict(&self) -> String {
         format!("{} at N={}", self.ledger.verdict(), self.n_dies)
+    }
+
+    /// Critical-path analysis of the recorded span graph (per-resource
+    /// critical fractions and slack). Errors when telemetry was off.
+    pub fn critpath(&self) -> Result<crate::telemetry::CritPathReport, String> {
+        crate::telemetry::analyze(&self.spans)
+    }
+
+    /// `(crit_eth_frac, crit_dispatch_frac)` — the share of the solve's
+    /// critical path spent on Ethernet links and host dispatch, the knee
+    /// metrics of the mesh-scaling sweep. `(0, 0)` when telemetry is off.
+    pub fn crit_fracs(&self) -> (f64, f64) {
+        match self.critpath() {
+            Ok(rep) => (
+                rep.frac(crate::telemetry::Resource::Ethernet),
+                rep.frac(crate::telemetry::Resource::Dispatch),
+            ),
+            Err(_) => (0.0, 0.0),
+        }
     }
 }
 
@@ -443,9 +468,15 @@ pub fn solve_pcg_mesh(
     let mut components: BTreeMap<String, MeshComponent> = BTreeMap::new();
     {
         let mut scratch = HostQueue::new(cost.calib.clone());
+        // Pre-execute at enqueue time -launch_ns so the device start is
+        // exactly 0.0 (x + (-x) == +0.0 in IEEE): the recorded span graphs
+        // then graft into solve-time dispatch windows by adding the window
+        // start alone — a constant offset that keeps the solve-level sink
+        // bit-exactly on the solver's clock.
+        let scratch_t0 = -cost.calib.kernel_launch_ns;
         let mut slowest_spmv: Option<(usize, ProgramOutcome)> = None;
         for (i, p) in lowering.spmv_per_die.iter().enumerate() {
-            let outcome = scratch.run(p, cost, 0.0, &mut Profiler::disabled())?;
+            let outcome = scratch.run(p, cost, scratch_t0, &mut Profiler::disabled())?;
             if slowest_spmv
                 .as_ref()
                 .map_or(true, |(_, s)| outcome.device_ns() > s.device_ns())
@@ -459,14 +490,14 @@ pub fn solve_pcg_mesh(
         // the same mesh-global phase — re-emitting it per die would
         // duplicate the link zones).
         if profiler.enabled {
-            scratch.run(&lowering.spmv_per_die[slow_die], cost, 0.0, profiler)?;
+            scratch.run(&lowering.spmv_per_die[slow_die], cost, scratch_t0, profiler)?;
         }
         components.insert("spmv".to_string(), MeshComponent { outcome });
         for p in &lowering.components {
             if p.name == "spmv" {
                 continue; // already covered, per die
             }
-            let outcome = scratch.run(p, cost, 0.0, profiler)?;
+            let outcome = scratch.run(p, cost, scratch_t0, profiler)?;
             components.insert(p.name.clone(), MeshComponent { outcome });
         }
     }
@@ -532,6 +563,7 @@ pub fn solve_pcg_mesh(
         .fold(0.0, f64::max);
     let mut readbacks: u64 = 0;
     let mut now: SimNs = 0.0;
+    let mut spans = SolveSpans::new(opts.pcg.telemetry);
 
     let mut x: DistVector = b.iter().map(|blk| CoreBlock::zeros(blk.df, blk.nz())).collect();
     let mut r: DistVector = b.to_vec();
@@ -539,11 +571,18 @@ pub fn solve_pcg_mesh(
     let mut p = z.clone();
     let mut delta = mesh_dot(&r, &z)? as f64;
 
-    now = sched.begin(&mut queue, now)?;
+    {
+        let pre = now;
+        now = sched.begin(&mut queue, now)?;
+        if now > pre {
+            spans.host("enqueue(pcg_mesh_fused)", pre, now);
+        }
+    }
     macro_rules! component {
         ($name:expr) => {{
             let c = &components[$name];
             let ns = c.device_ns();
+            let pre: SimNs = now;
             now = sched.component(&mut queue, profiler, $name, ns, now)?;
             breakdown.add($name, ns);
             let o = &c.outcome;
@@ -559,6 +598,18 @@ pub fn solve_pcg_mesh(
                 solve_eth.replay(&o.eth_transfers, (now - ns) - o.start);
             }
             if opts.pcg.telemetry {
+                // Mirror the queue's clock advance with the same float
+                // expression, then graft the component program's own span
+                // graph (recorded at device start 0) into the window — the
+                // graft's sink lands bit-exactly on `now`.
+                let start_m = if fused {
+                    pre + cost.calib.inter_kernel_gap_ns
+                } else {
+                    pre + cost.calib.kernel_launch_ns
+                };
+                debug_assert_eq!(start_m + ns, now);
+                spans.host(if fused { "gap" } else { "enqueue" }, pre, start_m);
+                spans.window_program($name, &o.spans);
                 ledger.charge($name, &o.ledger, ns);
                 telemetry.count("dispatches", &[("component", $name)], 1);
                 telemetry.add("component_device_ns", &[("component", $name)], ns);
@@ -605,7 +656,13 @@ pub fn solve_pcg_mesh(
         component!("norm");
         let rnorm = rr.max(0.0).sqrt();
         history.push(rnorm);
-        now = sched.residual_readback(&mut queue, now);
+        {
+            let pre = now;
+            now = sched.residual_readback(&mut queue, now);
+            if now > pre {
+                spans.host("readback", pre, now);
+            }
+        }
         if !sched.is_fused() {
             readbacks += 1;
         }
@@ -678,6 +735,7 @@ pub fn solve_pcg_mesh(
         eth_link_util_solve: solve_eth.utilization(now),
         ledger,
         telemetry,
+        spans: spans.finish(now),
     })
 }
 

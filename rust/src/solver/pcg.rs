@@ -33,11 +33,11 @@ use crate::noc::RoutePattern;
 use crate::profiler::{Breakdown, Profiler};
 use crate::solver::jacobi::JacobiPreconditioner;
 use crate::solver::problem::{DistVector, Problem};
-use crate::telemetry::{ResourceLedger, SolveLedger, SolverEvent, Telemetry};
+use crate::telemetry::{ResourceLedger, SolveLedger, SolverEvent, SpanGraph, Telemetry};
 use crate::tile::EltwiseOp;
 use crate::timing::cost::{CostModel, PipelineMode, TileOpKind};
 use crate::timing::SimNs;
-use crate::ttm::{HostQueue, IterSchedule, LaunchStats, Program};
+use crate::ttm::{HostQueue, IterSchedule, LaunchStats, Program, SolveSpans};
 
 /// The paper's two PCG implementations (§7.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -303,6 +303,10 @@ pub struct PcgResult {
     /// Metrics + per-iteration solver events (empty when
     /// [`PcgOptions::telemetry`] is off).
     pub telemetry: Telemetry,
+    /// Causal span graph of the solve (host dispatch chain + per-window
+    /// resource chains); its critical path equals `total_ns` exactly.
+    /// Empty when [`PcgOptions::telemetry`] is off.
+    pub spans: SpanGraph,
 }
 
 impl PcgResult {
@@ -311,6 +315,12 @@ impl PcgResult {
     /// solve).
     pub fn launches_per_iter(&self) -> f64 {
         self.launch.launches as f64 / self.iters.max(1) as f64
+    }
+
+    /// Critical-path analysis of the recorded span graph (per-resource
+    /// critical fractions and slack). Errors when telemetry was off.
+    pub fn critpath(&self) -> Result<crate::telemetry::CritPathReport, String> {
+        crate::telemetry::analyze(&self.spans)
     }
 }
 
@@ -391,6 +401,7 @@ pub fn solve_operator(
     let mut iter_component_ns: Vec<(String, SimNs)> = Vec::new();
     let mut breakdown = Breakdown::new();
     let mut now: SimNs = 0.0;
+    let mut spans = SolveSpans::new(opts.telemetry);
 
     // Component timing helpers -------------------------------------------
     let dot_cfg = DotConfig {
@@ -451,9 +462,20 @@ pub fn solve_operator(
     macro_rules! component {
         ($name:expr, $ns:expr) => {{
             let ns: SimNs = $ns;
+            let pre: SimNs = now;
             now = sched.component(&mut queue, profiler, $name, ns, now)?;
             breakdown.add($name, ns);
             if opts.telemetry {
+                // Mirror the queue's clock advance with the same float
+                // expression, so the span chain lands bit-exactly on `now`.
+                let start_m = if fused {
+                    pre + calib.inter_kernel_gap_ns
+                } else {
+                    pre + calib.kernel_launch_ns
+                };
+                debug_assert_eq!(start_m + ns, now);
+                spans.host(if fused { "gap" } else { "enqueue" }, pre, start_m);
+                spans.window_ledger($name, &component_ledgers[$name], start_m, now);
                 ledger.charge($name, &component_ledgers[$name], ns);
                 telemetry.count("dispatches", &[("component", $name)], 1);
                 telemetry.add("component_device_ns", &[("component", $name)], ns);
@@ -470,7 +492,13 @@ pub fn solve_operator(
     let mut delta = run_dot(grid.rows, grid.cols, &dot_cfg, &r, &z, engine, cost)?.value as f64;
 
     // Fused schedule: one launch for the whole solve.
-    now = sched.begin(&mut queue, now)?;
+    {
+        let pre = now;
+        now = sched.begin(&mut queue, now)?;
+        if now > pre {
+            spans.host("enqueue(pcg_fused)", pre, now);
+        }
+    }
 
     let mut history = Vec::new();
     let mut iters = 0;
@@ -511,7 +539,13 @@ pub fn solve_operator(
         component!("norm", rr.total_ns);
         let rnorm = (rr.value.max(0.0) as f64).sqrt();
         history.push(rnorm);
-        now = sched.residual_readback(&mut queue, now);
+        {
+            let pre = now;
+            now = sched.residual_readback(&mut queue, now);
+            if now > pre {
+                spans.host("readback", pre, now);
+            }
+        }
         if !sched.is_fused() {
             readbacks += 1;
         }
@@ -575,6 +609,7 @@ pub fn solve_operator(
         launch: queue.stats.clone(),
         ledger,
         telemetry,
+        spans: spans.finish(now),
     })
 }
 

@@ -1,0 +1,453 @@
+//! Critical-path extraction, slack analysis, and the what-if re-timer.
+//!
+//! Operates on the [`SpanGraph`] recorded by the executor and solvers.
+//! Because the graph upholds `span.start == max(pred.end)` bit-exactly
+//! (see `telemetry::spans`), the longest dependency chain can be walked
+//! *backwards* from the sink by exact float equality — at every span
+//! some predecessor ends exactly when the span starts — and its length
+//! telescopes to `sink.end - t0`, i.e. the simulated wall time, with no
+//! accumulated rounding. That equality is the module's conservation
+//! property, enforced by `tests/prop_critpath.rs` the same way ledger
+//! conservation is.
+//!
+//! The what-if re-timer answers "what if Ethernet bandwidth doubled /
+//! dispatch were free / the NoC were 1.5× faster" without re-simulating:
+//! it re-walks the recorded graph in topological order, scaling each
+//! span's duration by its resource's factor. Durations are recorded
+//! facts, the dependency structure is recorded causality, so the result
+//! is an Amdahl-style ceiling — real overlap-restructuring gains (e.g.
+//! a smarter schedule) are out of scope by construction.
+
+use std::collections::BTreeMap;
+
+use crate::telemetry::spans::{SpanGraph, ORIGIN};
+use crate::telemetry::Resource;
+use crate::timing::SimNs;
+use crate::util::stats::fmt_ns;
+
+/// The extracted longest dependency chain.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CritPath {
+    /// Span indices from origin-side to sink, contiguous in time.
+    pub ids: Vec<usize>,
+    /// `sink.end - t0` — equals simulated wall time exactly.
+    pub length_ns: SimNs,
+}
+
+/// Walk the critical path back from the graph's sink. At each step the
+/// gating predecessor is the one whose end equals the span's start
+/// (exact float equality, guaranteed by construction); ties prefer
+/// non-idle spans, then longer ones, for the most informative path.
+/// Errors if the chain is ever discontinuous — that would mean the
+/// graph was not built through [`SpanGraph::span`]'s invariant.
+pub fn critical_path(g: &SpanGraph) -> Result<CritPath, String> {
+    let sink = g.sink().ok_or("span graph has no sink")?;
+    let mut ids = vec![sink];
+    let mut cur = sink;
+    loop {
+        let s = &g.spans[cur];
+        if s.preds.is_empty() {
+            break;
+        }
+        let gating = s
+            .preds
+            .iter()
+            .copied()
+            .filter(|&p| g.spans[p].end == s.start)
+            .max_by(|&a, &b| {
+                let (sa, sb) = (&g.spans[a], &g.spans[b]);
+                (sa.resource != Resource::Idle, sa.duration())
+                    .partial_cmp(&(sb.resource != Resource::Idle, sb.duration()))
+                    .unwrap()
+            });
+        match gating {
+            Some(p) => {
+                ids.push(p);
+                cur = p;
+            }
+            None => {
+                return Err(format!(
+                    "critical path broke at span {cur} '{}': no predecessor ends at {}",
+                    s.name, s.start
+                ))
+            }
+        }
+    }
+    ids.reverse();
+    Ok(CritPath {
+        ids,
+        length_ns: g.spans[sink].end - g.t0,
+    })
+}
+
+/// Per-resource critical-path share and slack.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResourceCrit {
+    pub resource: Resource,
+    /// Time this resource spends on the critical path.
+    pub crit_ns: SimNs,
+    /// `crit_ns / wall` (0 when wall is 0).
+    pub frac: f64,
+    /// Classic CPM slack: the smallest amount any span of this resource
+    /// could slip without delaying the sink. 0 when the resource is on
+    /// the critical path; equal to wall when the resource never appears.
+    pub slack_ns: SimNs,
+}
+
+/// Full critical-path report for one solve or program graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CritPathReport {
+    pub wall_ns: SimNs,
+    pub path: CritPath,
+    /// One row per resource in `Resource::ALL` order.
+    pub per_resource: Vec<ResourceCrit>,
+    /// Critical nanoseconds per solve component, descending.
+    pub per_component: Vec<(String, SimNs)>,
+    /// Critical nanoseconds aggregated by span name, descending (top 10).
+    pub top_spans: Vec<(String, SimNs)>,
+}
+
+impl CritPathReport {
+    /// Critical-path fraction for one resource.
+    pub fn frac(&self, r: Resource) -> f64 {
+        self.per_resource
+            .iter()
+            .find(|row| row.resource == r)
+            .map_or(0.0, |row| row.frac)
+    }
+
+    /// Render the human-readable report printed by `wormsim critpath`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "critical path: {} spans, {} (= wall time)\n",
+            self.path.ids.len(),
+            fmt_ns(self.wall_ns)
+        ));
+        out.push_str("  resource     crit-frac   crit-time     slack\n");
+        for row in &self.per_resource {
+            if row.crit_ns == 0.0 && row.slack_ns >= self.wall_ns {
+                continue; // resource never appears in the graph
+            }
+            out.push_str(&format!(
+                "  {:<12} {:>8.1}%  {:>10}  {:>10}\n",
+                row.resource.label(),
+                row.frac * 100.0,
+                fmt_ns(row.crit_ns),
+                fmt_ns(row.slack_ns)
+            ));
+        }
+        if !self.per_component.is_empty() {
+            out.push_str("  critical time by component:\n");
+            for (name, ns) in &self.per_component {
+                let label = if name.is_empty() { "(program)" } else { name };
+                out.push_str(&format!(
+                    "    {:<14} {:>10}  ({:.1}%)\n",
+                    label,
+                    fmt_ns(*ns),
+                    if self.wall_ns > 0.0 { ns / self.wall_ns * 100.0 } else { 0.0 }
+                ));
+            }
+        }
+        if !self.top_spans.is_empty() {
+            out.push_str("  top critical spans:\n");
+            for (name, ns) in &self.top_spans {
+                out.push_str(&format!("    {:<24} {:>10}\n", name, fmt_ns(*ns)));
+            }
+        }
+        out
+    }
+}
+
+/// Extract the critical path and compute per-resource fractions and CPM
+/// slack (backward pass over the DAG).
+pub fn analyze(g: &SpanGraph) -> Result<CritPathReport, String> {
+    let path = critical_path(g)?;
+    let sink = g.sink().expect("critical_path verified the sink");
+    let wall = g.spans[sink].end - g.t0;
+
+    // Backward pass: latest end each span may have without delaying the
+    // sink. Spans with no successors cannot delay anything.
+    let n = g.spans.len();
+    let mut latest = vec![f64::INFINITY; n];
+    latest[sink] = g.spans[sink].end;
+    for i in (0..n).rev() {
+        if latest[i] == f64::INFINITY {
+            latest[i] = g.spans[sink].end.max(g.spans[i].end);
+        }
+        let latest_start = latest[i] - g.spans[i].duration();
+        for &p in &g.spans[i].preds {
+            latest[p] = latest[p].min(latest_start);
+        }
+    }
+
+    let mut crit_ns: BTreeMap<Resource, SimNs> = BTreeMap::new();
+    let mut by_component: BTreeMap<String, SimNs> = BTreeMap::new();
+    let mut by_name: BTreeMap<String, SimNs> = BTreeMap::new();
+    for &i in &path.ids {
+        let s = &g.spans[i];
+        *crit_ns.entry(s.resource).or_insert(0.0) += s.duration();
+        if s.duration() > 0.0 {
+            *by_component.entry(s.component.clone()).or_insert(0.0) += s.duration();
+            *by_name.entry(s.name.clone()).or_insert(0.0) += s.duration();
+        }
+    }
+    let mut slack: BTreeMap<Resource, SimNs> = BTreeMap::new();
+    for (i, s) in g.spans.iter().enumerate() {
+        let sl = (latest[i] - s.end).max(0.0);
+        slack
+            .entry(s.resource)
+            .and_modify(|v| *v = v.min(sl))
+            .or_insert(sl);
+    }
+
+    let per_resource = Resource::ALL
+        .iter()
+        .map(|&r| {
+            let c = crit_ns.get(&r).copied().unwrap_or(0.0);
+            ResourceCrit {
+                resource: r,
+                crit_ns: c,
+                frac: if wall > 0.0 { c / wall } else { 0.0 },
+                slack_ns: slack.get(&r).copied().unwrap_or(wall),
+            }
+        })
+        .collect();
+    let mut per_component: Vec<(String, SimNs)> = by_component.into_iter().collect();
+    per_component.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut top_spans: Vec<(String, SimNs)> = by_name.into_iter().collect();
+    top_spans.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    top_spans.truncate(10);
+
+    Ok(CritPathReport {
+        wall_ns: wall,
+        path,
+        per_resource,
+        per_component,
+        top_spans,
+    })
+}
+
+/// Counterfactual duration scalings per resource for the re-timer.
+///
+/// Spec grammar (comma-separated): `<key>=<value>` where the key names
+/// a resource (`eth`/`eth_bw`, `noc`/`noc_bw`, `dram`/`dram_bw`,
+/// `compute`, `riscv`, `dispatch`, `idle`) and the value is either a
+/// plain duration multiplier (`dispatch=0`, `compute=0.5`) or a speedup
+/// factor with an `x` suffix meaning *that many times faster*, i.e. the
+/// duration divides (`eth_bw=2x` halves Ethernet durations). Keys
+/// ending in `_bw` always read as speedups.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WhatIf {
+    scales: BTreeMap<Resource, f64>,
+}
+
+impl Default for WhatIf {
+    fn default() -> Self {
+        Self::identity()
+    }
+}
+
+impl WhatIf {
+    /// No scaling: every duration multiplier is 1.0.
+    pub fn identity() -> Self {
+        Self {
+            scales: BTreeMap::new(),
+        }
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.scales.values().all(|&s| s == 1.0)
+    }
+
+    /// Duration multiplier for one resource (1.0 unless scaled).
+    pub fn scale(&self, r: Resource) -> f64 {
+        self.scales.get(&r).copied().unwrap_or(1.0)
+    }
+
+    /// Set one resource's duration multiplier.
+    pub fn with(mut self, r: Resource, scale: f64) -> Self {
+        self.scales.insert(r, scale);
+        self
+    }
+
+    /// Parse a `--what-if` spec like `eth_bw=2x,dispatch=0`.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut w = Self::identity();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (key, value) = entry
+                .split_once('=')
+                .ok_or_else(|| format!("what-if entry '{entry}' is not key=value"))?;
+            let key = key.trim();
+            let resource = match key.trim_end_matches("_bw") {
+                "eth" | "ethernet" => Resource::Ethernet,
+                "noc" => Resource::Noc,
+                "dram" => Resource::Dram,
+                "compute" => Resource::Compute,
+                "riscv" | "risc-v" => Resource::Riscv,
+                "dispatch" | "launch" => Resource::Dispatch,
+                "idle" => Resource::Idle,
+                other => return Err(format!("unknown what-if resource '{other}'")),
+            };
+            let value = value.trim();
+            let (num, is_speedup) = match value.strip_suffix('x') {
+                Some(v) => (v, true),
+                None => (value, key.ends_with("_bw")),
+            };
+            let f: f64 = num
+                .parse()
+                .map_err(|_| format!("what-if value '{value}' is not a number"))?;
+            if !f.is_finite() || f < 0.0 {
+                return Err(format!("what-if value '{value}' must be finite and >= 0"));
+            }
+            let scale = if is_speedup {
+                if f <= 0.0 {
+                    return Err(format!("speedup factor in '{entry}' must be > 0"));
+                }
+                1.0 / f
+            } else {
+                f
+            };
+            w.scales.insert(resource, scale);
+        }
+        Ok(w)
+    }
+
+    /// Human-readable summary of the scalings, e.g. `ethernet x0.50`.
+    pub fn describe(&self) -> String {
+        if self.scales.is_empty() {
+            return "identity".to_string();
+        }
+        self.scales
+            .iter()
+            .map(|(r, s)| format!("{} x{:.3}", r.label(), s))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+/// Re-walk the graph under counterfactual duration scalings and return
+/// the predicted wall time (`sink.end' - t0`).
+///
+/// Rule per span, in topological (construction) order: the new start is
+/// the max of the new predecessor ends (roots keep their recorded
+/// start); the new end is `start' + scale(resource) * duration`. When a
+/// span's start is unchanged and its resource unscaled, the *recorded*
+/// end is reused verbatim — which is why the identity what-if
+/// reproduces the simulated solve time bit-exactly rather than merely
+/// to rounding error.
+pub fn retime(g: &SpanGraph, w: &WhatIf) -> Result<SimNs, String> {
+    let sink = g.sink().ok_or("span graph has no sink")?;
+    let mut end = vec![0.0_f64; g.spans.len()];
+    for (i, s) in g.spans.iter().enumerate() {
+        let start = if s.preds.is_empty() {
+            s.start
+        } else {
+            s.preds
+                .iter()
+                .map(|&p| end[p])
+                .fold(f64::NEG_INFINITY, f64::max)
+        };
+        let k = w.scale(s.resource);
+        end[i] = if start == s.start && k == 1.0 {
+            s.end
+        } else {
+            start + k * (s.end - s.start)
+        };
+    }
+    let _ = ORIGIN;
+    Ok(end[sink] - g.t0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Small diamond: dispatch -> {compute, eth} -> join, with the
+    /// Ethernet arm longer (on the critical path).
+    fn diamond() -> SpanGraph {
+        let mut g = SpanGraph::new(0.0);
+        let d = g.span("launch", "host", Resource::Dispatch, 0.0, 10.0, &[]);
+        let c = g.span("compute", "spmv", Resource::Compute, 10.0, 40.0, &[d]);
+        let e = g.span("eth:halo", "spmv", Resource::Ethernet, 10.0, 90.0, &[d]);
+        let j = g.span("join", "spmv", Resource::Noc, 90.0, 100.0, &[c, e]);
+        g.set_sink(j);
+        g
+    }
+
+    #[test]
+    fn walks_the_gating_chain_and_matches_wall() {
+        let g = diamond();
+        let p = critical_path(&g).unwrap();
+        assert_eq!(p.length_ns, 100.0);
+        let names: Vec<&str> = p.ids.iter().map(|&i| g.spans[i].name.as_str()).collect();
+        assert_eq!(names, vec!["origin", "launch", "eth:halo", "join"]);
+    }
+
+    #[test]
+    fn report_fractions_and_slack() {
+        let g = diamond();
+        let rep = analyze(&g).unwrap();
+        assert_eq!(rep.wall_ns, 100.0);
+        assert!((rep.frac(Resource::Ethernet) - 0.80).abs() < 1e-12);
+        assert!((rep.frac(Resource::Dispatch) - 0.10).abs() < 1e-12);
+        assert_eq!(rep.frac(Resource::Compute), 0.0);
+        let compute = rep
+            .per_resource
+            .iter()
+            .find(|r| r.resource == Resource::Compute)
+            .unwrap();
+        // Compute may slip 50 ns (ends at 40, join needs it by 90).
+        assert_eq!(compute.slack_ns, 50.0);
+        let eth = rep
+            .per_resource
+            .iter()
+            .find(|r| r.resource == Resource::Ethernet)
+            .unwrap();
+        assert_eq!(eth.slack_ns, 0.0);
+        let rendered = rep.render();
+        assert!(rendered.contains("ethernet"));
+        assert!(rendered.contains("= wall time"));
+    }
+
+    #[test]
+    fn identity_retime_is_bit_exact() {
+        let g = diamond();
+        assert_eq!(retime(&g, &WhatIf::identity()).unwrap(), g.wall_ns());
+    }
+
+    #[test]
+    fn what_if_scales_follow_amdahl() {
+        let g = diamond();
+        // Doubling Ethernet bandwidth halves the eth arm: 10 + 40 + 10,
+        // but the compute arm (ends at 40) now gates the join equally.
+        let w = WhatIf::parse("eth_bw=2x").unwrap();
+        assert_eq!(retime(&g, &w).unwrap(), 60.0);
+        // Free dispatch removes the leading 10 ns from both arms.
+        let w = WhatIf::parse("dispatch=0").unwrap();
+        assert_eq!(retime(&g, &w).unwrap(), 90.0);
+        // Near-infinite ethernet speed and free dispatch: the compute
+        // arm takes over (30 ns compute + 10 ns join).
+        let w = WhatIf::parse("eth_bw=1000000x,dispatch=0").unwrap();
+        assert!((retime(&g, &w).unwrap() - 40.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn parse_grammar() {
+        let w = WhatIf::parse("eth_bw=2x, dispatch=0, noc_bw=1.5x").unwrap();
+        assert_eq!(w.scale(Resource::Ethernet), 0.5);
+        assert_eq!(w.scale(Resource::Dispatch), 0.0);
+        assert!((w.scale(Resource::Noc) - 1.0 / 1.5).abs() < 1e-15);
+        assert_eq!(w.scale(Resource::Compute), 1.0);
+        // `_bw` keys read plain numbers as speedups too.
+        let w = WhatIf::parse("dram_bw=4").unwrap();
+        assert_eq!(w.scale(Resource::Dram), 0.25);
+        assert!(WhatIf::parse("eth_bw").is_err());
+        assert!(WhatIf::parse("warp=2x").is_err());
+        assert!(WhatIf::parse("eth_bw=fast").is_err());
+        assert!(WhatIf::parse("compute=-1").is_err());
+        assert!(WhatIf::identity().is_identity());
+        assert!(!WhatIf::parse("eth_bw=2x").unwrap().is_identity());
+        assert!(WhatIf::parse("eth_bw=2x").unwrap().describe().contains("ethernet"));
+    }
+}

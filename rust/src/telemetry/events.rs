@@ -100,6 +100,31 @@ mod tests {
     }
 
     #[test]
+    fn jsonl_survives_hostile_names_and_non_finite_values() {
+        // Component names carrying control characters must escape (the
+        // JSONL consumer splits on raw newlines, so an unescaped \n in a
+        // name would shear the record in two), and non-finite values must
+        // degrade to null rather than emit NaN/inf literals.
+        let ev = SolverEvent {
+            t_ns: f64::INFINITY,
+            iter: 1,
+            residual: f64::NAN,
+            launches: 2,
+            component_ns: vec![("sp\nmv\t\"x\"\u{1}".to_string(), 7.0)],
+        };
+        let s = events_to_jsonl(&[ev]);
+        assert_eq!(s.lines().count(), 1, "escaped name must not break line framing");
+        let v = Json::parse(s.lines().next().unwrap()).unwrap();
+        assert_eq!(v.get("t_ns"), Some(&Json::Null));
+        assert_eq!(v.get("residual"), Some(&Json::Null));
+        let comps = v.get("component_ns").unwrap();
+        assert_eq!(
+            comps.get("sp\nmv\t\"x\"\u{1}").and_then(Json::as_f64),
+            Some(7.0)
+        );
+    }
+
+    #[test]
     fn writes_file_with_one_line_per_event() {
         let dir = std::env::temp_dir().join("wormsim_events_test");
         let path = dir.join("ev.jsonl");

@@ -75,6 +75,42 @@ impl MetricsRegistry {
             .unwrap_or(&[])
     }
 
+    /// Linear-interpolated percentile of a series' sampled *values*
+    /// (timestamps ignored), e.g. `series_percentile("component_ns",
+    /// &[("component", "spmv")], 95.0)` for the p95 per-dispatch time.
+    /// `None` for an empty/unknown series or a non-finite `pct`.
+    pub fn series_percentile(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        pct: f64,
+    ) -> Option<f64> {
+        let samples = self.get_series(name, labels);
+        if samples.is_empty() || !pct.is_finite() {
+            return None;
+        }
+        let mut vals: Vec<f64> = samples.iter().map(|&(_, v)| v).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        Some(crate::util::stats::percentile_sorted(
+            &vals,
+            pct.clamp(0.0, 100.0),
+        ))
+    }
+
+    /// The standard latency trio `(p50, p95, p99)` of a series' values.
+    /// `None` when the series has no samples.
+    pub fn series_quantiles(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+    ) -> Option<(f64, f64, f64)> {
+        Some((
+            self.series_percentile(name, labels, 50.0)?,
+            self.series_percentile(name, labels, 95.0)?,
+            self.series_percentile(name, labels, 99.0)?,
+        ))
+    }
+
     /// Sum of every `sums` entry whose metric name matches, across labels.
     pub fn sum_over_labels(&self, name: &str) -> f64 {
         self.sums
@@ -156,6 +192,68 @@ mod tests {
         let ids: Vec<String> = m.counts().map(|(id, _)| id).collect();
         assert_eq!(ids, vec!["x{a=1,b=2}".to_string()]);
         assert_eq!(metric_id("plain", &[]), "plain");
+    }
+
+    #[test]
+    fn percentiles_on_known_distributions() {
+        // 1..=100 uniform: with linear interpolation over rank
+        // pct/100*(len-1), p50 = 50.5, p95 = 95.05, p99 = 99.01.
+        let mut m = MetricsRegistry::new();
+        for i in 1..=100u32 {
+            m.series_push("lat", &[("k", "v")], i as f64, f64::from(i));
+        }
+        let p50 = m.series_percentile("lat", &[("k", "v")], 50.0).unwrap();
+        let p95 = m.series_percentile("lat", &[("k", "v")], 95.0).unwrap();
+        let p99 = m.series_percentile("lat", &[("k", "v")], 99.0).unwrap();
+        assert!((p50 - 50.5).abs() < 1e-9);
+        assert!((p95 - 95.05).abs() < 1e-9);
+        assert!((p99 - 99.01).abs() < 1e-9);
+        assert_eq!(m.series_percentile("lat", &[("k", "v")], 0.0), Some(1.0));
+        assert_eq!(m.series_percentile("lat", &[("k", "v")], 100.0), Some(100.0));
+        assert_eq!(
+            m.series_quantiles("lat", &[("k", "v")]),
+            Some((p50, p95, p99))
+        );
+    }
+
+    #[test]
+    fn percentiles_ignore_insertion_order_and_timestamps() {
+        // Same multiset pushed in two orders with scrambled timestamps
+        // yields identical percentiles: only the values matter.
+        let vals = [9.0, 1.0, 7.0, 3.0, 5.0];
+        let mut a = MetricsRegistry::new();
+        let mut b = MetricsRegistry::new();
+        for (i, &v) in vals.iter().enumerate() {
+            a.series_push("s", &[], i as f64, v);
+        }
+        for (i, &v) in vals.iter().rev().enumerate() {
+            b.series_push("s", &[], 1000.0 - i as f64, v);
+        }
+        for pct in [0.0, 25.0, 50.0, 75.0, 95.0, 100.0] {
+            assert_eq!(
+                a.series_percentile("s", &[], pct),
+                b.series_percentile("s", &[], pct)
+            );
+        }
+        // Median of {1,3,5,7,9} is the middle sample exactly.
+        assert_eq!(a.series_percentile("s", &[], 50.0), Some(5.0));
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        let mut m = MetricsRegistry::new();
+        // Absent series: None at every pct.
+        assert_eq!(m.series_percentile("missing", &[], 50.0), None);
+        assert_eq!(m.series_quantiles("missing", &[]), None);
+        // Single sample: every percentile returns it.
+        m.series_push("one", &[], 0.0, 42.0);
+        for pct in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(m.series_percentile("one", &[], pct), Some(42.0));
+        }
+        // Out-of-range pcts clamp; non-finite pcts are rejected.
+        assert_eq!(m.series_percentile("one", &[], -10.0), Some(42.0));
+        assert_eq!(m.series_percentile("one", &[], 250.0), Some(42.0));
+        assert_eq!(m.series_percentile("one", &[], f64::NAN), None);
     }
 
     #[test]

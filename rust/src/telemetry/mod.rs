@@ -14,10 +14,16 @@
 //!    device ns, Ethernet and NoC byte counters, residual decay).
 //! 3. **Events** ([`events`]): one [`SolverEvent`] per PCG residual
 //!    evaluation, exported as JSONL (`wormsim solve --telemetry out.jsonl`).
-//! 4. **Traces**: time-series render as Perfetto counter ("C") tracks next
-//!    to the profiler's zone events via
-//!    [`crate::profiler::to_chrome_trace_with`].
-//! 5. **Snapshots** ([`snapshot`]): bench sweeps serialize to
+//! 4. **Spans** ([`spans`]): the causal [`SpanGraph`] recorded by the
+//!    executor and solvers — which dependency chain the clock waited on,
+//!    with `start == max(pred.end)` bit-exact by construction.
+//! 5. **Critical path** ([`critpath`]): path extraction (length == wall
+//!    time exactly), per-resource fractions + CPM slack, and the what-if
+//!    re-timer (`wormsim critpath --what-if eth_bw=2x,dispatch=0`).
+//! 6. **Traces**: time-series render as Perfetto counter ("C") tracks and
+//!    span dependencies as flow arrows next to the profiler's zone events
+//!    via [`crate::profiler::to_chrome_trace_full`].
+//! 7. **Snapshots** ([`snapshot`]): bench sweeps serialize to
 //!    `BENCH_<name>.json` (`wormsim bench --emit-json`), compared by
 //!    `wormsim bench-diff`.
 //!
@@ -25,10 +31,12 @@
 //! solver results are bit-identical with telemetry on or off (also enforced
 //! by `tests/prop_telemetry.rs`).
 
+pub mod critpath;
 pub mod events;
 pub mod ledger;
 pub mod metrics;
 pub mod snapshot;
+pub mod spans;
 
 use std::io;
 use std::path::Path;
@@ -36,10 +44,12 @@ use std::path::Path;
 use crate::profiler::CounterTrack;
 use crate::timing::SimNs;
 
+pub use critpath::{analyze, critical_path, retime, CritPath, CritPathReport, ResourceCrit, WhatIf};
 pub use events::{events_to_jsonl, write_events_jsonl, SolverEvent};
 pub use ledger::{Resource, ResourceLedger, SolveLedger};
 pub use metrics::{metric_id, Labels, MetricsRegistry};
 pub use snapshot::{diff, BenchDiff, BenchMetric, BenchSnapshot, Better, DiffEntry};
+pub use spans::{Span, SpanGraph};
 
 /// A solve-scoped telemetry sink: metrics registry + solver event stream,
 /// gated by one `enabled` flag so disabled runs do no work and allocate

@@ -1,0 +1,346 @@
+//! Causal span graph: *which dependency chain gated wall time*.
+//!
+//! The resource ledger (PR 6) answers "where did the nanoseconds go";
+//! this module answers the question the ledger cannot: which chain of
+//! dependent work the simulated clock actually waited on. During
+//! [`crate::ttm::exec::execute_program`] every timing composition rule —
+//! per-sender NoC queues, halo-gates-compute, the reduce-tree merge
+//! order, the serial/pipelined seam rules — is recorded as a [`Span`]
+//! with explicit dependency edges, and the solvers assemble the
+//! per-dispatch program graphs plus the host launch/gap/readback chain
+//! into one solve-wide graph.
+//!
+//! **The invariant** (the analogue of ledger conservation): every span
+//! starts *exactly* when its latest predecessor ends —
+//! `span.start == max(pred.end)`, bit-for-bit. [`SpanGraph::span`]
+//! enforces it by construction: predecessors that end after the span
+//! starts are dropped (they were not gating), and any positive gap to
+//! the latest remaining predecessor is bridged by an explicit `wait`
+//! span on [`Resource::Idle`]. Two properties fall out and are enforced
+//! by `tests/prop_critpath.rs`:
+//!
+//! - the critical path ([`crate::telemetry::critical_path`]) is a
+//!   contiguous chain from the graph origin to the sink, so its length
+//!   equals the simulated wall time exactly;
+//! - the identity what-if ([`crate::telemetry::retime`] with all scales
+//!   = 1.0) reproduces every recorded end time bit-exactly.
+//!
+//! Graphs compose: [`SpanGraph::append_anchored`] grafts a program's
+//! graph (recorded at device start 0) into a solve graph at its dispatch
+//! window by adding one constant offset to every time. Adding the same
+//! constant to identical floats preserves both the ordering and the
+//! `max` structure, so the invariant survives re-anchoring bit-exactly.
+
+use crate::telemetry::Resource;
+use crate::timing::SimNs;
+
+/// Index of the origin span every [`SpanGraph`] is created with.
+pub const ORIGIN: usize = 0;
+
+/// One unit of causally-ordered work (or an explicit wait) on a resource.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    /// Human-readable label ("dram c3", "eth:halo", "enqueue(spmv)").
+    pub name: String,
+    /// Solve component this span belongs to ("spmv", "dot", …; "host"
+    /// for the dispatch chain, "" inside a bare program graph).
+    pub component: String,
+    /// Resource class the span's duration is charged to (and that the
+    /// what-if re-timer scales).
+    pub resource: Resource,
+    pub start: SimNs,
+    pub end: SimNs,
+    /// Indices of gating predecessors; always < this span's own index,
+    /// so span order is a topological order.
+    pub preds: Vec<usize>,
+}
+
+impl Span {
+    pub fn duration(&self) -> SimNs {
+        self.end - self.start
+    }
+}
+
+/// The causal span graph of one program execution or one whole solve.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SpanGraph {
+    pub spans: Vec<Span>,
+    /// Graph origin time (program/solve start).
+    pub t0: SimNs,
+    /// The designated terminal span (the solve's last clock advance).
+    /// Wall time is `sink.end - t0`; ulp-level float drift on detail
+    /// spans past the sink is deliberately ignored.
+    sink: Option<usize>,
+}
+
+impl SpanGraph {
+    /// New graph with the zero-duration origin span at `t0`.
+    pub fn new(t0: SimNs) -> Self {
+        Self {
+            spans: vec![Span {
+                name: "origin".to_string(),
+                component: String::new(),
+                resource: Resource::Idle,
+                start: t0,
+                end: t0,
+                preds: Vec::new(),
+            }],
+            t0,
+            sink: None,
+        }
+    }
+
+    /// True when no spans beyond the origin were recorded (e.g. the
+    /// solve ran with telemetry off).
+    pub fn is_empty(&self) -> bool {
+        self.spans.len() <= 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn sink(&self) -> Option<usize> {
+        self.sink
+    }
+
+    pub fn set_sink(&mut self, id: usize) {
+        debug_assert!(id < self.spans.len());
+        self.sink = Some(id);
+    }
+
+    /// Wall time the graph describes: sink end minus origin. 0 when no
+    /// sink was designated.
+    pub fn wall_ns(&self) -> SimNs {
+        self.sink.map_or(0.0, |s| self.spans[s].end - self.t0)
+    }
+
+    /// Add a span, enforcing the gating invariant: predecessors ending
+    /// after `start` are dropped (not gating), a missing predecessor
+    /// falls back to the origin, and a positive gap to the latest
+    /// remaining predecessor is bridged with an explicit `wait` span on
+    /// [`Resource::Idle`]. After this, `start == max(pred.end)` holds
+    /// bit-exactly. Returns the new span's index.
+    pub fn span(
+        &mut self,
+        name: impl Into<String>,
+        component: &str,
+        resource: Resource,
+        start: SimNs,
+        end: SimNs,
+        preds: &[usize],
+    ) -> usize {
+        debug_assert!(end >= start, "span must not end before it starts");
+        let mut eff: Vec<usize> = preds
+            .iter()
+            .copied()
+            .filter(|&p| p < self.spans.len() && self.spans[p].end <= start)
+            .collect();
+        eff.dedup();
+        if eff.is_empty() && start >= self.t0 {
+            eff.push(ORIGIN);
+        }
+        if let Some(&latest) = eff
+            .iter()
+            .max_by(|&&a, &&b| self.spans[a].end.partial_cmp(&self.spans[b].end).unwrap())
+        {
+            let m = self.spans[latest].end;
+            if m < start {
+                let bridge = self.push_raw(
+                    "wait".to_string(),
+                    component,
+                    Resource::Idle,
+                    m,
+                    start,
+                    vec![latest],
+                );
+                eff.push(bridge);
+            }
+        }
+        self.push_raw(name.into(), component, resource, start, end, eff)
+    }
+
+    /// Append a span verbatim, trusting the caller to uphold the gating
+    /// invariant (used by [`append_anchored`](Self::append_anchored)).
+    fn push_raw(
+        &mut self,
+        name: String,
+        component: &str,
+        resource: Resource,
+        start: SimNs,
+        end: SimNs,
+        preds: Vec<usize>,
+    ) -> usize {
+        let id = self.spans.len();
+        self.spans.push(Span {
+            name,
+            component: component.to_string(),
+            resource,
+            start,
+            end,
+            preds,
+        });
+        id
+    }
+
+    /// Graft another graph (a program execution recorded at device start
+    /// `sub.t0`) into this one at `anchor`'s end: every time shifts by
+    /// the constant `anchor.end - sub.t0`, every span is tagged with
+    /// `component`, and the sub-graph's origin gains `anchor` as its
+    /// predecessor. Returns the mapped index of `sub`'s sink (or of its
+    /// origin when `sub` never designated one).
+    ///
+    /// Exactness: for the grafted sink to land bit-exactly on the
+    /// solver's own clock arithmetic, `sub.t0` must be `0.0` — then the
+    /// offset is `anchor.end` itself and `origin + offset == anchor.end`
+    /// with no rounding. The solvers pre-execute their component
+    /// programs at device start 0 for precisely this reason.
+    pub fn append_anchored(&mut self, sub: &SpanGraph, anchor: usize, component: &str) -> usize {
+        debug_assert!(anchor < self.spans.len());
+        let c = self.spans[anchor].end - sub.t0;
+        let base = self.spans.len();
+        for (i, s) in sub.spans.iter().enumerate() {
+            let preds = if i == ORIGIN {
+                vec![anchor]
+            } else {
+                s.preds.iter().map(|&p| p + base).collect()
+            };
+            self.push_raw(
+                s.name.clone(),
+                component,
+                s.resource,
+                s.start + c,
+                s.end + c,
+                preds,
+            );
+        }
+        base + sub.sink.unwrap_or(ORIGIN)
+    }
+
+    /// Check the gating invariant on every span: `start == max(pred.end)`
+    /// exactly (origin and pred-less spans excepted). Returns the first
+    /// violation as an error string.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, s) in self.spans.iter().enumerate() {
+            if s.preds.is_empty() {
+                continue;
+            }
+            let mut m = f64::NEG_INFINITY;
+            for &p in &s.preds {
+                if p >= i {
+                    return Err(format!("span {i} '{}' has forward pred {p}", s.name));
+                }
+                m = m.max(self.spans[p].end);
+            }
+            if m != s.start {
+                return Err(format!(
+                    "span {i} '{}' starts at {} but its latest pred ends at {}",
+                    s.name, s.start, m
+                ));
+            }
+            if s.end < s.start {
+                return Err(format!("span {i} '{}' ends before it starts", s.name));
+            }
+        }
+        Ok(())
+    }
+
+    /// Derive Perfetto flow arrows from the graph's cross-transport
+    /// edges: every dependency into or out of an Ethernet span (the
+    /// cross-die causality the traces could not show), idle bridges
+    /// excluded. The `s`/`f` pair shares `id`; timestamps are the edge's
+    /// meeting point on each side.
+    pub fn flow_events(&self) -> Vec<crate::profiler::FlowEvent> {
+        let scope_of = |r: Resource| match r {
+            Resource::Ethernet => "ethernet",
+            Resource::Dispatch => "host",
+            _ => "device",
+        };
+        let mut flows = Vec::new();
+        for (i, s) in self.spans.iter().enumerate() {
+            for &p in &s.preds {
+                let ps = &self.spans[p];
+                let cross_eth = (s.resource == Resource::Ethernet)
+                    != (ps.resource == Resource::Ethernet);
+                if !cross_eth
+                    || s.resource == Resource::Idle
+                    || ps.resource == Resource::Idle
+                    || p == ORIGIN
+                {
+                    continue;
+                }
+                flows.push(crate::profiler::FlowEvent {
+                    name: format!("{}->{}", ps.name, s.name),
+                    id: flows.len() as u64 + 1,
+                    from_scope: scope_of(ps.resource).to_string(),
+                    from_ts: ps.end,
+                    to_scope: scope_of(s.resource).to_string(),
+                    to_ts: s.start,
+                });
+                let _ = i;
+            }
+        }
+        flows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn invariant_enforced_by_construction() {
+        let mut g = SpanGraph::new(0.0);
+        let a = g.span("a", "c", Resource::Compute, 0.0, 10.0, &[]);
+        // Gap to the latest pred is bridged by an idle wait.
+        let b = g.span("b", "c", Resource::Noc, 15.0, 20.0, &[a]);
+        assert_eq!(g.spans[b].preds.len(), 2, "original pred + bridge");
+        // A pred that ends after the span starts is dropped (not gating).
+        let d = g.span("d", "c", Resource::Dram, 10.0, 12.0, &[a, b]);
+        assert_eq!(g.spans[d].preds, vec![a]);
+        g.set_sink(b);
+        g.validate().unwrap();
+        assert_eq!(g.wall_ns(), 20.0);
+    }
+
+    #[test]
+    fn predless_span_falls_back_to_origin() {
+        let mut g = SpanGraph::new(5.0);
+        let a = g.span("a", "", Resource::Compute, 5.0, 9.0, &[]);
+        assert_eq!(g.spans[a].preds, vec![ORIGIN]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn append_anchored_shifts_and_rewires() {
+        let mut sub = SpanGraph::new(0.0);
+        let a = sub.span("work", "", Resource::Compute, 0.0, 7.0, &[]);
+        sub.set_sink(a);
+
+        let mut g = SpanGraph::new(0.0);
+        let launch = g.span("launch", "host", Resource::Dispatch, 0.0, 3.0, &[]);
+        let sink = g.append_anchored(&sub, launch, "spmv");
+        assert_eq!(g.spans[sink].end, 10.0);
+        assert_eq!(g.spans[sink].component, "spmv");
+        g.set_sink(sink);
+        g.validate().unwrap();
+        assert_eq!(g.wall_ns(), 10.0);
+    }
+
+    #[test]
+    fn flow_events_cross_ethernet_edges_only() {
+        let mut g = SpanGraph::new(0.0);
+        let a = g.span("compute", "spmv", Resource::Compute, 0.0, 4.0, &[]);
+        let e = g.span("eth:halo", "spmv", Resource::Ethernet, 4.0, 9.0, &[a]);
+        let b = g.span("boundary", "spmv", Resource::Compute, 9.0, 11.0, &[e]);
+        let _ = g.span("dram", "spmv", Resource::Dram, 0.0, 2.0, &[]);
+        let flows = g.flow_events();
+        assert_eq!(flows.len(), 2);
+        assert_eq!(flows[0].from_scope, "device");
+        assert_eq!(flows[0].to_scope, "ethernet");
+        assert_eq!(flows[1].from_ts, g.spans[e].end);
+        assert_eq!(flows[1].to_ts, g.spans[b].start);
+        // Ids are unique and nonzero.
+        assert_ne!(flows[0].id, flows[1].id);
+    }
+}

@@ -99,6 +99,14 @@ pub struct ProgramOutcome {
     /// Cumulative NoC link-busy time across all links (hop + serialization
     /// terms of every traversal) — an occupancy gauge, not a wall-time row.
     pub noc_link_busy_ns: SimNs,
+    /// Causal span graph of this execution: one span per NoC queue, DRAM
+    /// stage, RISC-V/compute chain (interior and boundary separately
+    /// under the pipelined rule), reduce-tree merge, and Ethernet phase,
+    /// with dependency edges mirroring the composition rules above. Every
+    /// recorded time is the exact float the scheduler computed, so the
+    /// sink's end equals `end` bit-for-bit and the critical path length
+    /// equals `device_ns()` (enforced by `tests/prop_critpath.rs`).
+    pub spans: crate::telemetry::SpanGraph,
 }
 
 impl ProgramOutcome {
@@ -134,10 +142,29 @@ pub fn execute_program_with(
     let n = w.n_cores();
     let calib = &cost.calib;
     let mut noc = NocSim::new();
+    // The causal span graph recorded alongside the timing composition:
+    // every span reuses the exact floats computed below, and the builder
+    // guarantees span.start == max(pred ends) bit-exactly.
+    let mut g = crate::telemetry::SpanGraph::new(start);
+    // Whether the lowering declared an interior/boundary split, and
+    // whether the pipelined seam rule will actually apply (used both by
+    // the Ethernet composition below and to decide which per-core chain
+    // — full or interior+boundary — describes the real schedule).
+    let has_split = w
+        .boundary_riscv_cycles
+        .iter()
+        .chain(&w.boundary_compute_cycles)
+        .any(|&b| b > 0);
+    let pipelined_effective = matches!(&w.ether, Some(e)
+        if e.overlaps_local
+            && w.overlap == crate::ttm::OverlapMode::Pipelined
+            && has_split
+            && w.reduce.is_none());
 
     // ---- data movement: per-sender sequential NoC sends -----------------
     let mut send_done = vec![start; n];
     let mut recv_ready = vec![start; n];
+    let mut send_span: Vec<Option<usize>> = vec![None; n];
     for queue in &w.data_movement {
         let mut cursor = start;
         for s in &queue.sends {
@@ -155,9 +182,23 @@ pub fn execute_program_with(
             }
         }
         if let Some(first) = queue.sends.first() {
-            send_done[w.core_index(first.src)] = cursor;
+            let i = w.core_index(first.src);
+            send_done[i] = cursor;
+            if cursor > start {
+                use crate::telemetry::Resource;
+                send_span[i] =
+                    Some(g.span(format!("noc send c{i}"), "", Resource::Noc, start, cursor, &[]));
+            }
         }
     }
+    let recv_span: Vec<Option<usize>> = (0..n)
+        .map(|j| {
+            (recv_ready[j] > start).then(|| {
+                use crate::telemetry::Resource;
+                g.span(format!("noc recv c{j}"), "", Resource::Noc, start, recv_ready[j], &[])
+            })
+        })
+        .collect();
 
     // ---- per-core local phase -------------------------------------------
     let at = |v: &[u64], i: usize| v.get(i).copied().unwrap_or(0);
@@ -181,6 +222,13 @@ pub fn execute_program_with(
     // what the resource ledger needs for conservation.
     let mut crit_done = start;
     let mut crit = (0.0f64, 0.0f64, 0.0f64, 0.0f64); // (dm wait, dram, riscv, compute)
+    // Span ids whose max end equals, per core, core_done[i] (the full
+    // chain) or interior_done[i] (the interior chain, when the pipelined
+    // seam rule is in effect and the full chain is not the real
+    // schedule). Only the chain that describes the actual schedule is
+    // recorded.
+    let mut chain_pred: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut interior_pred: Vec<Vec<usize>> = vec![Vec::new(); n];
     for i in 0..n {
         let ready = send_done[i].max(recv_ready[i]);
         let dram_b = at(&w.dram_bytes, i);
@@ -216,6 +264,54 @@ pub fn execute_program_with(
         out.compute_ns = out.compute_ns.max(compute);
         out.local_ns = out.local_ns.max(riscv + compute);
         out.boundary_ns = out.boundary_ns.max(boundary);
+
+        // Record the per-core chain, reusing this iteration's exact
+        // floats: start at `ready` (gated by the core's NoC spans), then
+        // dram → riscv → compute in the same left-associated addition
+        // order as `done`/`interior` above. Zero-duration stages are
+        // elided (`x + 0.0 == x`, so the chain stays exact).
+        use crate::telemetry::Resource;
+        let mut preds: Vec<usize> = send_span[i].iter().chain(recv_span[i].iter()).copied().collect();
+        let mut cur = ready;
+        let mut stage = |g: &mut crate::telemetry::SpanGraph,
+                         preds: &mut Vec<usize>,
+                         cur: &mut SimNs,
+                         name: String,
+                         r: Resource,
+                         dur: SimNs| {
+            if dur > 0.0 {
+                let e = *cur + dur;
+                let id = g.span(name, "", r, *cur, e, preds);
+                *preds = vec![id];
+                *cur = e;
+            }
+        };
+        stage(&mut g, &mut preds, &mut cur, format!("dram c{i}"), Resource::Dram, dram);
+        if pipelined_effective {
+            stage(
+                &mut g,
+                &mut preds,
+                &mut cur,
+                format!("riscv-int c{i}"),
+                Resource::Riscv,
+                crate::timing::cycles_ns(riscv_cyc - b_riscv_cyc),
+            );
+            stage(
+                &mut g,
+                &mut preds,
+                &mut cur,
+                format!("compute-int c{i}"),
+                Resource::Compute,
+                crate::timing::cycles_ns(compute_cyc - b_compute_cyc),
+            );
+            debug_assert_eq!(cur, interior);
+            interior_pred[i] = preds;
+        } else {
+            stage(&mut g, &mut preds, &mut cur, format!("riscv c{i}"), Resource::Riscv, riscv);
+            stage(&mut g, &mut preds, &mut cur, format!("compute c{i}"), Resource::Compute, compute);
+            debug_assert_eq!(cur, done);
+            chain_pred[i] = preds;
+        }
     }
     {
         use crate::telemetry::Resource;
@@ -226,24 +322,46 @@ pub fn execute_program_with(
     }
 
     // ---- global reduction tree + broadcast (§5) -------------------------
+    // Span ids whose max end equals the current program `end` — the
+    // sink's predecessors, rewritten by each phase that extends the
+    // critical frontier.
+    let mut end_candidates: Vec<usize> = chain_pred.iter().flatten().copied().collect();
     if let Some(rs) = &w.reduce {
+        use crate::telemetry::Resource;
         let (rows, cols) = w.grid;
         let tree = reduce_tree(rs.pattern, rows, cols);
         let children = tree.children();
         let merge_ns = crate::timing::cycles_ns(rs.merge_cycles);
         let mut ready_at: BTreeMap<Coord, SimNs> = BTreeMap::new();
         let mut arrivals: BTreeMap<Coord, SimNs> = BTreeMap::new();
+        // Per tree node: span ids whose max end is `ready_at` (the local
+        // chain, or the last merge span); per kid: its uplink send span.
+        let mut node_pred: BTreeMap<Coord, Vec<usize>> = BTreeMap::new();
+        let mut arrival_span: BTreeMap<Coord, usize> = BTreeMap::new();
         for &c in &tree.topo_order() {
             let local_done = core_done[w.core_index(c)];
             let mut done = local_done;
+            let mut preds = chain_pred[w.core_index(c)].clone();
             // Merge children's partials as they arrive (sequentially on
             // the receiving data-movement core).
             if let Some(kids) = children.get(&c) {
                 let mut merge_cursor = local_done;
-                let mut kid_arrivals: Vec<SimNs> = kids.iter().map(|k| arrivals[k]).collect();
-                kid_arrivals.sort_by(|x, y| x.partial_cmp(y).unwrap());
-                for ka in kid_arrivals {
-                    merge_cursor = merge_cursor.max(ka) + merge_ns;
+                let mut kid_arrivals: Vec<(SimNs, Coord)> =
+                    kids.iter().map(|k| (arrivals[k], *k)).collect();
+                kid_arrivals.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+                for (ka, kid) in kid_arrivals {
+                    let begin = merge_cursor.max(ka);
+                    merge_cursor = begin + merge_ns;
+                    preds.push(arrival_span[&kid]);
+                    let id = g.span(
+                        format!("merge ({},{})", c.row, c.col),
+                        "",
+                        Resource::Noc,
+                        begin,
+                        merge_cursor,
+                        &preds,
+                    );
+                    preds = vec![id];
                 }
                 done = merge_cursor;
             }
@@ -251,9 +369,31 @@ pub fn execute_program_with(
             if let Some(&parent) = tree.parent.get(&c) {
                 let d = noc.send(calib, c, parent, rs.payload_bytes, done);
                 arrivals.insert(c, d.arrival);
+                let id = g.span(
+                    format!("reduce send ({},{})", c.row, c.col),
+                    "",
+                    Resource::Noc,
+                    done,
+                    d.arrival,
+                    &preds,
+                );
+                arrival_span.insert(c, id);
             }
+            node_pred.insert(c, preds);
         }
+        let mut reduce_preds = node_pred.remove(&tree.root).unwrap_or_default();
         let reduce_done = ready_at[&tree.root] + crate::timing::cycles_ns(rs.root_extra_cycles);
+        if reduce_done > ready_at[&tree.root] {
+            let id = g.span(
+                "reduce root",
+                "",
+                Resource::Noc,
+                ready_at[&tree.root],
+                reduce_done,
+                &reduce_preds,
+            );
+            reduce_preds = vec![id];
+        }
         out.reduce_ns = reduce_done - end;
         end = reduce_done;
         if rs.bcast_bytes > 0 {
@@ -264,7 +404,10 @@ pub fn execute_program_with(
             let bcast_done = noc.multicast(calib, tree.root, &dests, rs.bcast_bytes, reduce_done);
             out.bcast_ns = bcast_done - reduce_done;
             end = bcast_done;
+            let id = g.span("bcast", "", Resource::Noc, reduce_done, bcast_done, &reduce_preds);
+            reduce_preds = vec![id];
         }
+        end_candidates = reduce_preds;
         // Reduce tree + broadcast extend the critical path past the local
         // phase on the NoC (merge cycles ride the data-movement cores).
         out.ledger
@@ -319,41 +462,77 @@ pub fn execute_program_with(
         // FULL local result, so `end` already carries reduce/broadcast
         // time past the local phase and the interior/boundary rewrite
         // below (which replaces the local critical path wholesale) would
-        // silently erase it.
-        let has_split = w
-            .boundary_riscv_cycles
-            .iter()
-            .chain(&w.boundary_compute_cycles)
-            .any(|&b| b > 0);
+        // silently erase it. (`pipelined_effective` encodes exactly this
+        // decision, hoisted above so the span chains match the rule.)
+        use crate::telemetry::Resource;
+        let eth_name = format!("eth:{}", eth.label);
         if eth.overlaps_local {
-            match w.overlap {
-                crate::ttm::OverlapMode::Pipelined if has_split && w.reduce.is_none() => {
-                    // The interior chain never waits for the seam; the
-                    // boundary chain starts once BOTH its core's interior
-                    // chain is done (one pipeline per core — the boundary
-                    // compute itself is never free) and the seam has
-                    // landed, so each core ends at
-                    // max(interior_i, eth) + boundary_i and the program
-                    // at the slowest core. Only the Ethernet *wait* is
-                    // hidden — the iteration-level software pipeline.
-                    end = (0..n)
-                        .map(|i| interior_done[i].max(phase_end) + boundary_dur[i])
-                        .fold(start, f64::max);
+            if pipelined_effective {
+                // The interior chain never waits for the seam; the
+                // boundary chain starts once BOTH its core's interior
+                // chain is done (one pipeline per core — the boundary
+                // compute itself is never free) and the seam has
+                // landed, so each core ends at
+                // max(interior_i, eth) + boundary_i and the program
+                // at the slowest core. Only the Ethernet *wait* is
+                // hidden — the iteration-level software pipeline.
+                let e_span = g.span(eth_name, "", Resource::Ethernet, phase_start, phase_end, &[]);
+                end_candidates = Vec::new();
+                end = (0..n)
+                    .map(|i| {
+                        let begin = interior_done[i].max(phase_end);
+                        let done = begin + boundary_dur[i];
+                        let mut preds = interior_pred[i].clone();
+                        preds.push(e_span);
+                        end_candidates.push(g.span(
+                            format!("boundary c{i}"),
+                            "",
+                            Resource::Compute,
+                            begin,
+                            done,
+                            &preds,
+                        ));
+                        done
+                    })
+                    .fold(start, f64::max);
+            } else {
+                // The seam exchange overlaps the NoC halo phase and
+                // DRAM staging, but the dependent local phase — the
+                // RISC-V element loop (which assembles seam values on
+                // the sparse path) and the compute pipeline — cannot
+                // complete before the seam data lands: the program
+                // takes whichever chain finishes later (the dual-die
+                // seam model, generalized).
+                let e_end = start + dur;
+                let mut preds =
+                    vec![g.span(eth_name, "", Resource::Ethernet, phase_start, e_end, &[])];
+                let mut cur = e_end;
+                if out.riscv_ns > 0.0 {
+                    let e = cur + out.riscv_ns;
+                    preds = vec![g.span("seam riscv", "", Resource::Riscv, cur, e, &preds)];
+                    cur = e;
                 }
-                _ => {
-                    // The seam exchange overlaps the NoC halo phase and
-                    // DRAM staging, but the dependent local phase — the
-                    // RISC-V element loop (which assembles seam values on
-                    // the sparse path) and the compute pipeline — cannot
-                    // complete before the seam data lands: the program
-                    // takes whichever chain finishes later (the dual-die
-                    // seam model, generalized).
-                    end = end.max(start + dur + out.riscv_ns + out.compute_ns);
+                if out.compute_ns > 0.0 {
+                    let e = cur + out.compute_ns;
+                    preds = vec![g.span("seam compute", "", Resource::Compute, cur, e, &preds)];
+                    cur = e;
                 }
+                end_candidates.extend(preds);
+                end = end.max(cur);
+                debug_assert_eq!(cur, start + dur + out.riscv_ns + out.compute_ns);
             }
         } else {
             // Reductions combine per-die results: strictly after the
             // local + NoC reduction phases.
+            let e_span = g.span(
+                eth_name,
+                "",
+                Resource::Ethernet,
+                phase_start,
+                phase_end,
+                &end_candidates,
+            );
+            end_candidates = vec![e_span];
             end = phase_end;
         }
     }
@@ -365,6 +544,14 @@ pub fn execute_program_with(
         crate::telemetry::Resource::Ethernet,
         end - ledger_end_before_eth,
     );
+
+    // Terminal span: the program is done when every surviving end
+    // candidate is — its start is exactly `end` because `end` is the
+    // running max of those candidates' recorded ends.
+    let sink = g.span("end", "", crate::telemetry::Resource::Idle, end, end, &end_candidates);
+    g.set_sink(sink);
+    debug_assert_eq!(g.spans[sink].end, end);
+    out.spans = g;
 
     out.end = end;
     out.messages = noc.messages_sent;

@@ -18,7 +18,8 @@
 use std::collections::BTreeMap;
 
 use crate::profiler::Profiler;
-use crate::telemetry::Telemetry;
+use crate::telemetry::spans::ORIGIN;
+use crate::telemetry::{Resource, ResourceLedger, SpanGraph, Telemetry};
 use crate::timing::calib::Calib;
 use crate::timing::cost::CostModel;
 use crate::timing::SimNs;
@@ -184,6 +185,129 @@ fn emit_role_zones(program: &Program, out: &ProgramOutcome, profiler: &mut Profi
                 t.end,
             );
         }
+    }
+}
+
+/// Assembles the solve-level causal span graph alongside a solver loop.
+///
+/// Every host-side clock advance the queue performs
+/// (`now + kernel_launch_ns`, `now + inter_kernel_gap_ns`,
+/// `now + residual_readback_ns`) is mirrored here by the caller with the
+/// *same* float expression, so the recorded dispatch chain — and with it
+/// the graph's sink — lands bit-exactly on the solver's final clock.
+/// That is what lets `tests/prop_critpath.rs` demand exact (not
+/// epsilon) equality between critical-path length and solve time.
+///
+/// Device windows are filled one of two ways:
+/// - [`window_program`](Self::window_program) grafts the component
+///   program's own span graph (recorded by the executor at device start
+///   0) into the window — the mesh solver's path, which keeps per-core /
+///   per-phase causality visible at solve scope;
+/// - [`window_ledger`](Self::window_ledger) lays the component's
+///   resource-ledger rows as a serial chain scaled to the charged
+///   window — the single-die solver's path, whose charged times are
+///   analytic rather than program executions.
+///
+/// Disabled assemblers (telemetry off) record nothing and yield an
+/// empty graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SolveSpans {
+    graph: SpanGraph,
+    /// Last span of the host dispatch chain (the next span's gate).
+    last: usize,
+    enabled: bool,
+}
+
+impl SolveSpans {
+    pub fn new(enabled: bool) -> Self {
+        Self {
+            graph: SpanGraph::new(0.0),
+            last: ORIGIN,
+            enabled,
+        }
+    }
+
+    /// Record one host-side advance (enqueue / gap / readback) from
+    /// `begin` to `end`, chained onto the previous host span.
+    pub fn host(&mut self, name: &str, begin: SimNs, end: SimNs) {
+        if !self.enabled {
+            return;
+        }
+        self.last = self
+            .graph
+            .span(name, "host", Resource::Dispatch, begin, end, &[self.last]);
+    }
+
+    /// Fill a dispatch window by grafting the component program's span
+    /// graph at the current chain head. The program must have been
+    /// executed at device start 0 (`sub.t0 == 0`), so the graft's offset
+    /// is exactly the window start and its sink lands exactly on
+    /// `window start + device_ns` — the solver's own clock value.
+    pub fn window_program(&mut self, component: &str, sub: &SpanGraph) {
+        if !self.enabled || sub.is_empty() {
+            return;
+        }
+        self.last = self.graph.append_anchored(sub, self.last, component);
+    }
+
+    /// Fill a dispatch window `[begin, end]` with a serial resource
+    /// chain from the component's ledger, scaled down when the ledger
+    /// attributes more than the window (mirroring
+    /// [`crate::telemetry::SolveLedger::charge`]); any unattributed
+    /// remainder becomes an explicit idle span so the chain still ends
+    /// exactly at `end`.
+    pub fn window_ledger(
+        &mut self,
+        component: &str,
+        ledger: &ResourceLedger,
+        begin: SimNs,
+        end: SimNs,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let ns = end - begin;
+        let total = ledger.total();
+        let f = if total > ns && total > 0.0 { ns / total } else { 1.0 };
+        let mut cur = begin;
+        let mut pred = self.last;
+        // Temporal order within a program: NoC wait, DRAM staging,
+        // RISC-V loop, compute pipeline, then any Ethernet extension.
+        for r in [
+            Resource::Noc,
+            Resource::Dram,
+            Resource::Riscv,
+            Resource::Compute,
+            Resource::Ethernet,
+        ] {
+            let d = ledger.get(r) * f;
+            if d > 0.0 && cur < end {
+                let e = (cur + d).min(end);
+                pred = self
+                    .graph
+                    .span(r.label(), component, r, cur, e, &[pred]);
+                cur = e;
+            }
+        }
+        if cur < end {
+            pred = self
+                .graph
+                .span("idle", component, Resource::Idle, cur, end, &[pred]);
+        }
+        self.last = pred;
+    }
+
+    /// Seal the graph: a zero-duration sink at the solve's final clock,
+    /// gated by the dispatch chain. Returns the finished graph (empty if
+    /// the assembler was disabled).
+    pub fn finish(mut self, now: SimNs) -> SpanGraph {
+        if self.enabled {
+            let sink = self
+                .graph
+                .span("solve end", "host", Resource::Idle, now, now, &[self.last]);
+            self.graph.set_sink(sink);
+        }
+        self.graph
     }
 }
 

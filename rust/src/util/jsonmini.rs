@@ -380,4 +380,62 @@ mod tests {
         let v = Json::parse(" {\n \"a\" : [ 1 , 2 ] \t}\r\n").unwrap();
         assert_eq!(v.get("a").and_then(Json::as_arr).map(|a| a.len()), Some(2));
     }
+
+    #[test]
+    fn control_characters_escape_and_round_trip() {
+        // Every C0 control character must serialize to a \-escape (the
+        // short forms for \n \r \t, \u00xx for the rest) — a raw control
+        // byte inside quotes is invalid JSON.
+        let all_controls: String = (0u32..0x20).map(|c| char::from_u32(c).unwrap()).collect();
+        let text = Json::Str(all_controls.clone()).to_json_string();
+        for b in text.bytes() {
+            assert!(b >= 0x20, "raw control byte {b:#04x} in serialized string");
+        }
+        assert!(text.contains("\\u0000"));
+        assert!(text.contains("\\u001f"));
+        assert!(text.contains("\\n") && text.contains("\\r") && text.contains("\\t"));
+        assert_eq!(Json::parse(&text).unwrap(), Json::Str(all_controls));
+        // \b and \f short escapes parse back to the control chars too.
+        assert_eq!(
+            Json::parse(r#""\b\f""#).unwrap(),
+            Json::Str("\u{8}\u{c}".to_string())
+        );
+    }
+
+    #[test]
+    fn non_finite_floats_serialize_as_null() {
+        // JSON has no NaN/Infinity literals; the writer degrades them to
+        // null rather than emitting an unparsable document.
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Json::Num(v).to_json_string(), "null");
+        }
+        let doc = Json::Arr(vec![Json::Num(1.0), Json::Num(f64::NAN), Json::Num(2.0)]);
+        let text = doc.to_json_string();
+        assert_eq!(text, "[1,null,2]");
+        // And the degraded form still parses.
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(
+            back,
+            Json::Arr(vec![Json::Num(1.0), Json::Null, Json::Num(2.0)])
+        );
+    }
+
+    #[test]
+    fn nested_arrays_round_trip() {
+        let doc = Json::Arr(vec![
+            Json::Arr(vec![]),
+            Json::Arr(vec![Json::Arr(vec![Json::Num(1.0), Json::Num(-2.5)])]),
+            Json::Obj(vec![(
+                "rows".to_string(),
+                Json::Arr(vec![
+                    Json::Arr(vec![Json::Str("a\nb".to_string()), Json::Null]),
+                    Json::Arr(vec![Json::Bool(false)]),
+                ]),
+            )]),
+        ]);
+        let text = doc.to_json_string();
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+        // Serialization is a fixed point: parse -> write is byte-stable.
+        assert_eq!(Json::parse(&text).unwrap().to_json_string(), text);
+    }
 }

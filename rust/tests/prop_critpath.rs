@@ -1,0 +1,261 @@
+//! Property tests for the causal span graph and critical-path analyzer:
+//!
+//! 1. **exactness** — for every solve configuration (N ∈ {1, 2, 4} ×
+//!    Serial|Pipelined × stencil|sparse mesh solves, plus fused and split
+//!    single-die solves) the recorded span graph validates, the critical
+//!    path's length equals the simulated wall time **bit-exactly** (`==`,
+//!    not approximately), and the identity what-if re-timer reproduces
+//!    the recorded solve time bit-exactly;
+//! 2. **counterfactual sanity** — scaling a resource never produces a
+//!    longer predicted time than scaling nothing, and free dispatch on a
+//!    dispatch-bound solve strictly helps;
+//! 3. **flow events** — every Perfetto flow arrow derived from the graph
+//!    lands in the emitted trace JSON as a matched `"s"`/`"f"` pair
+//!    sharing an id, with binding point `"e"` on the finish side.
+
+use wormsim::arch::{ComputeUnit, DataFormat};
+use wormsim::device::{DeviceMesh, EthLink, MeshTopology};
+use wormsim::engine::{NativeEngine, StencilCoeffs};
+use wormsim::kernels::spmv::{SpmvConfig, SpmvMode, SpmvOperator};
+use wormsim::kernels::stencil::{StencilConfig, StencilVariant};
+use wormsim::profiler::{to_chrome_trace_full, Profiler};
+use wormsim::solver::{self, MeshOptions, Operator, OverlapMode, PcgOptions, PcgVariant, Problem};
+use wormsim::sparse::{laplacian_3d, RowPartition};
+use wormsim::telemetry::{critical_path, retime, Resource, WhatIf};
+use wormsim::timing::cost::CostModel;
+use wormsim::util::jsonmini::Json;
+
+fn stencil_cfg(df: DataFormat, tiles: usize) -> StencilConfig {
+    StencilConfig {
+        df,
+        unit: ComputeUnit::for_format(df),
+        tiles_per_core: tiles,
+        variant: StencilVariant::FULL,
+        coeffs: StencilCoeffs::LAPLACIAN,
+    }
+}
+
+fn line_mesh(n_dies: usize, rows: usize, cols: usize) -> DeviceMesh {
+    DeviceMesh::new(n_dies, rows, cols, MeshTopology::Line, EthLink::for_dies(n_dies)).unwrap()
+}
+
+fn sparse_op_for(mesh: &DeviceMesh, nz: usize) -> SpmvOperator {
+    let a = laplacian_3d(64 * mesh.logical_rows(), 16 * mesh.die_cols, nz);
+    let part = RowPartition::stencil_aligned(mesh.logical_rows(), mesh.die_cols, nz).unwrap();
+    SpmvOperator::new(&a, part, SpmvConfig::new(DataFormat::Fp32, SpmvMode::SramResident)).unwrap()
+}
+
+/// The three exactness properties every solve's span graph must satisfy.
+fn assert_exact(spans: &wormsim::telemetry::SpanGraph, total_ns: f64, what: &str) {
+    spans.validate().unwrap_or_else(|e| panic!("{what}: {e}"));
+    assert!(!spans.is_empty(), "{what}: no spans recorded");
+    let p = critical_path(spans).unwrap_or_else(|e| panic!("{what}: {e}"));
+    // Bit-exact, not approximate: the chain telescopes with no rounding.
+    assert_eq!(
+        p.length_ns, total_ns,
+        "{what}: critical path {} != wall {}",
+        p.length_ns, total_ns
+    );
+    assert_eq!(spans.wall_ns(), total_ns, "{what}: sink disagrees with wall");
+    // The path is contiguous: each step's start is its predecessor's end.
+    for w in p.ids.windows(2) {
+        assert_eq!(
+            spans.spans[w[0]].end, spans.spans[w[1]].start,
+            "{what}: discontinuous path at spans {} -> {}",
+            w[0], w[1]
+        );
+    }
+    // Identity what-if reproduces the recorded time bit-exactly.
+    assert_eq!(
+        retime(spans, &WhatIf::identity()).unwrap(),
+        total_ns,
+        "{what}: identity retime drifted"
+    );
+}
+
+#[test]
+fn mesh_critical_path_equals_wall_time_exactly() {
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    for &n in &[1usize, 2, 4] {
+        let mesh = line_mesh(n, 1, 2);
+        let b = solver::mesh_dist_random(&mesh, 2, DataFormat::Fp32, 7);
+        let sparse = sparse_op_for(&mesh, 2);
+        for overlap in [OverlapMode::Serial, OverlapMode::Pipelined] {
+            for (op, tag) in [
+                (Operator::Stencil(stencil_cfg(DataFormat::Fp32, 2)), "stencil"),
+                (Operator::Sparse(&sparse), "sparse"),
+            ] {
+                let mut opts = PcgOptions::new(PcgVariant::SplitFp32);
+                opts.max_iters = 3;
+                opts.tol_abs = 0.0;
+                opts.telemetry = true;
+                let mut prof = Profiler::disabled();
+                let res = solver::solve_pcg_mesh(
+                    &mesh,
+                    &b,
+                    &op,
+                    &e,
+                    &cost,
+                    &MeshOptions::new(opts).with_overlap(overlap),
+                    &mut prof,
+                )
+                .unwrap();
+                let what = format!("N={n} {overlap:?} {tag}");
+                assert_exact(&res.spans, res.total_ns, &what);
+                // The report agrees with the raw walk.
+                let rep = res.critpath().unwrap();
+                assert_eq!(rep.wall_ns, res.total_ns, "{what}");
+                let (eth_frac, disp_frac) = res.crit_fracs();
+                assert!((0.0..=1.0).contains(&eth_frac), "{what}: eth {eth_frac}");
+                assert!((0.0..=1.0).contains(&disp_frac), "{what}: disp {disp_frac}");
+                // Dispatch gates every iteration, so it is always on the
+                // critical path of these tiny solves.
+                assert!(disp_frac > 0.0, "{what}: dispatch absent from path");
+            }
+        }
+    }
+}
+
+#[test]
+fn single_die_critical_path_equals_wall_time_exactly() {
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    for variant in [PcgVariant::FusedBf16, PcgVariant::SplitFp32] {
+        let p = Problem::new(2, 2, 2, variant.df());
+        let grid = p.make_grid().unwrap();
+        let b = solver::dist_random(&p, 3);
+        let mut opts = PcgOptions::new(variant);
+        opts.max_iters = 4;
+        opts.tol_abs = 0.0;
+        opts.telemetry = true;
+        let mut prof = Profiler::disabled();
+        let op = Operator::Stencil(stencil_cfg(variant.df(), 2));
+        let res = solver::solve_operator(&grid, &b, &op, &e, &cost, &opts, &mut prof).unwrap();
+        assert_exact(&res.spans, res.total_ns, &format!("{variant:?}"));
+        assert_eq!(res.critpath().unwrap().wall_ns, res.total_ns);
+    }
+}
+
+#[test]
+fn telemetry_off_records_no_spans() {
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    let mesh = line_mesh(2, 1, 2);
+    let b = solver::mesh_dist_random(&mesh, 2, DataFormat::Bf16, 1);
+    let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
+    opts.max_iters = 2;
+    opts.tol_abs = 0.0;
+    opts.telemetry = false;
+    let mut prof = Profiler::disabled();
+    let res = solver::solve_pcg_mesh(
+        &mesh,
+        &b,
+        &Operator::Stencil(stencil_cfg(DataFormat::Bf16, 2)),
+        &e,
+        &cost,
+        &MeshOptions::new(opts),
+        &mut prof,
+    )
+    .unwrap();
+    assert!(res.spans.is_empty());
+    assert!(res.critpath().is_err());
+    assert_eq!(res.crit_fracs(), (0.0, 0.0));
+}
+
+#[test]
+fn what_if_predictions_are_monotone_and_bounded() {
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    let mesh = line_mesh(4, 1, 2);
+    let b = solver::mesh_dist_random(&mesh, 2, DataFormat::Bf16, 21);
+    let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
+    opts.max_iters = 3;
+    opts.tol_abs = 0.0;
+    opts.telemetry = true;
+    let mut prof = Profiler::disabled();
+    let res = solver::solve_pcg_mesh(
+        &mesh,
+        &b,
+        &Operator::Stencil(stencil_cfg(DataFormat::Bf16, 2)),
+        &e,
+        &cost,
+        &MeshOptions::new(opts).with_overlap(OverlapMode::Serial),
+        &mut prof,
+    )
+    .unwrap();
+    let wall = res.total_ns;
+    // Speedups never predict a slowdown.
+    for spec in ["eth_bw=2x", "noc_bw=1.5x", "dispatch=0", "eth_bw=2x,dispatch=0"] {
+        let w = WhatIf::parse(spec).unwrap();
+        let t = retime(&res.spans, &w).unwrap();
+        assert!(
+            t <= wall,
+            "what-if [{spec}] predicted {t} > recorded {wall}"
+        );
+        assert!(t > 0.0, "what-if [{spec}] predicted nonpositive time");
+    }
+    // Dispatch gates every launch serially, so making it free strictly
+    // helps; it can remove at most the ledger's dispatch share.
+    let free_dispatch = retime(&res.spans, &WhatIf::identity().with(Resource::Dispatch, 0.0))
+        .unwrap();
+    assert!(free_dispatch < wall);
+    // Slowdowns never predict a speedup.
+    let slow_eth = retime(&res.spans, &WhatIf::identity().with(Resource::Ethernet, 2.0)).unwrap();
+    assert!(slow_eth >= wall);
+}
+
+#[test]
+fn flow_event_ids_resolve_in_emitted_perfetto_json() {
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    let mesh = line_mesh(2, 1, 2);
+    let b = solver::mesh_dist_random(&mesh, 2, DataFormat::Bf16, 2);
+    let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
+    opts.max_iters = 2;
+    opts.tol_abs = 0.0;
+    opts.telemetry = true;
+    let mut prof = Profiler::new();
+    let res = solver::solve_pcg_mesh(
+        &mesh,
+        &b,
+        &Operator::Stencil(stencil_cfg(DataFormat::Bf16, 2)),
+        &e,
+        &cost,
+        &MeshOptions::new(opts),
+        &mut prof,
+    )
+    .unwrap();
+    let flows = res.spans.flow_events();
+    assert!(!flows.is_empty(), "2-die solve must cross Ethernet");
+
+    let trace = to_chrome_trace_full(&prof, &res.telemetry.counter_tracks(), &flows);
+    let doc = Json::parse(&trace).unwrap();
+    let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+    let ids_of = |ph: &str| -> Vec<f64> {
+        events
+            .iter()
+            .filter(|ev| ev.get("ph").and_then(Json::as_str) == Some(ph))
+            .map(|ev| ev.get("id").and_then(Json::as_f64).unwrap())
+            .collect()
+    };
+    let starts = ids_of("s");
+    let finishes = ids_of("f");
+    assert_eq!(starts.len(), flows.len());
+    assert_eq!(finishes.len(), flows.len());
+    // Every start id resolves to exactly one finish id and vice versa.
+    for id in &starts {
+        assert_eq!(
+            finishes.iter().filter(|&&f| f == *id).count(),
+            1,
+            "flow id {id} has no unique 'f' event"
+        );
+    }
+    // Finish events carry the enclosing-slice binding point.
+    for ev in events {
+        if ev.get("ph").and_then(Json::as_str) == Some("f") {
+            assert_eq!(ev.get("bp").and_then(Json::as_str), Some("e"));
+            assert_eq!(ev.get("cat").and_then(Json::as_str), Some("span-dep"));
+        }
+    }
+}
