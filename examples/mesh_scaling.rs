@@ -11,18 +11,22 @@
 //! the paper's future-work section asks for.
 //!
 //!     cargo run --release --example mesh_scaling [-- --small] [-- --overlap serial|pipelined]
+//!                                                [-- --schedule classic|prefetch|sstep:<s>]
 //!
 //! `--small` shrinks the per-die sub-grid and the sweep (CI-friendly);
 //! `--overlap pipelined` runs the interior/boundary split schedule that
 //! hides the Ethernet seam under interior compute (values identical,
-//! clock faster).
+//! clock faster); `--schedule prefetch` additionally issues the next
+//! iteration's halo during this iteration's dot/axpy tail (still
+//! bit-identical values), and `--schedule sstep:<s>` batches the scalar
+//! all-reduces into one combined round every s iterations.
 
 use wormsim::arch::DataFormat;
 use wormsim::device::{DeviceMesh, EthLink, MeshTopology};
 use wormsim::engine::{NativeEngine, StencilCoeffs};
 use wormsim::kernels::stencil::{StencilConfig, StencilVariant};
 use wormsim::profiler::Profiler;
-use wormsim::solver::{self, MeshOptions, Operator, OverlapMode, PcgOptions, PcgVariant};
+use wormsim::solver::{self, MeshOptions, Operator, OverlapMode, PcgOptions, PcgVariant, Schedule};
 use wormsim::timing::cost::CostModel;
 use wormsim::util::stats::fmt_ns;
 
@@ -37,6 +41,14 @@ fn main() -> anyhow::Result<()> {
             .map_err(anyhow::Error::msg)?,
         None => OverlapMode::Serial,
     };
+    let schedule: Schedule = match args.iter().position(|a| a == "--schedule") {
+        Some(idx) => args
+            .get(idx + 1)
+            .ok_or_else(|| anyhow::anyhow!("--schedule expects classic|prefetch|sstep:<s>"))?
+            .parse()
+            .map_err(anyhow::Error::msg)?,
+        None => Schedule::Classic,
+    };
     // Total tiles per core at N=1; must divide by every swept N.
     let (rows, cols, total_tiles, sweep): (usize, usize, usize, &[usize]) = if small {
         (2, 2, 16, &[1, 2, 4, 8])
@@ -47,8 +59,9 @@ fn main() -> anyhow::Result<()> {
     let cost = CostModel::default();
     let elems = rows * cols * total_tiles * 1024;
     println!(
-        "=== mesh strong scaling: {elems} unknowns, per-die {rows}x{cols} cores, line topology, {} overlap ===\n",
-        overlap.label()
+        "=== mesh strong scaling: {elems} unknowns, per-die {rows}x{cols} cores, line topology, {} overlap, {} schedule ===\n",
+        overlap.label(),
+        schedule.label()
     );
     println!(
         "{:>5} {:>6} {:>11} {:>12} {:>9} {:>12} {:>12} {:>12} {:>12} {:>10}",
@@ -78,7 +91,12 @@ fn main() -> anyhow::Result<()> {
         };
         let b = solver::mesh_dist_random(&mesh, tiles, DataFormat::Bf16, 20260731);
         let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
-        opts.max_iters = 2;
+        // s-step needs at least one full block to amortize its combined
+        // round; classic/prefetch keep the historical 2-iteration probe.
+        opts.max_iters = match schedule {
+            Schedule::SStep(s) => s,
+            _ => 2,
+        };
         opts.tol_abs = 0.0;
         let mut prof = Profiler::disabled();
         let res = solver::solve_pcg_mesh(
@@ -87,7 +105,7 @@ fn main() -> anyhow::Result<()> {
             &Operator::Stencil(cfg),
             &engine,
             &cost,
-            &MeshOptions::new(opts).with_overlap(overlap),
+            &MeshOptions::new(opts).with_overlap(overlap).with_schedule(schedule),
             &mut prof,
         )?;
         let b0 = *base.get_or_insert(res.per_iter_ns);

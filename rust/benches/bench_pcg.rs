@@ -3,25 +3,30 @@
 //! fused-vs-split sparse PCG with its scheduler-derived enqueues/iteration
 //! (§7.1 launch accounting), and the N-die mesh strong-scaling sweep.
 //!
-//! The sweep emits one CSV row per (overlap mode, die count) on stdout
-//! (prefix `mesh_scaling,`) with the columns:
+//! The sweep emits one CSV row per (overlap mode, schedule, die count)
+//! on stdout (prefix `mesh_scaling,`) with the columns:
 //!
-//!   overlap, n_dies, cores, tiles_per_core, iter_ns, compute_ns,
-//!   noc_ns, eth_ns, dispatch_ns, eth_bytes_per_iter,
-//!   launches_per_iter, peak_link_util, crit_eth_frac,
-//!   crit_dispatch_frac
+//!   overlap, schedule, n_dies, cores, tiles_per_core, iter_ns,
+//!   compute_ns, noc_ns, eth_ns, dispatch_ns, eth_bytes_per_iter,
+//!   allreduce_rounds_per_iter, launches_per_iter, peak_link_util,
+//!   crit_eth_frac, crit_dispatch_frac
 //!
 //! `iter_ns` is the simulated critical path per iteration; the four
 //! `*_ns` phase columns are per-iteration transport splits (overlapping
 //! phases may sum past `iter_ns`); `eth_bytes_per_iter` counts seam halos
-//! plus the 3 scalar all-reduces of Algorithm 1; `peak_link_util` is the
-//! busiest physical Ethernet link's busy fraction of its phase window
-//! under the contended-link model; the two `crit_*_frac` columns come
-//! from the solve's causal span graph — the share of the longest
-//! dependency chain spent on Ethernet links / host dispatch, which is
-//! what actually diagnoses the knee (a phase can be large yet hidden).
-//! The summary reports each mode's strong-scaling knee and the shift the
-//! pipelined interior/boundary schedule buys.
+//! plus the schedule's scalar all-reduces (3/iteration for classic and
+//! prefetch, one combined round per s iterations for sstep —
+//! `allreduce_rounds_per_iter` makes the schedule's round count
+//! explicit); `peak_link_util` is the busiest physical Ethernet link's
+//! busy fraction of its phase window under the contended-link model; the
+//! two `crit_*_frac` columns come from the solve's causal span graph —
+//! the share of the longest dependency chain spent on Ethernet links /
+//! host dispatch, which is what actually diagnoses the knee (a phase can
+//! be large yet hidden). The summary reports each configuration's
+//! strong-scaling knee: the shift the pipelined interior/boundary
+//! schedule buys, and the further shift from the communication-avoiding
+//! schedules (prefetch hides the halo in the previous iteration's tail;
+//! sstep:4 removes 11 of every 12 all-reduce rounds).
 
 use wormsim::arch::DataFormat;
 use wormsim::device::{DeviceMesh, EthLink, MeshTopology};
@@ -157,11 +162,12 @@ fn main() {
 
 /// Strong-scaling sweep over the die mesh: fixed element count, every die
 /// a full 8×7 sub-grid with 1/N of the z-tiles (x-stacked seams), run
-/// once per overlap mode. Rows go to stdout in the CSV shape documented
-/// in the header comment; the summary reports where each mode's scaling
-/// knee sits and how far the pipelined schedule moved it.
+/// once per (overlap, schedule) configuration. Rows go to stdout in the
+/// CSV shape documented in the header comment; the summary reports where
+/// each configuration's scaling knee sits and how far the pipelined
+/// overlap and the communication-avoiding schedules moved it.
 fn mesh_scaling_sweep() {
-    use wormsim::solver::{MeshOptions, OverlapMode};
+    use wormsim::solver::{MeshOptions, OverlapMode, Schedule};
     let (rows, cols, total_tiles) = (8usize, 7usize, 64usize);
     let cost = CostModel::default();
     let engine = wormsim::engine::NativeEngine::new();
@@ -170,12 +176,20 @@ fn mesh_scaling_sweep() {
         rows * cols * total_tiles * 1024
     );
     println!(
-        "mesh_scaling,overlap,n_dies,cores,tiles_per_core,iter_ns,compute_ns,noc_ns,eth_ns,dispatch_ns,eth_bytes_per_iter,launches_per_iter,peak_link_util,crit_eth_frac,crit_dispatch_frac"
+        "mesh_scaling,overlap,schedule,n_dies,cores,tiles_per_core,iter_ns,compute_ns,noc_ns,eth_ns,dispatch_ns,eth_bytes_per_iter,allreduce_rounds_per_iter,launches_per_iter,peak_link_util,crit_eth_frac,crit_dispatch_frac"
     );
-    let mut knees: Vec<(OverlapMode, usize, f64)> = Vec::new();
-    let mut per_mode: Vec<Vec<(usize, f64)>> = Vec::new();
-    for overlap in [OverlapMode::Serial, OverlapMode::Pipelined] {
-        let mut times: Vec<(usize, f64)> = Vec::new();
+    let configs = [
+        (OverlapMode::Serial, Schedule::Classic),
+        (OverlapMode::Pipelined, Schedule::Classic),
+        (OverlapMode::Pipelined, Schedule::Prefetch),
+        (OverlapMode::Pipelined, Schedule::SStep(4)),
+    ];
+    // Per config and die count: (n, per_iter_ns, eth_ns_per_iter,
+    // eth_bytes_per_iter, crit_eth_frac).
+    let mut per_cfg: Vec<Vec<(usize, f64, f64, f64, f64)>> = Vec::new();
+    let mut knees: Vec<(String, usize, f64)> = Vec::new();
+    for (overlap, schedule) in configs {
+        let mut times: Vec<(usize, f64, f64, f64, f64)> = Vec::new();
         for n in [1usize, 2, 4, 8, 16, 32] {
             let tiles = total_tiles / n;
             let mesh =
@@ -189,7 +203,12 @@ fn mesh_scaling_sweep() {
             };
             let b = solver::mesh_dist_random(&mesh, tiles, DataFormat::Bf16, 42);
             let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
-            opts.max_iters = 2;
+            // Classic/prefetch probe two iterations; s-step amortizes
+            // its combined round over one full block.
+            opts.max_iters = match schedule {
+                Schedule::SStep(s) => s,
+                _ => 2,
+            };
             opts.tol_abs = 0.0;
             let mut prof = Profiler::disabled();
             let res = solver::solve_pcg_mesh(
@@ -198,29 +217,32 @@ fn mesh_scaling_sweep() {
                 &solver::Operator::Stencil(cfg),
                 &engine,
                 &cost,
-                &MeshOptions::new(opts).with_overlap(overlap),
+                &MeshOptions::new(opts).with_overlap(overlap).with_schedule(schedule),
                 &mut prof,
             )
             .unwrap();
             // Critical-path attribution from the causal span graph: which
             // resource the longest dependency chain actually runs on.
             let (crit_eth, crit_dispatch) = res.crit_fracs();
+            let eth_bytes_per_iter = res.eth_bytes_total as f64 / res.iters.max(1) as f64;
             println!(
-                "mesh_scaling,{},{n},{},{tiles},{:.1},{:.1},{:.1},{:.1},{:.1},{:.1},{:.2},{:.3},{:.3},{:.3}",
+                "mesh_scaling,{},{},{n},{},{tiles},{:.1},{:.1},{:.1},{:.1},{:.1},{:.1},{:.2},{:.2},{:.3},{:.3},{:.3}",
                 overlap.label(),
+                schedule.label(),
                 mesh.n_cores(),
                 res.per_iter_ns,
                 res.phases.compute_ns,
                 res.phases.noc_ns,
                 res.phases.ether_ns,
                 res.phases.dispatch_ns,
-                res.eth_bytes_total as f64 / res.iters.max(1) as f64,
+                eth_bytes_per_iter,
+                res.allreduce_rounds_per_iter(),
                 res.launches_per_iter(),
                 res.eth_peak_link_util,
                 crit_eth,
                 crit_dispatch,
             );
-            times.push((n, res.per_iter_ns));
+            times.push((n, res.per_iter_ns, res.eth_ns_per_iter, eth_bytes_per_iter, crit_eth));
         }
         // Strong scaling holds while compute dominates; past the knee
         // the latency-bound scalar all-reduce (2(N−1) serial hops on a
@@ -228,42 +250,58 @@ fn mesh_scaling_sweep() {
         // (N=2 keeps the on-board link; N≥4 switches to backplane
         // presets, where the ordering is a model outcome, not an
         // invariant).
-        assert!(times[1].1 < times[0].1, "{}: 2 dies must beat 1", overlap.label());
+        let label = format!("{}/{}", overlap.label(), schedule.label());
+        assert!(times[1].1 < times[0].1, "{label}: 2 dies must beat 1");
         let best = times
             .iter()
             .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
             .unwrap();
-        knees.push((overlap, best.0, best.1));
-        per_mode.push(times);
+        knees.push((label, best.0, best.1));
+        per_cfg.push(times);
     }
+    let (serial_classic, piped_classic) = (&per_cfg[0], &per_cfg[1]);
+    let (piped_prefetch, piped_sstep) = (&per_cfg[2], &per_cfg[3]);
     // Pipelining the seam can only help: per die count, never slower.
-    for (s, p) in per_mode[0].iter().zip(&per_mode[1]) {
+    for (s, p) in serial_classic.iter().zip(piped_classic.iter()) {
         assert!(p.1 <= s.1, "pipelined slower at {} dies: {} vs {}", s.0, p.1, s.1);
     }
-    let (serial, piped) = (&knees[0], &knees[1]);
-    println!(
-        "scaling knee: serial best at {} dies ({:.1} us/iter), pipelined best at {} dies ({:.1} us/iter)",
-        serial.1,
-        serial.2 / 1e3,
-        piped.1,
-        piped.2 / 1e3
+    // Prefetch is values-identical and never slower than the same-overlap
+    // classic run, with identical Ethernet byte accounting.
+    for (c, f) in piped_classic.iter().zip(piped_prefetch.iter()) {
+        assert!(f.1 <= c.1, "prefetch slower at {} dies: {} vs {}", c.0, f.1, c.1);
+        assert_eq!(f.3, c.3, "prefetch changed eth bytes at {} dies", c.0);
+    }
+    // The s-step schedule attacks the binding term directly: one combined
+    // round per block means strictly less Ethernet busy time and fewer
+    // bytes per iteration at every multi-die point.
+    for (c, s) in piped_classic.iter().zip(piped_sstep.iter()).skip(1) {
+        assert!(s.2 < c.2, "sstep eth time not reduced at {} dies: {} vs {}", c.0, s.2, c.2);
+        assert!(s.3 < c.3, "sstep eth bytes not reduced at {} dies: {} vs {}", c.0, s.3, c.3);
+    }
+    // Its advantage grows with N, so its knee can only sit at or past the
+    // serial-classic one — the N=16 knee story of the paper's §8 sweep.
+    let sstep_knee = knees[3].1;
+    assert!(
+        sstep_knee >= knees[0].1,
+        "sstep knee at {sstep_knee} dies regressed vs serial classic at {}",
+        knees[0].1
     );
-    // Same-N comparison: how much pipelining buys at serial's knee.
-    let piped_at_serial_knee = per_mode[1]
-        .iter()
-        .find(|t| t.0 == serial.1)
-        .map(|t| t.1)
-        .unwrap_or(piped.2);
+    // At N=32 the remaining critical path must be less Ethernet-bound
+    // than classic's at the same overlap.
+    let (c32, s32) = (piped_classic.last().unwrap(), piped_sstep.last().unwrap());
+    assert!(
+        s32.4 < c32.4,
+        "sstep crit_eth_frac at 32 dies not reduced: {} vs {}",
+        s32.4,
+        c32.4
+    );
+    for (label, n, t) in &knees {
+        println!("scaling knee [{label}]: best at {n} dies ({:.1} us/iter)", t / 1e3);
+    }
     println!(
-        "knee shift: {}; past it the Ethernet all-reduce (not the seam) is the binding term",
-        if piped.1 != serial.1 {
-            format!("{} -> {} dies under pipelined overlap", serial.1, piped.1)
-        } else {
-            format!(
-                "none (knee stays at {} dies; pipelined {:.2}x faster there)",
-                serial.1,
-                serial.2 / piped_at_serial_knee.max(1e-12)
-            )
-        }
+        "knee shift: serial/classic best at {} dies -> pipelined/sstep:4 best at {} dies; \
+         sstep cuts crit_eth_frac at 32 dies from {:.3} to {:.3} (one combined all-reduce \
+         round per 4 iterations instead of 3 rounds per iteration)",
+        knees[0].1, sstep_knee, c32.4, s32.4
     );
 }

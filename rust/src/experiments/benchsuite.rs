@@ -20,7 +20,7 @@ use crate::kernels::stencil::{lower_stencil, StencilConfig, StencilVariant};
 use crate::noc::RoutePattern;
 use crate::profiler::Profiler;
 use crate::solver::{
-    self, MeshOptions, Operator, OverlapMode, PcgOptions, PcgVariant,
+    self, MeshOptions, Operator, OverlapMode, PcgOptions, PcgVariant, Schedule,
 };
 use crate::sparse::{circulant_spd, RowPartition};
 use crate::telemetry::{BenchSnapshot, Better};
@@ -34,7 +34,9 @@ const PROVENANCE: &str = "simulated (wormsim cost model); regenerate with `worms
 
 /// The N-die strong-scaling PCG sweep (the `bench_pcg` mesh sweep as
 /// data): fixed element count, per-die 8×7 cores, 64 total z-tiles split
-/// across dies, fused BF16, both overlap modes.
+/// across dies, fused BF16, over (overlap, schedule) configurations —
+/// serial/pipelined classic plus the communication-avoiding prefetch and
+/// sstep:4 schedules under pipelined overlap.
 pub fn pcg_snapshot(smoke: bool) -> crate::Result<BenchSnapshot> {
     let (rows, cols, total_tiles) = (8usize, 7usize, 64usize);
     let dies: &[usize] = if smoke { &[1, 2, 4] } else { &[1, 2, 4, 8, 16, 32] };
@@ -45,11 +47,17 @@ pub fn pcg_snapshot(smoke: bool) -> crate::Result<BenchSnapshot> {
         "strong scaling: per-die 8x7 cores, 64 total z-tiles split across dies, line topology",
     );
     s.meta("variant", "bf16-fused");
-    s.meta("max_iters", "2");
+    s.meta("max_iters", "2 (sstep: one block of s)");
     s.meta("seed", "42");
     let cost = CostModel::default();
     let engine = NativeEngine::new();
-    for overlap in [OverlapMode::Serial, OverlapMode::Pipelined] {
+    let configs = [
+        (OverlapMode::Serial, Schedule::Classic),
+        (OverlapMode::Pipelined, Schedule::Classic),
+        (OverlapMode::Pipelined, Schedule::Prefetch),
+        (OverlapMode::Pipelined, Schedule::SStep(4)),
+    ];
+    for (overlap, schedule) in configs {
         for &n in dies {
             let tiles = total_tiles / n;
             let mesh =
@@ -63,7 +71,10 @@ pub fn pcg_snapshot(smoke: bool) -> crate::Result<BenchSnapshot> {
             };
             let b = solver::mesh_dist_random(&mesh, tiles, DataFormat::Bf16, 42);
             let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
-            opts.max_iters = 2;
+            opts.max_iters = match schedule {
+                Schedule::SStep(s) => s,
+                _ => 2,
+            };
             opts.tol_abs = 0.0;
             let mut prof = Profiler::disabled();
             let res = solver::solve_pcg_mesh(
@@ -72,11 +83,16 @@ pub fn pcg_snapshot(smoke: bool) -> crate::Result<BenchSnapshot> {
                 &Operator::Stencil(cfg),
                 &engine,
                 &cost,
-                &MeshOptions::new(opts).with_overlap(overlap),
+                &MeshOptions::new(opts).with_overlap(overlap).with_schedule(schedule),
                 &mut prof,
             )?;
             let nstr = n.to_string();
-            let labels = [("dies", nstr.as_str()), ("overlap", overlap.label())];
+            let sched_label = schedule.label();
+            let labels = [
+                ("dies", nstr.as_str()),
+                ("overlap", overlap.label()),
+                ("schedule", sched_label.as_str()),
+            ];
             let it = res.iters.max(1) as f64;
             s.push("iter_ns", &labels, res.per_iter_ns, "ns", Better::Lower);
             s.push("compute_ns", &labels, res.phases.compute_ns, "ns", Better::Lower);
@@ -88,6 +104,13 @@ pub fn pcg_snapshot(smoke: bool) -> crate::Result<BenchSnapshot> {
                 &labels,
                 res.eth_bytes_total as f64 / it,
                 "bytes",
+                Better::Lower,
+            );
+            s.push(
+                "allreduce_rounds_per_iter",
+                &labels,
+                res.allreduce_rounds_per_iter(),
+                "count",
                 Better::Lower,
             );
             s.push(

@@ -29,8 +29,8 @@ use wormsim::util::stats::fmt_ns;
 
 const VALUE_KEYS: &[&str] = &[
     "engine", "artifacts", "config", "iters", "seed", "grid", "tiles", "variant", "tol",
-    "pattern", "method", "out", "trace", "dies", "topology", "overlap", "suite", "threshold",
-    "telemetry", "what-if",
+    "pattern", "method", "out", "trace", "dies", "topology", "overlap", "schedule", "suite",
+    "threshold", "telemetry", "what-if",
 ];
 const FLAGS: &[&str] = &["help", "quiet", "emit-json", "smoke", "advisory"];
 
@@ -225,6 +225,7 @@ fn cmd_solve_mesh(
 
     let topology: MeshTopology = args.get_parsed("topology", "line")?;
     let overlap: wormsim::solver::OverlapMode = args.get_parsed("overlap", "serial")?;
+    let schedule: wormsim::solver::Schedule = args.get_parsed("schedule", "classic")?;
     let mesh = DeviceMesh::new(dies, rows, cols, topology, EthLink::for_dies(dies))
         .map_err(|e| e.to_string())?;
 
@@ -246,11 +247,12 @@ fn cmd_solve_mesh(
         coeffs: StencilCoeffs::LAPLACIAN,
     };
     println!(
-        "PCG {} on {dies} x {rows}x{cols}-core dies ({} mesh, {} cores), {tiles} tiles/core, {} overlap, engine {}",
+        "PCG {} on {dies} x {rows}x{cols}-core dies ({} mesh, {} cores), {tiles} tiles/core, {} overlap, {} schedule, engine {}",
         variant.label(),
         topology.label(),
         mesh.n_cores(),
         overlap.label(),
+        schedule.label(),
         ctx.engine.name()
     );
     let b = solver::mesh_dist_random(&mesh, tiles, df, ctx.seed);
@@ -261,7 +263,7 @@ fn cmd_solve_mesh(
         &Operator::Stencil(stencil_cfg),
         ctx.engine.as_ref(),
         &ctx.cost,
-        &wormsim::solver::MeshOptions::new(opts).with_overlap(overlap),
+        &wormsim::solver::MeshOptions::new(opts).with_overlap(overlap).with_schedule(schedule),
         &mut prof,
     )
     .map_err(|e| e.to_string())?;
@@ -287,12 +289,13 @@ fn cmd_solve_mesh(
             fmt_ns(res.phases.dispatch_ns)
         );
         println!(
-            "launches {} ({:.2}/iter), device gaps {}, Ethernet {} bytes/solve, peak link util {:.0}%",
+            "launches {} ({:.2}/iter), device gaps {}, Ethernet {} bytes/solve, peak link util {:.0}%, all-reduce rounds {:.2}/iter",
             res.launch.launches,
             res.launches_per_iter(),
             fmt_ns(res.launch.gap_ns),
             res.eth_bytes_total,
-            100.0 * res.eth_peak_link_util
+            100.0 * res.eth_peak_link_util,
+            res.allreduce_rounds_per_iter()
         );
         println!("verdict: {}", res.bottleneck_verdict());
     }
@@ -335,6 +338,7 @@ fn cmd_critpath(args: &cli::Args) -> Result<(), String> {
     let dies = args.get_usize("dies", 4)?;
     let topology: MeshTopology = args.get_parsed("topology", "line")?;
     let overlap: wormsim::solver::OverlapMode = args.get_parsed("overlap", "serial")?;
+    let schedule: wormsim::solver::Schedule = args.get_parsed("schedule", "classic")?;
     let mesh = DeviceMesh::new(dies, rows, cols, topology, EthLink::for_dies(dies))
         .map_err(|e| e.to_string())?;
 
@@ -355,10 +359,11 @@ fn cmd_critpath(args: &cli::Args) -> Result<(), String> {
         coeffs: StencilCoeffs::LAPLACIAN,
     };
     println!(
-        "critpath: PCG {} on {dies} x {rows}x{cols}-core dies ({} mesh), {tiles} tiles/core, {} overlap",
+        "critpath: PCG {} on {dies} x {rows}x{cols}-core dies ({} mesh), {tiles} tiles/core, {} overlap, {} schedule",
         variant.label(),
         topology.label(),
-        overlap.label()
+        overlap.label(),
+        schedule.label()
     );
     let b = solver::mesh_dist_random(&mesh, tiles, df, ctx.seed);
     let mut prof = Profiler::new();
@@ -368,7 +373,7 @@ fn cmd_critpath(args: &cli::Args) -> Result<(), String> {
         &Operator::Stencil(stencil_cfg),
         ctx.engine.as_ref(),
         &ctx.cost,
-        &wormsim::solver::MeshOptions::new(opts).with_overlap(overlap),
+        &wormsim::solver::MeshOptions::new(opts).with_overlap(overlap).with_schedule(schedule),
         &mut prof,
     )
     .map_err(|e| e.to_string())?;
@@ -539,6 +544,9 @@ fn print_usage() {
          solve                   run the PCG solver (--grid 8x7 --tiles 64 --variant bf16|fp32\n                          \
          --iters N --tol X --pattern naive|center --method 1|2)\n                          \
          multi-die: --dies N --topology line|ring --overlap serial|pipelined\n                          \
+         --schedule classic|prefetch|sstep:<s>  communication-avoiding schedule\n                          \
+         (prefetch: halo rides the previous iteration's tail, bit-identical values;\n                          \
+         sstep:<s>: ONE combined all-reduce per s iterations, s in 2..=8)\n                          \
          (--grid = per-die sub-grid)\n  \
          figures <id|all>        regenerate paper figures: fig3 fig5 fig6 fig11 fig12a fig12b fig12c fig13\n                          \
          extensions (§8): energy dualdie jacobi ext; solve supports --trace out.json\n  \
@@ -547,8 +555,9 @@ fn print_usage() {
          --emit-json writes BENCH_<suite>.json (--out DIR, --smoke for CI subset)\n  \
          bench-diff A.json B.json  compare snapshots (--threshold 0.05; --advisory always exits 0)\n  \
          critpath                critical-path report of a mesh solve's causal span graph\n                          \
-         (--dies N --grid RxC --overlap serial|pipelined --iters N)\n                          \
-         --what-if eth_bw=2x,dispatch=0  re-time the graph, print predicted solve time\n                          \
+         (--dies N --grid RxC --overlap serial|pipelined --schedule classic|prefetch|sstep:<s>)\n                          \
+         --what-if eth_bw=2x,eth_lat=0.5x,dispatch=0  re-time the graph, print predicted\n                          \
+         solve time (eth_lat scales only the per-hop latency share of Ethernet spans)\n                          \
          --trace out.json        Perfetto trace with span-dependency flow arrows\n\n\
          COMMON OPTIONS:\n  \
          --engine native|pjrt    value engine (pjrt runs the AOT JAX/Pallas artifacts)\n  \

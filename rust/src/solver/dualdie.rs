@@ -21,16 +21,25 @@ use crate::device::{DeviceMesh, MeshTopology};
 use crate::engine::{ComputeEngine, CoreBlock, StencilCoeffs};
 use crate::kernels::stencil::{StencilConfig, StencilVariant};
 use crate::profiler::{Breakdown, Profiler};
-use crate::solver::mesh::solve_pcg_mesh;
+use crate::solver::mesh::{solve_pcg_mesh, MeshOptions};
 use crate::solver::pcg::{Operator, PcgOptions, PcgVariant};
 use crate::timing::cost::CostModel;
 use crate::timing::SimNs;
+use crate::ttm::{OverlapMode, Schedule};
 
 #[derive(Debug, Clone)]
 pub struct DualDieOptions {
     pub max_iters: usize,
     pub tol_abs: f64,
     pub eth: EthLink,
+    /// Seam-overlap rule, passed through to the underlying N=2 mesh
+    /// solve. `Serial` (the default) keeps the PR-4 seam model exactly;
+    /// `Pipelined` hides the seam wait under the interior compute chain.
+    pub overlap: OverlapMode,
+    /// Communication-avoiding iteration schedule, passed through to the
+    /// mesh solve. `Classic` (the default) keeps the historical
+    /// trajectory and timings bit-exactly.
+    pub schedule: Schedule,
 }
 
 impl Default for DualDieOptions {
@@ -39,6 +48,8 @@ impl Default for DualDieOptions {
             max_iters: 50,
             tol_abs: 1e-4,
             eth: EthLink::default(),
+            overlap: OverlapMode::Serial,
+            schedule: Schedule::Classic,
         }
     }
 }
@@ -90,15 +101,19 @@ pub fn solve_pcg_dualdie(
     popts.max_iters = opts.max_iters;
     popts.tol_abs = opts.tol_abs;
     let mut prof = Profiler::disabled();
-    // The wrapper keeps the PR-4 serial seam model (OverlapMode::Serial
-    // is MeshOptions' default) so DualDieResult timings stay stable.
+    // Overlap and schedule pass straight through to the mesh solver; the
+    // defaults (Serial + Classic) reproduce the PR-4 seam model — and
+    // the historical DualDieResult timings — bit-exactly.
+    let mopts = MeshOptions::new(popts)
+        .with_overlap(opts.overlap)
+        .with_schedule(opts.schedule);
     let res = solve_pcg_mesh(
         &mesh,
         b,
         &Operator::Stencil(stencil_cfg),
         engine,
         cost,
-        &popts.into(),
+        &mopts,
         &mut prof,
     )?;
     Ok(DualDieResult {
@@ -200,6 +215,33 @@ mod tests {
         let b = dual_random(1, 1, 165, 1);
         let opts = DualDieOptions::default();
         assert!(solve_pcg_dualdie(1, 1, 165, &b, &e, &cost, &opts).is_err());
+    }
+
+    #[test]
+    fn overlap_and_schedule_pass_through_to_the_mesh() {
+        // The wrapper no longer hardcodes Serial/Classic: a pipelined +
+        // prefetch dual-die solve must (a) keep the exact same residual
+        // trajectory (both knobs are timing-only) and (b) be at least as
+        // fast as the serial classic solve.
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let b = dual_random(2, 2, 3, 21);
+        let mut base = DualDieOptions::default();
+        base.max_iters = 8;
+        base.tol_abs = 0.0;
+        let classic = solve_pcg_dualdie(2, 2, 3, &b, &e, &cost, &base).unwrap();
+
+        let mut fast = base.clone();
+        fast.overlap = OverlapMode::Pipelined;
+        fast.schedule = Schedule::Prefetch;
+        let led = solve_pcg_dualdie(2, 2, 3, &b, &e, &cost, &fast).unwrap();
+        assert_eq!(led.residual_history, classic.residual_history);
+        assert!(
+            led.total_ns <= classic.total_ns,
+            "prefetch+pipelined {} vs classic {}",
+            led.total_ns,
+            classic.total_ns
+        );
     }
 
     #[test]

@@ -63,16 +63,22 @@ use crate::solver::problem::DistVector;
 use crate::telemetry::{SolveLedger, SolverEvent, SpanGraph, Telemetry};
 use crate::timing::cost::{CostModel, PipelineMode, TileOpKind};
 use crate::timing::SimNs;
+use crate::solver::sstep;
 use crate::ttm::{
     EtherPhase, HostQueue, IterSchedule, LaunchStats, OverlapMode, Program, ProgramOutcome,
-    SolveSpans,
+    Schedule, SolveSpans,
 };
 
 /// Options of a mesh solve: the per-iteration PCG options plus the §8
 /// seam-overlap rule. [`OverlapMode::Serial`] reproduces the paper's
 /// model (and the pre-split trajectory) exactly; `Pipelined` lets the
 /// scheduler hide the Ethernet seam wait under the interior compute chain —
-/// values are identical either way, only the clock moves.
+/// values are identical either way, only the clock moves. The
+/// communication-avoiding iteration schedule rides in
+/// [`PcgOptions::schedule`] ([`MeshOptions::with_schedule`] sets it):
+/// `Prefetch` issues iteration k+1's halo under iteration k's tail
+/// (values bit-identical), `SStep(s)` batches a block's scalar
+/// all-reduces into one combined round (values drift-bounded).
 #[derive(Debug, Clone)]
 pub struct MeshOptions {
     pub pcg: PcgOptions,
@@ -89,6 +95,13 @@ impl MeshOptions {
 
     pub fn with_overlap(mut self, overlap: OverlapMode) -> Self {
         self.overlap = overlap;
+        self
+    }
+
+    /// Set the communication-avoiding iteration schedule (stored on the
+    /// inner [`PcgOptions`], which owns every per-iteration knob).
+    pub fn with_schedule(mut self, schedule: Schedule) -> Self {
+        self.pcg.schedule = schedule;
         self
     }
 }
@@ -141,6 +154,9 @@ pub struct MeshPcgResult {
     pub launch: LaunchStats,
     /// Dies in the mesh this result was solved on.
     pub n_dies: usize,
+    /// The communication-avoiding schedule the solve ran
+    /// ([`PcgOptions::schedule`], echoed for the benches).
+    pub schedule: Schedule,
     /// Per-link busy fraction of the *whole solve* window, from the one
     /// solve-scoped [`crate::device::EthSim`] every component's transfers
     /// replay into (unlike `eth_peak_link_util`, which is per-phase).
@@ -175,6 +191,13 @@ impl MeshPcgResult {
     /// critical fractions and slack). Errors when telemetry was off.
     pub fn critpath(&self) -> Result<crate::telemetry::CritPathReport, String> {
         crate::telemetry::analyze(&self.spans)
+    }
+
+    /// Scalar all-reduce rounds the schedule paid per PCG iteration
+    /// (3 for classic/prefetch, 1/s amortized for s-step) — the
+    /// communication-avoidance headline column of the bench sweep.
+    pub fn allreduce_rounds_per_iter(&self) -> f64 {
+        self.schedule.allreduce_rounds_per_iter()
     }
 
     /// `(crit_eth_frac, crit_dispatch_frac)` — the share of the solve's
@@ -249,6 +272,47 @@ pub fn mesh_dist_random(
 ) -> DistVector {
     let p = crate::solver::problem::Problem::new(mesh.logical_rows(), mesh.die_cols, tiles, df);
     crate::solver::problem::dist_random(&p, seed)
+}
+
+/// Scale one lowered program to `f` back-to-back applications of itself:
+/// the per-core cycle/staging vectors, the NoC sends, and the reduction
+/// tree's merge work and payload all multiply (f dot products fold f
+/// partial beats per tree edge). SRAM stays put — the applications
+/// reuse the same resident tiles. This is how the s-step "gram" and
+/// "bupdate" components price a block's worth of reductions/axpys as
+/// one dispatch.
+fn scale_program(mut p: Program, f: u64) -> Program {
+    for q in &mut p.work.data_movement {
+        let one = q.sends.clone();
+        for _ in 1..f {
+            q.sends.extend(one.iter().cloned());
+        }
+    }
+    for v in &mut p.work.dram_bytes {
+        *v *= f;
+    }
+    for v in &mut p.work.riscv_cycles {
+        *v *= f;
+    }
+    for v in &mut p.work.compute_cycles {
+        *v *= f;
+    }
+    if let Some(rd) = &mut p.work.reduce {
+        rd.merge_cycles *= f;
+        rd.root_extra_cycles *= f;
+        rd.payload_bytes *= f;
+        rd.bcast_bytes *= f;
+    }
+    p.footprint.traffic_bytes *= f;
+    p
+}
+
+/// Scalars the s-step combined all-reduce carries per block: the Gram
+/// blocks C, E, F (s² each), g = Vᵀr (s), and rᵀr (1). Fixed at the
+/// worst case — block 0 has no C/E values to fold, but component timing
+/// is input-independent by design, so the payload is too.
+pub fn sstep_gram_scalars(s: usize) -> u64 {
+    (3 * s * s + s + 1) as u64
 }
 
 /// A lowered mesh component: the slowest die's execution outcome (the
@@ -364,33 +428,62 @@ pub fn lower_mesh_components(
         p.footprint.eth_bytes = p.work.ether.as_ref().map_or(0, |e| e.bytes());
         p
     };
-    let components = vec![
-        spmv,
-        with_allreduce(lower_dot_as("dot", rows, cols, &dot_cfg, cost)),
-        with_allreduce(lower_dot_as("norm", rows, cols, &dot_cfg, cost)),
-        lower_block_op(
-            "axpy",
-            rows,
-            cols,
-            cost,
-            unit,
-            df,
-            TileOpKind::EltwiseBinary,
-            tiles,
-            PipelineMode::Streamed,
-        ),
-        lower_block_op(
-            "precond",
-            rows,
-            cols,
-            cost,
-            unit,
-            df,
-            precond_kind,
-            tiles,
-            PipelineMode::Streamed,
-        ),
-    ];
+    let mut components = vec![spmv];
+    match opts.pcg.schedule {
+        Schedule::SStep(s) => {
+            // The s-step block dispatches no per-dot all-reduces: one
+            // "gram" component folds every scalar the block needs (m
+            // local dot reductions + ONE combined m-scalar round over
+            // Ethernet), and one "bupdate" component prices the block's
+            // recurrence axpys (P/Q coupling: 2s² column updates; x/r
+            // step: 2s more).
+            let m = sstep_gram_scalars(s);
+            let mut gram = scale_program(lower_dot_as("gram", rows, cols, &dot_cfg, cost), m);
+            gram.work.ether = EtherPhase::allreduce(mesh, 4 * m);
+            gram.footprint.eth_bytes = gram.work.ether.as_ref().map_or(0, |e| e.bytes());
+            components.push(gram);
+            components.push(scale_program(
+                lower_block_op(
+                    "bupdate",
+                    rows,
+                    cols,
+                    cost,
+                    unit,
+                    df,
+                    TileOpKind::EltwiseBinary,
+                    tiles,
+                    PipelineMode::Streamed,
+                ),
+                (2 * s * s + 2 * s) as u64,
+            ));
+        }
+        Schedule::Classic | Schedule::Prefetch => {
+            components.push(with_allreduce(lower_dot_as("dot", rows, cols, &dot_cfg, cost)));
+            components.push(with_allreduce(lower_dot_as("norm", rows, cols, &dot_cfg, cost)));
+            components.push(lower_block_op(
+                "axpy",
+                rows,
+                cols,
+                cost,
+                unit,
+                df,
+                TileOpKind::EltwiseBinary,
+                tiles,
+                PipelineMode::Streamed,
+            ));
+        }
+    }
+    components.push(lower_block_op(
+        "precond",
+        rows,
+        cols,
+        cost,
+        unit,
+        df,
+        precond_kind,
+        tiles,
+        PipelineMode::Streamed,
+    ));
     Ok(MeshLowering {
         components,
         spmv_per_die,
@@ -501,16 +594,77 @@ pub fn solve_pcg_mesh(
             components.insert(p.name.clone(), MeshComponent { outcome });
         }
     }
+    let schedule = opts.pcg.schedule;
+    // Per-iteration (or per-block, under s-step) dispatch order.
+    let iteration: Vec<&str> = match schedule {
+        Schedule::SStep(s) => {
+            let mut seq = Vec::with_capacity(2 * s + 2);
+            for _ in 0..s {
+                seq.push("precond");
+                seq.push("spmv");
+            }
+            seq.push("gram");
+            seq.push("bupdate");
+            seq
+        }
+        Schedule::Classic | Schedule::Prefetch => PCG_ITERATION.to_vec(),
+    };
     let sched = if fused {
         IterSchedule::fused(
             "pcg_mesh_fused",
             lowering.components.clone(),
-            &PCG_ITERATION,
+            &iteration,
             SRAM_BYTES - SRAM_RESERVE_FUSED,
         )?
     } else {
-        IterSchedule::split(lowering.components.clone(), &PCG_ITERATION)
+        IterSchedule::split(lowering.components.clone(), &iteration)
     };
+    let sched = if schedule == Schedule::Prefetch {
+        // The cross-iteration edge: the next spmv's halo issues once the
+        // last axpy of the current iteration starts.
+        sched.with_cross_dep("spmv", "axpy")?
+    } else {
+        sched
+    };
+
+    // ---- prefetch: pre-execute the led spmv variant ----------------------
+    // Under Schedule::Prefetch, iteration k+1's halo EtherPhase issues
+    // `lead` ns before the spmv's device start — during iteration k's
+    // dot/axpy tail, after the second dot's all-reduce has freed the
+    // links. The led programs are pre-executed like the classic ones
+    // (timing is input-independent); the solve dispatches them from
+    // iteration 2 on, when a previous tail exists to hide under. Values
+    // are untouched — only the exposed seam wait shrinks, so the solve
+    // is never slower than classic (pinned in `tests/prop_schedule.rs`).
+    if schedule == Schedule::Prefetch {
+        if let Some(dep) = sched.cross_deps().first().cloned() {
+            let component_ns: BTreeMap<String, SimNs> = components
+                .iter()
+                .map(|(k, c)| (k.clone(), c.device_ns()))
+                .collect();
+            let lead = sched.prefetch_lead_ns(&dep, &component_ns, &cost.calib);
+            let mut scratch = HostQueue::new(cost.calib.clone());
+            let scratch_t0 = -cost.calib.kernel_launch_ns;
+            let mut slowest: Option<ProgramOutcome> = None;
+            for p in &lowering.spmv_per_die {
+                if !p.work.ether.as_ref().is_some_and(|e| e.overlaps_local) {
+                    continue; // nothing to prefetch (single die)
+                }
+                let mut pf = p.clone();
+                pf.work.ether_lead_ns = lead;
+                let outcome = scratch.run(&pf, cost, scratch_t0, &mut Profiler::disabled())?;
+                if slowest
+                    .as_ref()
+                    .map_or(true, |s| outcome.device_ns() > s.device_ns())
+                {
+                    slowest = Some(outcome);
+                }
+            }
+            if let Some(outcome) = slowest {
+                components.insert("spmv_pf".to_string(), MeshComponent { outcome });
+            }
+        }
+    }
 
     // ---- the solve (values on the logical grid, identical to the
     // single-die trajectory) ----------------------------------------------
@@ -567,9 +721,6 @@ pub fn solve_pcg_mesh(
 
     let mut x: DistVector = b.iter().map(|blk| CoreBlock::zeros(blk.df, blk.nz())).collect();
     let mut r: DistVector = b.to_vec();
-    let mut z = precond.apply(engine, &r)?;
-    let mut p = z.clone();
-    let mut delta = mesh_dot(&r, &z)? as f64;
 
     {
         let pre = now;
@@ -578,9 +729,17 @@ pub fn solve_pcg_mesh(
             spans.host("enqueue(pcg_mesh_fused)", pre, now);
         }
     }
+    // `component!(name)` dispatches component `name`;
+    // `component!(name, key)` dispatches under schedule name `name` but
+    // charges the pre-executed outcome stored at `key` — how the
+    // prefetch schedule swaps in the led "spmv_pf" variant without
+    // changing the declared iteration sequence.
     macro_rules! component {
-        ($name:expr) => {{
-            let c = &components[$name];
+        ($name:expr) => {
+            component!($name, $name)
+        };
+        ($name:expr, $key:expr) => {{
+            let c = &components[$key];
             let ns = c.device_ns();
             let pre: SimNs = now;
             now = sched.component(&mut queue, profiler, $name, ns, now)?;
@@ -624,81 +783,204 @@ pub fn solve_pcg_mesh(
         }};
     }
 
-    let mut history = Vec::new();
-    let mut iters = 0;
-    let mut converged = false;
-    while iters < opts.pcg.max_iters {
-        iters += 1;
-        // q = A p (stencil seam or sparse cut over Ethernet).
-        let q = apply(&p)?;
-        component!("spmv");
-
-        // α = δ / (p·q)
-        let pq_v = mesh_dot(&p, &q)? as f64;
-        component!("dot");
-        if pq_v == 0.0 || !pq_v.is_finite() {
-            break;
-        }
-        let alpha = (delta / pq_v) as f32;
-
-        // x += α p ; r -= α q
-        for (xi, pi) in x.iter_mut().zip(&p) {
-            engine.axpy_into(xi, alpha, pi)?;
-        }
-        component!("axpy");
-        for (ri, qi) in r.iter_mut().zip(&q) {
-            engine.axpy_into(ri, -alpha, qi)?;
-        }
-        component!("axpy");
-
-        // ||r||₂ (absolute, §3.3).
-        let rr = mesh_dot(&r, &r)? as f64;
-        component!("norm");
-        let rnorm = rr.max(0.0).sqrt();
-        history.push(rnorm);
-        {
+    // Shared between both loop shapes: the residual-sample bookkeeping
+    // (readback charge, history entry, telemetry event).
+    macro_rules! residual_sample {
+        ($rnorm:expr, $iter:expr) => {{
+            history.push($rnorm);
             let pre = now;
             now = sched.residual_readback(&mut queue, now);
             if now > pre {
                 spans.host("readback", pre, now);
             }
-        }
-        if !sched.is_fused() {
-            readbacks += 1;
-        }
-        if opts.pcg.telemetry {
-            telemetry.series("residual", &[], now, rnorm);
-            telemetry.event(SolverEvent {
-                t_ns: now,
-                iter: iters as u64,
-                residual: rnorm,
-                launches: queue.stats.launches,
-                component_ns: std::mem::take(&mut iter_component_ns),
-            });
-        }
-        if rnorm <= opts.pcg.tol_abs {
-            converged = true;
-            break;
-        }
+            if !sched.is_fused() {
+                readbacks += 1;
+            }
+            if opts.pcg.telemetry {
+                telemetry.series("residual", &[], now, $rnorm);
+                telemetry.event(SolverEvent {
+                    t_ns: now,
+                    iter: $iter as u64,
+                    residual: $rnorm,
+                    launches: queue.stats.launches,
+                    component_ns: std::mem::take(&mut iter_component_ns),
+                });
+            }
+        }};
+    }
 
-        // z = M⁻¹ r
-        z = precond.apply(engine, &r)?;
-        component!("precond");
-
-        // δ' = r·z ; β = δ'/δ
-        let delta_new = mesh_dot(&r, &z)? as f64;
-        component!("dot");
-        if delta == 0.0 || !delta_new.is_finite() {
-            break;
+    let mut history = Vec::new();
+    let mut iters = 0;
+    let mut converged = false;
+    if let Schedule::SStep(s) = schedule {
+        // ---- s-step blocks (Chronopoulos–Gear, monomial basis) ----------
+        // Each block: s halo'd spmvs build the basis, ONE combined
+        // all-reduce ("gram") makes every scalar visible, and the host
+        // reconstructs the block's s iterations without further network
+        // rounds ("bupdate"). Convergence is lagged one block — ‖r‖ only
+        // becomes visible at the combined round, so the entering residual
+        // gates the block and a converged solve stops WITHOUT applying.
+        let mut pprev: Vec<DistVector> = Vec::new();
+        let mut qprev: Vec<DistVector> = Vec::new();
+        let mut wprev: Vec<Vec<f64>> = vec![vec![0.0; s]; s];
+        let mut wprev_chol: Option<sstep::CholFactor> = None;
+        while iters < opts.pcg.max_iters {
+            // Basis: vₖ = M⁻¹uₖ₋₁ (u₀ = r), uₖ = A vₖ.
+            let mut v_cols: Vec<DistVector> = Vec::with_capacity(s);
+            let mut u_cols: Vec<DistVector> = Vec::with_capacity(s);
+            for k in 0..s {
+                let seed = if k == 0 { &r } else { &u_cols[k - 1] };
+                let vk = precond.apply(engine, seed)?;
+                component!("precond");
+                let uk = apply(&vk)?;
+                component!("spmv");
+                v_cols.push(vk);
+                u_cols.push(uk);
+            }
+            // Gram blocks, host f64 — every entry folds in the same
+            // canonical row-major order as `mesh_dot`, and all of them
+            // ride the one combined "gram" all-reduce.
+            let np = pprev.len();
+            let mut c_mat = vec![vec![0.0f64; s]; s];
+            let mut e_mat = vec![vec![0.0f64; s]; s];
+            for i in 0..np {
+                for j in 0..s {
+                    c_mat[i][j] = mesh_dot(&qprev[i], &v_cols[j])? as f64;
+                    e_mat[i][j] = mesh_dot(&pprev[i], &u_cols[j])? as f64;
+                }
+            }
+            let mut f_mat = vec![vec![0.0f64; s]; s];
+            for i in 0..s {
+                for j in 0..s {
+                    f_mat[i][j] = mesh_dot(&v_cols[i], &u_cols[j])? as f64;
+                }
+            }
+            let mut g = vec![0.0f64; s];
+            for (j, v) in v_cols.iter().enumerate() {
+                g[j] = mesh_dot(v, &r)? as f64;
+            }
+            let rr = mesh_dot(&r, &r)? as f64;
+            component!("gram");
+            let rnorm = rr.max(0.0).sqrt();
+            residual_sample!(rnorm, iters);
+            if rnorm <= opts.pcg.tol_abs {
+                converged = true;
+                break;
+            }
+            if !rr.is_finite() || f_mat.iter().flatten().any(|v| !v.is_finite()) {
+                break; // breakdown, like classic's non-finite p·q
+            }
+            // B = −Wᵖʳᵉᵛ⁻¹C keeps the new block A-conjugate to the
+            // previous one; W = PᵀAP assembles from reduced blocks only.
+            let b_mat = match &wprev_chol {
+                Some(chol) if np > 0 => sstep::coupling_b(chol, &c_mat),
+                _ => vec![vec![0.0; s]; s],
+            };
+            let mut p_cols = v_cols;
+            let mut q_cols = u_cols;
+            for j in 0..s {
+                for i in 0..np {
+                    let bij = b_mat[i][j] as f32;
+                    if bij != 0.0 {
+                        for (pb, ob) in p_cols[j].iter_mut().zip(&pprev[i]) {
+                            engine.axpy_into(pb, bij, ob)?;
+                        }
+                        for (qb, ob) in q_cols[j].iter_mut().zip(&qprev[i]) {
+                            engine.axpy_into(qb, bij, ob)?;
+                        }
+                    }
+                }
+            }
+            let w = sstep::next_w(&f_mat, &c_mat, &e_mat, &wprev, &b_mat);
+            let chol = sstep::cholesky(&w);
+            if chol.rank == 0 {
+                break; // W lost positive definiteness entirely
+            }
+            // Block step: W a = g, then x += Pa, r −= Qa.
+            let a = chol.solve(&g);
+            for j in 0..s {
+                let aj = a[j] as f32;
+                if aj != 0.0 {
+                    for (xi, pi) in x.iter_mut().zip(&p_cols[j]) {
+                        engine.axpy_into(xi, aj, pi)?;
+                    }
+                    for (ri, qi) in r.iter_mut().zip(&q_cols[j]) {
+                        engine.axpy_into(ri, -aj, qi)?;
+                    }
+                }
+            }
+            component!("bupdate");
+            pprev = p_cols;
+            qprev = q_cols;
+            wprev = w;
+            wprev_chol = Some(chol);
+            iters = (iters + s).min(opts.pcg.max_iters);
         }
-        let beta = (delta_new / delta) as f32;
-        delta = delta_new;
+    } else {
+        // ---- classic / prefetch: Algorithm 1, one residual per
+        // iteration. Prefetch changes WHEN the halo rides the wire (the
+        // "spmv_pf" outcome, from iteration 2 on), never what any kernel
+        // computes — the trajectory is bit-identical to classic.
+        let mut z = precond.apply(engine, &r)?;
+        let mut p = z.clone();
+        let mut delta = mesh_dot(&r, &z)? as f64;
+        while iters < opts.pcg.max_iters {
+            iters += 1;
+            // q = A p (stencil seam or sparse cut over Ethernet).
+            let q = apply(&p)?;
+            if iters > 1 && components.contains_key("spmv_pf") {
+                component!("spmv", "spmv_pf");
+            } else {
+                component!("spmv");
+            }
 
-        // p = z + β p
-        for (pi, zi) in p.iter_mut().zip(&z) {
-            *pi = engine.axpy(zi, beta, pi)?;
+            // α = δ / (p·q)
+            let pq_v = mesh_dot(&p, &q)? as f64;
+            component!("dot");
+            if pq_v == 0.0 || !pq_v.is_finite() {
+                break;
+            }
+            let alpha = (delta / pq_v) as f32;
+
+            // x += α p ; r -= α q
+            for (xi, pi) in x.iter_mut().zip(&p) {
+                engine.axpy_into(xi, alpha, pi)?;
+            }
+            component!("axpy");
+            for (ri, qi) in r.iter_mut().zip(&q) {
+                engine.axpy_into(ri, -alpha, qi)?;
+            }
+            component!("axpy");
+
+            // ||r||₂ (absolute, §3.3).
+            let rr = mesh_dot(&r, &r)? as f64;
+            component!("norm");
+            let rnorm = rr.max(0.0).sqrt();
+            residual_sample!(rnorm, iters);
+            if rnorm <= opts.pcg.tol_abs {
+                converged = true;
+                break;
+            }
+
+            // z = M⁻¹ r
+            z = precond.apply(engine, &r)?;
+            component!("precond");
+
+            // δ' = r·z ; β = δ'/δ
+            let delta_new = mesh_dot(&r, &z)? as f64;
+            component!("dot");
+            if delta == 0.0 || !delta_new.is_finite() {
+                break;
+            }
+            let beta = (delta_new / delta) as f32;
+            delta = delta_new;
+
+            // p = z + β p
+            for (pi, zi) in p.iter_mut().zip(&z) {
+                *pi = engine.axpy(zi, beta, pi)?;
+            }
+            component!("axpy");
         }
-        component!("axpy");
     }
 
     breakdown.iterations = iters as u64;
@@ -732,6 +1014,7 @@ pub fn solve_pcg_mesh(
         },
         launch: queue.stats.clone(),
         n_dies: mesh.n_dies,
+        schedule,
         eth_link_util_solve: solve_eth.utilization(now),
         ledger,
         telemetry,

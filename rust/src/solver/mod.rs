@@ -12,6 +12,7 @@ pub mod jacobi_iter;
 pub mod mesh;
 pub mod pcg;
 pub mod problem;
+pub mod sstep;
 
 pub use jacobi::JacobiPreconditioner;
 pub use jacobi_iter::{solve_jacobi, JacobiOptions, JacobiResult};
@@ -19,7 +20,7 @@ pub use dualdie::{solve_pcg_dualdie, DualDieOptions, DualDieResult, EthLink};
 pub use mesh::{
     mesh_dist_random, solve_pcg_mesh, MeshOptions, MeshPcgResult, MeshPhaseBreakdown,
 };
-pub use crate::ttm::OverlapMode;
+pub use crate::ttm::{OverlapMode, Schedule};
 pub use pcg::{solve, solve_operator, FusionMode, Operator, PcgOptions, PcgResult, PcgVariant};
 pub use problem::{
     apply_laplacian_global, dist_from_fn, dist_random, dist_to_global, dist_zeros, DistVector,

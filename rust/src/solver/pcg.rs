@@ -37,7 +37,7 @@ use crate::telemetry::{ResourceLedger, SolveLedger, SolverEvent, SpanGraph, Tele
 use crate::tile::EltwiseOp;
 use crate::timing::cost::{CostModel, PipelineMode, TileOpKind};
 use crate::timing::SimNs;
-use crate::ttm::{HostQueue, IterSchedule, LaunchStats, Program, SolveSpans};
+use crate::ttm::{HostQueue, IterSchedule, LaunchStats, Program, Schedule, SolveSpans};
 
 /// The paper's two PCG implementations (§7.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -255,6 +255,14 @@ pub struct PcgOptions {
     pub precondition: bool,
     /// Launch-schedule override (default: derived from the variant).
     pub fusion: FusionMode,
+    /// Communication-avoiding iteration schedule
+    /// ([`crate::ttm::Schedule`]): `Classic` (default), `Prefetch`
+    /// (iteration k+1's halo issues under iteration k's dot/axpy tail —
+    /// values bit-identical, never slower), or `SStep(s)` (one combined
+    /// all-reduce round every s iterations — values drift-bounded, not
+    /// bit-identical). Only the mesh solver has Ethernet phases to
+    /// reschedule; the single-die solver accepts and ignores it.
+    pub schedule: Schedule,
     /// Record solve telemetry (metrics, per-iteration events, ledger
     /// attribution). Purely observational — solver values and timings are
     /// bit-identical either way (pinned by `tests/prop_telemetry.rs`).
@@ -271,6 +279,7 @@ impl PcgOptions {
             dot_pattern: RoutePattern::Naive,
             precondition: true,
             fusion: FusionMode::Auto,
+            schedule: Schedule::Classic,
             telemetry: true,
         }
     }

@@ -1,0 +1,217 @@
+//! Host-side f64 block algebra for the s-step (communication-avoiding)
+//! PCG schedule ([`crate::ttm::Schedule::SStep`]).
+//!
+//! One block of s iterations builds a monomial basis V = [v₁…vₛ]
+//! (vₖ = M⁻¹uₖ₋₁, uₖ = A vₖ, u₀ = r), then folds **every** scalar the
+//! block needs — C = QᵖʳᵉᵛᵀV, E = PᵖʳᵉᵛᵀU, F = VᵀU, g = Vᵀr, rᵀr —
+//! into ONE combined all-reduce round. The Chronopoulos–Gear recurrence
+//! then reconstructs the block's directions without further network
+//! traffic:
+//!
+//! - B = −Wᵖʳᵉᵛ⁻¹C couples the new basis to the previous block
+//!   (P = V + PᵖʳᵉᵛB keeps cross-block A-conjugacy: PᵖʳᵉᵛᵀA P =
+//!   C + WᵖʳᵉᵛB = 0);
+//! - W = PᵀAP = F + CᵀB + BᵀE + BᵀWᵖʳᵉᵛB — assembled from already
+//!   reduced blocks, no extra round;
+//! - the block step solves W a = g (g = Pᵀr collapses to Vᵀr because
+//!   r ⊥ span(Pᵖʳᵉᵛ) by construction) and applies x += Pa, r −= Qa.
+//!
+//! All of this is s×s with s ≤ 8, so the host does it in f64. The
+//! monomial basis conditions like the power iteration — W's Cholesky can
+//! lose positive definiteness in finite precision — so [`cholesky`]
+//! truncates at the first non-positive pivot and the solve falls back to
+//! the leading well-conditioned block (zero-extended), which degrades a
+//! block toward fewer effective iterations instead of exploding. The
+//! residual-trajectory drift vs classic PCG is property-bounded in
+//! `tests/prop_schedule.rs`, not bit-exact.
+
+/// A (possibly truncated) Cholesky factorization W ≈ LLᵀ of the leading
+/// `rank`×`rank` block of an s×s Gram matrix.
+#[derive(Debug, Clone)]
+pub struct CholFactor {
+    l: Vec<Vec<f64>>,
+    /// Columns factored before the first non-positive pivot (0 = W has
+    /// no positive leading pivot at all — total breakdown).
+    pub rank: usize,
+    n: usize,
+}
+
+/// Factor a symmetric matrix, truncating at the first pivot that is not
+/// strictly positive and finite (the monomial-basis conditioning
+/// fallback: the leading block is still an SPD Gram of the leading basis
+/// columns, so a truncated solve is a shorter but valid descent step).
+pub fn cholesky(w: &[Vec<f64>]) -> CholFactor {
+    let n = w.len();
+    let mut l = vec![vec![0.0f64; n]; n];
+    let mut rank = n;
+    for j in 0..n {
+        let mut d = w[j][j];
+        for k in 0..j {
+            d -= l[j][k] * l[j][k];
+        }
+        if !(d > 0.0 && d.is_finite()) {
+            rank = j;
+            break;
+        }
+        let lj = d.sqrt();
+        l[j][j] = lj;
+        for (i, row) in w.iter().enumerate().skip(j + 1) {
+            let mut v = row[j];
+            for k in 0..j {
+                v -= l[i][k] * l[j][k];
+            }
+            l[i][j] = v / lj;
+        }
+    }
+    CholFactor { l, rank, n }
+}
+
+impl CholFactor {
+    /// Solve (LLᵀ)y = rhs on the leading `rank` block; entries past the
+    /// truncation point come back zero (those basis directions are
+    /// dropped from the block step).
+    pub fn solve(&self, rhs: &[f64]) -> Vec<f64> {
+        let k = self.rank;
+        let mut y = vec![0.0f64; self.n];
+        for i in 0..k {
+            let mut v = rhs[i];
+            for j in 0..i {
+                v -= self.l[i][j] * y[j];
+            }
+            y[i] = v / self.l[i][i];
+        }
+        for i in (0..k).rev() {
+            let mut v = y[i];
+            for j in (i + 1)..k {
+                v -= self.l[j][i] * y[j];
+            }
+            y[i] = v / self.l[i][i];
+        }
+        y
+    }
+}
+
+/// B = −Wᵖʳᵉᵛ⁻¹C, column by column through the (possibly truncated)
+/// factor: rows past the truncation point are zero, dropping the
+/// ill-conditioned previous directions from the coupling.
+pub fn coupling_b(wprev: &CholFactor, c: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let n = c.len();
+    let mut b = vec![vec![0.0f64; n]; n];
+    for j in 0..n {
+        let rhs: Vec<f64> = (0..n).map(|i| -c[i][j]).collect();
+        let col = wprev.solve(&rhs);
+        for (i, bi) in b.iter_mut().enumerate() {
+            bi[j] = col[i];
+        }
+    }
+    b
+}
+
+/// W = F + CᵀB + BᵀE + BᵀWᵖʳᵉᵛB, symmetrized (exactly symmetric in
+/// exact arithmetic — the two triangles drift apart only by rounding, and
+/// averaging them keeps the Cholesky honest). O(s⁴) with s ≤ 8.
+pub fn next_w(
+    f: &[Vec<f64>],
+    c: &[Vec<f64>],
+    e: &[Vec<f64>],
+    wprev: &[Vec<f64>],
+    b: &[Vec<f64>],
+) -> Vec<Vec<f64>> {
+    let n = f.len();
+    let mut w = vec![vec![0.0f64; n]; n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut v = f[i][j];
+            for k in 0..n {
+                v += c[k][i] * b[k][j]; // (CᵀB)ᵢⱼ
+                v += b[k][i] * e[k][j]; // (BᵀE)ᵢⱼ
+                for l in 0..n {
+                    v += b[k][i] * wprev[k][l] * b[l][j]; // (BᵀWᵖʳᵉᵛB)ᵢⱼ
+                }
+            }
+            w[i][j] = v;
+        }
+    }
+    for i in 0..n {
+        for j in 0..i {
+            let m = 0.5 * (w[i][j] + w[j][i]);
+            w[i][j] = m;
+            w[j][i] = m;
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_solves_an_spd_system() {
+        // W = [[4,2],[2,3]], W⁻¹ = 1/8 [[3,-2],[-2,4]].
+        let w = vec![vec![4.0, 2.0], vec![2.0, 3.0]];
+        let f = cholesky(&w);
+        assert_eq!(f.rank, 2);
+        let y = f.solve(&[2.0, 5.0]);
+        assert!((y[0] - (-0.5)).abs() < 1e-12, "{y:?}");
+        assert!((y[1] - 2.0).abs() < 1e-12, "{y:?}");
+    }
+
+    #[test]
+    fn non_positive_pivot_truncates_not_explodes() {
+        // Indefinite: the second pivot is negative — the factor keeps the
+        // leading 1×1 block and the solve zero-extends.
+        let w = vec![vec![1.0, 0.0], vec![0.0, -1.0]];
+        let f = cholesky(&w);
+        assert_eq!(f.rank, 1);
+        assert_eq!(f.solve(&[3.0, 7.0]), vec![3.0, 0.0]);
+        // A matrix with no positive leading pivot at all is rank 0 and
+        // solves to the zero step (the solver treats this as breakdown).
+        let bad = cholesky(&[vec![-1.0]]);
+        assert_eq!(bad.rank, 0);
+        assert_eq!(bad.solve(&[5.0]), vec![0.0]);
+        // NaN pivots truncate too (finite-precision Gram gone wrong).
+        let nan = cholesky(&[vec![f64::NAN]]);
+        assert_eq!(nan.rank, 0);
+    }
+
+    #[test]
+    fn coupling_cancels_cross_block_gram() {
+        // With B = −W⁻¹C the coupled Gram C + WB must vanish — that is
+        // the cross-block A-conjugacy the recurrence exists for.
+        let w = vec![vec![4.0, 1.0], vec![1.0, 3.0]];
+        let c = vec![vec![2.0, -1.0], vec![0.5, 1.5]];
+        let b = coupling_b(&cholesky(&w), &c);
+        for i in 0..2 {
+            for j in 0..2 {
+                let wb: f64 = (0..2).map(|k| w[i][k] * b[k][j]).sum();
+                assert!((c[i][j] + wb).abs() < 1e-12);
+            }
+        }
+        // Block 0 shape: zero C gives zero coupling.
+        let z = coupling_b(&cholesky(&w), &vec![vec![0.0; 2]; 2]);
+        assert!(z.iter().flatten().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn recurrence_is_symmetric_and_reduces_to_f() {
+        let f = vec![vec![2.0, 0.7], vec![0.3, 5.0]];
+        let zero = vec![vec![0.0; 2]; 2];
+        // b = 0 (block 0): W is just F symmetrized.
+        let w0 = next_w(&f, &zero, &zero, &zero, &zero);
+        assert_eq!(w0[0][1], w0[1][0]);
+        assert!((w0[0][1] - 0.5).abs() < 1e-12);
+        assert_eq!(w0[0][0], 2.0);
+        // General inputs still come out symmetric.
+        let c = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        let e = vec![vec![0.5, 0.1], vec![0.2, 0.9]];
+        let wp = vec![vec![3.0, 0.4], vec![0.4, 2.0]];
+        let b = vec![vec![0.3, -0.2], vec![0.1, 0.5]];
+        let w = next_w(&f, &c, &e, &wp, &b);
+        for i in 0..2 {
+            for j in 0..2 {
+                assert_eq!(w[i][j], w[j][i]);
+            }
+        }
+    }
+}

@@ -237,9 +237,20 @@ pub fn analyze(g: &SpanGraph) -> Result<CritPathReport, String> {
 /// factor with an `x` suffix meaning *that many times faster*, i.e. the
 /// duration divides (`eth_bw=2x` halves Ethernet durations). Keys
 /// ending in `_bw` always read as speedups.
+///
+/// `eth_lat=` is a separate knob, not a resource: Ethernet spans carry
+/// a recorded latency portion (`Span::lat_ns` — the per-round fixed
+/// link latency; all-reduces are nearly pure latency, halos mostly
+/// payload). `eth_lat` scales only that portion while `eth`/`eth_bw`
+/// scales only the remainder, so "what if the link latency halved"
+/// (`eth_lat=2x`) and "what if bandwidth doubled" (`eth_bw=2x`) answer
+/// different questions — exactly the split that predicts the s-step
+/// schedule's win before building it.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WhatIf {
     scales: BTreeMap<Resource, f64>,
+    /// Duration multiplier for the latency portion of Ethernet spans.
+    eth_lat: f64,
 }
 
 impl Default for WhatIf {
@@ -253,16 +264,22 @@ impl WhatIf {
     pub fn identity() -> Self {
         Self {
             scales: BTreeMap::new(),
+            eth_lat: 1.0,
         }
     }
 
     pub fn is_identity(&self) -> bool {
-        self.scales.values().all(|&s| s == 1.0)
+        self.scales.values().all(|&s| s == 1.0) && self.eth_lat == 1.0
     }
 
     /// Duration multiplier for one resource (1.0 unless scaled).
     pub fn scale(&self, r: Resource) -> f64 {
         self.scales.get(&r).copied().unwrap_or(1.0)
+    }
+
+    /// Duration multiplier for the latency portion of Ethernet spans.
+    pub fn eth_lat_scale(&self) -> f64 {
+        self.eth_lat
     }
 
     /// Set one resource's duration multiplier.
@@ -271,14 +288,48 @@ impl WhatIf {
         self
     }
 
-    /// Parse a `--what-if` spec like `eth_bw=2x,dispatch=0`.
+    /// Set the Ethernet-latency duration multiplier.
+    pub fn with_eth_lat(mut self, scale: f64) -> Self {
+        self.eth_lat = scale;
+        self
+    }
+
+    /// Parse a `--what-if` spec like `eth_bw=2x,eth_lat=4x,dispatch=0`.
     pub fn parse(spec: &str) -> Result<Self, String> {
+        /// One entry's value as a duration multiplier: an `x` suffix
+        /// reads as a speedup (duration divides); a plain number is a
+        /// multiplier unless `default_speedup` (the `_bw` keys).
+        fn scale_of(entry: &str, value: &str, default_speedup: bool) -> Result<f64, String> {
+            let value = value.trim();
+            let (num, is_speedup) = match value.strip_suffix('x') {
+                Some(v) => (v, true),
+                None => (value, default_speedup),
+            };
+            let f: f64 = num
+                .parse()
+                .map_err(|_| format!("what-if value '{value}' is not a number"))?;
+            if !f.is_finite() || f < 0.0 {
+                return Err(format!("what-if value '{value}' must be finite and >= 0"));
+            }
+            if is_speedup {
+                if f <= 0.0 {
+                    return Err(format!("speedup factor in '{entry}' must be > 0"));
+                }
+                Ok(1.0 / f)
+            } else {
+                Ok(f)
+            }
+        }
         let mut w = Self::identity();
         for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
             let (key, value) = entry
                 .split_once('=')
                 .ok_or_else(|| format!("what-if entry '{entry}' is not key=value"))?;
             let key = key.trim();
+            if key == "eth_lat" {
+                w.eth_lat = scale_of(entry, value, false)?;
+                continue;
+            }
             let resource = match key.trim_end_matches("_bw") {
                 "eth" | "ethernet" => Resource::Ethernet,
                 "noc" => Resource::Noc,
@@ -289,40 +340,26 @@ impl WhatIf {
                 "idle" => Resource::Idle,
                 other => return Err(format!("unknown what-if resource '{other}'")),
             };
-            let value = value.trim();
-            let (num, is_speedup) = match value.strip_suffix('x') {
-                Some(v) => (v, true),
-                None => (value, key.ends_with("_bw")),
-            };
-            let f: f64 = num
-                .parse()
-                .map_err(|_| format!("what-if value '{value}' is not a number"))?;
-            if !f.is_finite() || f < 0.0 {
-                return Err(format!("what-if value '{value}' must be finite and >= 0"));
-            }
-            let scale = if is_speedup {
-                if f <= 0.0 {
-                    return Err(format!("speedup factor in '{entry}' must be > 0"));
-                }
-                1.0 / f
-            } else {
-                f
-            };
-            w.scales.insert(resource, scale);
+            w.scales
+                .insert(resource, scale_of(entry, value, key.ends_with("_bw"))?);
         }
         Ok(w)
     }
 
     /// Human-readable summary of the scalings, e.g. `ethernet x0.50`.
     pub fn describe(&self) -> String {
-        if self.scales.is_empty() {
+        if self.is_identity() {
             return "identity".to_string();
         }
-        self.scales
+        let mut parts: Vec<String> = self
+            .scales
             .iter()
             .map(|(r, s)| format!("{} x{:.3}", r.label(), s))
-            .collect::<Vec<_>>()
-            .join(", ")
+            .collect();
+        if self.eth_lat != 1.0 {
+            parts.push(format!("eth_lat x{:.3}", self.eth_lat));
+        }
+        parts.join(", ")
     }
 }
 
@@ -349,8 +386,17 @@ pub fn retime(g: &SpanGraph, w: &WhatIf) -> Result<SimNs, String> {
                 .fold(f64::NEG_INFINITY, f64::max)
         };
         let k = w.scale(s.resource);
-        end[i] = if start == s.start && k == 1.0 {
+        let lat_split = s.resource == Resource::Ethernet && s.lat_ns > 0.0;
+        end[i] = if start == s.start && k == 1.0 && (w.eth_lat == 1.0 || !lat_split) {
+            // Unchanged start, unscaled resource: reuse the recorded end
+            // verbatim (the identity what-if stays bit-exact).
             s.end
+        } else if lat_split {
+            // Ethernet spans split into a fixed-latency portion (scaled
+            // by `eth_lat=`) and a payload portion (scaled by the
+            // resource factor, i.e. `eth_bw=`).
+            let lat = s.lat_ns.min(s.end - s.start);
+            start + w.eth_lat * lat + k * ((s.end - s.start) - lat)
         } else {
             start + k * (s.end - s.start)
         };
@@ -430,6 +476,46 @@ mod tests {
         // arm takes over (30 ns compute + 10 ns join).
         let w = WhatIf::parse("eth_bw=1000000x,dispatch=0").unwrap();
         assert!((retime(&g, &w).unwrap() - 40.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn eth_lat_scales_only_the_latency_portion() {
+        // Diamond with the eth arm's duration split: 80 ns total, of
+        // which 30 ns is fixed per-round link latency.
+        let mut g = diamond();
+        let e = g
+            .spans
+            .iter()
+            .position(|s| s.resource == Resource::Ethernet)
+            .unwrap();
+        g.spans[e].lat_ns = 30.0;
+
+        // Identity stays bit-exact with the split recorded.
+        assert_eq!(retime(&g, &WhatIf::identity()).unwrap(), g.wall_ns());
+
+        // Free latency removes exactly the 30 ns latency portion:
+        // 10 + (0 + 50) + 10.
+        let w = WhatIf::parse("eth_lat=0").unwrap();
+        assert_eq!(retime(&g, &w).unwrap(), 70.0);
+        // Halving latency removes 15 ns: 10 + (15 + 50) + 10.
+        let w = WhatIf::parse("eth_lat=2x").unwrap();
+        assert_eq!(retime(&g, &w).unwrap(), 85.0);
+        // Bandwidth now scales only the payload portion: 10 + (30 + 25)
+        // + 10 — not the 60 ns the unsplit span would predict.
+        let w = WhatIf::parse("eth_bw=2x").unwrap();
+        assert_eq!(retime(&g, &w).unwrap(), 75.0);
+        // Both knobs compose: 10 + (15 + 25) + 10.
+        let w = WhatIf::parse("eth_bw=2x,eth_lat=2x").unwrap();
+        assert_eq!(retime(&g, &w).unwrap(), 60.0);
+
+        // Grammar + identity accounting for the new knob.
+        assert_eq!(WhatIf::parse("eth_lat=4x").unwrap().eth_lat_scale(), 0.25);
+        assert_eq!(WhatIf::parse("eth_lat=0.5").unwrap().eth_lat_scale(), 0.5);
+        assert!(!WhatIf::parse("eth_lat=2x").unwrap().is_identity());
+        assert!(WhatIf::parse("eth_lat=1").unwrap().is_identity());
+        assert!(WhatIf::parse("eth_lat=2x").unwrap().describe().contains("eth_lat"));
+        assert!(WhatIf::parse("eth_lat=nope").is_err());
+        assert!(WhatIf::parse("eth_lat=-1").is_err());
     }
 
     #[test]

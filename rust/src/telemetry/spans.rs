@@ -50,6 +50,12 @@ pub struct Span {
     pub resource: Resource,
     pub start: SimNs,
     pub end: SimNs,
+    /// For [`Resource::Ethernet`] spans: the portion of the duration
+    /// that is fixed per-hop link latency rather than payload transfer
+    /// (`hops * link.latency_ns`, clamped to the span's duration). The
+    /// what-if re-timer scales this part with `eth_lat=` and the
+    /// remainder with `eth_bw=`. 0 for every other resource.
+    pub lat_ns: SimNs,
     /// Indices of gating predecessors; always < this span's own index,
     /// so span order is a topological order.
     pub preds: Vec<usize>,
@@ -83,6 +89,7 @@ impl SpanGraph {
                 resource: Resource::Idle,
                 start: t0,
                 end: t0,
+                lat_ns: 0.0,
                 preds: Vec::new(),
             }],
             t0,
@@ -178,6 +185,7 @@ impl SpanGraph {
             resource,
             start,
             end,
+            lat_ns: 0.0,
             preds,
         });
         id
@@ -205,7 +213,7 @@ impl SpanGraph {
             } else {
                 s.preds.iter().map(|&p| p + base).collect()
             };
-            self.push_raw(
+            let id = self.push_raw(
                 s.name.clone(),
                 component,
                 s.resource,
@@ -213,6 +221,7 @@ impl SpanGraph {
                 s.end + c,
                 preds,
             );
+            self.spans[id].lat_ns = s.lat_ns;
         }
         base + sub.sink.unwrap_or(ORIGIN)
     }
@@ -315,6 +324,7 @@ mod tests {
     fn append_anchored_shifts_and_rewires() {
         let mut sub = SpanGraph::new(0.0);
         let a = sub.span("work", "", Resource::Compute, 0.0, 7.0, &[]);
+        sub.spans[a].lat_ns = 2.0;
         sub.set_sink(a);
 
         let mut g = SpanGraph::new(0.0);
@@ -322,6 +332,7 @@ mod tests {
         let sink = g.append_anchored(&sub, launch, "spmv");
         assert_eq!(g.spans[sink].end, 10.0);
         assert_eq!(g.spans[sink].component, "spmv");
+        assert_eq!(g.spans[sink].lat_ns, 2.0, "lat split survives re-anchoring");
         g.set_sink(sink);
         g.validate().unwrap();
         assert_eq!(g.wall_ns(), 10.0);

@@ -427,7 +427,15 @@ pub fn execute_program_with(
             None => local_sim.insert(crate::device::EthSim::new()),
         };
         let t0 = eth_sim.transfers.len();
-        let phase_start = if eth.overlaps_local { start } else { end };
+        // An overlapping phase may have been *issued* `ether_lead_ns`
+        // before this program's device start (cross-iteration prefetch:
+        // the halo of iteration k+1 launched under iteration k's dot/axpy
+        // tail). The transfers run at their true early times — so a
+        // solve-scoped EthSim sees the wire busy during the previous
+        // iteration's tail — and only the part of the phase still
+        // draining past `start` stays exposed to this program's clock.
+        let lead = w.ether_lead_ns;
+        let phase_start = if eth.overlaps_local { start - lead } else { end };
         let phase_end = eth.run(eth_sim, phase_start);
         let dur = phase_end - phase_start;
         out.ether_ns = dur;
@@ -476,11 +484,24 @@ pub fn execute_program_with(
                 // max(interior_i, eth) + boundary_i and the program
                 // at the slowest core. Only the Ethernet *wait* is
                 // hidden — the iteration-level software pipeline.
-                let e_span = g.span(eth_name, "", Resource::Ethernet, phase_start, phase_end, &[]);
+                // With a prefetch lead the span is clipped to the program
+                // window: only the residual past `start` can gate anything
+                // here (the hidden part already ran under the previous
+                // program's clock). `e_end == phase_end` when lead = 0.
+                let e_end = phase_end.max(start);
+                let e_span = g.span(
+                    eth_name,
+                    "",
+                    Resource::Ethernet,
+                    phase_start.max(start),
+                    e_end,
+                    &[],
+                );
+                g.spans[e_span].lat_ns = eth.chain_latency_ns().min(g.spans[e_span].duration());
                 end_candidates = Vec::new();
                 end = (0..n)
                     .map(|i| {
-                        let begin = interior_done[i].max(phase_end);
+                        let begin = interior_done[i].max(e_end);
                         let done = begin + boundary_dur[i];
                         let mut preds = interior_pred[i].clone();
                         preds.push(e_span);
@@ -503,9 +524,22 @@ pub fn execute_program_with(
                 // complete before the seam data lands: the program
                 // takes whichever chain finishes later (the dual-die
                 // seam model, generalized).
-                let e_end = start + dur;
-                let mut preds =
-                    vec![g.span(eth_name, "", Resource::Ethernet, phase_start, e_end, &[])];
+                // Exposed residual: whatever of the phase has not drained
+                // by `start`. With lead = 0 this is `start + dur` exactly
+                // (`phase_start == start`); with a prefetch lead only the
+                // tail past `start` remains — never negative, so a longer
+                // lead never slows the program down.
+                let e_end = phase_end.max(start);
+                let e_span = g.span(
+                    eth_name,
+                    "",
+                    Resource::Ethernet,
+                    phase_start.max(start),
+                    e_end,
+                    &[],
+                );
+                g.spans[e_span].lat_ns = eth.chain_latency_ns().min(g.spans[e_span].duration());
+                let mut preds = vec![e_span];
                 let mut cur = e_end;
                 if out.riscv_ns > 0.0 {
                     let e = cur + out.riscv_ns;
@@ -519,7 +553,7 @@ pub fn execute_program_with(
                 }
                 end_candidates.extend(preds);
                 end = end.max(cur);
-                debug_assert_eq!(cur, start + dur + out.riscv_ns + out.compute_ns);
+                debug_assert_eq!(cur, phase_end.max(start) + out.riscv_ns + out.compute_ns);
             }
         } else {
             // Reductions combine per-die results: strictly after the
@@ -532,6 +566,7 @@ pub fn execute_program_with(
                 phase_end,
                 &end_candidates,
             );
+            g.spans[e_span].lat_ns = eth.chain_latency_ns().min(phase_end - phase_start);
             end_candidates = vec![e_span];
             end = phase_end;
         }
@@ -845,6 +880,89 @@ mod tests {
         let serial_reduce = execute_program(&with_serial, &cost, 0.0).unwrap();
         assert_eq!(piped_reduce.end, serial_reduce.end);
         assert!(piped_reduce.reduce_ns > 0.0);
+    }
+
+    #[test]
+    fn prefetch_lead_shrinks_the_exposed_seam_wait() {
+        use crate::device::{DeviceMesh, EthLink, MeshTopology};
+        use crate::telemetry::Resource;
+        use crate::ttm::program::{EtherPhase, OverlapMode};
+        let cost = CostModel::default();
+        let mesh = DeviceMesh::new(2, 1, 2, MeshTopology::Line, EthLink::default()).unwrap();
+        let phase = EtherPhase::halo("halo", &mesh, &[(0, 1, 4096), (1, 0, 4096)]).unwrap();
+        let eth_ns = phase.duration_ns();
+        // One round, one loaded link: the latency split is one hop's worth.
+        let lat_total = phase.chain_latency_ns();
+        assert_eq!(lat_total, mesh.link.latency_ns);
+
+        let mut p = Program::standard("seam");
+        p.work.grid = (1, 2);
+        p.work.riscv_cycles = vec![500, 500];
+        p.work.compute_cycles = vec![10_000, 10_000];
+        p.work.ether = Some(phase);
+        let riscv = crate::timing::cycles_ns(500);
+        let compute = crate::timing::cycles_ns(10_000);
+
+        // Lead 0 is the classic serial seam rule, bit-for-bit.
+        let base = execute_program(&p, &cost, 100.0).unwrap();
+        assert!((base.device_ns() - (eth_ns + riscv + compute)).abs() < 1e-6);
+        let eth_span = |o: &ProgramOutcome| {
+            o.spans
+                .spans
+                .iter()
+                .find(|s| s.resource == Resource::Ethernet)
+                .cloned()
+                .unwrap()
+        };
+        assert_eq!(eth_span(&base).lat_ns, lat_total);
+
+        // A partial lead shaves exactly that much off the exposed wait...
+        let lead = eth_ns / 2.0;
+        p.work.ether_lead_ns = lead;
+        let led = execute_program(&p, &cost, 100.0).unwrap();
+        assert!((led.device_ns() - (eth_ns - lead + riscv + compute)).abs() < 1e-6);
+        assert!(led.device_ns() < base.device_ns());
+        // ...while busy/byte accounting still carries the full phase and
+        // the transfers keep their true early times (the previous
+        // iteration's tail — how a solve-scoped EthSim sees them).
+        assert_eq!(led.ether_ns, base.ether_ns);
+        assert_eq!(led.eth_bytes, base.eth_bytes);
+        assert!(led.eth_transfers[0].start < led.start);
+        // The span graph clips the phase to the program window and stays
+        // exact: wall time == sink end − start, invariant intact.
+        led.spans.validate().unwrap();
+        assert!((led.spans.wall_ns() - led.device_ns()).abs() < 1e-9);
+        let es = eth_span(&led);
+        assert_eq!(es.start, led.start);
+        assert_eq!(es.lat_ns, es.duration(), "clipped span is all latency");
+
+        // A lead covering the whole phase hides the seam completely: the
+        // program times like the Ethernet-free local chain, never slower.
+        p.work.ether_lead_ns = eth_ns + 1_000.0;
+        let hidden = execute_program(&p, &cost, 100.0).unwrap();
+        assert!((hidden.device_ns() - (riscv + compute)).abs() < 1e-6);
+        assert!(hidden.device_ns() <= led.device_ns());
+        hidden.spans.validate().unwrap();
+
+        // Pipelined composes the same way: the boundary chain gates on
+        // the exposed residual, so a full lead reduces to the plain
+        // local chain (interior + boundary on each core's pipeline).
+        p.work.overlap = OverlapMode::Pipelined;
+        p.work.boundary_compute_cycles = vec![2_000, 2_000];
+        p.work.ether_lead_ns = 0.0;
+        let piped = execute_program(&p, &cost, 100.0).unwrap();
+        p.work.ether_lead_ns = eth_ns + 1_000.0;
+        let piped_hidden = execute_program(&p, &cost, 100.0).unwrap();
+        assert!((piped_hidden.device_ns() - (riscv + compute)).abs() < 1e-6);
+        assert!(piped_hidden.device_ns() <= piped.device_ns());
+        piped_hidden.spans.validate().unwrap();
+
+        // Offset invariance holds with a lead (negative absolute phase
+        // starts are fine — the scratch pre-execution runs there too).
+        p.work.ether_lead_ns = lead;
+        let at_zero = execute_program(&p, &cost, 0.0).unwrap();
+        let at_off = execute_program(&p, &cost, 123.0).unwrap();
+        assert!((at_zero.device_ns() - at_off.device_ns()).abs() < 1e-6);
     }
 
     #[test]

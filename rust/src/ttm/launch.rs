@@ -311,6 +311,23 @@ impl SolveSpans {
     }
 }
 
+/// A cross-component, cross-iteration dependency edge in an
+/// [`IterSchedule`]: the overlapping `EtherPhase` of component
+/// `phase_of`'s *next* dispatch may issue as soon as component
+/// `issue_at` begins its device window — the communication-avoiding
+/// prefetch (the halo of iteration k+1 launched under iteration k's
+/// tail). The edge is pure schedule data; the solver turns it into a
+/// `Workload::ether_lead_ns` via
+/// [`IterSchedule::prefetch_lead_ns`] and the executor's residual rule
+/// does the rest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CrossDep {
+    /// Component whose overlapping Ethernet phase issues early.
+    pub phase_of: String,
+    /// Component under whose device window the phase issues.
+    pub issue_at: String,
+}
+
 /// The launch schedule of an iterative solve, derived from its
 /// per-iteration component programs: the §7.1 split/fused distinction as
 /// data. `component` is the only way time advances across a component
@@ -326,6 +343,8 @@ pub struct IterSchedule {
     /// any prefix of an iteration (convergence/breakdown), never skip.
     cursor: std::cell::Cell<usize>,
     fused: Option<FusedProgram>,
+    /// Declared cross-iteration prefetch edges ([`CrossDep`]).
+    cross_deps: Vec<CrossDep>,
 }
 
 impl IterSchedule {
@@ -336,6 +355,7 @@ impl IterSchedule {
             iteration: iteration.iter().map(|s| s.to_string()).collect(),
             cursor: std::cell::Cell::new(0),
             fused: None,
+            cross_deps: Vec::new(),
         }
     }
 
@@ -355,11 +375,82 @@ impl IterSchedule {
             iteration: iteration.iter().map(|s| s.to_string()).collect(),
             cursor: std::cell::Cell::new(0),
             fused: Some(fused),
+            cross_deps: Vec::new(),
         })
     }
 
     pub fn is_fused(&self) -> bool {
         self.fused.is_some()
+    }
+
+    /// Declare a cross-iteration prefetch edge: `phase_of`'s overlapping
+    /// Ethernet phase issues once `issue_at`'s device window begins. Both
+    /// names must appear in the iteration sequence and differ.
+    pub fn with_cross_dep(mut self, phase_of: &str, issue_at: &str) -> crate::Result<Self> {
+        let has = |n: &str| self.iteration.iter().any(|c| c == n);
+        if !has(phase_of) || !has(issue_at) {
+            return Err(crate::SimError::Other(format!(
+                "cross dependency '{phase_of}' <- '{issue_at}': both components must be in the iteration sequence {:?}",
+                self.iteration
+            )));
+        }
+        if phase_of == issue_at {
+            return Err(crate::SimError::Other(format!(
+                "cross dependency on '{phase_of}' must span distinct components"
+            )));
+        }
+        self.cross_deps.push(CrossDep {
+            phase_of: phase_of.to_string(),
+            issue_at: issue_at.to_string(),
+        });
+        Ok(self)
+    }
+
+    /// Declared cross-iteration prefetch edges.
+    pub fn cross_deps(&self) -> &[CrossDep] {
+        &self.cross_deps
+    }
+
+    /// The prefetch window one [`CrossDep`] buys — the ns between
+    /// `issue_at`'s device start and `phase_of`'s next device start,
+    /// walking the cyclic iteration sequence from the occurrence of
+    /// `issue_at` closest before `phase_of`: every intervening
+    /// component's device time (`component_ns`, by name) plus the
+    /// dispatch charge each crossed component boundary pays (the §7.3
+    /// gap when fused, a host launch when split). This mirrors the
+    /// solver's own clock arithmetic, so a `Workload::ether_lead_ns` set
+    /// to this value is exactly "issued when `issue_at` started".
+    /// Readbacks between the two components are NOT counted — the
+    /// window understates, which only leaves more of the phase exposed
+    /// (never claims hiding the host could not have achieved).
+    pub fn prefetch_lead_ns(
+        &self,
+        dep: &CrossDep,
+        component_ns: &BTreeMap<String, SimNs>,
+        calib: &Calib,
+    ) -> SimNs {
+        let len = self.iteration.len();
+        let j = self
+            .iteration
+            .iter()
+            .position(|c| c == &dep.phase_of)
+            .expect("validated by with_cross_dep");
+        let i = (0..len)
+            .filter(|&i| self.iteration[i] == dep.issue_at)
+            .min_by_key(|&i| (j + len - i) % len)
+            .expect("validated by with_cross_dep");
+        let steps = (j + len - i) % len;
+        let per_dispatch = if self.fused.is_some() {
+            calib.inter_kernel_gap_ns
+        } else {
+            calib.kernel_launch_ns
+        };
+        let mut w = steps as f64 * per_dispatch;
+        for k in 0..steps {
+            let c = &self.iteration[(i + k) % len];
+            w += component_ns.get(c).copied().unwrap_or(0.0);
+        }
+        w
     }
 
     /// *Marginal* host enqueues per full iteration — the §7.1 accounting,
@@ -539,5 +630,68 @@ mod tests {
         assert!(fused.component(&mut q, &mut prof, "spmv", 5.0, now).is_err());
         // Readback is split-only.
         assert_eq!(fused.residual_readback(&mut q, 7.0), 7.0);
+    }
+
+    #[test]
+    fn cross_dep_lead_covers_the_tail_window() {
+        let calib = Calib::default();
+        let progs = || {
+            ["spmv", "dot", "axpy", "norm", "precond"]
+                .map(Program::standard)
+                .to_vec()
+        };
+        // The PCG iteration: "axpy" occurs three times; the edge must
+        // bind to the occurrence closest before the next "spmv".
+        let iteration = ["spmv", "dot", "axpy", "axpy", "norm", "precond", "dot", "axpy"];
+        let ns: BTreeMap<String, SimNs> = [
+            ("spmv", 100.0),
+            ("dot", 10.0),
+            ("axpy", 7.0),
+            ("norm", 5.0),
+            ("precond", 20.0),
+        ]
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), v))
+        .collect();
+
+        let sched = IterSchedule::split(progs(), &iteration)
+            .with_cross_dep("spmv", "axpy")
+            .unwrap();
+        let dep = sched.cross_deps()[0].clone();
+        // Split: the window is the final axpy's device time plus the one
+        // host launch paid at the axpy -> spmv boundary.
+        assert_eq!(
+            sched.prefetch_lead_ns(&dep, &ns, &calib),
+            7.0 + calib.kernel_launch_ns
+        );
+
+        // A longer edge sums every intervening component + boundary.
+        let sched2 = IterSchedule::split(progs(), &iteration)
+            .with_cross_dep("spmv", "precond")
+            .unwrap();
+        let dep2 = sched2.cross_deps()[0].clone();
+        assert_eq!(
+            sched2.prefetch_lead_ns(&dep2, &ns, &calib),
+            20.0 + 10.0 + 7.0 + 3.0 * calib.kernel_launch_ns
+        );
+
+        // Fused: each crossed boundary costs the device-side gap instead.
+        let fused = IterSchedule::fused("solve", progs(), &iteration, 1 << 20)
+            .unwrap()
+            .with_cross_dep("spmv", "axpy")
+            .unwrap();
+        let fdep = fused.cross_deps()[0].clone();
+        assert_eq!(
+            fused.prefetch_lead_ns(&fdep, &ns, &calib),
+            7.0 + calib.inter_kernel_gap_ns
+        );
+
+        // Unknown or self-referential edges are rejected.
+        assert!(IterSchedule::split(progs(), &iteration)
+            .with_cross_dep("spmv", "fft")
+            .is_err());
+        assert!(IterSchedule::split(progs(), &iteration)
+            .with_cross_dep("spmv", "spmv")
+            .is_err());
     }
 }

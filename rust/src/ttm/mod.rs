@@ -28,8 +28,8 @@ pub use exec::{
     execute_program, execute_program_with, stencil_tile_kernel, KernelStats, ProgramOutcome,
     TileHalos,
 };
-pub use launch::{HostQueue, IterSchedule, LaunchStats, SolveSpans};
+pub use launch::{CrossDep, HostQueue, IterSchedule, LaunchStats, SolveSpans};
 pub use program::{
     EthHop, EtherPhase, Footprint, FusedProgram, KernelRole, KernelSpec, NocSend, OverlapMode,
-    Program, ReduceSpec, SendQueue, Workload,
+    Program, ReduceSpec, Schedule, SendQueue, Workload,
 };

@@ -74,6 +74,79 @@ impl std::str::FromStr for OverlapMode {
     }
 }
 
+/// Which communication-avoiding iteration schedule the solver drives
+/// through its [`crate::ttm::IterSchedule`] (ROADMAP item 3; the knob
+/// that attacks the Ethernet terms the critical-path analyzer blamed for
+/// the strong-scaling knee):
+///
+/// - **Classic**: the paper's back-to-back component order — halo, two
+///   scalar all-reduces, every iteration.
+/// - **Prefetch**: iteration k+1's halo `EtherPhase` issues during
+///   iteration k's dot/axpy tail (a cross-*component* dependency edge,
+///   generalizing `OverlapMode::Pipelined`'s intra-component hiding).
+///   Values are bit-identical to Classic and the solve is never slower —
+///   both property-pinned.
+/// - **SStep(s)**: the s-step/pipelined-CG recurrence — one *combined*
+///   Gram all-reduce per block of s iterations instead of 2s scalar
+///   rounds, paying extra compute-bound axpy flops for the Ethernet
+///   latency term. Trajectories drift from Classic in higher-order
+///   rounding terms only (property-bounded, not bit-identical).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Schedule {
+    #[default]
+    Classic,
+    Prefetch,
+    SStep(usize),
+}
+
+impl Schedule {
+    pub fn label(self) -> String {
+        match self {
+            Schedule::Classic => "classic".to_string(),
+            Schedule::Prefetch => "prefetch".to_string(),
+            Schedule::SStep(s) => format!("sstep:{s}"),
+        }
+    }
+
+    /// Scalar all-reduce rounds the schedule pays per PCG iteration:
+    /// classic and prefetch keep Algorithm 1's three (dot, norm, dot);
+    /// s-step folds a block's worth into one combined round.
+    pub fn allreduce_rounds_per_iter(self) -> f64 {
+        match self {
+            Schedule::Classic | Schedule::Prefetch => 3.0,
+            Schedule::SStep(s) => 1.0 / s.max(1) as f64,
+        }
+    }
+}
+
+impl std::str::FromStr for Schedule {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        let lower = s.to_ascii_lowercase();
+        match lower.as_str() {
+            "classic" => Ok(Schedule::Classic),
+            "prefetch" => Ok(Schedule::Prefetch),
+            other => {
+                if let Some(step) = other.strip_prefix("sstep:") {
+                    let k: usize = step.parse().map_err(|_| {
+                        format!("bad s-step block size '{step}' in schedule '{s}'")
+                    })?;
+                    if !(2..=8).contains(&k) {
+                        return Err(format!(
+                            "s-step block size must be in 2..=8 (monomial-basis conditioning), got {k}"
+                        ));
+                    }
+                    Ok(Schedule::SStep(k))
+                } else {
+                    Err(format!(
+                        "unknown schedule '{s}' (expected classic|prefetch|sstep:<s>)"
+                    ))
+                }
+            }
+        }
+    }
+}
+
 /// Which baby RISC-V a kernel runs on (§3): the two NoC data-movement
 /// cores, or the compute cores collectively.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -337,6 +410,28 @@ impl EtherPhase {
         self.run(&mut EthSim::new(), 0.0)
     }
 
+    /// The latency-bound portion of [`duration_ns`](Self::duration_ns):
+    /// rounds are serial, so each pays at least one fixed per-hop link
+    /// latency on its busiest link (more when one round loads a link
+    /// twice — hops sharing a wire serialize and each pays its own
+    /// latency). This is the term the what-if `eth_lat=` knob scales,
+    /// separately from the payload term `eth_bw=` covers: scalar
+    /// all-reduces are almost pure latency, halo rounds mostly payload.
+    pub fn chain_latency_ns(&self) -> f64 {
+        self.rounds
+            .iter()
+            .map(|round| {
+                let mut per_link: std::collections::BTreeMap<(usize, usize), u64> =
+                    std::collections::BTreeMap::new();
+                for h in round {
+                    let key = (h.src_die.min(h.dst_die), h.src_die.max(h.dst_die));
+                    *per_link.entry(key).or_insert(0) += 1;
+                }
+                per_link.values().copied().max().unwrap_or(0) as f64 * self.link.latency_ns
+            })
+            .sum()
+    }
+
     /// Total bytes crossing Ethernet in one application of the phase.
     pub fn bytes(&self) -> u64 {
         self.rounds.iter().flatten().map(|h| h.bytes).sum()
@@ -376,6 +471,14 @@ pub struct Workload {
     pub reduce: Option<ReduceSpec>,
     /// Optional inter-die Ethernet phase (multi-die programs only).
     pub ether: Option<EtherPhase>,
+    /// How many ns before this program's device start its overlapping
+    /// `ether` phase was issued (the cross-iteration prefetch window: the
+    /// halo of iteration k+1 launched under iteration k's dot/axpy tail).
+    /// 0 = issued at program start (classic). Only meaningful for an
+    /// overlapping phase; the scheduler subtracts the already-elapsed
+    /// lead from the exposed seam wait, so a larger lead never slows the
+    /// program down.
+    pub ether_lead_ns: SimNs,
 }
 
 impl Default for Workload {
@@ -391,6 +494,7 @@ impl Default for Workload {
             overlap: OverlapMode::Serial,
             reduce: None,
             ether: None,
+            ether_lead_ns: 0.0,
         }
     }
 }
@@ -535,6 +639,20 @@ impl Program {
                     )));
                 }
             }
+        }
+        if !(self.work.ether_lead_ns >= 0.0 && self.work.ether_lead_ns.is_finite()) {
+            return Err(crate::SimError::Other(format!(
+                "program '{}': ether_lead_ns {} must be finite and non-negative",
+                self.name, self.work.ether_lead_ns
+            )));
+        }
+        if self.work.ether_lead_ns > 0.0
+            && !self.work.ether.as_ref().is_some_and(|e| e.overlaps_local)
+        {
+            return Err(crate::SimError::Other(format!(
+                "program '{}': ether_lead_ns set without an overlapping Ethernet phase to prefetch",
+                self.name
+            )));
         }
         Ok(())
     }
@@ -756,6 +874,59 @@ mod tests {
         assert!("both".parse::<OverlapMode>().is_err());
         assert_eq!(OverlapMode::default(), OverlapMode::Serial);
         assert_eq!(OverlapMode::Pipelined.label(), "pipelined");
+    }
+
+    #[test]
+    fn schedule_parse_labels_and_rounds() {
+        assert_eq!("classic".parse::<Schedule>().unwrap(), Schedule::Classic);
+        assert_eq!("Prefetch".parse::<Schedule>().unwrap(), Schedule::Prefetch);
+        assert_eq!("sstep:4".parse::<Schedule>().unwrap(), Schedule::SStep(4));
+        assert_eq!(Schedule::default(), Schedule::Classic);
+        assert_eq!(Schedule::SStep(8).label(), "sstep:8");
+        assert_eq!(Schedule::Prefetch.label(), "prefetch");
+        // Block sizes outside the conditioning-safe window are rejected,
+        // as is anything unparsable.
+        assert!("sstep:1".parse::<Schedule>().is_err());
+        assert!("sstep:9".parse::<Schedule>().is_err());
+        assert!("sstep:".parse::<Schedule>().is_err());
+        assert!("eager".parse::<Schedule>().is_err());
+        // Classic and prefetch keep Algorithm 1's three all-reduces per
+        // iteration; sstep amortizes one combined round over the block.
+        assert_eq!(Schedule::Classic.allreduce_rounds_per_iter(), 3.0);
+        assert_eq!(Schedule::Prefetch.allreduce_rounds_per_iter(), 3.0);
+        assert_eq!(Schedule::SStep(4).allreduce_rounds_per_iter(), 0.25);
+    }
+
+    #[test]
+    fn ether_lead_requires_an_overlapping_phase() {
+        let link = EthLink::default();
+        let overlapping = EtherPhase {
+            label: "halo".to_string(),
+            n_dies: 2,
+            link,
+            rounds: vec![vec![EthHop { src_die: 0, dst_die: 1, bytes: 64 }]],
+            overlaps_local: true,
+        };
+        let mut p = Program::standard("spmv");
+        p.work.ether = Some(overlapping.clone());
+        p.work.ether_lead_ns = 500.0;
+        p.validate().unwrap();
+        // Lead time on a phase that strictly follows the local work makes
+        // no sense: there is nothing to issue early against.
+        let mut appended = overlapping;
+        appended.overlaps_local = false;
+        p.work.ether = Some(appended);
+        assert!(p.validate().is_err());
+        // Neither does a lead without any Ethernet phase at all, or a
+        // negative / non-finite lead.
+        p.work.ether = None;
+        assert!(p.validate().is_err());
+        p.work.ether_lead_ns = 0.0;
+        p.validate().unwrap();
+        p.work.ether_lead_ns = -1.0;
+        assert!(p.validate().is_err());
+        p.work.ether_lead_ns = f64::NAN;
+        assert!(p.validate().is_err());
     }
 
     #[test]
