@@ -12,6 +12,7 @@
 //!
 //!     cargo run --release --example mesh_scaling [-- --small] [-- --overlap serial|pipelined]
 //!                                                [-- --schedule classic|prefetch|sstep:<s>]
+//!                                                [-- --topology line|ring|torus:RxC|torus]
 //!
 //! `--small` shrinks the per-die sub-grid and the sweep (CI-friendly);
 //! `--overlap pipelined` runs the interior/boundary split schedule that
@@ -19,7 +20,10 @@
 //! clock faster); `--schedule prefetch` additionally issues the next
 //! iteration's halo during this iteration's dot/axpy tail (still
 //! bit-identical values), and `--schedule sstep:<s>` batches the scalar
-//! all-reduces into one combined round every s iterations.
+//! all-reduces into one combined round every s iterations. `--topology`
+//! rewires the dies: a fixed `torus:RxC` shape must match every swept die
+//! count, so the sweep-friendly spelling is bare `torus`, which picks the
+//! most-square factoring per N ([`MeshTopology::torus_for`]).
 
 use wormsim::arch::DataFormat;
 use wormsim::device::{DeviceMesh, EthLink, MeshTopology};
@@ -49,6 +53,23 @@ fn main() -> anyhow::Result<()> {
             .map_err(anyhow::Error::msg)?,
         None => Schedule::Classic,
     };
+    // `--topology torus` (bare) re-shapes per swept N via `torus_for`;
+    // a fixed shape or line/ring applies to every N as-is.
+    let topology_arg: Option<String> = match args.iter().position(|a| a == "--topology") {
+        Some(idx) => Some(
+            args.get(idx + 1)
+                .ok_or_else(|| anyhow::anyhow!("--topology expects line|ring|torus:RxC|torus"))?
+                .clone(),
+        ),
+        None => None,
+    };
+    let topology_for = |n: usize| -> anyhow::Result<MeshTopology> {
+        match topology_arg.as_deref() {
+            None => Ok(MeshTopology::Line),
+            Some("torus") => Ok(MeshTopology::torus_for(n)),
+            Some(s) => s.parse().map_err(anyhow::Error::msg),
+        }
+    };
     // Total tiles per core at N=1; must divide by every swept N.
     let (rows, cols, total_tiles, sweep): (usize, usize, usize, &[usize]) = if small {
         (2, 2, 16, &[1, 2, 4, 8])
@@ -59,13 +80,15 @@ fn main() -> anyhow::Result<()> {
     let cost = CostModel::default();
     let elems = rows * cols * total_tiles * 1024;
     println!(
-        "=== mesh strong scaling: {elems} unknowns, per-die {rows}x{cols} cores, line topology, {} overlap, {} schedule ===\n",
+        "=== mesh strong scaling: {elems} unknowns, per-die {rows}x{cols} cores, {} topology, {} overlap, {} schedule ===\n",
+        topology_arg.as_deref().unwrap_or("line"),
         overlap.label(),
         schedule.label()
     );
     println!(
-        "{:>5} {:>6} {:>11} {:>12} {:>9} {:>12} {:>12} {:>12} {:>12} {:>10}",
+        "{:>5} {:>10} {:>6} {:>11} {:>12} {:>9} {:>12} {:>12} {:>12} {:>12} {:>10}",
         "dies",
+        "topology",
         "cores",
         "tiles/core",
         "time/iter",
@@ -80,7 +103,8 @@ fn main() -> anyhow::Result<()> {
     let mut base: Option<f64> = None;
     for &n in sweep {
         let tiles = total_tiles / n;
-        let mesh = DeviceMesh::new(n, rows, cols, MeshTopology::Line, EthLink::for_dies(n))
+        let topology = topology_for(n)?;
+        let mesh = DeviceMesh::new(n, rows, cols, topology, EthLink::for_dies(n))
             .map_err(anyhow::Error::msg)?;
         let cfg = StencilConfig {
             df: DataFormat::Bf16,
@@ -109,9 +133,11 @@ fn main() -> anyhow::Result<()> {
             &mut prof,
         )?;
         let b0 = *base.get_or_insert(res.per_iter_ns);
+        let topo_label = topology.label();
         println!(
-            "{:>5} {:>6} {:>11} {:>12} {:>8.2}x {:>12} {:>12} {:>12} {:>12} {:>9.0}%",
+            "{:>5} {:>10} {:>6} {:>11} {:>12} {:>8.2}x {:>12} {:>12} {:>12} {:>12} {:>9.0}%",
             n,
+            topo_label,
             mesh.n_cores(),
             tiles,
             fmt_ns(res.per_iter_ns),

@@ -3,10 +3,10 @@
 //! fused-vs-split sparse PCG with its scheduler-derived enqueues/iteration
 //! (§7.1 launch accounting), and the N-die mesh strong-scaling sweep.
 //!
-//! The sweep emits one CSV row per (overlap mode, schedule, die count)
-//! on stdout (prefix `mesh_scaling,`) with the columns:
+//! The sweep emits one CSV row per (overlap mode, schedule, topology,
+//! die count) on stdout (prefix `mesh_scaling,`) with the columns:
 //!
-//!   overlap, schedule, n_dies, cores, tiles_per_core, iter_ns,
+//!   overlap, schedule, topology, n_dies, cores, tiles_per_core, iter_ns,
 //!   compute_ns, noc_ns, eth_ns, dispatch_ns, eth_bytes_per_iter,
 //!   allreduce_rounds_per_iter, launches_per_iter, peak_link_util,
 //!   crit_eth_frac, crit_dispatch_frac
@@ -161,39 +161,45 @@ fn main() {
 }
 
 /// Strong-scaling sweep over the die mesh: fixed element count, every die
-/// a full 8×7 sub-grid with 1/N of the z-tiles (x-stacked seams), run
-/// once per (overlap, schedule) configuration. Rows go to stdout in the
-/// CSV shape documented in the header comment; the summary reports where
-/// each configuration's scaling knee sits and how far the pipelined
-/// overlap and the communication-avoiding schedules moved it.
+/// a full 8×7 sub-grid with 1/N of the z-tiles, run once per (overlap,
+/// schedule, topology) configuration — the four historical line configs
+/// plus the most-square 2D torus at the bracketing (serial, classic) and
+/// (pipelined, sstep:4) points. Rows go to stdout in the CSV shape
+/// documented in the header comment; the summary reports where each
+/// configuration's scaling knee sits and how far the pipelined overlap,
+/// the communication-avoiding schedules, and the 2D torus moved it.
 fn mesh_scaling_sweep() {
     use wormsim::solver::{MeshOptions, OverlapMode, Schedule};
     let (rows, cols, total_tiles) = (8usize, 7usize, 64usize);
     let cost = CostModel::default();
     let engine = wormsim::engine::NativeEngine::new();
     println!(
-        "mesh strong scaling ({} unknowns, per-die {rows}x{cols} cores, line topology):",
+        "mesh strong scaling ({} unknowns, per-die {rows}x{cols} cores):",
         rows * cols * total_tiles * 1024
     );
     println!(
-        "mesh_scaling,overlap,schedule,n_dies,cores,tiles_per_core,iter_ns,compute_ns,noc_ns,eth_ns,dispatch_ns,eth_bytes_per_iter,allreduce_rounds_per_iter,launches_per_iter,peak_link_util,crit_eth_frac,crit_dispatch_frac"
+        "mesh_scaling,overlap,schedule,topology,n_dies,cores,tiles_per_core,iter_ns,compute_ns,noc_ns,eth_ns,dispatch_ns,eth_bytes_per_iter,allreduce_rounds_per_iter,launches_per_iter,peak_link_util,crit_eth_frac,crit_dispatch_frac"
     );
     let configs = [
-        (OverlapMode::Serial, Schedule::Classic),
-        (OverlapMode::Pipelined, Schedule::Classic),
-        (OverlapMode::Pipelined, Schedule::Prefetch),
-        (OverlapMode::Pipelined, Schedule::SStep(4)),
+        (OverlapMode::Serial, Schedule::Classic, false),
+        (OverlapMode::Pipelined, Schedule::Classic, false),
+        (OverlapMode::Pipelined, Schedule::Prefetch, false),
+        (OverlapMode::Pipelined, Schedule::SStep(4), false),
+        (OverlapMode::Serial, Schedule::Classic, true),
+        (OverlapMode::Pipelined, Schedule::SStep(4), true),
     ];
     // Per config and die count: (n, per_iter_ns, eth_ns_per_iter,
     // eth_bytes_per_iter, crit_eth_frac).
     let mut per_cfg: Vec<Vec<(usize, f64, f64, f64, f64)>> = Vec::new();
     let mut knees: Vec<(String, usize, f64)> = Vec::new();
-    for (overlap, schedule) in configs {
+    for (overlap, schedule, torus) in configs {
         let mut times: Vec<(usize, f64, f64, f64, f64)> = Vec::new();
         for n in [1usize, 2, 4, 8, 16, 32] {
             let tiles = total_tiles / n;
+            let topology =
+                if torus { MeshTopology::torus_for(n) } else { MeshTopology::Line };
             let mesh =
-                DeviceMesh::new(n, rows, cols, MeshTopology::Line, EthLink::for_dies(n)).unwrap();
+                DeviceMesh::new(n, rows, cols, topology, EthLink::for_dies(n)).unwrap();
             let cfg = StencilConfig {
                 df: DataFormat::Bf16,
                 unit: wormsim::arch::ComputeUnit::Fpu,
@@ -226,9 +232,10 @@ fn mesh_scaling_sweep() {
             let (crit_eth, crit_dispatch) = res.crit_fracs();
             let eth_bytes_per_iter = res.eth_bytes_total as f64 / res.iters.max(1) as f64;
             println!(
-                "mesh_scaling,{},{},{n},{},{tiles},{:.1},{:.1},{:.1},{:.1},{:.1},{:.1},{:.2},{:.2},{:.3},{:.3},{:.3}",
+                "mesh_scaling,{},{},{},{n},{},{tiles},{:.1},{:.1},{:.1},{:.1},{:.1},{:.1},{:.2},{:.2},{:.3},{:.3},{:.3}",
                 overlap.label(),
                 schedule.label(),
+                topology.label(),
                 mesh.n_cores(),
                 res.per_iter_ns,
                 res.phases.compute_ns,
@@ -250,7 +257,12 @@ fn mesh_scaling_sweep() {
         // (N=2 keeps the on-board link; N≥4 switches to backplane
         // presets, where the ordering is a model outcome, not an
         // invariant).
-        let label = format!("{}/{}", overlap.label(), schedule.label());
+        let label = format!(
+            "{}/{}/{}",
+            overlap.label(),
+            schedule.label(),
+            if torus { "torus" } else { "line" }
+        );
         assert!(times[1].1 < times[0].1, "{label}: 2 dies must beat 1");
         let best = times
             .iter()
@@ -295,13 +307,39 @@ fn mesh_scaling_sweep() {
         s32.4,
         c32.4
     );
+    // The 2D torus attacks the same binding term by wiring instead of by
+    // schedule: the row-phase + column-phase all-reduce cuts the round
+    // count from O(N) to O(√N) per phase, so at the far end of the sweep
+    // the serial/classic critical path must be far less Ethernet-bound
+    // than the 1D line's — and its knee can only move out, not in.
+    let (torus_classic, torus_sstep) = (&per_cfg[4], &per_cfg[5]);
+    let t32 = torus_classic.last().unwrap();
+    let l32 = serial_classic.last().unwrap();
+    assert!(
+        t32.4 < 0.5 * l32.4,
+        "torus crit_eth_frac at 32 dies not halved vs line: {} vs {}",
+        t32.4,
+        l32.4
+    );
+    assert!(
+        knees[4].1 >= knees[0].1,
+        "torus knee at {} dies regressed vs line at {}",
+        knees[4].1,
+        knees[0].1
+    );
+    // Stacking both levers (torus wiring + s-step schedule) is never more
+    // Ethernet-bound at 32 dies than either lever alone.
+    let ts32 = torus_sstep.last().unwrap();
+    assert!(ts32.4 <= t32.4 + 1e-9, "torus+sstep worse than torus: {} vs {}", ts32.4, t32.4);
     for (label, n, t) in &knees {
         println!("scaling knee [{label}]: best at {n} dies ({:.1} us/iter)", t / 1e3);
     }
     println!(
         "knee shift: serial/classic best at {} dies -> pipelined/sstep:4 best at {} dies; \
          sstep cuts crit_eth_frac at 32 dies from {:.3} to {:.3} (one combined all-reduce \
-         round per 4 iterations instead of 3 rounds per iteration)",
-        knees[0].1, sstep_knee, c32.4, s32.4
+         round per 4 iterations instead of 3 rounds per iteration); the 4x8 torus cuts \
+         serial/classic crit_eth_frac at 32 dies from {:.3} to {:.3} by wiring alone \
+         (row+column all-reduce phases, O(sqrt N) rounds each)",
+        knees[0].1, sstep_knee, c32.4, s32.4, l32.4, t32.4
     );
 }

@@ -5,8 +5,9 @@
 //! (backplane links). This module is the device-layer model of that
 //! fabric: [`EthLink`] (the typed link and its transfer cost — formerly a
 //! solver-private detail of `solver::dualdie`), [`MeshTopology`]
-//! (line/ring), [`DeviceMesh`] — N identical die sub-grids stacked
-//! along x, with link-path lookup and per-die SRAM/DRAM budget checks —
+//! (line/ring/2D torus), [`DeviceMesh`] — N identical die sub-grids
+//! tiled over a rectangular die grid (a 1D topology is the Rx1 column),
+//! with link-path lookup and per-die SRAM/DRAM budget checks —
 //! and [`EthSim`], the per-link occupancy tracker (the inter-die
 //! counterpart of [`crate::noc::NocSim`]) through which the scheduler
 //! times every Ethernet hop, so concurrent transfers sharing a physical
@@ -205,13 +206,43 @@ pub enum MeshTopology {
     /// A chain closed into a ring (Galaxy-style): die N−1 links back to
     /// die 0, halving worst-case path lengths.
     Ring,
+    /// A 2D torus of `rows × cols` dies — the physical Galaxy wiring
+    /// (4×8). Each die links to its four grid neighbours, with a wrap
+    /// link closing every row (when `cols > 2`) and every column (when
+    /// `rows > 2`), exactly as each 1D `Ring` closes its chain. Paths
+    /// are dimension-ordered (row dimension, then column dimension),
+    /// and each dimension independently picks direct-vs-wrap by hop
+    /// count — the off-die analogue of the on-die NOC0/NOC1 choice in
+    /// [`crate::noc::route`], where the NoC is itself a pair of
+    /// unidirectional 2D torus networks and directional route selection
+    /// changes hop counts ~2×.
+    Torus2D { rows: usize, cols: usize },
 }
 
 impl MeshTopology {
-    pub fn label(self) -> &'static str {
+    pub fn label(self) -> String {
         match self {
-            MeshTopology::Line => "line",
-            MeshTopology::Ring => "ring",
+            MeshTopology::Line => "line".to_string(),
+            MeshTopology::Ring => "ring".to_string(),
+            MeshTopology::Torus2D { rows, cols } => format!("torus:{rows}x{cols}"),
+        }
+    }
+
+    /// The most-square torus factoring of `n_dies` (rows ≤ cols): the
+    /// per-N default when a sweep asks for "a torus" without fixing the
+    /// shape. 32 → 4×8 (the Galaxy wiring), 8 → 2×4, 4 → 2×2, 2 → 1×2.
+    pub fn torus_for(n_dies: usize) -> Self {
+        let mut rows = 1;
+        let mut d = 1;
+        while d * d <= n_dies {
+            if n_dies % d == 0 {
+                rows = d;
+            }
+            d += 1;
+        }
+        MeshTopology::Torus2D {
+            rows,
+            cols: n_dies / rows.max(1),
         }
     }
 }
@@ -219,18 +250,39 @@ impl MeshTopology {
 impl std::str::FromStr for MeshTopology {
     type Err = String;
     fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
-        match s.to_ascii_lowercase().as_str() {
+        let lower = s.to_ascii_lowercase();
+        if let Some(shape) = lower.strip_prefix("torus:") {
+            let (r, c) = shape
+                .split_once('x')
+                .ok_or_else(|| format!("torus topology wants a shape like 'torus:4x8', got '{s}'"))?;
+            let rows: usize = r
+                .parse()
+                .map_err(|_| format!("bad torus rows in '{s}'"))?;
+            let cols: usize = c
+                .parse()
+                .map_err(|_| format!("bad torus cols in '{s}'"))?;
+            if rows == 0 || cols == 0 {
+                return Err(format!("torus shape must be nonzero, got '{s}'"));
+            }
+            return Ok(MeshTopology::Torus2D { rows, cols });
+        }
+        match lower.as_str() {
             "line" | "chain" => Ok(MeshTopology::Line),
             "ring" => Ok(MeshTopology::Ring),
-            _ => Err(format!("unknown mesh topology '{s}' (expected line|ring)")),
+            _ => Err(format!(
+                "unknown mesh topology '{s}' (expected line|ring|torus:RxC)"
+            )),
         }
     }
 }
 
-/// N identical Tensix die sub-grids joined by Ethernet links. Dies stack
-/// the domain along x (die d owns logical core rows
-/// `[d·die_rows, (d+1)·die_rows)`), generalizing the n300 dual-die
-/// decomposition to arbitrary N.
+/// N identical Tensix die sub-grids joined by Ethernet links. Dies tile
+/// the logical core grid as a row-major die grid ([`Self::mesh_shape`]):
+/// die (r, c) owns logical core rows `[r·die_rows, (r+1)·die_rows)` ×
+/// columns `[c·die_cols, (c+1)·die_cols)`. A 1D topology is the N×1
+/// column — dies stack the domain along x, generalizing the n300
+/// dual-die decomposition to arbitrary N — and a 2D torus splits it
+/// along both axes (4-seam halos).
 #[derive(Debug, Clone, PartialEq)]
 pub struct DeviceMesh {
     pub n_dies: usize,
@@ -259,6 +311,16 @@ impl DeviceMesh {
             return Err(SimError::BadProblem {
                 what: format!("{n_dies} dies exceeds the {GALAXY_DIES}-die Galaxy ceiling"),
             });
+        }
+        if let MeshTopology::Torus2D { rows, cols } = topology {
+            if rows * cols != n_dies {
+                return Err(SimError::BadProblem {
+                    what: format!(
+                        "torus shape {rows}x{cols} covers {} dies but the mesh has {n_dies}",
+                        rows * cols
+                    ),
+                });
+            }
         }
         // Per-die sub-grid obeys the single-die rules (§7.2 ≤ 8×7).
         let _ = TensixGrid::new(die_rows, die_cols)?;
@@ -292,6 +354,19 @@ impl DeviceMesh {
         )
     }
 
+    /// Thirty-two dies on the physical Galaxy backplane wiring: a 4×8
+    /// 2D torus (each die links to four neighbours, every row and
+    /// column closed by a wrap link).
+    pub fn galaxy_torus(die_rows: usize, die_cols: usize) -> Result<Self> {
+        Self::new(
+            GALAXY_DIES,
+            die_rows,
+            die_cols,
+            MeshTopology::Torus2D { rows: 4, cols: 8 },
+            EthLink::backplane(),
+        )
+    }
+
     pub fn cores_per_die(&self) -> usize {
         self.die_rows * self.die_cols
     }
@@ -300,9 +375,38 @@ impl DeviceMesh {
         self.n_dies * self.cores_per_die()
     }
 
-    /// Logical core-grid rows across the whole mesh (x-stacked dies).
+    /// The die grid shape as (mesh_rows, mesh_cols). 1D topologies are
+    /// the N×1 column — dies stack the domain along x exactly as before.
+    pub fn mesh_shape(&self) -> (usize, usize) {
+        match self.topology {
+            MeshTopology::Torus2D { rows, cols } => (rows, cols),
+            _ => (self.n_dies, 1),
+        }
+    }
+
+    /// Die-grid coordinate of a die id (dies are row-major over the die
+    /// grid).
+    pub fn die_coord(&self, die: usize) -> (usize, usize) {
+        let (_, cols) = self.mesh_shape();
+        (die / cols, die % cols)
+    }
+
+    /// Die id at a die-grid coordinate.
+    pub fn die_at(&self, r: usize, c: usize) -> usize {
+        let (_, cols) = self.mesh_shape();
+        r * cols + c
+    }
+
+    /// Logical core-grid rows across the whole mesh (die-grid rows ×
+    /// per-die rows; a 1D mesh x-stacks its dies as before).
     pub fn logical_rows(&self) -> usize {
-        self.n_dies * self.die_rows
+        self.mesh_shape().0 * self.die_rows
+    }
+
+    /// Logical core-grid columns across the whole mesh (die-grid cols ×
+    /// per-die cols; `die_cols` on any 1D mesh).
+    pub fn logical_cols(&self) -> usize {
+        self.mesh_shape().1 * self.die_cols
     }
 
     /// The per-die compute sub-grid (identical for every die).
@@ -312,11 +416,45 @@ impl DeviceMesh {
 
     /// Die owning a logical (mesh-wide, row-major) core index.
     pub fn die_of_core(&self, core: usize) -> usize {
-        (core / self.die_cols) / self.die_rows
+        let row = core / self.logical_cols();
+        let col = core % self.logical_cols();
+        self.die_at(row / self.die_rows, col / self.die_cols)
     }
 
-    /// The undirected links of the topology, as (lower, higher) die pairs.
+    /// The undirected links of the topology, as (lower, higher) die
+    /// pairs, sorted. Line/Ring keep the chain (+ wrap); a torus links
+    /// each die to its four grid neighbours and closes each row/column
+    /// with a wrap link when that dimension is longer than 2 (a 2-long
+    /// dimension's "wrap" would duplicate the direct link, exactly as a
+    /// 2-die `Ring` degenerates to the line).
     pub fn links(&self) -> Vec<(usize, usize)> {
+        if let MeshTopology::Torus2D { rows, cols } = self.topology {
+            let mut out: Vec<(usize, usize)> = Vec::new();
+            for r in 0..rows {
+                for c in 0..cols {
+                    let d = self.die_at(r, c);
+                    if c + 1 < cols {
+                        out.push((d, self.die_at(r, c + 1)));
+                    }
+                    if r + 1 < rows {
+                        out.push((d, self.die_at(r + 1, c)));
+                    }
+                }
+            }
+            if cols > 2 {
+                for r in 0..rows {
+                    out.push((self.die_at(r, 0), self.die_at(r, cols - 1)));
+                }
+            }
+            if rows > 2 {
+                for c in 0..cols {
+                    out.push((self.die_at(0, c), self.die_at(rows - 1, c)));
+                }
+            }
+            out.sort_unstable();
+            out.dedup();
+            return out;
+        }
         let mut out: Vec<(usize, usize)> = (0..self.n_dies.saturating_sub(1)).map(|d| (d, d + 1)).collect();
         if self.topology == MeshTopology::Ring && self.n_dies > 2 {
             out.push((0, self.n_dies - 1));
@@ -331,11 +469,37 @@ impl DeviceMesh {
 
     /// Link-path lookup: the undirected links a transfer from die `a` to
     /// die `b` traverses, in order. On a line this is the straight chain;
-    /// on a ring, the shorter arc (ties go through the chain).
+    /// on a ring, the shorter arc (ties go through the chain). On a
+    /// torus the route is dimension-ordered — all row-dimension hops
+    /// first, then all column-dimension hops, the off-die mirror of the
+    /// on-die X-then-Y `noc::route::xy_route` — and each dimension
+    /// independently takes its shorter arc (direct vs wrap, ties
+    /// direct), the NOC0-vs-NOC1 directional choice applied per
+    /// dimension.
     pub fn path(&self, a: usize, b: usize) -> Vec<(usize, usize)> {
         assert!(a < self.n_dies && b < self.n_dies, "die index out of range");
         if a == b {
             return Vec::new();
+        }
+        if let MeshTopology::Torus2D { rows, cols } = self.topology {
+            let (ar, ac) = self.die_coord(a);
+            let (br, bc) = self.die_coord(b);
+            let mut hops = Vec::new();
+            // Row dimension first, at the source column.
+            let mut prev = ar;
+            for r in dim_steps(rows, ar, br) {
+                let (x, y) = (self.die_at(prev, ac), self.die_at(r, ac));
+                hops.push((x.min(y), x.max(y)));
+                prev = r;
+            }
+            // Then the column dimension, at the destination row.
+            let mut prev = ac;
+            for c in dim_steps(cols, ac, bc) {
+                let (x, y) = (self.die_at(br, prev), self.die_at(br, c));
+                hops.push((x.min(y), x.max(y)));
+                prev = c;
+            }
+            return hops;
         }
         let (lo, hi) = (a.min(b), a.max(b));
         let inner = hi - lo;
@@ -390,6 +554,28 @@ impl DeviceMesh {
         }
         Ok(())
     }
+}
+
+/// The coordinates visited (source excluded) walking one torus dimension
+/// of length `len` from `from` to `to`, stepping ±1 with wraparound.
+/// Takes the shorter arc; ties and 2-long dimensions go direct (no wrap
+/// link exists below length 3).
+fn dim_steps(len: usize, from: usize, to: usize) -> Vec<usize> {
+    if from == to {
+        return Vec::new();
+    }
+    let direct = from.abs_diff(to);
+    let wrap = len - direct;
+    let use_wrap = len > 2 && wrap < direct;
+    let step_down = (from > to) ^ use_wrap;
+    let count = if use_wrap { wrap } else { direct };
+    let mut cur = from;
+    (0..count)
+        .map(|_| {
+            cur = if step_down { (cur + len - 1) % len } else { (cur + 1) % len };
+            cur
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -462,6 +648,142 @@ mod tests {
         assert_eq!(m.die_of_core(m.cores_per_die() - 1), 0);
         assert_eq!(m.die_of_core(m.cores_per_die()), 1);
         assert_eq!(m.die_of_core(m.n_cores() - 1), 3);
+    }
+
+    #[test]
+    fn torus_parse_label_and_presets() {
+        let t: MeshTopology = "torus:4x8".parse().unwrap();
+        assert_eq!(t, MeshTopology::Torus2D { rows: 4, cols: 8 });
+        assert_eq!(t.label(), "torus:4x8");
+        // Bare "torus" is not a topology — shapes are explicit (sweeps
+        // that want a per-N default use `torus_for`).
+        assert!("torus".parse::<MeshTopology>().is_err());
+        assert!("torus:0x4".parse::<MeshTopology>().is_err());
+        assert!("torus:4".parse::<MeshTopology>().is_err());
+        assert_eq!(MeshTopology::torus_for(32), MeshTopology::Torus2D { rows: 4, cols: 8 });
+        assert_eq!(MeshTopology::torus_for(8), MeshTopology::Torus2D { rows: 2, cols: 4 });
+        assert_eq!(MeshTopology::torus_for(4), MeshTopology::Torus2D { rows: 2, cols: 2 });
+        assert_eq!(MeshTopology::torus_for(2), MeshTopology::Torus2D { rows: 1, cols: 2 });
+        assert_eq!(MeshTopology::torus_for(1), MeshTopology::Torus2D { rows: 1, cols: 1 });
+
+        let g = DeviceMesh::galaxy_torus(8, 7).unwrap();
+        assert_eq!(g.n_dies, 32);
+        assert_eq!(g.mesh_shape(), (4, 8));
+        assert_eq!(g.link, EthLink::backplane());
+        // 4×8 torus: 28 row-direct + 24 col-direct + 4 row wraps + 8 col
+        // wraps.
+        assert_eq!(g.links().len(), 64);
+        // Shape must cover the die count exactly — a real error, not a
+        // panic.
+        assert!(DeviceMesh::new(
+            2,
+            1,
+            1,
+            MeshTopology::Torus2D { rows: 4, cols: 8 },
+            EthLink::default()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn torus_coords_and_logical_grid() {
+        let m = DeviceMesh::new(
+            8,
+            2,
+            3,
+            MeshTopology::Torus2D { rows: 2, cols: 4 },
+            EthLink::default(),
+        )
+        .unwrap();
+        assert_eq!(m.die_coord(0), (0, 0));
+        assert_eq!(m.die_coord(3), (0, 3));
+        assert_eq!(m.die_coord(5), (1, 1));
+        assert_eq!(m.die_at(1, 1), 5);
+        assert_eq!(m.logical_rows(), 4);
+        assert_eq!(m.logical_cols(), 12);
+        // Core (row 2, col 7) of the 4×12 logical grid sits on die (1, 2).
+        assert_eq!(m.die_of_core(2 * 12 + 7), m.die_at(1, 2));
+        // On 1D meshes the generalized mapping reproduces x-stacking.
+        let line = DeviceMesh::new(4, 2, 3, MeshTopology::Line, EthLink::default()).unwrap();
+        for core in 0..line.n_cores() {
+            assert_eq!(line.die_of_core(core), (core / 3) / 2);
+        }
+    }
+
+    #[test]
+    fn torus_paths_are_dimension_ordered_with_per_dim_wrap() {
+        let m = DeviceMesh::new(
+            32,
+            1,
+            1,
+            MeshTopology::Torus2D { rows: 4, cols: 8 },
+            EthLink::default(),
+        )
+        .unwrap();
+        // Same row: pure column-dimension route, wrap when shorter.
+        assert_eq!(m.path(0, 2), vec![(0, 1), (1, 2)]);
+        assert_eq!(m.path(0, 7), vec![(0, 7)]); // column wrap
+        // Same column: row-dimension route with the column wrap link.
+        assert_eq!(m.path(0, 24), vec![(0, 24)]); // row wrap (die (3,0))
+        // Mixed: row hops first (at the source column), then column
+        // hops (at the destination row).
+        assert_eq!(m.path(1, 10), vec![(1, 9), (9, 10)]);
+        // Worst case is (rows/2 + cols/2) hops, vs 16 on the 1D ring.
+        let mut worst = 0;
+        for a in 0..32 {
+            for b in 0..32 {
+                worst = worst.max(m.path_len(a, b));
+            }
+        }
+        assert_eq!(worst, 4 / 2 + 8 / 2);
+        // Every hop in every path is a physical link.
+        let links = m.links();
+        for a in 0..32 {
+            for b in 0..32 {
+                for hop in m.path(a, b) {
+                    assert!(links.contains(&hop), "path {a}->{b} uses non-link {hop:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_torus_matches_ring_wiring() {
+        // An N×1 (or 1×N) torus is exactly the N-die ring: same links,
+        // same paths.
+        for n in [2usize, 5, 8] {
+            let ring = DeviceMesh::new(n, 1, 1, MeshTopology::Ring, EthLink::default()).unwrap();
+            let col = DeviceMesh::new(
+                n,
+                1,
+                1,
+                MeshTopology::Torus2D { rows: n, cols: 1 },
+                EthLink::default(),
+            )
+            .unwrap();
+            let row = DeviceMesh::new(
+                n,
+                1,
+                1,
+                MeshTopology::Torus2D { rows: 1, cols: n },
+                EthLink::default(),
+            )
+            .unwrap();
+            let sorted = |mut v: Vec<(usize, usize)>| {
+                v.sort_unstable();
+                v
+            };
+            assert_eq!(col.links(), sorted(ring.links()), "N={n} column torus");
+            assert_eq!(row.links(), sorted(ring.links()), "N={n} row torus");
+            // Paths traverse the same link sets (hop order within a path
+            // only feeds order-insensitive per-link accumulation).
+            for a in 0..n {
+                for b in 0..n {
+                    assert_eq!(sorted(col.path(a, b)), sorted(ring.path(a, b)), "N={n} {a}->{b}");
+                    assert_eq!(sorted(row.path(a, b)), sorted(ring.path(a, b)), "N={n} {a}->{b}");
+                }
+            }
+        }
     }
 
     #[test]

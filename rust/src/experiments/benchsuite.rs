@@ -34,9 +34,12 @@ const PROVENANCE: &str = "simulated (wormsim cost model); regenerate with `worms
 
 /// The N-die strong-scaling PCG sweep (the `bench_pcg` mesh sweep as
 /// data): fixed element count, per-die 8×7 cores, 64 total z-tiles split
-/// across dies, fused BF16, over (overlap, schedule) configurations —
-/// serial/pipelined classic plus the communication-avoiding prefetch and
-/// sstep:4 schedules under pipelined overlap.
+/// across dies, fused BF16, over (overlap, schedule, topology)
+/// configurations — serial/pipelined classic plus the
+/// communication-avoiding prefetch and sstep:4 schedules under pipelined
+/// overlap on the 1D line, and the most-square 2D torus
+/// ([`MeshTopology::torus_for`]) for the bracketing (serial, classic)
+/// and (pipelined, sstep:4) configs — the knee-vs-fix comparison.
 pub fn pcg_snapshot(smoke: bool) -> crate::Result<BenchSnapshot> {
     let (rows, cols, total_tiles) = (8usize, 7usize, 64usize);
     let dies: &[usize] = if smoke { &[1, 2, 4] } else { &[1, 2, 4, 8, 16, 32] };
@@ -44,7 +47,9 @@ pub fn pcg_snapshot(smoke: bool) -> crate::Result<BenchSnapshot> {
     s.meta("provenance", PROVENANCE);
     s.meta(
         "config",
-        "strong scaling: per-die 8x7 cores, 64 total z-tiles split across dies, line topology",
+        "strong scaling: per-die 8x7 cores, 64 total z-tiles split across dies; \
+         line topology for all four (overlap, schedule) configs, torus_for(N) for \
+         (serial, classic) and (pipelined, sstep:4)",
     );
     s.meta("variant", "bf16-fused");
     s.meta("max_iters", "2 (sstep: one block of s)");
@@ -52,16 +57,19 @@ pub fn pcg_snapshot(smoke: bool) -> crate::Result<BenchSnapshot> {
     let cost = CostModel::default();
     let engine = NativeEngine::new();
     let configs = [
-        (OverlapMode::Serial, Schedule::Classic),
-        (OverlapMode::Pipelined, Schedule::Classic),
-        (OverlapMode::Pipelined, Schedule::Prefetch),
-        (OverlapMode::Pipelined, Schedule::SStep(4)),
+        (OverlapMode::Serial, Schedule::Classic, false),
+        (OverlapMode::Pipelined, Schedule::Classic, false),
+        (OverlapMode::Pipelined, Schedule::Prefetch, false),
+        (OverlapMode::Pipelined, Schedule::SStep(4), false),
+        (OverlapMode::Serial, Schedule::Classic, true),
+        (OverlapMode::Pipelined, Schedule::SStep(4), true),
     ];
-    for (overlap, schedule) in configs {
+    for (overlap, schedule, torus) in configs {
         for &n in dies {
             let tiles = total_tiles / n;
-            let mesh =
-                DeviceMesh::new(n, rows, cols, MeshTopology::Line, EthLink::for_dies(n))?;
+            let topology =
+                if torus { MeshTopology::torus_for(n) } else { MeshTopology::Line };
+            let mesh = DeviceMesh::new(n, rows, cols, topology, EthLink::for_dies(n))?;
             let cfg = StencilConfig {
                 df: DataFormat::Bf16,
                 unit: ComputeUnit::Fpu,
@@ -88,8 +96,10 @@ pub fn pcg_snapshot(smoke: bool) -> crate::Result<BenchSnapshot> {
             )?;
             let nstr = n.to_string();
             let sched_label = schedule.label();
+            let topo_label = topology.label();
             let labels = [
                 ("dies", nstr.as_str()),
+                ("topology", topo_label.as_str()),
                 ("overlap", overlap.label()),
                 ("schedule", sched_label.as_str()),
             ];
@@ -110,6 +120,18 @@ pub fn pcg_snapshot(smoke: bool) -> crate::Result<BenchSnapshot> {
                 "allreduce_rounds_per_iter",
                 &labels,
                 res.allreduce_rounds_per_iter(),
+                "count",
+                Better::Lower,
+            );
+            // Round depth of ONE scalar all-reduce on this wiring — the
+            // topology lever in isolation (line O(N) chain, ring both-ways
+            // fold + broadcast, torus row-phase + column-phase O(√N)).
+            let eth_rounds = crate::ttm::EtherPhase::scalar_allreduce(&mesh)
+                .map_or(0, |e| e.rounds.len());
+            s.push(
+                "eth_rounds_per_allreduce",
+                &labels,
+                eth_rounds as f64,
                 "count",
                 Better::Lower,
             );

@@ -21,6 +21,6 @@ pub use eltwise::{block_op_ns, eltwise_stream_timing, lower_block_op, lower_eltw
 pub use reduction::{lower_dot, lower_dot_as, run_dot, DotConfig, DotMethod, DotOutcome};
 pub use spmv::{run_spmv, SpmvConfig, SpmvMode, SpmvOperator, SpmvTiming, SpmvTraffic};
 pub use stencil::{
-    boundary_tile_cycles, lower_stencil, lower_stencil_die, run_stencil, StencilConfig,
-    StencilTiming, StencilVariant,
+    boundary_tile_cycles, boundary_tile_cycles_ew, lower_stencil, lower_stencil_die, run_stencil,
+    StencilConfig, StencilTiming, StencilVariant,
 };

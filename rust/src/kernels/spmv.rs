@@ -433,7 +433,7 @@ impl SpmvOperator {
         mesh: &crate::device::DeviceMesh,
         cost: &CostModel,
     ) -> Result<Vec<Program>> {
-        if self.part.grid_rows != mesh.logical_rows() || self.part.grid_cols != mesh.die_cols {
+        if self.part.grid_rows != mesh.logical_rows() || self.part.grid_cols != mesh.logical_cols() {
             return Err(SimError::BadProblem {
                 what: format!(
                     "partition {}x{} does not span a {}-die mesh of {}x{} dies",
@@ -446,13 +446,28 @@ impl SpmvOperator {
             });
         }
         let df = self.cfg.df;
-        let cut = self.part.die_cut(&self.gather, mesh.n_dies, df)?;
+        let (mesh_rows, mesh_cols) = mesh.mesh_shape();
+        let cut = self.part.die_cut_grid(&self.gather, mesh_rows, mesh_cols, df)?;
         let ether = crate::ttm::EtherPhase::halo("spmv-cut", mesh, &cut.flows());
         let cores_per_die = mesh.cores_per_die();
-        let die_of = |core: usize| core / cores_per_die;
+        let die_of = |core: usize| mesh.die_of_core(core);
         let local_coord = |core: usize| {
             let c = self.part.core_coord(core);
-            crate::device::Coord::new(c.row - die_of(core) * mesh.die_rows, c.col)
+            let (dr, dc) = mesh.die_coord(die_of(core));
+            crate::device::Coord::new(c.row - dr * mesh.die_rows, c.col - dc * mesh.die_cols)
+        };
+        // One die's logical core indices in die-local row-major order
+        // (contiguous `base..base+cores_per_die` only on 1D meshes — a
+        // 2D die grid strides them across the logical grid).
+        let cores_of_die = |die: usize| -> Vec<usize> {
+            let (dr, dc) = mesh.die_coord(die);
+            (0..mesh.die_rows)
+                .flat_map(|r| {
+                    (0..mesh.die_cols).map(move |c| {
+                        (dr * mesh.die_rows + r) * mesh.logical_cols() + dc * mesh.die_cols + c
+                    })
+                })
+                .collect()
         };
 
         let mul = cost.tile_op_cycles(self.cfg.unit, df, TileOpKind::EltwiseBinary, PipelineMode::Streamed);
@@ -460,12 +475,12 @@ impl SpmvOperator {
         let stats = self.stats();
         let mut programs = Vec::with_capacity(mesh.n_dies);
         for die in 0..mesh.n_dies {
-            let base = die * cores_per_die;
+            let die_cores = cores_of_die(die);
             let mut data_movement = Vec::with_capacity(cores_per_die);
             let mut intra_bytes = 0u64;
-            for owner in base..base + cores_per_die {
+            for &owner in &die_cores {
                 let mut queue = SendQueue::default();
-                for consumer in base..base + cores_per_die {
+                for &consumer in &die_cores {
                     let Some(&cnt) = self.gather.per_core[consumer].get(&owner) else {
                         continue;
                     };
@@ -488,7 +503,7 @@ impl SpmvOperator {
             let mut dram_bytes = Vec::with_capacity(cores_per_die);
             let mut die_rows_owned = 0u64;
             let mut matrix_bytes = 0u64;
-            for core in base..base + cores_per_die {
+            for &core in &die_cores {
                 let padded = self.sells[core].padded_nnz() as u64;
                 let tile_cols = padded.div_ceil(TILE_ELEMS as u64);
                 let riscv = 2 * cost.zero_fill_cycles(padded);

@@ -113,6 +113,19 @@ pub fn boundary_tile_cycles(cost: &CostModel, unit: ComputeUnit, df: DataFormat)
         + cost.tile_op_cycles(unit, df, TileOpKind::EltwiseBinary, dep)
 }
 
+/// The seam-dependent per-tile cycles of ONE E/W direction whose halo
+/// column arrives over an inter-die Ethernet seam (2D die grids): the
+/// §6.2 transpose → shift-copy → transpose pipeline that rebuilds the
+/// displaced tile across the face, plus the accumulate — the E/W slice
+/// of [`local_tile_cycles`], heavier than the N/S slice by the two
+/// transposes.
+pub fn boundary_tile_cycles_ew(cost: &CostModel, unit: ComputeUnit, df: DataFormat) -> u64 {
+    let dep = PipelineMode::Dependent;
+    2 * cost.tile_op_cycles(unit, df, TileOpKind::Transpose, dep)
+        + cost.tile_op_cycles(unit, df, TileOpKind::ShiftCopy, dep)
+        + cost.tile_op_cycles(unit, df, TileOpKind::EltwiseBinary, dep)
+}
+
 /// Bytes of one N/S halo row and one E/W halo segment at `df` (§6.3).
 fn halo_unit_bytes(df: DataFormat) -> (u64, u64) {
     let row = (16 * df.bytes()) as u64; // one tile row = one NoC write
@@ -210,27 +223,33 @@ pub fn lower_stencil(grid: &TensixGrid, cfg: &StencilConfig, cost: &CostModel) -
         })
 }
 
-/// Lower one die's stencil program for an x-stacked mesh: the per-die
+/// Lower one die's stencil program for a die-grid mesh: the per-die
 /// NoC halo schedule of [`lower_stencil`], plus the interior/boundary
-/// compute split on seam-adjacent core rows. `seam_north` marks a
+/// compute split on seam-adjacent core strips. `seam_north` marks a
 /// neighboring die above (logical row 0 of this die consumes its seam),
-/// `seam_south` one below (last row). The boundary chain is carved out
-/// of the same per-core totals — [`boundary_tile_cycles`] per tile per
-/// seam side — so a Serial schedule times identically to the unsplit
-/// lowering; a Pipelined schedule may overlap the interior chain with
-/// the Ethernet seam.
+/// `seam_south` one below (last row); on 2D die grids `seam_west` /
+/// `seam_east` mark neighbors left/right (first/last core *column*),
+/// extending the split to four boundary strips. The boundary chain is
+/// carved out of the same per-core totals — [`boundary_tile_cycles`]
+/// per tile per N/S side, [`boundary_tile_cycles_ew`] per E/W side — so
+/// a Serial schedule times identically to the unsplit lowering; a
+/// Pipelined schedule may overlap the interior chain with the Ethernet
+/// seams.
 pub fn lower_stencil_die(
     grid: &TensixGrid,
     cfg: &StencilConfig,
     cost: &CostModel,
     seam_north: bool,
     seam_south: bool,
+    seam_west: bool,
+    seam_east: bool,
 ) -> Program {
     let mut program = lower_stencil(grid, cfg, cost);
-    if !(seam_north || seam_south) {
+    if !(seam_north || seam_south || seam_west || seam_east) {
         return program;
     }
     let per_side = boundary_tile_cycles(cost, cfg.unit, cfg.df) * cfg.tiles_per_core as u64;
+    let per_side_ew = boundary_tile_cycles_ew(cost, cfg.unit, cfg.df) * cfg.tiles_per_core as u64;
     let mut boundary = vec![0u64; grid.n_cores()];
     for coord in grid.coords() {
         let mut b = 0u64;
@@ -239,6 +258,12 @@ pub fn lower_stencil_die(
         }
         if seam_south && coord.row + 1 == grid.rows {
             b += per_side;
+        }
+        if seam_west && coord.col == 0 {
+            b += per_side_ew;
+        }
+        if seam_east && coord.col + 1 == grid.cols {
+            b += per_side_ew;
         }
         let i = coord.row * grid.cols + coord.col;
         boundary[i] = b.min(program.work.compute_cycles[i]);
@@ -424,13 +449,13 @@ mod tests {
         assert!(per_side > 0);
 
         // No seam: the plain lowering, no split carried.
-        let alone = lower_stencil_die(&grid, &cfg, &cost, false, false);
+        let alone = lower_stencil_die(&grid, &cfg, &cost, false, false, false, false);
         assert_eq!(alone, lower_stencil(&grid, &cfg, &cost));
         assert!(alone.work.boundary_compute_cycles.is_empty());
 
-        // Middle die: first row consumes the north seam, last row the
-        // south seam, interior rows carry no boundary chain.
-        let mid = lower_stencil_die(&grid, &cfg, &cost, true, true);
+        // Middle die of a column: first row consumes the north seam,
+        // last row the south seam, interior rows carry no boundary chain.
+        let mid = lower_stencil_die(&grid, &cfg, &cost, true, true, false, false);
         mid.validate().unwrap();
         assert_eq!(
             mid.work.boundary_compute_cycles,
@@ -444,7 +469,7 @@ mod tests {
 
         // A one-row die on both seams stacks the two sides on one core.
         let thin = TensixGrid::new(1, 2).unwrap();
-        let both = lower_stencil_die(&thin, &cfg, &cost, true, true);
+        let both = lower_stencil_die(&thin, &cfg, &cost, true, true, false, false);
         both.validate().unwrap();
         assert_eq!(both.work.boundary_compute_cycles, vec![2 * per_side; 2]);
         // The boundary chain stays a strict subset of the local compute.
@@ -455,6 +480,42 @@ mod tests {
             .zip(&both.work.compute_cycles)
         {
             assert!(b < c);
+        }
+    }
+
+    #[test]
+    fn die_lowering_splits_four_seam_strips_on_2d_grids() {
+        let grid = TensixGrid::new(3, 3).unwrap();
+        let cost = CostModel::default();
+        let cfg = StencilConfig::paper_fig11(4, StencilVariant::FULL);
+        let ns = boundary_tile_cycles(&cost, cfg.unit, cfg.df) * 4;
+        let ew = boundary_tile_cycles_ew(&cost, cfg.unit, cfg.df) * 4;
+        // The E/W slice carries the two face transposes on top of the
+        // N/S shift+accumulate.
+        assert!(ew > ns);
+
+        // An interior die of a 2D die grid consumes all four seams: the
+        // corner cores stack an N/S and an E/W side, edge-center cores
+        // carry one side, the center core none.
+        let all = lower_stencil_die(&grid, &cfg, &cost, true, true, true, true);
+        all.validate().unwrap();
+        assert_eq!(
+            all.work.boundary_compute_cycles,
+            vec![
+                ns + ew, ns, ns + ew,
+                ew,      0,  ew,
+                ns + ew, ns, ns + ew,
+            ]
+        );
+        // Totals unchanged: Serial timing is the unsplit model's.
+        let alone = lower_stencil(&grid, &cfg, &cost);
+        assert_eq!(all.work.compute_cycles, alone.work.compute_cycles);
+        // East-only seam marks the last core column.
+        let east = lower_stencil_die(&grid, &cfg, &cost, false, false, false, true);
+        assert_eq!(east.work.boundary_compute_cycles, vec![0, 0, ew, 0, 0, ew, 0, 0, ew]);
+        // The boundary chain never exceeds the local compute.
+        for (b, c) in all.work.boundary_compute_cycles.iter().zip(&all.work.compute_cycles) {
+            assert!(b <= c);
         }
     }
 

@@ -134,9 +134,15 @@ fn cmd_solve(args: &cli::Args) -> Result<(), String> {
     let variant: PcgVariant = args.get_parsed("variant", "bf16")?;
     let (rows, cols) = args.get_grid("grid", (4, 4))?;
     let tiles = args.get_usize("tiles", 16)?;
-    let dies = args.get_usize("dies", 1)?;
+    let topology: wormsim::device::MeshTopology = args.get_parsed("topology", "line")?;
+    // An explicit torus shape pins the die count; `--dies` may be
+    // omitted (and must agree with rows*cols when given).
+    let dies = match (args.get("dies"), topology) {
+        (None, wormsim::device::MeshTopology::Torus2D { rows, cols }) => rows * cols,
+        _ => args.get_usize("dies", 1)?,
+    };
     if dies > 1 {
-        return cmd_solve_mesh(args, &ctx, variant, rows, cols, tiles, dies);
+        return cmd_solve_mesh(args, &ctx, variant, rows, cols, tiles, dies, topology);
     }
     let problem = Problem::new(rows, cols, tiles, variant.df());
     let grid = problem.make_grid().map_err(|e| e.to_string())?;
@@ -208,7 +214,10 @@ fn cmd_solve(args: &cli::Args) -> Result<(), String> {
 }
 
 /// Multi-die solve: `--grid RxC` is the *per-die* sub-grid; the domain
-/// stacks along x over `--dies N` dies wired as `--topology line|ring`.
+/// splits over `--dies N` dies wired as `--topology
+/// line|ring|torus:RxC` (1D topologies stack along x; a torus tiles
+/// both axes, and its shape implies `--dies` when the flag is omitted).
+#[allow(clippy::too_many_arguments)]
 fn cmd_solve_mesh(
     args: &cli::Args,
     ctx: &ExpContext,
@@ -217,13 +226,13 @@ fn cmd_solve_mesh(
     cols: usize,
     tiles: usize,
     dies: usize,
+    topology: wormsim::device::MeshTopology,
 ) -> Result<(), String> {
-    use wormsim::device::{DeviceMesh, EthLink, MeshTopology};
+    use wormsim::device::{DeviceMesh, EthLink};
     use wormsim::engine::StencilCoeffs;
     use wormsim::kernels::stencil::{StencilConfig, StencilVariant};
     use wormsim::solver::Operator;
 
-    let topology: MeshTopology = args.get_parsed("topology", "line")?;
     let overlap: wormsim::solver::OverlapMode = args.get_parsed("overlap", "serial")?;
     let schedule: wormsim::solver::Schedule = args.get_parsed("schedule", "classic")?;
     let mesh = DeviceMesh::new(dies, rows, cols, topology, EthLink::for_dies(dies))
@@ -335,8 +344,13 @@ fn cmd_critpath(args: &cli::Args) -> Result<(), String> {
     let variant: PcgVariant = args.get_parsed("variant", "bf16")?;
     let (rows, cols) = args.get_grid("grid", (4, 4))?;
     let tiles = args.get_usize("tiles", 16)?;
-    let dies = args.get_usize("dies", 4)?;
     let topology: MeshTopology = args.get_parsed("topology", "line")?;
+    // As in `solve`: a torus shape implies the die count when `--dies`
+    // is omitted.
+    let dies = match (args.get("dies"), topology) {
+        (None, MeshTopology::Torus2D { rows, cols }) => rows * cols,
+        _ => args.get_usize("dies", 4)?,
+    };
     let overlap: wormsim::solver::OverlapMode = args.get_parsed("overlap", "serial")?;
     let schedule: wormsim::solver::Schedule = args.get_parsed("schedule", "classic")?;
     let mesh = DeviceMesh::new(dies, rows, cols, topology, EthLink::for_dies(dies))
@@ -543,7 +557,8 @@ fn print_usage() {
          info                    platform + architecture summary\n  \
          solve                   run the PCG solver (--grid 8x7 --tiles 64 --variant bf16|fp32\n                          \
          --iters N --tol X --pattern naive|center --method 1|2)\n                          \
-         multi-die: --dies N --topology line|ring --overlap serial|pipelined\n                          \
+         multi-die: --dies N --topology line|ring|torus:RxC --overlap serial|pipelined\n                          \
+         (torus:RxC implies --dies RxC when the flag is omitted)\n                          \
          --schedule classic|prefetch|sstep:<s>  communication-avoiding schedule\n                          \
          (prefetch: halo rides the previous iteration's tail, bit-identical values;\n                          \
          sstep:<s>: ONE combined all-reduce per s iterations, s in 2..=8)\n                          \
@@ -555,7 +570,8 @@ fn print_usage() {
          --emit-json writes BENCH_<suite>.json (--out DIR, --smoke for CI subset)\n  \
          bench-diff A.json B.json  compare snapshots (--threshold 0.05; --advisory always exits 0)\n  \
          critpath                critical-path report of a mesh solve's causal span graph\n                          \
-         (--dies N --grid RxC --overlap serial|pipelined --schedule classic|prefetch|sstep:<s>)\n                          \
+         (--dies N --topology line|ring|torus:RxC --grid RxC --overlap serial|pipelined\n                          \
+         --schedule classic|prefetch|sstep:<s>)\n                          \
          --what-if eth_bw=2x,eth_lat=0.5x,dispatch=0  re-time the graph, print predicted\n                          \
          solve time (eth_lat scales only the per-hop latency share of Ethernet spans)\n                          \
          --trace out.json        Perfetto trace with span-dependency flow arrows\n\n\

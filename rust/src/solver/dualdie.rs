@@ -40,6 +40,11 @@ pub struct DualDieOptions {
     /// mesh solve. `Classic` (the default) keeps the historical
     /// trajectory and timings bit-exactly.
     pub schedule: Schedule,
+    /// Die wiring, passed through to the underlying N=2 mesh. `Line`
+    /// (the default) keeps the historical on-board point-to-point model;
+    /// a `Torus2D` shape must multiply out to exactly 2 dies (`2x1` or
+    /// `1x2`) or the solve is rejected.
+    pub topology: MeshTopology,
 }
 
 impl Default for DualDieOptions {
@@ -50,6 +55,7 @@ impl Default for DualDieOptions {
             eth: EthLink::default(),
             overlap: OverlapMode::Serial,
             schedule: Schedule::Classic,
+            topology: MeshTopology::Line,
         }
     }
 }
@@ -87,7 +93,7 @@ pub fn solve_pcg_dualdie(
     cost: &CostModel,
     opts: &DualDieOptions,
 ) -> crate::Result<DualDieResult> {
-    let mesh = DeviceMesh::new(2, rows, cols, MeshTopology::Line, opts.eth)?;
+    let mesh = DeviceMesh::new(2, rows, cols, opts.topology, opts.eth)?;
     assert_eq!(b.len(), mesh.n_cores(), "one block per core across both dies");
 
     let stencil_cfg = StencilConfig {
@@ -241,6 +247,36 @@ mod tests {
             "prefetch+pipelined {} vs classic {}",
             led.total_ns,
             classic.total_ns
+        );
+    }
+
+    #[test]
+    fn topology_passes_through_and_wrong_shapes_are_rejected() {
+        // A 2x1 torus on two dies degenerates to the same wiring as the
+        // line (no wrap links below 3 dies per dimension), so the whole
+        // solve — values AND timing — must be bit-identical. A shape
+        // that doesn't multiply out to 2 dies must fail loudly, not
+        // silently fall back to a line.
+        let e = NativeEngine::new();
+        let cost = CostModel::default();
+        let b = dual_random(2, 2, 3, 33);
+        let mut line = DualDieOptions::default();
+        line.max_iters = 6;
+        line.tol_abs = 0.0;
+        let mut torus = line.clone();
+        torus.topology = MeshTopology::Torus2D { rows: 2, cols: 1 };
+        let lr = solve_pcg_dualdie(2, 2, 3, &b, &e, &cost, &line).unwrap();
+        let tr = solve_pcg_dualdie(2, 2, 3, &b, &e, &cost, &torus).unwrap();
+        assert_eq!(lr.residual_history, tr.residual_history);
+        assert_eq!(lr.total_ns, tr.total_ns);
+        assert_eq!(lr.eth_ns_per_iter, tr.eth_ns_per_iter);
+
+        let mut bad = line.clone();
+        bad.topology = MeshTopology::Torus2D { rows: 4, cols: 8 };
+        let err = solve_pcg_dualdie(2, 2, 3, &b, &e, &cost, &bad).unwrap_err();
+        assert!(
+            err.to_string().contains("torus"),
+            "expected a topology-shape error, got: {err}"
         );
     }
 

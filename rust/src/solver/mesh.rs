@@ -1,25 +1,35 @@
 //! Distributed PCG over an N-die [`DeviceMesh`] (§8 multi-device
 //! scaling) — the generalization of the old two-die special case.
 //!
-//! The domain stacks along x: die `d` owns logical core rows
-//! `[d·die_rows, (d+1)·die_rows)`, so the mesh-wide vector is the plain
-//! concatenation of per-die [`DistVector`] blocks in die order. Values
-//! are computed over that logical grid exactly as the single-die solver
-//! would — the same stencil stitching, the same canonical dot
-//! accumulation order — which is why an N-die trajectory is
-//! **bit-identical** to the single-die trajectory on the same problem
-//! (pinned by `tests/prop_mesh.rs`). Only *where the wires run* changes:
+//! The dies tile the logical core grid as a row-major die grid
+//! ([`DeviceMesh::mesh_shape`]): on a 1D line/ring that is the N×1
+//! column (die `d` owns logical core rows `[d·die_rows,
+//! (d+1)·die_rows)`), on a 2D torus the domain splits along both axes.
+//! The mesh-wide vector holds one block per *logical* core in row-major
+//! order, so values are computed over the logical grid exactly as the
+//! single-die solver would — the same stencil stitching, the same
+//! canonical dot accumulation order — which is why an N-die trajectory
+//! is **bit-identical** to the single-die trajectory on the same
+//! problem, for every topology (pinned by `tests/prop_mesh.rs` and
+//! `tests/prop_torus.rs`). Only *where the wires run* changes:
 //!
 //! - the seam halo between adjacent dies rides Ethernet instead of the
 //!   NoC — an overlapping [`crate::ttm::EtherPhase`] on the lowered
-//!   "spmv" program;
+//!   "spmv" program. A 1D mesh has N/S seams only; a 2D die grid also
+//!   pays E/W seams, which carry 4× the bytes (the §6.3 face transpose:
+//!   4 discontiguous 16-element segments per tile) — but halo *path
+//!   lengths* stay one hop, and each die's seam perimeter shrinks as
+//!   the die grid squares up;
 //! - each dot product reduces per-die over the NoC tree, then combines +
 //!   broadcasts across the mesh — an appended `EtherPhase` on the
 //!   "dot"/"norm" programs: 32 B scalar beats chained on a line
-//!   (both-ways broadcast on a ring), or — under
+//!   (both-ways fold + broadcast on a ring), or — under
 //!   [`crate::kernels::DotMethod::SendTiles`] — tile payloads as a
 //!   segmented ring all-reduce whose per-round bandwidth term is
-//!   bytes/N.
+//!   bytes/N. On a torus the same payloads ride the 2D
+//!   [`EtherPhase::allreduce2d`] — a row phase then a column phase,
+//!   O(√N) rounds per phase — which is what moves the strong-scaling
+//!   knee past N=16.
 //!
 //! **Interior/boundary split + overlap.** Every per-die "spmv" program
 //! carries its compute cycles split into an *interior* chain (die-local
@@ -254,12 +264,22 @@ pub(crate) fn mesh_stencil_values(
     Ok(out)
 }
 
-/// One seam direction's bytes between adjacent dies per stencil
-/// application: the N/S row exchange — `cols` core pairs × one 16-element
-/// tile row per z-tile (§6.3's cheap direction; the reason dies stack
-/// along x).
+/// One seam direction's bytes between vertically adjacent dies per
+/// stencil application: the N/S row exchange — `cols` core pairs × one
+/// 16-element tile row per z-tile (§6.3's cheap direction; the reason a
+/// 1D mesh stacks dies along x).
 pub fn seam_bytes_one_way(cols: usize, tiles: usize, df: crate::arch::DataFormat) -> u64 {
     (cols as u64) * (tiles as u64) * (16 * df.bytes()) as u64
+}
+
+/// One seam direction's bytes between horizontally adjacent dies per
+/// stencil application: the E/W column exchange — `rows` core pairs × 4
+/// discontiguous 16-element segments per z-tile (§6.3's expensive
+/// direction: a face column is strided through the 32×32 tile, so each
+/// tile contributes 64 elements of seam traffic, 4× the N/S cost).
+/// Only 2D die grids pay this.
+pub fn seam_bytes_one_way_ew(rows: usize, tiles: usize, df: crate::arch::DataFormat) -> u64 {
+    (rows as u64) * (tiles as u64) * (64 * df.bytes()) as u64
 }
 
 /// Deterministic random mesh-wide right-hand side (one block per logical
@@ -270,7 +290,8 @@ pub fn mesh_dist_random(
     df: crate::arch::DataFormat,
     seed: u64,
 ) -> DistVector {
-    let p = crate::solver::problem::Problem::new(mesh.logical_rows(), mesh.die_cols, tiles, df);
+    let p =
+        crate::solver::problem::Problem::new(mesh.logical_rows(), mesh.logical_cols(), tiles, df);
     crate::solver::problem::dist_random(&p, seed)
 }
 
@@ -357,27 +378,46 @@ pub fn lower_mesh_components(
         Operator::Stencil(cfg) => {
             // One program per die: the same die sub-grid NoC halo
             // schedule, but the interior/boundary compute split depends
-            // on which seams the die touches (end dies one, middle dies
-            // two). The seam itself rides the shared Ethernet phase.
+            // on which seams the die touches (a 1D end die one, a torus
+            // interior die up to four). The seams themselves ride the
+            // shared Ethernet phase. The domain is not periodic — wrap
+            // links carry only all-reduce traffic, never halos — so
+            // flows connect grid-adjacent die pairs only.
             let die_grid = mesh.die_grid()?;
-            let one_way = seam_bytes_one_way(cols, cfg.tiles_per_core, cfg.df);
-            let flows: Vec<(usize, usize, u64)> = (0..mesh.n_dies.saturating_sub(1))
-                .flat_map(|d| [(d, d + 1, one_way), (d + 1, d, one_way)])
-                .collect();
+            let (mesh_rows, mesh_cols) = mesh.mesh_shape();
+            let ns_one_way = seam_bytes_one_way(cols, cfg.tiles_per_core, cfg.df);
+            let ew_one_way = seam_bytes_one_way_ew(rows, cfg.tiles_per_core, cfg.df);
+            let mut flows: Vec<(usize, usize, u64)> = Vec::new();
+            for r in 0..mesh_rows {
+                for c in 0..mesh_cols {
+                    let d = mesh.die_at(r, c);
+                    if r + 1 < mesh_rows {
+                        let s = mesh.die_at(r + 1, c);
+                        flows.push((d, s, ns_one_way));
+                        flows.push((s, d, ns_one_way));
+                    }
+                    if c + 1 < mesh_cols {
+                        let e = mesh.die_at(r, c + 1);
+                        flows.push((d, e, ew_one_way));
+                        flows.push((e, d, ew_one_way));
+                    }
+                }
+            }
             let ether = EtherPhase::halo("halo", mesh, &flows);
             let eth_bytes = ether.as_ref().map_or(0, |e| e.bytes());
-            // Only the seam pair distinguishes dies (≤ 3 variants across
-            // any N), so memoize the lowering instead of rebuilding the
-            // full NoC schedule per die.
-            let mut variants: BTreeMap<(bool, bool), Program> = BTreeMap::new();
+            // Only the touched-seam set distinguishes dies (≤ 9 variants
+            // across any die grid), so memoize the lowering instead of
+            // rebuilding the full NoC schedule per die.
+            let mut variants: BTreeMap<(bool, bool, bool, bool), Program> = BTreeMap::new();
             (0..mesh.n_dies)
                 .map(|d| {
-                    let seams = (d > 0, d + 1 < mesh.n_dies);
+                    let (dr, dc) = mesh.die_coord(d);
+                    let seams = (dr > 0, dr + 1 < mesh_rows, dc > 0, dc + 1 < mesh_cols);
                     let mut p = variants
                         .entry(seams)
                         .or_insert_with(|| {
                             let mut p = crate::kernels::stencil::lower_stencil_die(
-                                &die_grid, cfg, cost, seams.0, seams.1,
+                                &die_grid, cfg, cost, seams.0, seams.1, seams.2, seams.3,
                             );
                             p.name = "spmv".to_string();
                             p.work.ether = ether.clone();
@@ -509,7 +549,7 @@ pub fn solve_pcg_mesh(
     let fused = opts.pcg.fused();
     let df = opts.pcg.variant.df();
     let logical_rows = mesh.logical_rows();
-    let cols = mesh.die_cols;
+    let cols = mesh.logical_cols();
     if b.len() != mesh.n_cores() {
         return Err(crate::SimError::BadProblem {
             what: format!(
@@ -518,7 +558,7 @@ pub fn solve_pcg_mesh(
                 mesh.n_cores(),
                 mesh.n_dies,
                 mesh.die_rows,
-                cols
+                mesh.die_cols
             ),
         });
     }

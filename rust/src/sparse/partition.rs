@@ -97,6 +97,9 @@ pub struct DieCutPlan {
     pub n_dies: usize,
     /// Core-grid rows each die owns.
     pub rows_per_die: usize,
+    /// Core-grid columns each die owns (the full grid width on 1D
+    /// x-stacked meshes; a 2D die grid splits the columns too).
+    pub cols_per_die: usize,
     /// (owner die → consumer die) → distinct remote entries crossing the
     /// cut per SpMV.
     pub entries: BTreeMap<(usize, usize), u64>,
@@ -302,14 +305,34 @@ impl RowPartition {
     /// that stays on the NoC. `df` fixes the byte accounting at the same
     /// 32 B batch rounding as [`GatherPlan::bytes`].
     pub fn die_cut(&self, gather: &GatherPlan, n_dies: usize, df: DataFormat) -> Result<DieCutPlan> {
-        if n_dies == 0 || self.grid_rows % n_dies != 0 {
+        self.die_cut_grid(gather, n_dies, 1, df)
+    }
+
+    /// The 2D-die-grid generalization of [`Self::die_cut`]: dies tile
+    /// the core grid as a row-major `mesh_rows × mesh_cols` grid, die
+    /// (r, c) owning core rows `[r·grid_rows/mesh_rows, …)` × columns
+    /// `[c·grid_cols/mesh_cols, …)`. `die_cut` is exactly the
+    /// `mesh_cols = 1` column.
+    pub fn die_cut_grid(
+        &self,
+        gather: &GatherPlan,
+        mesh_rows: usize,
+        mesh_cols: usize,
+        df: DataFormat,
+    ) -> Result<DieCutPlan> {
+        if mesh_rows == 0
+            || mesh_cols == 0
+            || self.grid_rows % mesh_rows != 0
+            || self.grid_cols % mesh_cols != 0
+        {
             return Err(SimError::BadProblem {
                 what: format!(
-                    "{} core-grid rows do not split over {n_dies} dies",
-                    self.grid_rows
+                    "{}x{} core grid does not split over a {mesh_rows}x{mesh_cols} die grid",
+                    self.grid_rows, self.grid_cols
                 ),
             });
         }
+        let n_dies = mesh_rows * mesh_cols;
         if gather.per_core.len() != self.n_cores() {
             return Err(SimError::BadProblem {
                 what: format!(
@@ -319,9 +342,12 @@ impl RowPartition {
                 ),
             });
         }
-        let rows_per_die = self.grid_rows / n_dies;
-        let cores_per_die = rows_per_die * self.grid_cols;
-        let die_of = |core: usize| core / cores_per_die;
+        let rows_per_die = self.grid_rows / mesh_rows;
+        let cols_per_die = self.grid_cols / mesh_cols;
+        let die_of = |core: usize| {
+            let coord = self.core_coord(core);
+            (coord.row / rows_per_die) * mesh_cols + coord.col / cols_per_die
+        };
         let mut entries: BTreeMap<(usize, usize), u64> = BTreeMap::new();
         let mut bytes: BTreeMap<(usize, usize), u64> = BTreeMap::new();
         let mut intra_entries = vec![0u64; n_dies];
@@ -347,6 +373,7 @@ impl RowPartition {
         Ok(DieCutPlan {
             n_dies,
             rows_per_die,
+            cols_per_die,
             entries,
             bytes,
             intra_entries,
@@ -492,6 +519,41 @@ mod tests {
         assert!(whole.flows().is_empty());
         // Rows must split evenly over dies.
         assert!(part.die_cut(&plan, 3, DataFormat::Fp32).is_err());
+    }
+
+    #[test]
+    fn die_cut_grid_splits_both_axes() {
+        use crate::arch::DataFormat;
+        // A 2×2 die grid over the 2×2 stencil-aligned partition: one
+        // core per die. Both the x faces (N/S, 16·nz entries per pair)
+        // and the y faces (E/W, 64·nz per pair) now cross die cuts;
+        // nothing stays on any die's NoC.
+        let part = RowPartition::stencil_aligned(2, 2, 2).unwrap();
+        let a = laplacian_3d(128, 32, 2);
+        let plan = part.gather_plan(&a).unwrap();
+        let cut = part.die_cut_grid(&plan, 2, 2, DataFormat::Fp32).unwrap();
+        assert_eq!((cut.rows_per_die, cut.cols_per_die), (1, 1));
+        assert_eq!(cut.n_dies, 4);
+        // Vertical faces: dies 0↔2 and 1↔3, 16·nz entries each direction.
+        assert_eq!(cut.entries[&(0, 2)], 16 * 2);
+        assert_eq!(cut.entries[&(2, 0)], 16 * 2);
+        // Horizontal faces: dies 0↔1 and 2↔3, 64·nz entries each.
+        assert_eq!(cut.entries[&(0, 1)], 64 * 2);
+        assert_eq!(cut.entries[&(1, 0)], 64 * 2);
+        assert_eq!(cut.intra_entries, vec![0; 4]);
+        // Conservation still holds at batch granularity.
+        assert_eq!(
+            cut.cut_bytes() + cut.intra_bytes.iter().sum::<u64>(),
+            plan.bytes(DataFormat::Fp32)
+        );
+        // The 1D x-stacked cut is exactly the mesh_cols = 1 column.
+        assert_eq!(
+            part.die_cut(&plan, 2, DataFormat::Fp32).unwrap(),
+            part.die_cut_grid(&plan, 2, 1, DataFormat::Fp32).unwrap()
+        );
+        // Both axes must split evenly.
+        assert!(part.die_cut_grid(&plan, 2, 3, DataFormat::Fp32).is_err());
+        assert!(part.die_cut_grid(&plan, 0, 2, DataFormat::Fp32).is_err());
     }
 
     #[test]

@@ -388,6 +388,46 @@ mod tests {
     }
 
     #[test]
+    fn topology_relabel_is_advisory_not_a_regression() {
+        // PR-9 pin: adding the `topology` label to the pcg sweep changes
+        // every metric id, so diffing an old committed snapshot against a
+        // freshly built one must classify each row as missing/added —
+        // advisory notes — and NEVER as a regression, even when the new
+        // row's value moved far past any threshold.
+        let mut old = BenchSnapshot::new("pcg");
+        old.push(
+            "iter_ns",
+            &[("dies", "4"), ("overlap", "serial"), ("schedule", "classic")],
+            1.0e6,
+            "ns",
+            Better::Lower,
+        );
+        let mut new = BenchSnapshot::new("pcg");
+        new.push(
+            "iter_ns",
+            &[
+                ("dies", "4"),
+                ("topology", "line"),
+                ("overlap", "serial"),
+                ("schedule", "classic"),
+            ],
+            5.0e6, // 5x worse than the old row — still not a regression
+            "ns",
+            Better::Lower,
+        );
+        let d = diff(&old, &new, 0.05);
+        assert!(d.regressions.is_empty());
+        assert_eq!(
+            d.missing,
+            vec!["iter_ns{dies=4,overlap=serial,schedule=classic}".to_string()]
+        );
+        assert_eq!(
+            d.added,
+            vec!["iter_ns{dies=4,overlap=serial,schedule=classic,topology=line}".to_string()]
+        );
+    }
+
+    #[test]
     fn write_and_read_disk_round_trip() {
         let dir = std::env::temp_dir().join("wormsim_snapshot_test");
         let path = dir.join("BENCH_t.json");

@@ -236,10 +236,13 @@ pub struct EthHop {
 ///   lands;
 /// - **scalar combine + broadcast**: 2(N−1) single-hop rounds along the
 ///   chain (on a line, a reduction tree degenerates to exactly this);
-/// - **ring all-reduce**: (N−1) combine rounds plus a both-ways
+/// - **ring all-reduce**: ⌈(N−1)/2⌉ both-ways combine rounds plus a both-ways
 ///   broadcast for scalar beats, or — for tile payloads
 ///   ([`EtherPhase::allreduce`]) — the segmented reduce-scatter +
-///   all-gather whose per-round bandwidth term is bytes/N.
+///   all-gather whose per-round bandwidth term is bytes/N;
+/// - **2D all-reduce** ([`EtherPhase::allreduce2d`], torus meshes): a
+///   row phase (all die rows reduce concurrently) then a column phase,
+///   O(√N) rounds per phase instead of O(N).
 ///
 /// The scheduler ([`crate::ttm::exec::execute_program`]) is the only
 /// place this phase is turned into time, alongside NoC and compute —
@@ -313,7 +316,8 @@ impl EtherPhase {
     /// - **latency-bound** (payloads of one 32 B beat, or any payload on
     ///   a line): combine down the chain, broadcast back — 2(N−1)
     ///   single-hop rounds, each carrying the whole payload; a ring
-    ///   broadcasts both ways, saving ⌈(N−1)/2⌉ rounds on the way back.
+    ///   folds *and* broadcasts both ways around the wrap link, paying
+    ///   2⌈(N−1)/2⌉ rounds — about half the chain's.
     /// - **bandwidth-bound** (payloads above one beat on a ring of
     ///   N > 2): the classic ring all-reduce — a reduce-scatter plus an
     ///   all-gather of 2(N−1) rounds, each round all N links carrying
@@ -323,61 +327,72 @@ impl EtherPhase {
     ///   across dies (ROADMAP "mesh-aware reductions at tile
     ///   granularity").
     ///
-    /// Returns `None` on a single die.
+    /// Returns `None` on a single die. A 2D torus mesh routes through
+    /// [`EtherPhase::allreduce2d`] (row phase then column phase), which
+    /// is the whole point of the topology: O(√N) rounds per phase
+    /// instead of O(N).
     pub fn allreduce(mesh: &crate::device::DeviceMesh, payload_bytes: u64) -> Option<Self> {
+        if matches!(mesh.topology, crate::device::MeshTopology::Torus2D { .. }) {
+            return Self::allreduce2d(mesh, payload_bytes);
+        }
         let n = mesh.n_dies;
         if n < 2 {
             return None;
         }
-        if mesh.topology == crate::device::MeshTopology::Ring && n > 2 && payload_bytes > 32 {
-            // Segmented ring all-reduce: round r, every die d forwards
-            // one segment to die (d+1) mod N; all N links busy each
-            // round. Segments align up to the 32 B beat (§3.3).
-            let seg = (payload_bytes.div_ceil(n as u64)).div_ceil(32) * 32;
-            let round: Vec<EthHop> = (0..n)
-                .map(|d| EthHop { src_die: d, dst_die: (d + 1) % n, bytes: seg })
-                .collect();
-            return Some(Self {
-                label: "allreduce".to_string(),
-                n_dies: n,
-                link: mesh.link,
-                rounds: vec![round; 2 * (n - 1)],
-                overlaps_local: false,
-            });
-        }
-        let beat = payload_bytes;
-        let mut rounds: Vec<Vec<EthHop>> = Vec::new();
-        // Combine: die d folds its partial into d−1's accumulator.
-        for d in (1..n).rev() {
-            rounds.push(vec![EthHop { src_die: d, dst_die: d - 1, bytes: beat }]);
-        }
-        match mesh.topology {
-            crate::device::MeshTopology::Ring if n > 2 => {
-                // Broadcast both ways around the ring from die 0: a
-                // forward wave 0→1→2→… and a backward wave 0→N−1→N−2→…
-                // (over the wrap link) meet in the middle.
-                let mut fwd = 0usize; // highest die the forward wave reached
-                let mut bwd = n; // lowest die the backward wave reached (n = none)
-                while fwd + 1 < bwd {
-                    let mut round = vec![EthHop { src_die: fwd, dst_die: fwd + 1, bytes: beat }];
-                    fwd += 1;
-                    if bwd - 1 > fwd {
-                        round.push(EthHop { src_die: bwd % n, dst_die: bwd - 1, bytes: beat });
-                        bwd -= 1;
-                    }
-                    rounds.push(round);
-                }
-            }
-            _ => {
-                // Broadcast back up the chain.
-                for d in 0..n - 1 {
-                    rounds.push(vec![EthHop { src_die: d, dst_die: d + 1, bytes: beat }]);
-                }
-            }
-        }
+        let closed = mesh.topology == crate::device::MeshTopology::Ring && n > 2;
+        let members: Vec<usize> = (0..n).collect();
         Some(Self {
             label: "allreduce".to_string(),
             n_dies: n,
+            link: mesh.link,
+            rounds: allreduce_rounds(&members, closed, payload_bytes),
+            overlaps_local: false,
+        })
+    }
+
+    /// 2D all-reduce over a torus die grid: a **row phase** — every die
+    /// row runs its own 1D all-reduce concurrently (all rows' round-k
+    /// hops share one round; their links are disjoint) — then a
+    /// **column phase** that all-reduces the now row-complete partials
+    /// down every column. Each phase is the 1D shape over √N-ish
+    /// members (closed whenever that dimension has a wrap link), so a
+    /// 4×8 torus pays 8 + 4 = 12 scalar rounds where the 32-ring pays
+    /// 32 and the line 62. Degenerate 1×N / N×1 shapes produce exactly
+    /// the 1D ring's rounds. Returns `None` on a single die or a
+    /// non-torus mesh.
+    pub fn allreduce2d(mesh: &crate::device::DeviceMesh, payload_bytes: u64) -> Option<Self> {
+        let crate::device::MeshTopology::Torus2D { rows, cols } = mesh.topology else {
+            return None;
+        };
+        if mesh.n_dies < 2 {
+            return None;
+        }
+        let mut rounds: Vec<Vec<EthHop>> = Vec::new();
+        let mut merge = |groups: Vec<Vec<usize>>, closed: bool| {
+            let per_group: Vec<Vec<Vec<EthHop>>> = groups
+                .iter()
+                .map(|members| allreduce_rounds(members, closed, payload_bytes))
+                .collect();
+            let n_rounds = per_group.iter().map(|r| r.len()).max().unwrap_or(0);
+            for k in 0..n_rounds {
+                rounds.push(per_group.iter().filter_map(|r| r.get(k)).flatten().copied().collect());
+            }
+        };
+        if cols > 1 {
+            merge(
+                (0..rows).map(|r| (0..cols).map(|c| mesh.die_at(r, c)).collect()).collect(),
+                cols > 2,
+            );
+        }
+        if rows > 1 {
+            merge(
+                (0..cols).map(|c| (0..rows).map(|r| mesh.die_at(r, c)).collect()).collect(),
+                rows > 2,
+            );
+        }
+        Some(Self {
+            label: "allreduce2d".to_string(),
+            n_dies: mesh.n_dies,
             link: mesh.link,
             rounds,
             overlaps_local: false,
@@ -441,6 +456,93 @@ impl EtherPhase {
     pub fn messages(&self) -> u64 {
         self.rounds.iter().map(|r| r.len() as u64).sum()
     }
+}
+
+/// The rounds of a 1D all-reduce over an ordered group of `members`
+/// (die ids): the exact shapes [`EtherPhase::allreduce`] has always
+/// produced, generalized from dies `0..n` to arbitrary member lists so a
+/// 2D torus can run one per die row/column. `closed` marks a ring (the
+/// last member links back to the first): tile payloads then use the
+/// segmented ring all-reduce, and scalar beats fold and broadcast both
+/// ways around the wrap; open chains combine down and broadcast back up.
+fn allreduce_rounds(members: &[usize], closed: bool, payload_bytes: u64) -> Vec<Vec<EthHop>> {
+    let n = members.len();
+    if n < 2 {
+        return Vec::new();
+    }
+    if closed && payload_bytes > 32 {
+        // Segmented ring all-reduce: round r, every member d forwards
+        // one segment to member (d+1) mod n; all n links busy each
+        // round. Segments align up to the 32 B beat (§3.3).
+        let seg = (payload_bytes.div_ceil(n as u64)).div_ceil(32) * 32;
+        let round: Vec<EthHop> = (0..n)
+            .map(|d| EthHop { src_die: members[d], dst_die: members[(d + 1) % n], bytes: seg })
+            .collect();
+        return vec![round; 2 * (n - 1)];
+    }
+    let beat = payload_bytes;
+    let mut rounds: Vec<Vec<EthHop>> = Vec::new();
+    if closed {
+        // Combine both ways around the ring toward member 0: a forward
+        // arc …→m2→m1→m0 and a backward arc m_s→m_(s+1)→…→m(n−1)→m0
+        // (closing over the wrap link) fold concurrently, mirroring the
+        // both-ways broadcast below — ⌈(n−1)/2⌉ rounds instead of the
+        // open chain's n−1. Disjoint links per round: the arcs never
+        // share an edge, and the two final hops into m0 use the first
+        // and the wrap link.
+        let fwd_len = (n - 1).div_ceil(2); // members 1..=fwd_len
+        let bwd_len = n - 1 - fwd_len; // members fwd_len+1..n
+        for t in 0..fwd_len {
+            let d = fwd_len - t;
+            let mut round =
+                vec![EthHop { src_die: members[d], dst_die: members[d - 1], bytes: beat }];
+            if t < bwd_len {
+                let d = fwd_len + 1 + t;
+                round.push(EthHop {
+                    src_die: members[d],
+                    dst_die: members[(d + 1) % n],
+                    bytes: beat,
+                });
+            }
+            rounds.push(round);
+        }
+    } else {
+        // Combine: member d folds its partial into d−1's accumulator.
+        for d in (1..n).rev() {
+            rounds.push(vec![EthHop {
+                src_die: members[d],
+                dst_die: members[d - 1],
+                bytes: beat,
+            }]);
+        }
+    }
+    if closed {
+        // Broadcast both ways around the ring from the first member: a
+        // forward wave m0→m1→m2→… and a backward wave m0→m(n−1)→m(n−2)→…
+        // (over the wrap link) meet in the middle.
+        let mut fwd = 0usize; // highest member the forward wave reached
+        let mut bwd = n; // lowest member the backward wave reached (n = none)
+        while fwd + 1 < bwd {
+            let mut round =
+                vec![EthHop { src_die: members[fwd], dst_die: members[fwd + 1], bytes: beat }];
+            fwd += 1;
+            if bwd - 1 > fwd {
+                round.push(EthHop {
+                    src_die: members[bwd % n],
+                    dst_die: members[bwd - 1],
+                    bytes: beat,
+                });
+                bwd -= 1;
+            }
+            rounds.push(round);
+        }
+    } else {
+        // Broadcast back up the chain.
+        for d in 0..n - 1 {
+            rounds.push(vec![EthHop { src_die: members[d], dst_die: members[d + 1], bytes: beat }]);
+        }
+    }
+    rounds
 }
 
 /// The lowered per-core device work of one program application. Produced
@@ -854,17 +956,91 @@ mod tests {
         // Line N=4: 3 combine + 3 broadcast rounds.
         let l4 = DeviceMesh::new(4, 1, 1, MeshTopology::Line, link).unwrap();
         assert_eq!(EtherPhase::scalar_allreduce(&l4).unwrap().rounds.len(), 6);
-        // Ring N=4: the both-ways broadcast saves a round.
+        // Ring N=4: combine and broadcast both fold both ways around the
+        // wrap — 2 + 2 rounds vs the line's 3 + 3.
         let r4 = DeviceMesh::new(4, 1, 1, MeshTopology::Ring, link).unwrap();
         let pr = EtherPhase::scalar_allreduce(&r4).unwrap();
-        assert_eq!(pr.rounds.len(), 5);
+        assert_eq!(pr.rounds.len(), 4);
         pr.rounds.iter().flatten().for_each(|h| assert_eq!(h.bytes, 32));
+        // The combine's two arcs land every partial at die 0: the forward
+        // arc 2→1→0 and the wrap hop 3→0.
+        let combine_hops: Vec<(usize, usize)> =
+            pr.rounds[..2].iter().flatten().map(|h| (h.src_die, h.dst_die)).collect();
+        assert_eq!(combine_hops, vec![(2, 1), (3, 0), (1, 0)]);
         // Every die is reached by the broadcast.
         let reached: std::collections::BTreeSet<usize> =
-            pr.rounds[3..].iter().flatten().map(|h| h.dst_die).collect();
+            pr.rounds[2..].iter().flatten().map(|h| h.dst_die).collect();
         assert_eq!(reached, (1..4).collect());
         // Single die: no network step.
         assert!(EtherPhase::scalar_allreduce(&DeviceMesh::n150(1, 1).unwrap()).is_none());
+    }
+
+    #[test]
+    fn allreduce2d_row_then_column_rounds() {
+        use crate::device::{DeviceMesh, MeshTopology};
+        let link = EthLink::default();
+        // 2×2 torus: 2 row rounds (both rows concurrent) + 2 column
+        // rounds — vs 6 on the 4-die line, 4 on the ring.
+        let t22 = DeviceMesh::new(
+            4,
+            1,
+            1,
+            MeshTopology::Torus2D { rows: 2, cols: 2 },
+            link,
+        )
+        .unwrap();
+        let p = EtherPhase::scalar_allreduce(&t22).unwrap();
+        assert_eq!(p.label, "allreduce2d");
+        assert!(!p.overlaps_local);
+        assert_eq!(p.rounds.len(), 4);
+        // Round 0 carries both rows' combines on disjoint links.
+        assert_eq!(
+            p.rounds[0],
+            vec![
+                EthHop { src_die: 1, dst_die: 0, bytes: 32 },
+                EthHop { src_die: 3, dst_die: 2, bytes: 32 },
+            ]
+        );
+        // Column phase reduces the row-complete partials down column 0/1.
+        assert_eq!(
+            p.rounds[2],
+            vec![
+                EthHop { src_die: 2, dst_die: 0, bytes: 32 },
+                EthHop { src_die: 3, dst_die: 1, bytes: 32 },
+            ]
+        );
+        // Duration: 4 latency-bound beats, no link loaded twice per round.
+        assert!((p.duration_ns() - 4.0 * link.transfer_ns(32)).abs() < 1e-9);
+
+        // Galaxy 4×8: 8 row rounds (4 both-ways combine + 4 both-ways
+        // bcast on each closed row ring) + 4 column rounds — vs 32 on
+        // the 1D 32-ring and 62 on the line. This is the knee-killer.
+        let g = DeviceMesh::galaxy_torus(1, 1).unwrap();
+        assert_eq!(EtherPhase::scalar_allreduce(&g).unwrap().rounds.len(), 12);
+
+        // Degenerate shapes reproduce the 1D ring's rounds exactly —
+        // for scalar beats and for segmented tile payloads.
+        for n in [4usize, 8] {
+            let ring = DeviceMesh::new(n, 1, 1, MeshTopology::Ring, link).unwrap();
+            for shape in [
+                MeshTopology::Torus2D { rows: 1, cols: n },
+                MeshTopology::Torus2D { rows: n, cols: 1 },
+            ] {
+                let torus = DeviceMesh::new(n, 1, 1, shape, link).unwrap();
+                for payload in [32u64, 2048] {
+                    let a = EtherPhase::allreduce(&ring, payload).unwrap();
+                    let b = EtherPhase::allreduce(&torus, payload).unwrap();
+                    assert_eq!(a.rounds, b.rounds, "{shape:?} payload {payload}");
+                }
+            }
+        }
+
+        // Tile payloads still take the segmented ring along each closed
+        // dimension: 8 segments of ceil(2048/8 → 256) per row round.
+        let tiles = EtherPhase::allreduce(&g, 2048).unwrap();
+        assert_eq!(tiles.label, "allreduce2d");
+        assert_eq!(tiles.rounds[0].len(), 4 * 8); // all 4 rows' rings busy
+        assert_eq!(tiles.rounds[0][0].bytes, 256);
     }
 
     #[test]

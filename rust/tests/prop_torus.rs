@@ -1,0 +1,329 @@
+//! Property tests for the 2D torus mesh layer (PR-9):
+//!
+//! 1. **decomposition independence** — the PCG trajectory over a fixed
+//!    logical core grid is *bit-identical* whether the grid lives on one
+//!    die, a 1D line of dies, or any 2D torus die grid (N ∈ {2, 4, 8, 32});
+//! 2. **degeneracy** — an N×1 torus is the N-die ring exactly: the full
+//!    solve (values AND simulated time AND Ethernet bytes) is bit-equal,
+//!    and both 1×N and N×1 produce the ring's all-reduce round structure
+//!    hop for hop;
+//! 3. **routing** — dimension-ordered torus routes match a BFS shortest-
+//!    path oracle over the physical link graph, for every die pair of
+//!    several shapes;
+//! 4. **critical path** — on a torus the causal span graph stays exact:
+//!    critical-path length == simulated wall time bit-for-bit across
+//!    overlap × schedule;
+//! 5. **accounting** — per-iteration Ethernet bytes match the analytic
+//!    4-seam (N/S/E/W) halo formula plus the 2D all-reduce's hop count.
+
+use wormsim::arch::{ComputeUnit, DataFormat};
+use wormsim::device::{DeviceMesh, EthLink, MeshTopology, TensixGrid};
+use wormsim::engine::{NativeEngine, StencilCoeffs};
+use wormsim::kernels::stencil::{StencilConfig, StencilVariant};
+use wormsim::profiler::Profiler;
+use wormsim::solver::mesh::{seam_bytes_one_way, seam_bytes_one_way_ew};
+use wormsim::solver::{
+    self, MeshOptions, Operator, OverlapMode, PcgOptions, PcgVariant, Problem, Schedule,
+};
+use wormsim::telemetry::{critical_path, retime, WhatIf};
+use wormsim::timing::cost::CostModel;
+use wormsim::ttm::EtherPhase;
+
+fn stencil_cfg(df: DataFormat, tiles: usize) -> StencilConfig {
+    StencilConfig {
+        df,
+        unit: ComputeUnit::for_format(df),
+        tiles_per_core: tiles,
+        variant: StencilVariant::FULL,
+        coeffs: StencilCoeffs::LAPLACIAN,
+    }
+}
+
+fn torus_mesh(mesh_rows: usize, mesh_cols: usize, die_rows: usize, die_cols: usize) -> DeviceMesh {
+    let n = mesh_rows * mesh_cols;
+    DeviceMesh::new(
+        n,
+        die_rows,
+        die_cols,
+        MeshTopology::Torus2D { rows: mesh_rows, cols: mesh_cols },
+        EthLink::for_dies(n),
+    )
+    .unwrap()
+}
+
+fn solve_on(
+    mesh: &DeviceMesh,
+    b: &[wormsim::engine::CoreBlock],
+    tiles: usize,
+    df: DataFormat,
+    variant: PcgVariant,
+    iters: usize,
+) -> solver::MeshPcgResult {
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    let mut opts = PcgOptions::new(variant);
+    opts.max_iters = iters;
+    opts.tol_abs = 0.0;
+    let mut prof = Profiler::disabled();
+    solver::solve_pcg_mesh(
+        mesh,
+        &b.to_vec(),
+        &Operator::Stencil(stencil_cfg(df, tiles)),
+        &e,
+        &cost,
+        &opts.into(),
+        &mut prof,
+    )
+    .unwrap()
+}
+
+#[test]
+fn torus_values_bit_identical_across_decompositions() {
+    // One 4×4 logical core grid, carved four ways: a single die, a 2-die
+    // line, a 2×1 torus (vertical split), a 1×2 torus (horizontal split
+    // — pays the 4× E/W seam), and a 2×2 torus (both axes). The wires
+    // differ wildly; the trajectory must not move a bit.
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    let (df, tiles) = (DataFormat::Bf16, 3);
+    let p = Problem::new(4, 4, tiles, df);
+    let grid = p.make_grid().unwrap();
+    let b = solver::dist_random(&p, 29);
+    let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
+    opts.max_iters = 12;
+    opts.tol_abs = 0.0;
+    let mut prof = Profiler::disabled();
+    let op = Operator::Stencil(stencil_cfg(df, tiles));
+    let single = solver::solve_operator(&grid, &b, &op, &e, &cost, &opts, &mut prof).unwrap();
+
+    for (mesh, what) in [
+        (
+            DeviceMesh::new(2, 2, 4, MeshTopology::Line, EthLink::for_dies(2)).unwrap(),
+            "2-die line",
+        ),
+        (torus_mesh(2, 1, 2, 4), "2x1 torus"),
+        (torus_mesh(1, 2, 4, 2), "1x2 torus"),
+        (torus_mesh(2, 2, 2, 2), "2x2 torus"),
+    ] {
+        assert_eq!(mesh.logical_rows(), 4, "{what}");
+        assert_eq!(mesh.logical_cols(), 4, "{what}");
+        let res = solve_on(&mesh, &b, tiles, df, PcgVariant::FusedBf16, 12);
+        assert_eq!(single.residual_history, res.residual_history, "{what} trajectory");
+        assert_eq!(single.x, res.x, "{what} iterate");
+        assert!(res.eth_bytes_total > 0, "{what} moved seams to Ethernet");
+    }
+
+    // The same at N=8 on an 8×4 logical grid (2×4 die grid of 4×1-core
+    // dies) and at N=32 with one core per die (8×4 die grid) against the
+    // 8×4 single die — the all-dies-tiny extreme of the decomposition.
+    let (tiles8, iters8) = (2usize, 6usize);
+    let p8 = Problem::new(8, 4, tiles8, df);
+    let grid8 = p8.make_grid().unwrap();
+    let b8 = solver::dist_random(&p8, 31);
+    let mut opts8 = PcgOptions::new(PcgVariant::FusedBf16);
+    opts8.max_iters = iters8;
+    opts8.tol_abs = 0.0;
+    let op8 = Operator::Stencil(stencil_cfg(df, tiles8));
+    let single8 =
+        solver::solve_operator(&grid8, &b8, &op8, &e, &cost, &opts8, &mut prof).unwrap();
+    for (mesh, what) in [
+        (torus_mesh(2, 4, 4, 1), "8-die 2x4 torus"),
+        (torus_mesh(8, 4, 1, 1), "32-die 8x4 torus"),
+    ] {
+        assert_eq!((mesh.logical_rows(), mesh.logical_cols()), (8, 4), "{what}");
+        let res = solve_on(&mesh, &b8, tiles8, df, PcgVariant::FusedBf16, iters8);
+        assert_eq!(single8.residual_history, res.residual_history, "{what} trajectory");
+        assert_eq!(single8.x, res.x, "{what} iterate");
+    }
+}
+
+#[test]
+fn nx1_torus_is_the_ring_bit_for_bit() {
+    // Degeneracy, full strength: a 4×1 torus has the ring's wiring AND
+    // the ring's schedules, so the whole solve — values, simulated time,
+    // Ethernet bytes, launch accounting — is bit-equal to Ring. (The 1×4
+    // torus is NOT time-equal: it transposes the logical grid and pays
+    // the 4× E/W seam; its value-equality is covered above.)
+    let (df, tiles, iters) = (DataFormat::Bf16, 4, 5);
+    let ring =
+        DeviceMesh::new(4, 1, 2, MeshTopology::Ring, EthLink::for_dies(4)).unwrap();
+    let torus = torus_mesh(4, 1, 1, 2);
+    let b = solver::mesh_dist_random(&ring, tiles, df, 37);
+    let r = solve_on(&ring, &b, tiles, df, PcgVariant::FusedBf16, iters);
+    let t = solve_on(&torus, &b, tiles, df, PcgVariant::FusedBf16, iters);
+    assert_eq!(r.residual_history, t.residual_history);
+    assert_eq!(r.x, t.x);
+    assert_eq!(r.total_ns, t.total_ns, "N x 1 torus must time exactly like the ring");
+    assert_eq!(r.per_iter_ns, t.per_iter_ns);
+    assert_eq!(r.eth_bytes_total, t.eth_bytes_total);
+    assert_eq!(r.launch, t.launch);
+
+    // And the all-reduce round structure degenerates exactly — hop for
+    // hop, for latency-bound scalars and bandwidth-bound tile payloads,
+    // in both orientations.
+    for n in [4usize, 8] {
+        let ring_n =
+            DeviceMesh::new(n, 1, 1, MeshTopology::Ring, EthLink::for_dies(n)).unwrap();
+        for payload in [32u64, 2048] {
+            let expect = EtherPhase::allreduce(&ring_n, payload).unwrap().rounds;
+            let col = EtherPhase::allreduce2d(&torus_mesh(n, 1, 1, 1), payload).unwrap();
+            let row = EtherPhase::allreduce2d(&torus_mesh(1, n, 1, 1), payload).unwrap();
+            assert_eq!(col.rounds, expect, "{n}x1 @ {payload}B");
+            assert_eq!(row.rounds, expect, "1x{n} @ {payload}B");
+        }
+    }
+}
+
+#[test]
+fn torus_routes_match_a_bfs_shortest_path_oracle() {
+    // Dimension-ordered routing with per-dimension wrap selection must
+    // produce a shortest path over the physical link graph for EVERY die
+    // pair, and never traverse a link that doesn't exist.
+    for (rows, cols) in [(3usize, 3usize), (2, 4), (4, 4), (1, 5)] {
+        let mesh = torus_mesh(rows, cols, 1, 1);
+        let n = mesh.n_dies;
+        let links = mesh.links();
+        let mut adj = vec![Vec::new(); n];
+        for &(a, b) in &links {
+            adj[a].push(b);
+            adj[b].push(a);
+        }
+        for a in 0..n {
+            // BFS distances from a.
+            let mut dist = vec![usize::MAX; n];
+            dist[a] = 0;
+            let mut queue = std::collections::VecDeque::from([a]);
+            while let Some(u) = queue.pop_front() {
+                for &v in &adj[u] {
+                    if dist[v] == usize::MAX {
+                        dist[v] = dist[u] + 1;
+                        queue.push_back(v);
+                    }
+                }
+            }
+            for b in 0..n {
+                let path = mesh.path(a, b);
+                assert_eq!(
+                    path.len(),
+                    dist[b],
+                    "{rows}x{cols}: route {a}->{b} not shortest: {path:?}"
+                );
+                for hop in &path {
+                    assert!(
+                        links.contains(hop),
+                        "{rows}x{cols}: route {a}->{b} uses phantom link {hop:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn torus_critical_path_equals_wall_time_exactly() {
+    // The span graph does not care about the wiring: on a 2×2 torus, for
+    // every overlap × schedule, the recorded graph validates, the
+    // critical path telescopes to the wall time bit-exactly, and the
+    // identity what-if reproduces it.
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    let mesh = torus_mesh(2, 2, 1, 2);
+    let (df, tiles) = (DataFormat::Bf16, 2);
+    let b = solver::mesh_dist_random(&mesh, tiles, df, 41);
+    for overlap in [OverlapMode::Serial, OverlapMode::Pipelined] {
+        for schedule in [Schedule::Classic, Schedule::Prefetch, Schedule::SStep(4)] {
+            let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
+            opts.max_iters = 4;
+            opts.tol_abs = 0.0;
+            opts.telemetry = true;
+            let mut prof = Profiler::disabled();
+            let res = solver::solve_pcg_mesh(
+                &mesh,
+                &b,
+                &Operator::Stencil(stencil_cfg(df, tiles)),
+                &e,
+                &cost,
+                &MeshOptions::new(opts).with_overlap(overlap).with_schedule(schedule),
+                &mut prof,
+            )
+            .unwrap();
+            let what = format!("2x2 torus {overlap:?} {}", schedule.label());
+            res.spans.validate().unwrap_or_else(|err| panic!("{what}: {err}"));
+            let p = critical_path(&res.spans).unwrap_or_else(|err| panic!("{what}: {err}"));
+            assert_eq!(
+                p.length_ns, res.total_ns,
+                "{what}: critical path {} != wall {}",
+                p.length_ns, res.total_ns
+            );
+            assert_eq!(
+                retime(&res.spans, &WhatIf::identity()).unwrap(),
+                res.total_ns,
+                "{what}: identity retime drifted"
+            );
+        }
+    }
+}
+
+#[test]
+fn per_iteration_ethernet_bytes_match_the_four_seam_formula() {
+    // A 2×2 torus of 1×2-core dies: per iteration ONE halo — (R−1)·C
+    // vertical die pairs at the cheap N/S rate and R·(C−1) horizontal
+    // pairs at 4× (the §6.3 strided E/W faces), both directions each —
+    // plus three scalar all-reduces of 2(len−1) single-beat hops per
+    // open dimension group.
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    let (mesh_rows, mesh_cols, die_rows, die_cols) = (2usize, 2usize, 1usize, 2usize);
+    let mesh = torus_mesh(mesh_rows, mesh_cols, die_rows, die_cols);
+    let (df, tiles, iters) = (DataFormat::Bf16, 4, 5);
+    let b = solver::mesh_dist_random(&mesh, tiles, df, 43);
+    let mut opts = PcgOptions::new(PcgVariant::FusedBf16);
+    opts.max_iters = iters;
+    opts.tol_abs = 0.0;
+    let mut prof = Profiler::disabled();
+    let res = solver::solve_pcg_mesh(
+        &mesh,
+        &b,
+        &Operator::Stencil(stencil_cfg(df, tiles)),
+        &e,
+        &cost,
+        &opts.into(),
+        &mut prof,
+    )
+    .unwrap();
+    assert_eq!(res.iters, iters);
+
+    let ns = seam_bytes_one_way(die_cols, tiles, df);
+    let ew = seam_bytes_one_way_ew(die_rows, tiles, df);
+    assert_eq!(ew * (die_cols as u64), 4 * ns * (die_rows as u64), "E/W is the 4x direction");
+    let v_pairs = ((mesh_rows - 1) * mesh_cols) as u64;
+    let h_pairs = (mesh_rows * (mesh_cols - 1)) as u64;
+    let halo_per_iter = v_pairs * 2 * ns + h_pairs * 2 * ew;
+    // Both 2-member dimensions are open (wrap needs > 2 dies): each row
+    // group pays combine + chain-broadcast = 2 hops, so the row phase
+    // carries 2 groups × 2 hops and the column phase the same.
+    let allreduce_bytes = (mesh_rows * 2 * (mesh_cols - 1) + mesh_cols * 2 * (mesh_rows - 1))
+        as u64
+        * 32;
+    let phase = EtherPhase::scalar_allreduce(&mesh).unwrap();
+    assert_eq!(phase.bytes(), allreduce_bytes);
+    assert_eq!(phase.rounds.len(), 4, "2 combine/broadcast rounds per phase");
+    let expected = iters as u64 * (halo_per_iter + 3 * allreduce_bytes);
+    assert_eq!(res.eth_bytes_total, expected);
+}
+
+#[test]
+fn galaxy_torus_cuts_allreduce_rounds_to_o_sqrt_n() {
+    // The headline: at 32 dies the line pays 62 serial scalar rounds, the
+    // ring 32 (both-ways combine + both-ways broadcast), the 4×8 torus 12
+    // (8 row-phase + 4 column-phase). This is the knee killer — rounds
+    // per phase scale with the dimension length, not the die count.
+    let n = 32usize;
+    let line = DeviceMesh::new(n, 1, 1, MeshTopology::Line, EthLink::for_dies(n)).unwrap();
+    let ring = DeviceMesh::new(n, 1, 1, MeshTopology::Ring, EthLink::for_dies(n)).unwrap();
+    let torus = torus_mesh(4, 8, 1, 1);
+    let rounds = |m: &DeviceMesh| EtherPhase::scalar_allreduce(m).unwrap().rounds.len();
+    assert_eq!(rounds(&line), 62);
+    assert_eq!(rounds(&ring), 32);
+    assert_eq!(rounds(&torus), 12);
+}
