@@ -1,0 +1,530 @@
+//! Deterministic fault injection for mesh solves (ISSUE 10).
+//!
+//! A [`FaultPlan`] is a seedable *script* of component failures — link
+//! cuts, per-window link degradation, die loss, and silent data
+//! corruption (SDC) — parsed from a compact `--faults` spec string or a
+//! JSON file and threaded through `MeshOptions` into the mesh solver.
+//! The plan itself is pure data: it never mutates the mesh. The solver
+//! samples it at iteration boundaries ([`FaultPlan::state_at`]) and
+//! reacts — rerouting via [`crate::device::DeviceMesh::path`]'s BFS
+//! fallback, re-lowering onto the degraded topology, charging the retry
+//! penalty ([`FaultPlan::retry_penalty_ns`]) to the ledger's `retry`
+//! row, and rolling back to the last checkpoint on die loss or a
+//! detected SDC (`solver::resilient`).
+//!
+//! Spec grammar (`;`-separated events, times take `ns`/`us`/`ms`
+//! suffixes, default ns):
+//!
+//! ```text
+//! link_down:A-B@T            cut the A↔B link at time T
+//! link_degrade:A-B@T0..T1xF  multiply A↔B transfer durations by F in [T0,T1)
+//! die_down:D@T               die D is lost at time T
+//! sdc:COMP@ITER              corrupt COMP's output at iteration ITER
+//! seed:N                     retry/corruption PRNG seed (default 0)
+//! ```
+//!
+//! e.g. `--faults 'link_down:0-1@5us;sdc:spmv@20'`. Determinism: the
+//! same plan + seed always yields the same retry counts and the same
+//! corrupted bits, so faulted solves are exactly reproducible.
+
+use std::collections::BTreeSet;
+
+use crate::timing::SimNs;
+use crate::util::jsonmini::Json;
+use crate::util::prng::Rng;
+
+/// One scripted fault event. Link endpoints are stored normalized
+/// (`a < b`) so they match [`crate::device::EthSim`]'s link keys.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultEvent {
+    /// The a↔b Ethernet link is permanently cut at `t_ns`.
+    LinkDown { a: usize, b: usize, t_ns: SimNs },
+    /// Transfers on a↔b take `factor`× as long while `t0_ns <= t < t1_ns`
+    /// (a flapping or error-correcting link; factor ≥ 1).
+    LinkDegrade { a: usize, b: usize, factor: f64, t0_ns: SimNs, t1_ns: SimNs },
+    /// Die `die` is permanently lost at `t_ns` (all its links go down;
+    /// its subdomain's work migrates to a surviving neighbor).
+    DieDown { die: usize, t_ns: SimNs },
+    /// The named component's output vector is silently corrupted at the
+    /// given 1-based PCG iteration (a bit-flip-class soft error).
+    Sdc { component: String, iter: usize },
+}
+
+/// The topology-affecting fault state active at one instant: which dies
+/// and links are down and how surviving links are degraded. The solver
+/// re-lowers whenever this changes between iterations (a "fault epoch").
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultState {
+    pub down_dies: BTreeSet<usize>,
+    /// Normalized (min, max) down link keys — explicit `link_down`s plus
+    /// every mesh link incident to a down die.
+    pub down_links: BTreeSet<(usize, usize)>,
+    /// Per-link transfer-duration multipliers (product of active
+    /// degradation windows), sorted by link key.
+    pub slowdown: Vec<((usize, usize), f64)>,
+}
+
+impl FaultState {
+    pub fn is_clean(&self) -> bool {
+        self.down_dies.is_empty() && self.down_links.is_empty() && self.slowdown.is_empty()
+    }
+}
+
+/// A deterministic, seedable script of fault events.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub events: Vec<FaultEvent>,
+}
+
+/// Timeout before a transfer on a newly-dead link is declared lost.
+pub const RETRY_TIMEOUT_NS: f64 = 50_000.0;
+/// Bounded retries before the transport reroutes around the link.
+pub const RETRY_MAX: u64 = 3;
+/// Exponential backoff factor between successive retries.
+pub const RETRY_BACKOFF: f64 = 2.0;
+
+/// Parse a time literal with an optional ns/us/ms suffix (default ns).
+fn parse_time(s: &str) -> Result<SimNs, String> {
+    let (num, mult) = if let Some(v) = s.strip_suffix("ns") {
+        (v, 1.0)
+    } else if let Some(v) = s.strip_suffix("us") {
+        (v, 1_000.0)
+    } else if let Some(v) = s.strip_suffix("ms") {
+        (v, 1_000_000.0)
+    } else {
+        (s, 1.0)
+    };
+    let t: f64 = num
+        .trim()
+        .parse()
+        .map_err(|_| format!("bad time literal '{s}' (expected e.g. 5us, 2500ns)"))?;
+    if !t.is_finite() || t < 0.0 {
+        return Err(format!("time '{s}' must be finite and >= 0"));
+    }
+    Ok(t * mult)
+}
+
+/// Parse a `A-B` die pair into a normalized (min, max) key.
+fn parse_pair(s: &str) -> Result<(usize, usize), String> {
+    let (a, b) = s
+        .split_once('-')
+        .ok_or_else(|| format!("bad link '{s}' (expected A-B die pair)"))?;
+    let a: usize = a.trim().parse().map_err(|_| format!("bad die index '{a}' in link '{s}'"))?;
+    let b: usize = b.trim().parse().map_err(|_| format!("bad die index '{b}' in link '{s}'"))?;
+    if a == b {
+        return Err(format!("link '{s}' joins a die to itself"));
+    }
+    Ok((a.min(b), a.max(b)))
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse the `;`-separated spec grammar (see module docs).
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut plan = FaultPlan::default();
+        for entry in spec.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+            let (kind, rest) = entry
+                .split_once(':')
+                .ok_or_else(|| format!("fault event '{entry}' is not kind:spec"))?;
+            match kind.trim() {
+                "seed" => {
+                    plan.seed = rest
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad fault seed '{rest}'"))?;
+                }
+                "link_down" => {
+                    let (pair, t) = rest
+                        .split_once('@')
+                        .ok_or_else(|| format!("link_down '{entry}' needs A-B@TIME"))?;
+                    let (a, b) = parse_pair(pair)?;
+                    plan.events.push(FaultEvent::LinkDown { a, b, t_ns: parse_time(t)? });
+                }
+                "link_degrade" => {
+                    let (pair, win) = rest
+                        .split_once('@')
+                        .ok_or_else(|| format!("link_degrade '{entry}' needs A-B@T0..T1xF"))?;
+                    let (a, b) = parse_pair(pair)?;
+                    let (range, factor) = win
+                        .rsplit_once('x')
+                        .ok_or_else(|| format!("link_degrade '{entry}' needs a xFACTOR suffix"))?;
+                    let (t0, t1) = range
+                        .split_once("..")
+                        .ok_or_else(|| format!("link_degrade '{entry}' needs a T0..T1 window"))?;
+                    let factor: f64 = factor
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad degrade factor '{factor}' in '{entry}'"))?;
+                    if !(factor.is_finite() && factor >= 1.0) {
+                        return Err(format!(
+                            "degrade factor {factor} in '{entry}' must be >= 1 (slower, not faster)"
+                        ));
+                    }
+                    let (t0_ns, t1_ns) = (parse_time(t0)?, parse_time(t1)?);
+                    if t1_ns <= t0_ns {
+                        return Err(format!("degrade window '{entry}' is empty (T1 <= T0)"));
+                    }
+                    plan.events.push(FaultEvent::LinkDegrade { a, b, factor, t0_ns, t1_ns });
+                }
+                "die_down" => {
+                    let (die, t) = rest
+                        .split_once('@')
+                        .ok_or_else(|| format!("die_down '{entry}' needs DIE@TIME"))?;
+                    let die: usize = die
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad die index '{die}' in '{entry}'"))?;
+                    plan.events.push(FaultEvent::DieDown { die, t_ns: parse_time(t)? });
+                }
+                "sdc" => {
+                    let (comp, iter) = rest
+                        .split_once('@')
+                        .ok_or_else(|| format!("sdc '{entry}' needs COMPONENT@ITER"))?;
+                    let comp = comp.trim();
+                    if comp.is_empty() {
+                        return Err(format!("sdc '{entry}' names no component"));
+                    }
+                    let iter: usize = iter
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad sdc iteration '{iter}' in '{entry}'"))?;
+                    if iter == 0 {
+                        return Err(format!("sdc iteration in '{entry}' is 1-based, got 0"));
+                    }
+                    plan.events.push(FaultEvent::Sdc { component: comp.to_string(), iter });
+                }
+                other => {
+                    return Err(format!(
+                        "unknown fault kind '{other}' (expected link_down|link_degrade|die_down|sdc|seed)"
+                    ))
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Parse the JSON file form:
+    /// `{"seed":1,"events":[{"kind":"link_down","a":0,"b":1,"t_ns":5000}, ...]}`.
+    pub fn from_json(text: &str) -> Result<Self, String> {
+        let v = Json::parse(text)?;
+        let mut plan = FaultPlan::default();
+        plan.seed = v.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        let events = v
+            .get("events")
+            .and_then(Json::as_arr)
+            .ok_or("fault JSON needs an \"events\" array")?;
+        let num = |e: &Json, k: &str| -> Result<f64, String> {
+            e.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("fault event missing numeric \"{k}\""))
+        };
+        for e in events {
+            let kind = e
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or("fault event missing \"kind\"")?;
+            match kind {
+                "link_down" => {
+                    let (a, b) = (num(e, "a")? as usize, num(e, "b")? as usize);
+                    plan.events.push(FaultEvent::LinkDown {
+                        a: a.min(b),
+                        b: a.max(b),
+                        t_ns: num(e, "t_ns")?,
+                    });
+                }
+                "link_degrade" => {
+                    let (a, b) = (num(e, "a")? as usize, num(e, "b")? as usize);
+                    plan.events.push(FaultEvent::LinkDegrade {
+                        a: a.min(b),
+                        b: a.max(b),
+                        factor: num(e, "factor")?,
+                        t0_ns: num(e, "t0_ns")?,
+                        t1_ns: num(e, "t1_ns")?,
+                    });
+                }
+                "die_down" => plan.events.push(FaultEvent::DieDown {
+                    die: num(e, "die")? as usize,
+                    t_ns: num(e, "t_ns")?,
+                }),
+                "sdc" => plan.events.push(FaultEvent::Sdc {
+                    component: e
+                        .get("component")
+                        .and_then(Json::as_str)
+                        .ok_or("sdc event missing \"component\"")?
+                        .to_string(),
+                    iter: num(e, "iter")? as usize,
+                }),
+                other => return Err(format!("unknown fault kind '{other}' in JSON")),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Load from a spec string, or — when the argument names a `.json`
+    /// path (or is prefixed with `@`) — from a JSON file.
+    pub fn load(spec: &str) -> Result<Self, String> {
+        let path = spec.strip_prefix('@').or_else(|| {
+            std::path::Path::new(spec)
+                .extension()
+                .is_some_and(|e| e == "json")
+                .then_some(spec)
+        });
+        match path {
+            Some(p) => {
+                let text = std::fs::read_to_string(p)
+                    .map_err(|e| format!("cannot read fault plan {p}: {e}"))?;
+                Self::from_json(&text)
+            }
+            None => Self::parse(spec),
+        }
+    }
+
+    /// Check every event against a mesh: die/link indices in range and
+    /// links that actually exist in the topology.
+    pub fn validate(&self, mesh: &crate::device::DeviceMesh) -> crate::Result<()> {
+        let err = |m: String| Err(crate::SimError::Other(m));
+        for e in &self.events {
+            match e {
+                FaultEvent::LinkDown { a, b, .. } | FaultEvent::LinkDegrade { a, b, .. } => {
+                    if *b >= mesh.n_dies {
+                        return err(format!(
+                            "fault link {a}-{b} outside the {}-die mesh",
+                            mesh.n_dies
+                        ));
+                    }
+                    if !mesh.are_linked(*a, *b) {
+                        return err(format!(
+                            "fault link {a}-{b} does not exist in the {} topology",
+                            mesh.topology.label()
+                        ));
+                    }
+                }
+                FaultEvent::DieDown { die, .. } => {
+                    if *die >= mesh.n_dies {
+                        return err(format!(
+                            "fault die {die} outside the {}-die mesh",
+                            mesh.n_dies
+                        ));
+                    }
+                    if mesh.n_dies < 2 {
+                        return err("die_down needs at least 2 dies to migrate work".to_string());
+                    }
+                }
+                FaultEvent::Sdc { component, .. } => {
+                    if component.is_empty() {
+                        return err("sdc event names no component".to_string());
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Dies down at or before `t`.
+    pub fn down_dies_at(&self, t: SimNs) -> BTreeSet<usize> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::DieDown { die, t_ns } if *t_ns <= t => Some(*die),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// The full topology-affecting state at `t`: down dies, down links
+    /// (explicit cuts plus every mesh link touching a down die), and the
+    /// active per-link slowdown factors.
+    pub fn state_at(&self, mesh: &crate::device::DeviceMesh, t: SimNs) -> FaultState {
+        let down_dies = self.down_dies_at(t);
+        let mut down_links: BTreeSet<(usize, usize)> = self
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::LinkDown { a, b, t_ns } if *t_ns <= t => Some((*a, *b)),
+                _ => None,
+            })
+            .collect();
+        if !down_dies.is_empty() {
+            for (a, b) in mesh.links() {
+                if down_dies.contains(&a) || down_dies.contains(&b) {
+                    down_links.insert((a, b));
+                }
+            }
+        }
+        let mut slowdown: std::collections::BTreeMap<(usize, usize), f64> =
+            std::collections::BTreeMap::new();
+        for e in &self.events {
+            if let FaultEvent::LinkDegrade { a, b, factor, t0_ns, t1_ns } = e {
+                if *t0_ns <= t && t < *t1_ns && !down_links.contains(&(*a, *b)) {
+                    *slowdown.entry((*a, *b)).or_insert(1.0) *= factor;
+                }
+            }
+        }
+        FaultState {
+            down_dies,
+            down_links,
+            slowdown: slowdown.into_iter().collect(),
+        }
+    }
+
+    /// Whether `component`'s output is corrupted at (1-based) `iter`.
+    pub fn sdc_at(&self, component: &str, iter: usize) -> bool {
+        self.events.iter().any(|e| {
+            matches!(e, FaultEvent::Sdc { component: c, iter: i }
+                if c == component && *i == iter)
+        })
+    }
+
+    /// Retry-with-backoff penalty paid when `n_lost` links with in-flight
+    /// traffic go down: each loss costs one detection timeout plus a
+    /// seed-deterministic number of exponentially backed-off retries
+    /// before the transport gives up and reroutes. `draw` indexes the
+    /// fault occurrence so successive losses draw fresh (but still
+    /// deterministic) retry counts.
+    pub fn retry_penalty_ns(&self, n_lost: usize, draw: u64) -> SimNs {
+        let mut total = 0.0;
+        let mut rng = Rng::new(self.seed ^ 0x9e3779b97f4a7c15 ^ draw);
+        for _ in 0..n_lost {
+            let retries = 1 + rng.below(RETRY_MAX);
+            let mut cost = RETRY_TIMEOUT_NS; // detection timeout
+            let mut step = RETRY_TIMEOUT_NS;
+            for _ in 0..retries {
+                step *= RETRY_BACKOFF;
+                cost += step;
+            }
+            total += cost;
+        }
+        total
+    }
+
+    /// Deterministic corruption magnitude for an SDC event (a large
+    /// additive perturbation, as a flipped exponent bit would make).
+    pub fn sdc_magnitude(&self, iter: usize) -> f32 {
+        let mut rng = Rng::new(self.seed ^ 0x5dc_f107 ^ iter as u64);
+        1.0e3 * (1.0 + rng.next_f32())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{DeviceMesh, EthLink, MeshTopology};
+
+    #[test]
+    fn spec_grammar_round_trips_each_kind() {
+        let p = FaultPlan::parse(
+            "seed:7; link_down:1-0@5us; link_degrade:2-3@1us..2msx4.0; die_down:3@20us; sdc:spmv@20",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.events.len(), 4);
+        // Pairs normalize to (min, max); times scale by suffix.
+        assert_eq!(p.events[0], FaultEvent::LinkDown { a: 0, b: 1, t_ns: 5_000.0 });
+        assert_eq!(
+            p.events[1],
+            FaultEvent::LinkDegrade { a: 2, b: 3, factor: 4.0, t0_ns: 1_000.0, t1_ns: 2_000_000.0 }
+        );
+        assert_eq!(p.events[2], FaultEvent::DieDown { die: 3, t_ns: 20_000.0 });
+        assert_eq!(p.events[3], FaultEvent::Sdc { component: "spmv".to_string(), iter: 20 });
+        // The CI smoke spec parses.
+        FaultPlan::parse("link_down:0-1@5us;sdc:spmv@20").unwrap();
+        // Empty spec = empty plan.
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn bad_specs_return_descriptive_errors() {
+        for (spec, needle) in [
+            ("melt:0@1us", "unknown fault kind"),
+            ("link_down:0@5us", "A-B"),
+            ("link_down:2-2@5us", "itself"),
+            ("link_down:0-1@yesterday", "bad time"),
+            ("link_down:0-1@-5", ">= 0"),
+            ("link_degrade:0-1@1..2", "xFACTOR"),
+            ("link_degrade:0-1@1..2x0.5", ">= 1"),
+            ("link_degrade:0-1@2..1x4", "empty"),
+            ("sdc:@20", "no component"),
+            ("sdc:spmv@0", "1-based"),
+            ("die_down:x@1", "bad die index"),
+            ("garbage", "kind:spec"),
+        ] {
+            let e = FaultPlan::parse(spec).unwrap_err();
+            assert!(e.contains(needle), "spec '{spec}' gave '{e}', wanted '{needle}'");
+        }
+    }
+
+    #[test]
+    fn json_form_matches_spec_form() {
+        let json = r#"{"seed":7,"events":[
+            {"kind":"link_down","a":1,"b":0,"t_ns":5000},
+            {"kind":"link_degrade","a":2,"b":3,"factor":4.0,"t0_ns":1000,"t1_ns":2000000},
+            {"kind":"die_down","die":3,"t_ns":20000},
+            {"kind":"sdc","component":"spmv","iter":20}]}"#;
+        let from_json = FaultPlan::from_json(json).unwrap();
+        let from_spec = FaultPlan::parse(
+            "seed:7; link_down:1-0@5us; link_degrade:2-3@1us..2msx4.0; die_down:3@20us; sdc:spmv@20",
+        )
+        .unwrap();
+        assert_eq!(from_json, from_spec);
+        assert!(FaultPlan::from_json("{}").is_err());
+        assert!(FaultPlan::from_json(r#"{"events":[{"kind":"warp"}]}"#).is_err());
+    }
+
+    #[test]
+    fn state_at_windows_and_die_loss_links() {
+        let mesh =
+            DeviceMesh::new(8, 1, 2, MeshTopology::Torus2D { rows: 2, cols: 4 }, EthLink::default())
+                .unwrap();
+        let p = FaultPlan::parse("link_down:0-1@5us; link_degrade:1-2@1us..3usx4; die_down:6@9us")
+            .unwrap();
+        p.validate(&mesh).unwrap();
+        // Before anything fires: clean.
+        assert!(p.state_at(&mesh, 0.0).is_clean());
+        // Inside the degrade window only.
+        let s = p.state_at(&mesh, 2_000.0);
+        assert!(s.down_links.is_empty());
+        assert_eq!(s.slowdown, vec![((1, 2), 4.0)]);
+        // Past the window, at the link cut.
+        let s = p.state_at(&mesh, 5_000.0);
+        assert_eq!(s.down_links.iter().copied().collect::<Vec<_>>(), vec![(0, 1)]);
+        assert!(s.slowdown.is_empty());
+        // Die loss takes every incident link down with it.
+        let s = p.state_at(&mesh, 10_000.0);
+        assert_eq!(s.down_dies.iter().copied().collect::<Vec<_>>(), vec![6]);
+        assert!(s.down_links.contains(&(0, 1)));
+        for l in mesh.links() {
+            assert_eq!(s.down_links.contains(&l) || !(l.0 == 6 || l.1 == 6), true);
+        }
+        // Validation rejects out-of-mesh and non-existent links.
+        assert!(FaultPlan::parse("die_down:9@1").unwrap().validate(&mesh).is_err());
+        assert!(FaultPlan::parse("link_down:0-7@1").unwrap().validate(&mesh).is_err());
+        let single = DeviceMesh::n150(1, 1).unwrap();
+        assert!(FaultPlan::parse("die_down:0@1").unwrap().validate(&single).is_err());
+    }
+
+    #[test]
+    fn retry_penalty_is_deterministic_and_bounded() {
+        let p = FaultPlan { seed: 42, events: Vec::new() };
+        let a = p.retry_penalty_ns(2, 0);
+        let b = p.retry_penalty_ns(2, 0);
+        assert_eq!(a, b, "same seed + draw => same penalty");
+        assert!(a > 0.0);
+        // Bounded: detection + at most RETRY_MAX backed-off retries per link.
+        let mut worst_one = RETRY_TIMEOUT_NS;
+        let mut step = RETRY_TIMEOUT_NS;
+        for _ in 0..RETRY_MAX {
+            step *= RETRY_BACKOFF;
+            worst_one += step;
+        }
+        assert!(a <= 2.0 * worst_one + 1e-9);
+        // Different draws decorrelate (distinct fault occurrences).
+        assert!(p.retry_penalty_ns(1, 1) > 0.0);
+        // Corruption magnitude is deterministic and large.
+        assert_eq!(p.sdc_magnitude(20), p.sdc_magnitude(20));
+        assert!(p.sdc_magnitude(20) >= 1.0e3);
+    }
+}

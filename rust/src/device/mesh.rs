@@ -18,7 +18,7 @@
 //! [`crate::ttm::EtherPhase`]s to programs), and *when* it is charged by
 //! the one scheduler in [`crate::ttm::exec::execute_program`].
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use crate::arch::constants::N300D_DRAM_BYTES;
 use crate::arch::specs::{EthLinkSpec, ETH_BACKPLANE, ETH_ONBOARD, GALAXY_DIES};
@@ -109,11 +109,27 @@ pub struct EthSim {
     pub transfers: Vec<EthTransfer>,
     pub messages: u64,
     pub bytes: u64,
+    /// Per-link service-time multipliers (≥ 1.0) for degraded links — a
+    /// transfer over a degraded link holds the wire `factor` times
+    /// longer. Empty (the default) leaves every transfer bit-identical
+    /// to the undegraded model; the fault layer populates it from the
+    /// [`crate::device::FaultPlan`] window active at the component's
+    /// execution epoch.
+    link_slowdown: BTreeMap<(usize, usize), f64>,
 }
 
 impl EthSim {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Install per-link degradation factors (pairs normalized to
+    /// (lower, higher)). Replaces any previous map.
+    pub fn set_slowdown(&mut self, factors: &[((usize, usize), f64)]) {
+        self.link_slowdown = factors
+            .iter()
+            .map(|&((a, b), f)| ((a.min(b), a.max(b)), f))
+            .collect();
     }
 
     /// Move `bytes` from `src_die` to `dst_die` over their (undirected)
@@ -133,7 +149,11 @@ impl EthSim {
         let key = (src_die.min(dst_die), src_die.max(dst_die));
         let free = self.link_free.get(&key).copied().unwrap_or(0.0);
         let begin = start.max(free);
-        let end = begin + link.transfer_ns(bytes);
+        let mut service = link.transfer_ns(bytes);
+        if let Some(&factor) = self.link_slowdown.get(&key) {
+            service *= factor;
+        }
+        let end = begin + service;
         self.link_free.insert(key, end);
         *self.busy_ns.entry(key).or_insert(0.0) += end - begin;
         self.transfers.push(EthTransfer {
@@ -292,6 +312,13 @@ pub struct DeviceMesh {
     pub topology: MeshTopology,
     /// Uniform link model (per-topology preset from `arch::specs`).
     pub link: EthLink,
+    /// Links currently out of service, as normalized (lower, higher)
+    /// die pairs. Empty on every mesh built by [`Self::new`]; the fault
+    /// layer derives faulted meshes with [`Self::with_down_links`].
+    /// [`Self::path`] routes around these (BFS fallback when the
+    /// dimension-ordered route is cut); [`Self::links`] still reports
+    /// the physical wiring.
+    pub down: BTreeSet<(usize, usize)>,
 }
 
 impl DeviceMesh {
@@ -330,7 +357,18 @@ impl DeviceMesh {
             die_cols,
             topology,
             link,
+            down: BTreeSet::new(),
         })
+    }
+
+    /// A copy of this mesh with the given links marked out of service
+    /// (pairs normalized; unknown pairs are ignored by routing since no
+    /// path ever used them). The original mesh is untouched — fault-free
+    /// callers never see a `down` set.
+    pub fn with_down_links(&self, links: &[(usize, usize)]) -> Self {
+        let mut m = self.clone();
+        m.down = links.iter().map(|&(a, b)| (a.min(b), a.max(b))).collect();
+        m
     }
 
     /// One die, no links — the n150.
@@ -477,6 +515,25 @@ impl DeviceMesh {
     /// direct), the NOC0-vs-NOC1 directional choice applied per
     /// dimension.
     pub fn path(&self, a: usize, b: usize) -> Vec<(usize, usize)> {
+        let nominal = self.nominal_path(a, b);
+        if self.down.is_empty() || nominal.iter().all(|h| !self.down.contains(h)) {
+            return nominal;
+        }
+        // The dimension-ordered (or arc) route crosses a down link:
+        // fall back to a shortest path over the live links — the same
+        // BFS the prop_torus oracle uses to certify nominal routes.
+        self.bfs_path(a, b).unwrap_or_else(|| {
+            panic!(
+                "no live route from die {a} to die {b}: down links {:?} disconnect the mesh",
+                self.down
+            )
+        })
+    }
+
+    /// The fault-oblivious route (dimension-ordered on a torus, shorter
+    /// arc on a ring, chain on a line) — what [`Self::path`] returns
+    /// whenever no down link cuts it.
+    fn nominal_path(&self, a: usize, b: usize) -> Vec<(usize, usize)> {
         assert!(a < self.n_dies && b < self.n_dies, "die index out of range");
         if a == b {
             return Vec::new();
@@ -514,6 +571,86 @@ impl DeviceMesh {
         } else {
             (lo..hi).map(|d| (d, d + 1)).collect()
         }
+    }
+
+    /// The physical links minus the down set — the edges routing may
+    /// actually use.
+    pub fn live_links(&self) -> Vec<(usize, usize)> {
+        self.links()
+            .into_iter()
+            .filter(|l| !self.down.contains(l))
+            .collect()
+    }
+
+    /// Shortest live route from `a` to `b` by breadth-first search over
+    /// [`Self::live_links`] (the prop_torus oracle machinery, promoted
+    /// to a routing fallback). `None` when the down set disconnects the
+    /// pair. Neighbor order follows the sorted link list, so the result
+    /// is deterministic.
+    pub fn bfs_path(&self, a: usize, b: usize) -> Option<Vec<(usize, usize)>> {
+        assert!(a < self.n_dies && b < self.n_dies, "die index out of range");
+        if a == b {
+            return Some(Vec::new());
+        }
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); self.n_dies];
+        for (x, y) in self.live_links() {
+            adj[x].push(y);
+            adj[y].push(x);
+        }
+        let mut prev: Vec<Option<usize>> = vec![None; self.n_dies];
+        let mut seen = vec![false; self.n_dies];
+        seen[a] = true;
+        let mut queue = VecDeque::from([a]);
+        while let Some(d) = queue.pop_front() {
+            if d == b {
+                let mut hops = Vec::new();
+                let mut cur = b;
+                while let Some(p) = prev[cur] {
+                    hops.push((p.min(cur), p.max(cur)));
+                    cur = p;
+                }
+                hops.reverse();
+                return Some(hops);
+            }
+            for &n in &adj[d] {
+                if !seen[n] {
+                    seen[n] = true;
+                    prev[n] = Some(d);
+                    queue.push_back(n);
+                }
+            }
+        }
+        None
+    }
+
+    /// Whether every pair of `survivors` can still reach each other over
+    /// the live links, ignoring dies not in the set (the solver checks
+    /// this before resuming on a degraded mesh).
+    pub fn survivors_connected(&self, survivors: &BTreeSet<usize>) -> bool {
+        let Some(&first) = survivors.iter().next() else {
+            return true;
+        };
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); self.n_dies];
+        for (x, y) in self.live_links() {
+            if survivors.contains(&x) && survivors.contains(&y) {
+                adj[x].push(y);
+                adj[y].push(x);
+            }
+        }
+        let mut seen = vec![false; self.n_dies];
+        seen[first] = true;
+        let mut queue = VecDeque::from([first]);
+        let mut reached = 1usize;
+        while let Some(d) = queue.pop_front() {
+            for &n in &adj[d] {
+                if !seen[n] {
+                    seen[n] = true;
+                    reached += 1;
+                    queue.push_back(n);
+                }
+            }
+        }
+        reached == survivors.len()
     }
 
     /// Number of links on the `a`→`b` path.
@@ -841,6 +978,69 @@ mod tests {
         assert_eq!(busy[0].0, (0, 1));
         assert!((busy[0].1 - 2.0 * link.transfer_ns(1100)).abs() < 1e-9);
         assert!((busy[1].1 - link.transfer_ns(2200)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn path_routes_around_down_links() {
+        let m = DeviceMesh::new(
+            8,
+            1,
+            1,
+            MeshTopology::Torus2D { rows: 2, cols: 4 },
+            EthLink::default(),
+        )
+        .unwrap();
+        // Nominal 0→1 is the direct link.
+        assert_eq!(m.path(0, 1), vec![(0, 1)]);
+        // Cut it: the BFS fallback finds a live detour of physical links.
+        let f = m.with_down_links(&[(0, 1)]);
+        let detour = f.path(0, 1);
+        assert!(!detour.contains(&(0, 1)), "detour reuses the cut link: {detour:?}");
+        assert!(!detour.is_empty());
+        let live = f.live_links();
+        for hop in &detour {
+            assert!(live.contains(hop), "detour hop {hop:?} is not a live link");
+        }
+        // Consecutive hops chain 0 → … → 1.
+        let mut at = 0usize;
+        for &(x, y) in &detour {
+            at = if x == at { y } else { x };
+        }
+        assert_eq!(at, 1);
+        // Routes the cut does not touch are returned verbatim.
+        assert_eq!(f.path(2, 3), m.path(2, 3));
+        // An empty down set is the identity on every pair.
+        let same = m.with_down_links(&[]);
+        for a in 0..8 {
+            for b in 0..8 {
+                assert_eq!(same.path(a, b), m.path(a, b), "{a}->{b}");
+            }
+        }
+        // Cutting every link off die 0 disconnects it.
+        let dead = m.with_down_links(&[(0, 1), (0, 3), (0, 4)]);
+        assert!(dead.bfs_path(0, 5).is_none());
+        let survivors: BTreeSet<usize> = (1..8).collect();
+        assert!(dead.survivors_connected(&survivors));
+        assert!(!dead.survivors_connected(&(0..8).collect()));
+    }
+
+    #[test]
+    fn eth_sim_slowdown_stretches_only_degraded_links() {
+        let link = EthLink::default(); // 800 + bytes/11 ns
+        let one = link.transfer_ns(1100); // 900 ns
+        let mut sim = EthSim::new();
+        sim.set_slowdown(&[((1, 0), 3.0)]); // normalized to (0,1)
+        let a = sim.transfer(&link, 0, 1, 1100, 0.0);
+        assert!((a - 3.0 * one).abs() < 1e-9, "degraded link: {a}");
+        let b = sim.transfer(&link, 1, 2, 1100, 0.0);
+        assert!((b - one).abs() < 1e-9, "clean link unaffected: {b}");
+        // Queueing still serializes on the degraded wire.
+        let c = sim.transfer(&link, 1, 0, 1100, 0.0);
+        assert!((c - 6.0 * one).abs() < 1e-9, "queued behind slow transfer: {c}");
+        // An empty map is bit-identical to the undegraded model.
+        let mut clean = EthSim::new();
+        clean.set_slowdown(&[]);
+        assert_eq!(clean.transfer(&link, 0, 1, 1100, 0.0), one);
     }
 
     #[test]

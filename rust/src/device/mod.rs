@@ -4,6 +4,7 @@
 pub mod cb;
 pub mod core;
 pub mod dram;
+pub mod faults;
 pub mod grid;
 pub mod mesh;
 pub mod sram;
@@ -11,6 +12,7 @@ pub mod sram;
 pub use cb::CircularBuffer;
 pub use core::{Coord, CoreCounters, TensixCore};
 pub use dram::Dram;
+pub use faults::{FaultEvent, FaultPlan, FaultState};
 pub use grid::TensixGrid;
 pub use mesh::{DeviceMesh, EthLink, EthSim, EthTransfer, MeshTopology};
 pub use sram::Sram;

@@ -259,19 +259,166 @@ pub fn figures_snapshot(smoke: bool) -> crate::Result<BenchSnapshot> {
     Ok(s)
 }
 
+/// The fault-tolerance sweep (`BENCH_resilience.json`): checkpoint
+/// overhead as a function of the interval `k` on a fault-free solve, and
+/// end-to-end recovery overhead under each scripted fault class. All
+/// figures are simulated and deterministic — the fault plan is part of
+/// the configuration, so the "faulted" numbers regenerate byte-stable.
+///
+/// Two families of metrics:
+///   * `total_ns{checkpoint=k}` and `checkpoint_overhead_frac{checkpoint=k}`
+///     — the k∈{0,8,32} interval sweep with NO faults (k=0 is the
+///     baseline; its overhead row is exactly 0 by construction). This is
+///     the cost side of the interval trade-off: smaller k = more
+///     checkpoint traffic per solve.
+///   * `total_ns{fault=...}`, `recovery_overhead_frac{fault=...}`,
+///     `rollbacks`/`fault_epochs`/`retry_ns{fault=...}` — one scripted
+///     scenario per fault class, against the same clean baseline. This is
+///     the benefit side: time-to-recover (rollback depth) shrinks as k
+///     shrinks, so the knee of overhead-vs-recovery sits near the k where
+///     checkpoint cost per interval matches expected rework.
+pub fn resilience_snapshot(smoke: bool) -> crate::Result<BenchSnapshot> {
+    use crate::device::FaultPlan;
+    use crate::solver::ResilienceOptions;
+    use crate::telemetry::Resource;
+
+    let (rows, cols, tiles) = (4usize, 4usize, 8usize);
+    let dies = 8usize;
+    // Same iteration count in smoke and full runs so the smoke subset's
+    // metric *values* (not just ids) match the committed full snapshot.
+    let iters = 32usize;
+    let mut s = BenchSnapshot::new("resilience");
+    s.meta("provenance", PROVENANCE);
+    s.meta(
+        "config",
+        "8 dies torus:2x4, per-die 4x4 cores, 8 tiles/core, split-fp32, fixed \
+         iteration count; fault scenarios scripted via FaultPlan specs",
+    );
+    s.meta("variant", "fp32-split");
+    s.meta("seed", "42");
+    let cost = CostModel::default();
+    let engine = NativeEngine::new();
+    let mesh = DeviceMesh::new(
+        dies,
+        rows,
+        cols,
+        MeshTopology::torus_for(dies),
+        EthLink::for_dies(dies),
+    )?;
+    let b = solver::mesh_dist_random(&mesh, tiles, DataFormat::Fp32, 42);
+    let run = |faults: Option<&str>,
+               checkpoint: Option<usize>|
+     -> crate::Result<solver::MeshPcgResult> {
+        let cfg = StencilConfig {
+            df: DataFormat::Fp32,
+            unit: ComputeUnit::Fpu,
+            tiles_per_core: tiles,
+            variant: StencilVariant::FULL,
+            coeffs: StencilCoeffs::LAPLACIAN,
+        };
+        let mut opts = PcgOptions::new(PcgVariant::SplitFp32);
+        opts.max_iters = iters;
+        opts.tol_abs = 0.0;
+        let mut mopts = MeshOptions::new(opts);
+        if let Some(spec) = faults {
+            mopts = mopts.with_faults(
+                FaultPlan::parse(spec).map_err(crate::SimError::Config)?,
+            );
+        }
+        if let Some(k) = checkpoint {
+            mopts = mopts.with_resilience(ResilienceOptions::every(k));
+        }
+        let mut prof = Profiler::disabled();
+        solver::solve_pcg_mesh(
+            &mesh,
+            &b,
+            &Operator::Stencil(cfg),
+            &engine,
+            &cost,
+            &mopts,
+            &mut prof,
+        )
+    };
+
+    // Cost side: checkpoint-interval sweep, no faults. k=0 doubles as the
+    // clean baseline for the recovery scenarios below.
+    let ks: &[usize] = if smoke { &[0, 8] } else { &[0, 8, 32] };
+    let mut clean_total = 0.0f64;
+    for &k in ks {
+        let res = run(None, Some(k))?;
+        if k == 0 {
+            clean_total = res.total_ns;
+        }
+        let kstr = k.to_string();
+        let labels = [("checkpoint", kstr.as_str())];
+        s.push("total_ns", &labels, res.total_ns, "ns", Better::Lower);
+        s.push(
+            "checkpoint_overhead_frac",
+            &labels,
+            res.total_ns / clean_total - 1.0,
+            "fraction",
+            Better::Lower,
+        );
+    }
+
+    // Benefit side: one scenario per fault class. Times are absolute
+    // simulated offsets; with this fixed configuration they land
+    // mid-solve, and determinism holds wherever they land.
+    let scenarios: &[(&str, &str)] = if smoke {
+        &[("sdc", "sdc:spmv@6")]
+    } else {
+        &[
+            ("link_down", "link_down:0-1@40us"),
+            ("link_degrade", "link_degrade:0-1@20us..400usx8"),
+            ("die_down", "die_down:7@40us"),
+            ("sdc", "sdc:spmv@6"),
+        ]
+    };
+    for &(name, spec) in scenarios {
+        let res = run(Some(spec), None)?;
+        let labels = [("fault", name)];
+        s.push("faulted_total_ns", &labels, res.total_ns, "ns", Better::Lower);
+        s.push(
+            "recovery_overhead_frac",
+            &labels,
+            res.total_ns / clean_total - 1.0,
+            "fraction",
+            Better::Lower,
+        );
+        s.push("rollbacks", &labels, res.rollbacks as f64, "count", Better::Info);
+        s.push(
+            "fault_epochs",
+            &labels,
+            res.fault_epochs as f64,
+            "count",
+            Better::Info,
+        );
+        s.push(
+            "retry_ns",
+            &labels,
+            res.ledger.total.get(Resource::Retry),
+            "ns",
+            Better::Info,
+        );
+    }
+    Ok(s)
+}
+
 /// Build the snapshots of one suite (or `"all"`).
 pub fn build(suite: &str, smoke: bool) -> crate::Result<Vec<BenchSnapshot>> {
     match suite {
         "pcg" => Ok(vec![pcg_snapshot(smoke)?]),
         "spmv" => Ok(vec![spmv_snapshot(smoke)?]),
         "figures" => Ok(vec![figures_snapshot(smoke)?]),
+        "resilience" => Ok(vec![resilience_snapshot(smoke)?]),
         "all" => Ok(vec![
             pcg_snapshot(smoke)?,
             spmv_snapshot(smoke)?,
             figures_snapshot(smoke)?,
+            resilience_snapshot(smoke)?,
         ]),
         other => Err(crate::SimError::Config(format!(
-            "unknown bench suite '{other}' (expected pcg|spmv|figures|all)"
+            "unknown bench suite '{other}' (expected pcg|spmv|figures|resilience|all)"
         ))),
     }
 }

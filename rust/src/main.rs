@@ -30,7 +30,7 @@ use wormsim::util::stats::fmt_ns;
 const VALUE_KEYS: &[&str] = &[
     "engine", "artifacts", "config", "iters", "seed", "grid", "tiles", "variant", "tol",
     "pattern", "method", "out", "trace", "dies", "topology", "overlap", "schedule", "suite",
-    "threshold", "telemetry", "what-if",
+    "threshold", "telemetry", "what-if", "faults", "checkpoint",
 ];
 const FLAGS: &[&str] = &["help", "quiet", "emit-json", "smoke", "advisory"];
 
@@ -144,6 +144,9 @@ fn cmd_solve(args: &cli::Args) -> Result<(), String> {
     if dies > 1 {
         return cmd_solve_mesh(args, &ctx, variant, rows, cols, tiles, dies, topology);
     }
+    if args.get("faults").is_some() || args.get("checkpoint").is_some() {
+        return Err("--faults/--checkpoint apply to multi-die solves (--dies N > 1)".into());
+    }
     let problem = Problem::new(rows, cols, tiles, variant.df());
     let grid = problem.make_grid().map_err(|e| e.to_string())?;
 
@@ -235,6 +238,20 @@ fn cmd_solve_mesh(
 
     let overlap: wormsim::solver::OverlapMode = args.get_parsed("overlap", "serial")?;
     let schedule: wormsim::solver::Schedule = args.get_parsed("schedule", "classic")?;
+    // Scripted faults: `--faults SPEC` (inline grammar, `@file`, or a
+    // `.json` path) and `--checkpoint K` (checkpoint/rollback every K
+    // iterations; a plan scripting SDC or die loss implies a default
+    // policy when the flag is omitted).
+    let fault_plan = match args.get("faults") {
+        Some(spec) => Some(wormsim::device::FaultPlan::load(spec)?),
+        None => None,
+    };
+    let resilience = match args.get("checkpoint") {
+        Some(_) => {
+            Some(wormsim::solver::ResilienceOptions::every(args.get_usize("checkpoint", 8)?))
+        }
+        None => None,
+    };
     let mesh = DeviceMesh::new(dies, rows, cols, topology, EthLink::for_dies(dies))
         .map_err(|e| e.to_string())?;
 
@@ -266,13 +283,22 @@ fn cmd_solve_mesh(
     );
     let b = solver::mesh_dist_random(&mesh, tiles, df, ctx.seed);
     let mut prof = Profiler::new();
+    let mut mopts =
+        wormsim::solver::MeshOptions::new(opts).with_overlap(overlap).with_schedule(schedule);
+    if let Some(plan) = fault_plan {
+        println!("  fault plan: {} scripted event(s)", plan.events.len());
+        mopts = mopts.with_faults(plan);
+    }
+    if let Some(r) = resilience {
+        mopts = mopts.with_resilience(r);
+    }
     let res = solver::solve_pcg_mesh(
         &mesh,
         &b,
         &Operator::Stencil(stencil_cfg),
         ctx.engine.as_ref(),
         &ctx.cost,
-        &wormsim::solver::MeshOptions::new(opts).with_overlap(overlap).with_schedule(schedule),
+        &mopts,
         &mut prof,
     )
     .map_err(|e| e.to_string())?;
@@ -287,6 +313,14 @@ fn cmd_solve_mesh(
         fmt_ns(res.total_ns),
         fmt_ns(res.per_iter_ns)
     );
+    if res.fault_epochs > 0 || res.rollbacks > 0 {
+        println!(
+            "  faults: {} epoch change(s), {} rollback(s), retry time {}",
+            res.fault_epochs,
+            res.rollbacks,
+            fmt_ns(res.ledger.total.get(wormsim::telemetry::Resource::Retry))
+        );
+    }
     if !args.has_flag("quiet") {
         println!();
         println!("{}", res.breakdown.render("per-component device time"));
@@ -547,6 +581,33 @@ mod tests {
         assert!(cmd_bench_diff(&parse_args(&[base_s, missing_s, "--advisory"])).is_ok());
         let _ = std::fs::remove_dir_all(&dir);
     }
+
+    /// Parse hardening at the CLI boundary: malformed specs must be
+    /// rejected with a descriptive error *before* any solving starts, not
+    /// panic or silently degrade. Each pin names the offending flag.
+    #[test]
+    fn solve_rejects_malformed_specs_at_the_cli() {
+        // Gibberish fault spec.
+        let e = cmd_solve(&parse_args(&["--dies", "2", "--faults", "gibberish"])).unwrap_err();
+        assert!(e.contains("fault"), "want a fault-spec error, got: {e}");
+        // Fault event addressed past the mesh (die 9 of 2).
+        let e = cmd_solve(&parse_args(&["--dies", "2", "--faults", "die_down:9@1us"]))
+            .unwrap_err();
+        assert!(e.contains('9'), "want the out-of-range die named, got: {e}");
+        // Degenerate torus shape.
+        let e = cmd_solve(&parse_args(&["--topology", "torus:0x4"])).unwrap_err();
+        assert!(e.contains("torus"), "want a torus-shape error, got: {e}");
+        // s-step of 0 (and 1) are not schedules.
+        let e = cmd_solve(&parse_args(&["--dies", "2", "--schedule", "sstep:0"])).unwrap_err();
+        assert!(e.contains("2..=8"), "want the s-step range named, got: {e}");
+        // --dies disagreeing with an explicit torus shape.
+        let e = cmd_solve(&parse_args(&["--dies", "3", "--topology", "torus:2x4"]))
+            .unwrap_err();
+        assert!(!e.is_empty());
+        // Fault flags on a single-die solve point at --dies.
+        let e = cmd_solve(&parse_args(&["--faults", "die_down:0@1us"])).unwrap_err();
+        assert!(e.contains("--dies"), "want the multi-die hint, got: {e}");
+    }
 }
 
 fn print_usage() {
@@ -562,11 +623,16 @@ fn print_usage() {
          --schedule classic|prefetch|sstep:<s>  communication-avoiding schedule\n                          \
          (prefetch: halo rides the previous iteration's tail, bit-identical values;\n                          \
          sstep:<s>: ONE combined all-reduce per s iterations, s in 2..=8)\n                          \
-         (--grid = per-die sub-grid)\n  \
+         (--grid = per-die sub-grid)\n                          \
+         --faults SPEC|F.json    scripted faults (classic schedule), e.g.\n                          \
+         'link_down:0-1@5us;link_degrade:2-3x4@10us;die_down:3@1ms;sdc:spmv@20'\n                          \
+         also @file with one event per line, or a JSON plan\n                          \
+         --checkpoint K          checkpoint/rollback every K iterations (0 disables;\n                          \
+         default 8 when the plan scripts sdc/die_down)\n  \
          figures <id|all>        regenerate paper figures: fig3 fig5 fig6 fig11 fig12a fig12b fig12c fig13\n                          \
          extensions (§8): energy dualdie jacobi ext; solve supports --trace out.json\n  \
          tables <id|all>         regenerate paper tables: t1 t2 t3\n  \
-         bench [suite]           deterministic simulated-figure sweeps (pcg|spmv|figures|all)\n                          \
+         bench [suite]           deterministic simulated-figure sweeps (pcg|spmv|figures|resilience|all)\n                          \
          --emit-json writes BENCH_<suite>.json (--out DIR, --smoke for CI subset)\n  \
          bench-diff A.json B.json  compare snapshots (--threshold 0.05; --advisory always exits 0)\n  \
          critpath                critical-path report of a mesh solve's causal span graph\n                          \

@@ -63,14 +63,15 @@
 use std::collections::BTreeMap;
 
 use crate::arch::constants::{SRAM_BYTES, SRAM_RESERVE_FUSED};
-use crate::device::DeviceMesh;
+use crate::device::{DeviceMesh, FaultEvent, FaultPlan};
 use crate::engine::{ComputeEngine, CoreBlock, Halos, StencilCoeffs};
 use crate::kernels::eltwise::lower_block_op;
 use crate::kernels::reduction::{lower_dot_as, DotConfig, DotMethod};
 use crate::profiler::{Breakdown, Profiler};
 use crate::solver::pcg::{Operator, PcgOptions, Precond, PCG_ITERATION};
 use crate::solver::problem::DistVector;
-use crate::telemetry::{SolveLedger, SolverEvent, SpanGraph, Telemetry};
+use crate::solver::resilient::{checkpoint_cost, FaultRuntime, ResilienceOptions};
+use crate::telemetry::{Resource, SolveLedger, SolverEvent, SpanGraph, Telemetry};
 use crate::timing::cost::{CostModel, PipelineMode, TileOpKind};
 use crate::timing::SimNs;
 use crate::solver::sstep;
@@ -93,6 +94,17 @@ use crate::ttm::{
 pub struct MeshOptions {
     pub pcg: PcgOptions,
     pub overlap: OverlapMode,
+    /// Scripted fault injection ([`FaultPlan`]). `None` (or an empty
+    /// plan) is the fault-free path: bit-identical values AND
+    /// clock-identical timing to a build without the fault layer
+    /// (pinned by `tests/prop_faults.rs`). Requires the classic
+    /// schedule.
+    pub faults: Option<FaultPlan>,
+    /// Checkpoint/rollback policy. `None` defaults to
+    /// [`ResilienceOptions::every`]`(8)` when the plan scripts an SDC or
+    /// die loss (those are unrecoverable without checkpoints), and to
+    /// disabled otherwise.
+    pub resilience: Option<ResilienceOptions>,
 }
 
 impl MeshOptions {
@@ -100,11 +112,25 @@ impl MeshOptions {
         Self {
             pcg,
             overlap: OverlapMode::Serial,
+            faults: None,
+            resilience: None,
         }
     }
 
     pub fn with_overlap(mut self, overlap: OverlapMode) -> Self {
         self.overlap = overlap;
+        self
+    }
+
+    /// Inject the given fault plan during the solve.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// Set the checkpoint/rollback policy explicitly.
+    pub fn with_resilience(mut self, resilience: ResilienceOptions) -> Self {
+        self.resilience = Some(resilience);
         self
     }
 
@@ -182,6 +208,12 @@ pub struct MeshPcgResult {
     /// Ethernet phases) grafted into its dispatch window. Its critical
     /// path equals `total_ns` exactly. Empty when telemetry is off.
     pub spans: SpanGraph,
+    /// Checkpoint restores performed (die losses + detected SDCs); 0 on
+    /// every fault-free solve.
+    pub rollbacks: u64,
+    /// Fault-state transitions the solve re-lowered through; 0 on every
+    /// fault-free solve.
+    pub fault_epochs: u64,
 }
 
 impl MeshPcgResult {
@@ -301,8 +333,9 @@ pub fn mesh_dist_random(
 /// partial beats per tree edge). SRAM stays put — the applications
 /// reuse the same resident tiles. This is how the s-step "gram" and
 /// "bupdate" components price a block's worth of reductions/axpys as
-/// one dispatch.
-fn scale_program(mut p: Program, f: u64) -> Program {
+/// one dispatch. Also how the fault layer folds a dead die's adopted
+/// subdomain into its adopter's program (`solver::resilient`).
+pub(crate) fn scale_program(mut p: Program, f: u64) -> Program {
     for q in &mut p.work.data_movement {
         let one = q.sends.clone();
         for _ in 1..f {
@@ -583,6 +616,40 @@ pub fn solve_pcg_mesh(
         mesh.validate_budgets(tiles, df, fused)?;
     }
 
+    // ---- fault layer gate -----------------------------------------------
+    // An empty plan is the fault-free path. A non-empty one (and any
+    // explicit resilience policy) requires the classic schedule: the
+    // prefetch/s-step re-timings assume the topology never changes
+    // mid-solve, and rollback restores loop-carried state the s-step
+    // block recurrence does not expose at iteration granularity.
+    let fault_plan = opts.faults.as_ref().filter(|p| !p.is_empty());
+    if let Some(plan) = fault_plan {
+        plan.validate(mesh)?;
+        if opts.pcg.schedule != Schedule::Classic {
+            return Err(crate::SimError::Other(format!(
+                "fault injection requires the classic schedule (got {:?})",
+                opts.pcg.schedule
+            )));
+        }
+        for e in &plan.events {
+            if let FaultEvent::Sdc { component, .. } = e {
+                if component != "spmv" {
+                    return Err(crate::SimError::Other(format!(
+                        "sdc injection supports component 'spmv' only (got '{component}')"
+                    )));
+                }
+            }
+        }
+    }
+    if opts.resilience.as_ref().is_some_and(|r| r.enabled())
+        && opts.pcg.schedule != Schedule::Classic
+    {
+        return Err(crate::SimError::Other(format!(
+            "checkpoint/rollback resilience requires the classic schedule (got {:?})",
+            opts.pcg.schedule
+        )));
+    }
+
     // ---- preconditioner (engine-side; identical to single-die) ----------
     let precond = operator.jacobi(df, opts.pcg.precondition)?;
     let precond_kind = match &precond {
@@ -634,6 +701,31 @@ pub fn solve_pcg_mesh(
             components.insert(p.name.clone(), MeshComponent { outcome });
         }
     }
+    // The fault runtime exists when there is a plan to react to OR a
+    // checkpoint policy to pay for; `None` is the fault-free fast path —
+    // zero extra work per iteration, bit- and clock-identical.
+    let mut frt: Option<FaultRuntime> = match fault_plan {
+        Some(plan) => {
+            let resilience = opts.resilience.clone().unwrap_or_else(|| {
+                // SDC and die loss are unrecoverable without checkpoints;
+                // default them on. Pure link faults need none.
+                let needs = plan.events.iter().any(|e| {
+                    matches!(e, FaultEvent::Sdc { .. } | FaultEvent::DieDown { .. })
+                });
+                if needs {
+                    ResilienceOptions::default()
+                } else {
+                    ResilienceOptions::disabled()
+                }
+            });
+            Some(FaultRuntime::new(plan.clone(), resilience, mesh, &lowering))
+        }
+        None => opts
+            .resilience
+            .clone()
+            .filter(|r| r.enabled())
+            .map(|r| FaultRuntime::new(FaultPlan::default(), r, mesh, &lowering)),
+    };
     let schedule = opts.pcg.schedule;
     // Per-iteration (or per-block, under s-step) dispatch order.
     let iteration: Vec<&str> = match schedule {
@@ -779,12 +871,16 @@ pub fn solve_pcg_mesh(
             component!($name, $name)
         };
         ($name:expr, $key:expr) => {{
-            let c = &components[$key];
-            let ns = c.device_ns();
+            // A fault epoch overrides the clean pre-executed outcome with
+            // a re-execution on the degraded topology (None = clean).
+            let o = match frt.as_ref().and_then(|f| f.outcome($key)) {
+                Some(faulted) => faulted,
+                None => &components[$key].outcome,
+            };
+            let ns = o.device_ns();
             let pre: SimNs = now;
             now = sched.component(&mut queue, profiler, $name, ns, now)?;
             breakdown.add($name, ns);
-            let o = &c.outcome;
             phases_total.compute_ns += o.dram_ns + o.riscv_ns + o.compute_ns;
             phases_total.noc_ns += o.data_movement_ns + o.reduce_ns + o.bcast_ns;
             phases_total.ether_ns += o.ether_ns;
@@ -844,9 +940,23 @@ pub fn solve_pcg_mesh(
                     residual: $rnorm,
                     launches: queue.stats.launches,
                     component_ns: std::mem::take(&mut iter_component_ns),
+                    fault: fault_note.take(),
                 });
+            } else {
+                fault_note = None;
             }
         }};
+    }
+    // Fault annotations accumulated since the last residual sample
+    // (epoch transitions, SDC injections/detections, rollbacks); drained
+    // into that sample's SolverEvent. Stays `None` through every
+    // fault-free iteration, so clean JSONL streams are byte-identical.
+    let mut fault_note: Option<String> = None;
+    fn merge_note(cur: &mut Option<String>, note: String) {
+        *cur = Some(match cur.take() {
+            Some(prev) => format!("{prev};{note}"),
+            None => note,
+        });
     }
 
     let mut history = Vec::new();
@@ -964,10 +1074,67 @@ pub fn solve_pcg_mesh(
         let mut z = precond.apply(engine, &r)?;
         let mut p = z.clone();
         let mut delta = mesh_dot(&r, &z)? as f64;
+        // Iteration-0 checkpoint: die loss or a detected SDC can fire
+        // before the first periodic save, and both need a restore target.
+        if let Some(f) = frt.as_mut() {
+            if f.checkpoint_enabled() {
+                f.save(&x, &r, &p, delta, 0);
+                let (cl, cns) = checkpoint_cost(mesh, tiles, df, cost);
+                let pre = now;
+                now += cns;
+                spans.window_ledger("checkpoint", &cl, pre, now);
+                if opts.pcg.telemetry {
+                    ledger.charge("checkpoint", &cl, cns);
+                    telemetry.count("checkpoints", &[], 1);
+                }
+            }
+        }
         while iters < opts.pcg.max_iters {
             iters += 1;
+            // Fault-epoch boundary: sample the plan; on a change, charge
+            // the transport's retry-with-backoff penalty, swap in
+            // re-lowered component outcomes, and — on die loss — restore
+            // the last checkpoint (the lost die's state is gone).
+            if let Some(f) = frt.as_mut() {
+                if let Some(ch) = f.begin_iteration(now, cost)? {
+                    merge_note(&mut fault_note, ch.annotation.clone());
+                    if opts.pcg.telemetry {
+                        telemetry.count("fault_epochs", &[], 1);
+                    }
+                    if ch.retry_ns > 0.0 {
+                        let pre = now;
+                        now += ch.retry_ns;
+                        spans.mark("retry", "fault", Resource::Retry, pre, now);
+                        if opts.pcg.telemetry {
+                            ledger.add_retry(ch.retry_ns);
+                        }
+                    }
+                    if ch.die_lost {
+                        if let Some(cp) = f.rollback() {
+                            x = cp.x;
+                            r = cp.r;
+                            p = cp.p;
+                            delta = cp.delta;
+                            merge_note(&mut fault_note, format!("rollback@{}", cp.iter));
+                            let (rl, rns) = checkpoint_cost(mesh, tiles, df, cost);
+                            let pre = now;
+                            now += rns;
+                            spans.window_ledger("rollback", &rl, pre, now);
+                            if opts.pcg.telemetry {
+                                ledger.charge("rollback", &rl, rns);
+                                telemetry.count("rollbacks", &[], 1);
+                            }
+                        }
+                    }
+                }
+            }
             // q = A p (stencil seam or sparse cut over Ethernet).
-            let q = apply(&p)?;
+            let mut q = apply(&p)?;
+            if let Some(f) = frt.as_ref() {
+                if let Some(note) = f.maybe_corrupt(&mut q, iters) {
+                    merge_note(&mut fault_note, note);
+                }
+            }
             if iters > 1 && components.contains_key("spmv_pf") {
                 component!("spmv", "spmv_pf");
             } else {
@@ -1020,6 +1187,72 @@ pub fn solve_pcg_mesh(
                 *pi = engine.axpy(zi, beta, pi)?;
             }
             component!("axpy");
+
+            // Resilience tail (iteration boundary — the schedule cursor
+            // is clean here): every check_interval iterations recompute
+            // the TRUE residual ‖b − Ax‖ through the engine — charged as
+            // one extra spmv + norm — and compare it to the recurrence
+            // residual. Rounding keeps them together; an SDC tears them
+            // apart. On drift, restore the last checkpoint; otherwise
+            // save one when due — only verified states are ever saved.
+            if let Some(f) = frt.as_mut() {
+                let mut rolled_back = false;
+                if f.check_due(iters) {
+                    let ax = apply(&x)?;
+                    let mut diff = Vec::with_capacity(b.len());
+                    for (bi, ai) in b.iter().zip(&ax) {
+                        diff.push(engine.axpy(bi, -1.0, ai)?);
+                    }
+                    let true_norm = (mesh_dot(&diff, &diff)? as f64).max(0.0).sqrt();
+                    let (so_ledger, so_ns, no_ledger, no_ns) = {
+                        let so = f.outcome("spmv").unwrap_or(&components["spmv"].outcome);
+                        let no = f.outcome("norm").unwrap_or(&components["norm"].outcome);
+                        (so.ledger.clone(), so.device_ns(), no.ledger.clone(), no.device_ns())
+                    };
+                    let pre = now;
+                    now += so_ns;
+                    spans.window_ledger("sdc_check", &so_ledger, pre, now);
+                    let pre = now;
+                    now += no_ns;
+                    spans.window_ledger("sdc_check", &no_ledger, pre, now);
+                    if opts.pcg.telemetry {
+                        ledger.charge("sdc_check", &so_ledger, so_ns);
+                        ledger.charge("sdc_check", &no_ledger, no_ns);
+                    }
+                    let drift =
+                        (true_norm - rnorm).abs() / true_norm.max(rnorm).max(1e-30);
+                    if drift > f.resilience.sdc_threshold {
+                        merge_note(&mut fault_note, format!("sdc_detected@{iters}"));
+                        if let Some(cp) = f.rollback() {
+                            x = cp.x;
+                            r = cp.r;
+                            p = cp.p;
+                            delta = cp.delta;
+                            rolled_back = true;
+                            merge_note(&mut fault_note, format!("rollback@{}", cp.iter));
+                            let (rl, rns) = checkpoint_cost(mesh, tiles, df, cost);
+                            let pre = now;
+                            now += rns;
+                            spans.window_ledger("rollback", &rl, pre, now);
+                            if opts.pcg.telemetry {
+                                ledger.charge("rollback", &rl, rns);
+                                telemetry.count("rollbacks", &[], 1);
+                            }
+                        }
+                    }
+                }
+                if !rolled_back && f.checkpoint_due(iters) {
+                    f.save(&x, &r, &p, delta, iters);
+                    let (cl, cns) = checkpoint_cost(mesh, tiles, df, cost);
+                    let pre = now;
+                    now += cns;
+                    spans.window_ledger("checkpoint", &cl, pre, now);
+                    if opts.pcg.telemetry {
+                        ledger.charge("checkpoint", &cl, cns);
+                        telemetry.count("checkpoints", &[], 1);
+                    }
+                }
+            }
         }
     }
 
@@ -1059,6 +1292,8 @@ pub fn solve_pcg_mesh(
         ledger,
         telemetry,
         spans: spans.finish(now),
+        rollbacks: frt.as_ref().map_or(0, |f| f.rollbacks),
+        fault_epochs: frt.as_ref().map_or(0, |f| f.epoch),
     })
 }
 

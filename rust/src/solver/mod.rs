@@ -12,6 +12,7 @@ pub mod jacobi_iter;
 pub mod mesh;
 pub mod pcg;
 pub mod problem;
+pub mod resilient;
 pub mod sstep;
 
 pub use jacobi::JacobiPreconditioner;
@@ -20,6 +21,7 @@ pub use dualdie::{solve_pcg_dualdie, DualDieOptions, DualDieResult, EthLink};
 pub use mesh::{
     mesh_dist_random, solve_pcg_mesh, MeshOptions, MeshPcgResult, MeshPhaseBreakdown,
 };
+pub use resilient::{checkpoint_cost, Checkpoint, FaultRuntime, ResilienceOptions};
 pub use crate::ttm::{OverlapMode, Schedule};
 pub use pcg::{solve, solve_operator, FusionMode, Operator, PcgOptions, PcgResult, PcgVariant};
 pub use problem::{

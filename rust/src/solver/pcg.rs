@@ -566,6 +566,7 @@ pub fn solve_operator(
                 residual: rnorm,
                 launches: queue.stats.launches,
                 component_ns: std::mem::take(&mut iter_component_ns),
+                fault: None,
             });
         }
         if rnorm <= opts.tol_abs {

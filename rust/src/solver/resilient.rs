@@ -1,0 +1,583 @@
+//! Solver-level resilience for faulted mesh solves (ISSUE 10): periodic
+//! checkpoints of the PCG loop-carried state, residual-recompute SDC
+//! detection, rollback-restart, and the fault-epoch runtime that
+//! re-lowers components onto the degraded topology.
+//!
+//! The division of labor with [`crate::device::faults`]: the fault plan
+//! is pure data and the device layer knows how to route around damage;
+//! this module owns the *solver's* reaction — when to save state, how
+//! much saving costs, when a silent corruption is detectable, and what
+//! a fault epoch does to the pre-executed component outcomes.
+//!
+//! **Checkpoint contents and cost.** The classic PCG loop carries
+//! exactly (x, r, p, δ) across iterations — z is recomputed from r
+//! every iteration — so a checkpoint is those three vectors plus one
+//! scalar: O(rows) bytes. Each die drains its shard to DRAM
+//! ([`crate::timing::cost::CostModel::dram_stream_cycles`]) and mirrors
+//! it to a neighbor over one Ethernet hop (so the state survives that
+//! die's loss); [`checkpoint_cost`] prices both and the solver charges
+//! them as explicit `checkpoint` / `rollback` ledger components.
+//!
+//! **SDC detection.** Every `check_interval` iterations the solver
+//! recomputes the *true* residual ‖b − Ax‖ through the engine and
+//! compares it to the recurrence residual ‖r‖. In a clean run the two
+//! drift apart only by rounding; a corrupted q propagates into x and r
+//! with a magnitude (≈1e3, [`crate::device::FaultPlan::sdc_magnitude`])
+//! that blows the relative drift past any rounding envelope, so a 50%
+//! threshold separates them cleanly. Checkpoints are only taken at
+//! iterations that *pass* the check — a verified-state discipline that
+//! guarantees rollback targets are uncorrupted.
+//!
+//! **Fault epochs.** At each iteration boundary the runtime samples
+//! [`crate::device::FaultPlan::state_at`]; when the state changes it
+//! re-lowers: surviving dies' programs re-execute with the degraded
+//! per-link [`crate::device::EthSim`] factors, Ethernet phases are
+//! [`crate::ttm::EtherPhase::remapped`] around dead dies and
+//! [`crate::ttm::EtherPhase::rerouted`] around cut links, and each dead
+//! die's subdomain is adopted by its nearest surviving neighbor (the
+//! adopter's local work scales by the adopted count —
+//! `scale_program`). The re-executed outcomes override the clean ones
+//! until the state changes again, so charged times, ledgers, and span
+//! graphs stay honest executions, never estimates — which is what keeps
+//! the critical path wall-exact under every fault scenario
+//! (`tests/prop_faults.rs`).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::arch::constants::cycles_to_ns;
+use crate::arch::DataFormat;
+use crate::device::{DeviceMesh, EthSim, FaultPlan, FaultState};
+use crate::solver::mesh::{scale_program, MeshLowering};
+use crate::solver::problem::DistVector;
+use crate::telemetry::{Resource, ResourceLedger};
+use crate::timing::cost::CostModel;
+use crate::timing::SimNs;
+use crate::ttm::{Program, ProgramOutcome};
+
+/// Checkpoint/rollback policy of a resilient solve.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResilienceOptions {
+    /// Save (x, r, p, δ) every this many iterations; 0 disables
+    /// checkpointing (and with it SDC detection and rollback).
+    pub checkpoint_interval: usize,
+    /// Recompute the true residual ‖b − Ax‖ every this many iterations
+    /// and compare against the recurrence residual.
+    pub check_interval: usize,
+    /// Relative drift |true − recurrence| / max(true, recurrence) above
+    /// which the trajectory is declared corrupted. Clean-run drift is
+    /// rounding-scale; an SDC's is orders of magnitude — 0.5 separates
+    /// them with huge margin on both sides.
+    pub sdc_threshold: f64,
+}
+
+impl Default for ResilienceOptions {
+    fn default() -> Self {
+        Self::every(8)
+    }
+}
+
+impl ResilienceOptions {
+    /// Checkpoint and check every `k` iterations (`k = 0` disables both).
+    pub fn every(k: usize) -> Self {
+        Self {
+            checkpoint_interval: k,
+            check_interval: k.max(1),
+            sdc_threshold: 0.5,
+        }
+    }
+
+    /// No checkpoints, no checks — the k=0 baseline of the overhead sweep.
+    pub fn disabled() -> Self {
+        Self::every(0)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.checkpoint_interval > 0
+    }
+}
+
+/// One saved PCG state: everything the classic loop carries across an
+/// iteration boundary.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub x: DistVector,
+    pub r: DistVector,
+    pub p: DistVector,
+    pub delta: f64,
+    /// Iteration the state was saved at (0 = before the first).
+    pub iter: usize,
+}
+
+/// Price one checkpoint save (or rollback restore — same bytes, same
+/// wires): each die drains its shard of the three state vectors to DRAM
+/// and mirrors it one Ethernet hop to a neighbor. Returns the
+/// per-resource ledger and its total, which the solver charges as an
+/// explicit `checkpoint` / `rollback` component.
+pub fn checkpoint_cost(
+    mesh: &DeviceMesh,
+    tiles: usize,
+    df: DataFormat,
+    cost: &CostModel,
+) -> (ResourceLedger, SimNs) {
+    let state_bytes = 3u64 * mesh.n_cores() as u64 * tiles as u64 * df.tile_bytes() as u64;
+    let per_die = state_bytes / mesh.n_dies.max(1) as u64;
+    let dram_ns = cycles_to_ns(cost.dram_stream_cycles(per_die));
+    let eth_ns = if mesh.n_dies > 1 {
+        mesh.link.transfer_ns(per_die)
+    } else {
+        0.0
+    };
+    let mut l = ResourceLedger::new();
+    l.add(Resource::Dram, dram_ns);
+    l.add(Resource::Ethernet, eth_ns);
+    (l, dram_ns + eth_ns)
+}
+
+/// What one fault-epoch transition asks the solver to do: annotate the
+/// event stream, charge the transport's retry-with-backoff penalty, and
+/// (on die loss) roll back to the last checkpoint.
+#[derive(Debug, Clone)]
+pub struct EpochChange {
+    /// Joined event annotations for the telemetry stream
+    /// (`"die_down:3;link_down:0-1"`).
+    pub annotation: String,
+    /// Detection-timeout + bounded-retry penalty for links that went
+    /// down with traffic in flight ([`FaultPlan::retry_penalty_ns`]).
+    pub retry_ns: SimNs,
+    /// A die was lost this epoch — state on it is gone; the solver must
+    /// resume from the last checkpoint on the survivors.
+    pub die_lost: bool,
+}
+
+/// The per-solve fault runtime: samples the plan at iteration
+/// boundaries, rebuilds component outcomes on each epoch, and owns the
+/// checkpoint/rollback state machine.
+pub struct FaultRuntime {
+    pub plan: FaultPlan,
+    pub resilience: ResilienceOptions,
+    /// Rollbacks performed (die loss + detected SDCs).
+    pub rollbacks: u64,
+    /// Fault-state transitions seen (also the retry PRNG draw index).
+    pub epoch: u64,
+    mesh: DeviceMesh,
+    spmv_per_die: Vec<Program>,
+    support: BTreeMap<String, Program>,
+    state: FaultState,
+    overrides: BTreeMap<String, ProgramOutcome>,
+    checkpoint: Option<Checkpoint>,
+}
+
+impl FaultRuntime {
+    /// Build from the clean lowering (the programs are cloned so epochs
+    /// can re-derive faulted variants from pristine ones).
+    pub fn new(
+        plan: FaultPlan,
+        resilience: ResilienceOptions,
+        mesh: &DeviceMesh,
+        lowering: &MeshLowering,
+    ) -> Self {
+        let support = lowering
+            .components
+            .iter()
+            .filter(|p| p.name != "spmv")
+            .map(|p| (p.name.clone(), p.clone()))
+            .collect();
+        Self {
+            plan,
+            resilience,
+            rollbacks: 0,
+            epoch: 0,
+            mesh: mesh.clone(),
+            spmv_per_die: lowering.spmv_per_die.clone(),
+            support,
+            state: FaultState::default(),
+            overrides: BTreeMap::new(),
+            checkpoint: None,
+        }
+    }
+
+    /// The faulted outcome for a component, if the current epoch
+    /// overrides the clean pre-executed one.
+    pub fn outcome(&self, key: &str) -> Option<&ProgramOutcome> {
+        self.overrides.get(key)
+    }
+
+    pub fn checkpoint_enabled(&self) -> bool {
+        self.resilience.enabled()
+    }
+
+    /// Whether iteration `iter` ends with a checkpoint save.
+    pub fn checkpoint_due(&self, iter: usize) -> bool {
+        self.checkpoint_enabled() && iter % self.resilience.checkpoint_interval == 0
+    }
+
+    /// Whether iteration `iter` ends with a true-residual SDC check.
+    pub fn check_due(&self, iter: usize) -> bool {
+        self.checkpoint_enabled() && iter % self.resilience.check_interval == 0
+    }
+
+    /// Save the loop-carried state (clones — the solver keeps working on
+    /// its own copies).
+    pub fn save(&mut self, x: &DistVector, r: &DistVector, p: &DistVector, delta: f64, iter: usize) {
+        self.checkpoint = Some(Checkpoint {
+            x: x.clone(),
+            r: r.clone(),
+            p: p.clone(),
+            delta,
+            iter,
+        });
+    }
+
+    /// Take the last checkpoint for a restore (counted as a rollback).
+    /// `None` when checkpointing is disabled — the solver then keeps its
+    /// current iterate and continues.
+    pub fn rollback(&mut self) -> Option<Checkpoint> {
+        let cp = self.checkpoint.clone();
+        if cp.is_some() {
+            self.rollbacks += 1;
+        }
+        cp
+    }
+
+    /// Corrupt the spmv output `q` if the plan scripts an SDC at this
+    /// (1-based) iteration; returns the event annotation. Deterministic:
+    /// block `iter % len`, element (0,0,0), additive
+    /// [`FaultPlan::sdc_magnitude`].
+    pub fn maybe_corrupt(&self, q: &mut DistVector, iter: usize) -> Option<String> {
+        if !self.plan.sdc_at("spmv", iter) || q.is_empty() {
+            return None;
+        }
+        let blk = &mut q[iter % q.len()];
+        if blk.nz() == 0 {
+            return None;
+        }
+        let v = blk.get(0, 0, 0);
+        blk.set(0, 0, 0, v + self.plan.sdc_magnitude(iter));
+        Some(format!("sdc:spmv@{iter}"))
+    }
+
+    /// Sample the plan at `now`; on a fault-state change, rebuild the
+    /// component overrides for the new topology and return what the
+    /// solver must charge/do. `None` while the state is unchanged (the
+    /// overwhelmingly common case — one `state_at` scan per iteration).
+    pub fn begin_iteration(
+        &mut self,
+        now: SimNs,
+        cost: &CostModel,
+    ) -> crate::Result<Option<EpochChange>> {
+        if self.plan.is_empty() {
+            return Ok(None);
+        }
+        let new = self.plan.state_at(&self.mesh, now);
+        if new == self.state {
+            return Ok(None);
+        }
+        let mut notes: Vec<String> = Vec::new();
+        for d in new.down_dies.difference(&self.state.down_dies) {
+            notes.push(format!("die_down:{d}"));
+        }
+        let new_links: Vec<(usize, usize)> = new
+            .down_links
+            .difference(&self.state.down_links)
+            .copied()
+            .collect();
+        for (a, b) in &new_links {
+            // Links that died *with* their die are folded into its note.
+            if !new.down_dies.contains(a) && !new.down_dies.contains(b) {
+                notes.push(format!("link_down:{a}-{b}"));
+            }
+        }
+        for (l, f) in &new.slowdown {
+            if !self.state.slowdown.contains(&(*l, *f)) {
+                notes.push(format!("link_degrade:{}-{}x{}", l.0, l.1, f));
+            }
+        }
+        if notes.is_empty() {
+            // A degradation window closed (or a cut was superseded by a
+            // die loss): the topology still re-lowers, silently faster.
+            notes.push("fault_cleared".to_string());
+        }
+        let retry_ns = if new_links.is_empty() {
+            0.0
+        } else {
+            self.plan.retry_penalty_ns(new_links.len(), self.epoch)
+        };
+        let die_lost = new.down_dies.len() > self.state.down_dies.len();
+        self.rebuild(&new, cost)?;
+        self.epoch += 1;
+        self.state = new;
+        Ok(Some(EpochChange {
+            annotation: notes.join(";"),
+            retry_ns,
+            die_lost,
+        }))
+    }
+
+    /// Re-lower + re-execute the components affected by `state`. Every
+    /// override is a real execution on the degraded topology — the
+    /// timing model's honesty invariant.
+    fn rebuild(&mut self, state: &FaultState, cost: &CostModel) -> crate::Result<()> {
+        self.overrides.clear();
+        if state.is_clean() {
+            return Ok(());
+        }
+        let down: Vec<(usize, usize)> = state.down_links.iter().copied().collect();
+        let fmesh = self.mesh.with_down_links(&down);
+        let survivors: BTreeSet<usize> = (0..self.mesh.n_dies)
+            .filter(|d| !state.down_dies.contains(d))
+            .collect();
+        if survivors.is_empty() {
+            return Err(crate::SimError::Other(
+                "fault plan takes every die down — nothing left to solve on".to_string(),
+            ));
+        }
+        if !fmesh.survivors_connected(&survivors) {
+            return Err(crate::SimError::Other(format!(
+                "fault plan disconnects the mesh: down links {:?} split the surviving dies {:?}",
+                state.down_links, survivors
+            )));
+        }
+        // Each dead die's subdomain migrates to its nearest surviving
+        // neighbor (clean-topology hop count, ties to the lowest id).
+        let mut adopt: BTreeMap<usize, usize> = BTreeMap::new();
+        for &d in &state.down_dies {
+            let adopter = survivors
+                .iter()
+                .copied()
+                .min_by_key(|&s| (self.mesh.path(d, s).len(), s))
+                .expect("survivors is nonempty");
+            adopt.insert(d, adopter);
+        }
+        let mut load: BTreeMap<usize, u64> = BTreeMap::new();
+        for &a in adopt.values() {
+            *load.entry(a).or_insert(0) += 1;
+        }
+        let max_extra = load.values().copied().max().unwrap_or(0);
+
+        let exec = |p: &Program| -> crate::Result<ProgramOutcome> {
+            // Fresh per-program link tracker seeded with the epoch's
+            // degradation factors — device start 0.0, like the clean
+            // pre-executions, so span graphs graft identically.
+            let mut sim = EthSim::new();
+            sim.set_slowdown(&state.slowdown);
+            crate::ttm::exec::execute_program_with(p, cost, 0.0, Some(&mut sim))
+        };
+        let transform = |e: &Option<crate::ttm::EtherPhase>| -> Option<crate::ttm::EtherPhase> {
+            e.as_ref()
+                .and_then(|e| e.remapped(&adopt))
+                .map(|e| e.rerouted(&fmesh))
+        };
+
+        // spmv: every surviving die re-executes (adopters with their
+        // adopted load folded in); the component binds on the slowest.
+        let mut slowest: Option<ProgramOutcome> = None;
+        for (d, p0) in self.spmv_per_die.iter().enumerate() {
+            if state.down_dies.contains(&d) {
+                continue;
+            }
+            let extra = load.get(&d).copied().unwrap_or(0);
+            let mut p = if extra > 0 {
+                scale_program(p0.clone(), 1 + extra)
+            } else {
+                p0.clone()
+            };
+            p.work.ether = transform(&p0.work.ether);
+            p.footprint.eth_bytes = p.work.ether.as_ref().map_or(0, |e| e.bytes());
+            let out = exec(&p)?;
+            if slowest
+                .as_ref()
+                .map_or(true, |s| out.device_ns() > s.device_ns())
+            {
+                slowest = Some(out);
+            }
+        }
+        let slowest = slowest.ok_or_else(|| {
+            crate::SimError::Other("faulted spmv re-lowering produced no programs".to_string())
+        })?;
+        self.overrides.insert("spmv".to_string(), slowest);
+
+        // dot/norm: the local fold binds on the most-loaded adopter, and
+        // the all-reduce phase remaps/reroutes like the halo.
+        for name in ["dot", "norm"] {
+            let Some(p0) = self.support.get(name) else {
+                continue;
+            };
+            let mut p = if max_extra > 0 {
+                scale_program(p0.clone(), 1 + max_extra)
+            } else {
+                p0.clone()
+            };
+            p.work.ether = transform(&p0.work.ether);
+            p.footprint.eth_bytes = p.work.ether.as_ref().map_or(0, |e| e.bytes());
+            self.overrides.insert(name.to_string(), exec(&p)?);
+        }
+        // axpy/precond carry no Ethernet phase — they only change when
+        // work migrated onto an adopter.
+        if max_extra > 0 {
+            for name in ["axpy", "precond"] {
+                let Some(p0) = self.support.get(name) else {
+                    continue;
+                };
+                let p = scale_program(p0.clone(), 1 + max_extra);
+                self.overrides.insert(name.to_string(), exec(&p)?);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{EthLink, MeshTopology};
+    use crate::engine::StencilCoeffs;
+    use crate::kernels::stencil::{StencilConfig, StencilVariant};
+    use crate::solver::mesh::{lower_mesh_components, MeshOptions};
+    use crate::solver::pcg::{Operator, PcgOptions, PcgVariant};
+    use crate::timing::cost::TileOpKind;
+
+    fn runtime_on(plan: &str, n_dies: usize) -> FaultRuntime {
+        let mesh = DeviceMesh::new(
+            n_dies,
+            1,
+            2,
+            MeshTopology::Torus2D { rows: 2, cols: n_dies / 2 },
+            EthLink::default(),
+        )
+        .unwrap();
+        let cfg = StencilConfig {
+            df: DataFormat::Bf16,
+            unit: crate::arch::ComputeUnit::Fpu,
+            tiles_per_core: 2,
+            variant: StencilVariant::FULL,
+            coeffs: StencilCoeffs::LAPLACIAN,
+        };
+        let opts = MeshOptions::new(PcgOptions::new(PcgVariant::FusedBf16));
+        let lowering = lower_mesh_components(
+            &mesh,
+            &Operator::Stencil(cfg),
+            &opts,
+            2,
+            TileOpKind::EltwiseUnary,
+            &CostModel::default(),
+        )
+        .unwrap();
+        FaultRuntime::new(
+            FaultPlan::parse(plan).unwrap(),
+            ResilienceOptions::default(),
+            &mesh,
+            &lowering,
+        )
+    }
+
+    #[test]
+    fn checkpoint_cost_scales_and_prices_both_wires() {
+        let cost = CostModel::default();
+        let mesh = DeviceMesh::new(4, 1, 2, MeshTopology::Line, EthLink::default()).unwrap();
+        let (l, ns) = checkpoint_cost(&mesh, 2, DataFormat::Bf16, &cost);
+        assert!(ns > 0.0);
+        assert!((l.total() - ns).abs() < 1e-9, "ledger covers the charge exactly");
+        let rows: Vec<Resource> = l.rows().map(|(r, _)| r).collect();
+        assert!(rows.contains(&Resource::Dram) && rows.contains(&Resource::Ethernet));
+        // More tiles per core => strictly more state to drain.
+        let (_, ns4) = checkpoint_cost(&mesh, 4, DataFormat::Bf16, &cost);
+        assert!(ns4 > ns);
+        // A single die mirrors nowhere: DRAM only.
+        let single = DeviceMesh::n150(1, 1).unwrap();
+        let (l1, _) = checkpoint_cost(&single, 2, DataFormat::Bf16, &cost);
+        assert!(l1.rows().all(|(r, _)| r == Resource::Dram));
+    }
+
+    #[test]
+    fn epoch_rebuilds_overrides_and_charges_retry_once() {
+        let cost = CostModel::default();
+        let mut f = runtime_on("link_down:0-1@5us", 4);
+        // Before the cut fires: no change.
+        assert!(f.begin_iteration(0.0, &cost).unwrap().is_none());
+        assert!(f.outcome("spmv").is_none());
+        // At the cut: one epoch, a retry penalty, rerouted spmv/dot/norm.
+        let ch = f.begin_iteration(6_000.0, &cost).unwrap().unwrap();
+        assert_eq!(ch.annotation, "link_down:0-1");
+        assert!(ch.retry_ns > 0.0);
+        assert!(!ch.die_lost);
+        assert!(f.outcome("spmv").is_some() && f.outcome("dot").is_some());
+        // No migration => axpy/precond keep their clean outcomes.
+        assert!(f.outcome("axpy").is_none());
+        // Same state again: no new epoch.
+        assert!(f.begin_iteration(7_000.0, &cost).unwrap().is_none());
+        assert_eq!(f.epoch, 1);
+    }
+
+    #[test]
+    fn die_loss_migrates_work_and_slows_every_component() {
+        let cost = CostModel::default();
+        let mut f = runtime_on("die_down:3@1us", 4);
+        let clean_ns = {
+            let mut g = runtime_on("", 4);
+            assert!(g.begin_iteration(10.0, &cost).unwrap().is_none());
+            // Clean runtime never overrides — compare against the epoch'd
+            // runtime's own pristine programs through one manual exec.
+            let mut sim = EthSim::new();
+            crate::ttm::exec::execute_program_with(&g.spmv_per_die[0], &cost, 0.0, Some(&mut sim))
+                .unwrap()
+                .device_ns()
+        };
+        let ch = f.begin_iteration(2_000.0, &cost).unwrap().unwrap();
+        assert!(ch.die_lost);
+        assert!(ch.annotation.contains("die_down:3"));
+        // The adopter carries two subdomains: spmv, axpy, and precond all
+        // re-lowered, and the bound spmv is strictly slower than clean.
+        for c in ["spmv", "dot", "norm", "axpy", "precond"] {
+            assert!(f.outcome(c).is_some(), "{c} should be overridden after die loss");
+        }
+        assert!(f.outcome("spmv").unwrap().device_ns() > clean_ns);
+    }
+
+    #[test]
+    fn disconnecting_plan_is_a_descriptive_error() {
+        let cost = CostModel::default();
+        // Cutting every link of die 0 without killing it strands it.
+        let mut f = runtime_on("link_down:0-1@1;link_down:0-2@1;link_down:0-3@1", 4);
+        let e = f.begin_iteration(10.0, &cost).unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains("disconnect"), "got: {msg}");
+    }
+
+    #[test]
+    fn sdc_corruption_is_deterministic_and_targeted() {
+        let f = runtime_on("sdc:spmv@3", 4);
+        let blocks = 8;
+        let mk = || -> DistVector {
+            (0..blocks)
+                .map(|_| crate::engine::CoreBlock::zeros(DataFormat::Bf16, 2))
+                .collect()
+        };
+        let mut q1 = mk();
+        let mut q2 = mk();
+        assert!(f.maybe_corrupt(&mut q1, 2).is_none(), "wrong iteration: untouched");
+        assert_eq!(q1, mk());
+        let n1 = f.maybe_corrupt(&mut q1, 3).unwrap();
+        let n2 = f.maybe_corrupt(&mut q2, 3).unwrap();
+        assert_eq!(n1, "sdc:spmv@3");
+        assert_eq!(n2, n1);
+        assert_eq!(q1, q2, "same plan + seed => same corrupted bits");
+        assert!(q1[3 % blocks].get(0, 0, 0).abs() >= 1.0e3);
+    }
+
+    #[test]
+    fn rollback_returns_only_verified_checkpoints() {
+        let mut f = runtime_on("", 4);
+        assert!(f.rollback().is_none(), "no checkpoint yet");
+        assert_eq!(f.rollbacks, 0, "a missing checkpoint is not a rollback");
+        let v: DistVector = vec![crate::engine::CoreBlock::zeros(DataFormat::Bf16, 1)];
+        f.save(&v, &v, &v, 0.25, 8);
+        let cp = f.rollback().unwrap();
+        assert_eq!(cp.iter, 8);
+        assert_eq!(cp.delta, 0.25);
+        assert_eq!(f.rollbacks, 1);
+        // Intervals: due at multiples of k only.
+        assert!(f.checkpoint_due(8) && !f.checkpoint_due(9));
+        assert!(f.check_due(16));
+        assert!(!ResilienceOptions::disabled().enabled());
+    }
+}

@@ -337,6 +337,7 @@ impl WhatIf {
                 "compute" => Resource::Compute,
                 "riscv" | "risc-v" => Resource::Riscv,
                 "dispatch" | "launch" => Resource::Dispatch,
+                "retry" => Resource::Retry,
                 "idle" => Resource::Idle,
                 other => return Err(format!("unknown what-if resource '{other}'")),
             };

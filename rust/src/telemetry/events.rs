@@ -25,6 +25,11 @@ pub struct SolverEvent {
     pub launches: u64,
     /// Per-component device ns charged since the previous event.
     pub component_ns: Vec<(String, SimNs)>,
+    /// Fault-layer annotation ("link_down:0-1", "retry", "sdc_detected",
+    /// "rollback", "die_down:3", ...). `None` on every fault-free event,
+    /// and omitted from the JSON entirely so fault-free streams stay
+    /// byte-identical to the pre-fault format.
+    pub fault: Option<String>,
 }
 
 fn json_f64(v: f64) -> String {
@@ -43,13 +48,18 @@ impl SolverEvent {
             .iter()
             .map(|(name, ns)| format!("\"{}\":{}", crate::util::jsonmini::escape(name), json_f64(*ns)))
             .collect();
+        let fault = match &self.fault {
+            Some(f) => format!(",\"fault\":\"{}\"", crate::util::jsonmini::escape(f)),
+            None => String::new(),
+        };
         format!(
-            "{{\"t_ns\":{},\"iter\":{},\"residual\":{},\"launches\":{},\"component_ns\":{{{}}}}}",
+            "{{\"t_ns\":{},\"iter\":{},\"residual\":{},\"launches\":{},\"component_ns\":{{{}}}{}}}",
             json_f64(self.t_ns),
             self.iter,
             json_f64(self.residual),
             self.launches,
-            comps.join(",")
+            comps.join(","),
+            fault
         )
     }
 }
@@ -64,12 +74,14 @@ pub fn events_to_jsonl(events: &[SolverEvent]) -> String {
     out
 }
 
-/// Write events as JSONL, creating parent directories.
+/// Write events as JSONL, creating parent directories. The write is
+/// atomic (temp-then-rename): an interrupted run leaves the previous
+/// file — or no file — never a truncated one.
 pub fn write_events_jsonl(events: &[SolverEvent], path: &Path) -> io::Result<()> {
     if let Some(parent) = path.parent() {
         fs::create_dir_all(parent)?;
     }
-    fs::write(path, events_to_jsonl(events))
+    crate::util::fsatomic::write_atomic(path, &events_to_jsonl(events))
 }
 
 #[cfg(test)]
@@ -84,6 +96,7 @@ mod tests {
             residual: 0.25,
             launches: 24,
             component_ns: vec![("spmv".to_string(), 1000.0), ("dot".to_string(), 250.5)],
+            fault: None,
         }
     }
 
@@ -111,6 +124,7 @@ mod tests {
             residual: f64::NAN,
             launches: 2,
             component_ns: vec![("sp\nmv\t\"x\"\u{1}".to_string(), 7.0)],
+            fault: None,
         };
         let s = events_to_jsonl(&[ev]);
         assert_eq!(s.lines().count(), 1, "escaped name must not break line framing");
@@ -122,6 +136,24 @@ mod tests {
             comps.get("sp\nmv\t\"x\"\u{1}").and_then(Json::as_f64),
             Some(7.0)
         );
+    }
+
+    #[test]
+    fn fault_annotation_is_emitted_only_when_present() {
+        // A fault-free event serializes byte-identically to the
+        // pre-fault format: no "fault" key at all.
+        let clean = sample().to_json();
+        assert!(!clean.contains("fault"), "clean event leaks a fault key: {clean}");
+        let mut ev = sample();
+        ev.fault = Some("sdc_detected".to_string());
+        let v = Json::parse(&ev.to_json()).unwrap();
+        assert_eq!(v.get("fault").and_then(Json::as_str), Some("sdc_detected"));
+        // The annotation escapes like every other string.
+        ev.fault = Some("link\n0-1".to_string());
+        let s = events_to_jsonl(&[ev]);
+        assert_eq!(s.lines().count(), 1);
+        let v = Json::parse(s.lines().next().unwrap()).unwrap();
+        assert_eq!(v.get("fault").and_then(Json::as_str), Some("link\n0-1"));
     }
 
     #[test]

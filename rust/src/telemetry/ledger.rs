@@ -38,19 +38,24 @@ pub enum Resource {
     Ethernet,
     /// Host dispatch: kernel launches, inter-kernel gaps, residual readback.
     Dispatch,
+    /// Fault handling: Ethernet timeout detection and bounded
+    /// retry-with-backoff windows, plus epoch re-lowering stalls
+    /// (populated only when a [`crate::device::FaultPlan`] fires).
+    Retry,
     /// Charged-but-unattributed time (solver-level slack).
     Idle,
 }
 
 impl Resource {
     /// All resources, in display order.
-    pub const ALL: [Resource; 7] = [
+    pub const ALL: [Resource; 8] = [
         Resource::Compute,
         Resource::Riscv,
         Resource::Dram,
         Resource::Noc,
         Resource::Ethernet,
         Resource::Dispatch,
+        Resource::Retry,
         Resource::Idle,
     ];
 
@@ -62,6 +67,7 @@ impl Resource {
             Resource::Noc => "noc",
             Resource::Ethernet => "ethernet",
             Resource::Dispatch => "dispatch",
+            Resource::Retry => "retry",
             Resource::Idle => "idle",
         }
     }
@@ -189,6 +195,13 @@ impl SolveLedger {
     /// residual readbacks) as an explicit row.
     pub fn add_dispatch(&mut self, ns: SimNs) {
         self.total.add(Resource::Dispatch, ns);
+    }
+
+    /// Book fault-handling time (Ethernet timeout detection + bounded
+    /// retries, epoch re-lowering) as an explicit `Retry` row — the
+    /// fault layer's honest line in the conservation invariant.
+    pub fn add_retry(&mut self, ns: SimNs) {
+        self.total.add(Resource::Retry, ns);
     }
 
     /// The component whose sub-ledger has the largest share of `resource`.

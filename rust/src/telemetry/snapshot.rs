@@ -242,12 +242,14 @@ impl BenchSnapshot {
         Ok(snap)
     }
 
-    /// Write to `path`, creating parent directories.
+    /// Write to `path`, creating parent directories. Atomic
+    /// (temp-then-rename): an interrupted bench never leaves a
+    /// truncated `BENCH_*.json` for `bench-diff` to choke on.
     pub fn write(&self, path: &Path) -> io::Result<()> {
         if let Some(parent) = path.parent() {
             fs::create_dir_all(parent)?;
         }
-        fs::write(path, self.to_json())
+        crate::util::fsatomic::write_atomic(path, &self.to_json())
     }
 
     pub fn read(path: &Path) -> Result<Self, String> {

@@ -238,6 +238,28 @@ impl SolveSpans {
             .span(name, "host", Resource::Dispatch, begin, end, &[self.last]);
     }
 
+    /// Record one arbitrary advance (fault retry window, checkpoint
+    /// drain, rollback restore) from `begin` to `end`, chained onto the
+    /// previous span under the given resource — the fault layer's
+    /// counterpart of [`host`](Self::host), so every ns the solver's
+    /// clock moves for fault handling stays on the causal chain and the
+    /// critical path remains wall-exact under faults.
+    pub fn mark(
+        &mut self,
+        name: &str,
+        component: &str,
+        resource: Resource,
+        begin: SimNs,
+        end: SimNs,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.last = self
+            .graph
+            .span(name, component, resource, begin, end, &[self.last]);
+    }
+
     /// Fill a dispatch window by grafting the component program's span
     /// graph at the current chain head. The program must have been
     /// executed at device start 0 (`sub.t0 == 0`), so the graft's offset

@@ -447,6 +447,80 @@ impl EtherPhase {
             .sum()
     }
 
+    /// The phase with every hop endpoint remapped through `adopt` (a
+    /// dead die's hops handed to the surviving die that adopted its
+    /// subdomain): hops collapsing to a self-loop are dropped (that
+    /// traffic became die-local), same-pair hops within a round merge
+    /// their bytes, and rounds emptied entirely vanish. Returns `None`
+    /// when nothing still crosses a link. An empty `adopt` map returns
+    /// the phase unchanged.
+    pub fn remapped(&self, adopt: &std::collections::BTreeMap<usize, usize>) -> Option<Self> {
+        if adopt.is_empty() {
+            return Some(self.clone());
+        }
+        let owner = |d: usize| adopt.get(&d).copied().unwrap_or(d);
+        let mut rounds: Vec<Vec<EthHop>> = Vec::new();
+        for round in &self.rounds {
+            let mut per_pair: std::collections::BTreeMap<(usize, usize), u64> =
+                std::collections::BTreeMap::new();
+            for h in round {
+                let (s, d) = (owner(h.src_die), owner(h.dst_die));
+                if s != d {
+                    *per_pair.entry((s, d)).or_insert(0) += h.bytes;
+                }
+            }
+            if !per_pair.is_empty() {
+                rounds.push(
+                    per_pair
+                        .into_iter()
+                        .map(|((s, d), bytes)| EthHop { src_die: s, dst_die: d, bytes })
+                        .collect(),
+                );
+            }
+        }
+        if rounds.is_empty() {
+            return None;
+        }
+        Some(Self { rounds, ..self.clone() })
+    }
+
+    /// The phase with every hop routed over the mesh's live links: a
+    /// hop whose direct link is down expands into the store-and-forward
+    /// chain along [`crate::device::DeviceMesh::path`], and a round
+    /// containing multi-link hops becomes one sub-round per path
+    /// segment (segment i of every expanded hop travels in sub-round i,
+    /// so unaffected hops keep their intra-round concurrency and
+    /// detoured payloads forward one link per sub-round). A mesh with
+    /// no down links returns the phase unchanged.
+    pub fn rerouted(&self, mesh: &crate::device::DeviceMesh) -> Self {
+        if mesh.down.is_empty() {
+            return self.clone();
+        }
+        let mut rounds: Vec<Vec<EthHop>> = Vec::new();
+        for round in &self.rounds {
+            let expanded: Vec<Vec<EthHop>> = round
+                .iter()
+                .map(|h| {
+                    let mut cur = h.src_die;
+                    mesh.path(h.src_die, h.dst_die)
+                        .into_iter()
+                        .map(|(x, y)| {
+                            let next = if x == cur { y } else { x };
+                            let seg = EthHop { src_die: cur, dst_die: next, bytes: h.bytes };
+                            cur = next;
+                            seg
+                        })
+                        .collect()
+                })
+                .collect();
+            let depth = expanded.iter().map(|p| p.len()).max().unwrap_or(0);
+            for k in 0..depth {
+                rounds.push(expanded.iter().filter_map(|p| p.get(k)).copied().collect());
+            }
+        }
+        Self { rounds, ..self.clone() }
+    }
+
     /// Total bytes crossing Ethernet in one application of the phase.
     pub fn bytes(&self) -> u64 {
         self.rounds.iter().flatten().map(|h| h.bytes).sum()
@@ -1061,9 +1135,12 @@ mod tests {
         assert_eq!(Schedule::SStep(8).label(), "sstep:8");
         assert_eq!(Schedule::Prefetch.label(), "prefetch");
         // Block sizes outside the conditioning-safe window are rejected,
-        // as is anything unparsable.
-        assert!("sstep:1".parse::<Schedule>().is_err());
+        // as is anything unparsable — each with a descriptive error, not
+        // a panic or silent acceptance.
+        assert!("sstep:0".parse::<Schedule>().unwrap_err().contains("2..=8"));
+        assert!("sstep:1".parse::<Schedule>().unwrap_err().contains("2..=8"));
         assert!("sstep:9".parse::<Schedule>().is_err());
+        assert!("sstep:12".parse::<Schedule>().unwrap_err().contains("2..=8"));
         assert!("sstep:".parse::<Schedule>().is_err());
         assert!("eager".parse::<Schedule>().is_err());
         // Classic and prefetch keep Algorithm 1's three all-reduces per
@@ -1190,6 +1267,103 @@ mod tests {
         let first_end = phase.run(&mut sim, 0.0);
         let second_end = phase.run(&mut sim, 0.0);
         assert!((second_end - 2.0 * first_end).abs() < 1e-9);
+    }
+
+    #[test]
+    fn remapped_collapses_dead_die_hops() {
+        let link = EthLink::default();
+        let phase = EtherPhase {
+            label: "allreduce".to_string(),
+            n_dies: 4,
+            link,
+            rounds: vec![
+                vec![
+                    EthHop { src_die: 3, dst_die: 2, bytes: 32 },
+                    EthHop { src_die: 1, dst_die: 0, bytes: 32 },
+                ],
+                vec![EthHop { src_die: 2, dst_die: 0, bytes: 32 }],
+            ],
+            overlaps_local: false,
+        };
+        // Empty map: unchanged.
+        assert_eq!(phase.remapped(&std::collections::BTreeMap::new()), Some(phase.clone()));
+        // Die 3's subdomain adopted by die 2: its hop into 2 becomes a
+        // self-loop and is dropped; everything else survives.
+        let adopt: std::collections::BTreeMap<usize, usize> = [(3usize, 2usize)].into();
+        let m = phase.remapped(&adopt).unwrap();
+        assert_eq!(m.rounds.len(), 2);
+        assert_eq!(m.rounds[0], vec![EthHop { src_die: 1, dst_die: 0, bytes: 32 }]);
+        assert_eq!(m.rounds[1], vec![EthHop { src_die: 2, dst_die: 0, bytes: 32 }]);
+        // Same-pair hops merge their bytes after remapping.
+        let two = EtherPhase {
+            rounds: vec![vec![
+                EthHop { src_die: 3, dst_die: 0, bytes: 100 },
+                EthHop { src_die: 2, dst_die: 0, bytes: 30 },
+            ]],
+            ..phase.clone()
+        };
+        let merged = two.remapped(&adopt).unwrap();
+        assert_eq!(merged.rounds, vec![vec![EthHop { src_die: 2, dst_die: 0, bytes: 130 }]]);
+        // A phase whose every hop collapses vanishes.
+        let seam = EtherPhase {
+            rounds: vec![vec![EthHop { src_die: 3, dst_die: 2, bytes: 64 }]],
+            ..phase.clone()
+        };
+        assert_eq!(seam.remapped(&adopt), None);
+    }
+
+    #[test]
+    fn rerouted_expands_cut_hops_store_and_forward() {
+        use crate::device::{DeviceMesh, MeshTopology};
+        let link = EthLink::default();
+        let mesh = DeviceMesh::new(
+            8,
+            1,
+            1,
+            MeshTopology::Torus2D { rows: 2, cols: 4 },
+            link,
+        )
+        .unwrap();
+        let phase = EtherPhase {
+            label: "halo".to_string(),
+            n_dies: 8,
+            link,
+            rounds: vec![vec![
+                EthHop { src_die: 0, dst_die: 1, bytes: 640 },
+                EthHop { src_die: 2, dst_die: 3, bytes: 320 },
+            ]],
+            overlaps_local: true,
+        };
+        // No down links: bit-identical clone.
+        assert_eq!(phase.rerouted(&mesh), phase);
+        // Cut (0,1): that hop detours over live links, one link per
+        // sub-round; the untouched hop rides sub-round 0 as before.
+        let cut = mesh.with_down_links(&[(0, 1)]);
+        let r = phase.rerouted(&cut);
+        assert!(r.rounds.len() > 1, "multi-link detour forwards across sub-rounds");
+        assert_eq!(r.rounds[0][1], EthHop { src_die: 2, dst_die: 3, bytes: 320 });
+        // The detour's segments chain 0 → … → 1 without the cut link,
+        // each carrying the full payload.
+        let detour: Vec<EthHop> = r
+            .rounds
+            .iter()
+            .flatten()
+            .copied()
+            .filter(|h| h.bytes == 640)
+            .collect();
+        assert_eq!(detour.len(), r.rounds.len());
+        let mut at = 0usize;
+        for h in &detour {
+            assert_eq!(h.src_die, at);
+            let key = (h.src_die.min(h.dst_die), h.src_die.max(h.dst_die));
+            assert_ne!(key, (0, 1), "detour reuses the cut link");
+            at = h.dst_die;
+        }
+        assert_eq!(at, 1);
+        // Every produced program still validates.
+        let mut p = Program::standard("halo");
+        p.work.ether = Some(r);
+        p.validate().unwrap();
     }
 
     #[test]

@@ -1,0 +1,74 @@
+//! Atomic file writes (temp-then-rename).
+//!
+//! Bench snapshots and telemetry JSONL are consumed by other processes
+//! (`bench-diff`, trace viewers, CI artifact uploads). A plain
+//! `fs::write` interrupted mid-flush leaves a truncated file that those
+//! consumers choke on; [`write_atomic`] stages the contents in a
+//! sibling `.tmp` file and renames it into place, so the destination is
+//! only ever absent, the previous complete version, or the new complete
+//! version — never half-written. The rename stays within the target's
+//! directory (same filesystem), where POSIX rename is atomic.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// The staging path a write to `path` uses: a dot-prefixed `.tmp`
+/// sibling in the same directory.
+pub fn staging_path(path: &Path) -> PathBuf {
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "out".to_string());
+    path.with_file_name(format!(".{name}.tmp"))
+}
+
+/// Write `contents` to `path` atomically: stage in the sibling
+/// [`staging_path`], then rename over the destination. On any error the
+/// staging file is removed and `path` is untouched.
+pub fn write_atomic(path: &Path, contents: &str) -> io::Result<()> {
+    let tmp = staging_path(path);
+    fs::write(&tmp, contents)?;
+    match fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn destination_is_absent_or_complete_never_truncated() {
+        let dir = std::env::temp_dir().join("wormsim_fsatomic_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snap.json");
+        let _ = std::fs::remove_file(&path);
+        // Simulate an interrupted write: the staging file holds a torn
+        // prefix, the rename never happened. The destination must not
+        // exist — a consumer polling for it sees nothing, not garbage.
+        std::fs::write(staging_path(&path), "{\"trunca").unwrap();
+        assert!(!path.exists(), "half-written stage must not surface at the destination");
+        // A completed write replaces the stage with the full contents.
+        write_atomic(&path, "{\"ok\":true}\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{\"ok\":true}\n");
+        assert!(!staging_path(&path).exists(), "stage cleaned up after rename");
+        // Overwrites go through the same stage: the destination is the
+        // old complete version until the instant it is the new one.
+        write_atomic(&path, "{\"ok\":false}\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{\"ok\":false}\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn staging_stays_in_the_destination_directory() {
+        let p = Path::new("/a/b/BENCH_pcg.json");
+        let s = staging_path(p);
+        assert_eq!(s.parent(), p.parent());
+        assert_eq!(s.file_name().unwrap().to_str().unwrap(), ".BENCH_pcg.json.tmp");
+    }
+}

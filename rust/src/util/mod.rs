@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod cli;
 pub mod csv;
+pub mod fsatomic;
 pub mod jsonmini;
 pub mod prng;
 pub mod prop;

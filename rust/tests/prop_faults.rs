@@ -1,0 +1,316 @@
+//! Property pins for fault-tolerant mesh execution (ISSUE 10):
+//!
+//! 1. **fault-free identity** — a solve with an empty [`FaultPlan`] (or
+//!    an explicitly disabled resilience policy) is **bit- and
+//!    clock-identical** to one without the fault layer at all: same
+//!    trajectory, same iterate, same wall time, same Ethernet bytes,
+//!    same launch stats, byte-identical telemetry event stream;
+//! 2. **link loss** — cutting a ring link mid-solve never changes a
+//!    computed value (transport faults are value-invisible), charges a
+//!    positive `Retry` ledger row exactly once, re-lowers onto the
+//!    rerouted topology (strictly slower than clean), and the ledger
+//!    still conserves;
+//! 3. **die loss** — losing a die rolls back to the last checkpoint and
+//!    the solve still converges to the same tolerance on the survivors;
+//! 4. **SDC** — a scripted silent corruption of the spmv output is
+//!    detected by the true-residual recompute and rolled back within
+//!    one check interval, with the injection, detection, and rollback
+//!    all annotated in the solver event stream;
+//! 5. **critical path** — under every fault class (and their
+//!    combination) the causal span graph validates and its critical
+//!    path equals the simulated wall time bit-exactly, and the solve
+//!    ledger sums to the wall time.
+
+use wormsim::arch::{ComputeUnit, DataFormat};
+use wormsim::device::{DeviceMesh, EthLink, FaultPlan, MeshTopology};
+use wormsim::engine::{NativeEngine, StencilCoeffs};
+use wormsim::kernels::stencil::{StencilConfig, StencilVariant};
+use wormsim::profiler::Profiler;
+use wormsim::solver::{
+    self, MeshOptions, Operator, PcgOptions, PcgVariant, ResilienceOptions,
+};
+use wormsim::telemetry::{critical_path, retime, Resource, WhatIf};
+use wormsim::timing::cost::CostModel;
+
+fn stencil_cfg(tiles: usize) -> StencilConfig {
+    StencilConfig {
+        df: DataFormat::Fp32,
+        unit: ComputeUnit::for_format(DataFormat::Fp32),
+        tiles_per_core: tiles,
+        variant: StencilVariant::FULL,
+        coeffs: StencilCoeffs::LAPLACIAN,
+    }
+}
+
+fn ring_mesh(n_dies: usize) -> DeviceMesh {
+    DeviceMesh::new(n_dies, 1, 2, MeshTopology::Ring, EthLink::for_dies(n_dies)).unwrap()
+}
+
+fn solve_with(
+    mesh: &DeviceMesh,
+    b: &solver::DistVector,
+    max_iters: usize,
+    tol_abs: f64,
+    faults: Option<&str>,
+    resilience: Option<ResilienceOptions>,
+) -> solver::MeshPcgResult {
+    let e = NativeEngine::new();
+    let cost = CostModel::default();
+    let mut opts = PcgOptions::new(PcgVariant::SplitFp32);
+    opts.max_iters = max_iters;
+    opts.tol_abs = tol_abs;
+    opts.telemetry = true;
+    let mut mopts = MeshOptions::new(opts);
+    if let Some(spec) = faults {
+        mopts = mopts.with_faults(FaultPlan::parse(spec).unwrap());
+    }
+    if let Some(r) = resilience {
+        mopts = mopts.with_resilience(r);
+    }
+    let mut prof = Profiler::disabled();
+    solver::solve_pcg_mesh(
+        mesh,
+        b,
+        &Operator::Stencil(stencil_cfg(2)),
+        &e,
+        &cost,
+        &mopts,
+        &mut prof,
+    )
+    .unwrap()
+}
+
+/// The exactness bar shared with `prop_critpath.rs`/`prop_schedule.rs`:
+/// validate, bit-exact critical path, contiguity, bit-exact identity
+/// retime — now under damage.
+fn assert_exact(spans: &wormsim::telemetry::SpanGraph, total_ns: f64, what: &str) {
+    spans.validate().unwrap_or_else(|e| panic!("{what}: {e}"));
+    assert!(!spans.is_empty(), "{what}: no spans recorded");
+    let p = critical_path(spans).unwrap_or_else(|e| panic!("{what}: {e}"));
+    assert_eq!(
+        p.length_ns, total_ns,
+        "{what}: critical path {} != wall {}",
+        p.length_ns, total_ns
+    );
+    assert_eq!(spans.wall_ns(), total_ns, "{what}: sink disagrees with wall");
+    for w in p.ids.windows(2) {
+        assert_eq!(
+            spans.spans[w[0]].end, spans.spans[w[1]].start,
+            "{what}: discontinuous path at spans {} -> {}",
+            w[0], w[1]
+        );
+    }
+    assert_eq!(
+        retime(spans, &WhatIf::identity()).unwrap(),
+        total_ns,
+        "{what}: identity retime drifted"
+    );
+}
+
+fn assert_conserves(res: &solver::MeshPcgResult, what: &str) {
+    let eps = 1e-6 * res.total_ns.max(1.0);
+    assert!(
+        (res.ledger.total.total() - res.total_ns).abs() <= eps,
+        "{what}: ledger {} vs wall {}",
+        res.ledger.total.total(),
+        res.total_ns
+    );
+}
+
+#[test]
+fn empty_plan_and_disabled_resilience_are_bit_and_clock_identical() {
+    for &n in &[2usize, 4] {
+        let mesh = ring_mesh(n);
+        let b = solver::mesh_dist_random(&mesh, 2, DataFormat::Fp32, 7);
+        let base = solve_with(&mesh, &b, 6, 0.0, None, None);
+        let empty_plan = solve_with(&mesh, &b, 6, 0.0, Some(""), None);
+        let disabled = solve_with(&mesh, &b, 6, 0.0, None, Some(ResilienceOptions::disabled()));
+        for (res, what) in [(&empty_plan, "empty plan"), (&disabled, "disabled resilience")] {
+            assert_eq!(res.residual_history, base.residual_history, "N={n} {what}");
+            assert_eq!(res.x, base.x, "N={n} {what}");
+            assert_eq!(res.total_ns, base.total_ns, "N={n} {what}: clock moved");
+            assert_eq!(res.eth_bytes_total, base.eth_bytes_total, "N={n} {what}");
+            assert_eq!(res.launch, base.launch, "N={n} {what}");
+            assert_eq!(res.rollbacks, 0, "N={n} {what}");
+            assert_eq!(res.fault_epochs, 0, "N={n} {what}");
+            // The JSONL event stream is byte-identical: no fault keys, no
+            // reordered fields, no perturbed floats.
+            assert_eq!(
+                res.telemetry.events_jsonl(),
+                base.telemetry.events_jsonl(),
+                "N={n} {what}: event stream drifted"
+            );
+            assert_eq!(res.ledger.total.get(Resource::Retry), 0.0, "N={n} {what}");
+        }
+    }
+}
+
+#[test]
+fn link_down_reroutes_without_touching_values_and_charges_retry_once() {
+    let mesh = ring_mesh(4);
+    let b = solver::mesh_dist_random(&mesh, 2, DataFormat::Fp32, 19);
+    let clean = solve_with(&mesh, &b, 8, 0.0, None, None);
+    // The cut is active from t=0: the first iteration boundary sees it,
+    // pays the retry-with-backoff penalty once, and every Ethernet phase
+    // reroutes the long way around the ring for the rest of the solve.
+    let cut = solve_with(&mesh, &b, 8, 0.0, Some("link_down:0-1@0"), None);
+    // Transport faults are value-invisible: bit-identical trajectory.
+    assert_eq!(cut.residual_history, clean.residual_history);
+    assert_eq!(cut.x, clean.x);
+    // ...but not time-invisible.
+    assert!(
+        cut.total_ns > clean.total_ns,
+        "rerouted solve {} not slower than clean {}",
+        cut.total_ns,
+        clean.total_ns
+    );
+    assert_eq!(cut.fault_epochs, 1, "one topology transition");
+    assert_eq!(cut.rollbacks, 0, "a link cut loses no state");
+    let retry = cut.ledger.total.get(Resource::Retry);
+    assert!(retry > 0.0, "retry row must be charged");
+    assert_eq!(clean.ledger.total.get(Resource::Retry), 0.0);
+    // The annotation reaches the event stream.
+    assert!(
+        cut.telemetry
+            .events
+            .iter()
+            .any(|e| e.fault.as_deref().is_some_and(|f| f.contains("link_down:0-1"))),
+        "no link_down annotation in events"
+    );
+    assert_conserves(&cut, "link_down");
+    assert_exact(&cut.spans, cut.total_ns, "link_down");
+}
+
+#[test]
+fn die_loss_rolls_back_and_converges_on_the_survivors() {
+    let mesh = ring_mesh(4);
+    let b = solver::mesh_dist_random(&mesh, 2, DataFormat::Fp32, 23);
+    // Clean run fixes the target tolerance: whatever it reaches in 24
+    // iterations, the faulted run must also reach — with the same
+    // operator but one die's subdomain migrated to a neighbor.
+    let clean = solve_with(&mesh, &b, 24, 0.0, None, None);
+    let target = clean
+        .residual_history
+        .iter()
+        .cloned()
+        .fold(f64::INFINITY, f64::min)
+        * 1.001;
+    assert!(target.is_finite() && target > 0.0);
+    let res = solve_with(&mesh, &b, 80, target, Some("die_down:3@1us"), None);
+    assert!(
+        res.converged,
+        "did not reconverge after die loss: history {:?}",
+        res.residual_history
+    );
+    assert!(res.residual_history.last().unwrap() <= &target);
+    assert!(res.rollbacks >= 1, "die loss must restore a checkpoint");
+    assert_eq!(res.fault_epochs, 1);
+    assert!(
+        res.telemetry.events.iter().any(|e| e
+            .fault
+            .as_deref()
+            .is_some_and(|f| f.contains("die_down:3") && f.contains("rollback@"))),
+        "die loss + rollback not annotated"
+    );
+    assert_conserves(&res, "die_down");
+    assert_exact(&res.spans, res.total_ns, "die_down");
+}
+
+#[test]
+fn sdc_is_detected_and_rolled_back_within_one_check_interval() {
+    let mesh = ring_mesh(4);
+    let b = solver::mesh_dist_random(&mesh, 2, DataFormat::Fp32, 29);
+    // Injection at iteration 3; the default policy (auto-enabled by the
+    // SDC event) checks the true residual every 8 iterations, so the
+    // corruption must be caught at iteration 8 — within one interval —
+    // and rolled back to the verified iteration-0 checkpoint.
+    let clean = solve_with(&mesh, &b, 12, 0.0, None, None);
+    let res = solve_with(&mesh, &b, 12, 0.0, Some("sdc:spmv@3"), None);
+    assert_eq!(res.iters, 12, "solve continues after recovery");
+    assert_eq!(res.rollbacks, 1);
+    assert_eq!(res.fault_epochs, 0, "SDC never changes the topology");
+    let faults: Vec<&str> =
+        res.telemetry.events.iter().filter_map(|e| e.fault.as_deref()).collect();
+    assert!(
+        faults.iter().any(|f| f.contains("sdc:spmv@3")),
+        "injection not annotated: {faults:?}"
+    );
+    let detect = faults
+        .iter()
+        .find(|f| f.contains("sdc_detected@"))
+        .unwrap_or_else(|| panic!("no detection annotation: {faults:?}"));
+    let at: usize = detect
+        .split("sdc_detected@")
+        .nth(1)
+        .and_then(|s| s.split(';').next())
+        .and_then(|s| s.parse().ok())
+        .unwrap();
+    assert!(
+        at >= 3 && at <= 3 + 8,
+        "detected at {at}, outside one check interval of the injection"
+    );
+    assert!(
+        detect.contains("rollback@"),
+        "detection without rollback: {detect}"
+    );
+    // Trajectory surgery, to the bit (history entry i−1 is iteration i):
+    // iterations 1–2 are untouched, iteration 3 is the first corrupted
+    // one, and after the rollback restores the verified iteration-0
+    // checkpoint at the end of iteration 8, iterations 9–12 replay the
+    // clean iterations 1–4 EXACTLY — the restored state is bit-identical
+    // to the initial state, and the engine is deterministic.
+    assert_eq!(res.residual_history.len(), 12);
+    assert_eq!(clean.residual_history.len(), 12);
+    assert_eq!(
+        res.residual_history[..2],
+        clean.residual_history[..2],
+        "pre-injection iterations drifted"
+    );
+    assert_ne!(
+        res.residual_history[2], clean.residual_history[2],
+        "the injected corruption is invisible at iteration 3"
+    );
+    for j in 0..4 {
+        assert_eq!(
+            res.residual_history[8 + j],
+            clean.residual_history[j],
+            "post-rollback iteration {} does not replay clean iteration {}",
+            9 + j,
+            1 + j
+        );
+    }
+    assert_conserves(&res, "sdc");
+    assert_exact(&res.spans, res.total_ns, "sdc");
+}
+
+#[test]
+fn critical_path_is_wall_exact_under_every_fault_class() {
+    let mesh = ring_mesh(4);
+    let b = solver::mesh_dist_random(&mesh, 2, DataFormat::Fp32, 31);
+    let scenarios: &[(&str, &str)] = &[
+        ("link_down", "link_down:0-1@0"),
+        ("link_degrade", "link_degrade:1-2@0..1msx6"),
+        ("die_down", "die_down:2@1us"),
+        ("sdc", "sdc:spmv@2"),
+        (
+            "combined",
+            "link_degrade:1-2@0..1msx6;die_down:3@2us;sdc:spmv@4",
+        ),
+    ];
+    for &(what, spec) in scenarios {
+        let res = solve_with(&mesh, &b, 10, 0.0, Some(spec), None);
+        assert_exact(&res.spans, res.total_ns, what);
+        assert_conserves(&res, what);
+        // SDC corrupts values, not the topology — no epoch there.
+        if spec.contains("link") || spec.contains("die") {
+            assert!(res.fault_epochs >= 1, "{what}: no epoch transition");
+        } else {
+            assert!(res.rollbacks >= 1, "{what}: corruption went unhandled");
+        }
+        // And the checkpoint/rollback machinery itself stays exact with
+        // an explicit aggressive policy.
+        let eager = solve_with(&mesh, &b, 10, 0.0, Some(spec), Some(ResilienceOptions::every(2)));
+        assert_exact(&eager.spans, eager.total_ns, &format!("{what} k=2"));
+        assert_conserves(&eager, &format!("{what} k=2"));
+    }
+}

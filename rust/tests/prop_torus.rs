@@ -313,6 +313,48 @@ fn per_iteration_ethernet_bytes_match_the_four_seam_formula() {
 }
 
 #[test]
+fn prime_die_counts_degenerate_to_the_ring() {
+    // A prime N has no nontrivial 2D factorization: `torus_for` must
+    // fall back to 1×N, and that shape must behave as the N-die ring —
+    // ring-distance routes for every pair and ring all-reduce round
+    // structure for both latency- and bandwidth-bound payloads. (The
+    // 1×N orientation still transposes the LOGICAL grid — the time
+    // equivalence pinned for N×1 above does not transfer — but the
+    // wiring and collectives have no second dimension to use.)
+    for n in [7usize, 13] {
+        assert_eq!(
+            MeshTopology::torus_for(n),
+            MeshTopology::Torus2D { rows: 1, cols: n },
+            "torus_for({n})"
+        );
+        let ring = DeviceMesh::new(n, 1, 1, MeshTopology::Ring, EthLink::for_dies(n)).unwrap();
+        for mesh in [torus_mesh(1, n, 1, 1), torus_mesh(n, 1, 1, 1)] {
+            for a in 0..n {
+                for b in 0..n {
+                    let want = (a as i64 - b as i64).unsigned_abs() as usize;
+                    let want = want.min(n - want);
+                    assert_eq!(
+                        mesh.path(a, b).len(),
+                        want,
+                        "{:?}: route {a}->{b} is not the ring distance",
+                        mesh.topology
+                    );
+                    assert_eq!(ring.path(a, b).len(), want, "ring route {a}->{b}");
+                }
+            }
+            for payload in [32u64, 2048] {
+                assert_eq!(
+                    EtherPhase::allreduce2d(&mesh, payload).unwrap().rounds,
+                    EtherPhase::allreduce(&ring, payload).unwrap().rounds,
+                    "{:?} @ {payload}B",
+                    mesh.topology
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn galaxy_torus_cuts_allreduce_rounds_to_o_sqrt_n() {
     // The headline: at 32 dies the line pays 62 serial scalar rounds, the
     // ring 32 (both-ways combine + both-ways broadcast), the 4×8 torus 12
